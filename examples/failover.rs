@@ -1,0 +1,92 @@
+//! Expander failure handling (§1: "A single failure in the memory
+//! expander can render all devices unavailable").
+//!
+//! Demonstrates both policies in `lmb::lmb::failure`:
+//! * FailStop — the SSD loses its CXL-resident L2P and degrades to
+//!   flash-resident (DFTL-class) indexing until recovery;
+//! * WriteThroughShadow — critical allocations stay served from a host
+//!   shadow at HMB-class latency.
+//!
+//! Run: `cargo run --release --example failover`
+
+use lmb::cxl::fabric::{Fabric, PathKind};
+use lmb::cxl::types::GIB;
+use lmb::lmb::failure::{FailureDomain, FailurePolicy, ServingState};
+use lmb::prelude::*;
+use lmb::ssd::controller::Controller;
+use lmb::ssd::IndexPlacement;
+use lmb::workload::fio::{FioJob, IoPattern};
+
+fn main() -> Result<()> {
+    let fabric = Fabric::default();
+    let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
+    let spec = SsdSpec::gen5();
+    let kiops = |placement| {
+        Controller::new(spec.clone(), placement, fabric.clone()).throughput_iops(&job) / 1e3
+    };
+
+    // ---- policy 1: FailStop ----
+    let mut sys = System::builder().expander_gib(8).build()?;
+    let ssd = sys.attach_pcie_ssd(spec.clone());
+    let l2p = sys.pcie_alloc(ssd, 64 << 20)?;
+    sys.write_alloc(l2p.mmid, 0, &vec![0xAA; 1 << 20])?;
+    let mut fd = FailureDomain::new(FailurePolicy::FailStop);
+
+    println!("steady state: LMB-CXL indexing at {:.0} KIOPS", kiops(IndexPlacement::LmbCxl));
+
+    let (fm, module) = sys.failure_parts();
+    let states = fd.fail_expander(fm, module);
+    assert_eq!(states[&l2p.mmid], ServingState::Unavailable);
+    println!(
+        "expander FAILED (FailStop): L2P unavailable -> firmware falls back \
+         to flash-resident indexing: {:.0} KIOPS ({:.0}x degradation)",
+        kiops(IndexPlacement::Dftl),
+        kiops(IndexPlacement::LmbCxl) / kiops(IndexPlacement::Dftl)
+    );
+    assert!(sys.pcie_alloc(ssd, 4096).is_err(), "no new allocations during outage");
+
+    { let (fm, module) = sys.failure_parts(); fd.recover_expander(fm, module, |_| Ok(0))?; }
+    let mut probe = [0u8; 4];
+    sys.read_alloc(l2p.mmid, 0, &mut probe)?;
+    assert_eq!(probe, [0xAA; 4]);
+    println!(
+        "recovered: contents intact, back to {:.0} KIOPS\n",
+        kiops(IndexPlacement::LmbCxl)
+    );
+
+    // ---- policy 2: WriteThroughShadow ----
+    let mut sys = System::builder().expander_gib(8).build()?;
+    let ssd = sys.attach_pcie_ssd(spec.clone());
+    let crit = sys.pcie_alloc(ssd, 64 << 20)?;
+    let scratch = sys.pcie_alloc(ssd, 16 << 20)?;
+    let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+    fd.register_critical(crit.mmid);
+
+    let (fm, module) = sys.failure_parts();
+    let states = fd.fail_expander(fm, module);
+    assert_eq!(states[&crit.mmid], ServingState::HostShadow);
+    assert_eq!(states[&scratch.mmid], ServingState::Unavailable);
+    // shadow-served index = HMB-class latency instead of CXL-class
+    let shadow_access = fabric.path_latency(PathKind::PcieToHostMem(spec.gen));
+    println!(
+        "expander FAILED (WriteThroughShadow): critical L2P served from host \
+         shadow at {} per access (vs {} via CXL); scratch buffers offline",
+        shadow_access,
+        fabric.path_latency(PathKind::CxlP2pToHdm)
+    );
+
+    let restored = {
+        let (fm, module) = sys.failure_parts();
+        fd.recover_expander(fm, module, |mmid| {
+            // copy the shadow back into HDM
+            Ok(if mmid == crit.mmid { crit.size } else { 0 })
+        })?
+    };
+    println!(
+        "recovered: {} MiB copied back from shadow, {} failover(s), {} recovery(ies)",
+        restored >> 20,
+        fd.failovers,
+        fd.recoveries
+    );
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! KV-SSD index in LMB (§1, §2.1): "The low indexing efficiency of
+//! KV-SSDs due to lack of memory hampers their adoption."
+//!
+//! A KV-SSD needs a key→location index that is far larger per byte of
+//! payload than a block L2P table. This example builds a *functional*
+//! open-addressing hash index whose buckets live in expander memory
+//! (allocated through `lmb_PCIe_alloc`, bytes stored through the CXL
+//! data path), runs a YCSB-ish zipfian GET workload against it, and
+//! compares modeled index throughput for onboard DRAM (capped),
+//! LMB-CXL, LMB-PCIe, and an LSM-style flash index.
+//!
+//! Run: `cargo run --release --example kv_ssd_index`
+
+use lmb::cxl::fabric::{Fabric, PathKind};
+use lmb::cxl::types::{Dpa, GIB};
+use lmb::pcie::link::PcieGen;
+use lmb::prelude::*;
+use lmb::sim::rng::Pcg64;
+use lmb::workload::zipf::Zipfian;
+
+/// Fixed-size bucket: 8-byte key hash + 4-byte PPA + 4-byte meta.
+const BUCKET: u64 = 16;
+
+struct LmbHashIndex {
+    base: Dpa,
+    buckets: u64,
+}
+
+impl LmbHashIndex {
+    fn hash(key: u64) -> u64 {
+        key.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+
+    fn insert(&self, sys: &mut System, key: u64, ppa: u32) -> Result<u32> {
+        let mut slot = Self::hash(key) % self.buckets;
+        for probes in 1..=64u32 {
+            let mut cur = [0u8; 16];
+            sys.fm()
+                .expander()
+                .read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
+            let occupied = u64::from_le_bytes(cur[..8].try_into().unwrap());
+            if occupied == 0 || occupied == Self::hash(key) | 1 {
+                let mut rec = [0u8; 16];
+                rec[..8].copy_from_slice(&(Self::hash(key) | 1).to_le_bytes());
+                rec[8..12].copy_from_slice(&ppa.to_le_bytes());
+                sys.fm_mut()
+                    .expander_mut()
+                    .write_dpa(Dpa(self.base.0 + slot * BUCKET), &rec)?;
+                return Ok(probes);
+            }
+            slot = (slot + 1) % self.buckets;
+        }
+        Err(lmb::Error::Device("hash index full".into()))
+    }
+
+    fn get(&self, sys: &System, key: u64) -> Result<(Option<u32>, u32)> {
+        let mut slot = Self::hash(key) % self.buckets;
+        for probes in 1..=64u32 {
+            let mut cur = [0u8; 16];
+            sys.fm()
+                .expander()
+                .read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
+            let tag = u64::from_le_bytes(cur[..8].try_into().unwrap());
+            if tag == 0 {
+                return Ok((None, probes));
+            }
+            if tag == Self::hash(key) | 1 {
+                return Ok((Some(u32::from_le_bytes(cur[8..12].try_into().unwrap())), probes));
+            }
+            slot = (slot + 1) % self.buckets;
+        }
+        Ok((None, 64))
+    }
+}
+
+fn main() -> Result<()> {
+    let mut sys = System::builder().expander_gib(8).build()?;
+    let kv_ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
+
+    // index sized for 100k keys at 50% load factor
+    let buckets = 1u64 << 18;
+    let alloc = sys.pcie_alloc(kv_ssd, buckets * BUCKET)?;
+    let index = LmbHashIndex { base: alloc.dpa, buckets };
+    println!(
+        "KV index in LMB: {} buckets, {} MiB at dpa {}",
+        buckets,
+        (buckets * BUCKET) >> 20,
+        alloc.dpa
+    );
+
+    // ---- functional: insert 100k keys, then zipfian GETs ----
+    let n_keys = 100_000u64;
+    let mut total_probes = 0u64;
+    for key in 1..=n_keys {
+        total_probes += index.insert(&mut sys, key, (key * 3) as u32)? as u64;
+    }
+    println!(
+        "inserted {} keys, mean probes {:.2}",
+        n_keys,
+        total_probes as f64 / n_keys as f64
+    );
+
+    let zipf = Zipfian::new(n_keys, 0.99);
+    let mut rng = Pcg64::new(0x4b5);
+    let mut hits = 0u64;
+    let mut get_probes = 0u64;
+    let gets = 50_000;
+    for _ in 0..gets {
+        let key = zipf.sample(&mut rng) + 1;
+        let (val, probes) = index.get(&sys, key)?;
+        get_probes += probes as u64;
+        if val == Some((key * 3) as u32) {
+            hits += 1;
+        }
+    }
+    assert_eq!(hits, gets, "every inserted key must be found with its value");
+    let mean_probes = get_probes as f64 / gets as f64;
+    println!("{gets} zipfian GETs, all correct, mean probes {mean_probes:.2}\n");
+
+    // ---- modeled: index-lookup throughput per placement ----
+    // A KV GET = mean_probes dependent index reads + firmware.
+    let fabric = Fabric::default();
+    let firmware_ns = 600.0; // KV firmware path is heavier than block FTL
+    println!("modeled single-core index lookup rates (probes x access):");
+    for (label, path) in [
+        ("onboard DRAM (if it fit!)", PathKind::OnboardDram),
+        ("LMB-CXL", PathKind::CxlP2pToHdm),
+        ("LMB-PCIe", PathKind::PcieToHdm(PcieGen::Gen5)),
+        ("LSM flash index", PathKind::FlashRead),
+    ] {
+        let per_get =
+            firmware_ns + mean_probes * fabric.path_latency(path).as_ns() as f64;
+        println!(
+            "  {label:<26} {:>8.0} ns/GET  -> {:>8.0} KGET/s",
+            per_get,
+            1e6 / per_get
+        );
+    }
+    println!(
+        "\nthe paper's point: at data-centre scale the KV index (GiBs per \
+         TB, vs this demo's {} MiB) cannot fit onboard — LMB-CXL gets \
+         within ~2x of impossible-DRAM, ~{}x ahead of the flash index",
+        (buckets * BUCKET) >> 20,
+        (25_000.0f64 / fabric.path_latency(PathKind::CxlP2pToHdm).as_ns() as f64).round()
+    );
+    let _ = GIB;
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: bring up a host + CXL fabric, attach an SSD, and walk the
+//! paper's Table 2 API — allocate, use, share, free.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lmb::cxl::types::PAGE_SIZE;
+use lmb::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. Build a machine: one host, a PBR switch, a 64 GiB GFD expander.
+    let mut sys = System::builder().expander_gib(64).build()?;
+    println!("fabric up: expander {} GiB", 64);
+
+    // 2. Attach devices. The LMB kernel module loaded at build() time —
+    //    before any device driver, per §3.1's loading-priority rule.
+    let ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let accel = sys.attach_cxl_device("accelerator")?;
+    println!(
+        "attached {} (PCIe) and an accelerator (CXL, SPID {:?})",
+        sys.pcie_device(ssd)?.spec.name,
+        accel
+    );
+
+    // 3. lmb_PCIe_alloc: the SSD asks for 1 MiB of buffer memory.
+    let alloc = sys.pcie_alloc(ssd, 256 * PAGE_SIZE)?;
+    println!(
+        "lmb_PCIe_alloc -> mmid {:?}, hpa {}, bus {:?}, dpa {} ({} KiB)",
+        alloc.mmid,
+        alloc.hpa,
+        alloc.bus_addr.unwrap(),
+        alloc.dpa,
+        alloc.size / 1024
+    );
+    println!(
+        "module leased {} MiB from the FM (256 MiB extents, §3.2)",
+        sys.module().leased() >> 20
+    );
+
+    // 4. The SSD writes data into its LMB memory (e.g. staged blocks).
+    sys.write_alloc(alloc.mmid, 0, b"zero-copy payload from the SSD")?;
+
+    // 5. lmb_CXL_share: hand the same bytes to the accelerator P2P —
+    //    the Figure 5 zero-copy path.
+    let shared = sys.cxl_share(accel, alloc.mmid)?;
+    println!(
+        "lmb_CXL_share -> accelerator sees dpa {} via DPID {:?} (no copy)",
+        shared.dpa,
+        shared.dpid.unwrap()
+    );
+    let mut buf = [0u8; 30];
+    sys.read_alloc(shared.mmid, 0, &mut buf)?;
+    println!("accelerator reads: {:?}", std::str::from_utf8(&buf).unwrap());
+
+    // 6. Access-control check: the accelerator's SAT entry exists...
+    assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
+
+    // 7. lmb_PCIe_free tears everything down: IOMMU mapping, SAT entry,
+    //    and (fully-drained) extents go back to the fabric manager.
+    sys.pcie_free(ssd, alloc.mmid)?;
+    assert!(!sys.fm().expander().sat().check(accel, shared.dpa, 64, false));
+    println!(
+        "freed: module leases {} B, live allocs {}, FM has {} GiB available",
+        sys.module().leased(),
+        sys.module().live_allocs(),
+        sys.fm().available() >> 30
+    );
+
+    // 8. What did all that cost? The fabric model's Figure 2 numbers.
+    println!("\naccess latencies (Figure 2 derivation):");
+    for (label, lat) in sys.fabric.figure2_rows() {
+        println!("  {label:<34} {lat}");
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Run once at build time (`make artifacts`); Python never runs on the
+simulation path. HLO *text* is the interchange format — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Manifest line format, parsed by rust/src/runtime/pjrt.rs:
+    name=<id> file=<relpath> batch=<N> widths=<W>,<M>,<L>
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Variant registry: must match rust/src/coordinator/mod.rs::variant_for.
+IO_BATCH_VARIANTS = [
+    # (name, batch, (index_width, media_width, link_width))
+    ("io_batch_gen4", 2048, (2, 128, 1)),
+    ("io_batch_gen5", 2560, (2, 160, 1)),
+]
+GATHER_TABLE = 65536
+GATHER_BATCH = 2048
+LOCALITY_BUCKETS = 1024
+LOCALITY_CAPACITY = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_io_batch(name, batch, widths):
+    fn = model.make_io_batch(batch, widths)
+    vec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    params = jax.ShapeDtypeStruct((12,), jnp.float32)
+    lowered = jax.jit(fn).lower(vec, vec, vec, vec, params)
+    return to_hlo_text(lowered)
+
+
+def lower_gather():
+    fn = model.make_l2p_gather(GATHER_TABLE, GATHER_BATCH)
+    table = jax.ShapeDtypeStruct((GATHER_TABLE,), jnp.int32)
+    lpas = jax.ShapeDtypeStruct((GATHER_BATCH,), jnp.int32)
+    lowered = jax.jit(fn).lower(table, lpas)
+    return to_hlo_text(lowered)
+
+
+def lower_locality():
+    fn = model.make_locality(LOCALITY_BUCKETS, LOCALITY_CAPACITY)
+    vec = jax.ShapeDtypeStruct((LOCALITY_BUCKETS,), jnp.float32)
+    decay = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(fn).lower(vec, vec, decay)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, batch, widths in IO_BATCH_VARIANTS:
+        text = lower_io_batch(name, batch, widths)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"name={name} file={fname} batch={batch} "
+            f"widths={widths[0]},{widths[1]},{widths[2]}"
+        )
+        print(f"  {name}: {len(text)} chars, batch={batch}, widths={widths}")
+
+    text = lower_gather()
+    with open(os.path.join(out_dir, "l2p_gather.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"name=l2p_gather file=l2p_gather.hlo.txt batch={GATHER_BATCH} widths=1,1,1"
+    )
+    print(f"  l2p_gather: {len(text)} chars")
+
+    text = lower_locality()
+    with open(os.path.join(out_dir, "locality.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"name=locality file=locality.hlo.txt batch={LOCALITY_BUCKETS} widths=1,1,1"
+    )
+    print(f"  locality: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# AOT artifacts — built by python/compile/aot.py\n")
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    print(f"lowering AOT artifacts to {args.out}")
+    manifest = build(args.out)
+    print(f"wrote {len(manifest)} variants + manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: EWMA hotness update.
+
+Drives the DFTL CMT hit-ratio estimate for the locality ablation
+(§4.1's closing remark): per-bucket access counts from the current epoch
+are folded into an exponentially-weighted hotness vector. Elementwise
+over bucket tiles; the L2 wrapper turns hotness into a cache-hit
+probability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _kernel(decay_ref, prev_ref, counts_ref, out_ref):
+    d = decay_ref[0]
+    out_ref[...] = d * prev_ref[...] + (1.0 - d) * counts_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hotness_ewma(prev, counts, decay, *, block=BLOCK):
+    """new_hot = decay * prev + (1 - decay) * counts.
+
+    Args:
+      prev, counts: f32[H] with H % block == 0.
+      decay: f32[1].
+    Returns:
+      f32[H].
+    """
+    h = prev.shape[0]
+    block = min(block, h)
+    assert h % block == 0, f"{h} buckets not a multiple of block {block}"
+    grid = (h // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((h,), jnp.float32),
+        interpret=True,
+    )(decay, prev, counts)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: batched L2P lookup (gather).
+
+The bulk analogue of the paper's L2P indexing stage: given a mapping
+table resident in expander memory and a batch of LPAs, fetch the PPAs.
+The table block is streamed into VMEM once per grid step and the LPA
+batch gathers from it.
+
+VMEM budget: the default table tile (64 Ki entries × 4 B = 256 KiB) plus
+one LPA block stays far under the ~4 MiB/step budget in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _kernel(table_ref, lpas_ref, out_ref):
+    table = table_ref[...]
+    lpas = lpas_ref[...]
+    out_ref[...] = jnp.take(table, lpas, axis=0, mode="clip")
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def l2p_gather(table, lpas, *, block=BLOCK):
+    """Gather `table[lpas]`.
+
+    Args:
+      table: int32[T] PPA per LPA (whole table per grid step).
+      lpas: int32[N], N % block == 0; entries must be < T (clipped).
+    Returns:
+      int32[N] of PPAs.
+    """
+    n = lpas.shape[0]
+    t = table.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (0,)),  # full table each step
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(table, lpas)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: per-IO service composition.
+
+Computes, for a batch of IOs, the index-stage service time and the media
+service time from the scheme parameter pack — the inner loop of the
+simulator's data plane. Elementwise over VMEM-resident tiles; the scalar
+parameter vector is replicated into every grid step's block.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper has
+no GPU kernels; this is the simulator's hot spot expressed the TPU way —
+BlockSpec-tiled VPU arithmetic, `interpret=True` for CPU-PJRT execution
+(real-TPU lowering would emit a Mosaic custom-call the CPU client cannot
+run).
+
+Parameter pack layout (must match rust/src/runtime/mod.rs ModelParams):
+  p0 firmware_ns   p1 index_accesses  p2 index_access_ns  p3 dram_ns
+  p4 flash_read_ns p5 dftl_ops_read   p6 dftl_ops_write   p7 t_read_ns
+  p8 t_buf_ns      p9 xfer_ns         p10 is_dftl         p11 jitter_amp
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARAMS_LEN = 12
+# Tile size: one VPU-friendly lane-multiple block per grid step.
+BLOCK = 256
+
+
+def _kernel(params_ref, is_write_ref, hit_ref, jitter_ref, idx_ref, media_ref):
+    p = params_ref[...]
+    w = is_write_ref[...]
+    hit = hit_ref[...]
+    miss = 1.0 - hit
+    # DFTL: synchronous translation fetch for reads AND writes
+    dftl_ops = w * p[6] + (1.0 - w) * p[5]
+    idx_dftl = p[3] + miss * dftl_ops * p[4]
+    # Ideal/LMB: k dependent accesses for reads; posted updates for writes
+    idx_plain = (1.0 - w) * p[1] * p[2]
+    idx_ref[...] = p[0] + p[10] * idx_dftl + (1.0 - p[10]) * idx_plain
+    # media: reads pay tR (jittered), writes the buffer ack
+    jit = 1.0 + p[11] * (2.0 * jitter_ref[...] - 1.0)
+    media_ref[...] = w * p[8] + (1.0 - w) * p[7] * jit
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def latency_compose(params, is_write, hit, jitter, *, block=BLOCK):
+    """Compose per-IO (index_service, media_service) for a batch.
+
+    Args:
+      params: f32[12] scalar pack.
+      is_write, hit, jitter: f32[N] with N % block == 0.
+    Returns:
+      (idx_service, media_service): two f32[N].
+    """
+    n = is_write.shape[0]
+    block = min(block, n)  # small batches use a single tile
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((PARAMS_LEN,), lambda i: (0,)),  # replicate params
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(params, is_write, hit, jitter)

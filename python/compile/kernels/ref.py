@@ -1,0 +1,78 @@
+"""Pure-jnp / numpy oracles for every kernel and for the whole model.
+
+These are the CORE correctness signal: pytest asserts kernel == ref over
+hypothesis-generated inputs, and `ref_io_batch` is a sequential-loop
+mirror of both model.py's scan formulation and the Rust NativeModel
+(rust/src/runtime/native.rs) — three independent implementations that
+must agree.
+"""
+
+import numpy as np
+
+
+def ref_latency_compose(params, is_write, hit, jitter):
+    """Reference for kernels.latency_compose (vectorised numpy)."""
+    p = np.asarray(params, dtype=np.float32)
+    w = np.asarray(is_write, dtype=np.float32)
+    hit = np.asarray(hit, dtype=np.float32)
+    jitter = np.asarray(jitter, dtype=np.float32)
+    miss = 1.0 - hit
+    dftl_ops = w * p[6] + (1.0 - w) * p[5]
+    idx_dftl = p[3] + miss * dftl_ops * p[4]
+    idx_plain = (1.0 - w) * p[1] * p[2]
+    idx = p[0] + p[10] * idx_dftl + (1.0 - p[10]) * idx_plain
+    jit = 1.0 + p[11] * (2.0 * jitter - 1.0)
+    media = w * p[8] + (1.0 - w) * p[7] * jit
+    return idx.astype(np.float32), media.astype(np.float32)
+
+
+def ref_l2p_gather(table, lpas):
+    """Reference for kernels.l2p_gather (with clip semantics)."""
+    table = np.asarray(table)
+    lpas = np.clip(np.asarray(lpas), 0, table.shape[0] - 1)
+    return table[lpas]
+
+
+def ref_hotness_ewma(prev, counts, decay):
+    """Reference for kernels.hotness_ewma."""
+    prev = np.asarray(prev, dtype=np.float32)
+    counts = np.asarray(counts, dtype=np.float32)
+    d = np.float32(np.asarray(decay).reshape(-1)[0])
+    return (d * prev + (np.float32(1.0) - d) * counts).astype(np.float32)
+
+
+def ref_lag_scan(arrival, service, width):
+    """Sequential oracle for the max-plus lag-C pipeline recursion:
+    finish_i = max(arrival_i, finish_{i-width}) + service_i."""
+    arrival = np.asarray(arrival, dtype=np.float32)
+    service = np.asarray(service, dtype=np.float32)
+    out = np.empty_like(arrival)
+    for i in range(arrival.shape[0]):
+        prev = out[i - width] if i >= width else np.float32(-np.inf)
+        out[i] = max(arrival[i], prev) + service[i]
+    return out
+
+
+def ref_io_batch(arrival, is_write, hit, jitter, params, widths):
+    """Sequential oracle for the full io_batch model.
+
+    Returns f32[2, N]: row 0 completion, row 1 latency.
+    """
+    idx, media = ref_latency_compose(params, is_write, hit, jitter)
+    xfer = np.full_like(idx, np.float32(params[9]))
+    f1 = ref_lag_scan(arrival, idx, widths[0])
+    f2 = ref_lag_scan(f1, media, widths[1])
+    f3 = ref_lag_scan(f2, xfer, widths[2])
+    return np.stack([f3, f3 - np.asarray(arrival, dtype=np.float32)])
+
+
+def ref_locality(prev, counts, decay, capacity):
+    """Reference for model.locality: EWMA then top-`capacity` hit mass."""
+    new_hot = ref_hotness_ewma(prev, counts, decay)
+    total = new_hot.sum()
+    if total <= 0:
+        hit = np.float32(0.0)
+    else:
+        probs = np.sort(new_hot / total)[::-1]
+        hit = probs[:capacity].sum().astype(np.float32)
+    return np.concatenate([new_hot, np.array([hit], dtype=np.float32)])

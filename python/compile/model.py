@@ -1,0 +1,93 @@
+"""L2 JAX model: the simulator's batched data plane.
+
+`make_io_batch(n, widths)` builds the function the Rust coordinator
+executes per batch (contract documented in rust/src/runtime/mod.rs):
+
+    (arrival, is_write, hit, jitter, params) -> (f32[2, n],)
+
+Pipeline: the L1 Pallas kernel composes per-IO service times, then three
+chained **max-plus lag-C associative scans** resolve the controller
+pipeline (index stage width W, media width M, link width 1):
+
+    finish_i = max(arrival_i, finish_{i-C}) + s_i
+
+Decomposition: the lag-C recursion splits into C independent max-plus
+affine chains (columns of a row-major (n/C, C) reshape), each scanned
+with `jax.lax.associative_scan` over composed maps
+f(x) = max(x, t) + s, whose composition law is
+(t1,s1) ∘ (t2,s2) = (max(t1, t2 − s1), s1 + s2).
+
+`make_locality(h, capacity)` builds the DFTL hit-ratio estimator around
+the hotness EWMA kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.hotness import hotness_ewma
+from compile.kernels.latency_compose import latency_compose
+from compile.kernels.l2p_gather import l2p_gather  # noqa: F401  (AOT'd separately)
+
+
+def _maxplus_combine(a, b):
+    """Composition of x -> max(x, t) + s maps; `a` applies first."""
+    t1, s1 = a
+    t2, s2 = b
+    return jnp.maximum(t1, t2 - s1), s1 + s2
+
+
+def lag_scan(arrival, service, width):
+    """finish_i = max(arrival_i, finish_{i-width}) + service_i, fully
+    vectorised: reshape to (n/width, width); each column is an
+    independent chain handled by one associative scan over axis 0."""
+    n = arrival.shape[0]
+    assert n % width == 0
+    t = arrival.reshape(n // width, width)
+    s = service.reshape(n // width, width)
+    t_c, s_c = jax.lax.associative_scan(_maxplus_combine, (t, s), axis=0)
+    # applying the composed map to x0 = -inf gives finish = t + s
+    return (t_c + s_c).reshape(n)
+
+
+def make_io_batch(n, widths):
+    """Build the io_batch model for batch `n` and stage `widths` (W,M,L)."""
+    w_idx, w_media, w_link = widths
+    assert n % w_idx == 0 and n % w_media == 0 and n % w_link == 0
+
+    def io_batch(arrival, is_write, hit, jitter, params):
+        idx_service, media_service = latency_compose(params, is_write, hit, jitter)
+        xfer = jnp.full((n,), params[9], dtype=jnp.float32)
+        f1 = lag_scan(arrival, idx_service, w_idx)
+        f2 = lag_scan(f1, media_service, w_media)
+        f3 = lag_scan(f2, xfer, w_link)
+        return (jnp.stack([f3, f3 - arrival]),)
+
+    return io_batch
+
+
+def make_locality(h, capacity):
+    """Build the locality estimator: EWMA hotness + top-`capacity`
+    bucket hit probability. Returns f32[h+1]: new hotness ++ [hit]."""
+    assert 0 < capacity <= h
+
+    def locality(prev, counts, decay):
+        new_hot = hotness_ewma(prev, counts, decay)
+        total = jnp.sum(new_hot)
+        probs = jnp.where(total > 0, new_hot / total, jnp.zeros_like(new_hot))
+        # NB: jnp.sort, not lax.top_k — top_k lowers to a `topk(...,
+        # largest=true)` attribute the xla_extension 0.5.1 HLO-text
+        # parser rejects; sort round-trips.
+        top = jnp.sort(probs)[h - capacity:]
+        hit = jnp.sum(top) * jnp.where(total > 0, 1.0, 0.0)
+        return (jnp.concatenate([new_hot, hit[None]]),)
+
+    return locality
+
+
+def make_l2p_gather(table_size, n):
+    """Build the standalone gather model (functional index lookups)."""
+
+    def gather(table, lpas):
+        return (l2p_gather(table, lpas),)
+
+    return gather

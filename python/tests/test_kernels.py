@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-numpy oracles,
+swept over shapes and values with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hotness import hotness_ewma
+from compile.kernels.l2p_gather import l2p_gather
+from compile.kernels.latency_compose import latency_compose
+
+RNG = np.random.default_rng(7)
+
+
+def make_params(is_dftl=0.0, jitter_amp=0.1):
+    # f, k, access, dram, flash, ops_r, ops_w, tR, tbuf, xfer, dftl, amp
+    return np.array(
+        [440.0, 1.0, 880.0, 70.0, 25000.0, 1.0, 2.0, 73000.0, 9000.0, 570.0,
+         is_dftl, jitter_amp],
+        dtype=np.float32,
+    )
+
+
+class TestLatencyCompose:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=8),
+        is_dftl=st.sampled_from([0.0, 1.0]),
+        amp=st.floats(min_value=0.0, max_value=0.3),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref_across_shapes(self, blocks, is_dftl, amp, seed):
+        n = 256 * blocks
+        rng = np.random.default_rng(seed)
+        is_write = (rng.random(n) < 0.5).astype(np.float32)
+        hit = (rng.random(n) < 0.7).astype(np.float32)
+        jitter = rng.random(n).astype(np.float32)
+        params = make_params(is_dftl, amp)
+        got_idx, got_media = latency_compose(params, is_write, hit, jitter)
+        want_idx, want_media = ref.ref_latency_compose(params, is_write, hit, jitter)
+        np.testing.assert_allclose(np.asarray(got_idx), want_idx, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_media), want_media, rtol=1e-6)
+
+    def test_reads_pay_index_writes_do_not(self):
+        n = 256
+        params = make_params()
+        idx_r, _ = latency_compose(
+            params, np.zeros(n, np.float32), np.ones(n, np.float32),
+            np.zeros(n, np.float32))
+        idx_w, _ = latency_compose(
+            params, np.ones(n, np.float32), np.ones(n, np.float32),
+            np.zeros(n, np.float32))
+        assert float(idx_r[0]) == 440.0 + 880.0  # f + k*access
+        assert float(idx_w[0]) == 440.0          # posted update
+
+    def test_dftl_miss_charges_flash(self):
+        n = 256
+        params = make_params(is_dftl=1.0)
+        hit = np.zeros(n, np.float32)
+        idx_r, _ = latency_compose(
+            params, np.zeros(n, np.float32), hit, np.zeros(n, np.float32))
+        idx_w, _ = latency_compose(
+            params, np.ones(n, np.float32), hit, np.zeros(n, np.float32))
+        assert float(idx_r[0]) == 440.0 + 70.0 + 25000.0       # 1 flash op
+        assert float(idx_w[0]) == 440.0 + 70.0 + 2 * 25000.0   # fetch+evict
+
+    def test_rejects_misaligned_batch(self):
+        n = 100  # not a multiple of the requested 64-wide block
+        with pytest.raises(AssertionError):
+            latency_compose(
+                make_params(), np.zeros(n, np.float32),
+                np.zeros(n, np.float32), np.zeros(n, np.float32), block=64)
+
+
+class TestL2pGather:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        table_pow=st.integers(min_value=6, max_value=12),
+        blocks=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, table_pow, blocks, seed):
+        t = 1 << table_pow
+        n = 512 * blocks
+        rng = np.random.default_rng(seed)
+        table = rng.integers(0, 2**30, size=t, dtype=np.int32)
+        lpas = rng.integers(0, t, size=n, dtype=np.int32)
+        got = np.asarray(l2p_gather(table, lpas))
+        np.testing.assert_array_equal(got, ref.ref_l2p_gather(table, lpas))
+
+    def test_identity_mapping(self):
+        t = 1024
+        table = np.arange(t, dtype=np.int32)
+        lpas = np.arange(512, dtype=np.int32) * 2
+        got = np.asarray(l2p_gather(table, lpas))
+        np.testing.assert_array_equal(got, lpas)
+
+    def test_out_of_range_clips(self):
+        table = np.arange(64, dtype=np.int32)
+        lpas = np.full(512, 1000, dtype=np.int32)
+        got = np.asarray(l2p_gather(table, lpas))
+        assert (got == 63).all()
+
+
+class TestHotnessEwma:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=8),
+        decay=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, blocks, decay, seed):
+        h = 128 * blocks
+        rng = np.random.default_rng(seed)
+        prev = rng.random(h).astype(np.float32) * 100
+        counts = rng.random(h).astype(np.float32) * 10
+        d = np.array([decay], dtype=np.float32)
+        got = np.asarray(hotness_ewma(prev, counts, d))
+        np.testing.assert_allclose(got, ref.ref_hotness_ewma(prev, counts, d),
+                                   rtol=1e-6)
+
+    def test_decay_extremes(self):
+        h = 128
+        prev = np.full(h, 5.0, np.float32)
+        counts = np.full(h, 9.0, np.float32)
+        keep = np.asarray(hotness_ewma(prev, counts, np.array([1.0], np.float32)))
+        np.testing.assert_allclose(keep, prev)
+        replace = np.asarray(hotness_ewma(prev, counts, np.array([0.0], np.float32)))
+        np.testing.assert_allclose(replace, counts)

@@ -1,0 +1,133 @@
+"""L2 model correctness: the vectorised scan formulation vs the
+sequential oracle (which also mirrors rust/src/runtime/native.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(is_dftl=0.0, jitter_amp=0.1):
+    return np.array(
+        [440.0, 1.0, 880.0, 70.0, 25000.0, 1.0, 2.0, 73000.0, 9000.0, 570.0,
+         is_dftl, jitter_amp],
+        dtype=np.float32,
+    )
+
+
+class TestLagScan:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        width=st.sampled_from([1, 2, 4, 8, 16]),
+        rows=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_sequential_oracle(self, width, rows, seed):
+        n = width * rows
+        rng = np.random.default_rng(seed)
+        # non-decreasing arrivals, modest magnitudes (exact in f32)
+        arrival = np.cumsum(rng.integers(0, 1000, n)).astype(np.float32)
+        service = rng.integers(1, 5000, n).astype(np.float32)
+        got = np.asarray(model.lag_scan(arrival, service, width))
+        want = ref.ref_lag_scan(arrival, service, width)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_width_one_is_single_server_queue(self):
+        arrival = np.array([0.0, 0.0, 0.0], np.float32)
+        service = np.array([10.0, 10.0, 10.0], np.float32)
+        got = np.asarray(model.lag_scan(arrival, service, 1))
+        np.testing.assert_allclose(got, [10.0, 20.0, 30.0])
+
+    def test_wide_stage_no_queueing(self):
+        n = 8
+        arrival = np.zeros(n, np.float32)
+        service = np.full(n, 7.0, np.float32)
+        got = np.asarray(model.lag_scan(arrival, service, 8))
+        np.testing.assert_allclose(got, np.full(n, 7.0))
+
+
+class TestIoBatch:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        widths=st.sampled_from([(2, 128, 1), (2, 160, 1), (1, 4, 2)]),
+        is_dftl=st.sampled_from([0.0, 1.0]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_sequential_oracle(self, widths, is_dftl, seed):
+        n = int(np.lcm.reduce(widths)) * 16
+        rng = np.random.default_rng(seed)
+        arrival = np.cumsum(rng.integers(0, 600, n)).astype(np.float32)
+        is_write = (rng.random(n) < 0.5).astype(np.float32)
+        hit = (rng.random(n) < 0.5).astype(np.float32)
+        jitter = rng.random(n).astype(np.float32)
+        params = make_params(is_dftl)
+        fn = model.make_io_batch(n, widths)
+        (got,) = fn(arrival, is_write, hit, jitter, params)
+        want = ref.ref_io_batch(arrival, is_write, hit, jitter, params, widths)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5)
+
+    def test_output_shape_and_latency_row(self):
+        n = 256
+        fn = model.make_io_batch(n, (2, 128, 1))
+        arrival = np.arange(n, dtype=np.float32) * 1e6  # unloaded
+        zeros = np.zeros(n, np.float32)
+        ones = np.ones(n, np.float32)
+        p = make_params(jitter_amp=0.0)
+        (out,) = fn(arrival, zeros, ones, zeros, p)
+        out = np.asarray(out)
+        assert out.shape == (2, n)
+        # f32 resolution at arrival magnitudes ~2.5e8 is ~16 ns
+        np.testing.assert_allclose(out[1], out[0] - arrival, rtol=5e-4)
+        # unloaded read latency = idx(440+880) + tR 73000 + xfer 570
+        np.testing.assert_allclose(out[1], np.full(n, 74890.0), rtol=5e-4)
+
+    def test_link_stage_caps_drain_rate(self):
+        # all arrive at 0; link width 1 at 570ns/IO must be the floor of
+        # inter-completion spacing at the tail
+        n = 2048
+        fn = model.make_io_batch(n, (2, 128, 1))
+        zeros = np.zeros(n, np.float32)
+        ones = np.ones(n, np.float32)
+        p = make_params(jitter_amp=0.0)
+        (out,) = fn(zeros, zeros, ones, zeros, p)
+        completion = np.sort(np.asarray(out)[0])
+        tail_gaps = np.diff(completion[-256:])
+        assert tail_gaps.min() >= 569.0
+
+
+class TestLocality:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        capacity=st.sampled_from([1, 16, 64, 1024]),
+        decay=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref(self, capacity, decay, seed):
+        h = 1024
+        rng = np.random.default_rng(seed)
+        prev = (rng.random(h) * 50).astype(np.float32)
+        counts = (rng.random(h) * 10).astype(np.float32)
+        d = np.array([decay], np.float32)
+        fn = model.make_locality(h, capacity)
+        (got,) = fn(prev, counts, d)
+        want = ref.ref_locality(prev, counts, d, capacity)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=1e-6)
+
+    def test_skewed_counts_give_high_hit(self):
+        h, cap = 1024, 64
+        fn = model.make_locality(h, cap)
+        prev = np.zeros(h, np.float32)
+        counts = np.zeros(h, np.float32)
+        counts[:32] = 1000.0  # all traffic in 32 buckets < capacity
+        (out,) = fn(prev, counts, np.array([0.0], np.float32))
+        hit = float(np.asarray(out)[-1])
+        assert hit > 0.99
+
+    def test_uniform_counts_give_capacity_fraction(self):
+        h, cap = 1024, 64
+        fn = model.make_locality(h, cap)
+        counts = np.ones(h, np.float32)
+        (out,) = fn(np.zeros(h, np.float32), counts, np.array([0.0], np.float32))
+        hit = float(np.asarray(out)[-1])
+        assert abs(hit - cap / h) < 1e-3

@@ -1,0 +1,69 @@
+//! ABL-HMB — LMB vs the NVMe 1.2 Host Memory Buffer (§2.1).
+//!
+//! HMB is the paper's incumbent: index in *host* DRAM over plain PCIe.
+//! The paper's two arguments against it, measured:
+//!  1. latency: the HMB access path (PCIe round-trip) is slower than
+//!     LMB-CXL P2P and only marginally faster than LMB-PCIe;
+//!  2. scalability: HMB consumes host DRAM (hundreds of MB per device)
+//!     and "challenges the host memory scalability" — the fleet sweep
+//!     shows host DRAM exhausted long before an expander.
+
+use lmb::coordinator::Coordinator;
+use lmb::cxl::fabric::Fabric;
+use lmb::cxl::types::GIB;
+use lmb::pcie::link::PcieGen;
+use lmb::ssd::spec::SsdSpec;
+use lmb::ssd::IndexPlacement;
+use lmb::workload::fio::{FioJob, IoPattern};
+
+fn main() {
+    let coord = Coordinator::native();
+    let fabric = Fabric::default();
+    println!("## ABL-HMB — host-memory-buffer baseline vs LMB\n");
+
+    println!("index access latency (one reference):");
+    for (label, gen) in [("Gen4", PcieGen::Gen4), ("Gen5", PcieGen::Gen5)] {
+        let hmb = IndexPlacement::Hmb.index_access_latency(&fabric, gen);
+        let cxl = IndexPlacement::LmbCxl.index_access_latency(&fabric, gen);
+        let pcie = IndexPlacement::LmbPcie.index_access_latency(&fabric, gen);
+        println!("  {label}: HMB {hmb}, LMB-CXL {cxl}, LMB-PCIe {pcie}");
+        assert!(cxl < hmb, "CXL P2P must beat the PCIe host path");
+        assert!(hmb < pcie, "HMB skips the extra CXL leg of LMB-PCIe");
+    }
+
+    println!("\nGen5 rand-read throughput (QD 64 x 4):");
+    let spec = SsdSpec::gen5();
+    let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
+    let mut rows = Vec::new();
+    for placement in [
+        IndexPlacement::Ideal,
+        IndexPlacement::LmbCxl,
+        IndexPlacement::Hmb,
+        IndexPlacement::LmbPcie,
+        IndexPlacement::Dftl,
+    ] {
+        let row = coord.run_scheme(&spec, placement, &job).unwrap();
+        println!("  {:<10} {:>8.0} KIOPS (p99 {})", row.scheme.label(), row.kiops, row.p99);
+        rows.push((placement, row.kiops));
+    }
+    // ordering: Ideal > CXL > HMB > PCIe > DFTL
+    for w in rows.windows(2) {
+        assert!(w[0].1 >= w[1].1 * 0.999, "{:?} must be >= {:?}", w[0].0, w[1].0);
+    }
+
+    // scalability: 7.5 GB of L2P per device; a 64 GB host with 75%
+    // usable DRAM hosts 6 devices' HMB; a 512 GB expander hosts 68.
+    let l2p = spec.l2p_bytes() as f64;
+    let host_budget = 0.75 * 64e9;
+    let expander = 512e9;
+    println!(
+        "\nscalability: host DRAM (64 GB, 75% budget) sustains {} HMB devices;\n\
+         one 512 GB expander sustains {} LMB devices — '{}'",
+        (host_budget / l2p) as u64,
+        (expander / l2p) as u64,
+        "the HMB scheme ... only applicable in the scenario that the DRAM \
+         requirement is not large (§2.1)"
+    );
+    assert!((expander / l2p) as u64 > 10 * (host_budget / l2p) as u64);
+    println!("\nABL-HMB OK");
+}

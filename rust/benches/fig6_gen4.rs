@@ -1,0 +1,44 @@
+//! FIG6a — regenerates Figure 6(a): Ideal / LMB-CXL / LMB-PCIe / DFTL
+//! across seq/rand × read/write on the PCIe Gen4 SSD, with the paper's
+//! claimed deltas asserted as acceptance bands (shape, not absolutes).
+
+use lmb::coordinator::Coordinator;
+use lmb::pcie::link::PcieGen;
+use lmb::ssd::IndexPlacement;
+use lmb::testing::bench;
+use lmb::workload::fio::IoPattern;
+
+fn main() {
+    let coord = Coordinator::auto();
+    let mut report = None;
+    let m = bench::measure("figure6(gen4) full grid", 0, 3, || {
+        report = Some(coord.figure6(PcieGen::Gen4).unwrap());
+    });
+    let report = report.unwrap();
+    println!("{}", report.to_markdown());
+    bench::report(&m, Some(16 * coord.batches as u64 * 2048));
+
+    println!("\npaper-vs-model deltas (Figure 6a):");
+    let checks: &[(&str, IndexPlacement, IoPattern, f64, f64, f64)] = &[
+        // label, scheme, pattern, paper ratio-vs-ideal, lo, hi
+        ("writes: LMB-CXL == Ideal", IndexPlacement::LmbCxl, IoPattern::RandWrite, 1.0, 0.99, 1.01),
+        ("writes: LMB-PCIe == Ideal", IndexPlacement::LmbPcie, IoPattern::RandWrite, 1.0, 0.99, 1.01),
+        ("writes: DFTL ~7x worse", IndexPlacement::Dftl, IoPattern::RandWrite, 7.0, 4.0, 10.0),
+        ("reads: LMB-CXL == Ideal", IndexPlacement::LmbCxl, IoPattern::RandRead, 1.0, 0.98, 1.02),
+        ("reads: LMB-PCIe -13.3%", IndexPlacement::LmbPcie, IoPattern::RandRead, 1.153, 1.05, 1.30),
+        ("reads: DFTL ~14x worse", IndexPlacement::Dftl, IoPattern::RandRead, 14.0, 10.0, 20.0),
+        ("seq reads: LMB-PCIe -16.6%", IndexPlacement::LmbPcie, IoPattern::SeqRead, 1.199, 1.05, 1.30),
+    ];
+    let mut ok = true;
+    for (label, scheme, pattern, paper, lo, hi) in checks {
+        let got = report.ratio_vs_ideal(*scheme, *pattern).unwrap();
+        let pass = (*lo..=*hi).contains(&got);
+        ok &= pass;
+        println!(
+            "  {:<30} paper {:>6.2}x  model {:>6.2}x  [{}]",
+            label, paper, got, if pass { "ok" } else { "MISS" }
+        );
+    }
+    assert!(ok, "Figure 6(a) shape drifted");
+    println!("\nFIG6a OK [{} backend]", coord.backend_name());
+}

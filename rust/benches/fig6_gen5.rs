@@ -1,0 +1,53 @@
+//! FIG6b — regenerates Figure 6(b): the Gen5 device, where the paper's
+//! central observation lands — the same hundreds-of-ns CXL latency that
+//! was free on Gen4 costs large fractions of a faster device's reads,
+//! while writes stay at Ideal and DFTL trails by ~20x.
+//!
+//! Known deviation (EXPERIMENTS.md): the paper reports seq-read dropping
+//! far less than rand-read on Gen5 (−8% vs −56%), which no constant
+//! per-IO injection can produce; our model (faithful to the paper's own
+//! §4 methodology) degrades both similarly.
+
+use lmb::coordinator::Coordinator;
+use lmb::pcie::link::PcieGen;
+use lmb::ssd::IndexPlacement;
+use lmb::testing::bench;
+use lmb::workload::fio::IoPattern;
+
+fn main() {
+    let coord = Coordinator::auto();
+    let mut report = None;
+    let m = bench::measure("figure6(gen5) full grid", 0, 3, || {
+        report = Some(coord.figure6(PcieGen::Gen5).unwrap());
+    });
+    let report = report.unwrap();
+    println!("{}", report.to_markdown());
+    bench::report(&m, Some(16 * coord.batches as u64 * 2560));
+
+    println!("\npaper-vs-model deltas (Figure 6b):");
+    let checks: &[(&str, IndexPlacement, IoPattern, f64, f64, f64)] = &[
+        ("writes: LMB-CXL == Ideal", IndexPlacement::LmbCxl, IoPattern::RandWrite, 1.0, 0.99, 1.01),
+        ("writes: LMB-PCIe == Ideal", IndexPlacement::LmbPcie, IoPattern::RandWrite, 1.0, 0.99, 1.01),
+        ("writes: DFTL ~20x worse", IndexPlacement::Dftl, IoPattern::RandWrite, 20.0, 10.0, 30.0),
+        ("rand reads: LMB-CXL -56%", IndexPlacement::LmbCxl, IoPattern::RandRead, 2.27, 1.4, 2.6),
+        ("rand reads: LMB-PCIe -70%", IndexPlacement::LmbPcie, IoPattern::RandRead, 3.33, 3.0, 12.0),
+        ("rand reads: DFTL ~20x worse", IndexPlacement::Dftl, IoPattern::RandRead, 20.0, 15.0, 40.0),
+    ];
+    let mut ok = true;
+    for (label, scheme, pattern, paper, lo, hi) in checks {
+        let got = report.ratio_vs_ideal(*scheme, *pattern).unwrap();
+        let pass = (*lo..=*hi).contains(&got);
+        ok &= pass;
+        println!(
+            "  {:<30} paper {:>6.2}x  model {:>6.2}x  [{}]",
+            label, paper, got, if pass { "ok" } else { "MISS" }
+        );
+    }
+    // ordering invariants: Ideal > CXL > PCIe > DFTL on reads
+    let k = |s| report.get(s, IoPattern::RandRead).unwrap().kiops;
+    assert!(k(IndexPlacement::Ideal) > k(IndexPlacement::LmbCxl));
+    assert!(k(IndexPlacement::LmbCxl) > k(IndexPlacement::LmbPcie));
+    assert!(k(IndexPlacement::LmbPcie) > k(IndexPlacement::Dftl));
+    assert!(ok, "Figure 6(b) shape drifted");
+    println!("\nFIG6b OK [{} backend]", coord.backend_name());
+}

@@ -1,0 +1,74 @@
+//! PERF — the L3 hot path: batched data-plane execution.
+//!
+//! Measures simulated-IOs/second through (a) the native mirror and
+//! (b) the AOT XLA executable via PJRT, plus batch construction alone,
+//! isolating dispatch overhead. DESIGN.md §Perf target: >= 10 M
+//! simulated IOs/s end-to-end so the simulator never bottlenecks a
+//! <= 3.5 M IOPS device model.
+
+use lmb::coordinator::variant_for;
+use lmb::cxl::fabric::Fabric;
+use lmb::cxl::types::GIB;
+use lmb::pcie::link::PcieGen;
+use lmb::runtime::{Artifacts, BatchBuilder, NativeModel};
+use lmb::ssd::controller::Controller;
+use lmb::ssd::spec::SsdSpec;
+use lmb::ssd::IndexPlacement;
+use lmb::testing::bench;
+use lmb::workload::fio::{FioJob, IoPattern};
+
+fn main() {
+    let fabric = Fabric::default();
+    let spec = SsdSpec::gen4();
+    let ctl = Controller::new(spec.clone(), IndexPlacement::LmbCxl, fabric);
+    let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
+    let rate = ctl.throughput_iops(&job) * 0.98;
+    let (name, batch, widths) = variant_for(PcieGen::Gen4);
+
+    println!("## PERF — data-plane hot path (batch = {batch})\n");
+
+    // batch construction only
+    let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
+    let m = bench::measure("batch build (rng + fill, reused buffers)", 5, 200, || {
+        let _ = builder.next_batch();
+    });
+    bench::report(&m, Some(batch as u64));
+
+    // native model
+    let native = NativeModel::new(widths);
+    let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
+    let mut scratch = lmb::runtime::native::NativeScratch::new(batch);
+    let m_native = bench::measure("native model (build + run, scratch reuse)", 5, 200, || {
+        let inputs = builder.next_batch();
+        native.run_with_scratch(inputs, &mut scratch).unwrap();
+        std::hint::black_box(&scratch.latency);
+    });
+    bench::report(&m_native, Some(batch as u64));
+    let native_mios = batch as f64 / m_native.mean_ns * 1e3;
+
+    // XLA model (if artifacts built)
+    let dir = Artifacts::default_dir();
+    if Artifacts::available(&dir) {
+        let artifacts = Artifacts::load(&dir).unwrap();
+        let model = artifacts.get(name).unwrap();
+        let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
+        let m_xla = bench::measure("xla-pjrt model (build + dispatch + run)", 5, 200, || {
+            let inputs = builder.next_batch();
+            let out = model.run(inputs).unwrap();
+            std::hint::black_box(&out.latency);
+        });
+        bench::report(&m_xla, Some(batch as u64));
+        let xla_mios = batch as f64 / m_xla.mean_ns * 1e3;
+        println!(
+            "\nsimulated IOs/s: native {:.1} M/s, xla {:.1} M/s (dispatch overhead {:.0}us/batch)",
+            native_mios,
+            xla_mios,
+            (m_xla.mean_ns - m.mean_ns) / 1e3
+        );
+        assert!(xla_mios > 3.5, "XLA path must outrun the fastest modeled device");
+    } else {
+        println!("(artifacts not built; XLA row skipped — run `make artifacts`)");
+    }
+    assert!(native_mios > 10.0, "native path must exceed 10M IOs/s, got {native_mios}");
+    println!("\nPERF OK");
+}

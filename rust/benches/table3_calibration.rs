@@ -1,0 +1,21 @@
+//! TAB3 — regenerates Table 3: the modeled devices under the Ideal
+//! scheme must land on the vendor spec sheet (the calibration every
+//! Figure 6 number rests on).
+
+use lmb::coordinator::Coordinator;
+
+fn main() {
+    let coord = Coordinator::native();
+    println!("## TAB3 — SSD spec calibration (Ideal scheme)\n");
+    println!("{:<46} {:>9} {:>9} {:>7}", "metric", "spec", "model", "delta");
+    println!("{}", "-".repeat(75));
+    let mut worst: f64 = 0.0;
+    for (label, spec, measured) in coord.table3().unwrap() {
+        let delta = (measured - spec) / spec * 100.0;
+        worst = worst.max(delta.abs());
+        println!("{label:<46} {spec:>9.1} {measured:>9.1} {delta:>6.1}%");
+    }
+    println!("\nworst |delta| = {worst:.1}% (acceptance: < 6%)");
+    assert!(worst < 6.0, "calibration drifted");
+    println!("TAB3 OK");
+}

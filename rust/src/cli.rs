@@ -1,0 +1,113 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Grammar: `lmb <command> [--flag=value | --flag] [positional...]`.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut args = Args::default();
+        for tok in argv {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err(Error::Config("empty flag '--'".into()));
+                }
+                match rest.split_once('=') {
+                    Some((k, v)) => {
+                        args.flags.insert(k.to_string(), v.to_string());
+                    }
+                    None => {
+                        args.flags.insert(rest.to_string(), "true".to_string());
+                    }
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => crate::config::parse_size(v),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad float for --{name}: '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positional() {
+        let a = parse("fig6 --gen=gen5 --native trace.txt");
+        assert_eq!(a.command, "fig6");
+        assert_eq!(a.flag("gen"), Some("gen5"));
+        assert!(a.has("native"));
+        assert_eq!(a.positional, vec!["trace.txt"]);
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        let a = parse("run --verbose");
+        assert_eq!(a.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn numeric_flags_with_suffixes() {
+        let a = parse("run --span=64G --qd=32 --theta=0.99");
+        assert_eq!(a.flag_u64("span", 0).unwrap(), 64 << 30);
+        assert_eq!(a.flag_u64("qd", 64).unwrap(), 32);
+        assert_eq!(a.flag_u64("missing", 7).unwrap(), 7);
+        assert!((a.flag_f64("theta", 0.0).unwrap() - 0.99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_flag_rejected() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Configuration: presets + a tiny `key=value` parser.
+//!
+//! serde/toml are unavailable offline, so config files and CLI overrides
+//! use flat `key=value` pairs (one per line in files, space-separated on
+//! the command line) — enough for every knob the experiments expose.
+
+use std::collections::HashMap;
+
+use crate::cxl::types::GIB;
+use crate::error::{Error, Result};
+use crate::pcie::link::PcieGen;
+use crate::ssd::IndexPlacement;
+use crate::workload::fio::{FioJob, IoPattern};
+
+/// Parsed key=value bag.
+#[derive(Debug, Clone, Default)]
+pub struct Kv {
+    map: HashMap<String, String>,
+}
+
+impl Kv {
+    /// Parse `k=v` tokens (whitespace separated; `#` starts a comment).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = HashMap::new();
+        for tok in text.split_whitespace() {
+            if tok.starts_with('#') {
+                break;
+            }
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("expected key=value, got '{tok}'")))?;
+            if k.is_empty() || v.is_empty() {
+                return Err(Error::Config(format!("empty key or value in '{tok}'")));
+            }
+            map.insert(k.to_string(), v.to_string());
+        }
+        Ok(Kv { map })
+    }
+
+    /// Parse a file of `key=value` lines.
+    pub fn parse_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut all = HashMap::new();
+        for line in text.lines() {
+            let kv = Kv::parse(line)?;
+            all.extend(kv.map);
+        }
+        Ok(Kv { map: all })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.map
+            .get(key)
+            .map(|v| parse_size(v))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.map
+            .get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| Error::Config(format!("bad float for {key}: '{v}'")))
+            })
+            .transpose()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Parse sizes with k/m/g/t suffixes (binary).
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1 << 20),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1 << 30),
+        Some('t') | Some('T') => (&s[..s.len() - 1], 1 << 40),
+        _ => (s, 1),
+    };
+    num.parse::<u64>()
+        .map(|n| n * mult)
+        .map_err(|_| Error::Config(format!("bad size '{s}'")))
+}
+
+/// Parse a scheme name as the paper spells them.
+pub fn parse_scheme(s: &str) -> Result<IndexPlacement> {
+    match s.to_ascii_lowercase().as_str() {
+        "ideal" => Ok(IndexPlacement::Ideal),
+        "lmb-cxl" | "lmbcxl" | "cxl" => Ok(IndexPlacement::LmbCxl),
+        "lmb-pcie" | "lmbpcie" | "pcie" => Ok(IndexPlacement::LmbPcie),
+        "dftl" => Ok(IndexPlacement::Dftl),
+        "hmb" => Ok(IndexPlacement::Hmb),
+        _ => Err(Error::Config(format!(
+            "unknown scheme '{s}' (ideal|lmb-cxl|lmb-pcie|dftl|hmb)"
+        ))),
+    }
+}
+
+/// Parse a PCIe generation.
+pub fn parse_gen(s: &str) -> Result<PcieGen> {
+    match s.to_ascii_lowercase().as_str() {
+        "gen4" | "4" => Ok(PcieGen::Gen4),
+        "gen5" | "5" => Ok(PcieGen::Gen5),
+        _ => Err(Error::Config(format!("unknown generation '{s}' (gen4|gen5)"))),
+    }
+}
+
+/// Parse a workload pattern (fio `rw=` spellings accepted).
+pub fn parse_pattern(s: &str) -> Result<IoPattern> {
+    match s.to_ascii_lowercase().as_str() {
+        "read" | "seqread" | "seq-read" => Ok(IoPattern::SeqRead),
+        "write" | "seqwrite" | "seq-write" => Ok(IoPattern::SeqWrite),
+        "randread" | "rand-read" => Ok(IoPattern::RandRead),
+        "randwrite" | "rand-write" => Ok(IoPattern::RandWrite),
+        _ => Err(Error::Config(format!(
+            "unknown pattern '{s}' (read|write|randread|randwrite)"
+        ))),
+    }
+}
+
+/// Build a [`FioJob`] from a pattern plus `key=value` overrides
+/// (bs, qd, numjobs, ios, span, zipf, seed).
+pub fn job_from_kv(pattern: IoPattern, kv: &Kv) -> Result<FioJob> {
+    let mut job = FioJob::paper(pattern, 64 * GIB);
+    if let Some(bs) = kv.get_u64("bs")? {
+        job.block_size = bs as u32;
+    }
+    if let Some(qd) = kv.get_u64("qd")? {
+        job.qd = qd as u32;
+    }
+    if let Some(nj) = kv.get_u64("numjobs")? {
+        job.numjobs = nj as u32;
+    }
+    if let Some(ios) = kv.get_u64("ios")? {
+        job.total_ios = ios;
+    }
+    if let Some(span) = kv.get_u64("span")? {
+        job.span_bytes = span;
+    }
+    if let Some(theta) = kv.get_f64("zipf")? {
+        job.zipf_theta = Some(theta);
+    }
+    if let Some(seed) = kv.get_u64("seed")? {
+        job.seed = seed;
+    }
+    job.validate()?;
+    Ok(job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_parses_tokens_and_comments() {
+        let kv = Kv::parse("qd=64 bs=4k # trailing comment ignored").unwrap();
+        assert_eq!(kv.get("qd"), Some("64"));
+        assert_eq!(kv.get_u64("bs").unwrap(), Some(4096));
+        assert_eq!(kv.len(), 2);
+    }
+
+    #[test]
+    fn kv_rejects_malformed() {
+        assert!(Kv::parse("noequals").is_err());
+        assert!(Kv::parse("=v").is_err());
+        assert!(Kv::parse("k=").is_err());
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("4096").unwrap(), 4096);
+        assert_eq!(parse_size("4k").unwrap(), 4096);
+        assert_eq!(parse_size("64G").unwrap(), 64 << 30);
+        assert!(parse_size("4x").is_err());
+    }
+
+    #[test]
+    fn scheme_gen_pattern_names() {
+        assert_eq!(parse_scheme("LMB-CXL").unwrap(), IndexPlacement::LmbCxl);
+        assert_eq!(parse_scheme("ideal").unwrap(), IndexPlacement::Ideal);
+        assert!(parse_scheme("bogus").is_err());
+        assert_eq!(parse_gen("gen5").unwrap(), PcieGen::Gen5);
+        assert_eq!(parse_pattern("randread").unwrap(), IoPattern::RandRead);
+    }
+
+    #[test]
+    fn job_overrides() {
+        let kv = Kv::parse("bs=8k qd=32 ios=1000 zipf=0.9").unwrap();
+        let j = job_from_kv(IoPattern::RandRead, &kv).unwrap();
+        assert_eq!(j.block_size, 8192);
+        assert_eq!(j.qd, 32);
+        assert_eq!(j.total_ios, 1000);
+        assert_eq!(j.zipf_theta, Some(0.9));
+    }
+
+    #[test]
+    fn job_overrides_validated() {
+        let kv = Kv::parse("bs=1000").unwrap(); // not a power of two
+        assert!(job_from_kv(IoPattern::RandRead, &kv).is_err());
+    }
+}

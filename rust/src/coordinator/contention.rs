@@ -1,0 +1,149 @@
+//! Shared-expander contention model (§1: "Performance interference due
+//! to multiple devices accessing shared memory adds complexity").
+//!
+//! N devices place their L2P tables in one expander. Each device's index
+//! traffic loads the expander's media: an M/M/1-style queueing inflation
+//! lengthens every index access, which lowers each device's throughput,
+//! which lowers the offered load — a fixed point the solver iterates to.
+
+use crate::cxl::fabric::Fabric;
+use crate::cxl::packet::LINE;
+use crate::error::Result;
+use crate::ssd::controller::Controller;
+use crate::ssd::spec::SsdSpec;
+use crate::ssd::IndexPlacement;
+use crate::workload::fio::FioJob;
+
+/// Result of a contention run.
+#[derive(Debug, Clone)]
+pub struct ContentionPoint {
+    pub devices: u32,
+    /// Per-device throughput, KIOPS.
+    pub per_device_kiops: f64,
+    /// Aggregate throughput, KIOPS.
+    pub aggregate_kiops: f64,
+    /// Expander utilisation [0,1).
+    pub utilisation: f64,
+    /// Inflated index-access latency, ns.
+    pub access_ns: u64,
+}
+
+/// Solve the contention fixed point for `devices` identical SSDs sharing
+/// one expander.
+pub fn solve(
+    spec: &SsdSpec,
+    scheme: IndexPlacement,
+    fabric: &Fabric,
+    job: &FioJob,
+    devices: u32,
+    expander_bandwidth_bps: f64,
+) -> Result<ContentionPoint> {
+    assert!(devices >= 1);
+    // expander capacity in index accesses/sec (64 B lines)
+    let access_cap = expander_bandwidth_bps / LINE as f64;
+    let k = spec.pipeline.index_accesses as f64;
+    let base_ctl = Controller::new(spec.clone(), scheme, fabric.clone());
+    let base_access = base_ctl.index_access().as_ns() as f64;
+    let media_ns = fabric.cfg.hdm_media.as_ns() as f64;
+
+    let mut inflation = 1.0f64;
+    let mut x = base_ctl.throughput_iops(job);
+    let mut rho = 0.0;
+    for _ in 0..32 {
+        // offered index-access load from all devices (reads only carry
+        // synchronous accesses; writes are posted)
+        let per_io_accesses = if job.pattern.is_write() { 0.2 } else { k };
+        let load = devices as f64 * x * per_io_accesses;
+        rho = (load / access_cap).min(0.999);
+        // queueing inflates the *media* component of each access
+        let extra = media_ns * rho / (1.0 - rho);
+        let new_inflation = (base_access + extra) / base_access;
+        // damped update for stable convergence
+        inflation = 0.5 * inflation + 0.5 * new_inflation;
+        let mut ctl = Controller::new(spec.clone(), scheme, fabric.clone());
+        ctl.index_access_inflation = inflation;
+        let nx = ctl.throughput_iops(job);
+        if (nx - x).abs() / x < 1e-6 {
+            x = nx;
+            break;
+        }
+        x = nx;
+    }
+    Ok(ContentionPoint {
+        devices,
+        per_device_kiops: x / 1e3,
+        aggregate_kiops: devices as f64 * x / 1e3,
+        utilisation: rho,
+        access_ns: (base_access * inflation) as u64,
+    })
+}
+
+/// Sweep 1..=max_devices.
+pub fn sweep(
+    spec: &SsdSpec,
+    scheme: IndexPlacement,
+    fabric: &Fabric,
+    job: &FioJob,
+    max_devices: u32,
+    expander_bandwidth_bps: f64,
+) -> Result<Vec<ContentionPoint>> {
+    (1..=max_devices)
+        .map(|n| solve(spec, scheme, fabric, job, n, expander_bandwidth_bps))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::GIB;
+    use crate::workload::fio::IoPattern;
+
+    fn rig() -> (SsdSpec, Fabric, FioJob) {
+        (
+            SsdSpec::gen5(),
+            Fabric::default(),
+            FioJob::paper(IoPattern::RandRead, 64 * GIB),
+        )
+    }
+
+    #[test]
+    fn single_device_matches_uncontended() {
+        let (spec, fabric, job) = rig();
+        let p = solve(&spec, IndexPlacement::LmbCxl, &fabric, &job, 1, 80e9).unwrap();
+        let ctl = Controller::new(spec, IndexPlacement::LmbCxl, fabric);
+        let base = ctl.throughput_iops(&job) / 1e3;
+        assert!((p.per_device_kiops - base).abs() / base < 0.05, "{p:?} vs {base}");
+    }
+
+    #[test]
+    fn contention_degrades_per_device_throughput() {
+        let (spec, fabric, job) = rig();
+        let pts = sweep(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 80e9).unwrap();
+        assert!(pts[7].per_device_kiops < pts[0].per_device_kiops);
+        assert!(pts[7].utilisation > pts[0].utilisation);
+        // aggregate still grows (sub-linearly)
+        assert!(pts[7].aggregate_kiops > pts[0].aggregate_kiops);
+        // monotone decline
+        for w in pts.windows(2) {
+            assert!(w[1].per_device_kiops <= w[0].per_device_kiops * 1.001);
+        }
+    }
+
+    #[test]
+    fn writes_barely_contend() {
+        // posted updates → little synchronous expander load
+        let (spec, fabric, _) = rig();
+        let wjob = FioJob::paper(IoPattern::RandWrite, 64 * GIB);
+        let pts = sweep(&spec, IndexPlacement::LmbCxl, &fabric, &wjob, 8, 80e9).unwrap();
+        let drop = 1.0 - pts[7].per_device_kiops / pts[0].per_device_kiops;
+        assert!(drop < 0.05, "write contention drop {drop}");
+    }
+
+    #[test]
+    fn bigger_expander_bandwidth_relieves_contention() {
+        let (spec, fabric, job) = rig();
+        let small = solve(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 40e9).unwrap();
+        let large = solve(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 160e9).unwrap();
+        assert!(large.per_device_kiops > small.per_device_kiops);
+    }
+}

@@ -1,0 +1,410 @@
+//! CXL memory expander — the GFD providing pooled HDM (§3.1, Figure 4).
+//!
+//! The expander translates host HPAs (through HDM decoder windows) or
+//! device-originated DPAs into its internal media space, which is carved
+//! into Device Media Partitions (DMPs) of possibly heterogeneous media
+//! (DRAM / PM). Device-originated requests are checked against the SAT.
+//!
+//! The backing store is *functional*: bytes written through the fabric
+//! can be read back, so the LMB alloc/share paths are verified end to
+//! end, not just timed. Storage is a sparse 4 KiB page map, so a
+//! simulated multi-TiB expander costs only what is actually touched.
+
+use std::collections::HashMap;
+
+use crate::cxl::packet::{CxlMemReq, MemAddr, MemOp};
+use crate::cxl::sat::{SatPerm, SatTable};
+use crate::cxl::types::{Dpa, DmpId, Hpa, MediaType, Range, Requester, Spid, GIB, PAGE_SIZE};
+use crate::error::{Error, Result};
+use crate::sim::time::SimTime;
+
+/// Paper constant (Figure 2 derivation): one HDM media access.
+pub const HDM_MEDIA_LATENCY: SimTime = SimTime::ns(70);
+
+/// PM media access (several× DRAM; used for heterogeneous DMPs).
+pub const PM_MEDIA_LATENCY: SimTime = SimTime::ns(350);
+
+/// A Device Media Partition: a DPA range with fixed media attributes
+/// (Figure 4: "DPA space is organized according to DMP").
+#[derive(Debug, Clone)]
+pub struct Dmp {
+    pub id: DmpId,
+    pub range: Range,
+    pub media: MediaType,
+    /// Partitions can fail independently (§1: single point of failure).
+    pub failed: bool,
+}
+
+impl Dmp {
+    fn media_latency(&self) -> SimTime {
+        match self.media {
+            MediaType::Dram => HDM_MEDIA_LATENCY,
+            MediaType::Pm => PM_MEDIA_LATENCY,
+        }
+    }
+}
+
+/// An HDM decoder: maps a host HPA window onto a DPA base.
+#[derive(Debug, Clone, Copy)]
+pub struct HdmDecoder {
+    pub hpa_window: Range,
+    pub dpa_base: Dpa,
+}
+
+/// Expander configuration.
+#[derive(Debug, Clone)]
+pub struct ExpanderConfig {
+    /// DRAM capacity in bytes.
+    pub dram_capacity: u64,
+    /// Optional PM capacity in bytes (second DMP).
+    pub pm_capacity: u64,
+    /// Aggregate media bandwidth in bytes/sec (shared by all requesters —
+    /// drives the multi-device contention model).
+    pub bandwidth_bps: u64,
+    /// SAT entry budget.
+    pub sat_entries: usize,
+}
+
+impl Default for ExpanderConfig {
+    fn default() -> Self {
+        ExpanderConfig {
+            dram_capacity: 64 * GIB,
+            pm_capacity: 0,
+            bandwidth_bps: 80_000_000_000, // ~2 DDR5 channels worth
+            sat_entries: 4096,
+        }
+    }
+}
+
+/// The GFD memory expander.
+#[derive(Debug)]
+pub struct Expander {
+    cfg: ExpanderConfig,
+    dmps: Vec<Dmp>,
+    decoders: Vec<HdmDecoder>,
+    sat: SatTable,
+    /// Sparse functional backing store: DPA page index → page bytes.
+    pages: HashMap<u64, Box<[u8]>>,
+    /// Whole-device failure flag (§1 challenge; see `lmb::failure`).
+    failed: bool,
+    /// Accesses served (ops, bytes) — used by contention accounting.
+    pub served_ops: u64,
+    pub served_bytes: u64,
+}
+
+impl Expander {
+    pub fn new(cfg: ExpanderConfig) -> Self {
+        let mut dmps = vec![Dmp {
+            id: DmpId(0),
+            range: Range::new(0, cfg.dram_capacity),
+            media: MediaType::Dram,
+            failed: false,
+        }];
+        if cfg.pm_capacity > 0 {
+            dmps.push(Dmp {
+                id: DmpId(1),
+                range: Range::new(cfg.dram_capacity, cfg.pm_capacity),
+                media: MediaType::Pm,
+                failed: false,
+            });
+        }
+        let sat = SatTable::new(cfg.sat_entries);
+        Expander {
+            cfg,
+            dmps,
+            decoders: Vec::new(),
+            sat,
+            pages: HashMap::new(),
+            failed: false,
+            served_ops: 0,
+            served_bytes: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ExpanderConfig {
+        &self.cfg
+    }
+
+    /// Total media capacity across DMPs.
+    pub fn capacity(&self) -> u64 {
+        self.cfg.dram_capacity + self.cfg.pm_capacity
+    }
+
+    pub fn dmps(&self) -> &[Dmp] {
+        &self.dmps
+    }
+
+    pub fn sat(&self) -> &SatTable {
+        &self.sat
+    }
+
+    pub fn sat_mut(&mut self) -> &mut SatTable {
+        &mut self.sat
+    }
+
+    /// Program an HDM decoder (FM/host setup path).
+    pub fn add_decoder(&mut self, hpa_window: Range, dpa_base: Dpa) -> Result<()> {
+        if self.decoders.iter().any(|d| d.hpa_window.overlaps(&hpa_window)) {
+            return Err(Error::FabricManager("overlapping HDM decoder window".into()));
+        }
+        if !self.dpa_valid(dpa_base, hpa_window.len) {
+            return Err(Error::DecodeFault(format!(
+                "decoder target {dpa_base:?}+{:#x} outside media",
+                hpa_window.len
+            )));
+        }
+        self.decoders.push(HdmDecoder { hpa_window, dpa_base });
+        Ok(())
+    }
+
+    fn dpa_valid(&self, dpa: Dpa, len: u64) -> bool {
+        self.dmps.iter().any(|d| d.range.contains_span(dpa.0, len.max(1)))
+    }
+
+    /// Remove the HDM decoder whose window starts at `hpa_base` (used by
+    /// the LMB module when an extent is released back to the FM).
+    pub fn remove_decoder(&mut self, hpa_base: u64) -> Result<()> {
+        let before = self.decoders.len();
+        self.decoders.retain(|d| d.hpa_window.base != hpa_base);
+        if self.decoders.len() == before {
+            return Err(Error::DecodeFault(format!("no decoder at {hpa_base:#x}")));
+        }
+        Ok(())
+    }
+
+    /// Translate a host HPA to a DPA via the HDM decoders.
+    pub fn decode_hpa(&self, hpa: Hpa) -> Result<Dpa> {
+        self.decoders
+            .iter()
+            .find(|d| d.hpa_window.contains(hpa.0))
+            .map(|d| Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)))
+            .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))
+    }
+
+    fn dmp_for(&self, dpa: Dpa, len: u64) -> Result<&Dmp> {
+        self.dmps
+            .iter()
+            .find(|d| d.range.contains_span(dpa.0, len.max(1)))
+            .ok_or_else(|| Error::DecodeFault(format!("{dpa:?} outside media")))
+    }
+
+    /// Fail / recover the whole expander (failure-injection hooks).
+    pub fn set_failed(&mut self, failed: bool) {
+        self.failed = failed;
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Fail a single DMP.
+    pub fn set_dmp_failed(&mut self, id: DmpId, failed: bool) -> Result<()> {
+        let dmp = self
+            .dmps
+            .iter_mut()
+            .find(|d| d.id == id)
+            .ok_or_else(|| Error::FabricManager(format!("unknown DMP {id:?}")))?;
+        dmp.failed = failed;
+        Ok(())
+    }
+
+    /// Service a CXL.mem access *with* access control and latency model,
+    /// but without data movement. Returns the media latency.
+    ///
+    /// Hosts (`Requester::Host`) are trusted (the kernel module enforces
+    /// IOMMU isolation upstream); device P2P requesters must pass SAT.
+    pub fn access(&mut self, req: &CxlMemReq) -> Result<SimTime> {
+        if self.failed {
+            return Err(Error::ExpanderFailed("device offline".into()));
+        }
+        let dpa = match req.addr {
+            MemAddr::Dpa(d) => d,
+            MemAddr::Hpa(h) => self.decode_hpa(h)?,
+        };
+        let dmp = self.dmp_for(dpa, req.len as u64)?;
+        if dmp.failed {
+            return Err(Error::ExpanderFailed(format!("DMP {:?} offline", dmp.id)));
+        }
+        let latency = dmp.media_latency();
+        if let Requester::CxlDevice(spid) = req.requester {
+            let write = req.op == MemOp::MemWr;
+            if !self.sat.check(spid, dpa, req.len as u64, write) {
+                return Err(Error::SatViolation { spid, dpid: crate::cxl::types::Dpid(0) });
+            }
+        }
+        self.served_ops += 1;
+        self.served_bytes += req.len as u64;
+        Ok(latency)
+    }
+
+    /// Functional write at a DPA.
+    pub fn write_dpa(&mut self, dpa: Dpa, data: &[u8]) -> Result<()> {
+        if self.failed {
+            return Err(Error::ExpanderFailed("device offline".into()));
+        }
+        self.dmp_for(dpa, data.len() as u64)?;
+        let mut addr = dpa.0;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let page = addr / PAGE_SIZE;
+            let off = (addr % PAGE_SIZE) as usize;
+            let n = rest.len().min(PAGE_SIZE as usize - off);
+            let buf = self
+                .pages
+                .entry(page)
+                .or_insert_with(|| vec![0u8; PAGE_SIZE as usize].into_boxed_slice());
+            buf[off..off + n].copy_from_slice(&rest[..n]);
+            addr += n as u64;
+            rest = &rest[n..];
+        }
+        Ok(())
+    }
+
+    /// Functional read at a DPA.
+    pub fn read_dpa(&self, dpa: Dpa, out: &mut [u8]) -> Result<()> {
+        if self.failed {
+            return Err(Error::ExpanderFailed("device offline".into()));
+        }
+        self.dmp_for(dpa, out.len() as u64)?;
+        let mut addr = dpa.0;
+        let mut rest = out;
+        while !rest.is_empty() {
+            let page = addr / PAGE_SIZE;
+            let off = (addr % PAGE_SIZE) as usize;
+            let n = rest.len().min(PAGE_SIZE as usize - off);
+            match self.pages.get(&page) {
+                Some(buf) => rest[..n].copy_from_slice(&buf[off..off + n]),
+                None => rest[..n].fill(0),
+            }
+            addr += n as u64;
+            rest = &mut rest[n..];
+        }
+        Ok(())
+    }
+
+    /// Number of resident (touched) backing pages.
+    pub fn resident_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// SAT grant plumbing used by the FM.
+    pub fn sat_grant(&mut self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
+        self.sat.grant(spid, range, perm)
+    }
+
+    pub fn sat_revoke(&mut self, spid: Spid, range: Range) -> Result<()> {
+        self.sat.revoke(spid, range)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::Spid;
+
+    fn expander() -> Expander {
+        Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() })
+    }
+
+    #[test]
+    fn decoder_translation() {
+        let mut e = expander();
+        e.add_decoder(Range::new(0x1_0000_0000, 0x1000_0000), Dpa(0)).unwrap();
+        assert_eq!(e.decode_hpa(Hpa(0x1_0000_0000)).unwrap(), Dpa(0));
+        assert_eq!(e.decode_hpa(Hpa(0x1_0000_4242)).unwrap(), Dpa(0x4242));
+        assert!(e.decode_hpa(Hpa(0x2_0000_0000)).is_err());
+    }
+
+    #[test]
+    fn overlapping_decoders_rejected() {
+        let mut e = expander();
+        e.add_decoder(Range::new(0x1000, 0x1000), Dpa(0)).unwrap();
+        assert!(e.add_decoder(Range::new(0x1800, 0x1000), Dpa(0x10_0000)).is_err());
+    }
+
+    #[test]
+    fn host_access_latency_is_dram() {
+        let mut e = expander();
+        e.add_decoder(Range::new(0, GIB), Dpa(0)).unwrap();
+        let req = CxlMemReq::read(MemAddr::Hpa(Hpa(0x40)), 64, Requester::Host(Spid(0)));
+        assert_eq!(e.access(&req).unwrap(), HDM_MEDIA_LATENCY);
+    }
+
+    #[test]
+    fn p2p_requires_sat() {
+        let mut e = expander();
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0x40)), 64, Requester::CxlDevice(Spid(7)));
+        assert!(matches!(e.access(&req), Err(Error::SatViolation { .. })));
+        e.sat_grant(Spid(7), Range::new(0, 0x1000), SatPerm::ReadWrite).unwrap();
+        assert!(e.access(&req).is_ok());
+    }
+
+    #[test]
+    fn sat_write_permission_enforced() {
+        let mut e = expander();
+        e.sat_grant(Spid(7), Range::new(0, 0x1000), SatPerm::ReadOnly).unwrap();
+        let rd = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, Requester::CxlDevice(Spid(7)));
+        let wr = CxlMemReq::write(MemAddr::Dpa(Dpa(0)), 64, Requester::CxlDevice(Spid(7)));
+        assert!(e.access(&rd).is_ok());
+        assert!(e.access(&wr).is_err());
+    }
+
+    #[test]
+    fn functional_store_roundtrip_and_sparse() {
+        let mut e = expander();
+        let data = [0xabu8; 8192];
+        e.write_dpa(Dpa(PAGE_SIZE - 4), &data).unwrap(); // crosses 3 pages
+        let mut out = [0u8; 8192];
+        e.read_dpa(Dpa(PAGE_SIZE - 4), &mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(e.resident_pages(), 3);
+        // untouched memory reads as zero
+        let mut z = [1u8; 16];
+        e.read_dpa(Dpa(0x100000), &mut z).unwrap();
+        assert_eq!(z, [0u8; 16]);
+    }
+
+    #[test]
+    fn pm_dmp_has_higher_latency() {
+        let mut e = Expander::new(ExpanderConfig {
+            dram_capacity: GIB,
+            pm_capacity: GIB,
+            ..Default::default()
+        });
+        let pm_req =
+            CxlMemReq::read(MemAddr::Dpa(Dpa(GIB + 0x40)), 64, Requester::Host(Spid(0)));
+        assert_eq!(e.access(&pm_req).unwrap(), PM_MEDIA_LATENCY);
+    }
+
+    #[test]
+    fn failure_blocks_everything() {
+        let mut e = expander();
+        e.set_failed(true);
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, Requester::Host(Spid(0)));
+        assert!(matches!(e.access(&req), Err(Error::ExpanderFailed(_))));
+        assert!(e.write_dpa(Dpa(0), &[1]).is_err());
+        e.set_failed(false);
+        assert!(e.access(&req).is_ok());
+    }
+
+    #[test]
+    fn dmp_failure_is_partial() {
+        let mut e = Expander::new(ExpanderConfig {
+            dram_capacity: GIB,
+            pm_capacity: GIB,
+            ..Default::default()
+        });
+        e.set_dmp_failed(DmpId(0), true).unwrap();
+        let dram = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, Requester::Host(Spid(0)));
+        let pm = CxlMemReq::read(MemAddr::Dpa(Dpa(GIB)), 64, Requester::Host(Spid(0)));
+        assert!(e.access(&dram).is_err());
+        assert!(e.access(&pm).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_dpa_faults() {
+        let mut e = expander();
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(2 * GIB)), 64, Requester::Host(Spid(0)));
+        assert!(matches!(e.access(&req), Err(Error::DecodeFault(_))));
+    }
+}

@@ -1,0 +1,222 @@
+//! Fabric topology + end-to-end path latency derivation (Figure 2).
+//!
+//! The paper's evaluation injects per-scheme latency constants into the
+//! SSD's L2P indexing path: +190 ns (LMB-CXL), +880 ns (LMB-PCIe on a
+//! Gen4 SSD), +1190 ns (LMB-PCIe on a Gen5 SSD), +25 µs (DFTL flash
+//! read). Rather than hard-coding those, this module *derives* them from
+//! the component latencies the paper cites:
+//!
+//! ```text
+//! LMB-CXL  (device P2P → HDM)  = port + switch + port + media
+//!                              = 25 + 70 + 25 + 70           = 190 ns
+//! LMB-PCIe (PCIe dev → host bridge → HDM)
+//!                              = pcie_dev_to_host(gen)
+//!                                + TLP→CXL.mem conversion (220 ns)
+//!                                + port + switch + port + media
+//! Gen5: 780 + 220 + 190 = 1190 ns     Gen4: 470 + 220 + 190 = 880 ns
+//! ```
+//!
+//! Figure 2 quotes 780 ns for "PCIe 5.0 devices accessing host memory";
+//! the Gen4 value (470 ns) is back-derived from the paper's own 880 ns
+//! injection constant (§4 prototype) — the paper does not state it
+//! directly. All constants are configuration, not code.
+
+use crate::cxl::expander::HDM_MEDIA_LATENCY;
+use crate::cxl::port::PORT_LATENCY;
+use crate::cxl::switch::SWITCH_LATENCY;
+use crate::pcie::link::PcieGen;
+use crate::sim::time::SimTime;
+
+/// Component latencies of the modeled fabric.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// One CXL port crossing (Figure 2: 25 ns).
+    pub port: SimTime,
+    /// Switch crossing (Figure 2: 70 ns).
+    pub switch: SimTime,
+    /// HDM media access on the expander (70 ns DRAM).
+    pub hdm_media: SimTime,
+    /// Host-local DRAM access (DDR hit from the CPU).
+    pub host_dram: SimTime,
+    /// PCIe device → host memory round-trip, per generation.
+    pub pcie_dev_to_host_gen4: SimTime,
+    pub pcie_dev_to_host_gen5: SimTime,
+    /// Root-complex TLP → CXL.mem conversion overhead (§3.2 data path).
+    pub tlp_conversion: SimTime,
+    /// SSD onboard DRAM access (controller-attached DDR).
+    pub onboard_dram: SimTime,
+    /// One NAND flash page read (the DFTL miss penalty, §4: 25 µs).
+    pub flash_read: SimTime,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            port: PORT_LATENCY,
+            switch: SWITCH_LATENCY,
+            hdm_media: HDM_MEDIA_LATENCY,
+            host_dram: SimTime::ns(100),
+            pcie_dev_to_host_gen4: SimTime::ns(470),
+            pcie_dev_to_host_gen5: SimTime::ns(780),
+            tlp_conversion: SimTime::ns(220),
+            onboard_dram: SimTime::ns(70),
+            flash_read: SimTime::us(25),
+        }
+    }
+}
+
+/// The memory-access paths Figure 2 and §4 reason about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    /// Device onboard DRAM (the *Ideal* scheme's index store).
+    OnboardDram,
+    /// Host CPU → its own DRAM.
+    HostDram,
+    /// Host CPU → expander HDM through the switch.
+    HostToHdm,
+    /// CXL device P2P → expander HDM (the *LMB-CXL* scheme).
+    CxlP2pToHdm,
+    /// PCIe device → host memory over PCIe (the HMB path).
+    PcieToHostMem(PcieGen),
+    /// PCIe device → expander HDM via host bridging (the *LMB-PCIe*
+    /// scheme): TLP to host, conversion to CXL.mem, fabric, media.
+    PcieToHdm(PcieGen),
+    /// NAND flash page read (the *DFTL* scheme's miss path).
+    FlashRead,
+}
+
+/// Static fabric latency model. The live topology (switch bindings, SAT,
+/// leases) lives in [`crate::cxl::fm::FabricManager`]; `Fabric` answers
+/// "what does one access over path X cost" — the quantity the paper's
+/// evaluation injects into the SSD firmware.
+#[derive(Debug, Clone, Default)]
+pub struct Fabric {
+    pub cfg: FabricConfig,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Self {
+        Fabric { cfg }
+    }
+
+    /// One port+switch+port fabric crossing.
+    fn crossing(&self) -> SimTime {
+        self.cfg.port + self.cfg.switch + self.cfg.port
+    }
+
+    /// End-to-end latency of a single memory access over `path`.
+    pub fn path_latency(&self, path: PathKind) -> SimTime {
+        match path {
+            PathKind::OnboardDram => self.cfg.onboard_dram,
+            PathKind::HostDram => self.cfg.host_dram,
+            PathKind::HostToHdm => self.crossing() + self.cfg.hdm_media,
+            PathKind::CxlP2pToHdm => self.crossing() + self.cfg.hdm_media,
+            PathKind::PcieToHostMem(gen) => self.pcie_to_host(gen),
+            PathKind::PcieToHdm(gen) => {
+                self.pcie_to_host(gen)
+                    + self.cfg.tlp_conversion
+                    + self.crossing()
+                    + self.cfg.hdm_media
+            }
+            PathKind::FlashRead => self.cfg.flash_read,
+        }
+    }
+
+    fn pcie_to_host(&self, gen: PcieGen) -> SimTime {
+        match gen {
+            PcieGen::Gen4 => self.cfg.pcie_dev_to_host_gen4,
+            PcieGen::Gen5 => self.cfg.pcie_dev_to_host_gen5,
+        }
+    }
+
+    /// The *added* indexing latency of a scheme relative to Ideal
+    /// (onboard DRAM) — the constant the paper injects in §4.
+    pub fn added_index_latency(&self, path: PathKind) -> SimTime {
+        self.path_latency(path).saturating_sub(self.path_latency(PathKind::OnboardDram))
+    }
+
+    /// Figure 2 rows: (label, latency) series for the bench to print.
+    pub fn figure2_rows(&self) -> Vec<(&'static str, SimTime)> {
+        vec![
+            ("CXL port crossing", self.cfg.port),
+            ("CXL switch crossing", self.cfg.switch),
+            ("HDM media (DRAM)", self.cfg.hdm_media),
+            ("Host DRAM access", self.path_latency(PathKind::HostDram)),
+            ("Host -> CXL HDM", self.path_latency(PathKind::HostToHdm)),
+            ("CXL dev P2P -> HDM (LMB-CXL)", self.path_latency(PathKind::CxlP2pToHdm)),
+            (
+                "PCIe5 dev -> host memory",
+                self.path_latency(PathKind::PcieToHostMem(PcieGen::Gen5)),
+            ),
+            (
+                "PCIe4 dev -> HDM (LMB-PCIe)",
+                self.path_latency(PathKind::PcieToHdm(PcieGen::Gen4)),
+            ),
+            (
+                "PCIe5 dev -> HDM (LMB-PCIe)",
+                self.path_latency(PathKind::PcieToHdm(PcieGen::Gen5)),
+            ),
+            ("NAND flash read (DFTL miss)", self.path_latency(PathKind::FlashRead)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> Fabric {
+        Fabric::default()
+    }
+
+    #[test]
+    fn lmb_cxl_derives_paper_190ns() {
+        assert_eq!(fabric().path_latency(PathKind::CxlP2pToHdm), SimTime::ns(190));
+    }
+
+    #[test]
+    fn lmb_pcie_gen4_derives_paper_880ns() {
+        assert_eq!(
+            fabric().path_latency(PathKind::PcieToHdm(PcieGen::Gen4)),
+            SimTime::ns(880)
+        );
+    }
+
+    #[test]
+    fn lmb_pcie_gen5_derives_paper_1190ns() {
+        assert_eq!(
+            fabric().path_latency(PathKind::PcieToHdm(PcieGen::Gen5)),
+            SimTime::ns(1190)
+        );
+    }
+
+    #[test]
+    fn pcie5_host_access_matches_figure2() {
+        assert_eq!(
+            fabric().path_latency(PathKind::PcieToHostMem(PcieGen::Gen5)),
+            SimTime::ns(780)
+        );
+    }
+
+    #[test]
+    fn dftl_miss_is_25us() {
+        assert_eq!(fabric().path_latency(PathKind::FlashRead), SimTime::us(25));
+    }
+
+    #[test]
+    fn added_latency_subtracts_onboard() {
+        let f = fabric();
+        assert_eq!(f.added_index_latency(PathKind::CxlP2pToHdm), SimTime::ns(120));
+        assert_eq!(f.added_index_latency(PathKind::OnboardDram), SimTime::ZERO);
+    }
+
+    #[test]
+    fn figure2_rows_complete_and_ordered_sensibly() {
+        let rows = fabric().figure2_rows();
+        assert_eq!(rows.len(), 10);
+        // CXL paths must be far cheaper than flash, the paper's thesis.
+        let cxl = rows.iter().find(|r| r.0.contains("LMB-CXL")).unwrap().1;
+        let flash = rows.iter().find(|r| r.0.contains("DFTL")).unwrap().1;
+        assert!(cxl.as_ns() * 100 < flash.as_ns());
+    }
+}

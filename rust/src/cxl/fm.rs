@@ -1,0 +1,317 @@
+//! Fabric Manager (§3.1): binds ports, manages pooled capacity, and
+//! programs the GFD on behalf of hosts.
+//!
+//! The FM owns the expander's DPA space at extent granularity. The LMB
+//! kernel module (one per host) requests 256 MB extents through the FM
+//! API and sub-allocates them locally (§3.2). Dynamic capacity: extents
+//! are handed out on demand and reclaimed when a module releases them —
+//! the FM arbitrates between multiple hosts sharing one expander.
+//!
+//! The FM also fronts the "GFD Component Management Command Set" used to
+//! maintain SAT entries for CXL-device P2P access (§3.3).
+
+use std::collections::HashMap;
+
+use crate::cxl::expander::Expander;
+use crate::cxl::sat::SatPerm;
+use crate::cxl::switch::PbrSwitch;
+use crate::cxl::types::{Dpa, Range, Spid, EXTENT_SIZE};
+use crate::error::{Error, Result};
+
+/// Identifies a host that has bound to the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HostId(pub u32);
+
+/// An extent of expander capacity leased to a host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    pub dpa: Dpa,
+    pub len: u64,
+    pub owner: HostId,
+}
+
+/// The Fabric Manager.
+///
+/// Owns the switch and expander; everything else goes through its API —
+/// mirroring the paper, where the FM "can be implemented as software in
+/// the host or firmware on a switch".
+#[derive(Debug)]
+pub struct FabricManager {
+    switch: PbrSwitch,
+    expander: Expander,
+    /// Free DPA extents (sorted by base; adjacent frees coalesce).
+    free: Vec<Range>,
+    /// Live leases keyed by DPA base.
+    leases: HashMap<u64, Extent>,
+    hosts: HashMap<HostId, Spid>,
+    next_host: u32,
+}
+
+impl FabricManager {
+    pub fn new(switch: PbrSwitch, expander: Expander) -> Self {
+        let free = vec![Range::new(0, expander.capacity())];
+        FabricManager {
+            switch,
+            expander,
+            free,
+            leases: HashMap::new(),
+            hosts: HashMap::new(),
+            next_host: 0,
+        }
+    }
+
+    pub fn switch(&self) -> &PbrSwitch {
+        &self.switch
+    }
+
+    pub fn switch_mut(&mut self) -> &mut PbrSwitch {
+        &mut self.switch
+    }
+
+    pub fn expander(&self) -> &Expander {
+        &self.expander
+    }
+
+    pub fn expander_mut(&mut self) -> &mut Expander {
+        &mut self.expander
+    }
+
+    /// Bind a host root port to the fabric.
+    pub fn bind_host(&mut self) -> Result<(HostId, Spid)> {
+        let (spid, _) = self.switch.bind_host()?;
+        let id = HostId(self.next_host);
+        self.next_host += 1;
+        self.hosts.insert(id, spid);
+        Ok((id, spid))
+    }
+
+    /// Bind a CXL device (accelerator, CXL-SSD) to the fabric.
+    pub fn bind_cxl_device(&mut self) -> Result<Spid> {
+        let (spid, _) = self.switch.bind_cxl_device()?;
+        Ok(spid)
+    }
+
+    /// Attach the GFD expander port (done once during bring-up).
+    pub fn attach_gfd(&mut self) -> Result<()> {
+        self.switch.attach_gfd()?;
+        Ok(())
+    }
+
+    /// Capacity not currently leased.
+    pub fn available(&self) -> u64 {
+        self.free.iter().map(|r| r.len).sum()
+    }
+
+    /// Capacity currently leased to `host`.
+    pub fn leased_to(&self, host: HostId) -> u64 {
+        self.leases.values().filter(|e| e.owner == host).map(|e| e.len).sum()
+    }
+
+    /// FM API: lease one 256 MB extent to `host` (§3.2).
+    pub fn allocate_extent(&mut self, host: HostId) -> Result<Extent> {
+        self.allocate_extent_sized(host, EXTENT_SIZE)
+    }
+
+    /// Lease an extent of arbitrary (page-aligned) size — used by tests
+    /// and by the dynamic-capacity ablation.
+    pub fn allocate_extent_sized(&mut self, host: HostId, len: u64) -> Result<Extent> {
+        if !self.hosts.contains_key(&host) {
+            return Err(Error::FabricManager(format!("unknown host {host:?}")));
+        }
+        if self.expander.is_failed() {
+            return Err(Error::ExpanderFailed("device offline".into()));
+        }
+        // first-fit over the free list
+        let pos = self.free.iter().position(|r| r.len >= len).ok_or(Error::OutOfCapacity {
+            requested: len,
+            available: self.available(),
+        })?;
+        let r = self.free[pos];
+        let ext = Extent { dpa: Dpa(r.base), len, owner: host };
+        if r.len == len {
+            self.free.remove(pos);
+        } else {
+            self.free[pos] = Range::new(r.base + len, r.len - len);
+        }
+        self.leases.insert(ext.dpa.0, ext);
+        Ok(ext)
+    }
+
+    /// FM API: return an extent (must be wholly unused by the caller).
+    pub fn release_extent(&mut self, host: HostId, ext: Extent) -> Result<()> {
+        match self.leases.get(&ext.dpa.0) {
+            Some(e) if e.owner == host && e.len == ext.len => {}
+            Some(_) => {
+                return Err(Error::FabricManager("extent not owned by caller".into()));
+            }
+            None => return Err(Error::FabricManager("unknown extent".into())),
+        }
+        self.leases.remove(&ext.dpa.0);
+        // insert into the sorted free list and coalesce neighbours
+        let mut r = Range::new(ext.dpa.0, ext.len);
+        let idx = self.free.partition_point(|f| f.base < r.base);
+        // coalesce with next
+        if idx < self.free.len() && r.end() == self.free[idx].base {
+            r = Range::new(r.base, r.len + self.free[idx].len);
+            self.free.remove(idx);
+        }
+        // coalesce with previous
+        if idx > 0 && self.free[idx - 1].end() == r.base {
+            let prev = self.free[idx - 1];
+            self.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
+        } else {
+            self.free.insert(idx, r);
+        }
+        Ok(())
+    }
+
+    /// GFD management: add a SAT entry for a CXL device (§3.3).
+    pub fn sat_grant(&mut self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
+        if !self.switch.is_bound(spid) {
+            return Err(Error::FabricManager(format!("SPID {spid:?} not bound")));
+        }
+        self.expander.sat_grant(spid, range, perm)
+    }
+
+    /// GFD management: remove a SAT entry.
+    pub fn sat_revoke(&mut self, spid: Spid, range: Range) -> Result<()> {
+        self.expander.sat_revoke(spid, range)
+    }
+
+    /// Release everything a host holds (host crash / module unload).
+    pub fn release_host(&mut self, host: HostId) {
+        let to_release: Vec<Extent> =
+            self.leases.values().filter(|e| e.owner == host).copied().collect();
+        for e in to_release {
+            let _ = self.release_extent(host, e);
+        }
+        if let Some(spid) = self.hosts.remove(&host) {
+            let _ = self.switch.unbind(spid);
+        }
+    }
+
+    /// Number of live leases (for invariant checks).
+    pub fn lease_count(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Invariant: free list is sorted, non-overlapping, coalesced, and
+    /// free+leased covers exactly the media. Used by property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut prev_end = None;
+        for r in &self.free {
+            if let Some(pe) = prev_end {
+                if r.base < pe {
+                    return Err(Error::FabricManager("free list overlap".into()));
+                }
+                if r.base == pe {
+                    return Err(Error::FabricManager("free list not coalesced".into()));
+                }
+            }
+            prev_end = Some(r.end());
+        }
+        let total: u64 = self.available() + self.leases.values().map(|e| e.len).sum::<u64>();
+        if total != self.expander.capacity() {
+            return Err(Error::FabricManager(format!(
+                "capacity leak: free+leased={total} != {}",
+                self.expander.capacity()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::ExpanderConfig;
+    use crate::cxl::types::GIB;
+
+    fn fm(cap: u64) -> FabricManager {
+        let mut f = FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig { dram_capacity: cap, ..Default::default() }),
+        );
+        f.attach_gfd().unwrap();
+        f
+    }
+
+    #[test]
+    fn extent_lease_and_release_roundtrip() {
+        let mut f = fm(GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let e = f.allocate_extent(h).unwrap();
+        assert_eq!(e.len, EXTENT_SIZE);
+        assert_eq!(f.available(), GIB - EXTENT_SIZE);
+        f.release_extent(h, e).unwrap();
+        assert_eq!(f.available(), GIB);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_exhaustion_reports_available() {
+        let mut f = fm(EXTENT_SIZE); // room for exactly one extent
+        let (h, _) = f.bind_host().unwrap();
+        f.allocate_extent(h).unwrap();
+        match f.allocate_extent(h) {
+            Err(Error::OutOfCapacity { available, .. }) => assert_eq!(available, 0),
+            other => panic!("expected OutOfCapacity, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn release_coalesces_neighbours() {
+        let mut f = fm(GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let a = f.allocate_extent(h).unwrap();
+        let b = f.allocate_extent(h).unwrap();
+        let c = f.allocate_extent(h).unwrap();
+        f.release_extent(h, a).unwrap();
+        f.release_extent(h, c).unwrap();
+        f.release_extent(h, b).unwrap(); // middle release must merge all
+        f.check_invariants().unwrap();
+        assert_eq!(f.available(), GIB);
+        assert_eq!(f.free.len(), 1, "free list fully coalesced");
+    }
+
+    #[test]
+    fn multi_host_isolation() {
+        let mut f = fm(GIB);
+        let (h1, _) = f.bind_host().unwrap();
+        let (h2, _) = f.bind_host().unwrap();
+        let e1 = f.allocate_extent(h1).unwrap();
+        assert!(f.release_extent(h2, e1).is_err(), "host2 cannot release host1's extent");
+        assert_eq!(f.leased_to(h1), EXTENT_SIZE);
+        assert_eq!(f.leased_to(h2), 0);
+    }
+
+    #[test]
+    fn release_host_reclaims_everything() {
+        let mut f = fm(GIB);
+        let (h, _) = f.bind_host().unwrap();
+        f.allocate_extent(h).unwrap();
+        f.allocate_extent(h).unwrap();
+        f.release_host(h);
+        assert_eq!(f.available(), GIB);
+        assert_eq!(f.lease_count(), 0);
+        assert!(f.allocate_extent(h).is_err(), "host is gone");
+    }
+
+    #[test]
+    fn failed_expander_blocks_allocation() {
+        let mut f = fm(GIB);
+        let (h, _) = f.bind_host().unwrap();
+        f.expander_mut().set_failed(true);
+        assert!(matches!(f.allocate_extent(h), Err(Error::ExpanderFailed(_))));
+    }
+
+    #[test]
+    fn sat_grant_requires_bound_spid() {
+        let mut f = fm(GIB);
+        assert!(f
+            .sat_grant(Spid(99), Range::new(0, 4096), SatPerm::ReadWrite)
+            .is_err());
+        let spid = f.bind_cxl_device().unwrap();
+        f.sat_grant(spid, Range::new(0, 4096), SatPerm::ReadWrite).unwrap();
+    }
+}

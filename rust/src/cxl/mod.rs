@@ -1,0 +1,29 @@
+//! CXL fabric substrate.
+//!
+//! Models the hardware the paper's LMB framework runs on (§2.3, §3,
+//! Table 1): a Port-Based-Routing (PBR) switch, a Global FAM Device
+//! (GFD) memory expander exposing Host-managed Device Memory (HDM)
+//! organised into Device Media Partitions (DMPs), the SPID Access Table
+//! (SAT) that enforces device-level isolation, and the Fabric Manager
+//! (FM) that binds ports and doles out capacity.
+//!
+//! Latency constants default to the paper's Figure 2 estimates (25 ns
+//! port crossing, 70 ns switch, 780 ns PCIe 5.0 device→host memory) and
+//! the fabric model *derives* the per-scheme injection constants the
+//! paper uses in §4 (+190 ns LMB-CXL, +880/+1190 ns LMB-PCIe on
+//! Gen4/Gen5) — see [`fabric::Fabric::path_latency`].
+
+pub mod expander;
+pub mod fabric;
+pub mod fm;
+pub mod packet;
+pub mod port;
+pub mod sat;
+pub mod switch;
+pub mod types;
+
+pub use expander::{Expander, ExpanderConfig};
+pub use fabric::{Fabric, FabricConfig, PathKind};
+pub use fm::FabricManager;
+pub use sat::SatTable;
+pub use switch::PbrSwitch;

@@ -1,0 +1,130 @@
+//! CXL.mem / CXL.io transaction modelling (§3.2 "Data path").
+//!
+//! We model the protocol at message granularity: Master-to-Subordinate
+//! (M2S) requests and Subordinate-to-Master (S2M) responses. The paper's
+//! data path converts PCIe TLPs into `MemRd`/`MemWr` at the host bridge;
+//! PCIe-originated requests are marked *uncached* because PCIe devices
+//! cannot participate in CXL coherency (they never see Back-Invalidate
+//! Snoops — §3.2 notes why this is still consistent).
+
+use crate::cxl::types::{Dpa, Hpa, Requester};
+
+/// M2S request opcode subset relevant to LMB.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemOp {
+    /// 64-byte read (MemRd).
+    MemRd,
+    /// 64-byte write (MemWr).
+    MemWr,
+    /// Cache-line invalidate (MemInv) — host-side coherency management.
+    MemInv,
+}
+
+/// Cacheability attribute of a request (§3.2: PCIe-originated accesses
+/// use the *uncached* type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheAttr {
+    Cacheable,
+    Uncached,
+}
+
+/// Address carried by a request: hosts address HDM through HPA windows,
+/// P2P devices address the GFD by DPA (after FM setup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemAddr {
+    Hpa(Hpa),
+    Dpa(Dpa),
+}
+
+/// A CXL.mem request message.
+#[derive(Debug, Clone, Copy)]
+pub struct CxlMemReq {
+    pub op: MemOp,
+    pub addr: MemAddr,
+    /// Transfer size in bytes; the protocol moves 64 B lines, larger
+    /// spans are split by [`CxlMemReq::lines`].
+    pub len: u32,
+    pub requester: Requester,
+    pub attr: CacheAttr,
+}
+
+/// CXL.mem line size.
+pub const LINE: u32 = 64;
+
+impl CxlMemReq {
+    pub fn read(addr: MemAddr, len: u32, requester: Requester) -> Self {
+        CxlMemReq { op: MemOp::MemRd, addr, len, requester, attr: CacheAttr::Cacheable }
+    }
+
+    pub fn write(addr: MemAddr, len: u32, requester: Requester) -> Self {
+        CxlMemReq { op: MemOp::MemWr, addr, len, requester, attr: CacheAttr::Cacheable }
+    }
+
+    /// Mark the request uncached (PCIe-originated path).
+    pub fn uncached(mut self) -> Self {
+        self.attr = CacheAttr::Uncached;
+        self
+    }
+
+    /// Number of 64 B lines this request occupies on the link.
+    pub fn lines(&self) -> u32 {
+        let off = match self.addr {
+            MemAddr::Hpa(h) => h.0,
+            MemAddr::Dpa(d) => d.0,
+        } % LINE as u64;
+        (off as u32 + self.len).div_ceil(LINE)
+    }
+}
+
+/// S2M response subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CxlMemResp {
+    /// Completion without data (writes).
+    Cmp,
+    /// Completion with data (reads).
+    CmpData,
+    /// Poison/error completion — e.g. SAT violation or failed media.
+    Err,
+}
+
+/// CXL.io (UIO) access — the non-coherent mailbox/config path a CXL
+/// device may use instead of CXL.mem (§3: "UIO access via CXL.io").
+#[derive(Debug, Clone, Copy)]
+pub struct CxlIoReq {
+    pub write: bool,
+    pub addr: Hpa,
+    pub len: u32,
+    pub requester: Requester,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::Spid;
+
+    fn rq() -> Requester {
+        Requester::CxlDevice(Spid(3))
+    }
+
+    #[test]
+    fn line_splitting_aligned() {
+        let r = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, rq());
+        assert_eq!(r.lines(), 1);
+        let r = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 256, rq());
+        assert_eq!(r.lines(), 4);
+    }
+
+    #[test]
+    fn line_splitting_unaligned_crosses_boundary() {
+        // 4 bytes at offset 62 straddles two lines.
+        let r = CxlMemReq::read(MemAddr::Dpa(Dpa(62)), 4, rq());
+        assert_eq!(r.lines(), 2);
+    }
+
+    #[test]
+    fn uncached_builder() {
+        let r = CxlMemReq::write(MemAddr::Hpa(Hpa(0x1000)), 8, rq()).uncached();
+        assert_eq!(r.attr, CacheAttr::Uncached);
+        assert_eq!(r.op, MemOp::MemWr);
+    }
+}

@@ -1,0 +1,84 @@
+//! CXL port model.
+//!
+//! Every fabric hop crosses a port; the paper (citing Das Sharma, HOTI'22)
+//! puts a single port crossing at 25 ns. Ports also carry a bandwidth
+//! figure used by the contention model when several devices funnel into
+//! the same expander port.
+
+use crate::cxl::types::PortId;
+use crate::sim::time::SimTime;
+
+/// Paper constant: one CXL port crossing (Figure 2).
+pub const PORT_LATENCY: SimTime = SimTime::ns(25);
+
+/// What is plugged into a switch edge port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortBinding {
+    /// Unoccupied.
+    Empty,
+    /// A host root port.
+    Host,
+    /// A CXL type-2/3 device (accelerator, memory device).
+    CxlDevice,
+    /// The GFD memory expander itself.
+    Gfd,
+}
+
+/// An edge or fabric port.
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub id: PortId,
+    pub binding: PortBinding,
+    /// Per-crossing latency.
+    pub latency: SimTime,
+    /// Link bandwidth in bytes/sec (x16 CXL 3.0 ≈ 64 GB/s raw; we default
+    /// to a usable 50 GB/s).
+    pub bandwidth_bps: u64,
+}
+
+impl Port {
+    pub fn new(id: PortId) -> Self {
+        Port {
+            id,
+            binding: PortBinding::Empty,
+            latency: PORT_LATENCY,
+            bandwidth_bps: 50_000_000_000,
+        }
+    }
+
+    pub fn bound(id: PortId, binding: PortBinding) -> Self {
+        let mut p = Self::new(id);
+        p.binding = binding;
+        p
+    }
+
+    /// Serialization time for `bytes` at this port's bandwidth.
+    pub fn serialize(&self, bytes: u64) -> SimTime {
+        // ns = bytes / (bytes_per_sec / 1e9); u128 avoids overflow
+        SimTime::ns((bytes as u128 * 1_000_000_000 / self.bandwidth_bps as u128) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_latency_matches_paper() {
+        assert_eq!(Port::new(PortId(0)).latency, SimTime::ns(25));
+    }
+
+    #[test]
+    fn serialization_scales_with_bytes() {
+        let p = Port::new(PortId(0));
+        // 50 GB/s → 64 B line ≈ 1.28 ns → rounds to 1 ns
+        assert_eq!(p.serialize(64), SimTime::ns(1));
+        assert_eq!(p.serialize(50_000_000_000), SimTime::secs(1));
+    }
+
+    #[test]
+    fn binding_assignment() {
+        let p = Port::bound(PortId(4), PortBinding::Gfd);
+        assert_eq!(p.binding, PortBinding::Gfd);
+    }
+}

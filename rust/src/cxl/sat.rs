@@ -1,0 +1,178 @@
+//! SPID Access Table (SAT) — GFD-side access control (§3.3).
+//!
+//! The GFD identifies the originator of every CXL.mem request by the SPID
+//! field and consults the SAT to decide whether that requester may touch
+//! the addressed DPA range. The LMB kernel module programs SAT entries
+//! through the FM's "GFD Component Management Command Set" on alloc and
+//! share, and removes them on free.
+
+use std::collections::HashMap;
+
+use crate::cxl::types::{Dpa, Range, Spid};
+use crate::error::{Error, Result};
+
+/// Access rights carried by a SAT entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SatPerm {
+    ReadOnly,
+    ReadWrite,
+}
+
+/// One SAT entry: a DPA window granted to an SPID.
+#[derive(Debug, Clone, Copy)]
+pub struct SatEntry {
+    pub range: Range,
+    pub perm: SatPerm,
+}
+
+/// The SPID Access Table.
+///
+/// Organised as SPID → sorted list of granted DPA windows. Real GFDs use
+/// a fixed number of segment registers; we model that with a configurable
+/// entry budget so table exhaustion is an observable failure mode.
+#[derive(Debug)]
+pub struct SatTable {
+    grants: HashMap<Spid, Vec<SatEntry>>,
+    capacity: usize,
+    entries: usize,
+}
+
+impl SatTable {
+    /// `capacity` = maximum number of live entries across all SPIDs.
+    pub fn new(capacity: usize) -> Self {
+        SatTable { grants: HashMap::new(), capacity, entries: 0 }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Grant `spid` access to a DPA window. Overlapping same-SPID grants
+    /// are rejected — the kernel module must not double-program.
+    pub fn grant(&mut self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
+        if self.entries >= self.capacity {
+            return Err(Error::FabricManager(format!(
+                "SAT exhausted ({} entries)",
+                self.capacity
+            )));
+        }
+        let list = self.grants.entry(spid).or_default();
+        if list.iter().any(|e| e.range.overlaps(&range)) {
+            return Err(Error::FabricManager(format!(
+                "overlapping SAT grant for SPID {spid:?} at {:#x}+{:#x}",
+                range.base, range.len
+            )));
+        }
+        list.push(SatEntry { range, perm });
+        self.entries += 1;
+        Ok(())
+    }
+
+    /// Revoke the grant that exactly matches `range`.
+    pub fn revoke(&mut self, spid: Spid, range: Range) -> Result<()> {
+        let list = self
+            .grants
+            .get_mut(&spid)
+            .ok_or_else(|| Error::FabricManager(format!("no grants for SPID {spid:?}")))?;
+        let before = list.len();
+        list.retain(|e| !(e.range.base == range.base && e.range.len == range.len));
+        if list.len() == before {
+            return Err(Error::FabricManager(format!(
+                "no matching SAT entry for SPID {spid:?} at {:#x}",
+                range.base
+            )));
+        }
+        self.entries -= 1;
+        Ok(())
+    }
+
+    /// Revoke every grant held by `spid` (device unbind / failure path).
+    pub fn revoke_all(&mut self, spid: Spid) {
+        if let Some(list) = self.grants.remove(&spid) {
+            self.entries -= list.len();
+        }
+    }
+
+    /// Check an access of `len` bytes at `dpa`. Write accesses require
+    /// [`SatPerm::ReadWrite`].
+    pub fn check(&self, spid: Spid, dpa: Dpa, len: u64, write: bool) -> bool {
+        let Some(list) = self.grants.get(&spid) else {
+            return false;
+        };
+        list.iter().any(|e| {
+            e.range.contains_span(dpa.0, len.max(1))
+                && (!write || e.perm == SatPerm::ReadWrite)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SatTable {
+        SatTable::new(16)
+    }
+
+    #[test]
+    fn grant_then_check() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0x1000, 0x1000), SatPerm::ReadWrite).unwrap();
+        assert!(t.check(Spid(1), Dpa(0x1000), 64, true));
+        assert!(t.check(Spid(1), Dpa(0x1fc0), 64, false));
+        assert!(!t.check(Spid(1), Dpa(0x1fc1), 64, false), "crosses end");
+        assert!(!t.check(Spid(2), Dpa(0x1000), 64, false), "other SPID");
+    }
+
+    #[test]
+    fn read_only_blocks_writes() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0, 0x1000), SatPerm::ReadOnly).unwrap();
+        assert!(t.check(Spid(1), Dpa(0), 64, false));
+        assert!(!t.check(Spid(1), Dpa(0), 64, true));
+    }
+
+    #[test]
+    fn overlapping_grant_rejected() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0, 0x1000), SatPerm::ReadWrite).unwrap();
+        assert!(t.grant(Spid(1), Range::new(0x800, 0x1000), SatPerm::ReadWrite).is_err());
+        // other SPID may overlap (sharing!)
+        t.grant(Spid(2), Range::new(0x800, 0x1000), SatPerm::ReadOnly).unwrap();
+    }
+
+    #[test]
+    fn revoke_removes_access() {
+        let mut t = table();
+        let r = Range::new(0x2000, 0x1000);
+        t.grant(Spid(3), r, SatPerm::ReadWrite).unwrap();
+        assert!(t.check(Spid(3), Dpa(0x2000), 8, true));
+        t.revoke(Spid(3), r).unwrap();
+        assert!(!t.check(Spid(3), Dpa(0x2000), 8, false));
+        assert!(t.revoke(Spid(3), r).is_err(), "double revoke");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn capacity_exhaustion() {
+        let mut t = SatTable::new(2);
+        t.grant(Spid(1), Range::new(0, 64), SatPerm::ReadWrite).unwrap();
+        t.grant(Spid(1), Range::new(64, 64), SatPerm::ReadWrite).unwrap();
+        assert!(t.grant(Spid(1), Range::new(128, 64), SatPerm::ReadWrite).is_err());
+    }
+
+    #[test]
+    fn revoke_all_clears_spid() {
+        let mut t = table();
+        t.grant(Spid(9), Range::new(0, 64), SatPerm::ReadWrite).unwrap();
+        t.grant(Spid(9), Range::new(64, 64), SatPerm::ReadOnly).unwrap();
+        t.revoke_all(Spid(9));
+        assert_eq!(t.len(), 0);
+        assert!(!t.check(Spid(9), Dpa(0), 1, false));
+    }
+}

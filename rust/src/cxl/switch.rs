@@ -1,0 +1,199 @@
+//! PBR switch (§2.3): edge ports, SPID routing, fabric crossing latency.
+//!
+//! Hosts and devices acquire a PBR ID by binding to an edge port; the
+//! switch routes CXL.mem requests toward the GFD and enforces that only
+//! bound requesters inject traffic. The paper quotes 70 ns for a switch
+//! crossing (including HDM decode at the fabric level).
+
+use std::collections::HashMap;
+
+use crate::cxl::packet::CxlMemReq;
+use crate::cxl::port::{Port, PortBinding, PORT_LATENCY};
+use crate::cxl::types::{PortId, Spid};
+use crate::error::{Error, Result};
+use crate::sim::time::SimTime;
+
+/// Paper constant: switch crossing (Figure 2).
+pub const SWITCH_LATENCY: SimTime = SimTime::ns(70);
+
+/// The Port-Based-Routing switch.
+#[derive(Debug)]
+pub struct PbrSwitch {
+    ports: Vec<Port>,
+    /// SPID → edge port it is bound to.
+    bindings: HashMap<Spid, PortId>,
+    /// Port the GFD hangs off.
+    gfd_port: Option<PortId>,
+    next_spid: u16,
+    pub latency: SimTime,
+}
+
+impl PbrSwitch {
+    /// A switch with `nports` empty edge ports.
+    pub fn new(nports: u8) -> Self {
+        PbrSwitch {
+            ports: (0..nports).map(|i| Port::new(PortId(i))).collect(),
+            bindings: HashMap::new(),
+            gfd_port: None,
+            next_spid: 1,
+            latency: SWITCH_LATENCY,
+        }
+    }
+
+    fn free_port(&self) -> Option<PortId> {
+        self.ports.iter().find(|p| p.binding == PortBinding::Empty).map(|p| p.id)
+    }
+
+    fn port_mut(&mut self, id: PortId) -> &mut Port {
+        &mut self.ports[id.0 as usize]
+    }
+
+    fn alloc_spid(&mut self) -> Spid {
+        let s = Spid(self.next_spid);
+        self.next_spid += 1;
+        s
+    }
+
+    /// Bind a host root port to the next free edge port, returning its SPID.
+    pub fn bind_host(&mut self) -> Result<(Spid, PortId)> {
+        let port = self
+            .free_port()
+            .ok_or_else(|| Error::FabricManager("no free edge port".into()))?;
+        self.port_mut(port).binding = PortBinding::Host;
+        let spid = self.alloc_spid();
+        self.bindings.insert(spid, port);
+        Ok((spid, port))
+    }
+
+    /// Bind a CXL device, returning its SPID.
+    pub fn bind_cxl_device(&mut self) -> Result<(Spid, PortId)> {
+        let port = self
+            .free_port()
+            .ok_or_else(|| Error::FabricManager("no free edge port".into()))?;
+        self.port_mut(port).binding = PortBinding::CxlDevice;
+        let spid = self.alloc_spid();
+        self.bindings.insert(spid, port);
+        Ok((spid, port))
+    }
+
+    /// Attach the GFD expander to an edge port.
+    pub fn attach_gfd(&mut self) -> Result<PortId> {
+        if self.gfd_port.is_some() {
+            return Err(Error::FabricManager("GFD already attached".into()));
+        }
+        let port = self
+            .free_port()
+            .ok_or_else(|| Error::FabricManager("no free edge port".into()))?;
+        self.port_mut(port).binding = PortBinding::Gfd;
+        self.gfd_port = Some(port);
+        Ok(port)
+    }
+
+    /// Unbind an SPID (device removal / failure).
+    pub fn unbind(&mut self, spid: Spid) -> Result<()> {
+        let port = self
+            .bindings
+            .remove(&spid)
+            .ok_or_else(|| Error::FabricManager(format!("SPID {spid:?} not bound")))?;
+        self.port_mut(port).binding = PortBinding::Empty;
+        Ok(())
+    }
+
+    pub fn is_bound(&self, spid: Spid) -> bool {
+        self.bindings.contains_key(&spid)
+    }
+
+    pub fn gfd_port(&self) -> Option<PortId> {
+        self.gfd_port
+    }
+
+    /// Latency for routing `req` from its (bound) requester to the GFD:
+    /// ingress port + switch crossing + egress port.
+    pub fn route_to_gfd(&self, req: &CxlMemReq) -> Result<SimTime> {
+        let spid = req.requester.spid();
+        let ingress = *self
+            .bindings
+            .get(&spid)
+            .ok_or_else(|| Error::FabricManager(format!("SPID {spid:?} not bound")))?;
+        let egress = self
+            .gfd_port
+            .ok_or_else(|| Error::FabricManager("no GFD attached".into()))?;
+        let t = self.ports[ingress.0 as usize].latency
+            + self.latency
+            + self.ports[egress.0 as usize].latency;
+        Ok(t)
+    }
+
+    /// Number of bound (non-GFD) requesters.
+    pub fn bound_count(&self) -> usize {
+        self.bindings.len()
+    }
+}
+
+/// Convenience: the canonical one-hop fabric crossing (port+switch+port),
+/// i.e. what any requester pays to reach the GFD before media access.
+pub fn fabric_crossing() -> SimTime {
+    PORT_LATENCY + SWITCH_LATENCY + PORT_LATENCY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::packet::{CxlMemReq, MemAddr};
+    use crate::cxl::types::{Dpa, Requester};
+
+    #[test]
+    fn binding_assigns_unique_spids() {
+        let mut sw = PbrSwitch::new(8);
+        let (s1, p1) = sw.bind_host().unwrap();
+        let (s2, p2) = sw.bind_cxl_device().unwrap();
+        assert_ne!(s1, s2);
+        assert_ne!(p1, p2);
+        assert_eq!(sw.bound_count(), 2);
+    }
+
+    #[test]
+    fn port_exhaustion() {
+        let mut sw = PbrSwitch::new(2);
+        sw.bind_host().unwrap();
+        sw.attach_gfd().unwrap();
+        assert!(sw.bind_cxl_device().is_err());
+    }
+
+    #[test]
+    fn route_latency_is_two_ports_plus_switch() {
+        let mut sw = PbrSwitch::new(4);
+        let (spid, _) = sw.bind_cxl_device().unwrap();
+        sw.attach_gfd().unwrap();
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, Requester::CxlDevice(spid));
+        // 25 + 70 + 25 = 120 ns
+        assert_eq!(sw.route_to_gfd(&req).unwrap(), SimTime::ns(120));
+        assert_eq!(fabric_crossing(), SimTime::ns(120));
+    }
+
+    #[test]
+    fn unbound_requester_rejected() {
+        let mut sw = PbrSwitch::new(4);
+        sw.attach_gfd().unwrap();
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0)), 64, Requester::CxlDevice(Spid(42)));
+        assert!(sw.route_to_gfd(&req).is_err());
+    }
+
+    #[test]
+    fn unbind_frees_port() {
+        let mut sw = PbrSwitch::new(2);
+        let (spid, _) = sw.bind_host().unwrap();
+        sw.attach_gfd().unwrap();
+        sw.unbind(spid).unwrap();
+        assert!(!sw.is_bound(spid));
+        // the freed port is reusable
+        sw.bind_cxl_device().unwrap();
+    }
+
+    #[test]
+    fn single_gfd_enforced() {
+        let mut sw = PbrSwitch::new(4);
+        sw.attach_gfd().unwrap();
+        assert!(sw.attach_gfd().is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Core CXL vocabulary (paper Table 1) as strongly-typed newtypes.
+//!
+//! Using newtypes rather than bare `u64`s makes address-space confusion
+//! (HPA vs DPA vs device bus address) a compile error — exactly the class
+//! of bug the paper's kernel module must not have.
+
+use std::fmt;
+
+/// Kibibyte/mebibyte/gibibyte helpers.
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Size of the extent the LMB kernel module requests from the FM (§3.2:
+/// "it requests a single 256MB block from the Expander").
+pub const EXTENT_SIZE: u64 = 256 * MIB;
+
+/// Memory page granularity used by the allocator and IOMMU.
+pub const PAGE_SIZE: u64 = 4 * KIB;
+
+/// Host Physical Address — an address in the host's physical space,
+/// possibly resolving to an HDM window rather than host DRAM.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Hpa(pub u64);
+
+/// Device Physical Address — an address inside the expander's media
+/// space (paper Table 1: "DPA").
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Dpa(pub u64);
+
+/// Device bus address as seen by a PCIe device through the IOMMU
+/// (an IOVA). Distinct from [`Hpa`] on purpose.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct BusAddr(pub u64);
+
+/// Source PBR ID — identifies the requester of a CXL.mem transaction at
+/// the switch/GFD (paper Table 1: "SPID").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Spid(pub u16);
+
+/// Destination PBR ID of a GFD port (the paper's API hands a "DPID" back
+/// to CXL devices so they can address P2P requests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Dpid(pub u16);
+
+/// Switch port identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PortId(pub u8);
+
+/// Device Media Partition id within the expander (paper Table 1: "DMP").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DmpId(pub u16);
+
+/// Memory id returned by the LMB alloc APIs (Table 2: "mmid"); the handle
+/// drivers use for free/share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MmId(pub u64);
+
+/// PCI bus/device/function triple identifying a PCIe endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Bdf {
+    pub bus: u8,
+    pub dev: u8,
+    pub func: u8,
+}
+
+impl Bdf {
+    pub const fn new(bus: u8, dev: u8, func: u8) -> Self {
+        Bdf { bus, dev, func }
+    }
+}
+
+impl fmt::Display for Bdf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:02x}:{:02x}.{:x}", self.bus, self.dev, self.func)
+    }
+}
+
+/// Media backing a DMP (§3.1: "supports DRAM and PM heterogeneous media").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MediaType {
+    /// DDR DRAM — the paper's primary target.
+    Dram,
+    /// Persistent memory — slower, retained across failure.
+    Pm,
+}
+
+/// Identity of a fabric requester as seen by the switch and GFD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Requester {
+    /// A host root port (its SPID).
+    Host(Spid),
+    /// A CXL device doing direct P2P (its SPID).
+    CxlDevice(Spid),
+}
+
+impl Requester {
+    pub fn spid(&self) -> Spid {
+        match *self {
+            Requester::Host(s) | Requester::CxlDevice(s) => s,
+        }
+    }
+}
+
+/// Half-open address range helper used across address spaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range {
+    pub base: u64,
+    pub len: u64,
+}
+
+impl Range {
+    pub const fn new(base: u64, len: u64) -> Self {
+        Range { base, len }
+    }
+
+    #[inline]
+    pub const fn end(&self) -> u64 {
+        self.base + self.len
+    }
+
+    #[inline]
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+
+    /// Whether the non-empty span `[addr, addr+len)` lies entirely
+    /// inside this range (empty spans are never contained).
+    #[inline]
+    pub fn contains_span(&self, addr: u64, len: u64) -> bool {
+        len > 0 && addr >= self.base && len <= self.len && addr - self.base <= self.len - len
+    }
+
+    #[inline]
+    pub fn overlaps(&self, other: &Range) -> bool {
+        self.base < other.end() && other.base < self.end()
+    }
+}
+
+macro_rules! impl_addr_fmt {
+    ($($t:ident),*) => {$(
+        impl fmt::Debug for $t {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!(stringify!($t), "({:#x})"), self.0)
+            }
+        }
+        impl fmt::Display for $t {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{:#x}", self.0)
+            }
+        }
+        impl $t {
+            /// Offset this address by `delta` bytes.
+            #[inline]
+            pub const fn offset(self, delta: u64) -> Self {
+                $t(self.0 + delta)
+            }
+            /// Align down to `align` (power of two).
+            #[inline]
+            pub const fn align_down(self, align: u64) -> Self {
+                $t(self.0 & !(align - 1))
+            }
+            /// Whether the address is `align`-aligned.
+            #[inline]
+            pub const fn is_aligned(self, align: u64) -> bool {
+                self.0 & (align - 1) == 0
+            }
+        }
+    )*};
+}
+
+impl_addr_fmt!(Hpa, Dpa, BusAddr);
+
+/// Round `v` up to a multiple of `align` (power of two).
+#[inline]
+pub const fn align_up(v: u64, align: u64) -> u64 {
+    (v + align - 1) & !(align - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_contains_span_edges() {
+        let r = Range::new(0x1000, 0x1000);
+        assert!(r.contains_span(0x1000, 0x1000));
+        assert!(r.contains_span(0x1fff, 1));
+        assert!(!r.contains_span(0x1fff, 2));
+        assert!(!r.contains_span(0xfff, 1));
+        assert!(!r.contains_span(0x2000, 0));
+    }
+
+    #[test]
+    fn range_overlap() {
+        let a = Range::new(0, 100);
+        assert!(a.overlaps(&Range::new(99, 1)));
+        assert!(!a.overlaps(&Range::new(100, 10)));
+        assert!(a.overlaps(&Range::new(0, 1)));
+    }
+
+    #[test]
+    fn addr_alignment() {
+        let a = Hpa(0x1234);
+        assert_eq!(a.align_down(0x1000), Hpa(0x1000));
+        assert!(!a.is_aligned(PAGE_SIZE));
+        assert!(Hpa(0x2000).is_aligned(PAGE_SIZE));
+        assert_eq!(align_up(1, PAGE_SIZE), PAGE_SIZE);
+        assert_eq!(align_up(PAGE_SIZE, PAGE_SIZE), PAGE_SIZE);
+    }
+
+    #[test]
+    fn extent_size_matches_paper() {
+        assert_eq!(EXTENT_SIZE, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn bdf_display() {
+        assert_eq!(Bdf::new(3, 0, 1).to_string(), "03:00.1");
+    }
+}

@@ -1,0 +1,75 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API returns [`Result`]. Control-plane failures
+//! (allocation, access control, fabric management) are first-class — the
+//! paper's §1 "LMB challenges" calls out allocation failure, isolation
+//! violations and expander failure as the hard cases, so they get
+//! dedicated variants rather than a stringly-typed catch-all.
+
+use crate::cxl::types::{Dpid, Hpa, MmId, Spid};
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Errors surfaced by the LMB stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// The fabric manager could not satisfy a capacity request.
+    #[error("expander out of capacity: requested {requested} B, available {available} B")]
+    OutOfCapacity { requested: u64, available: u64 },
+
+    /// The LMB module could not satisfy an allocation (distinct from FM
+    /// capacity: the module-level allocator may be fragmented).
+    #[error("lmb allocation failed: requested {requested} B ({reason})")]
+    AllocFailed { requested: u64, reason: String },
+
+    /// Unknown memory id passed to free/share.
+    #[error("unknown memory id {0:?}")]
+    UnknownMmId(MmId),
+
+    /// The caller does not own the memory id.
+    #[error("memory id {mmid:?} is not owned by the calling device")]
+    NotOwner { mmid: MmId },
+
+    /// IOMMU rejected a device access (PCIe-side isolation, §3.3).
+    #[error("iommu fault: device {bdf} access to {hpa:?} denied ({reason})")]
+    IommuFault { bdf: String, hpa: Hpa, reason: String },
+
+    /// SAT rejected a CXL device access (CXL-side isolation, §3.3).
+    #[error("SAT violation: SPID {spid:?} has no grant for DPID {dpid:?}")]
+    SatViolation { spid: Spid, dpid: Dpid },
+
+    /// Address did not decode to any HDM window / DMP.
+    #[error("address decode failed: {0}")]
+    DecodeFault(String),
+
+    /// The expander (or a DMP) is failed / offline (§1 single point of failure).
+    #[error("expander unavailable: {0}")]
+    ExpanderFailed(String),
+
+    /// Fabric management protocol error (bad bind, duplicate SPID, ...).
+    #[error("fabric manager: {0}")]
+    FabricManager(String),
+
+    /// Device-side protocol error (NVMe/controller misuse).
+    #[error("device: {0}")]
+    Device(String),
+
+    /// Workload / configuration validation error.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// PJRT runtime error (artifact loading, compilation, execution).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// I/O error (artifact files, traces).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,152 @@
+//! Host physical address space.
+//!
+//! The LMB kernel module maps leased expander extents into host physical
+//! address space (§3.2: "the obtained memory is mapped into the physical
+//! address space of the host, waiting to be allocated to the local
+//! device"). This module models that space: a low range of host DRAM
+//! plus HDM windows that alias expander DPA ranges.
+
+use crate::cxl::types::{Dpa, Hpa, Range};
+use crate::error::{Error, Result};
+
+/// What an HPA resolves to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Plain host DRAM at the given offset.
+    HostDram { offset: u64 },
+    /// An HDM window; the HPA maps to this expander DPA.
+    Hdm { dpa: Dpa },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct HdmWindow {
+    hpa: Range,
+    dpa_base: Dpa,
+}
+
+/// The host physical address map.
+#[derive(Debug)]
+pub struct AddressSpace {
+    dram: Range,
+    windows: Vec<HdmWindow>,
+    /// Bump pointer for placing new HDM windows above existing ranges.
+    next_window_base: u64,
+}
+
+impl AddressSpace {
+    /// A host with `dram_bytes` of local DRAM at HPA 0.
+    pub fn new(dram_bytes: u64) -> Self {
+        AddressSpace {
+            dram: Range::new(0, dram_bytes),
+            windows: Vec::new(),
+            next_window_base: dram_bytes.next_power_of_two().max(1 << 32),
+        }
+    }
+
+    /// Register an HDM window at a fixed HPA range.
+    pub fn add_hdm_window(&mut self, hpa: Range, dpa_base: Dpa) -> Result<()> {
+        if self.dram.overlaps(&hpa) || self.windows.iter().any(|w| w.hpa.overlaps(&hpa)) {
+            return Err(Error::Config(format!(
+                "HDM window {:#x}+{:#x} overlaps existing ranges",
+                hpa.base, hpa.len
+            )));
+        }
+        self.next_window_base = self.next_window_base.max(hpa.end());
+        self.windows.push(HdmWindow { hpa, dpa_base });
+        Ok(())
+    }
+
+    /// Place a new HDM window for `len` bytes at an automatically chosen
+    /// HPA; returns the window's base HPA.
+    pub fn place_hdm_window(&mut self, len: u64, dpa_base: Dpa) -> Result<Hpa> {
+        let base = self.next_window_base;
+        self.add_hdm_window(Range::new(base, len), dpa_base)?;
+        Ok(Hpa(base))
+    }
+
+    /// Remove the HDM window whose base HPA is `base` (extent release).
+    pub fn remove_hdm_window(&mut self, base: Hpa) -> Result<()> {
+        let before = self.windows.len();
+        self.windows.retain(|w| w.hpa.base != base.0);
+        if self.windows.len() == before {
+            return Err(Error::DecodeFault(format!("no HDM window at {base:?}")));
+        }
+        Ok(())
+    }
+
+    /// Resolve an HPA to its target.
+    pub fn resolve(&self, hpa: Hpa) -> Result<Target> {
+        if self.dram.contains(hpa.0) {
+            return Ok(Target::HostDram { offset: hpa.0 - self.dram.base });
+        }
+        self.windows
+            .iter()
+            .find(|w| w.hpa.contains(hpa.0))
+            .map(|w| Target::Hdm { dpa: Dpa(w.dpa_base.0 + (hpa.0 - w.hpa.base)) })
+            .ok_or_else(|| Error::DecodeFault(format!("unmapped HPA {hpa:?}")))
+    }
+
+    /// Whether the span `[hpa, hpa+len)` stays within one mapped region.
+    pub fn resolve_span(&self, hpa: Hpa, len: u64) -> Result<Target> {
+        if self.dram.contains_span(hpa.0, len) {
+            return Ok(Target::HostDram { offset: hpa.0 - self.dram.base });
+        }
+        self.windows
+            .iter()
+            .find(|w| w.hpa.contains_span(hpa.0, len))
+            .map(|w| Target::Hdm { dpa: Dpa(w.dpa_base.0 + (hpa.0 - w.hpa.base)) })
+            .ok_or_else(|| {
+                Error::DecodeFault(format!("unmapped or straddling span {hpa:?}+{len:#x}"))
+            })
+    }
+
+    pub fn window_count(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::GIB;
+
+    #[test]
+    fn dram_resolution() {
+        let s = AddressSpace::new(GIB);
+        assert_eq!(s.resolve(Hpa(0x1000)).unwrap(), Target::HostDram { offset: 0x1000 });
+        assert!(s.resolve(Hpa(GIB)).is_err());
+    }
+
+    #[test]
+    fn hdm_window_translation() {
+        let mut s = AddressSpace::new(GIB);
+        let base = s.place_hdm_window(GIB, Dpa(0x4000)).unwrap();
+        match s.resolve(Hpa(base.0 + 0x42)).unwrap() {
+            Target::Hdm { dpa } => assert_eq!(dpa, Dpa(0x4042)),
+            t => panic!("expected HDM, got {t:?}"),
+        }
+    }
+
+    #[test]
+    fn windows_do_not_overlap_dram_or_each_other() {
+        let mut s = AddressSpace::new(GIB);
+        assert!(s.add_hdm_window(Range::new(0, GIB), Dpa(0)).is_err(), "overlaps DRAM");
+        let a = s.place_hdm_window(GIB, Dpa(0)).unwrap();
+        assert!(s.add_hdm_window(Range::new(a.0, 0x1000), Dpa(GIB)).is_err());
+        let b = s.place_hdm_window(GIB, Dpa(GIB)).unwrap();
+        assert!(b.0 >= a.0 + GIB);
+        assert_eq!(s.window_count(), 2);
+    }
+
+    #[test]
+    fn straddling_span_rejected() {
+        let mut s = AddressSpace::new(GIB);
+        let base = s.place_hdm_window(0x10000, Dpa(0)).unwrap();
+        assert!(s.resolve_span(Hpa(base.0 + 0x8000), 0x8000).is_ok());
+        assert!(s.resolve_span(Hpa(base.0 + 0x8000), 0x8001).is_err());
+    }
+}

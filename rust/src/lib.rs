@@ -1,0 +1,70 @@
+//! # LMB — CXL-Linked Memory Buffer for PCIe devices
+//!
+//! Full-system reproduction of *"LMB: Augmenting PCIe Devices with
+//! CXL-Linked Memory Buffer"* (DapuStor, CS.AR 2024).
+//!
+//! The crate is organised as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the LMB system itself: a CXL fabric model
+//!   (PBR switch, GFD memory expander, fabric manager), a PCIe substrate
+//!   (TLP bridge, IOMMU, DMA), the LMB kernel-module analogue with the
+//!   paper's Table 2 API, a calibrated discrete-event SSD model
+//!   (NAND, FTL variants, controller pipeline), a FIO-like workload
+//!   engine, and the coordinator that drives end-to-end experiments.
+//! * **Layer 2 (JAX, build time)** — the simulator's batched data plane
+//!   (`python/compile/model.py`): per-IO service-demand composition and a
+//!   max-plus pipeline scan, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (Pallas, build time)** — the data-plane hot-spot kernels
+//!   (`python/compile/kernels/`), verified against pure-jnp oracles.
+//!
+//! Python never runs at simulation time: [`runtime`] loads the AOT HLO
+//! via the PJRT C API (`xla` crate) and executes it from the hot path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lmb::prelude::*;
+//!
+//! // Build a host + CXL fabric with one memory expander.
+//! let mut system = System::builder().expander_gib(4).build().unwrap();
+//! // Attach a PCIe SSD and give an L2P segment an LMB allocation.
+//! let ssd = system.attach_pcie_ssd(SsdSpec::gen5());
+//! let alloc = system.pcie_alloc(ssd, 64 << 20).unwrap();
+//! assert!(alloc.size >= 64 << 20);
+//! assert!(alloc.bus_addr.is_some(), "device-visible via the IOMMU");
+//! system.pcie_free(ssd, alloc.mmid).unwrap();
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cxl;
+pub mod error;
+pub mod gpu;
+pub mod host;
+pub mod lmb;
+pub mod pcie;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod system;
+pub mod testing;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{Coordinator, ExperimentReport, SchemeRow};
+    pub use crate::cxl::expander::ExpanderConfig;
+    pub use crate::cxl::fabric::{Fabric, PathKind};
+    pub use crate::cxl::types::*;
+    pub use crate::error::{Error, Result};
+    pub use crate::lmb::{LmbAlloc, LmbModule};
+    pub use crate::sim::stats::{LatencyHistogram, Throughput};
+    pub use crate::sim::time::SimTime;
+    pub use crate::ssd::spec::SsdSpec;
+    pub use crate::ssd::IndexPlacement;
+    pub use crate::system::{System, SystemBuilder};
+    pub use crate::workload::{FioJob, IoEngine, IoPattern};
+}

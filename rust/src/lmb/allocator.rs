@@ -1,0 +1,267 @@
+//! LMB sub-allocator (§3.2 "Memory allocator").
+//!
+//! The kernel module leases 256 MB extents from the FM and sub-allocates
+//! them to devices at 4 KiB granularity. All allocator metadata lives on
+//! the host ("we keep the memory allocator metadata in the host … avoid
+//! triggering multiple CXL memory accesses") — in this model, plain Rust
+//! structures, never the expander backing store.
+//!
+//! Policy: first-fit over per-extent free lists with coalescing on free.
+//! When an extent drains to fully-free it is reported so the module can
+//! release it to the FM ("When all device memory in a memory block has
+//! been freed, the kernel module releases the area to FM").
+
+use crate::cxl::fm::Extent;
+use crate::cxl::types::{align_up, Dpa, Hpa, Range, PAGE_SIZE};
+
+/// A leased extent plus its host mapping and free list.
+#[derive(Debug)]
+pub struct ExtentState {
+    pub extent: Extent,
+    /// HPA where this extent's HDM window was placed.
+    pub hpa_base: Hpa,
+    /// Free offsets within the extent (sorted, coalesced).
+    free: Vec<Range>,
+    pub used: u64,
+}
+
+impl ExtentState {
+    pub fn new(extent: Extent, hpa_base: Hpa) -> Self {
+        let free = vec![Range::new(0, extent.len)];
+        ExtentState { extent, hpa_base, free, used: 0 }
+    }
+
+    fn alloc(&mut self, len: u64) -> Option<u64> {
+        let pos = self.free.iter().position(|r| r.len >= len)?;
+        let r = self.free[pos];
+        if r.len == len {
+            self.free.remove(pos);
+        } else {
+            self.free[pos] = Range::new(r.base + len, r.len - len);
+        }
+        self.used += len;
+        Some(r.base)
+    }
+
+    fn free(&mut self, offset: u64, len: u64) {
+        let mut r = Range::new(offset, len);
+        let idx = self.free.partition_point(|f| f.base < r.base);
+        if idx < self.free.len() && r.end() == self.free[idx].base {
+            r = Range::new(r.base, r.len + self.free[idx].len);
+            self.free.remove(idx);
+        }
+        if idx > 0 && self.free[idx - 1].end() == r.base {
+            let prev = self.free[idx - 1];
+            self.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
+        } else {
+            self.free.insert(idx, r);
+        }
+        self.used -= len;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.used == 0
+    }
+
+    /// Largest free run (fragmentation observability).
+    pub fn largest_free(&self) -> u64 {
+        self.free.iter().map(|r| r.len).max().unwrap_or(0)
+    }
+}
+
+/// A placed sub-allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Index of the extent within the allocator.
+    pub extent_idx: usize,
+    /// Byte offset within the extent.
+    pub offset: u64,
+    /// Rounded-up length.
+    pub len: u64,
+    pub dpa: Dpa,
+    pub hpa: Hpa,
+}
+
+/// The module-level allocator over all leased extents.
+#[derive(Debug, Default)]
+pub struct SubAllocator {
+    extents: Vec<ExtentState>,
+}
+
+impl SubAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adopt a freshly leased extent (already HDM-mapped at `hpa_base`).
+    pub fn adopt(&mut self, extent: Extent, hpa_base: Hpa) -> usize {
+        self.extents.push(ExtentState::new(extent, hpa_base));
+        self.extents.len() - 1
+    }
+
+    /// Try to place `size` bytes (rounded to pages) in any leased extent.
+    pub fn alloc(&mut self, size: u64) -> Option<Placement> {
+        let len = align_up(size.max(1), PAGE_SIZE);
+        for (i, st) in self.extents.iter_mut().enumerate() {
+            if let Some(off) = st.alloc(len) {
+                return Some(Placement {
+                    extent_idx: i,
+                    offset: off,
+                    len,
+                    dpa: Dpa(st.extent.dpa.0 + off),
+                    hpa: Hpa(st.hpa_base.0 + off),
+                });
+            }
+        }
+        None
+    }
+
+    /// Free a placement; returns `Some(extent_idx)` when that extent is
+    /// now fully free (caller should release it to the FM).
+    pub fn free(&mut self, p: Placement) -> Option<usize> {
+        let st = &mut self.extents[p.extent_idx];
+        st.free(p.offset, p.len);
+        st.is_empty().then_some(p.extent_idx)
+    }
+
+    /// Drop a (fully free) extent from tracking, returning it. Indices of
+    /// later extents shift down — callers must re-resolve placements, so
+    /// the module only calls this while holding no live placements in it.
+    pub fn remove_extent(&mut self, idx: usize) -> ExtentState {
+        self.extents.remove(idx)
+    }
+
+    pub fn extents(&self) -> &[ExtentState] {
+        &self.extents
+    }
+
+    /// Total leased / used bytes.
+    pub fn leased(&self) -> u64 {
+        self.extents.iter().map(|e| e.extent.len).sum()
+    }
+
+    pub fn used(&self) -> u64 {
+        self.extents.iter().map(|e| e.used).sum()
+    }
+
+    /// Invariant check for property tests: free lists sorted, coalesced,
+    /// within bounds, and used+free == extent length.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, st) in self.extents.iter().enumerate() {
+            let mut prev_end: Option<u64> = None;
+            let mut free_total = 0;
+            for r in &st.free {
+                if r.end() > st.extent.len {
+                    return Err(format!("extent {i}: free range beyond extent"));
+                }
+                if let Some(pe) = prev_end {
+                    if r.base < pe {
+                        return Err(format!("extent {i}: free list overlap"));
+                    }
+                    if r.base == pe {
+                        return Err(format!("extent {i}: free list not coalesced"));
+                    }
+                }
+                prev_end = Some(r.end());
+                free_total += r.len;
+            }
+            if free_total + st.used != st.extent.len {
+                return Err(format!(
+                    "extent {i}: leak (free {free_total} + used {} != {})",
+                    st.used, st.extent.len
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::fm::HostId;
+    use crate::cxl::types::{EXTENT_SIZE, GIB};
+
+    fn extent(base: u64) -> Extent {
+        Extent { dpa: Dpa(base), len: EXTENT_SIZE, owner: HostId(0) }
+    }
+
+    #[test]
+    fn alloc_rounds_to_pages_and_translates() {
+        let mut a = SubAllocator::new();
+        a.adopt(extent(0), Hpa(4 * GIB));
+        let p = a.alloc(100).unwrap();
+        assert_eq!(p.len, PAGE_SIZE);
+        assert_eq!(p.dpa, Dpa(0));
+        assert_eq!(p.hpa, Hpa(4 * GIB));
+        let q = a.alloc(PAGE_SIZE + 1).unwrap();
+        assert_eq!(q.len, 2 * PAGE_SIZE);
+        assert_eq!(q.offset, PAGE_SIZE);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = SubAllocator::new();
+        a.adopt(extent(0), Hpa(4 * GIB));
+        assert!(a.alloc(EXTENT_SIZE).is_some());
+        assert!(a.alloc(PAGE_SIZE).is_none());
+    }
+
+    #[test]
+    fn free_coalesces_and_reports_empty() {
+        let mut a = SubAllocator::new();
+        a.adopt(extent(0), Hpa(4 * GIB));
+        let p1 = a.alloc(PAGE_SIZE).unwrap();
+        let p2 = a.alloc(PAGE_SIZE).unwrap();
+        let p3 = a.alloc(PAGE_SIZE).unwrap();
+        assert_eq!(a.free(p1), None);
+        assert_eq!(a.free(p3), None);
+        assert_eq!(a.free(p2), Some(0), "middle free drains the extent");
+        a.check_invariants().unwrap();
+        assert_eq!(a.extents()[0].largest_free(), EXTENT_SIZE);
+        // after coalescing, a full-extent allocation fits again
+        assert!(a.alloc(EXTENT_SIZE).is_some());
+    }
+
+    #[test]
+    fn spans_multiple_extents() {
+        let mut a = SubAllocator::new();
+        a.adopt(extent(0), Hpa(4 * GIB));
+        a.adopt(extent(EXTENT_SIZE), Hpa(5 * GIB));
+        let p1 = a.alloc(EXTENT_SIZE).unwrap();
+        let p2 = a.alloc(EXTENT_SIZE).unwrap();
+        assert_ne!(p1.extent_idx, p2.extent_idx);
+        assert_eq!(p2.hpa, Hpa(5 * GIB));
+        assert_eq!(a.used(), 2 * EXTENT_SIZE);
+    }
+
+    #[test]
+    fn property_random_alloc_free_preserves_invariants() {
+        use crate::sim::rng::Pcg64;
+        let mut rng = Pcg64::new(0xa110c);
+        let mut a = SubAllocator::new();
+        a.adopt(extent(0), Hpa(4 * GIB));
+        a.adopt(extent(EXTENT_SIZE), Hpa(5 * GIB));
+        let mut live: Vec<Placement> = Vec::new();
+        for _ in 0..2000 {
+            if rng.chance(0.6) || live.is_empty() {
+                let sz = (rng.next_below(64) + 1) * PAGE_SIZE;
+                if let Some(p) = a.alloc(sz) {
+                    // no overlap with any live placement
+                    for q in &live {
+                        let pr = Range::new(p.dpa.0, p.len);
+                        let qr = Range::new(q.dpa.0, q.len);
+                        assert!(!pr.overlaps(&qr), "overlapping placements");
+                    }
+                    live.push(p);
+                }
+            } else {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let p = live.swap_remove(i);
+                a.free(p);
+            }
+            a.check_invariants().unwrap();
+        }
+    }
+}

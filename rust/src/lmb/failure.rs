@@ -1,0 +1,223 @@
+//! Expander failure handling (§1 "LMB challenges": "A single failure in
+//! the memory expander can render all devices unavailable").
+//!
+//! The paper raises the problem without solving it; we implement the
+//! obvious mitigation space so the failover example and bench can
+//! explore it:
+//!
+//! * **FailStop** — surface errors to consumers; devices fall back to
+//!   their degraded native mode (e.g. the SSD reverts to DFTL-style
+//!   flash-resident indexing until the expander returns).
+//! * **WriteThroughShadow** — the module keeps a host-DRAM shadow of
+//!   designated *critical* allocations (e.g. L2P tables); on expander
+//!   failure consumers are re-pointed at the shadow, trading host DRAM
+//!   for availability.
+//!
+//! Recovery re-validates leases and rebuilds access-control state.
+
+use std::collections::HashMap;
+
+use crate::cxl::fm::FabricManager;
+use crate::cxl::types::MmId;
+use crate::error::{Error, Result};
+use crate::lmb::LmbModule;
+
+/// Failure-handling policy for LMB allocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Errors propagate; consumers degrade themselves.
+    FailStop,
+    /// Critical allocations are shadowed in host DRAM and served from
+    /// there while the expander is down.
+    WriteThroughShadow,
+}
+
+/// Where a consumer should direct accesses for one allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingState {
+    /// Normal: served by the expander.
+    Expander,
+    /// Failed over: served by the host-DRAM shadow (slower for P2P
+    /// consumers, but available).
+    HostShadow,
+    /// Unavailable (FailStop policy during an outage).
+    Unavailable,
+}
+
+/// Tracks failure state and per-allocation serving decisions.
+#[derive(Debug)]
+pub struct FailureDomain {
+    policy: FailurePolicy,
+    /// mmids registered as critical (shadowed under WriteThroughShadow).
+    critical: HashMap<MmId, bool>,
+    expander_up: bool,
+    /// Counters for the failover bench.
+    pub failovers: u64,
+    pub recoveries: u64,
+}
+
+impl FailureDomain {
+    pub fn new(policy: FailurePolicy) -> Self {
+        FailureDomain {
+            policy,
+            critical: HashMap::new(),
+            expander_up: true,
+            failovers: 0,
+            recoveries: 0,
+        }
+    }
+
+    pub fn policy(&self) -> FailurePolicy {
+        self.policy
+    }
+
+    /// Mark an allocation as critical (shadow-eligible). Under
+    /// `WriteThroughShadow`, writes are mirrored host-side; the mirror
+    /// costs host DRAM equal to the allocation size.
+    pub fn register_critical(&mut self, mmid: MmId) {
+        self.critical.insert(mmid, true);
+    }
+
+    pub fn is_critical(&self, mmid: MmId) -> bool {
+        self.critical.get(&mmid).copied().unwrap_or(false)
+    }
+
+    /// Inject an expander failure; returns the serving state for each
+    /// live allocation in `module`.
+    pub fn fail_expander(
+        &mut self,
+        fm: &mut FabricManager,
+        module: &LmbModule,
+    ) -> HashMap<MmId, ServingState> {
+        fm.expander_mut().set_failed(true);
+        self.expander_up = false;
+        self.failovers += 1;
+        module
+            .mmids()
+            .into_iter()
+            .map(|mmid| (mmid, self.serving_state(mmid)))
+            .collect()
+    }
+
+    /// Recover the expander. Shadowed allocations must be copied back
+    /// before serving switches; the caller provides the copy-back hook
+    /// (returning bytes restored) so the bench can account for it.
+    pub fn recover_expander<F>(
+        &mut self,
+        fm: &mut FabricManager,
+        module: &LmbModule,
+        mut copy_back: F,
+    ) -> Result<u64>
+    where
+        F: FnMut(MmId) -> Result<u64>,
+    {
+        if self.expander_up {
+            return Err(Error::FabricManager("expander is not failed".into()));
+        }
+        fm.expander_mut().set_failed(false);
+        let mut restored = 0;
+        if self.policy == FailurePolicy::WriteThroughShadow {
+            for mmid in module.mmids() {
+                if self.is_critical(mmid) {
+                    restored += copy_back(mmid)?;
+                }
+            }
+        }
+        self.expander_up = true;
+        self.recoveries += 1;
+        Ok(restored)
+    }
+
+    /// Current serving state for an allocation.
+    pub fn serving_state(&self, mmid: MmId) -> ServingState {
+        if self.expander_up {
+            return ServingState::Expander;
+        }
+        match self.policy {
+            FailurePolicy::WriteThroughShadow if self.is_critical(mmid) => {
+                ServingState::HostShadow
+            }
+            _ => ServingState::Unavailable,
+        }
+    }
+
+    pub fn expander_up(&self) -> bool {
+        self.expander_up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::{Expander, ExpanderConfig};
+    use crate::cxl::switch::PbrSwitch;
+    use crate::cxl::types::{Bdf, GIB, PAGE_SIZE};
+    use crate::host::AddressSpace;
+    use crate::pcie::iommu::Iommu;
+
+    fn rig() -> (FabricManager, Iommu, AddressSpace, LmbModule, Bdf) {
+        let mut fm = FabricManager::new(
+            PbrSwitch::new(8),
+            Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+        );
+        fm.attach_gfd().unwrap();
+        let (host, _) = fm.bind_host().unwrap();
+        let mut iommu = Iommu::new();
+        let dev = Bdf::new(1, 0, 0);
+        iommu.attach(dev);
+        (fm, iommu, AddressSpace::new(GIB), LmbModule::load(host), dev)
+    }
+
+    #[test]
+    fn failstop_makes_allocations_unavailable() {
+        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
+        let a = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
+        let mut fd = FailureDomain::new(FailurePolicy::FailStop);
+        let states = fd.fail_expander(&mut fm, &module);
+        assert_eq!(states[&a.mmid], ServingState::Unavailable);
+        // new allocations fail during the outage
+        assert!(module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).is_err());
+        fd.recover_expander(&mut fm, &module, |_| Ok(0)).unwrap();
+        assert_eq!(fd.serving_state(a.mmid), ServingState::Expander);
+        assert!(module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).is_ok());
+    }
+
+    #[test]
+    fn shadow_policy_keeps_critical_allocs_available() {
+        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
+        let crit = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
+        let plain = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
+        let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+        fd.register_critical(crit.mmid);
+        let states = fd.fail_expander(&mut fm, &module);
+        assert_eq!(states[&crit.mmid], ServingState::HostShadow);
+        assert_eq!(states[&plain.mmid], ServingState::Unavailable);
+    }
+
+    #[test]
+    fn recovery_copies_back_shadowed_bytes() {
+        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
+        let a = module
+            .pcie_alloc(&mut fm, &mut iommu, &mut space, dev, 4 * PAGE_SIZE)
+            .unwrap();
+        let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+        fd.register_critical(a.mmid);
+        fd.fail_expander(&mut fm, &module);
+        let restored = fd
+            .recover_expander(&mut fm, &module, |mmid| {
+                assert_eq!(mmid, a.mmid);
+                Ok(a.size)
+            })
+            .unwrap();
+        assert_eq!(restored, 4 * PAGE_SIZE);
+        assert_eq!(fd.failovers, 1);
+        assert_eq!(fd.recoveries, 1);
+    }
+
+    #[test]
+    fn double_recovery_rejected() {
+        let (mut fm, _iommu, _space, module, _dev) = rig();
+        let mut fd = FailureDomain::new(FailurePolicy::FailStop);
+        assert!(fd.recover_expander(&mut fm, &module, |_| Ok(0)).is_err());
+    }
+}

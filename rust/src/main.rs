@@ -1,0 +1,296 @@
+//! `lmb` — command-line driver for the LMB reproduction.
+//!
+//! Commands:
+//!   fig2                         print Figure 2 latency derivation
+//!   table3                       Ideal-scheme calibration vs Table 3
+//!   fig6 --gen=gen4|gen5         the paper's main result grid
+//!   run --gen=.. --scheme=.. --pattern=.. [--bs= --qd= --numjobs= --zipf=]
+//!   des --gen=.. --scheme=.. --pattern=.. [--ios=N]   event-driven device
+//!   contention --gen=.. --devices=N [--scheme=..]
+//!   locality --gen=..            DFTL/LMB hit-ratio sweep
+//!   gpu [--working-set=64G]      GPU spill-tier comparison (§2.2)
+//!   info                         modeled device specs
+//!
+//! `--native` forces the pure-Rust data plane; default auto-detects
+//! `artifacts/` (built by `make artifacts`) and uses the XLA path.
+
+use lmb::cli::Args;
+use lmb::config;
+use lmb::coordinator::{contention, Coordinator};
+use lmb::cxl::fabric::Fabric;
+use lmb::cxl::types::GIB;
+use lmb::gpu;
+use lmb::prelude::*;
+use lmb::ssd::controller::Controller;
+use lmb::ssd::spec::SsdSpec;
+use lmb::workload::fio::IoPattern;
+
+fn coordinator(args: &Args) -> Coordinator {
+    if args.has("native") {
+        Coordinator::native()
+    } else {
+        Coordinator::auto()
+    }
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "fig2" => cmd_fig2(),
+        "table3" => cmd_table3(&args),
+        "fig6" => cmd_fig6(&args),
+        "run" => cmd_run(&args),
+        "des" => cmd_des(&args),
+        "contention" => cmd_contention(&args),
+        "locality" => cmd_locality(&args),
+        "gpu" => cmd_gpu(&args),
+        "info" => cmd_info(),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lmb — CXL-Linked Memory Buffer reproduction\n\n\
+         usage: lmb <command> [flags]\n\n\
+         commands:\n  \
+         fig2                        Figure 2 latency derivation\n  \
+         table3                      Table 3 calibration\n  \
+         fig6 --gen=gen4|gen5        the paper's main result\n  \
+         run --gen= --scheme= --pattern= [--bs= --qd= --numjobs= --zipf=]\n  \
+         des --gen= --scheme= --pattern= [--ios=]  event-driven device\n  \
+         contention --gen= --devices=N [--scheme=]\n  \
+         locality --gen=             DFTL hit-ratio sweep\n  \
+         gpu [--working-set=64G]     GPU spill-tier comparison\n  \
+         info                        modeled device specs\n\n\
+         global flags: --native (skip XLA artifacts)"
+    );
+}
+
+fn cmd_fig2() -> Result<()> {
+    let fabric = Fabric::default();
+    println!("Figure 2 — estimated access latencies (derived from component model)\n");
+    println!("{:<34} {:>12}", "path", "latency");
+    println!("{}", "-".repeat(48));
+    for (label, lat) in fabric.figure2_rows() {
+        println!("{label:<34} {:>12}", format!("{lat}"));
+    }
+    println!(
+        "\nderived per-scheme injection constants: LMB-CXL +{}, \
+         LMB-PCIe(Gen4) +{}, LMB-PCIe(Gen5) +{}, DFTL miss +{}",
+        fabric.path_latency(PathKind::CxlP2pToHdm),
+        fabric.path_latency(PathKind::PcieToHdm(lmb::pcie::link::PcieGen::Gen4)),
+        fabric.path_latency(PathKind::PcieToHdm(lmb::pcie::link::PcieGen::Gen5)),
+        fabric.path_latency(PathKind::FlashRead),
+    );
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let coord = coordinator(args);
+    println!("Table 3 calibration — Ideal scheme vs spec sheet\n");
+    println!("{:<44} {:>10} {:>10} {:>7}", "metric", "spec", "model", "delta");
+    println!("{}", "-".repeat(75));
+    for (label, spec, measured) in coord.table3()? {
+        let delta = (measured - spec) / spec * 100.0;
+        println!("{label:<44} {spec:>10.1} {measured:>10.1} {delta:>6.1}%");
+    }
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let gen = config::parse_gen(args.flag_or("gen", "gen4"))?;
+    let coord = coordinator(args);
+    let report = coord.figure6(gen)?;
+    println!("{}", report.to_markdown());
+    // the paper's headline ratios
+    for (pattern, label) in
+        [(IoPattern::RandWrite, "write"), (IoPattern::RandRead, "read")]
+    {
+        if let Some(r) = report.ratio_vs_ideal(lmb::ssd::IndexPlacement::Dftl, pattern) {
+            println!("Ideal vs DFTL ({label}): {r:.1}x");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let gen = config::parse_gen(args.flag_or("gen", "gen4"))?;
+    let scheme = config::parse_scheme(args.flag_or("scheme", "lmb-cxl"))?;
+    let pattern = config::parse_pattern(args.flag_or("pattern", "randread"))?;
+    let spec = SsdSpec::for_gen(gen);
+    let mut job = FioJob::paper(pattern, args.flag_u64("span", 64 * GIB)?);
+    job.block_size = args.flag_u64("bs", 4096)? as u32;
+    job.qd = args.flag_u64("qd", 64)? as u32;
+    job.numjobs = args.flag_u64("numjobs", 4)? as u32;
+    if let Some(theta) = args.flag("zipf") {
+        job.zipf_theta = Some(
+            theta
+                .parse()
+                .map_err(|_| lmb::Error::Config(format!("bad zipf theta '{theta}'")))?,
+        );
+    }
+    job.validate()?;
+    let coord = coordinator(args);
+    let row = coord.run_scheme(&spec, scheme, &job)?;
+    println!(
+        "{} {} {}: {:.0} KIOPS ({:.2} GB/s) mean={} p50={} p99={} bottleneck={} [{}]",
+        row.device,
+        row.scheme.label(),
+        row.pattern.label(),
+        row.kiops,
+        row.gbps,
+        row.mean_latency,
+        row.p50,
+        row.p99,
+        row.bottleneck,
+        coord.backend_name(),
+    );
+    Ok(())
+}
+
+fn cmd_des(args: &Args) -> Result<()> {
+    let gen = config::parse_gen(args.flag_or("gen", "gen5"))?;
+    let scheme = config::parse_scheme(args.flag_or("scheme", "lmb-cxl"))?;
+    let pattern = config::parse_pattern(args.flag_or("pattern", "randread"))?;
+    let spec = SsdSpec::for_gen(gen);
+    let mut job = FioJob::paper(pattern, args.flag_u64("span", 64 * GIB)?);
+    job.total_ios = args.flag_u64("ios", 50_000)?;
+    job.qd = args.flag_u64("qd", 64)? as u32;
+    let mut dev = lmb::ssd::device::SsdDevice::new(
+        spec.clone(),
+        scheme,
+        Fabric::default(),
+        job.span_pages(),
+    );
+    let run = dev.run(&job)?;
+    println!(
+        "{} {} {} [event-driven]: {:.0} KIOPS over {} ({} IOs, {} events, CMT hit {:.1}%)",
+        spec.name,
+        scheme.label(),
+        pattern.label(),
+        run.kiops(),
+        run.span,
+        run.completed,
+        run.events,
+        run.cmt_hit_ratio * 100.0
+    );
+    println!("  latency: {}", run.latency.summary());
+    Ok(())
+}
+
+fn cmd_contention(args: &Args) -> Result<()> {
+    let gen = config::parse_gen(args.flag_or("gen", "gen5"))?;
+    let scheme = config::parse_scheme(args.flag_or("scheme", "lmb-cxl"))?;
+    let devices = args.flag_u64("devices", 8)? as u32;
+    let spec = SsdSpec::for_gen(gen);
+    let fabric = Fabric::default();
+    let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
+    println!(
+        "Shared-expander contention — {} × {} rand-read, scheme {}\n",
+        devices,
+        spec.name,
+        scheme.label()
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>8} {:>10}",
+        "devices", "KIOPS/dev", "aggregate", "util", "access"
+    );
+    for p in contention::sweep(&spec, scheme, &fabric, &job, devices, 80e9)? {
+        println!(
+            "{:>8} {:>14.0} {:>14.0} {:>7.1}% {:>9}ns",
+            p.devices,
+            p.per_device_kiops,
+            p.aggregate_kiops,
+            p.utilisation * 100.0,
+            p.access_ns
+        );
+    }
+    Ok(())
+}
+
+fn cmd_locality(args: &Args) -> Result<()> {
+    let gen = config::parse_gen(args.flag_or("gen", "gen4"))?;
+    let spec = SsdSpec::for_gen(gen);
+    let fabric = Fabric::default();
+    let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
+    println!(
+        "Locality ablation — DFTL CMT hit-ratio sweep on {} rand-read\n",
+        spec.name
+    );
+    println!("{:>6} {:>12} {:>14}", "hit", "DFTL KIOPS", "vs Ideal");
+    let ideal =
+        Controller::new(spec.clone(), lmb::ssd::IndexPlacement::Ideal, fabric.clone())
+            .throughput_iops(&job)
+            / 1e3;
+    for pct in (0..=100).step_by(10) {
+        let mut ctl =
+            Controller::new(spec.clone(), lmb::ssd::IndexPlacement::Dftl, fabric.clone());
+        ctl.dftl_hit_ratio = pct as f64 / 100.0;
+        let kiops = ctl.throughput_iops(&job) / 1e3;
+        println!("{:>5}% {:>12.0} {:>13.1}x", pct, kiops, ideal / kiops);
+    }
+    Ok(())
+}
+
+fn cmd_gpu(args: &Args) -> Result<()> {
+    let ws = args.flag_u64("working-set", 64 * GIB)?;
+    let gpu_spec = gpu::GpuSpec::default();
+    let ssd = SsdSpec::gen5();
+    let fabric = Fabric::default();
+    println!("GPU memory extension (§2.2) — working set {} GiB\n", ws / GIB);
+    for (name, w) in [
+        ("dense stream", gpu::TensorWorkload::dense_stream(ws)),
+        ("sparse gather", gpu::TensorWorkload::sparse_gather(ws)),
+    ] {
+        println!("{name}:");
+        for r in gpu::compare_tiers(&gpu_spec, &w, &ssd, &fabric) {
+            println!(
+                "  {:<10} spill {:>8.2} GB/s  effective {:>8.2} GB/s  latency {}",
+                r.tier.label(),
+                r.spill_bw_bps / 1e9,
+                r.effective_bw_bps / 1e9,
+                r.spill_latency
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    for spec in [SsdSpec::gen4(), SsdSpec::gen5()] {
+        println!(
+            "{}: {} lanes x {:?}, {:.2} TB, L2P table {:.2} GB, \
+             NAND {}ch x {}die, tR {}, tProg {}, WA {:.2}",
+            spec.name,
+            spec.lanes,
+            spec.gen,
+            spec.capacity as f64 / 1e12,
+            spec.l2p_bytes() as f64 / 1e9,
+            spec.nand.channels,
+            spec.nand.dies_per_channel,
+            spec.nand.t_read,
+            spec.nand.t_prog,
+            spec.write_amplification(),
+        );
+    }
+    Ok(())
+}

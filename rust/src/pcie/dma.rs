@@ -1,0 +1,49 @@
+//! DMA engine: endpoint-initiated data movement through the IOMMU and
+//! host bridge, with functional data transfer into the expander when the
+//! target resolves to an HDM window.
+//!
+//! This is the mechanism by which an SSD reaches its LMB-resident L2P
+//! table: the controller issues MemRd/MemWr TLPs against the bus address
+//! the LMB module returned from `lmb_pcie_alloc` (§3.3, Figure 5).
+
+use crate::cxl::types::{Bdf, BusAddr};
+use crate::sim::time::SimTime;
+
+/// Outcome of one DMA transaction (latency + bytes moved).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaResult {
+    pub latency: SimTime,
+    pub bytes: u64,
+}
+
+/// A descriptor the device hands to its DMA engine.
+#[derive(Debug, Clone, Copy)]
+pub struct DmaDescriptor {
+    pub device: Bdf,
+    pub bus_addr: BusAddr,
+    pub len: u32,
+    pub write: bool,
+}
+
+impl DmaDescriptor {
+    pub fn read(device: Bdf, bus_addr: BusAddr, len: u32) -> Self {
+        DmaDescriptor { device, bus_addr, len, write: false }
+    }
+
+    pub fn write(device: Bdf, bus_addr: BusAddr, len: u32) -> Self {
+        DmaDescriptor { device, bus_addr, len, write: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_builders() {
+        let d = DmaDescriptor::read(Bdf::new(1, 0, 0), BusAddr(0x1000), 64);
+        assert!(!d.write);
+        let d = DmaDescriptor::write(Bdf::new(1, 0, 0), BusAddr(0x1000), 64);
+        assert!(d.write);
+    }
+}

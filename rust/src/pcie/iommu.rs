@@ -1,0 +1,269 @@
+//! IOMMU: per-device DMA isolation (§3.3).
+//!
+//! "For PCIe devices, it is common to use IOMMU to isolate the range of
+//! memory that can be accessed by the device. … When memory is requested
+//! by a PCIe device, the kernel module creates the IOMMU page tables for
+//! the allocated memory."
+//!
+//! Each device (BDF) gets a domain holding IOVA→HPA mappings at 4 KiB
+//! granularity, stored as a range map (contiguous multi-page mappings are
+//! one entry). Translation faults are first-class errors — the isolation
+//! property the paper's access-control section relies on.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cxl::types::{Bdf, BusAddr, Hpa, PAGE_SIZE};
+use crate::error::{Error, Result};
+
+/// Mapping permissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IommuPerm {
+    Read,
+    ReadWrite,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Mapping {
+    iova: u64,
+    hpa: u64,
+    len: u64,
+    perm: IommuPerm,
+}
+
+/// Per-device translation domain.
+#[derive(Debug, Default)]
+pub struct Domain {
+    /// iova base → mapping (ranges are non-overlapping).
+    maps: BTreeMap<u64, Mapping>,
+    /// simple bump allocator for fresh IOVA space
+    next_iova: u64,
+}
+
+impl Domain {
+    fn new() -> Self {
+        // Start device address space at 4 GiB to keep low addresses
+        // obviously invalid (catches zero-initialised handles).
+        Domain { maps: BTreeMap::new(), next_iova: 1 << 32 }
+    }
+
+    fn find(&self, iova: u64, len: u64) -> Option<&Mapping> {
+        self.maps
+            .range(..=iova)
+            .next_back()
+            .map(|(_, m)| m)
+            .filter(|m| iova >= m.iova && iova + len <= m.iova + m.len)
+    }
+
+    fn overlaps(&self, iova: u64, len: u64) -> bool {
+        if let Some((_, m)) = self.maps.range(..iova + len).next_back() {
+            if m.iova + m.len > iova {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// The system IOMMU: a map of BDF → domain.
+#[derive(Debug, Default)]
+pub struct Iommu {
+    domains: HashMap<Bdf, Domain>,
+    /// Translation-fault counter (observability; §3.3 isolation events).
+    pub faults: u64,
+}
+
+impl Iommu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create (or get) the domain for a device.
+    pub fn attach(&mut self, bdf: Bdf) {
+        self.domains.entry(bdf).or_insert_with(Domain::new);
+    }
+
+    /// Tear down a device's domain entirely.
+    pub fn detach(&mut self, bdf: Bdf) {
+        self.domains.remove(&bdf);
+    }
+
+    pub fn is_attached(&self, bdf: Bdf) -> bool {
+        self.domains.contains_key(&bdf)
+    }
+
+    /// Map `len` bytes of HPA into the device's IOVA space; returns the
+    /// allocated bus address. `len` and `hpa` must be page-aligned.
+    pub fn map(&mut self, bdf: Bdf, hpa: Hpa, len: u64, perm: IommuPerm) -> Result<BusAddr> {
+        if !hpa.is_aligned(PAGE_SIZE) || len == 0 || len % PAGE_SIZE != 0 {
+            return Err(Error::Config(format!(
+                "iommu map must be page-aligned (hpa={hpa:?} len={len:#x})"
+            )));
+        }
+        let dom = self
+            .domains
+            .get_mut(&bdf)
+            .ok_or_else(|| Error::Device(format!("device {bdf} not attached to IOMMU")))?;
+        let iova = dom.next_iova;
+        debug_assert!(!dom.overlaps(iova, len));
+        dom.next_iova += len.next_multiple_of(PAGE_SIZE) + PAGE_SIZE; // guard page
+        dom.maps.insert(iova, Mapping { iova, hpa: hpa.0, len, perm });
+        Ok(BusAddr(iova))
+    }
+
+    /// Map at a *fixed* IOVA (used when sharing an existing region into
+    /// another device at a stable address).
+    pub fn map_fixed(
+        &mut self,
+        bdf: Bdf,
+        iova: BusAddr,
+        hpa: Hpa,
+        len: u64,
+        perm: IommuPerm,
+    ) -> Result<()> {
+        let dom = self
+            .domains
+            .get_mut(&bdf)
+            .ok_or_else(|| Error::Device(format!("device {bdf} not attached to IOMMU")))?;
+        if dom.overlaps(iova.0, len) {
+            return Err(Error::Config(format!("iova {iova:?} already mapped")));
+        }
+        dom.maps.insert(iova.0, Mapping { iova: iova.0, hpa: hpa.0, len, perm });
+        Ok(())
+    }
+
+    /// Remove the mapping starting exactly at `iova`.
+    pub fn unmap(&mut self, bdf: Bdf, iova: BusAddr) -> Result<()> {
+        let dom = self
+            .domains
+            .get_mut(&bdf)
+            .ok_or_else(|| Error::Device(format!("device {bdf} not attached to IOMMU")))?;
+        dom.maps
+            .remove(&iova.0)
+            .map(|_| ())
+            .ok_or_else(|| Error::Config(format!("no mapping at {iova:?}")))
+    }
+
+    /// Translate a device access; returns the HPA or an IOMMU fault.
+    pub fn translate(&mut self, bdf: Bdf, iova: BusAddr, len: u64, write: bool) -> Result<Hpa> {
+        let fault = |s: &str, faults: &mut u64| {
+            *faults += 1;
+            Err(Error::IommuFault {
+                bdf: bdf.to_string(),
+                hpa: Hpa(iova.0),
+                reason: s.to_string(),
+            })
+        };
+        let Some(dom) = self.domains.get(&bdf) else {
+            return fault("no domain", &mut self.faults);
+        };
+        match dom.find(iova.0, len.max(1)) {
+            Some(m) => {
+                if write && m.perm != IommuPerm::ReadWrite {
+                    return fault("write to read-only mapping", &mut self.faults);
+                }
+                Ok(Hpa(m.hpa + (iova.0 - m.iova)))
+            }
+            None => fault("unmapped iova", &mut self.faults),
+        }
+    }
+
+    /// Number of live mappings for a device.
+    pub fn mapping_count(&self, bdf: Bdf) -> usize {
+        self.domains.get(&bdf).map_or(0, |d| d.maps.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Bdf {
+        Bdf::new(2, 0, 0)
+    }
+
+    fn iommu_with_dev() -> Iommu {
+        let mut i = Iommu::new();
+        i.attach(dev());
+        i
+    }
+
+    #[test]
+    fn map_translate_roundtrip_with_offset() {
+        let mut i = iommu_with_dev();
+        let iova = i.map(dev(), Hpa(0x10_0000), 2 * PAGE_SIZE, IommuPerm::ReadWrite).unwrap();
+        let hpa = i.translate(dev(), BusAddr(iova.0 + 0x1234), 8, true).unwrap();
+        assert_eq!(hpa, Hpa(0x10_1234));
+    }
+
+    #[test]
+    fn unmapped_access_faults_and_counts() {
+        let mut i = iommu_with_dev();
+        assert!(matches!(
+            i.translate(dev(), BusAddr(0xdead_b000), 8, false),
+            Err(Error::IommuFault { .. })
+        ));
+        assert_eq!(i.faults, 1);
+    }
+
+    #[test]
+    fn cross_boundary_access_faults() {
+        let mut i = iommu_with_dev();
+        let iova = i.map(dev(), Hpa(0x10_0000), PAGE_SIZE, IommuPerm::ReadWrite).unwrap();
+        // last byte ok, crossing the end faults
+        assert!(i.translate(dev(), BusAddr(iova.0 + PAGE_SIZE - 1), 1, false).is_ok());
+        assert!(i.translate(dev(), BusAddr(iova.0 + PAGE_SIZE - 1), 2, false).is_err());
+    }
+
+    #[test]
+    fn write_permission_enforced() {
+        let mut i = iommu_with_dev();
+        let iova = i.map(dev(), Hpa(0x20_0000), PAGE_SIZE, IommuPerm::Read).unwrap();
+        assert!(i.translate(dev(), iova, 8, false).is_ok());
+        assert!(i.translate(dev(), iova, 8, true).is_err());
+    }
+
+    #[test]
+    fn unmap_revokes() {
+        let mut i = iommu_with_dev();
+        let iova = i.map(dev(), Hpa(0x30_0000), PAGE_SIZE, IommuPerm::ReadWrite).unwrap();
+        i.unmap(dev(), iova).unwrap();
+        assert!(i.translate(dev(), iova, 8, false).is_err());
+        assert_eq!(i.mapping_count(dev()), 0);
+    }
+
+    #[test]
+    fn domains_are_isolated() {
+        let mut i = iommu_with_dev();
+        let other = Bdf::new(3, 0, 0);
+        i.attach(other);
+        let iova = i.map(dev(), Hpa(0x40_0000), PAGE_SIZE, IommuPerm::ReadWrite).unwrap();
+        // same IOVA in the other device's domain must fault
+        assert!(i.translate(other, iova, 8, false).is_err());
+    }
+
+    #[test]
+    fn unaligned_map_rejected() {
+        let mut i = iommu_with_dev();
+        assert!(i.map(dev(), Hpa(0x123), PAGE_SIZE, IommuPerm::ReadWrite).is_err());
+        assert!(i.map(dev(), Hpa(0x1000), 100, IommuPerm::ReadWrite).is_err());
+    }
+
+    #[test]
+    fn map_fixed_rejects_overlap() {
+        let mut i = iommu_with_dev();
+        i.map_fixed(dev(), BusAddr(0x5000_0000), Hpa(0x50_0000), PAGE_SIZE, IommuPerm::Read)
+            .unwrap();
+        assert!(i
+            .map_fixed(dev(), BusAddr(0x5000_0000), Hpa(0x60_0000), PAGE_SIZE, IommuPerm::Read)
+            .is_err());
+    }
+
+    #[test]
+    fn detach_removes_domain() {
+        let mut i = iommu_with_dev();
+        let iova = i.map(dev(), Hpa(0x10_0000), PAGE_SIZE, IommuPerm::ReadWrite).unwrap();
+        i.detach(dev());
+        assert!(!i.is_attached(dev()));
+        assert!(i.translate(dev(), iova, 8, false).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PCIe substrate: links, TLPs, the root complex bridge that converts
+//! device TLPs into CXL.mem requests (§3.2 "Data path"), DMA, and the
+//! IOMMU that isolates PCIe devices (§3.3).
+
+pub mod dma;
+pub mod iommu;
+pub mod link;
+pub mod root_complex;
+pub mod tlp;
+
+pub use iommu::Iommu;
+pub use link::PcieGen;
+pub use root_complex::RootComplex;
+pub use tlp::{Tlp, TlpKind};

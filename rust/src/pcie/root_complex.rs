@@ -1,0 +1,235 @@
+//! Root complex: the host-side bridge of the LMB-PCIe data path (§3.2).
+//!
+//! A PCIe device cannot speak CXL. Its TLPs target bus addresses that the
+//! IOMMU translates to HPAs; when an HPA resolves to an HDM window, the
+//! root complex converts the access into a CXL.mem `MemRd`/`MemWr` with
+//! the *uncached* attribute (PCIe devices do not participate in CXL
+//! coherency) and forwards it into the fabric. Accesses to plain host
+//! DRAM stay local.
+//!
+//! The functional path moves real bytes: DMA writes land in the expander
+//! backing store, DMA reads return them.
+
+use crate::cxl::expander::Expander;
+use crate::cxl::packet::{CxlMemReq, MemAddr};
+use crate::cxl::switch::PbrSwitch;
+use crate::cxl::types::{Requester, Spid};
+use crate::error::Result;
+use crate::host::AddressSpace;
+use crate::pcie::dma::{DmaDescriptor, DmaResult};
+use crate::pcie::iommu::Iommu;
+use crate::pcie::link::PcieLink;
+use crate::pcie::tlp::Tlp;
+use crate::sim::time::SimTime;
+
+/// Root-complex configuration: the bridging overhead the LMB-PCIe path
+/// pays on top of the raw PCIe and CXL hops.
+#[derive(Debug, Clone, Copy)]
+pub struct RootComplexConfig {
+    /// TLP → CXL.mem conversion cost (see `cxl::fabric` derivation).
+    pub tlp_conversion: SimTime,
+    /// Host DRAM access latency (for non-HDM targets).
+    pub host_dram: SimTime,
+    /// The host root port's SPID on the fabric.
+    pub host_spid: Spid,
+}
+
+impl Default for RootComplexConfig {
+    fn default() -> Self {
+        RootComplexConfig {
+            tlp_conversion: SimTime::ns(220),
+            host_dram: SimTime::ns(100),
+            host_spid: Spid(0),
+        }
+    }
+}
+
+/// The root complex ties IOMMU, host address space, switch and expander
+/// together for PCIe-originated traffic.
+#[derive(Debug)]
+pub struct RootComplex {
+    pub cfg: RootComplexConfig,
+}
+
+impl RootComplex {
+    pub fn new(cfg: RootComplexConfig) -> Self {
+        RootComplex { cfg }
+    }
+
+    /// Service a device DMA transaction end-to-end:
+    /// IOMMU translate → address-space resolve → (host DRAM | TLP→CXL.mem
+    /// conversion + fabric + HDM media). Returns total latency.
+    ///
+    /// `data`: for writes, the bytes to store; for reads, the buffer to
+    /// fill (lengths must equal `desc.len`).
+    pub fn dma(
+        &self,
+        desc: DmaDescriptor,
+        link: &PcieLink,
+        iommu: &mut Iommu,
+        space: &AddressSpace,
+        switch: &PbrSwitch,
+        expander: &mut Expander,
+        data: &mut [u8],
+    ) -> Result<DmaResult> {
+        assert_eq!(data.len(), desc.len as usize, "buffer/len mismatch");
+        let hpa = iommu.translate(desc.device, desc.bus_addr, desc.len as u64, desc.write)?;
+        // PCIe wire cost: payload (+ header overhead) serialization.
+        let tlp = if desc.write {
+            Tlp::mem_write(desc.device, desc.bus_addr, desc.len)
+        } else {
+            Tlp::mem_read(desc.device, desc.bus_addr, desc.len)
+        };
+        let wire_bytes = desc.len as u64 + tlp.header_bytes() as u64;
+        let mut latency = link.serialize(wire_bytes);
+
+        match space.resolve(hpa)? {
+            crate::host::Target::HostDram { .. } => {
+                latency += self.cfg.host_dram;
+                // Host DRAM is modeled timing-only; LMB data lives in HDM.
+            }
+            crate::host::Target::Hdm { dpa } => {
+                latency += self.cfg.tlp_conversion;
+                let req = if desc.write {
+                    CxlMemReq::write(
+                        MemAddr::Hpa(hpa),
+                        desc.len,
+                        Requester::Host(self.cfg.host_spid),
+                    )
+                    .uncached()
+                } else {
+                    CxlMemReq::read(
+                        MemAddr::Hpa(hpa),
+                        desc.len,
+                        Requester::Host(self.cfg.host_spid),
+                    )
+                    .uncached()
+                };
+                latency += switch.route_to_gfd(&req)?;
+                latency += expander.access(&req)?;
+                if desc.write {
+                    expander.write_dpa(dpa, data)?;
+                } else {
+                    expander.read_dpa(dpa, data)?;
+                }
+            }
+        }
+        Ok(DmaResult { latency, bytes: desc.len as u64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::ExpanderConfig;
+    use crate::cxl::types::{Bdf, Dpa, Hpa, Range, GIB, PAGE_SIZE};
+    use crate::host::AddressSpace;
+    use crate::pcie::iommu::IommuPerm;
+    use crate::pcie::link::PcieGen;
+
+    struct Rig {
+        rc: RootComplex,
+        link: PcieLink,
+        iommu: Iommu,
+        space: AddressSpace,
+        switch: PbrSwitch,
+        expander: Expander,
+        dev: Bdf,
+        bus: crate::cxl::types::BusAddr,
+    }
+
+    fn rig() -> Rig {
+        let mut switch = PbrSwitch::new(8);
+        let (host_spid, _) = switch.bind_host().unwrap();
+        switch.attach_gfd().unwrap();
+        let mut expander =
+            Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() });
+        // HDM window at HPA 4 GiB covering the whole expander
+        let hdm_base = 4 * GIB;
+        expander.add_decoder(Range::new(hdm_base, GIB), Dpa(0)).unwrap();
+        let mut space = AddressSpace::new(2 * GIB); // 2 GiB host DRAM
+        space.add_hdm_window(Range::new(hdm_base, GIB), Dpa(0)).unwrap();
+        let mut iommu = Iommu::new();
+        let dev = Bdf::new(1, 0, 0);
+        iommu.attach(dev);
+        let bus = iommu
+            .map(dev, Hpa(hdm_base + 0x10000), 16 * PAGE_SIZE, IommuPerm::ReadWrite)
+            .unwrap();
+        let rc = RootComplex::new(RootComplexConfig { host_spid, ..Default::default() });
+        Rig { rc, link: PcieLink::new(PcieGen::Gen5, 4), iommu, space, switch, expander, dev, bus }
+    }
+
+    #[test]
+    fn dma_write_then_read_roundtrips_through_hdm() {
+        let mut r = rig();
+        let mut wbuf = vec![0x5au8; 4096];
+        let res = r
+            .rc
+            .dma(
+                DmaDescriptor::write(r.dev, r.bus, 4096),
+                &r.link,
+                &mut r.iommu,
+                &r.space,
+                &r.switch,
+                &mut r.expander,
+                &mut wbuf,
+            )
+            .unwrap();
+        assert!(res.latency > SimTime::ns(400), "write latency = {}", res.latency);
+        let mut rbuf = vec![0u8; 4096];
+        r.rc.dma(
+            DmaDescriptor::read(r.dev, r.bus, 4096),
+            &r.link,
+            &mut r.iommu,
+            &r.space,
+            &r.switch,
+            &mut r.expander,
+            &mut rbuf,
+        )
+        .unwrap();
+        assert_eq!(rbuf, wbuf);
+    }
+
+    #[test]
+    fn small_access_latency_near_fig2_constant() {
+        // A 64 B access over the LMB-PCIe Gen5 path should be close to
+        // the paper's 1190 ns injection constant (plus a few ns of wire).
+        let mut r = rig();
+        let mut buf = vec![0u8; 64];
+        let res = r
+            .rc
+            .dma(
+                DmaDescriptor::read(r.dev, r.bus, 64),
+                &r.link,
+                &mut r.iommu,
+                &r.space,
+                &r.switch,
+                &mut r.expander,
+                &mut buf,
+            )
+            .unwrap();
+        let ns = res.latency.as_ns();
+        // conversion(220) + crossing(120) + media(70) + wire(~6) = ~416;
+        // the remaining 780-ns "PCIe dev→host" leg is charged by the SSD
+        // controller model as the device-side request path — asserted in
+        // the fabric tests. Here we check the bridge-side sum.
+        assert!((400..450).contains(&ns), "bridge-side latency = {ns} ns");
+    }
+
+    #[test]
+    fn unmapped_dma_faults_without_touching_hdm() {
+        let mut r = rig();
+        let mut buf = vec![0u8; 64];
+        let res = r.rc.dma(
+            DmaDescriptor::read(r.dev, crate::cxl::types::BusAddr(0xbad0_0000), 64),
+            &r.link,
+            &mut r.iommu,
+            &r.space,
+            &r.switch,
+            &mut r.expander,
+            &mut buf,
+        );
+        assert!(res.is_err());
+        assert_eq!(r.expander.served_ops, 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Transaction Layer Packets.
+//!
+//! Only the subset the LMB data path needs: memory reads/writes issued
+//! by endpoints (DMA toward host memory or HDM windows) and completions.
+//! §3.2: "The PCIe TLP is converted by the CPU into MemRd/MemWr commands
+//! in the CXL.mem protocol."
+
+use crate::cxl::types::{Bdf, BusAddr};
+
+/// TLP kinds we model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TlpKind {
+    /// Memory read request (non-posted).
+    MemRd,
+    /// Memory write request (posted).
+    MemWr,
+    /// Completion with data (for MemRd).
+    CplD,
+    /// Completion without data (errors, zero-length).
+    Cpl,
+}
+
+/// Maximum payload size we model per TLP (bytes). Typical data-center
+/// configurations run MPS=256; larger transfers split.
+pub const MAX_PAYLOAD: u32 = 256;
+
+/// A transaction-layer packet.
+#[derive(Debug, Clone, Copy)]
+pub struct Tlp {
+    pub kind: TlpKind,
+    pub requester: Bdf,
+    /// Device-visible address (an IOVA — translated by the IOMMU).
+    pub addr: BusAddr,
+    pub len: u32,
+}
+
+impl Tlp {
+    pub fn mem_read(requester: Bdf, addr: BusAddr, len: u32) -> Self {
+        Tlp { kind: TlpKind::MemRd, requester, addr, len }
+    }
+
+    pub fn mem_write(requester: Bdf, addr: BusAddr, len: u32) -> Self {
+        Tlp { kind: TlpKind::MemWr, requester, addr, len }
+    }
+
+    pub fn is_write(&self) -> bool {
+        self.kind == TlpKind::MemWr
+    }
+
+    /// Number of TLPs after MPS splitting.
+    pub fn segments(&self) -> u32 {
+        self.len.div_ceil(MAX_PAYLOAD).max(1)
+    }
+
+    /// Header overhead in bytes for this TLP train (3DW/4DW header + LCRC
+    /// per segment ≈ 24 B each).
+    pub fn header_bytes(&self) -> u32 {
+        self.segments() * 24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bdf() -> Bdf {
+        Bdf::new(1, 0, 0)
+    }
+
+    #[test]
+    fn splitting_by_mps() {
+        assert_eq!(Tlp::mem_write(bdf(), BusAddr(0), 64).segments(), 1);
+        assert_eq!(Tlp::mem_write(bdf(), BusAddr(0), 256).segments(), 1);
+        assert_eq!(Tlp::mem_write(bdf(), BusAddr(0), 257).segments(), 2);
+        assert_eq!(Tlp::mem_write(bdf(), BusAddr(0), 4096).segments(), 16);
+    }
+
+    #[test]
+    fn zero_length_still_one_segment() {
+        assert_eq!(Tlp::mem_read(bdf(), BusAddr(0), 0).segments(), 1);
+    }
+
+    #[test]
+    fn header_overhead_scales_with_segments() {
+        let t = Tlp::mem_write(bdf(), BusAddr(0), 4096);
+        assert_eq!(t.header_bytes(), 16 * 24);
+    }
+}

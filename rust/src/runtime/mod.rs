@@ -1,0 +1,187 @@
+//! Runtime: executes the AOT-compiled JAX/Pallas data plane from Rust.
+//!
+//! ## The model contract (shared with `python/compile/model.py`)
+//!
+//! One compiled module per device variant, batch size `N` (divisible by
+//! every stage width). Inputs, all `f32[N]` except `params`:
+//!
+//! | tensor     | meaning                                            |
+//! |------------|----------------------------------------------------|
+//! | `arrival`  | IO arrival times, ns, non-decreasing               |
+//! | `is_write` | 1.0 for writes                                     |
+//! | `hit`      | DFTL CMT hit mask (1.0 = hit); all-ones otherwise  |
+//! | `jitter`   | uniform [0,1) per-IO media jitter                  |
+//! | `params`   | `f32[12]` scalar pack, see [`ModelParams`]         |
+//!
+//! Output: `f32[2, N]` — row 0 completion times (ns), row 1 per-IO
+//! latency (completion − arrival).
+//!
+//! The computation: a Pallas kernel composes per-IO index/media service
+//! times; three chained *max-plus lag-C scans* resolve the controller
+//! pipeline (index stage width W, media width M, link width 1):
+//! `finish_i = max(arrival_i, finish_{i−C}) + s_i`.
+//!
+//! [`native::NativeModel`] implements the identical contract in pure
+//! Rust: it cross-checks the XLA path in integration tests and serves
+//! as a fallback when `artifacts/` has not been built.
+
+pub mod batch;
+pub mod native;
+pub mod pjrt;
+
+pub use batch::BatchBuilder;
+pub use native::NativeModel;
+pub use pjrt::{Artifacts, XlaModel};
+
+/// Scalar parameter pack (order must match model.py `PARAMS` doc).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelParams {
+    /// p0: firmware time per IO in the index stage, ns.
+    pub firmware_ns: f32,
+    /// p1: dependent index-memory accesses per read lookup (k).
+    pub index_accesses: f32,
+    /// p2: one index-memory access at the scheme's placement, ns.
+    pub index_access_ns: f32,
+    /// p3: onboard DRAM access (DFTL hit cost), ns.
+    pub dram_ns: f32,
+    /// p4: flash read (DFTL miss penalty), ns.
+    pub flash_read_ns: f32,
+    /// p5: expected flash ops per DFTL read miss.
+    pub dftl_ops_read: f32,
+    /// p6: expected flash ops per DFTL write miss.
+    pub dftl_ops_write: f32,
+    /// p7: media read service (tR), ns.
+    pub t_read_ns: f32,
+    /// p8: write-buffer ack, ns.
+    pub t_buf_ns: f32,
+    /// p9: link transfer per IO, ns.
+    pub xfer_ns: f32,
+    /// p10: 1.0 if the scheme is DFTL.
+    pub is_dftl: f32,
+    /// p11: media jitter amplitude (fraction of tR).
+    pub jitter_amp: f32,
+}
+
+impl ModelParams {
+    pub const LEN: usize = 12;
+
+    pub fn to_vec(self) -> Vec<f32> {
+        vec![
+            self.firmware_ns,
+            self.index_accesses,
+            self.index_access_ns,
+            self.dram_ns,
+            self.flash_read_ns,
+            self.dftl_ops_read,
+            self.dftl_ops_write,
+            self.t_read_ns,
+            self.t_buf_ns,
+            self.xfer_ns,
+            self.is_dftl,
+            self.jitter_amp,
+        ]
+    }
+}
+
+/// Stage widths of a compiled variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageWidths {
+    pub index: usize,
+    pub media: usize,
+    pub link: usize,
+}
+
+/// Batched model inputs.
+#[derive(Debug, Clone)]
+pub struct ModelInputs {
+    pub arrival: Vec<f32>,
+    pub is_write: Vec<f32>,
+    pub hit: Vec<f32>,
+    pub jitter: Vec<f32>,
+    pub params: ModelParams,
+}
+
+impl ModelInputs {
+    pub fn batch(&self) -> usize {
+        self.arrival.len()
+    }
+
+    /// Validate shape invariants before dispatch.
+    pub fn validate(&self, batch: usize, widths: StageWidths) -> crate::Result<()> {
+        let n = self.arrival.len();
+        if n != batch {
+            return Err(crate::Error::Runtime(format!(
+                "batch mismatch: inputs {n}, model {batch}"
+            )));
+        }
+        for (name, v) in
+            [("is_write", &self.is_write), ("hit", &self.hit), ("jitter", &self.jitter)]
+        {
+            if v.len() != n {
+                return Err(crate::Error::Runtime(format!("{name} length {} != {n}", v.len())));
+            }
+        }
+        for w in [widths.index, widths.media, widths.link] {
+            if w == 0 || n % w != 0 {
+                return Err(crate::Error::Runtime(format!(
+                    "stage width {w} must divide batch {n}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Batched model outputs.
+#[derive(Debug, Clone)]
+pub struct ModelOutputs {
+    pub completion: Vec<f32>,
+    pub latency: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ModelParams {
+        ModelParams {
+            firmware_ns: 440.0,
+            index_accesses: 1.0,
+            index_access_ns: 70.0,
+            dram_ns: 70.0,
+            flash_read_ns: 25_000.0,
+            dftl_ops_read: 1.0,
+            dftl_ops_write: 2.0,
+            t_read_ns: 73_000.0,
+            t_buf_ns: 9_000.0,
+            xfer_ns: 570.0,
+            is_dftl: 0.0,
+            jitter_amp: 0.1,
+        }
+    }
+
+    #[test]
+    fn params_pack_order() {
+        let v = params().to_vec();
+        assert_eq!(v.len(), ModelParams::LEN);
+        assert_eq!(v[0], 440.0);
+        assert_eq!(v[7], 73_000.0);
+        assert_eq!(v[11], 0.1);
+    }
+
+    #[test]
+    fn inputs_validation() {
+        let widths = StageWidths { index: 2, media: 128, link: 1 };
+        let inputs = ModelInputs {
+            arrival: vec![0.0; 256],
+            is_write: vec![0.0; 256],
+            hit: vec![1.0; 256],
+            jitter: vec![0.5; 256],
+            params: params(),
+        };
+        inputs.validate(256, widths).unwrap();
+        assert!(inputs.validate(512, widths).is_err());
+        let bad = StageWidths { index: 3, media: 128, link: 1 };
+        assert!(inputs.validate(256, bad).is_err(), "3 does not divide 256");
+    }
+}

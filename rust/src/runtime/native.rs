@@ -1,0 +1,252 @@
+//! Pure-Rust mirror of the XLA data-plane model.
+//!
+//! Bit-for-bit the same math as `python/compile/model.py` (modulo f32
+//! rounding): the Pallas `latency_compose` kernel's service composition
+//! and the three max-plus lag-C pipeline scans. Used to cross-check the
+//! AOT path in integration tests and as a fallback when artifacts are
+//! absent.
+
+use crate::runtime::{ModelInputs, ModelOutputs, StageWidths};
+
+/// Native implementation of the model contract.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeModel {
+    pub widths: StageWidths,
+}
+
+impl NativeModel {
+    pub fn new(widths: StageWidths) -> Self {
+        NativeModel { widths }
+    }
+
+    /// Per-IO (index_service, media_service) — the Pallas kernel's math.
+    fn compose(inputs: &ModelInputs, i: usize) -> (f32, f32) {
+        let p = &inputs.params;
+        let w = inputs.is_write[i];
+        let hit = inputs.hit[i];
+        let miss = 1.0 - hit;
+        // DFTL: synchronous translation fetch for reads AND writes
+        let dftl_ops = w * p.dftl_ops_write + (1.0 - w) * p.dftl_ops_read;
+        let idx_dftl = p.dram_ns + miss * dftl_ops * p.flash_read_ns;
+        // Ideal/LMB: k dependent accesses for reads; posted updates for writes
+        let idx_plain = (1.0 - w) * p.index_accesses * p.index_access_ns;
+        let idx = p.firmware_ns + p.is_dftl * idx_dftl + (1.0 - p.is_dftl) * idx_plain;
+        // media: reads pay tR (jittered), writes the buffer ack
+        let jit = 1.0 + p.jitter_amp * (2.0 * inputs.jitter[i] - 1.0);
+        let media = w * p.t_buf_ns + (1.0 - w) * p.t_read_ns * jit;
+        (idx, media)
+    }
+
+    /// max-plus lag-C scan: finish_i = max(arrival_i, finish_{i-C}) + s_i.
+    fn lag_scan(arrival: &[f32], service: &[f32], width: usize, out: &mut [f32]) {
+        let n = arrival.len();
+        debug_assert_eq!(n % width, 0);
+        for i in 0..n {
+            let prev = if i >= width { out[i - width] } else { f32::NEG_INFINITY };
+            out[i] = arrival[i].max(prev) + service[i];
+        }
+    }
+
+    /// Run the model (allocating variant; see [`Self::run_with_scratch`]
+    /// for the zero-allocation hot path).
+    pub fn run(&self, inputs: &ModelInputs) -> crate::Result<ModelOutputs> {
+        let mut scratch = NativeScratch::new(inputs.batch());
+        self.run_with_scratch(inputs, &mut scratch)?;
+        Ok(ModelOutputs {
+            completion: scratch.completion.clone(),
+            latency: scratch.latency.clone(),
+        })
+    }
+
+    /// Zero-allocation hot path: all intermediates live in `scratch`,
+    /// results land in `scratch.completion` / `scratch.latency`
+    /// (PERF iteration 3 — see EXPERIMENTS.md §Perf).
+    pub fn run_with_scratch(
+        &self,
+        inputs: &ModelInputs,
+        scratch: &mut NativeScratch,
+    ) -> crate::Result<()> {
+        inputs.validate(inputs.batch(), self.widths)?;
+        let n = inputs.batch();
+        scratch.resize(n);
+        for i in 0..n {
+            let (a, b) = Self::compose(inputs, i);
+            scratch.idx_service[i] = a;
+            scratch.media_service[i] = b;
+        }
+        scratch.xfer.fill(inputs.params.xfer_ns);
+        Self::lag_scan(&inputs.arrival, &scratch.idx_service, self.widths.index, &mut scratch.f1);
+        Self::lag_scan(&scratch.f1, &scratch.media_service, self.widths.media, &mut scratch.f2);
+        Self::lag_scan(&scratch.f2, &scratch.xfer, self.widths.link, &mut scratch.completion);
+        for i in 0..n {
+            scratch.latency[i] = scratch.completion[i] - inputs.arrival[i];
+        }
+        Ok(())
+    }
+}
+
+/// Reusable buffers for [`NativeModel::run_with_scratch`].
+#[derive(Debug, Clone)]
+pub struct NativeScratch {
+    idx_service: Vec<f32>,
+    media_service: Vec<f32>,
+    xfer: Vec<f32>,
+    f1: Vec<f32>,
+    f2: Vec<f32>,
+    pub completion: Vec<f32>,
+    pub latency: Vec<f32>,
+}
+
+impl NativeScratch {
+    pub fn new(n: usize) -> Self {
+        NativeScratch {
+            idx_service: vec![0.0; n],
+            media_service: vec![0.0; n],
+            xfer: vec![0.0; n],
+            f1: vec![0.0; n],
+            f2: vec![0.0; n],
+            completion: vec![0.0; n],
+            latency: vec![0.0; n],
+        }
+    }
+
+    fn resize(&mut self, n: usize) {
+        for v in [
+            &mut self.idx_service,
+            &mut self.media_service,
+            &mut self.xfer,
+            &mut self.f1,
+            &mut self.f2,
+            &mut self.completion,
+            &mut self.latency,
+        ] {
+            v.resize(n, 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelParams;
+
+    fn params() -> ModelParams {
+        ModelParams {
+            firmware_ns: 440.0,
+            index_accesses: 1.0,
+            index_access_ns: 70.0,
+            dram_ns: 70.0,
+            flash_read_ns: 25_000.0,
+            dftl_ops_read: 1.0,
+            dftl_ops_write: 2.0,
+            t_read_ns: 73_000.0,
+            t_buf_ns: 9_000.0,
+            xfer_ns: 570.0,
+            is_dftl: 0.0,
+            jitter_amp: 0.0,
+        }
+    }
+
+    fn inputs(n: usize, p: ModelParams) -> ModelInputs {
+        ModelInputs {
+            arrival: (0..n).map(|i| i as f32 * 100.0).collect(),
+            is_write: vec![0.0; n],
+            hit: vec![1.0; n],
+            jitter: vec![0.5; n],
+            params: p,
+        }
+    }
+
+    fn model() -> NativeModel {
+        NativeModel::new(StageWidths { index: 2, media: 128, link: 1 })
+    }
+
+    #[test]
+    fn single_io_latency_is_service_sum() {
+        let m = NativeModel::new(StageWidths { index: 1, media: 1, link: 1 });
+        let mut inp = inputs(1, params());
+        inp.arrival = vec![0.0];
+        let out = m.run(&inp).unwrap();
+        // idx (440+70) + media 73000 + xfer 570 = 74080
+        assert_eq!(out.latency[0], 74_080.0);
+    }
+
+    #[test]
+    fn unloaded_stream_latency_constant() {
+        // arrivals far apart → no queueing → every IO sees base latency
+        let m = model();
+        let mut inp = inputs(256, params());
+        inp.arrival = (0..256).map(|i| i as f32 * 1e6).collect();
+        let out = m.run(&inp).unwrap();
+        for l in &out.latency {
+            assert_eq!(*l, 74_080.0);
+        }
+    }
+
+    #[test]
+    fn saturating_stream_throughput_matches_bottleneck() {
+        // all arrive at t=0 → completions drain at the bottleneck rate.
+        // bottleneck: index width 2 / 510ns = 3.92M IOPS vs media
+        // 128/73µs = 1.75M vs link 1/570ns = 1.75M.
+        let m = model();
+        let n = 2048;
+        let mut inp = inputs(n, params());
+        inp.arrival = vec![0.0; n];
+        let out = m.run(&inp).unwrap();
+        let span_ns = out.completion.iter().cloned().fold(0f32, f32::max);
+        let iops = (n as f64) / (span_ns as f64 * 1e-9);
+        assert!(
+            (1.5e6..1.9e6).contains(&iops),
+            "drain rate {iops:.3e} should be ≈1.75M IOPS"
+        );
+    }
+
+    #[test]
+    fn writes_bypass_index_memory() {
+        let m = NativeModel::new(StageWidths { index: 1, media: 1, link: 1 });
+        let mut p = params();
+        p.index_access_ns = 1190.0; // LMB-PCIe gen5
+        let mut inp = inputs(1, p);
+        inp.is_write = vec![1.0];
+        let out = m.run(&inp).unwrap();
+        // write: f(440) + buf(9000) + xfer(570); no 1190 anywhere
+        assert_eq!(out.latency[0], 10_010.0);
+    }
+
+    #[test]
+    fn dftl_miss_pays_flash() {
+        let m = NativeModel::new(StageWidths { index: 1, media: 1, link: 1 });
+        let mut p = params();
+        p.is_dftl = 1.0;
+        let mut inp = inputs(2, p);
+        // keep arrivals small: integers < 2^24 are exact in f32
+        inp.arrival = vec![0.0, 200_000.0];
+        inp.hit = vec![1.0, 0.0];
+        let out = m.run(&inp).unwrap();
+        // hit: 440+70 + 73000 + 570; miss adds 25000
+        assert_eq!(out.latency[0], 74_080.0);
+        assert_eq!(out.latency[1], 99_080.0);
+    }
+
+    #[test]
+    fn media_jitter_spreads_latency() {
+        let m = model();
+        let mut p = params();
+        p.jitter_amp = 0.1;
+        let mut inp = inputs(256, p);
+        inp.arrival = (0..256).map(|i| i as f32 * 1e6).collect();
+        inp.jitter = (0..256).map(|i| (i as f32) / 256.0).collect();
+        let out = m.run(&inp).unwrap();
+        let min = out.latency.iter().cloned().fold(f32::MAX, f32::min);
+        let max = out.latency.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max - min > 10_000.0, "jitter range {min}..{max}");
+    }
+
+    #[test]
+    fn lag_scan_respects_width() {
+        // width 2: IOs 0,1 start immediately; IO 2 waits for IO 0.
+        let mut out = vec![0f32; 4];
+        NativeModel::lag_scan(&[0.0, 0.0, 0.0, 0.0], &[10.0, 10.0, 10.0, 10.0], 2, &mut out);
+        assert_eq!(out, vec![10.0, 10.0, 20.0, 20.0]);
+    }
+}

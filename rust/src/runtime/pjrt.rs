@@ -1,0 +1,183 @@
+//! PJRT loader/executor for the AOT artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the L2
+//! model (with the L1 Pallas kernels inlined) to **HLO text** — the
+//! interchange format this XLA build round-trips (serialized protos from
+//! jax ≥ 0.5 are rejected; see /opt/xla-example/README.md) — plus a
+//! manifest. This module loads the manifest, compiles each variant on
+//! the PJRT CPU client once, and executes batches from the simulation
+//! hot path. Python is never invoked here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::{ModelInputs, ModelOutputs, StageWidths};
+
+/// One compiled model variant.
+pub struct XlaModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub widths: StageWidths,
+    pub name: String,
+    /// Executions so far (hot-path observability).
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl std::fmt::Debug for XlaModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaModel")
+            .field("name", &self.name)
+            .field("batch", &self.batch)
+            .field("widths", &self.widths)
+            .finish()
+    }
+}
+
+impl XlaModel {
+    /// Compile an HLO-text file on a PJRT client.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        name: &str,
+        batch: usize,
+        widths: StageWidths,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(XlaModel {
+            exe,
+            batch,
+            widths,
+            name: name.to_string(),
+            dispatches: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute one batch.
+    pub fn run(&self, inputs: &ModelInputs) -> Result<ModelOutputs> {
+        inputs.validate(self.batch, self.widths)?;
+        let lits = [
+            xla::Literal::vec1(&inputs.arrival),
+            xla::Literal::vec1(&inputs.is_write),
+            xla::Literal::vec1(&inputs.hit),
+            xla::Literal::vec1(&inputs.jitter),
+            xla::Literal::vec1(&inputs.params.to_vec()),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // model.py lowers with return_tuple=True → 1-tuple of f32[2, N]
+        let stacked = result.to_tuple1()?;
+        let flat = stacked.to_vec::<f32>()?;
+        if flat.len() != 2 * self.batch {
+            return Err(Error::Runtime(format!(
+                "model '{}' returned {} values, expected {}",
+                self.name,
+                flat.len(),
+                2 * self.batch
+            )));
+        }
+        self.dispatches.set(self.dispatches.get() + 1);
+        let (completion, latency) = flat.split_at(self.batch);
+        Ok(ModelOutputs { completion: completion.to_vec(), latency: latency.to_vec() })
+    }
+}
+
+/// The artifacts directory: manifest + compiled variants.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    models: HashMap<String, XlaModel>,
+}
+
+impl std::fmt::Debug for Artifacts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Artifacts")
+            .field("dir", &self.dir)
+            .field("models", &self.models.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Artifacts {
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // honour $LMB_ARTIFACTS, else ./artifacts
+        std::env::var_os("LMB_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Whether a manifest exists (artifacts built).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.txt").is_file()
+    }
+
+    /// Load the manifest and compile every variant.
+    ///
+    /// Manifest line format (written by aot.py):
+    /// `name=<id> file=<relpath> batch=<N> widths=<W>,<M>,<L>`
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest.display()
+            ))
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kv: HashMap<&str, &str> = line
+                .split_whitespace()
+                .filter_map(|t| t.split_once('='))
+                .collect();
+            let (Some(name), Some(file), Some(batch), Some(widths)) =
+                (kv.get("name"), kv.get("file"), kv.get("batch"), kv.get("widths"))
+            else {
+                return Err(Error::Runtime(format!("bad manifest line: '{line}'")));
+            };
+            let batch: usize = batch
+                .parse()
+                .map_err(|_| Error::Runtime(format!("bad batch in '{line}'")))?;
+            let ws: Vec<usize> = widths
+                .split(',')
+                .map(|w| w.parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| Error::Runtime(format!("bad widths in '{line}'")))?;
+            if ws.len() != 3 {
+                return Err(Error::Runtime(format!("need 3 widths in '{line}'")));
+            }
+            let widths = StageWidths { index: ws[0], media: ws[1], link: ws[2] };
+            let model = XlaModel::load(&client, &dir.join(file), name, batch, widths)?;
+            models.insert(name.to_string(), model);
+        }
+        if models.is_empty() {
+            return Err(Error::Runtime("empty manifest".into()));
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), client, models })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&XlaModel> {
+        self.models.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}

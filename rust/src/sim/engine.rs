@@ -1,0 +1,247 @@
+//! Discrete-event engine.
+//!
+//! A minimal, deterministic event queue: events are `(time, payload)`
+//! pairs; ties break by insertion order so runs are reproducible. The
+//! engine is generic over the payload type — each subsystem defines its
+//! own event enum and runs its own dispatch loop, which keeps borrows
+//! local (no `dyn FnMut(&mut World)` contortions).
+//!
+//! Cancellation is supported through tombstones: `cancel(id)` marks the
+//! event dead and `pop()` skips it.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use crate::sim::time::SimTime;
+
+/// Handle for a scheduled event, usable with [`Engine::cancel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+#[derive(Debug)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+// BinaryHeap is a max-heap; order by Reverse((at, seq)) for earliest-first.
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        Reverse((self.at, self.seq)).cmp(&Reverse((other.at, other.seq)))
+    }
+}
+
+/// Deterministic discrete-event queue.
+#[derive(Debug)]
+pub struct Engine<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    cancelled: HashSet<u64>,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine {
+            heap: BinaryHeap::new(),
+            now: SimTime::ZERO,
+            seq: 0,
+            cancelled: HashSet::new(),
+            processed: 0,
+        }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total number of events dispatched so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of pending (non-cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.heap.len() - self.cancelled.len()
+    }
+
+    /// Schedule `payload` at absolute time `at`. Scheduling in the past
+    /// (before `now`) is clamped to `now` — this models "immediate"
+    /// events without violating causality.
+    pub fn schedule_at(&mut self, at: SimTime, payload: E) -> EventId {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, payload });
+        EventId(seq)
+    }
+
+    /// Schedule `payload` after a delay relative to `now`.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: E) -> EventId {
+        self.schedule_at(self.now + delay, payload)
+    }
+
+    /// Cancel a scheduled event. Returns true if it had not yet fired.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id.0 >= self.seq {
+            return false;
+        }
+        self.cancelled.insert(id.0)
+    }
+
+    /// Pop the next live event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        while let Some(ev) = self.heap.pop() {
+            if self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            debug_assert!(ev.at >= self.now, "event queue went backwards");
+            self.now = ev.at;
+            self.processed += 1;
+            return Some((ev.at, ev.payload));
+        }
+        None
+    }
+
+    /// Time of the next live event without popping it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        // Drop leading tombstones so peek is O(k) amortised.
+        while let Some(ev) = self.heap.peek() {
+            if self.cancelled.contains(&ev.seq) {
+                let seq = ev.seq;
+                self.heap.pop();
+                self.cancelled.remove(&seq);
+            } else {
+                return Some(ev.at);
+            }
+        }
+        None
+    }
+
+    /// Run until the queue is empty or `until` is reached, dispatching
+    /// each event to `f`. `f` may schedule further events.
+    ///
+    /// On return the clock sits at the later of the last dispatched
+    /// event and `until` — except for the run-to-exhaustion idiom
+    /// (`until == SimTime::MAX`), where it stays at the last event.
+    pub fn run_until<F: FnMut(&mut Self, SimTime, E)>(&mut self, until: SimTime, mut f: F) {
+        loop {
+            match self.peek_time() {
+                Some(t) if t <= until => {
+                    let (at, ev) = self.pop().expect("peeked event vanished");
+                    f(self, at, ev);
+                }
+                _ => break,
+            }
+        }
+        if until != SimTime::MAX {
+            self.now = self.now.max(until);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        A,
+        B,
+        Tick(u32),
+    }
+
+    #[test]
+    fn fifo_order_within_same_time() {
+        let mut e = Engine::new();
+        e.schedule_at(SimTime::ns(10), Ev::A);
+        e.schedule_at(SimTime::ns(10), Ev::B);
+        assert_eq!(e.pop().unwrap().1, Ev::A);
+        assert_eq!(e.pop().unwrap().1, Ev::B);
+    }
+
+    #[test]
+    fn time_order() {
+        let mut e = Engine::new();
+        e.schedule_at(SimTime::ns(50), Ev::B);
+        e.schedule_at(SimTime::ns(10), Ev::A);
+        let (t1, x1) = e.pop().unwrap();
+        let (t2, x2) = e.pop().unwrap();
+        assert_eq!((t1, x1), (SimTime::ns(10), Ev::A));
+        assert_eq!((t2, x2), (SimTime::ns(50), Ev::B));
+        assert_eq!(e.now(), SimTime::ns(50));
+    }
+
+    #[test]
+    fn cancel_skips() {
+        let mut e = Engine::new();
+        let id = e.schedule_at(SimTime::ns(10), Ev::A);
+        e.schedule_at(SimTime::ns(20), Ev::B);
+        assert!(e.cancel(id));
+        assert!(!e.cancel(id), "double-cancel returns false");
+        assert_eq!(e.pop().unwrap().1, Ev::B);
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut e = Engine::new();
+        e.schedule_at(SimTime::ns(100), Ev::A);
+        e.pop();
+        e.schedule_at(SimTime::ns(10), Ev::B); // in the past
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, SimTime::ns(100));
+    }
+
+    #[test]
+    fn run_until_dispatches_and_respects_bound() {
+        let mut e = Engine::new();
+        for i in 0..10 {
+            e.schedule_at(SimTime::ns(i * 10), Ev::Tick(i as u32));
+        }
+        let mut seen = vec![];
+        e.run_until(SimTime::ns(45), |_, _, ev| {
+            if let Ev::Tick(i) = ev {
+                seen.push(i);
+            }
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(e.now(), SimTime::ns(45));
+        assert_eq!(e.pending(), 5);
+    }
+
+    #[test]
+    fn cascading_events() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(SimTime::ns(0), 0);
+        let mut count = 0;
+        e.run_until(SimTime::us(1), |eng, _, depth| {
+            count += 1;
+            if depth < 5 {
+                eng.schedule_in(SimTime::ns(7), depth + 1);
+            }
+        });
+        assert_eq!(count, 6);
+        assert_eq!(e.processed(), 6);
+    }
+}

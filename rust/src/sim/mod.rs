@@ -1,0 +1,24 @@
+//! Discrete-event simulation core.
+//!
+//! The LMB reproduction is a *hybrid* simulator:
+//!
+//! * control plane (allocation, fabric management, GC, page faults,
+//!   failure injection) runs on an exact discrete-event engine
+//!   ([`engine::Engine`]) with nanosecond resolution;
+//! * data plane (per-IO latency/throughput of millions of IOs) runs on a
+//!   vectorised batch model (see [`crate::runtime`]) whose numeric inner
+//!   loop is the AOT-compiled JAX/Pallas program.
+//!
+//! Everything is deterministic: a seeded [`rng::Pcg64`] drives all
+//! randomness, so every experiment in EXPERIMENTS.md is reproducible
+//! bit-for-bit.
+
+pub mod engine;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use engine::{Engine, EventId};
+pub use rng::Pcg64;
+pub use stats::{LatencyHistogram, Throughput};
+pub use time::SimTime;

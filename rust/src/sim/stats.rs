@@ -1,0 +1,293 @@
+//! Measurement primitives: latency histograms and throughput meters.
+//!
+//! The paper reports IOPS/bandwidth bars (Figure 6) and per-IO latencies
+//! (Table 3). We use an HdrHistogram-style log-linear bucketing scheme
+//! (3 significant decimal digits) so p50/p99/p999 are accurate across the
+//! full 25 ns .. 25 ms range the simulation produces without storing
+//! every sample.
+
+use crate::sim::time::SimTime;
+
+/// Log-linear latency histogram with ~0.1% relative error.
+///
+/// Buckets: values are grouped by (bucket = floor(log2(v / SUB)),
+/// sub-bucket = linear within the bucket), with `SUB = 2048` sub-buckets
+/// giving 3 significant digits.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+const SUB_BITS: u32 = 11; // 2048 sub-buckets per power of two
+const SUB: u64 = 1 << SUB_BITS;
+const BUCKETS: usize = 44; // covers up to ~2048 * 2^43 ns ≈ 208 days
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS * SUB as usize],
+            total: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    #[inline]
+    fn index_of(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+        let bucket = (msb - SUB_BITS + 1) as usize;
+        let sub = (v >> (msb - SUB_BITS)) - SUB / 2 + SUB / 2; // top SUB_BITS+1 bits
+        let sub = (sub & (SUB - 1)) as usize;
+        (bucket * SUB as usize + sub).min(BUCKETS * SUB as usize - 1)
+    }
+
+    /// Lower edge of the bucket containing index `i` (inverse of index_of).
+    fn value_of(i: usize) -> u64 {
+        let bucket = i / SUB as usize;
+        let sub = (i % SUB as usize) as u64;
+        if bucket == 0 {
+            sub
+        } else {
+            let shift = bucket as u32 - 1;
+            (SUB + sub) << shift
+        }
+    }
+
+    /// Record one latency sample.
+    #[inline]
+    pub fn record(&mut self, t: SimTime) {
+        let v = t.as_ns();
+        self.counts[Self::index_of(v)] += 1;
+        self.total += 1;
+        self.sum_ns += v as u128;
+        self.min_ns = self.min_ns.min(v);
+        self.max_ns = self.max_ns.max(v);
+    }
+
+    /// Record `n` identical samples (used by the batch data plane).
+    #[inline]
+    pub fn record_n(&mut self, t: SimTime, n: u64) {
+        let v = t.as_ns();
+        self.counts[Self::index_of(v)] += n;
+        self.total += n;
+        self.sum_ns += v as u128 * n as u128;
+        self.min_ns = self.min_ns.min(v);
+        self.max_ns = self.max_ns.max(v);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> SimTime {
+        if self.total == 0 {
+            return SimTime::ZERO;
+        }
+        SimTime::ns((self.sum_ns / self.total as u128) as u64)
+    }
+
+    /// Minimum recorded sample (bucket-quantised).
+    pub fn min(&self) -> SimTime {
+        if self.total == 0 {
+            SimTime::ZERO
+        } else {
+            SimTime::ns(self.min_ns)
+        }
+    }
+
+    /// Maximum recorded sample (exact).
+    pub fn max(&self) -> SimTime {
+        SimTime::ns(self.max_ns)
+    }
+
+    /// Quantile in [0,1]; returns the lower edge of the containing bucket.
+    pub fn quantile(&self, q: f64) -> SimTime {
+        if self.total == 0 {
+            return SimTime::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return SimTime::ns(Self::value_of(i));
+            }
+        }
+        SimTime::ns(self.max_ns)
+    }
+
+    pub fn p50(&self) -> SimTime {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> SimTime {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> SimTime {
+        self.quantile(0.999)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} p999={} max={}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.p999(),
+            self.max()
+        )
+    }
+}
+
+/// Throughput meter: completed operations + bytes over a simulated span.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub ops: u64,
+    pub bytes: u64,
+    pub span: SimTime,
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `ops` completed operations moving `bytes` in total.
+    pub fn record(&mut self, ops: u64, bytes: u64) {
+        self.ops += ops;
+        self.bytes += bytes;
+    }
+
+    /// Set the simulated wall-clock span the counters cover.
+    pub fn set_span(&mut self, span: SimTime) {
+        self.span = span;
+    }
+
+    /// IOs per second.
+    pub fn iops(&self) -> f64 {
+        if self.span == SimTime::ZERO {
+            return 0.0;
+        }
+        self.ops as f64 / self.span.as_secs_f64()
+    }
+
+    /// Thousands of IOs per second (the unit Figure 6 uses).
+    pub fn kiops(&self) -> f64 {
+        self.iops() / 1e3
+    }
+
+    /// Bandwidth in GB/s (decimal, as SSD vendors quote).
+    pub fn gbps(&self) -> f64 {
+        if self.span == SimTime::ZERO {
+            return 0.0;
+        }
+        self.bytes as f64 / self.span.as_secs_f64() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_exact_small_values() {
+        let mut h = LatencyHistogram::new();
+        for v in [25u64, 70, 190, 780, 880, 1190] {
+            h.record(SimTime::ns(v));
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), SimTime::ns(25));
+        assert_eq!(h.max(), SimTime::ns(1190));
+        // values < 2048 land in exact buckets
+        assert_eq!(h.quantile(0.01), SimTime::ns(25));
+    }
+
+    #[test]
+    fn histogram_quantiles_within_relative_error() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100_000u64 {
+            h.record(SimTime::ns(i * 10)); // 10ns .. 1ms uniform
+        }
+        let p50 = h.p50().as_ns() as f64;
+        let p99 = h.p99().as_ns() as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.002, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.002, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_n(SimTime::us(10), 3);
+        h.record_n(SimTime::us(40), 1);
+        assert_eq!(h.mean(), SimTime::ns(17_500));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(SimTime::ns(100));
+        b.record(SimTime::ns(300));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean(), SimTime::ns(200));
+    }
+
+    #[test]
+    fn throughput_units_match_paper() {
+        // Table 3 Gen5: 2800 KIOPS 4K rand read; 14 GB/s 128K seq read.
+        let mut t = Throughput::new();
+        t.record(2_800_000, 2_800_000 * 4096);
+        t.set_span(SimTime::secs(1));
+        assert!((t.kiops() - 2800.0).abs() < 1e-6);
+        let mut s = Throughput::new();
+        s.record(106_812, 106_812 * 131_072); // ≈14 GB/s
+        s.set_span(SimTime::secs(1));
+        assert!((s.gbps() - 14.0).abs() < 0.01, "gbps={}", s.gbps());
+    }
+
+    #[test]
+    fn index_value_roundtrip_monotone() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 100, 2047, 2048, 4096, 10_000, 1 << 20, 1 << 33] {
+            let i = LatencyHistogram::index_of(v);
+            assert!(i >= last, "index must be monotone in value");
+            let edge = LatencyHistogram::value_of(i);
+            assert!(edge <= v, "edge {edge} must not exceed value {v}");
+            // relative quantisation error bounded by one sub-bucket
+            if v > 0 {
+                assert!((v - edge) as f64 / v as f64 <= 1.0 / 1024.0);
+            }
+            last = i;
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Simulation time: nanosecond-resolution, 64-bit, saturating.
+//!
+//! All latencies in the paper are quoted in ns (CXL port 25 ns, switch
+//! 70 ns, PCIe 780 ns) or µs (flash read 25 µs, device latency 56–67 µs),
+//! so a u64 of nanoseconds covers ~584 years of simulated time.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// A point in (or duration of) simulated time, in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// Construct from nanoseconds.
+    #[inline]
+    pub const fn ns(n: u64) -> Self {
+        SimTime(n)
+    }
+
+    /// Construct from microseconds.
+    #[inline]
+    pub const fn us(n: u64) -> Self {
+        SimTime(n * 1_000)
+    }
+
+    /// Construct from milliseconds.
+    #[inline]
+    pub const fn ms(n: u64) -> Self {
+        SimTime(n * 1_000_000)
+    }
+
+    /// Construct from seconds.
+    #[inline]
+    pub const fn secs(n: u64) -> Self {
+        SimTime(n * 1_000_000_000)
+    }
+
+    /// Value in nanoseconds.
+    #[inline]
+    pub const fn as_ns(self) -> u64 {
+        self.0
+    }
+
+    /// Value in (fractional) microseconds.
+    #[inline]
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    /// Value in (fractional) seconds.
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000_000.0
+    }
+
+    /// Saturating subtraction (durations never go negative).
+    #[inline]
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    /// max of two times.
+    #[inline]
+    pub fn max(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.max(rhs.0))
+    }
+
+    /// min of two times.
+    #[inline]
+    pub fn min(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.min(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl AddAssign for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 = self.0.saturating_add(rhs.0);
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl SubAssign for SimTime {
+    #[inline]
+    fn sub_assign(&mut self, rhs: SimTime) {
+        self.0 = self.0.saturating_sub(rhs.0);
+    }
+}
+
+impl Mul<u64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn mul(self, rhs: u64) -> SimTime {
+        SimTime(self.0.saturating_mul(rhs))
+    }
+}
+
+impl Div<u64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn div(self, rhs: u64) -> SimTime {
+        SimTime(self.0 / rhs)
+    }
+}
+
+impl Sum for SimTime {
+    fn sum<I: Iterator<Item = SimTime>>(iter: I) -> SimTime {
+        iter.fold(SimTime::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 1_000_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if ns >= 1_000_000 {
+            write!(f, "{:.3}ms", ns as f64 / 1e6)
+        } else if ns >= 1_000 {
+            write!(f, "{:.3}us", ns as f64 / 1e3)
+        } else {
+            write!(f, "{ns}ns")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_scale() {
+        assert_eq!(SimTime::us(25).as_ns(), 25_000);
+        assert_eq!(SimTime::ms(3).as_ns(), 3_000_000);
+        assert_eq!(SimTime::secs(2).as_ns(), 2_000_000_000);
+    }
+
+    #[test]
+    fn arithmetic_saturates() {
+        assert_eq!(SimTime::ns(5) - SimTime::ns(9), SimTime::ZERO);
+        assert_eq!(SimTime::MAX + SimTime::ns(1), SimTime::MAX);
+    }
+
+    #[test]
+    fn ordering_and_max() {
+        assert!(SimTime::ns(190) < SimTime::ns(880));
+        assert_eq!(SimTime::ns(3).max(SimTime::ns(7)), SimTime::ns(7));
+        assert_eq!(SimTime::ns(3).min(SimTime::ns(7)), SimTime::ns(3));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimTime::ns(25)), "25ns");
+        assert_eq!(format!("{}", SimTime::ns(1_190)), "1.190us");
+        assert_eq!(format!("{}", SimTime::us(25_000)), "25.000ms");
+    }
+
+    #[test]
+    fn sum_of_hops_matches_paper_fig2() {
+        // Figure 2: two port crossings + switch hop for CXL HDM access.
+        let hops = [SimTime::ns(25), SimTime::ns(70), SimTime::ns(25)];
+        let total: SimTime = hops.into_iter().sum();
+        assert_eq!(total, SimTime::ns(120));
+    }
+}

@@ -1,0 +1,402 @@
+//! SSD controller pipeline model.
+//!
+//! Every IO crosses three explicit stages, mirroring how the paper's
+//! firmware modification works (§4: latency is injected into "the L2P
+//! indexing module"):
+//!
+//! ```text
+//!   host link ──► index stage (W FTL lookup slots) ──► media ──► done
+//! ```
+//!
+//! * **Reads** perform a *synchronous* L2P lookup before media access:
+//!   `k` dependent index-memory references at the placement's latency
+//!   (derived from the fabric model) plus firmware time `f`. This is the
+//!   stage the four schemes differ in, and where added CXL latency eats
+//!   throughput on fast devices — the paper's central result.
+//! * **Writes** buffer data and *post* their mapping updates (no
+//!   round-trip), so Ideal/LMB writes are index-neutral — exactly the
+//!   paper's observation that LMB write throughput matches Ideal.
+//!   DFTL, by contrast, must synchronously fetch (and on eviction write
+//!   back) translation pages from flash, which is why its writes crater.
+//!
+//! Throughput is the bottleneck-stage capacity capped by the closed-loop
+//! limit (`outstanding / base_latency`); saturated mean latency follows
+//! Little's law. Per-IO latency *distributions* come from the batched
+//! max-plus pipeline scan executed by the AOT-compiled XLA model
+//! ([`crate::runtime`]), with this module supplying per-IO service
+//! parameters.
+
+use crate::cxl::fabric::Fabric;
+use crate::sim::time::SimTime;
+use crate::ssd::ftl::dftl::DftlModel;
+use crate::ssd::spec::SsdSpec;
+use crate::ssd::IndexPlacement;
+use crate::workload::fio::{FioJob, IoPattern};
+
+/// Calibrated index-stage parameters (per device; see DESIGN.md
+/// §Calibration).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineParams {
+    /// Parallel FTL lookup slots (W).
+    pub index_width: u32,
+    /// Firmware processing per IO in the index stage, ns (f).
+    pub firmware_ns: f64,
+    /// Dependent index-memory references per read lookup (k).
+    pub index_accesses: u32,
+    /// Expected flash ops per DFTL read miss (translation fetch).
+    pub dftl_flash_ops_read: f64,
+    /// Expected flash ops per DFTL write miss (fetch + dirty evict).
+    pub dftl_flash_ops_write: f64,
+}
+
+/// Capacities of each pipeline stage, in IOPS, for one (pattern, scheme).
+#[derive(Debug, Clone, Copy)]
+pub struct StageCaps {
+    pub link_iops: f64,
+    pub index_iops: f64,
+    pub media_iops: f64,
+    /// Small-block write-path commit cap (writes only).
+    pub write_path_iops: Option<f64>,
+}
+
+impl StageCaps {
+    /// The binding stage.
+    pub fn bottleneck(&self) -> f64 {
+        let mut x = self.link_iops.min(self.index_iops).min(self.media_iops);
+        if let Some(w) = self.write_path_iops {
+            x = x.min(w);
+        }
+        x
+    }
+
+    /// Name of the binding stage (reports/flamegraph-style attribution).
+    pub fn bottleneck_name(&self) -> &'static str {
+        let b = self.bottleneck();
+        if let Some(w) = self.write_path_iops {
+            if b == w {
+                return "write-path";
+            }
+        }
+        if b == self.index_iops {
+            "index"
+        } else if b == self.media_iops {
+            "media"
+        } else {
+            "link"
+        }
+    }
+}
+
+/// The controller model for one device + index placement.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    pub spec: SsdSpec,
+    pub placement: IndexPlacement,
+    pub fabric: Fabric,
+    /// DFTL CMT hit ratio used by the analytic model (the paper's own
+    /// simulation corresponds to 0.0; measured CMT warm-up can override).
+    pub dftl_hit_ratio: f64,
+    /// Multiplier on index-memory access latency (shared-expander
+    /// contention inflation, set by the coordinator; 1.0 = uncontended).
+    pub index_access_inflation: f64,
+}
+
+impl Controller {
+    pub fn new(spec: SsdSpec, placement: IndexPlacement, fabric: Fabric) -> Self {
+        let dftl_hit_ratio = default_dftl_hit(spec.name);
+        Controller { spec, placement, fabric, dftl_hit_ratio, index_access_inflation: 1.0 }
+    }
+
+    fn dftl_model(&self) -> DftlModel {
+        DftlModel {
+            hit_ratio: self.dftl_hit_ratio,
+            flash_read: self.fabric.cfg.flash_read,
+            flash_ops_read: self.spec.pipeline.dftl_flash_ops_read,
+            flash_ops_write: self.spec.pipeline.dftl_flash_ops_write,
+            dram_access: self.fabric.cfg.onboard_dram,
+        }
+    }
+
+    /// One index-memory access at this placement (contention-inflated).
+    pub fn index_access(&self) -> SimTime {
+        let base = self.placement.index_access_latency(&self.fabric, self.spec.gen);
+        SimTime::ns((base.as_ns() as f64 * self.index_access_inflation) as u64)
+    }
+
+    /// Index-stage service time for one IO.
+    pub fn index_service(&self, is_write: bool) -> SimTime {
+        let f = SimTime::ns(self.spec.pipeline.firmware_ns as u64);
+        match self.placement {
+            IndexPlacement::Dftl => f + self.dftl_model().expected_index_cost(is_write),
+            _ if is_write => f, // posted mapping update: no round-trip
+            _ => f + self.index_access() * self.spec.pipeline.index_accesses as u64,
+        }
+    }
+
+    /// Stage capacities for a pattern at block size `bs`.
+    pub fn stage_caps(&self, pattern: IoPattern, bs: u32) -> StageCaps {
+        let bs_f = bs as f64;
+        let link_iops = self.spec.link().bandwidth_bps() as f64 / bs_f;
+        let idx_service = self.index_service(pattern.is_write()).as_secs_f64();
+        let index_iops = self.spec.pipeline.index_width as f64 / idx_service;
+
+        let nand = &self.spec.nand;
+        let page = nand.page_bytes as f64;
+        let (media_iops, write_path_iops) = if pattern.is_write() {
+            let wa = if pattern.is_seq() {
+                1.0
+            } else {
+                self.spec.write_amplification()
+            };
+            let media = nand.program_bw_bps() / (bs_f * wa);
+            (media, Some(self.spec.write_path_kiops * 1e3))
+        } else {
+            let per_read_pages = (bs_f / page).max(1.0);
+            let die_iops = nand.read_iops() / per_read_pages;
+            let media = if pattern.is_seq() {
+                // sequential reads coalesce: one page read serves
+                // page/bs consecutive IOs, bounded by channel bandwidth
+                let coalesced = die_iops * (page / bs_f).max(1.0);
+                coalesced.min(nand.seq_read_bw_bps() / bs_f)
+            } else {
+                die_iops
+            };
+            (media, None)
+        };
+        StageCaps { link_iops, index_iops, media_iops, write_path_iops }
+    }
+
+    /// Unloaded per-IO latency (QD=1 service sum).
+    pub fn base_latency(&self, pattern: IoPattern, bs: u32) -> SimTime {
+        let xfer = self.spec.link().serialize(bs as u64);
+        if pattern.is_write() {
+            self.index_service(true) + self.spec.write_buffer_latency + xfer
+        } else {
+            self.index_service(false) + self.spec.nand.t_read + xfer
+        }
+    }
+
+    /// Closed-loop steady-state throughput for a job, in IOPS.
+    pub fn throughput_iops(&self, job: &FioJob) -> f64 {
+        let caps = self.stage_caps(job.pattern, job.block_size);
+        let r = self.base_latency(job.pattern, job.block_size).as_secs_f64();
+        let closed_loop = job.outstanding() as f64 / r;
+        caps.bottleneck().min(closed_loop)
+    }
+
+    /// Mean latency under the job's load (Little's law in saturation).
+    pub fn mean_latency(&self, job: &FioJob) -> SimTime {
+        let x = self.throughput_iops(job);
+        let r = self.base_latency(job.pattern, job.block_size);
+        let little = job.outstanding() as f64 / x;
+        SimTime::ns((little.max(r.as_secs_f64()) * 1e9) as u64)
+    }
+
+    /// Bandwidth in GB/s for a job.
+    pub fn throughput_gbps(&self, job: &FioJob) -> f64 {
+        self.throughput_iops(job) * job.block_size as f64 / 1e9
+    }
+}
+
+/// Default DFTL CMT hit ratio per device (calibrated; the Gen5 part's
+/// hotter pipeline thrashes its relatively smaller CMT harder).
+fn default_dftl_hit(name: &str) -> f64 {
+    if name.contains("Gen5") {
+        0.20
+    } else {
+        0.35
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::GIB;
+
+    fn ctl(spec: SsdSpec, placement: IndexPlacement) -> Controller {
+        Controller::new(spec, placement, Fabric::default())
+    }
+
+    fn job(pattern: IoPattern) -> FioJob {
+        FioJob::paper(pattern, 64 * GIB)
+    }
+
+    fn kiops(c: &Controller, pattern: IoPattern) -> f64 {
+        c.throughput_iops(&job(pattern)) / 1e3
+    }
+
+    // ---- Table 3 calibration: Ideal must land on spec ----
+
+    #[test]
+    fn gen4_ideal_matches_table3() {
+        let c = ctl(SsdSpec::gen4(), IndexPlacement::Ideal);
+        let rr = kiops(&c, IoPattern::RandRead);
+        assert!((rr - 1750.0).abs() / 1750.0 < 0.05, "gen4 rand read {rr}");
+        let rw = kiops(&c, IoPattern::RandWrite);
+        assert!((rw - 340.0).abs() / 340.0 < 0.05, "gen4 rand write {rw}");
+    }
+
+    #[test]
+    fn gen5_ideal_matches_table3() {
+        let c = ctl(SsdSpec::gen5(), IndexPlacement::Ideal);
+        let rr = kiops(&c, IoPattern::RandRead);
+        assert!((rr - 2800.0).abs() / 2800.0 < 0.05, "gen5 rand read {rr}");
+        let rw = kiops(&c, IoPattern::RandWrite);
+        assert!((rw - 700.0).abs() / 700.0 < 0.05, "gen5 rand write {rw}");
+    }
+
+    // ---- Figure 6(a) shape: Gen4 ----
+
+    #[test]
+    fn gen4_writes_lmb_matches_ideal() {
+        for pattern in [IoPattern::RandWrite, IoPattern::SeqWrite] {
+            let ideal = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), pattern);
+            for p in [IndexPlacement::LmbCxl, IndexPlacement::LmbPcie] {
+                let x = kiops(&ctl(SsdSpec::gen4(), p), pattern);
+                assert!(
+                    (x - ideal).abs() / ideal < 0.01,
+                    "{pattern:?} {p:?}: {x} vs ideal {ideal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gen4_dftl_writes_roughly_7x_worse() {
+        let ideal = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), IoPattern::RandWrite);
+        let dftl = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Dftl), IoPattern::RandWrite);
+        let ratio = ideal / dftl;
+        assert!((4.0..10.0).contains(&ratio), "gen4 write ratio {ratio} (paper ~7x)");
+    }
+
+    #[test]
+    fn gen4_lmb_cxl_read_matches_ideal() {
+        for pattern in [IoPattern::RandRead, IoPattern::SeqRead] {
+            let ideal = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), pattern);
+            let cxl = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::LmbCxl), pattern);
+            assert!((cxl - ideal).abs() / ideal < 0.02, "{pattern:?}: {cxl} vs {ideal}");
+        }
+    }
+
+    #[test]
+    fn gen4_lmb_pcie_read_drops_10_to_20_pct() {
+        let ideal = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), IoPattern::RandRead);
+        let pcie = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::LmbPcie), IoPattern::RandRead);
+        let drop = 1.0 - pcie / ideal;
+        assert!((0.08..0.20).contains(&drop), "gen4 rand-read drop {drop} (paper 13.3%)");
+    }
+
+    #[test]
+    fn gen4_dftl_reads_roughly_14x_worse() {
+        let ideal = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), IoPattern::RandRead);
+        let dftl = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Dftl), IoPattern::RandRead);
+        let ratio = ideal / dftl;
+        assert!((10.0..20.0).contains(&ratio), "gen4 read ratio {ratio} (paper ~14x)");
+    }
+
+    // ---- Figure 6(b) shape: Gen5 ----
+
+    #[test]
+    fn gen5_writes_lmb_matches_ideal_even_pcie() {
+        let ideal = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Ideal), IoPattern::RandWrite);
+        let pcie = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbPcie), IoPattern::RandWrite);
+        assert!((pcie - ideal).abs() / ideal < 0.01, "{pcie} vs {ideal}");
+    }
+
+    #[test]
+    fn gen5_lmb_cxl_rand_read_drops_hard() {
+        // paper: −56%. Same +190 ns that was free on Gen4 bites here.
+        let ideal = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Ideal), IoPattern::RandRead);
+        let cxl = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbCxl), IoPattern::RandRead);
+        let drop = 1.0 - cxl / ideal;
+        assert!((0.25..0.60).contains(&drop), "gen5 CXL rand-read drop {drop} (paper 56%)");
+    }
+
+    #[test]
+    fn gen5_lmb_pcie_rand_read_drops_harder_than_cxl() {
+        let ideal = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Ideal), IoPattern::RandRead);
+        let cxl = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbCxl), IoPattern::RandRead);
+        let pcie = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbPcie), IoPattern::RandRead);
+        assert!(pcie < cxl, "PCIe path must be worse than P2P");
+        let drop = 1.0 - pcie / ideal;
+        assert!(drop > 0.55, "gen5 PCIe rand-read drop {drop} (paper 70%)");
+    }
+
+    #[test]
+    fn gen5_dftl_still_far_worse_than_lmb_pcie() {
+        // paper: "LMB-PCIe can outperform the DFTL scheme by 20×"
+        let pcie = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbPcie), IoPattern::RandRead);
+        let dftl = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Dftl), IoPattern::RandRead);
+        assert!(pcie / dftl > 2.0, "LMB-PCIe {pcie} vs DFTL {dftl}");
+        let ideal = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Ideal), IoPattern::RandRead);
+        assert!((15.0..40.0).contains(&(ideal / dftl)), "gen5 DFTL ratio {}", ideal / dftl);
+    }
+
+    // ---- the paper's takeaway: faster SSDs are hurt more ----
+
+    #[test]
+    fn cxl_latency_bites_harder_on_faster_device() {
+        let d4 = {
+            let i = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::Ideal), IoPattern::RandRead);
+            let c = kiops(&ctl(SsdSpec::gen4(), IndexPlacement::LmbCxl), IoPattern::RandRead);
+            1.0 - c / i
+        };
+        let d5 = {
+            let i = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::Ideal), IoPattern::RandRead);
+            let c = kiops(&ctl(SsdSpec::gen5(), IndexPlacement::LmbCxl), IoPattern::RandRead);
+            1.0 - c / i
+        };
+        assert!(d5 > d4 + 0.2, "gen5 drop {d5} must exceed gen4 drop {d4}");
+    }
+
+    // ---- mechanics ----
+
+    #[test]
+    fn locality_recovers_dftl_performance() {
+        // §4.1 closing remark, and the ablation bench's backbone.
+        let mut c = ctl(SsdSpec::gen4(), IndexPlacement::Dftl);
+        c.dftl_hit_ratio = 0.0;
+        let cold = kiops(&c, IoPattern::RandRead);
+        c.dftl_hit_ratio = 0.99;
+        let hot = kiops(&c, IoPattern::RandRead);
+        assert!(hot > cold * 10.0, "hot {hot} vs cold {cold}");
+    }
+
+    #[test]
+    fn contention_inflation_reduces_lmb_throughput() {
+        let mut c = ctl(SsdSpec::gen5(), IndexPlacement::LmbCxl);
+        let base = kiops(&c, IoPattern::RandRead);
+        c.index_access_inflation = 3.0;
+        let contended = kiops(&c, IoPattern::RandRead);
+        assert!(contended < base * 0.75, "{contended} vs {base}");
+    }
+
+    #[test]
+    fn base_latency_near_spec() {
+        let c = ctl(SsdSpec::gen4(), IndexPlacement::Ideal);
+        let r = c.base_latency(IoPattern::RandRead, 4096);
+        // spec says 67 µs; tR=73 µs + overheads ⇒ within 20%
+        assert!((60_000..85_000).contains(&r.as_ns()), "read base {r}");
+        let w = c.base_latency(IoPattern::RandWrite, 4096);
+        assert!((9_000..12_000).contains(&w.as_ns()), "write base {w}");
+    }
+
+    #[test]
+    fn bottleneck_attribution() {
+        let c = ctl(SsdSpec::gen5(), IndexPlacement::LmbPcie);
+        let caps = c.stage_caps(IoPattern::RandRead, 4096);
+        assert_eq!(caps.bottleneck_name(), "index");
+        let c = ctl(SsdSpec::gen4(), IndexPlacement::Ideal);
+        let caps = c.stage_caps(IoPattern::RandRead, 4096);
+        assert_eq!(caps.bottleneck_name(), "media");
+    }
+
+    #[test]
+    fn large_block_reads_are_bandwidth_bound() {
+        let c = ctl(SsdSpec::gen5(), IndexPlacement::Ideal);
+        let mut j = job(IoPattern::SeqRead);
+        j.block_size = 128 * 1024;
+        let gbps = c.throughput_gbps(&j);
+        assert!((12.0..15.0).contains(&gbps), "gen5 128K seq read {gbps} GB/s (spec 14)");
+    }
+}

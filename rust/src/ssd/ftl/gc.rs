@@ -1,0 +1,192 @@
+//! Garbage collection: analytic write-amplification model + a functional
+//! greedy collector.
+//!
+//! The steady-state random-write WA of greedy GC over uniformly-random
+//! writes follows the classic closed form WA ≈ (1 + OP) / (2 · OP)
+//! (OP = over-provisioning fraction). Table 3's sustained random-write
+//! figures pin each device's OP (see `spec.rs`). The functional
+//! collector validates the closed form on a small array and powers the
+//! DES mode's background-GC events.
+
+
+/// Analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct GcModel {
+    pub over_provisioning: f64,
+}
+
+impl GcModel {
+    /// Steady-state write amplification for uniform random writes.
+    pub fn random_write_wa(&self) -> f64 {
+        (1.0 + self.over_provisioning) / (2.0 * self.over_provisioning)
+    }
+
+    /// Sequential writes invalidate whole blocks — no relocation.
+    pub fn seq_write_wa(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Functional greedy garbage collector over an abstract block pool.
+///
+/// Blocks hold `pages_per_block` page slots; user writes go to the open
+/// block; when free blocks run short, the collector picks the block with
+/// the fewest valid pages, relocates them, and erases it.
+#[derive(Debug)]
+pub struct GreedyGc {
+    pages_per_block: u32,
+    /// valid bitmap per block
+    blocks: Vec<Vec<bool>>,
+    /// write pointer within the open block
+    open_block: usize,
+    open_page: u32,
+    free_blocks: Vec<usize>,
+    /// lpa → (block, page)
+    map: std::collections::HashMap<u64, (usize, u32)>,
+    pub user_writes: u64,
+    pub relocations: u64,
+    pub erases: u64,
+    gc_threshold: usize,
+}
+
+impl GreedyGc {
+    pub fn new(num_blocks: usize, pages_per_block: u32) -> Self {
+        assert!(num_blocks >= 4);
+        let mut free_blocks: Vec<usize> = (1..num_blocks).collect();
+        free_blocks.reverse();
+        GreedyGc {
+            pages_per_block,
+            blocks: vec![vec![false; pages_per_block as usize]; num_blocks],
+            open_block: 0,
+            open_page: 0,
+            free_blocks,
+            map: std::collections::HashMap::new(),
+            user_writes: 0,
+            relocations: 0,
+            erases: 0,
+            gc_threshold: 2,
+        }
+    }
+
+    /// Total physical pages.
+    pub fn physical_pages(&self) -> u64 {
+        self.blocks.len() as u64 * self.pages_per_block as u64
+    }
+
+    fn append(&mut self, lpa: u64) {
+        // invalidate old location
+        if let Some((b, p)) = self.map.get(&lpa).copied() {
+            self.blocks[b][p as usize] = false;
+        }
+        self.blocks[self.open_block][self.open_page as usize] = true;
+        self.map.insert(lpa, (self.open_block, self.open_page));
+        self.open_page += 1;
+        if self.open_page == self.pages_per_block {
+            let next = self.free_blocks.pop().expect("GC must keep a free block");
+            self.open_block = next;
+            self.open_page = 0;
+        }
+    }
+
+    /// Write one logical page, running GC as needed.
+    pub fn write(&mut self, lpa: u64) {
+        self.user_writes += 1;
+        self.append(lpa);
+        while self.free_blocks.len() < self.gc_threshold {
+            self.collect();
+        }
+    }
+
+    fn collect(&mut self) {
+        // victim: fewest valid pages, excluding open + free blocks
+        let victim = (0..self.blocks.len())
+            .filter(|&b| b != self.open_block && !self.free_blocks.contains(&b))
+            .min_by_key(|&b| self.blocks[b].iter().filter(|&&v| v).count())
+            .expect("victim exists");
+        let valid: Vec<u64> = self
+            .map
+            .iter()
+            .filter(|(_, &(b, _))| b == victim)
+            .map(|(&lpa, _)| lpa)
+            .collect();
+        for lpa in valid {
+            self.relocations += 1;
+            self.append(lpa);
+        }
+        self.blocks[victim].fill(false);
+        self.free_blocks.push(victim);
+        self.erases += 1;
+    }
+
+    /// Observed write amplification.
+    pub fn wa(&self) -> f64 {
+        if self.user_writes == 0 {
+            1.0
+        } else {
+            (self.user_writes + self.relocations) as f64 / self.user_writes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_values() {
+        assert!((GcModel { over_provisioning: 0.111 }.random_write_wa() - 5.0).abs() < 0.05);
+        assert!((GcModel { over_provisioning: 0.159 }.random_write_wa() - 3.64).abs() < 0.05);
+        assert_eq!(GcModel { over_provisioning: 0.25 }.seq_write_wa(), 1.0);
+    }
+
+    #[test]
+    fn sequential_writes_have_wa_one() {
+        let mut gc = GreedyGc::new(32, 64);
+        let logical = (32 * 64) as u64 * 3 / 4;
+        // three full sequential passes
+        for _ in 0..3 {
+            for lpa in 0..logical {
+                gc.write(lpa);
+            }
+        }
+        assert!(gc.wa() < 1.15, "seq WA = {}", gc.wa());
+    }
+
+    #[test]
+    fn random_write_wa_tracks_closed_form() {
+        use crate::sim::rng::Pcg64;
+        let blocks = 64;
+        let ppb = 64u32;
+        let mut gc = GreedyGc::new(blocks, ppb);
+        let op = 0.25f64; // logical = physical / (1+op)
+        let logical = (gc.physical_pages() as f64 / (1.0 + op)) as u64;
+        let mut rng = Pcg64::new(42);
+        // fill once, then steady-state random overwrites
+        for lpa in 0..logical {
+            gc.write(lpa);
+        }
+        let (w0, r0) = (gc.user_writes, gc.relocations);
+        for _ in 0..logical * 12 {
+            gc.write(rng.next_below(logical));
+        }
+        let wa = 1.0 + (gc.relocations - r0) as f64 / (gc.user_writes - w0) as f64;
+        let expected = GcModel { over_provisioning: op }.random_write_wa(); // 2.5
+        // greedy beats the closed form slightly on small configs; accept a band
+        assert!(
+            (expected * 0.55..expected * 1.35).contains(&wa),
+            "WA {wa:.2} vs closed form {expected:.2}"
+        );
+    }
+
+    #[test]
+    fn overwrite_invalidates_old_location() {
+        let mut gc = GreedyGc::new(8, 16);
+        for _ in 0..100 {
+            gc.write(7);
+        }
+        // only one valid copy of lpa 7 exists
+        let valid: usize =
+            gc.blocks.iter().map(|b| b.iter().filter(|&&v| v).count()).sum();
+        assert_eq!(valid, 1);
+    }
+}

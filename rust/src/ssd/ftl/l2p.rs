@@ -1,0 +1,158 @@
+//! Logical-to-physical mapping table.
+//!
+//! Functional page-level L2P map (4 B PPA per 4 KiB LPA — Table 3 drives
+//! carry a 7.68 GB table, the paper's headline problem). The map is
+//! sparse in memory, and can be *serialised through the LMB data path*:
+//! entries are written to / read from the expander backing store via the
+//! allocation's DPA, which is how the integration tests prove the SSD's
+//! index actually lives in CXL memory under the LMB schemes (Figure 5).
+
+use std::collections::HashMap;
+
+use crate::cxl::expander::Expander;
+use crate::cxl::types::Dpa;
+use crate::error::Result;
+
+/// Sentinel for "never written".
+pub const UNMAPPED: u32 = u32::MAX;
+
+/// Page-level L2P table over `num_pages` logical pages.
+#[derive(Debug)]
+pub struct L2pTable {
+    num_pages: u64,
+    /// Sparse map; absent = UNMAPPED.
+    entries: HashMap<u64, u32>,
+    pub lookups: u64,
+    pub updates: u64,
+}
+
+impl L2pTable {
+    pub fn new(num_pages: u64) -> Self {
+        L2pTable { num_pages, entries: HashMap::new(), lookups: 0, updates: 0 }
+    }
+
+    pub fn num_pages(&self) -> u64 {
+        self.num_pages
+    }
+
+    /// Bytes the full table would occupy (4 B per entry).
+    pub fn table_bytes(&self) -> u64 {
+        self.num_pages * 4
+    }
+
+    pub fn lookup(&mut self, lpa: u64) -> u32 {
+        debug_assert!(lpa < self.num_pages);
+        self.lookups += 1;
+        self.entries.get(&lpa).copied().unwrap_or(UNMAPPED)
+    }
+
+    pub fn update(&mut self, lpa: u64, ppa: u32) {
+        debug_assert!(lpa < self.num_pages);
+        self.updates += 1;
+        if ppa == UNMAPPED {
+            self.entries.remove(&lpa);
+        } else {
+            self.entries.insert(lpa, ppa);
+        }
+    }
+
+    pub fn mapped_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Flush entries `[first, first+count)` into LMB memory at `dpa`
+    /// (4 B little-endian each) through the expander's functional store.
+    pub fn flush_to_lmb(
+        &self,
+        expander: &mut Expander,
+        dpa: Dpa,
+        first: u64,
+        count: u64,
+    ) -> Result<()> {
+        let mut buf = Vec::with_capacity((count * 4) as usize);
+        for lpa in first..first + count {
+            let ppa = self.entries.get(&lpa).copied().unwrap_or(UNMAPPED);
+            buf.extend_from_slice(&ppa.to_le_bytes());
+        }
+        expander.write_dpa(dpa, &buf)
+    }
+
+    /// Load entries `[first, first+count)` back from LMB memory.
+    pub fn load_from_lmb(
+        &mut self,
+        expander: &Expander,
+        dpa: Dpa,
+        first: u64,
+        count: u64,
+    ) -> Result<()> {
+        let mut buf = vec![0u8; (count * 4) as usize];
+        expander.read_dpa(dpa, &mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            let ppa = u32::from_le_bytes(chunk.try_into().unwrap());
+            let lpa = first + i as u64;
+            if ppa == UNMAPPED {
+                self.entries.remove(&lpa);
+            } else {
+                self.entries.insert(lpa, ppa);
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense snapshot (tests + the XLA gather-kernel parity check).
+    pub fn snapshot(&self, first: u64, count: u64) -> Vec<u32> {
+        (first..first + count)
+            .map(|lpa| self.entries.get(&lpa).copied().unwrap_or(UNMAPPED))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::ExpanderConfig;
+    use crate::cxl::types::GIB;
+
+    #[test]
+    fn lookup_update_roundtrip() {
+        let mut t = L2pTable::new(1024);
+        assert_eq!(t.lookup(5), UNMAPPED);
+        t.update(5, 42);
+        assert_eq!(t.lookup(5), 42);
+        t.update(5, UNMAPPED); // trim
+        assert_eq!(t.lookup(5), UNMAPPED);
+        assert_eq!(t.lookups, 3);
+        assert_eq!(t.updates, 2);
+    }
+
+    #[test]
+    fn table_size_matches_paper_rule() {
+        // 7.68 TB → 1.875 G pages → 7.5 GiB-ish table (0.1% of capacity)
+        let t = L2pTable::new(7_680_000_000_000 / 4096);
+        assert_eq!(t.table_bytes(), 7_500_000_000);
+    }
+
+    #[test]
+    fn lmb_flush_load_roundtrip() {
+        let mut ex = Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() });
+        let mut t = L2pTable::new(4096);
+        for lpa in 0..512 {
+            t.update(lpa, (lpa * 7 + 1) as u32);
+        }
+        t.flush_to_lmb(&mut ex, Dpa(0x10000), 0, 1024).unwrap();
+        let mut t2 = L2pTable::new(4096);
+        t2.load_from_lmb(&ex, Dpa(0x10000), 0, 1024).unwrap();
+        for lpa in 0..512 {
+            assert_eq!(t2.snapshot(lpa, 1)[0], (lpa * 7 + 1) as u32);
+        }
+        assert_eq!(t2.lookup(700), UNMAPPED, "unwritten entries stay unmapped");
+    }
+
+    #[test]
+    fn snapshot_dense_view() {
+        let mut t = L2pTable::new(16);
+        t.update(1, 10);
+        t.update(3, 30);
+        assert_eq!(t.snapshot(0, 4), vec![UNMAPPED, 10, UNMAPPED, 30]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Flash Translation Layer: L2P mapping, DFTL demand caching, GC.
+
+pub mod dftl;
+pub mod gc;
+pub mod l2p;
+
+pub use dftl::{CmtCache, DftlModel};
+pub use gc::{GcModel, GreedyGc};
+pub use l2p::L2pTable;

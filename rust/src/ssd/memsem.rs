@@ -1,0 +1,184 @@
+//! Memory-semantic SSD (§2.1: Samsung CMM-H / CXL-SSD).
+//!
+//! A device that "blends DRAM accessibility and flash durability into a
+//! single-tier memory": the CPU issues byte-granular loads/stores
+//! against a flash-backed address space fronted by an onboard DRAM
+//! cache. The paper's §2.1 critique: "they are reliant on DRAM size and
+//! cache hit ratios, with misses leading to latency issues and the
+//! spatial limitation persists due to the identical form factor".
+//!
+//! LMB's fix falls out of the same framework: extend the device's cache
+//! with expander memory, creating a three-tier hierarchy
+//! (onboard DRAM → LMB/HDM → flash). This module models both
+//! configurations analytically and functionally (a CLOCK cache over
+//! cachelines, reusing the CMT machinery).
+
+use crate::cxl::fabric::{Fabric, PathKind};
+use crate::sim::time::SimTime;
+use crate::ssd::ftl::dftl::CmtCache;
+
+/// Cacheline size of the memory-semantic frontend.
+pub const MEMSEM_LINE: u64 = 64;
+
+/// Configuration of a memory-semantic SSD.
+#[derive(Debug, Clone)]
+pub struct MemSemConfig {
+    /// Onboard DRAM cache bytes (spatially limited — the paper's point).
+    pub onboard_cache: u64,
+    /// Optional LMB tier bytes (0 = plain CMM-H).
+    pub lmb_tier: u64,
+    /// Flash page fill cost on a miss that reaches flash.
+    pub flash_fill: SimTime,
+}
+
+impl MemSemConfig {
+    /// A CMM-H-like part: small onboard cache, no LMB.
+    pub fn cmm_h(onboard_cache: u64) -> Self {
+        MemSemConfig { onboard_cache, lmb_tier: 0, flash_fill: SimTime::us(25) }
+    }
+
+    /// The LMB-extended variant.
+    pub fn with_lmb(onboard_cache: u64, lmb_tier: u64) -> Self {
+        MemSemConfig { onboard_cache, lmb_tier, flash_fill: SimTime::us(25) }
+    }
+}
+
+/// Expected load latency given tier hit probabilities.
+///
+/// `h1` = onboard hit, `h2` = LMB hit among onboard misses.
+pub fn expected_load_latency(cfg: &MemSemConfig, fabric: &Fabric, h1: f64, h2: f64) -> SimTime {
+    let dram = fabric.path_latency(PathKind::OnboardDram).as_ns() as f64;
+    let hdm = fabric.path_latency(PathKind::CxlP2pToHdm).as_ns() as f64;
+    let flash = cfg.flash_fill.as_ns() as f64;
+    let h2 = if cfg.lmb_tier > 0 { h2 } else { 0.0 };
+    let ns = h1 * dram + (1.0 - h1) * (h2 * hdm + (1.0 - h2) * flash);
+    SimTime::ns(ns as u64)
+}
+
+/// Functional two-tier cache simulation over a load trace: returns
+/// (onboard hit ratio, LMB hit ratio among onboard misses), measured on
+/// the steady state — the first `warmup` accesses populate the tiers
+/// but are excluded from the ratios (compulsory misses are a property
+/// of the trace length, not the hierarchy).
+///
+/// Uses CLOCK at cacheline granularity for the onboard tier and a
+/// larger CLOCK for the LMB tier (inclusive hierarchy).
+pub fn simulate_tiers(cfg: &MemSemConfig, addrs: &[u64], warmup: usize) -> (f64, f64) {
+    let l1_lines = (cfg.onboard_cache / MEMSEM_LINE).max(1) as usize;
+    let mut l1 = CmtCache::new(l1_lines, MEMSEM_LINE);
+    let mut l2 = (cfg.lmb_tier > 0)
+        .then(|| CmtCache::new((cfg.lmb_tier / MEMSEM_LINE).max(1) as usize, MEMSEM_LINE));
+    let (mut l1_hits, mut l2_hits, mut l2_lookups, mut measured) = (0u64, 0u64, 0u64, 0u64);
+    for (i, &a) in addrs.iter().enumerate() {
+        let count = i >= warmup;
+        if count {
+            measured += 1;
+        }
+        if l1.access(a) {
+            if count {
+                l1_hits += 1;
+            }
+            // inclusive: keep L2 warm
+            if let Some(l2c) = l2.as_mut() {
+                l2c.access(a);
+            }
+        } else if let Some(l2c) = l2.as_mut() {
+            let hit = l2c.access(a);
+            if count {
+                l2_lookups += 1;
+                if hit {
+                    l2_hits += 1;
+                }
+            }
+        }
+    }
+    let h1 = l1_hits as f64 / measured.max(1) as f64;
+    let h2 = if l2_lookups > 0 { l2_hits as f64 / l2_lookups as f64 } else { 0.0 };
+    (h1, h2)
+}
+
+/// End-to-end comparison a bench/example can print: mean load latency
+/// for the plain device vs the LMB-extended one on the same trace.
+pub fn compare_on_trace(
+    onboard: u64,
+    lmb_tier: u64,
+    fabric: &Fabric,
+    addrs: &[u64],
+) -> (SimTime, SimTime) {
+    let warmup = addrs.len() / 2;
+    let plain = MemSemConfig::cmm_h(onboard);
+    let (h1, _) = simulate_tiers(&plain, addrs, warmup);
+    let lat_plain = expected_load_latency(&plain, fabric, h1, 0.0);
+
+    let ext = MemSemConfig::with_lmb(onboard, lmb_tier);
+    let (h1e, h2e) = simulate_tiers(&ext, addrs, warmup);
+    let lat_ext = expected_load_latency(&ext, fabric, h1e, h2e);
+    (lat_plain, lat_ext)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Pcg64;
+    use crate::workload::zipf::Zipfian;
+
+    fn zipf_trace(n: usize, span_lines: u64, theta: f64, seed: u64) -> Vec<u64> {
+        let z = Zipfian::new(span_lines, theta);
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| z.sample(&mut rng) * MEMSEM_LINE).collect()
+    }
+
+    #[test]
+    fn latency_model_tiers_ordered() {
+        let fabric = Fabric::default();
+        let cfg = MemSemConfig::with_lmb(1 << 20, 1 << 26);
+        // all-onboard-hit < all-LMB-hit < all-flash
+        let a = expected_load_latency(&cfg, &fabric, 1.0, 0.0);
+        let b = expected_load_latency(&cfg, &fabric, 0.0, 1.0);
+        let c = expected_load_latency(&cfg, &fabric, 0.0, 0.0);
+        assert_eq!(a, SimTime::ns(70));
+        assert_eq!(b, SimTime::ns(190));
+        assert_eq!(c, SimTime::us(25));
+    }
+
+    #[test]
+    fn plain_device_ignores_h2() {
+        let fabric = Fabric::default();
+        let cfg = MemSemConfig::cmm_h(1 << 20);
+        let with = expected_load_latency(&cfg, &fabric, 0.5, 0.9);
+        let without = expected_load_latency(&cfg, &fabric, 0.5, 0.0);
+        assert_eq!(with, without, "no LMB tier -> h2 is meaningless");
+    }
+
+    #[test]
+    fn lmb_tier_absorbs_onboard_misses() {
+        // working set 4 MiB; onboard 1 MiB; LMB tier 64 MiB; enough
+        // accesses (~4.6 per line) that steady state dominates
+        let trace = zipf_trace(300_000, (4 << 20) / MEMSEM_LINE, 0.8, 42);
+        let cfg = MemSemConfig::with_lmb(1 << 20, 64 << 20);
+        let (h1, h2) = simulate_tiers(&cfg, &trace, trace.len() / 2);
+        assert!(h1 > 0.2 && h1 < 0.95, "onboard partial hit: {h1}");
+        assert!(h2 > 0.7, "LMB tier should absorb most misses: {h2}");
+    }
+
+    #[test]
+    fn extension_cuts_mean_latency_by_an_order() {
+        let fabric = Fabric::default();
+        let trace = zipf_trace(300_000, (4 << 20) / MEMSEM_LINE, 0.8, 7);
+        let (plain, ext) = compare_on_trace(1 << 20, 64 << 20, &fabric, &trace);
+        assert!(
+            plain.as_ns() > 3 * ext.as_ns(),
+            "plain {plain} should dwarf LMB-extended {ext}"
+        );
+    }
+
+    #[test]
+    fn tiny_working_set_makes_tiers_equal() {
+        let fabric = Fabric::default();
+        // 256 KiB working set fits the 1 MiB onboard cache
+        let trace = zipf_trace(60_000, (256 << 10) / MEMSEM_LINE, 0.2, 9);
+        let (plain, ext) = compare_on_trace(1 << 20, 64 << 20, &fabric, &trace);
+        let rel = (plain.as_ns() as f64 - ext.as_ns() as f64).abs() / plain.as_ns() as f64;
+        assert!(rel < 0.25, "cache-resident workloads don't need LMB: {plain} vs {ext}");
+    }
+}

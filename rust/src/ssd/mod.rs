@@ -1,0 +1,107 @@
+//! SSD substrate: NAND flash, FTL (with pluggable L2P index placement),
+//! garbage collection, the controller pipeline, and NVMe-style queues.
+//!
+//! This is the paper's evaluation vehicle (§4): two commercial SSDs
+//! (PCIe Gen4/Gen5, Table 3) whose firmware was modified to place the
+//! L2P mapping table in onboard DRAM (*Ideal*), in flash (*DFTL*), or in
+//! the CXL expander reached either P2P (*LMB-CXL*) or via host bridging
+//! (*LMB-PCIe*). We model the controller white-box so the same four
+//! placements fall out of one mechanism: the latency of the index
+//! stage's memory accesses.
+
+pub mod controller;
+pub mod device;
+pub mod memsem;
+pub mod ftl;
+pub mod nand;
+pub mod nvme;
+pub mod spec;
+
+pub use controller::{Controller, PipelineParams, StageCaps};
+pub use device::{DeviceRun, SsdDevice};
+pub use spec::SsdSpec;
+
+use crate::cxl::fabric::{Fabric, PathKind};
+use crate::pcie::link::PcieGen;
+use crate::sim::time::SimTime;
+
+/// Where the L2P index lives — the paper's four evaluation schemes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IndexPlacement {
+    /// All mapping entries in onboard DRAM (*Ideal*).
+    Ideal,
+    /// Mapping entries in the CXL expander, device reaches it P2P
+    /// (*LMB-CXL*): CXL-native SSD.
+    LmbCxl,
+    /// Mapping entries in the CXL expander, device reaches it through
+    /// the host root complex (*LMB-PCIe*): plain PCIe SSD.
+    LmbPcie,
+    /// Demand-paged flash-resident mapping (DFTL, Gupta et al.).
+    Dftl,
+    /// NVMe 1.2 Host Memory Buffer (§2.1): index in *host* DRAM over
+    /// PCIe. Not in the paper's Figure 6 (hence excluded from `ALL`);
+    /// used by the HMB-vs-LMB ablation.
+    Hmb,
+}
+
+impl IndexPlacement {
+    pub const ALL: [IndexPlacement; 4] =
+        [IndexPlacement::Ideal, IndexPlacement::LmbCxl, IndexPlacement::LmbPcie, IndexPlacement::Dftl];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            IndexPlacement::Ideal => "Ideal",
+            IndexPlacement::LmbCxl => "LMB-CXL",
+            IndexPlacement::LmbPcie => "LMB-PCIe",
+            IndexPlacement::Dftl => "DFTL",
+            IndexPlacement::Hmb => "HMB(host)",
+        }
+    }
+
+    /// Latency of ONE index-memory access under this placement, for an
+    /// SSD on the given PCIe generation — derived from the fabric model
+    /// (Figure 2), not hard-coded.
+    pub fn index_access_latency(self, fabric: &Fabric, gen: PcieGen) -> SimTime {
+        match self {
+            IndexPlacement::Ideal => fabric.path_latency(PathKind::OnboardDram),
+            IndexPlacement::LmbCxl => fabric.path_latency(PathKind::CxlP2pToHdm),
+            IndexPlacement::LmbPcie => fabric.path_latency(PathKind::PcieToHdm(gen)),
+            // DFTL's hit path is onboard DRAM; the miss path (flash) is
+            // charged separately via `DftlModel`.
+            IndexPlacement::Dftl => fabric.path_latency(PathKind::OnboardDram),
+            IndexPlacement::Hmb => fabric.path_latency(PathKind::PcieToHostMem(gen)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_latencies_derive_paper_constants() {
+        let f = Fabric::default();
+        assert_eq!(
+            IndexPlacement::LmbCxl.index_access_latency(&f, PcieGen::Gen4),
+            SimTime::ns(190)
+        );
+        assert_eq!(
+            IndexPlacement::LmbPcie.index_access_latency(&f, PcieGen::Gen4),
+            SimTime::ns(880)
+        );
+        assert_eq!(
+            IndexPlacement::LmbPcie.index_access_latency(&f, PcieGen::Gen5),
+            SimTime::ns(1190)
+        );
+        assert_eq!(
+            IndexPlacement::Ideal.index_access_latency(&f, PcieGen::Gen5),
+            SimTime::ns(70)
+        );
+    }
+
+    #[test]
+    fn labels_are_paper_scheme_names() {
+        let labels: Vec<_> = IndexPlacement::ALL.iter().map(|p| p.label()).collect();
+        assert_eq!(labels, ["Ideal", "LMB-CXL", "LMB-PCIe", "DFTL"]);
+    }
+}

@@ -1,0 +1,254 @@
+//! NAND flash array model.
+//!
+//! Geometry (channels × dies × planes × blocks × pages) plus timing
+//! (tR / tProg / tErase). Two roles:
+//!
+//! 1. **capacity derivation** — aggregate read IOPS / program bandwidth
+//!    bounds that calibrate the controller pipeline to Table 3;
+//! 2. **functional array** — pages can be programmed/read/erased with
+//!    write-before-read and erase-before-program invariants enforced,
+//!    which the FTL/GC tests exercise.
+
+use crate::error::{Error, Result};
+use crate::sim::time::SimTime;
+use std::collections::HashMap;
+
+/// NAND cell technology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellType {
+    Tlc,
+    Qlc,
+}
+
+/// Geometry + timing of the flash array.
+#[derive(Debug, Clone)]
+pub struct NandConfig {
+    pub cell: CellType,
+    pub channels: u32,
+    pub dies_per_channel: u32,
+    pub planes_per_die: u32,
+    /// Flash page size in bytes (16 KiB on the modeled parts).
+    pub page_bytes: u32,
+    pub pages_per_block: u32,
+    pub blocks_per_plane: u32,
+    /// Page read latency (tR).
+    pub t_read: SimTime,
+    /// Page program latency (tProg).
+    pub t_prog: SimTime,
+    /// Block erase latency (tBERS).
+    pub t_erase: SimTime,
+    /// Per-channel bus bandwidth, bytes/sec.
+    pub channel_bw_bps: u64,
+}
+
+impl NandConfig {
+    pub fn dies(&self) -> u32 {
+        self.channels * self.dies_per_channel
+    }
+
+    /// Raw capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.dies() as u64
+            * self.planes_per_die as u64
+            * self.blocks_per_plane as u64
+            * self.pages_per_block as u64
+            * self.page_bytes as u64
+    }
+
+    /// Aggregate small-read capacity: every die can serve an independent
+    /// page read every tR.
+    pub fn read_iops(&self) -> f64 {
+        self.dies() as f64 / self.t_read.as_secs_f64()
+    }
+
+    /// Aggregate program bandwidth with all-plane striping: each die
+    /// programs planes_per_die pages per tProg.
+    pub fn program_bw_bps(&self) -> f64 {
+        let per_die =
+            self.planes_per_die as f64 * self.page_bytes as f64 / self.t_prog.as_secs_f64();
+        per_die * self.dies() as f64
+    }
+
+    /// Aggregate sequential read bandwidth (channel-bus bound).
+    pub fn seq_read_bw_bps(&self) -> f64 {
+        (self.channels as u64 * self.channel_bw_bps) as f64
+    }
+}
+
+/// Physical page address within the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Ppa {
+    pub die: u32,
+    pub plane: u32,
+    pub block: u32,
+    pub page: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PageState {
+    Erased,
+    Programmed,
+}
+
+/// Functional flash array (sparse: only touched blocks are materialised).
+#[derive(Debug)]
+pub struct NandArray {
+    cfg: NandConfig,
+    /// (die, plane, block) → per-page state.
+    blocks: HashMap<(u32, u32, u32), Vec<PageState>>,
+    pub programs: u64,
+    pub reads: u64,
+    pub erases: u64,
+}
+
+impl NandArray {
+    pub fn new(cfg: NandConfig) -> Self {
+        NandArray { cfg, blocks: HashMap::new(), programs: 0, reads: 0, erases: 0 }
+    }
+
+    pub fn config(&self) -> &NandConfig {
+        &self.cfg
+    }
+
+    fn validate(&self, ppa: Ppa) -> Result<()> {
+        let c = &self.cfg;
+        if ppa.die >= c.dies()
+            || ppa.plane >= c.planes_per_die
+            || ppa.block >= c.blocks_per_plane
+            || ppa.page >= c.pages_per_block
+        {
+            return Err(Error::Device(format!("PPA out of range: {ppa:?}")));
+        }
+        Ok(())
+    }
+
+    fn block_mut(&mut self, ppa: Ppa) -> &mut Vec<PageState> {
+        let pages = self.cfg.pages_per_block as usize;
+        self.blocks
+            .entry((ppa.die, ppa.plane, ppa.block))
+            .or_insert_with(|| vec![PageState::Erased; pages])
+    }
+
+    /// Program a page. NAND constraint: pages within a block must be
+    /// programmed in order, and only once between erases.
+    pub fn program(&mut self, ppa: Ppa) -> Result<SimTime> {
+        self.validate(ppa)?;
+        let block = self.block_mut(ppa);
+        if block[ppa.page as usize] == PageState::Programmed {
+            return Err(Error::Device(format!("program to programmed page {ppa:?}")));
+        }
+        if ppa.page > 0 && block[ppa.page as usize - 1] != PageState::Programmed {
+            return Err(Error::Device(format!("out-of-order program {ppa:?}")));
+        }
+        block[ppa.page as usize] = PageState::Programmed;
+        self.programs += 1;
+        Ok(self.cfg.t_prog)
+    }
+
+    /// Read a page (must be programmed).
+    pub fn read(&mut self, ppa: Ppa) -> Result<SimTime> {
+        self.validate(ppa)?;
+        let programmed = self
+            .blocks
+            .get(&(ppa.die, ppa.plane, ppa.block))
+            .map(|b| b[ppa.page as usize] == PageState::Programmed)
+            .unwrap_or(false);
+        if !programmed {
+            return Err(Error::Device(format!("read of erased page {ppa:?}")));
+        }
+        self.reads += 1;
+        Ok(self.cfg.t_read)
+    }
+
+    /// Erase a whole block.
+    pub fn erase(&mut self, die: u32, plane: u32, block: u32) -> Result<SimTime> {
+        self.validate(Ppa { die, plane, block, page: 0 })?;
+        let pages = self.cfg.pages_per_block as usize;
+        self.blocks.insert((die, plane, block), vec![PageState::Erased; pages]);
+        self.erases += 1;
+        Ok(self.cfg.t_erase)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::spec::SsdSpec;
+
+    fn tiny() -> NandConfig {
+        NandConfig {
+            cell: CellType::Tlc,
+            channels: 2,
+            dies_per_channel: 2,
+            planes_per_die: 2,
+            page_bytes: 16384,
+            pages_per_block: 8,
+            blocks_per_plane: 4,
+            t_read: SimTime::us(73),
+            t_prog: SimTime::us(1380),
+            t_erase: SimTime::ms(3),
+            channel_bw_bps: 450_000_000,
+        }
+    }
+
+    #[test]
+    fn capacity_math() {
+        let c = tiny();
+        assert_eq!(c.dies(), 4);
+        assert_eq!(c.capacity(), 4 * 2 * 4 * 8 * 16384);
+    }
+
+    #[test]
+    fn program_read_erase_lifecycle() {
+        let mut a = NandArray::new(tiny());
+        let p = Ppa { die: 0, plane: 0, block: 0, page: 0 };
+        assert!(a.read(p).is_err(), "read-before-write rejected");
+        a.program(p).unwrap();
+        assert!(a.program(p).is_err(), "double program rejected");
+        a.read(p).unwrap();
+        a.erase(0, 0, 0).unwrap();
+        assert!(a.read(p).is_err(), "erased page unreadable");
+        a.program(p).unwrap();
+        assert_eq!(a.programs, 2);
+    }
+
+    #[test]
+    fn in_order_programming_enforced() {
+        let mut a = NandArray::new(tiny());
+        let p1 = Ppa { die: 0, plane: 0, block: 0, page: 1 };
+        assert!(a.program(p1).is_err(), "page 1 before page 0");
+        a.program(Ppa { die: 0, plane: 0, block: 0, page: 0 }).unwrap();
+        a.program(p1).unwrap();
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut a = NandArray::new(tiny());
+        assert!(a.program(Ppa { die: 99, plane: 0, block: 0, page: 0 }).is_err());
+    }
+
+    #[test]
+    fn gen4_nand_derives_table3_read_iops() {
+        let cfg = SsdSpec::gen4().nand;
+        let kiops = cfg.read_iops() / 1e3;
+        // Table 3: 1750 KIOPS 4K random read
+        assert!((kiops - 1750.0).abs() / 1750.0 < 0.02, "gen4 read {kiops} KIOPS");
+    }
+
+    #[test]
+    fn gen5_nand_derives_table3_read_iops() {
+        let cfg = SsdSpec::gen5().nand;
+        let kiops = cfg.read_iops() / 1e3;
+        assert!((kiops - 2800.0).abs() / 2800.0 < 0.02, "gen5 read {kiops} KIOPS");
+    }
+
+    #[test]
+    fn program_bandwidth_supports_table3_seq_write() {
+        // NAND program BW must exceed the spec seq-write figure (host
+        // link / controller become the binding constraint).
+        let g4 = SsdSpec::gen4();
+        assert!(g4.nand.program_bw_bps() >= 6.8e9, "gen4 {}", g4.nand.program_bw_bps());
+        let g5 = SsdSpec::gen5();
+        assert!(g5.nand.program_bw_bps() >= 10.0e9, "gen5 {}", g5.nand.program_bw_bps());
+    }
+}

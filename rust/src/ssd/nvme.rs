@@ -1,0 +1,207 @@
+//! NVMe-style submission/completion queues.
+//!
+//! A functional ring-pair: the host driver posts commands to the SQ,
+//! rings the doorbell, the controller consumes and posts completions to
+//! the CQ with phase-bit semantics. The quickstart example drives the
+//! simulated SSD through this interface, and the HMB comparison uses the
+//! same command set (the NVMe 1.2 HMB feature is the paper's §2.1
+//! host-memory predecessor to LMB).
+
+use crate::error::{Error, Result};
+
+/// NVMe opcode subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NvmeOpcode {
+    Read,
+    Write,
+    Flush,
+}
+
+/// A submission-queue entry (stripped to what the model needs).
+#[derive(Debug, Clone, Copy)]
+pub struct NvmeCommand {
+    pub cid: u16,
+    pub opcode: NvmeOpcode,
+    /// Starting LBA (512 B units, as NVMe counts).
+    pub slba: u64,
+    /// Number of logical blocks, 0-based as in the spec.
+    pub nlb: u16,
+}
+
+/// A completion-queue entry.
+#[derive(Debug, Clone, Copy)]
+pub struct NvmeCompletion {
+    pub cid: u16,
+    pub status: u16,
+    pub phase: bool,
+    pub sq_head: u16,
+}
+
+pub const STATUS_SUCCESS: u16 = 0;
+pub const STATUS_INVALID_FIELD: u16 = 0x2002;
+
+/// A submission/completion queue pair with `depth` slots each.
+#[derive(Debug)]
+pub struct QueuePair {
+    depth: u16,
+    sq: Vec<Option<NvmeCommand>>,
+    cq: Vec<Option<NvmeCompletion>>,
+    sq_tail: u16,
+    sq_head: u16,
+    cq_tail: u16,
+    cq_head: u16,
+    phase: bool,
+    pub submitted: u64,
+    pub completed: u64,
+}
+
+impl QueuePair {
+    pub fn new(depth: u16) -> Result<Self> {
+        if depth < 2 || !depth.is_power_of_two() {
+            return Err(Error::Device(format!("queue depth {depth} must be a power of two >= 2")));
+        }
+        Ok(QueuePair {
+            depth,
+            sq: vec![None; depth as usize],
+            cq: vec![None; depth as usize],
+            sq_tail: 0,
+            sq_head: 0,
+            cq_tail: 0,
+            cq_head: 0,
+            phase: true,
+            submitted: 0,
+            completed: 0,
+        })
+    }
+
+    fn next(&self, v: u16) -> u16 {
+        (v + 1) % self.depth
+    }
+
+    /// Slots available in the SQ (one slot is kept open to distinguish
+    /// full from empty).
+    pub fn sq_free(&self) -> u16 {
+        (self.depth + self.sq_head - self.sq_tail - 1) % self.depth
+    }
+
+    /// Host: post a command; errors when the ring is full.
+    pub fn submit(&mut self, cmd: NvmeCommand) -> Result<()> {
+        if self.sq_free() == 0 {
+            return Err(Error::Device("SQ full".into()));
+        }
+        self.sq[self.sq_tail as usize] = Some(cmd);
+        self.sq_tail = self.next(self.sq_tail);
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Controller: fetch the next command (doorbell consumption).
+    pub fn fetch(&mut self) -> Option<NvmeCommand> {
+        if self.sq_head == self.sq_tail {
+            return None;
+        }
+        let cmd = self.sq[self.sq_head as usize].take();
+        self.sq_head = self.next(self.sq_head);
+        cmd
+    }
+
+    /// Controller: post a completion for `cid`.
+    pub fn complete(&mut self, cid: u16, status: u16) -> Result<()> {
+        let next_tail = self.next(self.cq_tail);
+        if next_tail == self.cq_head {
+            return Err(Error::Device("CQ full".into()));
+        }
+        self.cq[self.cq_tail as usize] = Some(NvmeCompletion {
+            cid,
+            status,
+            phase: self.phase,
+            sq_head: self.sq_head,
+        });
+        self.cq_tail = next_tail;
+        if self.cq_tail == 0 {
+            self.phase = !self.phase; // phase flips on wrap
+        }
+        self.completed += 1;
+        Ok(())
+    }
+
+    /// Host: reap one completion if present.
+    pub fn reap(&mut self) -> Option<NvmeCompletion> {
+        if self.cq_head == self.cq_tail {
+            return None;
+        }
+        let c = self.cq[self.cq_head as usize].take();
+        self.cq_head = self.next(self.cq_head);
+        c
+    }
+
+    /// Outstanding (submitted, not yet completed) commands.
+    pub fn inflight(&self) -> u64 {
+        self.submitted - self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd(cid: u16) -> NvmeCommand {
+        NvmeCommand { cid, opcode: NvmeOpcode::Read, slba: cid as u64 * 8, nlb: 7 }
+    }
+
+    #[test]
+    fn submit_fetch_complete_reap_cycle() {
+        let mut q = QueuePair::new(8).unwrap();
+        q.submit(cmd(1)).unwrap();
+        q.submit(cmd(2)).unwrap();
+        let c1 = q.fetch().unwrap();
+        assert_eq!(c1.cid, 1);
+        q.complete(c1.cid, STATUS_SUCCESS).unwrap();
+        let done = q.reap().unwrap();
+        assert_eq!(done.cid, 1);
+        assert_eq!(done.status, STATUS_SUCCESS);
+        assert_eq!(q.inflight(), 1);
+    }
+
+    #[test]
+    fn sq_full_detected() {
+        let mut q = QueuePair::new(4).unwrap();
+        for i in 0..3 {
+            q.submit(cmd(i)).unwrap();
+        }
+        assert!(q.submit(cmd(9)).is_err(), "ring keeps one open slot");
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = QueuePair::new(16).unwrap();
+        for i in 0..10 {
+            q.submit(cmd(i)).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(q.fetch().unwrap().cid, i);
+        }
+        assert!(q.fetch().is_none());
+    }
+
+    #[test]
+    fn phase_bit_flips_on_wrap() {
+        let mut q = QueuePair::new(4).unwrap();
+        let mut phases = Vec::new();
+        for round in 0..6 {
+            q.submit(cmd(round)).unwrap();
+            let c = q.fetch().unwrap();
+            q.complete(c.cid, STATUS_SUCCESS).unwrap();
+            phases.push(q.reap().unwrap().phase);
+        }
+        // depth 4 → phase flips after completions 4, 8, ...
+        assert_eq!(phases, [true, true, true, true, false, false]);
+    }
+
+    #[test]
+    fn invalid_depth_rejected() {
+        assert!(QueuePair::new(3).is_err());
+        assert!(QueuePair::new(0).is_err());
+        assert!(QueuePair::new(64).is_ok());
+    }
+}

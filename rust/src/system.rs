@@ -1,0 +1,292 @@
+//! Whole-system wiring: one host, its CXL fabric, the LMB module, and
+//! attached devices — the object examples and integration tests build.
+
+use crate::cxl::expander::{Expander, ExpanderConfig};
+use crate::cxl::fabric::{Fabric, FabricConfig};
+use crate::cxl::fm::{FabricManager, HostId};
+use crate::cxl::switch::PbrSwitch;
+use crate::cxl::types::{Bdf, Dpa, MmId, Spid, GIB};
+use crate::error::{Error, Result};
+use crate::host::AddressSpace;
+use crate::lmb::{LmbAlloc, LmbModule};
+use crate::pcie::iommu::Iommu;
+use crate::ssd::spec::SsdSpec;
+
+/// Handle for an attached PCIe device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceId(pub usize);
+
+/// An attached PCIe SSD.
+#[derive(Debug)]
+pub struct PcieSsd {
+    pub bdf: Bdf,
+    pub spec: SsdSpec,
+}
+
+/// An attached CXL device (accelerator / CXL-SSD).
+#[derive(Debug)]
+pub struct CxlDevice {
+    pub spid: Spid,
+    pub name: String,
+}
+
+/// The simulated machine.
+#[derive(Debug)]
+pub struct System {
+    pub fabric: Fabric,
+    fm: FabricManager,
+    iommu: Iommu,
+    space: AddressSpace,
+    module: LmbModule,
+    host: HostId,
+    pcie_devices: Vec<PcieSsd>,
+    cxl_devices: Vec<CxlDevice>,
+    next_bus: u8,
+}
+
+/// Builder for [`System`].
+#[derive(Debug)]
+pub struct SystemBuilder {
+    expander: ExpanderConfig,
+    fabric: FabricConfig,
+    host_dram: u64,
+    switch_ports: u8,
+}
+
+impl Default for SystemBuilder {
+    fn default() -> Self {
+        SystemBuilder {
+            expander: ExpanderConfig::default(),
+            fabric: FabricConfig::default(),
+            host_dram: 16 * GIB,
+            switch_ports: 32,
+        }
+    }
+}
+
+impl SystemBuilder {
+    /// Expander DRAM capacity in GiB.
+    pub fn expander_gib(mut self, gib: u64) -> Self {
+        self.expander.dram_capacity = gib * GIB;
+        self
+    }
+
+    /// Add a PM partition of `gib` GiB.
+    pub fn pm_gib(mut self, gib: u64) -> Self {
+        self.expander.pm_capacity = gib * GIB;
+        self
+    }
+
+    /// Override fabric latency constants.
+    pub fn fabric_config(mut self, cfg: FabricConfig) -> Self {
+        self.fabric = cfg;
+        self
+    }
+
+    /// Host DRAM size in GiB.
+    pub fn host_dram_gib(mut self, gib: u64) -> Self {
+        self.host_dram = gib * GIB;
+        self
+    }
+
+    pub fn build(self) -> Result<System> {
+        let mut fm = FabricManager::new(
+            PbrSwitch::new(self.switch_ports),
+            Expander::new(self.expander),
+        );
+        fm.attach_gfd()?;
+        let (host, _spid) = fm.bind_host()?;
+        // §3.1: the LMB module loads before any device driver initialises.
+        let module = LmbModule::load(host);
+        Ok(System {
+            fabric: Fabric::new(self.fabric),
+            fm,
+            iommu: Iommu::new(),
+            space: AddressSpace::new(self.host_dram),
+            module,
+            host,
+            pcie_devices: Vec::new(),
+            cxl_devices: Vec::new(),
+            next_bus: 1,
+        })
+    }
+}
+
+impl System {
+    pub fn builder() -> SystemBuilder {
+        SystemBuilder::default()
+    }
+
+    pub fn host(&self) -> HostId {
+        self.host
+    }
+
+    pub fn fm(&self) -> &FabricManager {
+        &self.fm
+    }
+
+    pub fn fm_mut(&mut self) -> &mut FabricManager {
+        &mut self.fm
+    }
+
+    pub fn iommu(&self) -> &Iommu {
+        &self.iommu
+    }
+
+    pub fn iommu_mut(&mut self) -> &mut Iommu {
+        &mut self.iommu
+    }
+
+    pub fn space(&self) -> &AddressSpace {
+        &self.space
+    }
+
+    pub fn module(&self) -> &LmbModule {
+        &self.module
+    }
+
+    /// Split borrow for failure handling: the FM mutably plus the module
+    /// immutably (see [`crate::lmb::failure::FailureDomain`]).
+    pub fn failure_parts(&mut self) -> (&mut FabricManager, &LmbModule) {
+        (&mut self.fm, &self.module)
+    }
+
+    /// Attach a PCIe SSD: enumerates a BDF and creates its IOMMU domain.
+    pub fn attach_pcie_ssd(&mut self, spec: SsdSpec) -> DeviceId {
+        assert!(self.module.is_loaded(), "LMB module must load before device drivers (§3.1)");
+        let bdf = Bdf::new(self.next_bus, 0, 0);
+        self.next_bus += 1;
+        self.iommu.attach(bdf);
+        self.pcie_devices.push(PcieSsd { bdf, spec });
+        DeviceId(self.pcie_devices.len() - 1)
+    }
+
+    /// Attach a CXL device, binding it to the switch for P2P.
+    pub fn attach_cxl_device(&mut self, name: &str) -> Result<Spid> {
+        let spid = self.fm.bind_cxl_device()?;
+        self.cxl_devices.push(CxlDevice { spid, name: name.to_string() });
+        Ok(spid)
+    }
+
+    pub fn pcie_device(&self, id: DeviceId) -> Result<&PcieSsd> {
+        self.pcie_devices
+            .get(id.0)
+            .ok_or_else(|| Error::Device(format!("no device {id:?}")))
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.pcie_devices.len() + self.cxl_devices.len()
+    }
+
+    // ---- LMB API surface (Table 2), with the borrows pre-split ----
+
+    /// `lmb_PCIe_alloc` for an attached SSD.
+    pub fn pcie_alloc(&mut self, dev: DeviceId, size: u64) -> Result<LmbAlloc> {
+        let bdf = self.pcie_device(dev)?.bdf;
+        self.module
+            .pcie_alloc(&mut self.fm, &mut self.iommu, &mut self.space, bdf, size)
+    }
+
+    /// `lmb_CXL_alloc` for an attached CXL device.
+    pub fn cxl_alloc(&mut self, spid: Spid, size: u64) -> Result<LmbAlloc> {
+        self.module.cxl_alloc(&mut self.fm, &mut self.space, spid, size)
+    }
+
+    /// `lmb_PCIe_free`.
+    pub fn pcie_free(&mut self, dev: DeviceId, mmid: MmId) -> Result<()> {
+        let bdf = self.pcie_device(dev)?.bdf;
+        self.module
+            .pcie_free(&mut self.fm, &mut self.iommu, &mut self.space, bdf, mmid)
+    }
+
+    /// `lmb_CXL_free`.
+    pub fn cxl_free(&mut self, spid: Spid, mmid: MmId) -> Result<()> {
+        self.module
+            .cxl_free(&mut self.fm, &mut self.iommu, &mut self.space, spid, mmid)
+    }
+
+    /// `lmb_PCIe_share`: map `mmid` into another PCIe device's domain.
+    pub fn pcie_share(&mut self, target: DeviceId, mmid: MmId) -> Result<LmbAlloc> {
+        let bdf = self.pcie_device(target)?.bdf;
+        self.module.pcie_share(&mut self.iommu, bdf, mmid)
+    }
+
+    /// `lmb_CXL_share`: grant another CXL device P2P access to `mmid`.
+    pub fn cxl_share(&mut self, target: Spid, mmid: MmId) -> Result<LmbAlloc> {
+        self.module.cxl_share(&mut self.fm, target, mmid)
+    }
+
+    /// Functional write into an LMB allocation (host-mediated path).
+    pub fn write_alloc(&mut self, mmid: MmId, offset: u64, data: &[u8]) -> Result<()> {
+        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        if offset + data.len() as u64 > a.size {
+            return Err(Error::Config("write beyond allocation".into()));
+        }
+        self.fm.expander_mut().write_dpa(Dpa(a.dpa.0 + offset), data)
+    }
+
+    /// Functional read from an LMB allocation.
+    pub fn read_alloc(&self, mmid: MmId, offset: u64, out: &mut [u8]) -> Result<()> {
+        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        if offset + out.len() as u64 > a.size {
+            return Err(Error::Config("read beyond allocation".into()));
+        }
+        self.fm.expander().read_dpa(Dpa(a.dpa.0 + offset), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::PAGE_SIZE;
+
+    #[test]
+    fn builder_and_alloc_roundtrip() {
+        let mut sys = System::builder().expander_gib(4).build().unwrap();
+        let ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
+        let a = sys.pcie_alloc(ssd, 8 * PAGE_SIZE).unwrap();
+        assert!(a.bus_addr.is_some());
+        // data written through the system is readable back
+        sys.write_alloc(a.mmid, 128, b"lmb!").unwrap();
+        let mut buf = [0u8; 4];
+        sys.read_alloc(a.mmid, 128, &mut buf).unwrap();
+        assert_eq!(&buf, b"lmb!");
+        sys.pcie_free(ssd, a.mmid).unwrap();
+        assert_eq!(sys.module().live_allocs(), 0);
+    }
+
+    #[test]
+    fn ssd_to_accelerator_sharing_scenario() {
+        // Figure 5 + §3.3 zero-copy path across device classes.
+        let mut sys = System::builder().expander_gib(4).build().unwrap();
+        let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let accel = sys.attach_cxl_device("accelerator").unwrap();
+        let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+        sys.write_alloc(a.mmid, 0, b"tensor-bytes").unwrap();
+        let shared = sys.cxl_share(accel, a.mmid).unwrap();
+        assert_eq!(shared.dpa, a.dpa, "same physical bytes, no copy");
+        assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
+    }
+
+    #[test]
+    fn bounds_checked_access() {
+        let mut sys = System::builder().expander_gib(1).build().unwrap();
+        let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+        assert!(sys.write_alloc(a.mmid, PAGE_SIZE - 2, b"xxxx").is_err());
+        let mut buf = [0u8; 8];
+        assert!(sys.read_alloc(a.mmid, PAGE_SIZE - 4, &mut buf).is_err());
+    }
+
+    #[test]
+    fn multiple_devices_unique_bdfs() {
+        let mut sys = System::builder().expander_gib(1).build().unwrap();
+        let a = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let b = sys.attach_pcie_ssd(SsdSpec::gen5());
+        assert_ne!(
+            sys.pcie_device(a).unwrap().bdf,
+            sys.pcie_device(b).unwrap().bdf
+        );
+        assert_eq!(sys.device_count(), 2);
+    }
+}

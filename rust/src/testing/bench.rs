@@ -1,0 +1,109 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (built with `harness =
+//! false`): warm-up + timed repetitions, reporting min/mean/p50 wall
+//! time per iteration and derived throughput.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+}
+
+impl Measurement {
+    /// Iterations/sec implied by the mean.
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: samples[0],
+        p50_ns: samples[samples.len() / 2],
+    }
+}
+
+/// Pretty-print a measurement with an optional items-per-iteration count
+/// (to derive items/sec).
+pub fn report(m: &Measurement, items_per_iter: Option<u64>) {
+    let human = |ns: f64| -> String {
+        if ns >= 1e9 {
+            format!("{:.3}s", ns / 1e9)
+        } else if ns >= 1e6 {
+            format!("{:.3}ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.3}us", ns / 1e3)
+        } else {
+            format!("{ns:.0}ns")
+        }
+    };
+    match items_per_iter {
+        Some(n) => println!(
+            "{:<44} {:>10}/iter (min {:>10})  {:>12.2} Mitems/s",
+            m.name,
+            human(m.mean_ns),
+            human(m.min_ns),
+            n as f64 / m.mean_ns * 1e3,
+        ),
+        None => println!(
+            "{:<44} {:>10}/iter (min {:>10}, p50 {:>10})",
+            m.name,
+            human(m.mean_ns),
+            human(m.min_ns),
+            human(m.p50_ns)
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let m = measure("spin", 1, 8, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.mean_ns);
+        assert_eq!(m.iters, 8);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn per_sec_inverse_of_mean() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6,
+            min_ns: 1e6,
+            p50_ns: 1e6,
+        };
+        assert!((m.per_sec() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Test support: a miniature property-based testing framework.
+//!
+//! `proptest` is unavailable in this offline build environment, so this
+//! module provides the subset we need: random case generation from a
+//! seeded [`Pcg64`](crate::sim::rng::Pcg64), failure reporting with the
+//! reproducing seed, and greedy shrinking for the common carriers
+//! (integers, vectors, tuples).
+//!
+//! Usage:
+//! ```no_run
+//! use lmb::testing::prop::{check, Shrink};
+//! check("add is commutative", 256, |rng| {
+//!     (rng.next_below(1000), rng.next_below(1000))
+//! }, |&(a, b)| a + b == b + a);
+//! ```
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,265 @@
+//! FIO-like job model.
+//!
+//! A [`FioJob`] mirrors the fio options the paper fixes (§4): pattern
+//! (`rw=`), block size (`bs=`), queue depth (`iodepth=`), engine
+//! (`ioengine=libaio`), plus `numjobs` (parallel submitters — enterprise
+//! IOPS specs assume several). The generator yields a deterministic
+//! [`IoRequest`] stream for the simulator.
+
+use crate::error::{Error, Result};
+use crate::sim::rng::Pcg64;
+use crate::workload::zipf::Zipfian;
+
+/// Access pattern (fio `rw=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IoPattern {
+    SeqRead,
+    SeqWrite,
+    RandRead,
+    RandWrite,
+}
+
+impl IoPattern {
+    pub const ALL: [IoPattern; 4] =
+        [IoPattern::SeqWrite, IoPattern::RandWrite, IoPattern::SeqRead, IoPattern::RandRead];
+
+    pub fn is_write(self) -> bool {
+        matches!(self, IoPattern::SeqWrite | IoPattern::RandWrite)
+    }
+
+    pub fn is_seq(self) -> bool {
+        matches!(self, IoPattern::SeqRead | IoPattern::SeqWrite)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            IoPattern::SeqRead => "seq-read",
+            IoPattern::SeqWrite => "seq-write",
+            IoPattern::RandRead => "rand-read",
+            IoPattern::RandWrite => "rand-write",
+        }
+    }
+}
+
+/// Submission engine (fio `ioengine=`). Only the async engine the paper
+/// uses plus a sync engine for latency-oriented tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoEngine {
+    /// Asynchronous, `qd` outstanding per job (the paper's setting).
+    Libaio,
+    /// Synchronous: one outstanding per job regardless of `qd`.
+    Sync,
+}
+
+/// One IO of the generated stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoRequest {
+    /// Logical page address (block-size units).
+    pub lpa: u64,
+    pub is_write: bool,
+}
+
+/// A fio-style job description.
+#[derive(Debug, Clone)]
+pub struct FioJob {
+    pub pattern: IoPattern,
+    /// Block size in bytes (`bs=`).
+    pub block_size: u32,
+    /// Queue depth per job (`iodepth=`).
+    pub qd: u32,
+    /// Parallel submitters (`numjobs=`).
+    pub numjobs: u32,
+    pub engine: IoEngine,
+    /// Total IOs to generate.
+    pub total_ios: u64,
+    /// Addressable span in bytes (`size=`).
+    pub span_bytes: u64,
+    /// Optional zipfian skew for random patterns (`random_distribution=zipf:θ`).
+    pub zipf_theta: Option<f64>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl FioJob {
+    /// The paper's configuration: libaio, QD 64, 4 KB, over `span_bytes`.
+    pub fn paper(pattern: IoPattern, span_bytes: u64) -> Self {
+        FioJob {
+            pattern,
+            block_size: 4096,
+            qd: 64,
+            numjobs: 4,
+            engine: IoEngine::Libaio,
+            total_ios: 200_000,
+            span_bytes,
+            zipf_theta: None,
+            seed: 0x10b5,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.block_size == 0 || !self.block_size.is_power_of_two() {
+            return Err(Error::Config(format!("bad block size {}", self.block_size)));
+        }
+        if self.qd == 0 || self.numjobs == 0 {
+            return Err(Error::Config("qd and numjobs must be >= 1".into()));
+        }
+        if self.span_bytes < self.block_size as u64 {
+            return Err(Error::Config("span smaller than one block".into()));
+        }
+        if let Some(theta) = self.zipf_theta {
+            if !(0.0..2.0).contains(&theta) {
+                return Err(Error::Config(format!("zipf theta {theta} out of range")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of addressable logical pages.
+    pub fn span_pages(&self) -> u64 {
+        self.span_bytes / self.block_size as u64
+    }
+
+    /// Effective outstanding IOs across jobs.
+    pub fn outstanding(&self) -> u32 {
+        match self.engine {
+            IoEngine::Libaio => self.qd * self.numjobs,
+            IoEngine::Sync => self.numjobs,
+        }
+    }
+
+    /// Deterministic request stream.
+    pub fn generate(&self) -> Generator {
+        Generator {
+            job: self.clone(),
+            rng: Pcg64::with_stream(self.seed, 0xf10),
+            zipf: self.zipf_theta.map(|t| Zipfian::new(self.span_pages(), t)),
+            next_seq: 0,
+            emitted: 0,
+        }
+    }
+}
+
+/// Iterator over a job's IO stream.
+pub struct Generator {
+    job: FioJob,
+    rng: Pcg64,
+    zipf: Option<Zipfian>,
+    next_seq: u64,
+    emitted: u64,
+}
+
+impl Iterator for Generator {
+    type Item = IoRequest;
+
+    fn next(&mut self) -> Option<IoRequest> {
+        if self.emitted >= self.job.total_ios {
+            return None;
+        }
+        self.emitted += 1;
+        let pages = self.job.span_pages();
+        let lpa = if self.job.pattern.is_seq() {
+            let l = self.next_seq % pages;
+            self.next_seq += 1;
+            l
+        } else if let Some(z) = &mut self.zipf {
+            z.sample(&mut self.rng)
+        } else {
+            self.rng.next_below(pages)
+        };
+        Some(IoRequest { lpa, is_write: self.job.pattern.is_write() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::GIB;
+
+    fn job(pattern: IoPattern) -> FioJob {
+        FioJob { total_ios: 10_000, ..FioJob::paper(pattern, GIB) }
+    }
+
+    #[test]
+    fn paper_defaults_match_section4() {
+        let j = FioJob::paper(IoPattern::RandRead, GIB);
+        assert_eq!(j.block_size, 4096);
+        assert_eq!(j.qd, 64);
+        assert_eq!(j.engine, IoEngine::Libaio);
+        j.validate().unwrap();
+    }
+
+    #[test]
+    fn sequential_stream_is_sequential_and_wraps() {
+        let mut g = job(IoPattern::SeqRead).generate();
+        let pages = job(IoPattern::SeqRead).span_pages();
+        for i in 0..(pages + 5) {
+            let r = g.next().unwrap();
+            assert_eq!(r.lpa, i % pages);
+            assert!(!r.is_write);
+            if i > 10_000 - 6 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn random_stream_covers_span_uniformly() {
+        let j = job(IoPattern::RandRead);
+        let pages = j.span_pages();
+        let lpas: Vec<u64> = j.generate().map(|r| r.lpa).collect();
+        assert_eq!(lpas.len(), 10_000);
+        let mean = lpas.iter().sum::<u64>() as f64 / lpas.len() as f64;
+        let expect = pages as f64 / 2.0;
+        assert!((mean - expect).abs() / expect < 0.05, "mean {mean} vs {expect}");
+        assert!(lpas.iter().all(|&l| l < pages));
+    }
+
+    #[test]
+    fn write_patterns_mark_writes() {
+        assert!(job(IoPattern::RandWrite).generate().all(|r| r.is_write));
+        assert!(job(IoPattern::SeqRead).generate().all(|r| !r.is_write));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<_> = job(IoPattern::RandWrite).generate().take(100).collect();
+        let b: Vec<_> = job(IoPattern::RandWrite).generate().take(100).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn outstanding_accounts_numjobs_and_engine() {
+        let mut j = job(IoPattern::RandRead);
+        assert_eq!(j.outstanding(), 256); // 64 × 4
+        j.engine = IoEngine::Sync;
+        assert_eq!(j.outstanding(), 4);
+    }
+
+    #[test]
+    fn zipfian_stream_is_skewed() {
+        let mut j = job(IoPattern::RandRead);
+        j.zipf_theta = Some(0.99);
+        j.validate().unwrap();
+        let lpas: Vec<u64> = j.generate().map(|r| r.lpa).collect();
+        // top-1 page should appear far more often than 1/span
+        let mut counts = std::collections::HashMap::new();
+        for l in &lpas {
+            *counts.entry(l).or_insert(0u64) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 100, "zipf hot page count = {max}");
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut j = job(IoPattern::RandRead);
+        j.block_size = 1000;
+        assert!(j.validate().is_err());
+        let mut j = job(IoPattern::RandRead);
+        j.qd = 0;
+        assert!(j.validate().is_err());
+        let mut j = job(IoPattern::RandRead);
+        j.zipf_theta = Some(5.0);
+        assert!(j.validate().is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload engine: FIO-like job specs and LBA stream generators.
+//!
+//! The paper evaluates with FIO (libaio, QD 64, 4 KB IOs) under four
+//! patterns: sequential/random × read/write (§4). We mirror that job
+//! model and add zipfian skew and trace record/replay for the locality
+//! ablation (§4.1's closing remark about "the locality of actual
+//! workloads").
+
+pub mod fio;
+pub mod trace;
+pub mod zipf;
+
+pub use fio::{FioJob, IoEngine, IoPattern, IoRequest};
+pub use trace::Trace;
+pub use zipf::Zipfian;

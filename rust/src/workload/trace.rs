@@ -1,0 +1,143 @@
+//! IO trace record/replay.
+//!
+//! Simple line-oriented text format (`R|W <lpa>`), so traces are
+//! greppable and diffable. Used to feed recorded or externally-derived
+//! workloads (e.g. a production-like skewed trace) through the same
+//! pipeline as the synthetic fio jobs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::workload::fio::IoRequest;
+
+/// An in-memory IO trace.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub requests: Vec<IoRequest>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, req: IoRequest) {
+        self.requests.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Capture a generator's output.
+    pub fn from_iter<I: IntoIterator<Item = IoRequest>>(iter: I) -> Self {
+        Trace { requests: iter.into_iter().collect() }
+    }
+
+    /// Save as `R|W <lpa>` lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for r in &self.requests {
+            writeln!(f, "{} {}", if r.is_write { "W" } else { "R" }, r.lpa)?;
+        }
+        Ok(())
+    }
+
+    /// Load from the text format.
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = BufReader::new(std::fs::File::open(path)?);
+        let mut t = Trace::new();
+        for (lineno, line) in f.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let op = parts.next().ok_or_else(|| bad_line(lineno, line))?;
+            let lpa: u64 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_line(lineno, line))?;
+            let is_write = match op {
+                "W" | "w" => true,
+                "R" | "r" => false,
+                _ => return Err(bad_line(lineno, line)),
+            };
+            t.record(IoRequest { lpa, is_write });
+        }
+        Ok(t)
+    }
+
+    /// Fraction of requests that are writes.
+    pub fn write_fraction(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().filter(|r| r.is_write).count() as f64 / self.requests.len() as f64
+    }
+
+    /// Unique footprint in pages.
+    pub fn footprint(&self) -> usize {
+        let mut s: Vec<u64> = self.requests.iter().map(|r| r.lpa).collect();
+        s.sort_unstable();
+        s.dedup();
+        s.len()
+    }
+}
+
+fn bad_line(lineno: usize, line: &str) -> Error {
+    Error::Config(format!("trace line {}: unparseable '{line}'", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::GIB;
+    use crate::workload::fio::{FioJob, IoPattern};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let job = FioJob { total_ios: 500, ..FioJob::paper(IoPattern::RandWrite, GIB) };
+        let t = Trace::from_iter(job.generate());
+        let path = std::env::temp_dir().join("lmb_trace_test.txt");
+        t.save(&path).unwrap();
+        let t2 = Trace::load(&path).unwrap();
+        assert_eq!(t, t2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stats() {
+        let mut t = Trace::new();
+        t.record(IoRequest { lpa: 1, is_write: true });
+        t.record(IoRequest { lpa: 1, is_write: false });
+        t.record(IoRequest { lpa: 2, is_write: false });
+        assert_eq!(t.len(), 3);
+        assert!((t.write_fraction() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(t.footprint(), 2);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("lmb_trace_bad.txt");
+        std::fs::write(&path, "R 1\nX 2\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let path = std::env::temp_dir().join("lmb_trace_comments.txt");
+        std::fs::write(&path, "# header\n\nW 7\n").unwrap();
+        let t = Trace::load(&path).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.requests[0], IoRequest { lpa: 7, is_write: true });
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,124 @@
+//! Zipfian sampler (Gray et al.'s rejection-free method with a
+//! precomputed harmonic normaliser approximation).
+//!
+//! Drives the locality ablation: the paper's closing claim (§4.1) is
+//! that "by exploiting the locality of actual workloads where most
+//! indices hit on-board memory, the impact … will be considerably
+//! dismissed." Skewed LBA streams let us measure exactly that.
+
+use crate::sim::rng::Pcg64;
+
+/// Zipfian distribution over `[0, n)` with skew `theta` (0 = uniform-ish,
+/// 0.99 = classic YCSB skew).
+#[derive(Debug, Clone)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zeta_n: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0, "zipfian over empty domain");
+        assert!((0.0..1.0).contains(&theta) || (1.0..2.0).contains(&theta));
+        let zeta_n = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zeta_n);
+        Zipfian { n, theta, alpha, zeta_n, eta, zeta2 }
+    }
+
+    /// Exact zeta for small n; sampled approximation above 10⁶ elements
+    /// (error < 1% for the thetas we use, and the sampler only needs a
+    /// normaliser, not exact probabilities).
+    fn zeta(n: u64, theta: f64) -> f64 {
+        if n <= 1_000_000 {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            // zeta(n) ≈ zeta(m) + integral tail
+            let m = 1_000_000u64;
+            let head: f64 = (1..=m).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            let tail = ((n as f64).powf(1.0 - theta) - (m as f64).powf(1.0 - theta))
+                / (1.0 - theta);
+            head + tail
+        }
+    }
+
+    /// Draw one sample (rank 0 is the hottest item).
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zeta_n;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = ((self.eta * u - self.eta + 1.0).powf(self.alpha) * self.n as f64) as u64;
+        v.min(self.n - 1)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Probability mass of the hottest item (diagnostics).
+    pub fn p_top(&self) -> f64 {
+        1.0 / self.zeta_n
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_concentrates_mass() {
+        let z = Zipfian::new(10_000, 0.99);
+        let mut rng = Pcg64::new(5);
+        let n = 100_000;
+        let top_hits = (0..n).filter(|_| z.sample(&mut rng) == 0).count();
+        let frac = top_hits as f64 / n as f64;
+        // hottest item should get ≈ p_top
+        assert!((frac - z.p_top()).abs() < 0.02, "frac={frac} p_top={}", z.p_top());
+        assert!(frac > 0.05, "theta=0.99 top item should be hot, frac={frac}");
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipfian::new(100, 0.5);
+        let mut rng = Pcg64::new(6);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn low_theta_close_to_uniform() {
+        let z = Zipfian::new(1000, 0.01);
+        let mut rng = Pcg64::new(7);
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|_| z.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        // uniform mean would be 499.5; allow generous tolerance
+        assert!(mean > 350.0 && mean < 650.0, "mean={mean}");
+    }
+
+    #[test]
+    fn large_domain_normaliser_approximation() {
+        // must not hang or produce out-of-range values
+        let z = Zipfian::new(2_000_000_000, 0.99);
+        let mut rng = Pcg64::new(8);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut rng) < 2_000_000_000);
+        }
+    }
+}

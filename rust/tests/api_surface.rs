@@ -1,0 +1,120 @@
+//! Table 2 API surface: every operation the paper specifies, exercised
+//! end-to-end through the System facade.
+
+use lmb::cxl::types::{MmId, EXTENT_SIZE, PAGE_SIZE};
+use lmb::prelude::*;
+
+fn system() -> System {
+    System::builder().expander_gib(8).build().unwrap()
+}
+
+#[test]
+fn lmb_pcie_alloc_returns_hpa_and_mmid() {
+    // Table 2: lmb_PCIe_alloc(*dev, size, *hpa, *mmid)
+    let mut sys = system();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let a = sys.pcie_alloc(dev, 16 * PAGE_SIZE).unwrap();
+    assert!(a.hpa.0 > 0);
+    assert!(a.mmid.0 > 0);
+    assert!(a.bus_addr.is_some(), "PCIe consumers get a bus address");
+    assert!(a.dpid.is_none(), "PCIe consumers do not get a DPID");
+}
+
+#[test]
+fn lmb_cxl_alloc_returns_hpa_dpid_and_mmid() {
+    // Table 2: lmb_CXL_alloc(*CXLd, size, *hpa, *DPID, *mmid)
+    let mut sys = system();
+    let accel = sys.attach_cxl_device("cxl-ssd").unwrap();
+    let a = sys.cxl_alloc(accel, 16 * PAGE_SIZE).unwrap();
+    assert!(a.dpid.is_some(), "CXL consumers get the GFD DPID for P2P");
+    assert!(a.bus_addr.is_none());
+}
+
+#[test]
+fn lmb_free_both_flavours() {
+    let mut sys = system();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let accel = sys.attach_cxl_device("accel").unwrap();
+    let a = sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    let b = sys.cxl_alloc(accel, PAGE_SIZE).unwrap();
+    sys.pcie_free(dev, a.mmid).unwrap();
+    sys.cxl_free(accel, b.mmid).unwrap();
+    assert_eq!(sys.module().live_allocs(), 0);
+    assert_eq!(sys.module().leased(), 0, "drained extents returned to FM");
+}
+
+#[test]
+fn lmb_share_both_flavours() {
+    // Table 2: lmb_PCIe_share(*dev, mmid, *hpa) / lmb_CXL_share(...)
+    let mut sys = system();
+    let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let ssd2 = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let accel = sys.attach_cxl_device("accel").unwrap();
+    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+    let s1 = sys.pcie_share(ssd2, a.mmid).unwrap();
+    assert_eq!(s1.hpa, a.hpa, "same HPA, zero copy");
+    // bus addresses live in per-device IOVA spaces (values may collide
+    // across domains); the share must simply be device-visible
+    assert!(s1.bus_addr.is_some());
+    let s2 = sys.cxl_share(accel, a.mmid).unwrap();
+    assert_eq!(s2.dpa, a.dpa);
+    assert!(s2.dpid.is_some());
+}
+
+#[test]
+fn data_written_by_owner_visible_to_sharer() {
+    let mut sys = system();
+    let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+    sys.write_alloc(a.mmid, 0, b"shared-index-bytes").unwrap();
+    let mut buf = [0u8; 18];
+    sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
+    assert_eq!(&buf, b"shared-index-bytes");
+}
+
+#[test]
+fn free_of_foreign_or_unknown_mmid_fails() {
+    let mut sys = system();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev2 = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let a = sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    assert!(sys.pcie_free(dev2, a.mmid).is_err(), "not the owner");
+    assert!(sys.pcie_free(dev, MmId(4242)).is_err(), "unknown mmid");
+    // original owner can still free
+    sys.pcie_free(dev, a.mmid).unwrap();
+}
+
+#[test]
+fn module_requests_256mb_extents_on_demand() {
+    // §3.2: "it requests a single 256MB block from the Expander"
+    let mut sys = system();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let fm_before = sys.fm().available();
+    sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    assert_eq!(sys.fm().available(), fm_before - EXTENT_SIZE);
+    // second small alloc: no new extent
+    sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    assert_eq!(sys.fm().available(), fm_before - EXTENT_SIZE);
+}
+
+#[test]
+fn l2p_table_allocation_for_gen5_ssd() {
+    // Figure 5 flow: SSD driver allocates its whole L2P working set.
+    // A 7.68 TB drive needs ~7.5 GB; allocate per-256MB segments the way
+    // the kernel module hands them out.
+    let mut sys = System::builder().expander_gib(16).build().unwrap();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let spec = SsdSpec::gen5();
+    let segments = spec.l2p_bytes().div_ceil(EXTENT_SIZE);
+    let mut allocs = Vec::new();
+    for _ in 0..segments {
+        allocs.push(sys.pcie_alloc(dev, EXTENT_SIZE).unwrap());
+    }
+    assert_eq!(allocs.len() as u64, 28, "7.5 GB in 256 MB segments");
+    assert!(sys.module().used() >= spec.l2p_bytes());
+    // all segments have distinct, device-visible bus addresses
+    let mut buses: Vec<_> = allocs.iter().map(|a| a.bus_addr.unwrap().0).collect();
+    buses.sort_unstable();
+    buses.dedup();
+    assert_eq!(buses.len() as u64, segments);
+}

@@ -1,0 +1,167 @@
+//! Whole-stack end-to-end: a Gen5 SSD stores its L2P table in the CXL
+//! expander through the LMB module, serves lookups over the functional
+//! data path, and the performance model reproduces the paper's Figure 6
+//! shape on both devices.
+
+use lmb::coordinator::Coordinator;
+use lmb::cxl::types::{Dpa, GIB};
+use lmb::pcie::dma::DmaDescriptor;
+use lmb::pcie::iommu::Iommu;
+use lmb::pcie::link::{PcieGen, PcieLink};
+use lmb::pcie::root_complex::{RootComplex, RootComplexConfig};
+use lmb::prelude::*;
+use lmb::ssd::ftl::l2p::{L2pTable, UNMAPPED};
+use lmb::ssd::IndexPlacement;
+use lmb::workload::fio::IoPattern;
+
+/// The functional half: mapping entries written through the LMB data
+/// path are the same bytes the device later DMA-reads back.
+#[test]
+fn l2p_table_lives_in_expander_and_serves_lookups() {
+    let mut sys = System::builder().expander_gib(8).build().unwrap();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+
+    // Driver boots: allocate an L2P segment via lmb_PCIe_alloc (Fig. 5).
+    let seg_entries = 1u64 << 16;
+    let alloc = sys.pcie_alloc(dev, seg_entries * 4).unwrap();
+
+    // FTL populates mappings and flushes them into LMB memory.
+    let mut table = L2pTable::new(seg_entries);
+    for lpa in (0..seg_entries).step_by(3) {
+        table.update(lpa, (lpa as u32) * 7 + 1);
+    }
+    table
+        .flush_to_lmb(sys.fm_mut().expander_mut(), alloc.dpa, 0, seg_entries)
+        .unwrap();
+
+    // A second FTL instance (simulating reboot) reloads from LMB.
+    let mut reloaded = L2pTable::new(seg_entries);
+    reloaded
+        .load_from_lmb(sys.fm().expander(), alloc.dpa, 0, seg_entries)
+        .unwrap();
+    for lpa in 0..seg_entries {
+        let want = if lpa % 3 == 0 { (lpa as u32) * 7 + 1 } else { UNMAPPED };
+        assert_eq!(reloaded.snapshot(lpa, 1)[0], want, "lpa {lpa}");
+    }
+}
+
+/// The device-visible path: DMA through IOMMU + root complex + switch
+/// reaches the same bytes.
+#[test]
+fn device_dma_reads_l2p_entries_through_fabric() {
+    let mut switch = lmb::cxl::switch::PbrSwitch::new(8);
+    let (host_spid, _) = switch.bind_host().unwrap();
+    switch.attach_gfd().unwrap();
+    let mut expander = lmb::cxl::expander::Expander::new(
+        lmb::cxl::expander::ExpanderConfig { dram_capacity: GIB, ..Default::default() },
+    );
+    let hdm_base = 4 * GIB;
+    expander
+        .add_decoder(lmb::cxl::types::Range::new(hdm_base, GIB), Dpa(0))
+        .unwrap();
+    let mut space = lmb::host::AddressSpace::new(GIB);
+    space
+        .add_hdm_window(lmb::cxl::types::Range::new(hdm_base, GIB), Dpa(0))
+        .unwrap();
+    let mut iommu = Iommu::new();
+    let bdf = lmb::cxl::types::Bdf::new(1, 0, 0);
+    iommu.attach(bdf);
+    let bus = iommu
+        .map(
+            bdf,
+            lmb::cxl::types::Hpa(hdm_base),
+            1 << 20,
+            lmb::pcie::iommu::IommuPerm::ReadWrite,
+        )
+        .unwrap();
+
+    // "firmware" writes 4-byte PPAs at DPA 0 via host; device DMA-reads.
+    let entries: Vec<u8> = (0..1024u32).flat_map(|p| (p * 3).to_le_bytes()).collect();
+    expander.write_dpa(Dpa(0), &entries).unwrap();
+
+    let rc = RootComplex::new(RootComplexConfig { host_spid, ..Default::default() });
+    let link = PcieLink::new(PcieGen::Gen5, 4);
+    let mut buf = vec![0u8; 4096];
+    let res = rc
+        .dma(
+            DmaDescriptor::read(bdf, bus, 4096),
+            &link,
+            &mut iommu,
+            &space,
+            &switch,
+            &mut expander,
+            &mut buf,
+        )
+        .unwrap();
+    assert_eq!(buf, entries);
+    // latency includes conversion + fabric + media
+    assert!(res.latency.as_ns() > 400);
+}
+
+/// The performance half: Figure 6 shape on both devices, end to end
+/// through the coordinator (native backend so this test needs no
+/// artifacts; the XLA equivalence is covered by xla_parity.rs).
+#[test]
+fn figure6_shape_holds_on_both_devices() {
+    let coord = Coordinator::native().with_batches(2);
+
+    // --- Gen4 (Figure 6a) ---
+    let g4 = coord.figure6(PcieGen::Gen4).unwrap();
+    // writes: every LMB scheme within 1% of Ideal
+    for scheme in [IndexPlacement::LmbCxl, IndexPlacement::LmbPcie] {
+        for pattern in [IoPattern::SeqWrite, IoPattern::RandWrite] {
+            let r = g4.ratio_vs_ideal(scheme, pattern).unwrap();
+            assert!((0.99..1.01).contains(&r), "g4 {scheme:?} {pattern:?} ratio {r}");
+        }
+    }
+    // DFTL: ~7x worse writes, ~14x worse reads (paper's factors; we
+    // accept the band DESIGN.md documents)
+    let w = g4.ratio_vs_ideal(IndexPlacement::Dftl, IoPattern::RandWrite).unwrap();
+    assert!((4.0..10.0).contains(&w), "g4 DFTL write ratio {w}");
+    let r = g4.ratio_vs_ideal(IndexPlacement::Dftl, IoPattern::RandRead).unwrap();
+    assert!((10.0..20.0).contains(&r), "g4 DFTL read ratio {r}");
+    // LMB-CXL reads ≈ Ideal on Gen4
+    let c = g4.ratio_vs_ideal(IndexPlacement::LmbCxl, IoPattern::RandRead).unwrap();
+    assert!(c < 1.02, "g4 LMB-CXL read ratio {c}");
+    // LMB-PCIe reads: modest drop (paper 13.3%)
+    let p = g4.ratio_vs_ideal(IndexPlacement::LmbPcie, IoPattern::RandRead).unwrap();
+    assert!((1.05..1.30).contains(&p), "g4 LMB-PCIe read ratio {p}");
+
+    // --- Gen5 (Figure 6b) ---
+    let g5 = coord.figure6(PcieGen::Gen5).unwrap();
+    // writes still match Ideal
+    let wp = g5.ratio_vs_ideal(IndexPlacement::LmbPcie, IoPattern::RandWrite).unwrap();
+    assert!((0.99..1.01).contains(&wp), "g5 LMB-PCIe write ratio {wp}");
+    // the same +190ns now costs real throughput (paper: −56%)
+    let c5 = g5.ratio_vs_ideal(IndexPlacement::LmbCxl, IoPattern::RandRead).unwrap();
+    assert!(c5 > 1.3, "g5 LMB-CXL rand read ratio {c5}");
+    // LMB-PCIe worse than LMB-CXL; DFTL worst
+    let p5 = g5.ratio_vs_ideal(IndexPlacement::LmbPcie, IoPattern::RandRead).unwrap();
+    let d5 = g5.ratio_vs_ideal(IndexPlacement::Dftl, IoPattern::RandRead).unwrap();
+    assert!(p5 > c5, "PCIe ({p5}) worse than CXL ({c5})");
+    assert!(d5 > p5, "DFTL ({d5}) worst of all ({p5})");
+
+    // cross-device: the paper's takeaway — faster device, bigger CXL hit
+    let g4c = g4.ratio_vs_ideal(IndexPlacement::LmbCxl, IoPattern::RandRead).unwrap();
+    assert!(c5 > g4c + 0.2, "gen5 CXL penalty ({c5}) > gen4 ({g4c})");
+}
+
+/// Failure injection end to end: expander failure breaks allocation,
+/// recovery restores it; the SSD falls back to DFTL-class service.
+#[test]
+fn expander_failure_and_recovery() {
+    let mut sys = System::builder().expander_gib(4).build().unwrap();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let a = sys.pcie_alloc(dev, 4096).unwrap();
+    sys.write_alloc(a.mmid, 0, b"survives?").unwrap();
+
+    sys.fm_mut().expander_mut().set_failed(true);
+    assert!(sys.pcie_alloc(dev, 4096).is_err(), "no alloc during outage");
+    let mut buf = [0u8; 9];
+    assert!(sys.read_alloc(a.mmid, 0, &mut buf).is_err(), "no access during outage");
+
+    sys.fm_mut().expander_mut().set_failed(false);
+    sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
+    assert_eq!(&buf, b"survives?", "DRAM contents modeled as retained");
+    sys.pcie_alloc(dev, 4096).unwrap();
+}

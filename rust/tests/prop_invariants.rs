@@ -1,0 +1,218 @@
+//! Property-based invariants over the coordinator-facing state machines:
+//! FM extent accounting, the LMB module's allocator + access-control
+//! wiring, and IOMMU isolation — driven by the in-tree mini prop
+//! framework (proptest is unavailable offline; see lmb::testing).
+
+use lmb::cxl::types::{MmId, PAGE_SIZE};
+use lmb::prelude::*;
+use lmb::sim::rng::Pcg64;
+use lmb::testing::prop;
+
+/// Random alloc/free/share interleavings keep every invariant:
+/// * FM: free+leased == capacity, free list coalesced;
+/// * module: sub-allocator accounting exact, no placement overlap;
+/// * IOMMU: mappings exist iff a live alloc/share references them.
+#[test]
+fn random_api_interleavings_preserve_invariants() {
+    prop::check(
+        "lmb api interleaving",
+        48,
+        |rng| {
+            // generate a script of (op, size-pages) pairs
+            prop::vec_of(rng, 60, |r| (r.next_below(4), r.next_below(64) + 1))
+        },
+        |script: &Vec<(u64, u64)>| {
+            let mut sys = System::builder().expander_gib(2).build().unwrap();
+            let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+            let dev2 = sys.attach_pcie_ssd(SsdSpec::gen5());
+            let accel = sys.attach_cxl_device("accel").unwrap();
+            let mut live: Vec<MmId> = Vec::new();
+            let mut live_cxl: Vec<MmId> = Vec::new();
+            let mut rng = Pcg64::new(0x5c21f7);
+            for &(op, pages) in script {
+                let pages = pages.max(1); // shrinking may zero sizes
+                match op {
+                    0 => {
+                        if let Ok(a) = sys.pcie_alloc(dev, pages * PAGE_SIZE) {
+                            live.push(a.mmid);
+                        }
+                    }
+                    1 => {
+                        if let Ok(a) = sys.cxl_alloc(accel, pages * PAGE_SIZE) {
+                            // CXL allocs freed immediately half the time
+                            if rng.chance(0.5) {
+                                sys.cxl_free(accel, a.mmid).unwrap();
+                            } else {
+                                live_cxl.push(a.mmid);
+                            }
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_below(live.len() as u64)) as usize;
+                            let mmid = live.swap_remove(i);
+                            sys.pcie_free(dev, mmid).unwrap();
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = (rng.next_below(live.len() as u64)) as usize;
+                            let _ = sys.pcie_share(dev2, live[i]);
+                        }
+                    }
+                }
+                if sys.fm().check_invariants().is_err() {
+                    return false;
+                }
+                if sys.module().check_invariants().is_err() {
+                    return false;
+                }
+            }
+            // teardown: everything freeable, everything returns to the FM
+            for mmid in live {
+                if sys.pcie_free(dev, mmid).is_err() {
+                    return false;
+                }
+            }
+            for mmid in live_cxl {
+                if sys.cxl_free(accel, mmid).is_err() {
+                    return false;
+                }
+            }
+            sys.module().live_allocs() == 0 && sys.fm().check_invariants().is_ok()
+        },
+    );
+}
+
+/// Isolation: no sequence of allocations ever hands two devices
+/// overlapping DPA ranges (unless explicitly shared).
+#[test]
+fn allocations_never_overlap() {
+    prop::check(
+        "no overlapping placements",
+        48,
+        |rng| prop::vec_of(rng, 40, |r| r.next_below(256) + 1),
+        |sizes: &Vec<u64>| {
+            let mut sys = System::builder().expander_gib(2).build().unwrap();
+            let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+            let mut spans: Vec<(u64, u64)> = Vec::new();
+            for &pages in sizes {
+                match sys.pcie_alloc(dev, pages * PAGE_SIZE) {
+                    Ok(a) => {
+                        let new = (a.dpa.0, a.dpa.0 + a.size);
+                        for &(s, e) in &spans {
+                            if new.0 < e && s < new.1 {
+                                return false; // overlap!
+                            }
+                        }
+                        spans.push(new);
+                    }
+                    Err(_) => break, // capacity exhausted is fine
+                }
+            }
+            true
+        },
+    );
+}
+
+/// SAT never grants access that was not explicitly programmed: random
+/// grant sets, then probe random (spid, dpa) points against a shadow
+/// model.
+#[test]
+fn sat_matches_shadow_model() {
+    use lmb::cxl::sat::{SatPerm, SatTable};
+    use lmb::cxl::types::{Dpa, Range, Spid};
+    prop::check(
+        "SAT shadow equivalence",
+        64,
+        |rng| {
+            prop::vec_of(rng, 24, |r| {
+                (
+                    r.next_below(4),               // spid
+                    r.next_below(64) * PAGE_SIZE,  // base
+                    (r.next_below(8) + 1) * PAGE_SIZE, // len
+                )
+            })
+        },
+        |grants: &Vec<(u64, u64, u64)>| {
+            let mut sat = SatTable::new(1024);
+            let mut shadow: Vec<(u16, u64, u64)> = Vec::new();
+            for &(spid, base, len) in grants {
+                let spid = Spid(spid as u16);
+                if sat.grant(spid, Range::new(base, len), SatPerm::ReadWrite).is_ok() {
+                    shadow.push((spid.0, base, base + len));
+                }
+            }
+            // probe a grid of points
+            for spid in 0..4u16 {
+                for page in 0..72u64 {
+                    let dpa = page * PAGE_SIZE + 17;
+                    let want = shadow
+                        .iter()
+                        .any(|&(s, b, e)| s == spid && dpa >= b && dpa + 64 <= e);
+                    if sat.check(Spid(spid), Dpa(dpa), 64, true) != want {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The pipeline scan is monotone: increasing any service time never
+/// decreases any completion time (sanity of the performance model the
+/// whole evaluation rests on).
+#[test]
+fn pipeline_scan_is_monotone() {
+    use lmb::runtime::{ModelInputs, ModelParams, NativeModel, StageWidths};
+    let params = ModelParams {
+        firmware_ns: 440.0,
+        index_accesses: 1.0,
+        index_access_ns: 190.0,
+        dram_ns: 70.0,
+        flash_read_ns: 25_000.0,
+        dftl_ops_read: 1.0,
+        dftl_ops_write: 2.0,
+        t_read_ns: 60_000.0,
+        t_buf_ns: 9_000.0,
+        xfer_ns: 570.0,
+        is_dftl: 0.0,
+        jitter_amp: 0.0,
+    };
+    prop::check(
+        "scan monotonicity",
+        64,
+        |rng| (1u64 << rng.next_below(4), rng.next_below(1_000_000)),
+        |&(width_sel, seed): &(u64, u64)| {
+            // widths are powers of two dividing the batch of 64
+            let width = (width_sel.max(1) as usize).next_power_of_two().min(8);
+            let widths = StageWidths { index: width, media: 8, link: 1 };
+            let n = 64;
+            let mut rng = Pcg64::new(seed);
+            let mut clock = 0f32;
+            let mut arrival = Vec::with_capacity(n);
+            for _ in 0..n {
+                clock += rng.next_below(2000) as f32;
+                arrival.push(clock);
+            }
+            let base = ModelInputs {
+                arrival: arrival.clone(),
+                is_write: vec![0.0; n],
+                hit: vec![1.0; n],
+                jitter: vec![0.5; n],
+                params,
+            };
+            let mut slower = base.clone();
+            slower.params.t_read_ns *= 1.5;
+            let m = NativeModel::new(widths);
+            let out_a = m.run(&base).unwrap();
+            let out_b = m.run(&slower).unwrap();
+            out_a
+                .completion
+                .iter()
+                .zip(out_b.completion.iter())
+                .all(|(a, b)| b >= a)
+        },
+    );
+}

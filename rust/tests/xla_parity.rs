@@ -1,0 +1,153 @@
+//! XLA ⇄ native parity: the AOT-compiled JAX/Pallas model and the pure
+//! Rust mirror must produce the same numbers for the same inputs.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifacts directory is missing so `cargo test` stays green in a
+//! fresh checkout.
+
+use lmb::coordinator::{variant_for, Coordinator};
+use lmb::pcie::link::PcieGen;
+use lmb::runtime::{Artifacts, ModelInputs, ModelParams, NativeModel};
+use lmb::sim::rng::Pcg64;
+use lmb::ssd::IndexPlacement;
+use lmb::workload::fio::IoPattern;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Artifacts::default_dir();
+    if Artifacts::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn params(is_dftl: f32) -> ModelParams {
+    ModelParams {
+        firmware_ns: 440.0,
+        index_accesses: 1.0,
+        index_access_ns: 880.0,
+        dram_ns: 70.0,
+        flash_read_ns: 25_000.0,
+        dftl_ops_read: 1.0,
+        dftl_ops_write: 2.0,
+        t_read_ns: 73_000.0,
+        t_buf_ns: 9_000.0,
+        xfer_ns: 570.0,
+        is_dftl,
+        jitter_amp: 0.1,
+    }
+}
+
+fn random_inputs(n: usize, seed: u64, is_dftl: f32) -> ModelInputs {
+    let mut rng = Pcg64::new(seed);
+    let mut clock = 0f64;
+    let mut arrival = Vec::with_capacity(n);
+    for _ in 0..n {
+        clock += rng.exp(600.0);
+        arrival.push(clock as f32);
+    }
+    ModelInputs {
+        arrival,
+        is_write: (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect(),
+        hit: (0..n).map(|_| if rng.chance(0.6) { 1.0 } else { 0.0 }).collect(),
+        jitter: (0..n).map(|_| rng.next_f64() as f32).collect(),
+        params: params(is_dftl),
+    }
+}
+
+#[test]
+fn xla_matches_native_for_both_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let artifacts = Artifacts::load(&dir).expect("load artifacts");
+    for gen in [PcieGen::Gen4, PcieGen::Gen5] {
+        let (name, batch, widths) = variant_for(gen);
+        let model = artifacts.get(name).expect("variant present");
+        assert_eq!(model.batch, batch, "manifest batch matches contract");
+        assert_eq!(model.widths, widths);
+        for (seed, is_dftl) in [(1u64, 0.0f32), (2, 1.0), (3, 0.0)] {
+            let inputs = random_inputs(batch, seed, is_dftl);
+            let xla = model.run(&inputs).expect("xla run");
+            let native = NativeModel::new(widths).run(&inputs).expect("native run");
+            let mut max_rel = 0f64;
+            for i in 0..batch {
+                let a = xla.completion[i] as f64;
+                let b = native.completion[i] as f64;
+                let rel = (a - b).abs() / b.abs().max(1.0);
+                max_rel = max_rel.max(rel);
+            }
+            assert!(
+                max_rel < 1e-4,
+                "{name} seed {seed} dftl {is_dftl}: max rel completion err {max_rel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_latency_row_consistent_with_completion() {
+    let Some(dir) = artifacts_dir() else { return };
+    let artifacts = Artifacts::load(&dir).expect("load artifacts");
+    let (name, batch, _) = variant_for(PcieGen::Gen4);
+    let model = artifacts.get(name).unwrap();
+    let inputs = random_inputs(batch, 9, 0.0);
+    let out = model.run(&inputs).unwrap();
+    for i in 0..batch {
+        let expect = out.completion[i] - inputs.arrival[i];
+        let got = out.latency[i];
+        assert!(
+            (got - expect).abs() <= 64.0, // f32 resolution at ~1e8 ns magnitudes
+            "latency[{i}] {got} vs completion-arrival {expect}"
+        );
+    }
+}
+
+#[test]
+fn coordinator_xla_and_native_agree_on_figure6() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = Coordinator::with_artifacts(&dir).expect("xla coordinator");
+    let native = Coordinator::native();
+    assert_eq!(xla.backend_name(), "xla-pjrt");
+    let a = xla.figure6(PcieGen::Gen5).unwrap();
+    let b = native.figure6(PcieGen::Gen5).unwrap();
+    for (ra, rb) in a.rows.iter().zip(b.rows.iter()) {
+        assert_eq!(ra.scheme, rb.scheme);
+        assert_eq!(ra.pattern, rb.pattern);
+        // analytic throughput identical; measured within a few percent
+        assert!((ra.kiops - rb.kiops).abs() < 1e-9);
+        let rel = (ra.measured_kiops - rb.measured_kiops).abs() / rb.measured_kiops;
+        assert!(
+            rel < 0.02,
+            "{:?}/{:?}: xla {} vs native {}",
+            ra.scheme,
+            ra.pattern,
+            ra.measured_kiops,
+            rb.measured_kiops
+        );
+        // latency percentiles close (same seeds, same math)
+        let p99_rel = (ra.p99.as_ns() as f64 - rb.p99.as_ns() as f64).abs()
+            / rb.p99.as_ns().max(1) as f64;
+        assert!(p99_rel < 0.05, "{:?}/{:?} p99 differs {p99_rel}", ra.scheme, ra.pattern);
+    }
+}
+
+#[test]
+fn gather_artifact_loads_and_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let artifacts = Artifacts::load(&dir).expect("load");
+    // l2p_gather is int32-typed; run it raw through the executable to
+    // verify non-f32 artifacts round-trip too.
+    assert!(artifacts.names().contains(&"l2p_gather"));
+    assert!(artifacts.names().contains(&"locality"));
+}
+
+#[test]
+fn dftl_scheme_latency_distribution_has_miss_tail() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::with_artifacts(&dir).unwrap();
+    let spec = lmb::ssd::spec::SsdSpec::gen4();
+    let job = lmb::workload::fio::FioJob::paper(IoPattern::RandRead, 64 << 30);
+    let dftl = coord.run_scheme(&spec, IndexPlacement::Dftl, &job).unwrap();
+    let ideal = coord.run_scheme(&spec, IndexPlacement::Ideal, &job).unwrap();
+    assert!(dftl.p99 > ideal.p99, "miss tail visible via XLA path");
+}
