@@ -1,7 +1,8 @@
 //! Expander failure handling (§1: "A single failure in the memory
 //! expander can render all devices unavailable").
 //!
-//! Demonstrates both policies in `lmb::lmb::failure`:
+//! Demonstrates both policies in `lmb::lmb::failure` through the
+//! unified `LmbHost` context:
 //! * FailStop — the SSD loses its CXL-resident L2P and degrades to
 //!   flash-resident (DFTL-class) indexing until recovery;
 //! * WriteThroughShadow — critical allocations stay served from a host
@@ -27,15 +28,15 @@ fn main() -> Result<()> {
 
     // ---- policy 1: FailStop ----
     let mut sys = System::builder().expander_gib(8).build()?;
-    let ssd = sys.attach_pcie_ssd(spec.clone());
-    let l2p = sys.pcie_alloc(ssd, 64 << 20)?;
+    let ssd_id = sys.attach_pcie_ssd(spec.clone());
+    let ssd = sys.consumer(ssd_id)?;
+    let l2p = sys.alloc(ssd, 64 << 20)?;
     sys.write_alloc(l2p.mmid, 0, &vec![0xAA; 1 << 20])?;
     let mut fd = FailureDomain::new(FailurePolicy::FailStop);
 
     println!("steady state: LMB-CXL indexing at {:.0} KIOPS", kiops(IndexPlacement::LmbCxl));
 
-    let (fm, module) = sys.failure_parts();
-    let states = fd.fail_expander(fm, module);
+    let states = fd.fail(sys.lmb_mut());
     assert_eq!(states[&l2p.mmid], ServingState::Unavailable);
     println!(
         "expander FAILED (FailStop): L2P unavailable -> firmware falls back \
@@ -43,9 +44,9 @@ fn main() -> Result<()> {
         kiops(IndexPlacement::Dftl),
         kiops(IndexPlacement::LmbCxl) / kiops(IndexPlacement::Dftl)
     );
-    assert!(sys.pcie_alloc(ssd, 4096).is_err(), "no new allocations during outage");
+    assert!(sys.alloc(ssd, 4096).is_err(), "no new allocations during outage");
 
-    { let (fm, module) = sys.failure_parts(); fd.recover_expander(fm, module, |_| Ok(0))?; }
+    fd.recover(sys.lmb_mut(), |_| Ok(0))?;
     let mut probe = [0u8; 4];
     sys.read_alloc(l2p.mmid, 0, &mut probe)?;
     assert_eq!(probe, [0xAA; 4]);
@@ -56,14 +57,14 @@ fn main() -> Result<()> {
 
     // ---- policy 2: WriteThroughShadow ----
     let mut sys = System::builder().expander_gib(8).build()?;
-    let ssd = sys.attach_pcie_ssd(spec.clone());
-    let crit = sys.pcie_alloc(ssd, 64 << 20)?;
-    let scratch = sys.pcie_alloc(ssd, 16 << 20)?;
+    let ssd_id = sys.attach_pcie_ssd(spec.clone());
+    let ssd = sys.consumer(ssd_id)?;
+    let crit = sys.alloc(ssd, 64 << 20)?;
+    let scratch = sys.alloc(ssd, 16 << 20)?;
     let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
     fd.register_critical(crit.mmid);
 
-    let (fm, module) = sys.failure_parts();
-    let states = fd.fail_expander(fm, module);
+    let states = fd.fail(sys.lmb_mut());
     assert_eq!(states[&crit.mmid], ServingState::HostShadow);
     assert_eq!(states[&scratch.mmid], ServingState::Unavailable);
     // shadow-served index = HMB-class latency instead of CXL-class
@@ -75,13 +76,10 @@ fn main() -> Result<()> {
         fabric.path_latency(PathKind::CxlP2pToHdm)
     );
 
-    let restored = {
-        let (fm, module) = sys.failure_parts();
-        fd.recover_expander(fm, module, |mmid| {
-            // copy the shadow back into HDM
-            Ok(if mmid == crit.mmid { crit.size } else { 0 })
-        })?
-    };
+    let restored = fd.recover(sys.lmb_mut(), |mmid| {
+        // copy the shadow back into HDM
+        Ok(if mmid == crit.mmid { crit.size } else { 0 })
+    })?;
     println!(
         "recovered: {} MiB copied back from shadow, {} failover(s), {} recovery(ies)",
         restored >> 20,

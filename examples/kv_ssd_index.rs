@@ -4,8 +4,8 @@
 //! A KV-SSD needs a key→location index that is far larger per byte of
 //! payload than a block L2P table. This example builds a *functional*
 //! open-addressing hash index whose buckets live in expander memory
-//! (allocated through `lmb_PCIe_alloc`, bytes stored through the CXL
-//! data path), runs a YCSB-ish zipfian GET workload against it, and
+//! (allocated through the unified LMB `alloc`, bytes stored through the
+//! CXL data path), runs a YCSB-ish zipfian GET workload against it, and
 //! compares modeled index throughput for onboard DRAM (capped),
 //! LMB-CXL, LMB-PCIe, and an LSM-style flash index.
 //!
@@ -76,10 +76,11 @@ impl LmbHashIndex {
 fn main() -> Result<()> {
     let mut sys = System::builder().expander_gib(8).build()?;
     let kv_ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let kv = sys.consumer(kv_ssd)?;
 
     // index sized for 100k keys at 50% load factor
     let buckets = 1u64 << 18;
-    let alloc = sys.pcie_alloc(kv_ssd, buckets * BUCKET)?;
+    let alloc = sys.alloc(kv, buckets * BUCKET)?;
     let index = LmbHashIndex { base: alloc.dpa, buckets };
     println!(
         "KV index in LMB: {} buckets, {} MiB at dpa {}",

@@ -2,6 +2,9 @@
 //! share one expander through the FM, capacity moves between consumers
 //! on demand, and shared-memory interference is measurable.
 //!
+//! Also shows `alloc_many`: batch allocation is all-or-nothing, so an
+//! oversubscribed claim rolls back instead of squatting on extents.
+//!
 //! Run: `cargo run --release --example multi_device_pooling`
 
 use lmb::coordinator::contention;
@@ -14,24 +17,31 @@ use lmb::workload::fio::{FioJob, IoPattern};
 fn main() -> Result<()> {
     // ---- dynamic capacity: extents migrate between consumers ----
     let mut sys = System::builder().expander_gib(2).build()?; // 8 extents
-    let a = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let b = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let a_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let b_id = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let a = sys.consumer(a_id)?;
+    let b = sys.consumer(b_id)?;
 
-    // device A grabs 6 extents' worth
-    let mut a_allocs = Vec::new();
-    for _ in 0..6 {
-        a_allocs.push(sys.pcie_alloc(a, EXTENT_SIZE)?);
-    }
+    // device A grabs 6 extents' worth in one batch
+    let mut a_allocs = sys.alloc_many(a, &[EXTENT_SIZE; 6])?;
     println!(
         "A holds {} MiB; FM has {} MiB free",
         sys.module().leased() >> 20,
         sys.fm().available() >> 20
     );
 
-    // device B wants 4 extents: only 2 are available -> partial success
+    // device B wants 4 extents atomically: only 2 are available, so the
+    // batch fails and rolls back — nothing left half-claimed
+    match sys.alloc_many(b, &[EXTENT_SIZE; 4]) {
+        Err(e) => println!("B batch blocked (rolled back cleanly): {e}"),
+        Ok(_) => unreachable!("cannot fit 4 extents"),
+    }
+    assert_eq!(sys.fm().available(), 2 * EXTENT_SIZE, "rollback released B's partial claim");
+
+    // one at a time, B claims what exists -> partial progress
     let mut b_allocs = Vec::new();
     for _ in 0..4 {
-        match sys.pcie_alloc(b, EXTENT_SIZE) {
+        match sys.alloc(b, EXTENT_SIZE) {
             Ok(al) => b_allocs.push(al),
             Err(e) => {
                 println!("B alloc blocked as expected: {e}");
@@ -43,11 +53,9 @@ fn main() -> Result<()> {
 
     // A frees half -> B can proceed (on-demand vs pre-reserve, §1)
     for al in a_allocs.drain(..3) {
-        sys.pcie_free(a, al.mmid)?;
+        sys.free(a, al.mmid)?;
     }
-    for _ in 0..2 {
-        b_allocs.push(sys.pcie_alloc(b, EXTENT_SIZE)?);
-    }
+    b_allocs.extend(sys.alloc_many(b, &[EXTENT_SIZE; 2])?);
     println!(
         "after A released 3 extents, B completed its 4 ({} MiB each side free={} MiB)",
         (b_allocs.len() as u64 * EXTENT_SIZE) >> 20,
@@ -60,7 +68,10 @@ fn main() -> Result<()> {
     let spec = SsdSpec::gen5();
     let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
     println!("\nshared-expander interference (LMB-CXL rand-read, 80 GB/s expander):");
-    println!("{:>9} {:>12} {:>12} {:>7} {:>10}", "devices", "KIOPS/dev", "aggregate", "util", "access");
+    println!(
+        "{:>9} {:>12} {:>12} {:>7} {:>10}",
+        "devices", "KIOPS/dev", "aggregate", "util", "access"
+    );
     for p in contention::sweep(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 80e9)? {
         println!(
             "{:>9} {:>12.0} {:>12.0} {:>6.1}% {:>9}ns",

@@ -1,5 +1,7 @@
 //! Quickstart: bring up a host + CXL fabric, attach an SSD, and walk the
-//! paper's Table 2 API — allocate, use, share, free.
+//! unified LMB API — allocate, use, share, free — plus the RAII region
+//! guard. (The paper's Table-2 names survive as deprecated shims; see
+//! `tests/api_surface.rs` for that mapping.)
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -8,23 +10,27 @@ use lmb::prelude::*;
 
 fn main() -> Result<()> {
     // 1. Build a machine: one host, a PBR switch, a 64 GiB GFD expander.
+    //    The builder binds the host through an `LmbHost` context, which
+    //    owns the fabric manager, IOMMU and host address space.
     let mut sys = System::builder().expander_gib(64).build()?;
     println!("fabric up: expander {} GiB", 64);
 
     // 2. Attach devices. The LMB kernel module loaded at build() time —
     //    before any device driver, per §3.1's loading-priority rule.
-    let ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
-    let accel = sys.attach_cxl_device("accelerator")?;
+    let ssd_id = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let ssd = sys.consumer(ssd_id)?; // Consumer::Pcie(bdf)
+    let accel = sys.attach_cxl_device("accelerator")?; // Spid, a CXL consumer
     println!(
         "attached {} (PCIe) and an accelerator (CXL, SPID {:?})",
-        sys.pcie_device(ssd)?.spec.name,
+        sys.pcie_device(ssd_id)?.spec.name,
         accel
     );
 
-    // 3. lmb_PCIe_alloc: the SSD asks for 1 MiB of buffer memory.
-    let alloc = sys.pcie_alloc(ssd, 256 * PAGE_SIZE)?;
+    // 3. alloc: one call for every consumer class — the SSD asks for
+    //    1 MiB of buffer memory and gets an IOMMU-mapped bus address.
+    let alloc = sys.alloc(ssd, 256 * PAGE_SIZE)?;
     println!(
-        "lmb_PCIe_alloc -> mmid {:?}, hpa {}, bus {:?}, dpa {} ({} KiB)",
+        "alloc(ssd) -> mmid {:?}, hpa {}, bus {:?}, dpa {} ({} KiB)",
         alloc.mmid,
         alloc.hpa,
         alloc.bus_addr.unwrap(),
@@ -39,11 +45,12 @@ fn main() -> Result<()> {
     // 4. The SSD writes data into its LMB memory (e.g. staged blocks).
     sys.write_alloc(alloc.mmid, 0, b"zero-copy payload from the SSD")?;
 
-    // 5. lmb_CXL_share: hand the same bytes to the accelerator P2P —
-    //    the Figure 5 zero-copy path.
-    let shared = sys.cxl_share(accel, alloc.mmid)?;
+    // 5. share: the owner hands the same bytes to the accelerator P2P —
+    //    the Figure 5 zero-copy path. The accelerator's handle carries
+    //    the real GFD DPID for addressing.
+    let shared = sys.share(ssd, accel, alloc.mmid)?;
     println!(
-        "lmb_CXL_share -> accelerator sees dpa {} via DPID {:?} (no copy)",
+        "share(ssd -> accel) -> accelerator sees dpa {} via DPID {:?} (no copy)",
         shared.dpa,
         shared.dpid.unwrap()
     );
@@ -53,10 +60,12 @@ fn main() -> Result<()> {
 
     // 6. Access-control check: the accelerator's SAT entry exists...
     assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
+    // ...and only the owner could have created it:
+    assert!(sys.share(accel, accel, alloc.mmid).is_err(), "non-owner share denied");
 
-    // 7. lmb_PCIe_free tears everything down: IOMMU mapping, SAT entry,
-    //    and (fully-drained) extents go back to the fabric manager.
-    sys.pcie_free(ssd, alloc.mmid)?;
+    // 7. free tears everything down: IOMMU mapping, SAT entry, and
+    //    (fully-drained) extents go back to the fabric manager.
+    sys.free(ssd, alloc.mmid)?;
     assert!(!sys.fm().expander().sat().check(accel, shared.dpa, 64, false));
     println!(
         "freed: module leases {} B, live allocs {}, FM has {} GiB available",
@@ -65,7 +74,15 @@ fn main() -> Result<()> {
         sys.fm().available() >> 30
     );
 
-    // 8. What did all that cost? The fabric model's Figure 2 numbers.
+    // 8. RAII: a scoped region frees itself — handy for staging buffers.
+    {
+        let mut region = sys.lmb_mut().alloc_scoped(ssd, 4 * PAGE_SIZE)?;
+        region.write(0, b"scratch")?;
+    } // <- dropped, freed
+    assert_eq!(sys.module().live_allocs(), 0);
+    println!("scoped region auto-freed on drop");
+
+    // 9. What did all that cost? The fabric model's Figure 2 numbers.
     println!("\naccess latencies (Figure 2 derivation):");
     for (label, lat) in sys.fabric.figure2_rows() {
         println!("  {label:<34} {lat}");

@@ -3,8 +3,9 @@
 //!
 //! 1. Builds the full system: CXL fabric + FM + LMB module + Gen4/Gen5
 //!    SSDs (control plane, functional).
-//! 2. Places each SSD's L2P segment in the expander via `lmb_PCIe_alloc`
-//!    and proves the mapping bytes live there (flush → reload → verify).
+//! 2. Places each SSD's L2P segment in the expander via the unified LMB
+//!    `alloc` and proves the mapping bytes live there (flush → reload →
+//!    verify).
 //! 3. Runs the paper's FIO workloads (libaio, QD 64, 4 KB; seq/rand ×
 //!    read/write) under all four schemes on both devices, with the
 //!    batched data plane executed by the AOT-compiled JAX/Pallas model
@@ -25,8 +26,9 @@ fn main() -> Result<()> {
     // ---- control plane: a real allocation for a real mapping segment ----
     let mut sys = System::builder().expander_gib(32).build()?;
     let gen5 = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let ssd = sys.consumer(gen5)?;
     let seg_entries = 1u64 << 20; // 4 GiB of flash worth of mappings
-    let alloc = sys.pcie_alloc(gen5, seg_entries * 4)?;
+    let alloc = sys.alloc(ssd, seg_entries * 4)?;
     println!(
         "L2P segment in LMB: {} MiB at dpa {} (bus {:?})",
         alloc.size >> 20,
@@ -100,7 +102,7 @@ fn main() -> Result<()> {
     );
 
     // tidy up the control plane
-    sys.pcie_free(gen5, alloc.mmid)?;
+    sys.free(ssd, alloc.mmid)?;
     let _ = 64 * GIB; // (span used by the jobs inside figure6)
     Ok(())
 }

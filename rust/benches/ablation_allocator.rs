@@ -12,29 +12,31 @@ fn main() {
 
     // 1. steady-state alloc/free pairs (hot path)
     let mut sys = System::builder().expander_gib(8).build().unwrap();
-    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev = sys.consumer(dev_id).unwrap();
     let m = bench::measure("alloc+free 64KiB (steady state)", 100, 20_000, || {
-        let a = sys.pcie_alloc(dev, 16 * PAGE_SIZE).unwrap();
-        sys.pcie_free(dev, a.mmid).unwrap();
+        let a = sys.alloc(dev, 16 * PAGE_SIZE).unwrap();
+        sys.free(dev, a.mmid).unwrap();
     });
     bench::report(&m, Some(1));
     assert!(m.mean_ns < 100_000.0, "allocator pair should be < 100us");
 
     // 2. churn with random sizes: fragmentation + invariants
     let mut sys = System::builder().expander_gib(8).build().unwrap();
-    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev = sys.consumer(dev_id).unwrap();
     let mut rng = Pcg64::new(0xa11c);
     let mut live = Vec::new();
     let m = bench::measure("mixed churn step (0.5-4MiB objects)", 10, 50_000, || {
         if rng.chance(0.55) || live.is_empty() {
             let pages = rng.next_below(1024) + 128;
-            if let Ok(a) = sys.pcie_alloc(dev, pages * PAGE_SIZE) {
+            if let Ok(a) = sys.alloc(dev, pages * PAGE_SIZE) {
                 live.push(a.mmid);
             }
         } else {
             let i = rng.next_below(live.len() as u64) as usize;
             let mmid = live.swap_remove(i);
-            sys.pcie_free(dev, mmid).unwrap();
+            sys.free(dev, mmid).unwrap();
         }
     });
     bench::report(&m, Some(1));
@@ -50,10 +52,11 @@ fn main() {
 
     // 3. on-demand leasing amortisation: first-touch cost vs warm
     let mut sys = System::builder().expander_gib(8).build().unwrap();
-    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev = sys.consumer(dev_id).unwrap();
     let cold = bench::measure("first alloc (leases extent + decoder)", 0, 1, || {
-        let a = sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
-        sys.pcie_free(dev, a.mmid).unwrap(); // also releases the extent
+        let a = sys.alloc(dev, PAGE_SIZE).unwrap();
+        sys.free(dev, a.mmid).unwrap(); // also releases the extent
     });
     bench::report(&cold, None);
     println!("\nABL-ALLOC OK");

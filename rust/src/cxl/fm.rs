@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use crate::cxl::expander::Expander;
 use crate::cxl::sat::SatPerm;
 use crate::cxl::switch::PbrSwitch;
-use crate::cxl::types::{Dpa, Range, Spid, EXTENT_SIZE};
+use crate::cxl::types::{Dpa, Dpid, Range, Spid, EXTENT_SIZE};
 use crate::error::{Error, Result};
 
 /// Identifies a host that has bound to the fabric.
@@ -91,10 +91,17 @@ impl FabricManager {
         Ok(spid)
     }
 
-    /// Attach the GFD expander port (done once during bring-up).
-    pub fn attach_gfd(&mut self) -> Result<()> {
-        self.switch.attach_gfd()?;
-        Ok(())
+    /// Attach the GFD expander port (done once during bring-up). Returns
+    /// the GFD's DPID — the P2P destination id the LMB module hands to
+    /// CXL consumers via the Table 2 alloc/share out-params.
+    pub fn attach_gfd(&mut self) -> Result<Dpid> {
+        let (_port, dpid) = self.switch.attach_gfd()?;
+        Ok(dpid)
+    }
+
+    /// DPID of the attached GFD (None before bring-up).
+    pub fn gfd_dpid(&self) -> Option<Dpid> {
+        self.switch.gfd_dpid()
     }
 
     /// Capacity not currently leased.

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 
 use crate::cxl::packet::CxlMemReq;
 use crate::cxl::port::{Port, PortBinding, PORT_LATENCY};
-use crate::cxl::types::{PortId, Spid};
+use crate::cxl::types::{Dpid, PortId, Spid};
 use crate::error::{Error, Result};
 use crate::sim::time::SimTime;
 
@@ -24,6 +24,8 @@ pub struct PbrSwitch {
     bindings: HashMap<Spid, PortId>,
     /// Port the GFD hangs off.
     gfd_port: Option<PortId>,
+    /// The GFD's PBR id — the DPID P2P requesters address (§3.3).
+    gfd_dpid: Option<Dpid>,
     next_spid: u16,
     pub latency: SimTime,
 }
@@ -35,6 +37,7 @@ impl PbrSwitch {
             ports: (0..nports).map(|i| Port::new(PortId(i))).collect(),
             bindings: HashMap::new(),
             gfd_port: None,
+            gfd_dpid: None,
             next_spid: 1,
             latency: SWITCH_LATENCY,
         }
@@ -76,8 +79,10 @@ impl PbrSwitch {
         Ok((spid, port))
     }
 
-    /// Attach the GFD expander to an edge port.
-    pub fn attach_gfd(&mut self) -> Result<PortId> {
+    /// Attach the GFD expander to an edge port, assigning it a PBR id
+    /// from the same id space as SPIDs. Returns the port and the DPID
+    /// that P2P requesters must address.
+    pub fn attach_gfd(&mut self) -> Result<(PortId, Dpid)> {
         if self.gfd_port.is_some() {
             return Err(Error::FabricManager("GFD already attached".into()));
         }
@@ -86,7 +91,10 @@ impl PbrSwitch {
             .ok_or_else(|| Error::FabricManager("no free edge port".into()))?;
         self.port_mut(port).binding = PortBinding::Gfd;
         self.gfd_port = Some(port);
-        Ok(port)
+        let dpid = Dpid(self.next_spid);
+        self.next_spid += 1;
+        self.gfd_dpid = Some(dpid);
+        Ok((port, dpid))
     }
 
     /// Unbind an SPID (device removal / failure).
@@ -105,6 +113,11 @@ impl PbrSwitch {
 
     pub fn gfd_port(&self) -> Option<PortId> {
         self.gfd_port
+    }
+
+    /// DPID of the attached GFD, if bring-up has happened.
+    pub fn gfd_dpid(&self) -> Option<Dpid> {
+        self.gfd_dpid
     }
 
     /// Latency for routing `req` from its (bound) requester to the GFD:
@@ -195,5 +208,17 @@ mod tests {
         let mut sw = PbrSwitch::new(4);
         sw.attach_gfd().unwrap();
         assert!(sw.attach_gfd().is_err());
+    }
+
+    #[test]
+    fn gfd_dpid_shares_pbr_id_space() {
+        let mut sw = PbrSwitch::new(4);
+        let (s1, _) = sw.bind_host().unwrap();
+        let (_, dpid) = sw.attach_gfd().unwrap();
+        let (s2, _) = sw.bind_cxl_device().unwrap();
+        assert_eq!(sw.gfd_dpid(), Some(dpid));
+        // one id space: the GFD's DPID collides with no requester SPID
+        assert_ne!(dpid.0, s1.0);
+        assert_ne!(dpid.0, s2.0);
     }
 }

@@ -5,6 +5,12 @@
 //! paper's §1 "LMB challenges" calls out allocation failure, isolation
 //! violations and expander failure as the hard cases, so they get
 //! dedicated variants rather than a stringly-typed catch-all.
+//!
+//! `Display`/`Error` are hand-implemented so the crate builds with zero
+//! dependencies (the offline toolchain image carries no crates.io
+//! registry; `thiserror` would be its only use).
+
+use std::fmt;
 
 use crate::cxl::types::{Dpid, Hpa, MmId, Spid};
 
@@ -12,64 +18,124 @@ use crate::cxl::types::{Dpid, Hpa, MmId, Spid};
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Errors surfaced by the LMB stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// The fabric manager could not satisfy a capacity request.
-    #[error("expander out of capacity: requested {requested} B, available {available} B")]
     OutOfCapacity { requested: u64, available: u64 },
 
     /// The LMB module could not satisfy an allocation (distinct from FM
     /// capacity: the module-level allocator may be fragmented).
-    #[error("lmb allocation failed: requested {requested} B ({reason})")]
     AllocFailed { requested: u64, reason: String },
 
     /// Unknown memory id passed to free/share.
-    #[error("unknown memory id {0:?}")]
     UnknownMmId(MmId),
 
     /// The caller does not own the memory id.
-    #[error("memory id {mmid:?} is not owned by the calling device")]
     NotOwner { mmid: MmId },
 
     /// IOMMU rejected a device access (PCIe-side isolation, §3.3).
-    #[error("iommu fault: device {bdf} access to {hpa:?} denied ({reason})")]
     IommuFault { bdf: String, hpa: Hpa, reason: String },
 
     /// SAT rejected a CXL device access (CXL-side isolation, §3.3).
-    #[error("SAT violation: SPID {spid:?} has no grant for DPID {dpid:?}")]
     SatViolation { spid: Spid, dpid: Dpid },
 
     /// Address did not decode to any HDM window / DMP.
-    #[error("address decode failed: {0}")]
     DecodeFault(String),
 
     /// The expander (or a DMP) is failed / offline (§1 single point of failure).
-    #[error("expander unavailable: {0}")]
     ExpanderFailed(String),
 
     /// Fabric management protocol error (bad bind, duplicate SPID, ...).
-    #[error("fabric manager: {0}")]
     FabricManager(String),
 
     /// Device-side protocol error (NVMe/controller misuse).
-    #[error("device: {0}")]
     Device(String),
 
     /// Workload / configuration validation error.
-    #[error("config: {0}")]
     Config(String),
 
     /// PJRT runtime error (artifact loading, compilation, execution).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// I/O error (artifact files, traces).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::OutOfCapacity { requested, available } => write!(
+                f,
+                "expander out of capacity: requested {requested} B, available {available} B"
+            ),
+            Error::AllocFailed { requested, reason } => {
+                write!(f, "lmb allocation failed: requested {requested} B ({reason})")
+            }
+            Error::UnknownMmId(mmid) => write!(f, "unknown memory id {mmid:?}"),
+            Error::NotOwner { mmid } => {
+                write!(f, "memory id {mmid:?} is not owned by the calling device")
+            }
+            Error::IommuFault { bdf, hpa, reason } => {
+                write!(f, "iommu fault: device {bdf} access to {hpa:?} denied ({reason})")
+            }
+            Error::SatViolation { spid, dpid } => {
+                write!(f, "SAT violation: SPID {spid:?} has no grant for DPID {dpid:?}")
+            }
+            Error::DecodeFault(s) => write!(f, "address decode failed: {s}"),
+            Error::ExpanderFailed(s) => write!(f, "expander unavailable: {s}"),
+            Error::FabricManager(s) => write!(f, "fabric manager: {s}"),
+            Error::Device(s) => write!(f, "device: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_vocabulary() {
+        let e = Error::OutOfCapacity { requested: 4096, available: 0 };
+        assert_eq!(
+            e.to_string(),
+            "expander out of capacity: requested 4096 B, available 0 B"
+        );
+        let e = Error::NotOwner { mmid: MmId(7) };
+        assert!(e.to_string().contains("not owned"));
+        let e = Error::SatViolation { spid: Spid(3), dpid: Dpid(1) };
+        assert!(e.to_string().starts_with("SAT violation"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
     }
 }

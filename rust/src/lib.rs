@@ -22,6 +22,10 @@
 //!
 //! ## Quick start
 //!
+//! The control plane is the unified, consumer-generic API on
+//! [`lmb::LmbHost`](crate::lmb::LmbHost) (forwarded by [`system::System`]);
+//! the paper's Table-2-named methods remain as deprecated shims.
+//!
 //! ```no_run
 //! use lmb::prelude::*;
 //!
@@ -29,10 +33,11 @@
 //! let mut system = System::builder().expander_gib(4).build().unwrap();
 //! // Attach a PCIe SSD and give an L2P segment an LMB allocation.
 //! let ssd = system.attach_pcie_ssd(SsdSpec::gen5());
-//! let alloc = system.pcie_alloc(ssd, 64 << 20).unwrap();
+//! let dev = system.consumer(ssd).unwrap();
+//! let alloc = system.alloc(dev, 64 << 20).unwrap();
 //! assert!(alloc.size >= 64 << 20);
 //! assert!(alloc.bus_addr.is_some(), "device-visible via the IOMMU");
-//! system.pcie_free(ssd, alloc.mmid).unwrap();
+//! system.free(dev, alloc.mmid).unwrap();
 //! ```
 
 pub mod cli;
@@ -60,7 +65,7 @@ pub mod prelude {
     pub use crate::cxl::fabric::{Fabric, PathKind};
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
-    pub use crate::lmb::{LmbAlloc, LmbModule};
+    pub use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule, LmbRegion};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;
     pub use crate::ssd::spec::SsdSpec;

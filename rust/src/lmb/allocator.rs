@@ -10,9 +10,24 @@
 //! When an extent drains to fully-free it is reported so the module can
 //! release it to the FM ("When all device memory in a memory block has
 //! been freed, the kernel module releases the area to FM").
+//!
+//! Extents are identified by stable [`ExtentId`]s: releasing one extent
+//! never invalidates placements held in any other extent, so callers keep
+//! their [`Placement`] handles across arbitrary free patterns (the old
+//! positional `extent_idx` scheme forced a rebasing sweep over every live
+//! allocation on each extent release).
+
+use std::collections::BTreeMap;
 
 use crate::cxl::fm::Extent;
 use crate::cxl::types::{align_up, Dpa, Hpa, Range, PAGE_SIZE};
+
+/// Stable identity of a leased extent within one allocator.
+///
+/// Ids are never reused and survive the release of other extents, unlike
+/// a positional index into the extent list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ExtentId(pub u64);
 
 /// A leased extent plus its host mapping and free list.
 #[derive(Debug)]
@@ -72,8 +87,8 @@ impl ExtentState {
 /// A placed sub-allocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Placement {
-    /// Index of the extent within the allocator.
-    pub extent_idx: usize,
+    /// Stable id of the extent holding this placement.
+    pub extent: ExtentId,
     /// Byte offset within the extent.
     pub offset: u64,
     /// Rounded-up length.
@@ -85,7 +100,10 @@ pub struct Placement {
 /// The module-level allocator over all leased extents.
 #[derive(Debug, Default)]
 pub struct SubAllocator {
-    extents: Vec<ExtentState>,
+    /// Keyed by stable id; iteration order == adoption order, so
+    /// first-fit behaviour matches the old positional scheme.
+    extents: BTreeMap<ExtentId, ExtentState>,
+    next_id: u64,
 }
 
 impl SubAllocator {
@@ -94,18 +112,20 @@ impl SubAllocator {
     }
 
     /// Adopt a freshly leased extent (already HDM-mapped at `hpa_base`).
-    pub fn adopt(&mut self, extent: Extent, hpa_base: Hpa) -> usize {
-        self.extents.push(ExtentState::new(extent, hpa_base));
-        self.extents.len() - 1
+    pub fn adopt(&mut self, extent: Extent, hpa_base: Hpa) -> ExtentId {
+        let id = ExtentId(self.next_id);
+        self.next_id += 1;
+        self.extents.insert(id, ExtentState::new(extent, hpa_base));
+        id
     }
 
     /// Try to place `size` bytes (rounded to pages) in any leased extent.
     pub fn alloc(&mut self, size: u64) -> Option<Placement> {
         let len = align_up(size.max(1), PAGE_SIZE);
-        for (i, st) in self.extents.iter_mut().enumerate() {
+        for (&id, st) in self.extents.iter_mut() {
             if let Some(off) = st.alloc(len) {
                 return Some(Placement {
-                    extent_idx: i,
+                    extent: id,
                     offset: off,
                     len,
                     dpa: Dpa(st.extent.dpa.0 + off),
@@ -116,38 +136,52 @@ impl SubAllocator {
         None
     }
 
-    /// Free a placement; returns `Some(extent_idx)` when that extent is
-    /// now fully free (caller should release it to the FM).
-    pub fn free(&mut self, p: Placement) -> Option<usize> {
-        let st = &mut self.extents[p.extent_idx];
+    /// Free a placement; returns `Some(id)` when that extent is now fully
+    /// free (caller should release it to the FM).
+    pub fn free(&mut self, p: Placement) -> Option<ExtentId> {
+        let st = self
+            .extents
+            .get_mut(&p.extent)
+            .expect("placement references a leased extent");
         st.free(p.offset, p.len);
-        st.is_empty().then_some(p.extent_idx)
+        st.is_empty().then_some(p.extent)
     }
 
-    /// Drop a (fully free) extent from tracking, returning it. Indices of
-    /// later extents shift down — callers must re-resolve placements, so
-    /// the module only calls this while holding no live placements in it.
-    pub fn remove_extent(&mut self, idx: usize) -> ExtentState {
-        self.extents.remove(idx)
+    /// Drop a (fully free) extent from tracking, returning it. Every
+    /// other extent keeps its id, so live placements stay valid.
+    pub fn remove_extent(&mut self, id: ExtentId) -> ExtentState {
+        self.extents.remove(&id).expect("extent is leased")
     }
 
-    pub fn extents(&self) -> &[ExtentState] {
-        &self.extents
+    /// Look up one extent's state.
+    pub fn extent(&self, id: ExtentId) -> Option<&ExtentState> {
+        self.extents.get(&id)
+    }
+
+    /// All leased extents in adoption order.
+    pub fn extents(&self) -> impl Iterator<Item = (ExtentId, &ExtentState)> {
+        self.extents.iter().map(|(&id, st)| (id, st))
+    }
+
+    /// Number of leased extents.
+    pub fn extent_count(&self) -> usize {
+        self.extents.len()
     }
 
     /// Total leased / used bytes.
     pub fn leased(&self) -> u64 {
-        self.extents.iter().map(|e| e.extent.len).sum()
+        self.extents.values().map(|e| e.extent.len).sum()
     }
 
     pub fn used(&self) -> u64 {
-        self.extents.iter().map(|e| e.used).sum()
+        self.extents.values().map(|e| e.used).sum()
     }
 
     /// Invariant check for property tests: free lists sorted, coalesced,
     /// within bounds, and used+free == extent length.
     pub fn check_invariants(&self) -> Result<(), String> {
-        for (i, st) in self.extents.iter().enumerate() {
+        for (id, st) in self.extents.iter() {
+            let i = id.0;
             let mut prev_end: Option<u64> = None;
             let mut free_total = 0;
             for r in &st.free {
@@ -211,15 +245,15 @@ mod tests {
     #[test]
     fn free_coalesces_and_reports_empty() {
         let mut a = SubAllocator::new();
-        a.adopt(extent(0), Hpa(4 * GIB));
+        let id = a.adopt(extent(0), Hpa(4 * GIB));
         let p1 = a.alloc(PAGE_SIZE).unwrap();
         let p2 = a.alloc(PAGE_SIZE).unwrap();
         let p3 = a.alloc(PAGE_SIZE).unwrap();
         assert_eq!(a.free(p1), None);
         assert_eq!(a.free(p3), None);
-        assert_eq!(a.free(p2), Some(0), "middle free drains the extent");
+        assert_eq!(a.free(p2), Some(id), "middle free drains the extent");
         a.check_invariants().unwrap();
-        assert_eq!(a.extents()[0].largest_free(), EXTENT_SIZE);
+        assert_eq!(a.extent(id).unwrap().largest_free(), EXTENT_SIZE);
         // after coalescing, a full-extent allocation fits again
         assert!(a.alloc(EXTENT_SIZE).is_some());
     }
@@ -231,9 +265,34 @@ mod tests {
         a.adopt(extent(EXTENT_SIZE), Hpa(5 * GIB));
         let p1 = a.alloc(EXTENT_SIZE).unwrap();
         let p2 = a.alloc(EXTENT_SIZE).unwrap();
-        assert_ne!(p1.extent_idx, p2.extent_idx);
+        assert_ne!(p1.extent, p2.extent);
         assert_eq!(p2.hpa, Hpa(5 * GIB));
         assert_eq!(a.used(), 2 * EXTENT_SIZE);
+    }
+
+    #[test]
+    fn extent_ids_stable_across_removal() {
+        // The regression the ExtentId refactor fixes for good: releasing
+        // one extent must leave placements in every other extent valid
+        // without any index rebasing.
+        let mut a = SubAllocator::new();
+        let id0 = a.adopt(extent(0), Hpa(4 * GIB));
+        let id1 = a.adopt(extent(EXTENT_SIZE), Hpa(5 * GIB));
+        let p0 = a.alloc(EXTENT_SIZE).unwrap();
+        let p1 = a.alloc(PAGE_SIZE).unwrap();
+        assert_eq!(p0.extent, id0);
+        assert_eq!(p1.extent, id1);
+        // drain and drop the first extent
+        assert_eq!(a.free(p0), Some(id0));
+        let st = a.remove_extent(id0);
+        assert_eq!(st.hpa_base, Hpa(4 * GIB));
+        // p1's id still resolves, and freeing through it still works
+        assert!(a.extent(p1.extent).is_some());
+        assert_eq!(a.free(p1), Some(id1));
+        a.check_invariants().unwrap();
+        // a newly adopted extent gets a fresh id, never a recycled one
+        let id2 = a.adopt(extent(2 * EXTENT_SIZE), Hpa(6 * GIB));
+        assert!(id2 > id1);
     }
 
     #[test]

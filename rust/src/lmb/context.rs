@@ -1,0 +1,381 @@
+//! [`LmbHost`] — the per-host LMB context behind the unified Table 2 API.
+//!
+//! The original surface forced every caller to thread
+//! `(&mut FabricManager, &mut Iommu, &mut AddressSpace)` through six
+//! near-duplicate `pcie_*`/`cxl_*` methods. The context owns that triple
+//! (plus the loaded [`LmbModule`]) and exposes the consumer-generic,
+//! handle-based API everything else in the crate builds on: `System`,
+//! the failure domain, the examples, and the benches. One `LmbHost` per
+//! bound host; sharding across hosts means constructing several contexts
+//! (ROADMAP: multi-host sharding, async batching).
+
+use crate::cxl::fm::{FabricManager, HostId};
+use crate::cxl::types::{Bdf, Dpa, MmId, Spid};
+use crate::error::{Error, Result};
+use crate::host::AddressSpace;
+use crate::lmb::{Consumer, LmbAlloc, LmbModule};
+use crate::pcie::iommu::Iommu;
+
+/// Per-host LMB context: owns the fabric manager, IOMMU and host address
+/// space, and dispatches the class-specific access-control setup on
+/// [`Consumer`].
+///
+/// ```
+/// use lmb::cxl::expander::{Expander, ExpanderConfig};
+/// use lmb::cxl::fm::FabricManager;
+/// use lmb::cxl::switch::PbrSwitch;
+/// use lmb::cxl::types::{Bdf, GIB, PAGE_SIZE};
+/// use lmb::lmb::LmbHost;
+///
+/// let fm = FabricManager::new(
+///     PbrSwitch::new(8),
+///     Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+/// );
+/// let mut host = LmbHost::bind(fm, GIB).unwrap();
+///
+/// // a PCIe SSD allocates buffer memory; a CXL accelerator shares it
+/// let ssd = Bdf::new(1, 0, 0);
+/// host.attach_pcie(ssd);
+/// let accel = host.attach_cxl_device().unwrap();
+/// let a = host.alloc(ssd, 8 * PAGE_SIZE).unwrap();
+/// assert!(a.bus_addr.is_some(), "PCIe consumers get an IOMMU mapping");
+/// let shared = host.share(ssd, accel, a.mmid).unwrap();
+/// assert_eq!(shared.dpid, host.fm().gfd_dpid(), "CXL consumers get the GFD DPID");
+///
+/// host.free(ssd, a.mmid).unwrap();
+/// assert_eq!(host.module().live_allocs(), 0);
+/// ```
+#[derive(Debug)]
+pub struct LmbHost {
+    fm: FabricManager,
+    iommu: Iommu,
+    space: AddressSpace,
+    module: LmbModule,
+    host: HostId,
+    host_spid: Spid,
+}
+
+impl LmbHost {
+    /// Bind a host root port to the fabric and load its LMB module
+    /// (§3.1: the module loads before any device driver initialises).
+    /// Attaches the GFD first if bring-up has not happened yet, so the
+    /// module always learns the real GFD DPID.
+    pub fn bind(mut fm: FabricManager, host_dram: u64) -> Result<Self> {
+        let gfd_dpid = match fm.gfd_dpid() {
+            Some(d) => d,
+            None => fm.attach_gfd()?,
+        };
+        let (host, host_spid) = fm.bind_host()?;
+        let module = LmbModule::load(host, gfd_dpid);
+        Ok(LmbHost {
+            fm,
+            iommu: Iommu::new(),
+            space: AddressSpace::new(host_dram),
+            module,
+            host,
+            host_spid,
+        })
+    }
+
+    pub fn host(&self) -> HostId {
+        self.host
+    }
+
+    /// SPID of this host's root port on the switch.
+    pub fn host_spid(&self) -> Spid {
+        self.host_spid
+    }
+
+    /// Attach a PCIe device: creates its IOMMU domain.
+    pub fn attach_pcie(&mut self, dev: Bdf) {
+        self.iommu.attach(dev);
+    }
+
+    /// Bind a CXL device (accelerator, CXL-SSD) to the fabric.
+    pub fn attach_cxl_device(&mut self) -> Result<Spid> {
+        self.fm.bind_cxl_device()
+    }
+
+    // ---- the unified Table 2 surface ----
+
+    /// Allocate `size` bytes of LMB memory for `consumer`.
+    pub fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
+        self.module.alloc(&mut self.fm, &mut self.iommu, &mut self.space, consumer, size)
+    }
+
+    /// Batch allocation, all-or-nothing: if any request fails, every
+    /// allocation already made by this call is rolled back (freed) and
+    /// the original error is returned.
+    pub fn alloc_many(
+        &mut self,
+        consumer: impl Into<Consumer>,
+        sizes: &[u64],
+    ) -> Result<Vec<LmbAlloc>> {
+        let consumer = consumer.into();
+        let mut done: Vec<LmbAlloc> = Vec::with_capacity(sizes.len());
+        for &size in sizes {
+            match self.alloc(consumer, size) {
+                Ok(a) => done.push(a),
+                Err(e) => {
+                    for a in done.into_iter().rev() {
+                        let _ = self.free(consumer, a.mmid);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Free `mmid`, which must be owned by `consumer`.
+    pub fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
+        self.module.free(&mut self.fm, &mut self.iommu, &mut self.space, consumer, mmid)
+    }
+
+    /// Zero-copy share of `mmid` (owned by `owner`) into `target`'s
+    /// view. Ownership is enforced; repeat shares are idempotent.
+    pub fn share(
+        &mut self,
+        owner: impl Into<Consumer>,
+        target: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        self.module.share(&mut self.fm, &mut self.iommu, owner, target, mmid)
+    }
+
+    /// Allocate with RAII semantics: the returned [`LmbRegion`] frees the
+    /// allocation when dropped (unless explicitly leaked).
+    pub fn alloc_scoped(
+        &mut self,
+        consumer: impl Into<Consumer>,
+        size: u64,
+    ) -> Result<LmbRegion<'_>> {
+        let consumer = consumer.into();
+        let alloc = self.alloc(consumer, size)?;
+        Ok(LmbRegion { host: self, consumer, alloc, armed: true })
+    }
+
+    // ---- data path (host-mediated) ----
+
+    /// Functional write into an LMB allocation.
+    pub fn write(&mut self, mmid: MmId, offset: u64, data: &[u8]) -> Result<()> {
+        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        // checked: a wrapping sum would sneak a huge offset past the
+        // bounds guard and corrupt a neighbouring allocation's bytes
+        match offset.checked_add(data.len() as u64) {
+            Some(end) if end <= a.size => {}
+            _ => return Err(Error::Config("write beyond allocation".into())),
+        }
+        self.fm.expander_mut().write_dpa(Dpa(a.dpa.0 + offset), data)
+    }
+
+    /// Functional read from an LMB allocation.
+    pub fn read(&self, mmid: MmId, offset: u64, out: &mut [u8]) -> Result<()> {
+        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        match offset.checked_add(out.len() as u64) {
+            Some(end) if end <= a.size => {}
+            _ => return Err(Error::Config("read beyond allocation".into())),
+        }
+        self.fm.expander().read_dpa(Dpa(a.dpa.0 + offset), out)
+    }
+
+    // ---- lookups / component access ----
+
+    /// Look up a live allocation by handle.
+    pub fn get(&self, mmid: MmId) -> Option<LmbAlloc> {
+        self.module.get(mmid)
+    }
+
+    /// All live mmids.
+    pub fn mmids(&self) -> Vec<MmId> {
+        self.module.mmids()
+    }
+
+    pub fn fm(&self) -> &FabricManager {
+        &self.fm
+    }
+
+    pub fn fm_mut(&mut self) -> &mut FabricManager {
+        &mut self.fm
+    }
+
+    pub fn iommu(&self) -> &Iommu {
+        &self.iommu
+    }
+
+    pub fn iommu_mut(&mut self) -> &mut Iommu {
+        &mut self.iommu
+    }
+
+    pub fn space(&self) -> &AddressSpace {
+        &self.space
+    }
+
+    pub fn module(&self) -> &LmbModule {
+        &self.module
+    }
+
+    /// Split borrow for failure handling: the FM mutably plus the module
+    /// immutably (see [`crate::lmb::failure::FailureDomain`]).
+    pub fn failure_parts(&mut self) -> (&mut FabricManager, &LmbModule) {
+        (&mut self.fm, &self.module)
+    }
+
+    /// Module + FM invariants in one sweep (property tests).
+    pub fn check_invariants(&self) -> Result<()> {
+        self.module.check_invariants()?;
+        self.fm.check_invariants()
+    }
+}
+
+/// RAII guard over one LMB allocation: freed on drop unless released.
+///
+/// Holds the [`LmbHost`] mutably for its lifetime, so the guard suits
+/// scoped staging buffers; long-lived allocations should hold the plain
+/// [`LmbAlloc`] handle (see [`LmbRegion::into_raw`]).
+#[derive(Debug)]
+pub struct LmbRegion<'h> {
+    host: &'h mut LmbHost,
+    consumer: Consumer,
+    alloc: LmbAlloc,
+    armed: bool,
+}
+
+impl LmbRegion<'_> {
+    /// The underlying allocation handle (Table 2 out-params).
+    pub fn handle(&self) -> LmbAlloc {
+        self.alloc
+    }
+
+    pub fn mmid(&self) -> MmId {
+        self.alloc.mmid
+    }
+
+    pub fn consumer(&self) -> Consumer {
+        self.consumer
+    }
+
+    /// Write into the region through the host data path.
+    pub fn write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.host.write(self.alloc.mmid, offset, data)
+    }
+
+    /// Read from the region through the host data path.
+    pub fn read(&self, offset: u64, out: &mut [u8]) -> Result<()> {
+        self.host.read(self.alloc.mmid, offset, out)
+    }
+
+    /// Free now, surfacing any teardown error (drop would swallow it).
+    pub fn free(mut self) -> Result<()> {
+        self.armed = false;
+        let consumer = self.consumer;
+        let mmid = self.alloc.mmid;
+        self.host.free(consumer, mmid)
+    }
+
+    /// Defuse the guard, returning the raw handle; the caller becomes
+    /// responsible for freeing via [`LmbHost::free`].
+    pub fn into_raw(mut self) -> LmbAlloc {
+        self.armed = false;
+        self.alloc
+    }
+}
+
+impl Drop for LmbRegion<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.host.free(self.consumer, self.alloc.mmid);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::{Expander, ExpanderConfig};
+    use crate::cxl::switch::PbrSwitch;
+    use crate::cxl::types::{EXTENT_SIZE, GIB, PAGE_SIZE};
+
+    fn host_with(expander_bytes: u64) -> LmbHost {
+        let fm = FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig { dram_capacity: expander_bytes, ..Default::default() }),
+        );
+        LmbHost::bind(fm, GIB).unwrap()
+    }
+
+    #[test]
+    fn bind_attaches_gfd_and_loads_module() {
+        let host = host_with(GIB);
+        assert!(host.module().is_loaded());
+        assert_eq!(Some(host.module().gfd_dpid()), host.fm().gfd_dpid());
+    }
+
+    #[test]
+    fn bind_reuses_existing_gfd() {
+        let mut fm = FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+        );
+        let dpid = fm.attach_gfd().unwrap();
+        let host = LmbHost::bind(fm, GIB).unwrap();
+        assert_eq!(host.module().gfd_dpid(), dpid);
+    }
+
+    #[test]
+    fn scoped_region_frees_on_drop() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        {
+            let mut region = host.alloc_scoped(dev, 4 * PAGE_SIZE).unwrap();
+            region.write(0, b"scratch").unwrap();
+            let mut buf = [0u8; 7];
+            region.read(0, &mut buf).unwrap();
+            assert_eq!(&buf, b"scratch");
+        }
+        assert_eq!(host.module().live_allocs(), 0, "drop freed the region");
+        assert_eq!(host.module().leased(), 0, "extent back at the FM");
+    }
+
+    #[test]
+    fn scoped_region_into_raw_survives() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let a = host.alloc_scoped(dev, PAGE_SIZE).unwrap().into_raw();
+        assert_eq!(host.module().live_allocs(), 1, "into_raw defused the guard");
+        host.free(dev, a.mmid).unwrap();
+        assert_eq!(host.module().live_allocs(), 0);
+    }
+
+    #[test]
+    fn scoped_region_explicit_free_reports_errors() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let region = host.alloc_scoped(dev, PAGE_SIZE).unwrap();
+        region.free().unwrap();
+        assert_eq!(host.module().live_allocs(), 0);
+    }
+
+    #[test]
+    fn alloc_many_rolls_back_on_partial_failure() {
+        // 1 GiB expander = 4 extents; a batch of 6 extent-sized requests
+        // must fail and leave no residue.
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let before = host.fm().available();
+        let err = host.alloc_many(dev, &[EXTENT_SIZE; 6]).unwrap_err();
+        assert!(matches!(err, Error::OutOfCapacity { .. }), "got {err:?}");
+        assert_eq!(host.module().live_allocs(), 0, "partial allocs rolled back");
+        assert_eq!(host.module().leased(), 0);
+        assert_eq!(host.fm().available(), before, "every extent back at the FM");
+        assert_eq!(host.iommu().mapping_count(dev), 0);
+        host.check_invariants().unwrap();
+        // a batch that fits succeeds afterwards
+        let got = host.alloc_many(dev, &[EXTENT_SIZE; 4]).unwrap();
+        assert_eq!(got.len(), 4);
+    }
+}

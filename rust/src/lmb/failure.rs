@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use crate::cxl::fm::FabricManager;
 use crate::cxl::types::MmId;
 use crate::error::{Error, Result};
-use crate::lmb::LmbModule;
+use crate::lmb::{LmbHost, LmbModule};
 
 /// Failure-handling policy for LMB allocations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +80,23 @@ impl FailureDomain {
 
     pub fn is_critical(&self, mmid: MmId) -> bool {
         self.critical.get(&mmid).copied().unwrap_or(false)
+    }
+
+    /// Inject an expander failure through a host context; returns the
+    /// serving state for each live allocation.
+    pub fn fail(&mut self, lmb: &mut LmbHost) -> HashMap<MmId, ServingState> {
+        let (fm, module) = lmb.failure_parts();
+        self.fail_expander(fm, module)
+    }
+
+    /// Recover the expander through a host context (see
+    /// [`FailureDomain::recover_expander`] for the copy-back contract).
+    pub fn recover<F>(&mut self, lmb: &mut LmbHost, copy_back: F) -> Result<u64>
+    where
+        F: FnMut(MmId) -> Result<u64>,
+    {
+        let (fm, module) = lmb.failure_parts();
+        self.recover_expander(fm, module, copy_back)
     }
 
     /// Inject an expander failure; returns the serving state for each
@@ -152,59 +169,53 @@ mod tests {
     use crate::cxl::expander::{Expander, ExpanderConfig};
     use crate::cxl::switch::PbrSwitch;
     use crate::cxl::types::{Bdf, GIB, PAGE_SIZE};
-    use crate::host::AddressSpace;
-    use crate::pcie::iommu::Iommu;
 
-    fn rig() -> (FabricManager, Iommu, AddressSpace, LmbModule, Bdf) {
-        let mut fm = FabricManager::new(
+    fn rig() -> (LmbHost, Bdf) {
+        let fm = FabricManager::new(
             PbrSwitch::new(8),
             Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
         );
-        fm.attach_gfd().unwrap();
-        let (host, _) = fm.bind_host().unwrap();
-        let mut iommu = Iommu::new();
+        let mut lmb = LmbHost::bind(fm, GIB).unwrap();
         let dev = Bdf::new(1, 0, 0);
-        iommu.attach(dev);
-        (fm, iommu, AddressSpace::new(GIB), LmbModule::load(host), dev)
+        lmb.attach_pcie(dev);
+        (lmb, dev)
     }
 
     #[test]
     fn failstop_makes_allocations_unavailable() {
-        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
-        let a = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
+        let (mut lmb, dev) = rig();
+        let a = lmb.alloc(dev, PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::FailStop);
-        let states = fd.fail_expander(&mut fm, &module);
+        let states = fd.fail(&mut lmb);
         assert_eq!(states[&a.mmid], ServingState::Unavailable);
         // new allocations fail during the outage
-        assert!(module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).is_err());
-        fd.recover_expander(&mut fm, &module, |_| Ok(0)).unwrap();
+        assert!(lmb.alloc(dev, PAGE_SIZE).is_err());
+        fd.recover(&mut lmb, |_| Ok(0)).unwrap();
         assert_eq!(fd.serving_state(a.mmid), ServingState::Expander);
-        assert!(module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).is_ok());
+        assert!(lmb.alloc(dev, PAGE_SIZE).is_ok());
     }
 
     #[test]
     fn shadow_policy_keeps_critical_allocs_available() {
-        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
-        let crit = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
-        let plain = module.pcie_alloc(&mut fm, &mut iommu, &mut space, dev, PAGE_SIZE).unwrap();
+        let (mut lmb, dev) = rig();
+        let crit = lmb.alloc(dev, PAGE_SIZE).unwrap();
+        let plain = lmb.alloc(dev, PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
         fd.register_critical(crit.mmid);
-        let states = fd.fail_expander(&mut fm, &module);
+        let states = fd.fail(&mut lmb);
         assert_eq!(states[&crit.mmid], ServingState::HostShadow);
         assert_eq!(states[&plain.mmid], ServingState::Unavailable);
     }
 
     #[test]
     fn recovery_copies_back_shadowed_bytes() {
-        let (mut fm, mut iommu, mut space, mut module, dev) = rig();
-        let a = module
-            .pcie_alloc(&mut fm, &mut iommu, &mut space, dev, 4 * PAGE_SIZE)
-            .unwrap();
+        let (mut lmb, dev) = rig();
+        let a = lmb.alloc(dev, 4 * PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
         fd.register_critical(a.mmid);
-        fd.fail_expander(&mut fm, &module);
+        fd.fail(&mut lmb);
         let restored = fd
-            .recover_expander(&mut fm, &module, |mmid| {
+            .recover(&mut lmb, |mmid| {
                 assert_eq!(mmid, a.mmid);
                 Ok(a.size)
             })
@@ -216,8 +227,8 @@ mod tests {
 
     #[test]
     fn double_recovery_rejected() {
-        let (mut fm, _iommu, _space, module, _dev) = rig();
+        let (mut lmb, _dev) = rig();
         let mut fd = FailureDomain::new(FailurePolicy::FailStop);
-        assert!(fd.recover_expander(&mut fm, &module, |_| Ok(0)).is_err());
+        assert!(fd.recover(&mut lmb, |_| Ok(0)).is_err());
     }
 }

@@ -1,27 +1,41 @@
 //! The LMB kernel module (§3) — the paper's contribution.
 //!
-//! One instance runs per host. It presents the Table 2 API to device
-//! drivers:
+//! One instance runs per host. Device drivers reach it through a single
+//! consumer-generic API; the per-host [`LmbHost`] context owns the
+//! fabric-manager / IOMMU / address-space plumbing so callers never
+//! thread those by hand:
 //!
-//! | Operation | Interface |
-//! |-----------|-----------|
-//! | Allocate  | `pcie_alloc(dev, size)` / `cxl_alloc(spid, size)` |
-//! | Free      | `pcie_free(dev, mmid)` / `cxl_free(spid, mmid)`   |
-//! | Share     | `pcie_share(dev, mmid)` / `cxl_share(spid, mmid)` |
+//! | Operation | Unified interface            | Table 2 shims (deprecated)                        |
+//! |-----------|------------------------------|---------------------------------------------------|
+//! | Allocate  | `alloc(consumer, size)`      | `pcie_alloc(dev, size)` / `cxl_alloc(spid, size)` |
+//! | Free      | `free(consumer, mmid)`       | `pcie_free(dev, mmid)` / `cxl_free(spid, mmid)`   |
+//! | Share     | `share(owner, target, mmid)` | `pcie_share(dev, mmid)` / `cxl_share(spid, mmid)` |
+//!
+//! A [`Consumer`] names the device class; dispatching on it replaces the
+//! old duplicated `pcie_*`/`cxl_*` method pairs. The paper-named shims
+//! remain so the Table 2 mapping stays legible, delegating to the same
+//! internals.
 //!
 //! Mechanics (§3.2–§3.3):
 //! * capacity comes from the FM in 256 MB extents, each mapped into host
 //!   physical space through an HDM decoder window;
-//! * sub-allocation metadata lives host-side ([`allocator::SubAllocator`]);
+//! * sub-allocation metadata lives host-side ([`allocator::SubAllocator`]),
+//!   keyed by stable [`allocator::ExtentId`]s;
 //! * PCIe consumers get IOMMU mappings (bus address), CXL consumers get
-//!   SAT grants (and the GFD's DPID for P2P);
+//!   SAT grants (and the GFD's DPID for P2P, plumbed from
+//!   [`FabricManager::attach_gfd`] at module load);
 //! * freeing tears down the access-control state, and a fully-drained
 //!   extent is released back to the FM;
 //! * sharing aliases one allocation into another device's view without
-//!   copying — the zero-copy path of Figure 5's discussion.
+//!   copying — the zero-copy path of Figure 5's discussion. Only the
+//!   owner may share, and re-sharing to a consumer that already has
+//!   access is idempotent (no duplicate IOMMU mappings / SAT entries).
 
 pub mod allocator;
+pub mod context;
 pub mod failure;
+
+pub use context::{LmbHost, LmbRegion};
 
 use std::collections::HashMap;
 
@@ -35,11 +49,34 @@ use crate::host::AddressSpace;
 use crate::pcie::iommu::{Iommu, IommuPerm};
 use allocator::{Placement, SubAllocator};
 
-/// Who owns / consumes an allocation.
+/// Who owns / consumes an allocation. The unified API dispatches the
+/// PCIe-vs-CXL access-control setup (IOMMU map vs SAT grant) on this.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Consumer {
     Pcie(Bdf),
     Cxl(Spid),
+}
+
+impl Consumer {
+    pub fn is_pcie(&self) -> bool {
+        matches!(self, Consumer::Pcie(_))
+    }
+
+    pub fn is_cxl(&self) -> bool {
+        matches!(self, Consumer::Cxl(_))
+    }
+}
+
+impl From<Bdf> for Consumer {
+    fn from(dev: Bdf) -> Self {
+        Consumer::Pcie(dev)
+    }
+}
+
+impl From<Spid> for Consumer {
+    fn from(dev: Spid) -> Self {
+        Consumer::Cxl(dev)
+    }
 }
 
 /// The handle returned by the alloc APIs (paper Table 2 out-params).
@@ -81,20 +118,23 @@ pub struct LmbModule {
     /// §3.1: "we promote the loading priority of the LMB module" — the
     /// module must be initialised before device drivers allocate.
     loaded: bool,
-    /// The GFD's DPID handed to CXL consumers for P2P addressing.
+    /// The GFD's DPID handed to CXL consumers for P2P addressing,
+    /// plumbed from [`FabricManager::attach_gfd`] through host binding.
     gfd_dpid: Dpid,
 }
 
 impl LmbModule {
-    /// Initialise ("load") the module for a bound host.
-    pub fn load(host: HostId) -> Self {
+    /// Initialise ("load") the module for a bound host. `gfd_dpid` is
+    /// the real GFD port id returned by [`FabricManager::attach_gfd`]
+    /// (see also [`FabricManager::gfd_dpid`]); P2P handles reference it.
+    pub fn load(host: HostId, gfd_dpid: Dpid) -> Self {
         LmbModule {
             host,
             sub: SubAllocator::new(),
             allocs: HashMap::new(),
             next_mmid: 1,
             loaded: true,
-            gfd_dpid: Dpid(0xFFF),
+            gfd_dpid,
         }
     }
 
@@ -104,6 +144,11 @@ impl LmbModule {
 
     pub fn is_loaded(&self) -> bool {
         self.loaded
+    }
+
+    /// The GFD DPID this module hands to CXL consumers.
+    pub fn gfd_dpid(&self) -> Dpid {
+        self.gfd_dpid
     }
 
     /// Bytes currently leased from the FM / used by live allocations.
@@ -117,6 +162,11 @@ impl LmbModule {
 
     pub fn live_allocs(&self) -> usize {
         self.allocs.len()
+    }
+
+    /// The consumer owning `mmid`, if it is live.
+    pub fn owner_of(&self, mmid: MmId) -> Option<Consumer> {
+        self.allocs.get(&mmid).map(|r| r.owner)
     }
 
     fn next_mmid(&mut self) -> MmId {
@@ -166,9 +216,66 @@ impl LmbModule {
         })
     }
 
-    /// `lmb_PCIe_alloc(*dev, size, *hpa, *mmid)` — allocate LMB memory
-    /// for a PCIe device; creates the IOMMU mapping (§3.3).
-    pub fn pcie_alloc(
+    // ---- unified API ----
+
+    /// Allocate LMB memory for any consumer. Dispatches the class-
+    /// specific access-control setup: PCIe consumers get an IOMMU
+    /// mapping, CXL consumers a SAT grant plus the GFD DPID.
+    pub fn alloc(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        space: &mut AddressSpace,
+        consumer: impl Into<Consumer>,
+        size: u64,
+    ) -> Result<LmbAlloc> {
+        match consumer.into() {
+            Consumer::Pcie(dev) => self.alloc_pcie(fm, iommu, space, dev, size),
+            Consumer::Cxl(dev) => self.alloc_cxl(fm, space, dev, size),
+        }
+    }
+
+    /// Free an allocation owned by `consumer`: tears down every IOMMU
+    /// mapping / SAT entry (shares included) and releases a drained
+    /// extent back to the FM.
+    pub fn free(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        space: &mut AddressSpace,
+        consumer: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<()> {
+        let rec = self.take_record(consumer.into(), mmid)?;
+        self.free_inner(fm, iommu, space, rec)
+    }
+
+    /// Zero-copy sharing: alias `mmid` into `target`'s view. Only the
+    /// allocation's owner may share ([`Error::NotOwner`] otherwise), and
+    /// re-sharing to a consumer that already has access returns the
+    /// existing view instead of programming duplicate state.
+    pub fn share(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        owner: impl Into<Consumer>,
+        target: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        let owner = owner.into();
+        let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
+        if rec.owner != owner {
+            return Err(Error::NotOwner { mmid });
+        }
+        match target.into() {
+            Consumer::Pcie(dev) => self.share_to_pcie(iommu, dev, mmid),
+            Consumer::Cxl(dev) => self.share_to_cxl(fm, dev, mmid),
+        }
+    }
+
+    // ---- class-specific internals ----
+
+    fn alloc_pcie(
         &mut self,
         fm: &mut FabricManager,
         iommu: &mut Iommu,
@@ -210,9 +317,7 @@ impl LmbModule {
         })
     }
 
-    /// `lmb_CXL_alloc(*CXLd, size, *hpa, *DPID, *mmid)` — allocate for a
-    /// CXL device; programs a SAT entry so the device can P2P (§3.3).
-    pub fn cxl_alloc(
+    fn alloc_cxl(
         &mut self,
         fm: &mut FabricManager,
         space: &mut AddressSpace,
@@ -290,16 +395,11 @@ impl LmbModule {
                 fm.sat_revoke(spid, Range::new(rec.placement.dpa.0, rec.placement.len))?;
             }
         }
-        if let Some(idx) = self.sub.free(rec.placement) {
-            // extent fully drained — only release if no other live alloc
-            // references it (they cannot, by definition of fully free).
-            let st = self.sub.remove_extent(idx);
-            // NB: removing shifts indices; fix up remaining placements.
-            for r in self.allocs.values_mut() {
-                if r.placement.extent_idx > idx {
-                    r.placement.extent_idx -= 1;
-                }
-            }
+        if let Some(id) = self.sub.free(rec.placement) {
+            // Extent fully drained — release it to the FM. ExtentIds are
+            // stable, so every other live placement stays valid with no
+            // rebasing sweep.
+            let st = self.sub.remove_extent(id);
             fm.expander_mut().remove_decoder(st.hpa_base.0)?;
             space.remove_hdm_window(st.hpa_base)?;
             fm.release_extent(self.host, st.extent)?;
@@ -307,42 +407,26 @@ impl LmbModule {
         Ok(())
     }
 
-    /// `lmb_PCIe_free(*dev, mmid)`.
-    pub fn pcie_free(
-        &mut self,
-        fm: &mut FabricManager,
-        iommu: &mut Iommu,
-        space: &mut AddressSpace,
-        dev: Bdf,
-        mmid: MmId,
-    ) -> Result<()> {
-        let rec = self.take_record(Consumer::Pcie(dev), mmid)?;
-        self.free_inner(fm, iommu, space, rec)
-    }
-
-    /// `lmb_CXL_free(*CXLd, mmid)`.
-    pub fn cxl_free(
-        &mut self,
-        fm: &mut FabricManager,
-        iommu: &mut Iommu,
-        space: &mut AddressSpace,
-        dev: Spid,
-        mmid: MmId,
-    ) -> Result<()> {
-        let rec = self.take_record(Consumer::Cxl(dev), mmid)?;
-        self.free_inner(fm, iommu, space, rec)
-    }
-
-    /// `lmb_PCIe_share(*dev, mmid, *hpa)` — map an existing allocation
-    /// into another PCIe device's IOMMU domain (zero-copy sharing).
-    pub fn pcie_share(
-        &mut self,
-        iommu: &mut Iommu,
-        target: Bdf,
-        mmid: MmId,
-    ) -> Result<LmbAlloc> {
+    /// Share into a PCIe target's IOMMU domain (no owner check — the
+    /// unified [`LmbModule::share`] performs it).
+    fn share_to_pcie(&mut self, iommu: &mut Iommu, target: Bdf, mmid: MmId) -> Result<LmbAlloc> {
         let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
         let placement = rec.placement;
+        // idempotence: a consumer that already has access gets its
+        // existing view back instead of a second IOMMU mapping
+        if rec.owner == Consumer::Pcie(target) {
+            return Ok(self.get(mmid).unwrap());
+        }
+        if let Some(s) = rec.shares.iter().find(|s| s.consumer == Consumer::Pcie(target)) {
+            return Ok(LmbAlloc {
+                mmid,
+                hpa: placement.hpa,
+                bus_addr: s.bus_addr,
+                dpid: None,
+                dpa: placement.dpa,
+                size: placement.len,
+            });
+        }
         let bus = iommu.map(target, placement.hpa, placement.len, IommuPerm::ReadWrite)?;
         let rec = self.allocs.get_mut(&mmid).unwrap();
         rec.shares.push(ShareRecord { consumer: Consumer::Pcie(target), bus_addr: Some(bus) });
@@ -356,9 +440,9 @@ impl LmbModule {
         })
     }
 
-    /// `lmb_CXL_share(*CXLd, mmid, *hpa, *DPID)` — grant another CXL
-    /// device P2P access to an existing allocation.
-    pub fn cxl_share(
+    /// Grant a CXL target P2P access (no owner check — the unified
+    /// [`LmbModule::share`] performs it).
+    fn share_to_cxl(
         &mut self,
         fm: &mut FabricManager,
         target: Spid,
@@ -366,6 +450,21 @@ impl LmbModule {
     ) -> Result<LmbAlloc> {
         let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
         let placement = rec.placement;
+        // idempotence: an existing grant (owner or prior share) is
+        // reused; double-programming the SAT would also be rejected by
+        // the GFD as an overlapping grant
+        if rec.owner == Consumer::Cxl(target)
+            || rec.shares.iter().any(|s| s.consumer == Consumer::Cxl(target))
+        {
+            return Ok(LmbAlloc {
+                mmid,
+                hpa: placement.hpa,
+                bus_addr: None,
+                dpid: Some(self.gfd_dpid),
+                dpa: placement.dpa,
+                size: placement.len,
+            });
+        }
         fm.sat_grant(target, Range::new(placement.dpa.0, placement.len), SatPerm::ReadWrite)?;
         let rec = self.allocs.get_mut(&mmid).unwrap();
         rec.shares.push(ShareRecord { consumer: Consumer::Cxl(target), bus_addr: None });
@@ -378,6 +477,86 @@ impl LmbModule {
             size: placement.len,
         })
     }
+
+    // ---- deprecated Table 2 shims (paper-named, §3.2 Table 2) ----
+
+    /// `lmb_PCIe_alloc(*dev, size, *hpa, *mmid)`.
+    #[deprecated(note = "use `LmbModule::alloc` (or `LmbHost::alloc`) with a `Consumer`")]
+    pub fn pcie_alloc(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        space: &mut AddressSpace,
+        dev: Bdf,
+        size: u64,
+    ) -> Result<LmbAlloc> {
+        self.alloc_pcie(fm, iommu, space, dev, size)
+    }
+
+    /// `lmb_CXL_alloc(*CXLd, size, *hpa, *DPID, *mmid)`.
+    #[deprecated(note = "use `LmbModule::alloc` (or `LmbHost::alloc`) with a `Consumer`")]
+    pub fn cxl_alloc(
+        &mut self,
+        fm: &mut FabricManager,
+        space: &mut AddressSpace,
+        dev: Spid,
+        size: u64,
+    ) -> Result<LmbAlloc> {
+        self.alloc_cxl(fm, space, dev, size)
+    }
+
+    /// `lmb_PCIe_free(*dev, mmid)`.
+    #[deprecated(note = "use `LmbModule::free` (or `LmbHost::free`) with a `Consumer`")]
+    pub fn pcie_free(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        space: &mut AddressSpace,
+        dev: Bdf,
+        mmid: MmId,
+    ) -> Result<()> {
+        self.free(fm, iommu, space, dev, mmid)
+    }
+
+    /// `lmb_CXL_free(*CXLd, mmid)`.
+    #[deprecated(note = "use `LmbModule::free` (or `LmbHost::free`) with a `Consumer`")]
+    pub fn cxl_free(
+        &mut self,
+        fm: &mut FabricManager,
+        iommu: &mut Iommu,
+        space: &mut AddressSpace,
+        dev: Spid,
+        mmid: MmId,
+    ) -> Result<()> {
+        self.free(fm, iommu, space, dev, mmid)
+    }
+
+    /// `lmb_PCIe_share(*dev, mmid, *hpa)` — the paper's signature has no
+    /// sharer argument, so the shim is self-authorised; it still
+    /// deduplicates repeat shares.
+    #[deprecated(note = "use `LmbModule::share` (or `LmbHost::share`), which checks ownership")]
+    pub fn pcie_share(
+        &mut self,
+        iommu: &mut Iommu,
+        target: Bdf,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        self.share_to_pcie(iommu, target, mmid)
+    }
+
+    /// `lmb_CXL_share(*CXLd, mmid, *hpa, *DPID)` — self-authorised like
+    /// [`LmbModule::pcie_share`]; still deduplicates repeat shares.
+    #[deprecated(note = "use `LmbModule::share` (or `LmbHost::share`), which checks ownership")]
+    pub fn cxl_share(
+        &mut self,
+        fm: &mut FabricManager,
+        target: Spid,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        self.share_to_cxl(fm, target, mmid)
+    }
+
+    // ---- lookups / invariants ----
 
     /// Look up a live allocation (tests / coordinator bookkeeping).
     pub fn get(&self, mmid: MmId) -> Option<LmbAlloc> {
@@ -425,7 +604,7 @@ mod tests {
             PbrSwitch::new(16),
             Expander::new(ExpanderConfig { dram_capacity: 4 * GIB, ..Default::default() }),
         );
-        fm.attach_gfd().unwrap();
+        let gfd_dpid = fm.attach_gfd().unwrap();
         let (host, _) = fm.bind_host().unwrap();
         let mut iommu = Iommu::new();
         let dev = Bdf::new(1, 0, 0);
@@ -434,18 +613,35 @@ mod tests {
             fm,
             iommu,
             space: AddressSpace::new(GIB),
-            module: LmbModule::load(host),
+            module: LmbModule::load(host, gfd_dpid),
             dev,
+        }
+    }
+
+    impl Rig {
+        fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
+            self.module.alloc(&mut self.fm, &mut self.iommu, &mut self.space, consumer, size)
+        }
+
+        fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
+            self.module.free(&mut self.fm, &mut self.iommu, &mut self.space, consumer, mmid)
+        }
+
+        fn share(
+            &mut self,
+            owner: impl Into<Consumer>,
+            target: impl Into<Consumer>,
+            mmid: MmId,
+        ) -> Result<LmbAlloc> {
+            self.module.share(&mut self.fm, &mut self.iommu, owner, target, mmid)
         }
     }
 
     #[test]
     fn pcie_alloc_returns_bus_addr_and_leases_extent() {
         let mut r = rig();
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, 8 * PAGE_SIZE)
-            .unwrap();
+        let dev = r.dev;
+        let a = r.alloc(dev, 8 * PAGE_SIZE).unwrap();
         assert!(a.bus_addr.is_some());
         assert!(a.dpid.is_none());
         assert_eq!(a.size, 8 * PAGE_SIZE);
@@ -453,7 +649,7 @@ mod tests {
         // The IOMMU must translate the bus address back to the HPA.
         let hpa = r
             .iommu
-            .translate(r.dev, a.bus_addr.unwrap(), 64, true)
+            .translate(dev, a.bus_addr.unwrap(), 64, true)
             .unwrap();
         assert_eq!(hpa, a.hpa);
         // And the HPA must resolve to the expander DPA.
@@ -466,113 +662,159 @@ mod tests {
     #[test]
     fn second_alloc_reuses_extent() {
         let mut r = rig();
-        r.module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
-        r.module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
+        let dev = r.dev;
+        r.alloc(dev, PAGE_SIZE).unwrap();
+        r.alloc(dev, PAGE_SIZE).unwrap();
         assert_eq!(r.module.leased(), EXTENT_SIZE, "no extra extent for small allocs");
     }
 
     #[test]
     fn large_alloc_leases_multiple_extents() {
         let mut r = rig();
+        let dev = r.dev;
         // > one extent: the sub-allocator cannot place it contiguously in
         // one 256MB extent, so the request must fail cleanly (the paper's
         // allocator hands out ≤extent-sized regions).
-        let res = r.module.pcie_alloc(
-            &mut r.fm,
-            &mut r.iommu,
-            &mut r.space,
-            r.dev,
-            EXTENT_SIZE + PAGE_SIZE,
-        );
+        let res = r.alloc(dev, EXTENT_SIZE + PAGE_SIZE);
         assert!(res.is_err(), "cross-extent contiguous alloc not supported");
         // but exactly one extent works
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, EXTENT_SIZE)
-            .unwrap();
+        let a = r.alloc(dev, EXTENT_SIZE).unwrap();
         assert_eq!(a.size, EXTENT_SIZE);
     }
 
     #[test]
     fn free_releases_drained_extent_to_fm() {
         let mut r = rig();
+        let dev = r.dev;
         let before = r.fm.available();
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
         assert_eq!(r.fm.available(), before - EXTENT_SIZE);
-        r.module
-            .pcie_free(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, a.mmid)
-            .unwrap();
+        r.free(dev, a.mmid).unwrap();
         assert_eq!(r.fm.available(), before, "extent returned to FM");
         assert_eq!(r.module.leased(), 0);
-        assert_eq!(r.iommu.mapping_count(r.dev), 0);
+        assert_eq!(r.iommu.mapping_count(dev), 0);
+        r.fm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extent_release_leaves_other_placements_valid() {
+        // Regression for the ExtentId refactor: freeing an allocation
+        // that drains one extent must not disturb live placements in any
+        // other extent (the old positional scheme rebased indices here).
+        let mut r = rig();
+        let dev = r.dev;
+        let a = r.alloc(dev, EXTENT_SIZE).unwrap(); // fills extent 0
+        let b = r.alloc(dev, PAGE_SIZE).unwrap(); // lives in extent 1
+        assert_eq!(r.module.leased(), 2 * EXTENT_SIZE);
+        r.free(dev, a.mmid).unwrap(); // drains + releases extent 0
+        assert_eq!(r.module.leased(), EXTENT_SIZE);
+        // b's handle still resolves to valid, translatable state
+        let still = r.module.get(b.mmid).expect("b survives a's extent release");
+        assert_eq!(still.hpa, b.hpa);
+        assert_eq!(still.dpa, b.dpa);
+        let hpa = r.iommu.translate(dev, still.bus_addr.unwrap(), 64, true).unwrap();
+        assert_eq!(hpa, b.hpa);
+        r.module.check_invariants().unwrap();
+        // and b can still be freed cleanly, draining the second extent
+        r.free(dev, b.mmid).unwrap();
+        assert_eq!(r.module.leased(), 0);
         r.fm.check_invariants().unwrap();
     }
 
     #[test]
     fn free_requires_ownership() {
         let mut r = rig();
+        let dev = r.dev;
         let intruder = Bdf::new(9, 0, 0);
         r.iommu.attach(intruder);
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
-        assert!(matches!(
-            r.module
-                .pcie_free(&mut r.fm, &mut r.iommu, &mut r.space, intruder, a.mmid),
-            Err(Error::NotOwner { .. })
-        ));
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
+        assert!(matches!(r.free(intruder, a.mmid), Err(Error::NotOwner { .. })));
     }
 
     #[test]
     fn unknown_mmid_rejected() {
         let mut r = rig();
-        assert!(matches!(
-            r.module
-                .pcie_free(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, MmId(404)),
-            Err(Error::UnknownMmId(_))
-        ));
+        let dev = r.dev;
+        assert!(matches!(r.free(dev, MmId(404)), Err(Error::UnknownMmId(_))));
     }
 
     #[test]
-    fn cxl_alloc_gets_dpid_and_sat_entry() {
+    fn cxl_alloc_gets_real_gfd_dpid_and_sat_entry() {
         let mut r = rig();
         let spid = r.fm.bind_cxl_device().unwrap();
-        let a = r.module.cxl_alloc(&mut r.fm, &mut r.space, spid, PAGE_SIZE).unwrap();
-        assert!(a.dpid.is_some());
+        let a = r.alloc(spid, PAGE_SIZE).unwrap();
+        assert_eq!(a.dpid, r.fm.gfd_dpid(), "DPID is the real GFD port, not a sentinel");
+        assert_eq!(a.dpid, Some(r.module.gfd_dpid()));
         assert!(a.bus_addr.is_none());
         assert!(r.fm.expander().sat().check(spid, a.dpa, 64, true));
-        r.module
-            .cxl_free(&mut r.fm, &mut r.iommu, &mut r.space, spid, a.mmid)
-            .unwrap();
+        r.free(spid, a.mmid).unwrap();
         assert!(!r.fm.expander().sat().check(spid, a.dpa, 64, false));
     }
 
     #[test]
-    fn pcie_share_maps_into_target_domain() {
+    fn share_maps_into_pcie_target_domain() {
         let mut r = rig();
+        let dev = r.dev;
         let target = Bdf::new(2, 0, 0);
         r.iommu.attach(target);
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
-        let s = r.module.pcie_share(&mut r.iommu, target, a.mmid).unwrap();
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
+        let s = r.share(dev, target, a.mmid).unwrap();
         assert_eq!(s.hpa, a.hpa);
         let hpa = r.iommu.translate(target, s.bus_addr.unwrap(), 64, true).unwrap();
         assert_eq!(hpa, a.hpa);
         // freeing the owner tears down the share too
-        r.module
-            .pcie_free(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, a.mmid)
-            .unwrap();
+        r.free(dev, a.mmid).unwrap();
         assert!(r.iommu.translate(target, s.bus_addr.unwrap(), 64, false).is_err());
+    }
+
+    #[test]
+    fn share_requires_owner() {
+        let mut r = rig();
+        let dev = r.dev;
+        let intruder = Bdf::new(9, 0, 0);
+        let target = Bdf::new(2, 0, 0);
+        r.iommu.attach(intruder);
+        r.iommu.attach(target);
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
+        assert!(matches!(
+            r.share(intruder, target, a.mmid),
+            Err(Error::NotOwner { .. })
+        ));
+        assert_eq!(r.iommu.mapping_count(target), 0, "denied share programs nothing");
+    }
+
+    #[test]
+    fn repeated_share_does_not_duplicate_mappings() {
+        let mut r = rig();
+        let dev = r.dev;
+        let target = Bdf::new(2, 0, 0);
+        r.iommu.attach(target);
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
+        let s1 = r.share(dev, target, a.mmid).unwrap();
+        let s2 = r.share(dev, target, a.mmid).unwrap();
+        assert_eq!(s1.bus_addr, s2.bus_addr, "same view handed back");
+        assert_eq!(r.iommu.mapping_count(target), 1, "no duplicate IOMMU mapping");
+        // sharing back to the owner is a no-op returning the owner view
+        let own = r.share(dev, dev, a.mmid).unwrap();
+        assert_eq!(own.bus_addr, a.bus_addr);
+        assert_eq!(r.iommu.mapping_count(dev), 1);
+    }
+
+    #[test]
+    fn repeated_cxl_share_does_not_duplicate_sat_entries() {
+        let mut r = rig();
+        let spid_a = r.fm.bind_cxl_device().unwrap();
+        let spid_b = r.fm.bind_cxl_device().unwrap();
+        let a = r.alloc(spid_a, PAGE_SIZE).unwrap();
+        let sat_after_alloc = r.fm.expander().sat().len();
+        let s1 = r.share(spid_a, spid_b, a.mmid).unwrap();
+        let s2 = r.share(spid_a, spid_b, a.mmid).unwrap();
+        assert_eq!(s1.dpa, s2.dpa);
+        assert_eq!(r.fm.expander().sat().len(), sat_after_alloc + 1, "one grant for b");
+        // re-sharing to the owner reuses its own alloc-time grant
+        let own = r.share(spid_a, spid_a, a.mmid).unwrap();
+        assert_eq!(own.dpa, a.dpa);
+        assert_eq!(r.fm.expander().sat().len(), sat_after_alloc + 1);
     }
 
     #[test]
@@ -580,9 +822,9 @@ mod tests {
         let mut r = rig();
         let spid_a = r.fm.bind_cxl_device().unwrap();
         let spid_b = r.fm.bind_cxl_device().unwrap();
-        let a = r.module.cxl_alloc(&mut r.fm, &mut r.space, spid_a, PAGE_SIZE).unwrap();
+        let a = r.alloc(spid_a, PAGE_SIZE).unwrap();
         assert!(!r.fm.expander().sat().check(spid_b, a.dpa, 64, false));
-        let s = r.module.cxl_share(&mut r.fm, spid_b, a.mmid).unwrap();
+        let s = r.share(spid_a, spid_b, a.mmid).unwrap();
         assert_eq!(s.dpa, a.dpa);
         assert!(r.fm.expander().sat().check(spid_b, a.dpa, 64, true));
     }
@@ -592,40 +834,52 @@ mod tests {
         // Figure 5 scenario: SSD (PCIe) produces, accelerator (CXL)
         // consumes — zero-copy via shared LMB memory.
         let mut r = rig();
+        let dev = r.dev;
         let spid = r.fm.bind_cxl_device().unwrap();
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .unwrap();
-        let s = r.module.cxl_share(&mut r.fm, spid, a.mmid).unwrap();
+        let a = r.alloc(dev, PAGE_SIZE).unwrap();
+        let s = r.share(dev, spid, a.mmid).unwrap();
         assert!(r.fm.expander().sat().check(spid, s.dpa, 64, true));
+        assert_eq!(s.dpid, r.fm.gfd_dpid());
     }
 
     #[test]
     fn alloc_failure_after_capacity_exhaustion() {
         let mut r = rig();
+        let dev = r.dev;
         // 4 GiB expander = 16 extents
         let mut ids = Vec::new();
         for _ in 0..16 {
-            ids.push(
-                r.module
-                    .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, EXTENT_SIZE)
-                    .unwrap(),
-            );
+            ids.push(r.alloc(dev, EXTENT_SIZE).unwrap());
         }
-        assert!(r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .is_err());
+        assert!(r.alloc(dev, PAGE_SIZE).is_err());
         // free one and retry
         let a = ids.pop().unwrap();
-        r.module
-            .pcie_free(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, a.mmid)
-            .unwrap();
-        assert!(r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, r.dev, PAGE_SIZE)
-            .is_ok());
+        r.free(dev, a.mmid).unwrap();
+        assert!(r.alloc(dev, PAGE_SIZE).is_ok());
         r.module.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn table2_shims_delegate_to_unified_paths() {
+        // The deprecated paper-named shims remain thin wrappers over the
+        // same internals — allocate via shim, free via unified, and vice
+        // versa, across both consumer classes.
+        let mut r = rig();
+        let dev = r.dev;
+        let spid = r.fm.bind_cxl_device().unwrap();
+        let a = r
+            .module
+            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, dev, PAGE_SIZE)
+            .unwrap();
+        let b = r.module.cxl_alloc(&mut r.fm, &mut r.space, spid, PAGE_SIZE).unwrap();
+        let s = r.module.cxl_share(&mut r.fm, spid, a.mmid).unwrap();
+        assert_eq!(s.dpa, a.dpa);
+        r.free(dev, a.mmid).unwrap();
+        r.module
+            .cxl_free(&mut r.fm, &mut r.iommu, &mut r.space, spid, b.mmid)
+            .unwrap();
+        assert_eq!(r.module.live_allocs(), 0);
+        assert_eq!(r.module.leased(), 0);
     }
 }

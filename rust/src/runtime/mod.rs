@@ -27,6 +27,13 @@
 
 pub mod batch;
 pub mod native;
+// The real PJRT loader needs the vendored `xla` crate; the default
+// build substitutes a stub with the same surface that always reports
+// artifacts unavailable, keeping every consumer on the native mirror.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use batch::BatchBuilder;

@@ -1,0 +1,83 @@
+//! Stub PJRT loader, compiled when the `pjrt` feature is off (the
+//! default — the vendored `xla` crate is absent from hermetic builds).
+//!
+//! Mirrors the public surface of the real `pjrt.rs` so every consumer
+//! (coordinator backend selection, `perf_hotpath`, `xla_parity`)
+//! compiles unchanged: artifacts are simply never *available*, so all of
+//! them take their native-data-plane fallback paths. Enable the `pjrt`
+//! feature (and add the `xla` dependency) to restore the XLA path.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::{ModelInputs, ModelOutputs, StageWidths};
+
+fn unavailable(what: &str) -> Error {
+    Error::Runtime(format!(
+        "{what}: built without the `pjrt` feature — the XLA data plane is \
+         stubbed out; use the native backend (Coordinator::native / ::auto)"
+    ))
+}
+
+/// One compiled model variant (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct XlaModel {
+    pub batch: usize,
+    pub widths: StageWidths,
+    pub name: String,
+    _private: (),
+}
+
+impl XlaModel {
+    /// Execute one batch (stub: always an error).
+    pub fn run(&self, _inputs: &ModelInputs) -> Result<ModelOutputs> {
+        Err(unavailable("XlaModel::run"))
+    }
+}
+
+/// The artifacts directory (stub: never reports available).
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // honour $LMB_ARTIFACTS, else ./artifacts (same as the real impl)
+        std::env::var_os("LMB_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Whether artifacts can be used. Without the `pjrt` feature the
+    /// answer is always no, even if the files exist on disk.
+    pub fn available(_dir: &Path) -> bool {
+        false
+    }
+
+    /// Load the manifest (stub: always an error).
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Err(unavailable("Artifacts::load"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&XlaModel> {
+        Err(unavailable(&format!("model '{name}'")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable_everywhere() {
+        let dir = Artifacts::default_dir();
+        assert!(!Artifacts::available(&dir));
+        assert!(Artifacts::load(&dir).is_err());
+    }
+}

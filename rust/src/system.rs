@@ -1,14 +1,19 @@
 //! Whole-system wiring: one host, its CXL fabric, the LMB module, and
 //! attached devices — the object examples and integration tests build.
+//!
+//! The LMB control plane lives in the composed [`LmbHost`] context; the
+//! `System` adds device enumeration (BDFs, SPIDs) on top and forwards
+//! the unified `alloc`/`free`/`share` surface. The Table-2-named methods
+//! remain as deprecated shims for the paper mapping.
 
 use crate::cxl::expander::{Expander, ExpanderConfig};
 use crate::cxl::fabric::{Fabric, FabricConfig};
 use crate::cxl::fm::{FabricManager, HostId};
 use crate::cxl::switch::PbrSwitch;
-use crate::cxl::types::{Bdf, Dpa, MmId, Spid, GIB};
+use crate::cxl::types::{Bdf, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
-use crate::lmb::{LmbAlloc, LmbModule};
+use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule};
 use crate::pcie::iommu::Iommu;
 use crate::ssd::spec::SsdSpec;
 
@@ -34,11 +39,7 @@ pub struct CxlDevice {
 #[derive(Debug)]
 pub struct System {
     pub fabric: Fabric,
-    fm: FabricManager,
-    iommu: Iommu,
-    space: AddressSpace,
-    module: LmbModule,
-    host: HostId,
+    lmb: LmbHost,
     pcie_devices: Vec<PcieSsd>,
     cxl_devices: Vec<CxlDevice>,
     next_bus: u8,
@@ -90,21 +91,16 @@ impl SystemBuilder {
     }
 
     pub fn build(self) -> Result<System> {
-        let mut fm = FabricManager::new(
+        let fm = FabricManager::new(
             PbrSwitch::new(self.switch_ports),
             Expander::new(self.expander),
         );
-        fm.attach_gfd()?;
-        let (host, _spid) = fm.bind_host()?;
-        // §3.1: the LMB module loads before any device driver initialises.
-        let module = LmbModule::load(host);
+        // §3.1: LmbHost::bind attaches the GFD, binds the host, and loads
+        // the LMB module before any device driver initialises.
+        let lmb = LmbHost::bind(fm, self.host_dram)?;
         Ok(System {
             fabric: Fabric::new(self.fabric),
-            fm,
-            iommu: Iommu::new(),
-            space: AddressSpace::new(self.host_dram),
-            module,
-            host,
+            lmb,
             pcie_devices: Vec::new(),
             cxl_devices: Vec::new(),
             next_bus: 1,
@@ -118,52 +114,64 @@ impl System {
     }
 
     pub fn host(&self) -> HostId {
-        self.host
+        self.lmb.host()
+    }
+
+    /// The per-host LMB context (unified control plane).
+    pub fn lmb(&self) -> &LmbHost {
+        &self.lmb
+    }
+
+    pub fn lmb_mut(&mut self) -> &mut LmbHost {
+        &mut self.lmb
     }
 
     pub fn fm(&self) -> &FabricManager {
-        &self.fm
+        self.lmb.fm()
     }
 
     pub fn fm_mut(&mut self) -> &mut FabricManager {
-        &mut self.fm
+        self.lmb.fm_mut()
     }
 
     pub fn iommu(&self) -> &Iommu {
-        &self.iommu
+        self.lmb.iommu()
     }
 
     pub fn iommu_mut(&mut self) -> &mut Iommu {
-        &mut self.iommu
+        self.lmb.iommu_mut()
     }
 
     pub fn space(&self) -> &AddressSpace {
-        &self.space
+        self.lmb.space()
     }
 
     pub fn module(&self) -> &LmbModule {
-        &self.module
+        self.lmb.module()
     }
 
     /// Split borrow for failure handling: the FM mutably plus the module
     /// immutably (see [`crate::lmb::failure::FailureDomain`]).
     pub fn failure_parts(&mut self) -> (&mut FabricManager, &LmbModule) {
-        (&mut self.fm, &self.module)
+        self.lmb.failure_parts()
     }
 
     /// Attach a PCIe SSD: enumerates a BDF and creates its IOMMU domain.
     pub fn attach_pcie_ssd(&mut self, spec: SsdSpec) -> DeviceId {
-        assert!(self.module.is_loaded(), "LMB module must load before device drivers (§3.1)");
+        assert!(
+            self.lmb.module().is_loaded(),
+            "LMB module must load before device drivers (§3.1)"
+        );
         let bdf = Bdf::new(self.next_bus, 0, 0);
         self.next_bus += 1;
-        self.iommu.attach(bdf);
+        self.lmb.attach_pcie(bdf);
         self.pcie_devices.push(PcieSsd { bdf, spec });
         DeviceId(self.pcie_devices.len() - 1)
     }
 
     /// Attach a CXL device, binding it to the switch for P2P.
     pub fn attach_cxl_device(&mut self, name: &str) -> Result<Spid> {
-        let spid = self.fm.bind_cxl_device()?;
+        let spid = self.lmb.attach_cxl_device()?;
         self.cxl_devices.push(CxlDevice { spid, name: name.to_string() });
         Ok(spid)
     }
@@ -174,64 +182,103 @@ impl System {
             .ok_or_else(|| Error::Device(format!("no device {id:?}")))
     }
 
+    /// The [`Consumer`] identity of an attached PCIe device (CXL devices
+    /// are addressed by the `Spid` returned at attach time).
+    pub fn consumer(&self, id: DeviceId) -> Result<Consumer> {
+        Ok(Consumer::Pcie(self.pcie_device(id)?.bdf))
+    }
+
     pub fn device_count(&self) -> usize {
         self.pcie_devices.len() + self.cxl_devices.len()
     }
 
-    // ---- LMB API surface (Table 2), with the borrows pre-split ----
+    // ---- unified LMB API (forwarded to the LmbHost context) ----
+
+    /// Allocate LMB memory for any consumer class.
+    pub fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
+        self.lmb.alloc(consumer, size)
+    }
+
+    /// All-or-nothing batch allocation (rolls back on partial failure).
+    pub fn alloc_many(
+        &mut self,
+        consumer: impl Into<Consumer>,
+        sizes: &[u64],
+    ) -> Result<Vec<LmbAlloc>> {
+        self.lmb.alloc_many(consumer, sizes)
+    }
+
+    /// Free an allocation owned by `consumer`.
+    pub fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
+        self.lmb.free(consumer, mmid)
+    }
+
+    /// Owner-authorised zero-copy share into `target`'s view.
+    pub fn share(
+        &mut self,
+        owner: impl Into<Consumer>,
+        target: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        self.lmb.share(owner, target, mmid)
+    }
+
+    // ---- deprecated Table 2 shims ----
 
     /// `lmb_PCIe_alloc` for an attached SSD.
+    #[deprecated(note = "use `System::alloc` with a `Consumer` (see `System::consumer`)")]
     pub fn pcie_alloc(&mut self, dev: DeviceId, size: u64) -> Result<LmbAlloc> {
-        let bdf = self.pcie_device(dev)?.bdf;
-        self.module
-            .pcie_alloc(&mut self.fm, &mut self.iommu, &mut self.space, bdf, size)
+        let c = self.consumer(dev)?;
+        self.lmb.alloc(c, size)
     }
 
     /// `lmb_CXL_alloc` for an attached CXL device.
+    #[deprecated(note = "use `System::alloc` with a `Consumer`")]
     pub fn cxl_alloc(&mut self, spid: Spid, size: u64) -> Result<LmbAlloc> {
-        self.module.cxl_alloc(&mut self.fm, &mut self.space, spid, size)
+        self.lmb.alloc(spid, size)
     }
 
     /// `lmb_PCIe_free`.
+    #[deprecated(note = "use `System::free` with a `Consumer`")]
     pub fn pcie_free(&mut self, dev: DeviceId, mmid: MmId) -> Result<()> {
-        let bdf = self.pcie_device(dev)?.bdf;
-        self.module
-            .pcie_free(&mut self.fm, &mut self.iommu, &mut self.space, bdf, mmid)
+        let c = self.consumer(dev)?;
+        self.lmb.free(c, mmid)
     }
 
     /// `lmb_CXL_free`.
+    #[deprecated(note = "use `System::free` with a `Consumer`")]
     pub fn cxl_free(&mut self, spid: Spid, mmid: MmId) -> Result<()> {
-        self.module
-            .cxl_free(&mut self.fm, &mut self.iommu, &mut self.space, spid, mmid)
+        self.lmb.free(spid, mmid)
     }
 
     /// `lmb_PCIe_share`: map `mmid` into another PCIe device's domain.
+    /// Self-authorised (the paper's signature names no sharer); the
+    /// unified [`System::share`] enforces ownership.
+    #[deprecated(note = "use `System::share`, which checks ownership")]
     pub fn pcie_share(&mut self, target: DeviceId, mmid: MmId) -> Result<LmbAlloc> {
-        let bdf = self.pcie_device(target)?.bdf;
-        self.module.pcie_share(&mut self.iommu, bdf, mmid)
+        let owner = self.module().owner_of(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        let t = self.consumer(target)?;
+        self.lmb.share(owner, t, mmid)
     }
 
     /// `lmb_CXL_share`: grant another CXL device P2P access to `mmid`.
+    /// Self-authorised like [`System::pcie_share`].
+    #[deprecated(note = "use `System::share`, which checks ownership")]
     pub fn cxl_share(&mut self, target: Spid, mmid: MmId) -> Result<LmbAlloc> {
-        self.module.cxl_share(&mut self.fm, target, mmid)
+        let owner = self.module().owner_of(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        self.lmb.share(owner, target, mmid)
     }
+
+    // ---- data path ----
 
     /// Functional write into an LMB allocation (host-mediated path).
     pub fn write_alloc(&mut self, mmid: MmId, offset: u64, data: &[u8]) -> Result<()> {
-        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        if offset + data.len() as u64 > a.size {
-            return Err(Error::Config("write beyond allocation".into()));
-        }
-        self.fm.expander_mut().write_dpa(Dpa(a.dpa.0 + offset), data)
+        self.lmb.write(mmid, offset, data)
     }
 
     /// Functional read from an LMB allocation.
     pub fn read_alloc(&self, mmid: MmId, offset: u64, out: &mut [u8]) -> Result<()> {
-        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        if offset + out.len() as u64 > a.size {
-            return Err(Error::Config("read beyond allocation".into()));
-        }
-        self.fm.expander().read_dpa(Dpa(a.dpa.0 + offset), out)
+        self.lmb.read(mmid, offset, out)
     }
 }
 
@@ -244,14 +291,15 @@ mod tests {
     fn builder_and_alloc_roundtrip() {
         let mut sys = System::builder().expander_gib(4).build().unwrap();
         let ssd = sys.attach_pcie_ssd(SsdSpec::gen5());
-        let a = sys.pcie_alloc(ssd, 8 * PAGE_SIZE).unwrap();
+        let dev = sys.consumer(ssd).unwrap();
+        let a = sys.alloc(dev, 8 * PAGE_SIZE).unwrap();
         assert!(a.bus_addr.is_some());
         // data written through the system is readable back
         sys.write_alloc(a.mmid, 128, b"lmb!").unwrap();
         let mut buf = [0u8; 4];
         sys.read_alloc(a.mmid, 128, &mut buf).unwrap();
         assert_eq!(&buf, b"lmb!");
-        sys.pcie_free(ssd, a.mmid).unwrap();
+        sys.free(dev, a.mmid).unwrap();
         assert_eq!(sys.module().live_allocs(), 0);
     }
 
@@ -260,19 +308,38 @@ mod tests {
         // Figure 5 + §3.3 zero-copy path across device classes.
         let mut sys = System::builder().expander_gib(4).build().unwrap();
         let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let dev = sys.consumer(ssd).unwrap();
         let accel = sys.attach_cxl_device("accelerator").unwrap();
-        let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+        let a = sys.alloc(dev, PAGE_SIZE).unwrap();
         sys.write_alloc(a.mmid, 0, b"tensor-bytes").unwrap();
-        let shared = sys.cxl_share(accel, a.mmid).unwrap();
+        let shared = sys.share(dev, accel, a.mmid).unwrap();
         assert_eq!(shared.dpa, a.dpa, "same physical bytes, no copy");
         assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
+        assert_eq!(shared.dpid, sys.fm().gfd_dpid(), "P2P handle names the real GFD");
+    }
+
+    #[test]
+    fn share_authorization_enforced_at_system_level() {
+        let mut sys = System::builder().expander_gib(1).build().unwrap();
+        let a_dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let b_dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+        let a = sys.consumer(a_dev).unwrap();
+        let b = sys.consumer(b_dev).unwrap();
+        let alloc = sys.alloc(a, PAGE_SIZE).unwrap();
+        // only the owner may share
+        assert!(matches!(
+            sys.share(b, b, alloc.mmid),
+            Err(Error::NotOwner { .. })
+        ));
+        sys.share(a, b, alloc.mmid).unwrap();
     }
 
     #[test]
     fn bounds_checked_access() {
         let mut sys = System::builder().expander_gib(1).build().unwrap();
         let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
-        let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+        let dev = sys.consumer(ssd).unwrap();
+        let a = sys.alloc(dev, PAGE_SIZE).unwrap();
         assert!(sys.write_alloc(a.mmid, PAGE_SIZE - 2, b"xxxx").is_err());
         let mut buf = [0u8; 8];
         assert!(sys.read_alloc(a.mmid, PAGE_SIZE - 4, &mut buf).is_err());

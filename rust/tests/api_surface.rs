@@ -1,5 +1,10 @@
 //! Table 2 API surface: every operation the paper specifies, exercised
 //! end-to-end through the System facade.
+//!
+//! These tests deliberately call the deprecated Table-2-named shims so
+//! the paper mapping stays pinned; new code should use the unified
+//! consumer-generic API (covered by `tests/lmb_host.rs`).
+#![allow(deprecated)]
 
 use lmb::cxl::types::{MmId, EXTENT_SIZE, PAGE_SIZE};
 use lmb::prelude::*;
@@ -95,6 +100,42 @@ fn module_requests_256mb_extents_on_demand() {
     // second small alloc: no new extent
     sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
     assert_eq!(sys.fm().available(), fm_before - EXTENT_SIZE);
+}
+
+#[test]
+fn shims_and_unified_api_interoperate() {
+    // An allocation made through a Table 2 shim is the same object the
+    // unified surface sees: shareable and freeable either way.
+    let mut sys = system();
+    let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let dev = sys.consumer(ssd).unwrap();
+    let accel = sys.attach_cxl_device("accel").unwrap();
+    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap(); // shim
+    let s = sys.share(dev, accel, a.mmid).unwrap(); // unified, owner-checked
+    assert_eq!(s.dpa, a.dpa);
+    sys.free(dev, a.mmid).unwrap(); // unified free of a shim alloc
+    assert_eq!(sys.module().live_allocs(), 0);
+}
+
+#[test]
+fn repeated_shim_share_is_idempotent() {
+    // The deprecated shims inherit the no-duplicate-state rule: sharing
+    // the same mmid twice to the same consumer must not leak a second
+    // IOMMU mapping or SAT entry.
+    let mut sys = system();
+    let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let ssd2 = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let accel = sys.attach_cxl_device("accel").unwrap();
+    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+    let bdf2 = sys.pcie_device(ssd2).unwrap().bdf;
+    let s1 = sys.pcie_share(ssd2, a.mmid).unwrap();
+    let s2 = sys.pcie_share(ssd2, a.mmid).unwrap();
+    assert_eq!(s1.bus_addr, s2.bus_addr, "existing view handed back");
+    assert_eq!(sys.iommu().mapping_count(bdf2), 1, "no duplicate IOMMU mapping");
+    let sat_before = sys.fm().expander().sat().len();
+    sys.cxl_share(accel, a.mmid).unwrap();
+    sys.cxl_share(accel, a.mmid).unwrap();
+    assert_eq!(sys.fm().expander().sat().len(), sat_before + 1, "one SAT entry");
 }
 
 #[test]

@@ -19,11 +19,12 @@ use lmb::workload::fio::IoPattern;
 #[test]
 fn l2p_table_lives_in_expander_and_serves_lookups() {
     let mut sys = System::builder().expander_gib(8).build().unwrap();
-    let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let dev_id = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let dev = sys.consumer(dev_id).unwrap();
 
-    // Driver boots: allocate an L2P segment via lmb_PCIe_alloc (Fig. 5).
+    // Driver boots: allocate an L2P segment via the unified API (Fig. 5).
     let seg_entries = 1u64 << 16;
-    let alloc = sys.pcie_alloc(dev, seg_entries * 4).unwrap();
+    let alloc = sys.alloc(dev, seg_entries * 4).unwrap();
 
     // FTL populates mappings and flushes them into LMB memory.
     let mut table = L2pTable::new(seg_entries);
@@ -151,17 +152,18 @@ fn figure6_shape_holds_on_both_devices() {
 #[test]
 fn expander_failure_and_recovery() {
     let mut sys = System::builder().expander_gib(4).build().unwrap();
-    let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
-    let a = sys.pcie_alloc(dev, 4096).unwrap();
+    let dev_id = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let dev = sys.consumer(dev_id).unwrap();
+    let a = sys.alloc(dev, 4096).unwrap();
     sys.write_alloc(a.mmid, 0, b"survives?").unwrap();
 
     sys.fm_mut().expander_mut().set_failed(true);
-    assert!(sys.pcie_alloc(dev, 4096).is_err(), "no alloc during outage");
+    assert!(sys.alloc(dev, 4096).is_err(), "no alloc during outage");
     let mut buf = [0u8; 9];
     assert!(sys.read_alloc(a.mmid, 0, &mut buf).is_err(), "no access during outage");
 
     sys.fm_mut().expander_mut().set_failed(false);
     sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
     assert_eq!(&buf, b"survives?", "DRAM contents modeled as retained");
-    sys.pcie_alloc(dev, 4096).unwrap();
+    sys.alloc(dev, 4096).unwrap();
 }

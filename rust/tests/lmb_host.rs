@@ -1,0 +1,209 @@
+//! The unified, handle-based LMB API (`LmbHost`): alloc/free/share
+//! round-trips for both consumer classes, RAII region semantics, batch
+//! rollback, share authorization/idempotence, and placement stability
+//! across extent release (the `ExtentId` refactor's contract).
+
+use lmb::cxl::expander::{Expander, ExpanderConfig};
+use lmb::cxl::fm::FabricManager;
+use lmb::cxl::switch::PbrSwitch;
+use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
+use lmb::lmb::LmbHost;
+use lmb::prelude::*;
+
+fn host_gib(gib: u64) -> LmbHost {
+    let fm = FabricManager::new(
+        PbrSwitch::new(16),
+        Expander::new(ExpanderConfig { dram_capacity: gib * GIB, ..Default::default() }),
+    );
+    LmbHost::bind(fm, GIB).unwrap()
+}
+
+#[test]
+fn pcie_round_trip() {
+    let mut host = host_gib(4);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    let a = host.alloc(dev, 8 * PAGE_SIZE).unwrap();
+    assert!(a.bus_addr.is_some());
+    assert!(a.dpid.is_none());
+    assert_eq!(host.module().leased(), EXTENT_SIZE);
+    // the bus address translates back to the same HPA
+    let hpa = host.iommu_mut().translate(dev, a.bus_addr.unwrap(), 64, true).unwrap();
+    assert_eq!(hpa, a.hpa);
+    // data written through the host path reads back
+    host.write(a.mmid, 16, b"round-trip").unwrap();
+    let mut buf = [0u8; 10];
+    host.read(a.mmid, 16, &mut buf).unwrap();
+    assert_eq!(&buf, b"round-trip");
+    host.free(dev, a.mmid).unwrap();
+    assert_eq!(host.module().live_allocs(), 0);
+    assert_eq!(host.module().leased(), 0, "drained extent back at the FM");
+    host.check_invariants().unwrap();
+}
+
+#[test]
+fn cxl_round_trip_carries_real_gfd_dpid() {
+    let mut host = host_gib(4);
+    let accel = host.attach_cxl_device().unwrap();
+    let a = host.alloc(accel, 16 * PAGE_SIZE).unwrap();
+    assert!(a.bus_addr.is_none());
+    // satellite check: the DPID is the fabric's actual GFD port id,
+    // plumbed through attach_gfd -> bind -> load, not a sentinel
+    assert_eq!(a.dpid, host.fm().gfd_dpid());
+    assert!(host.fm().expander().sat().check(accel, a.dpa, 64, true));
+    host.free(accel, a.mmid).unwrap();
+    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+    host.check_invariants().unwrap();
+}
+
+#[test]
+fn share_is_owner_authorised_and_idempotent() {
+    let mut host = host_gib(4);
+    let owner = Bdf::new(1, 0, 0);
+    let other = Bdf::new(2, 0, 0);
+    host.attach_pcie(owner);
+    host.attach_pcie(other);
+    let accel = host.attach_cxl_device().unwrap();
+    let a = host.alloc(owner, PAGE_SIZE).unwrap();
+
+    // non-owner may not share
+    assert!(matches!(host.share(other, accel, a.mmid), Err(Error::NotOwner { .. })));
+    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+
+    // owner shares across classes (Figure 5); repeats add no state
+    let s1 = host.share(owner, accel, a.mmid).unwrap();
+    let sat_entries = host.fm().expander().sat().len();
+    let s2 = host.share(owner, accel, a.mmid).unwrap();
+    assert_eq!(s1.dpa, s2.dpa);
+    assert_eq!(host.fm().expander().sat().len(), sat_entries, "no duplicate SAT entry");
+
+    let p1 = host.share(owner, other, a.mmid).unwrap();
+    let p2 = host.share(owner, other, a.mmid).unwrap();
+    assert_eq!(p1.bus_addr, p2.bus_addr);
+    assert_eq!(host.iommu().mapping_count(other), 1, "no duplicate IOMMU mapping");
+
+    // owner free sweeps every share
+    host.free(owner, a.mmid).unwrap();
+    assert_eq!(host.iommu().mapping_count(other), 0);
+    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+}
+
+#[test]
+fn region_guard_frees_on_drop_only_when_armed() {
+    let mut host = host_gib(1);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    {
+        let mut region = host.alloc_scoped(dev, 2 * PAGE_SIZE).unwrap();
+        region.write(0, b"ephemeral").unwrap();
+        assert_eq!(region.consumer(), Consumer::Pcie(dev));
+    }
+    assert_eq!(host.module().live_allocs(), 0, "dropped region freed itself");
+
+    // into_raw defuses the guard; the handle lives on
+    let kept = host.alloc_scoped(dev, PAGE_SIZE).unwrap().into_raw();
+    assert_eq!(host.module().live_allocs(), 1);
+    host.free(dev, kept.mmid).unwrap();
+
+    // explicit free surfaces the result
+    let region = host.alloc_scoped(dev, PAGE_SIZE).unwrap();
+    region.free().unwrap();
+    assert_eq!(host.module().live_allocs(), 0);
+    assert_eq!(host.module().leased(), 0);
+}
+
+#[test]
+fn alloc_many_is_atomic() {
+    // 1 GiB = 4 extents; 6 extent-sized requests cannot fit
+    let mut host = host_gib(1);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    let fm_before = host.fm().available();
+    assert!(host.alloc_many(dev, &[EXTENT_SIZE; 6]).is_err());
+    assert_eq!(host.module().live_allocs(), 0, "partial batch rolled back");
+    assert_eq!(host.fm().available(), fm_before, "all extents returned");
+    assert_eq!(host.iommu().mapping_count(dev), 0, "no stale IOMMU mappings");
+    // the batch that fits succeeds and is fully usable
+    let got = host.alloc_many(dev, &[EXTENT_SIZE; 4]).unwrap();
+    assert_eq!(got.len(), 4);
+    for a in &got {
+        assert!(a.bus_addr.is_some());
+    }
+    for a in got {
+        host.free(dev, a.mmid).unwrap();
+    }
+    host.check_invariants().unwrap();
+}
+
+#[test]
+fn extent_release_keeps_other_placements_valid() {
+    // Regression for the ExtentId refactor: draining one extent must not
+    // invalidate (or silently re-point) live placements elsewhere.
+    let mut host = host_gib(2);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    let a = host.alloc(dev, EXTENT_SIZE).unwrap(); // extent 0, full
+    let b = host.alloc(dev, 4 * PAGE_SIZE).unwrap(); // extent 1
+    host.write(b.mmid, 0, b"still-here").unwrap();
+    let fm_before = host.fm().available();
+
+    host.free(dev, a.mmid).unwrap(); // drains + releases extent 0
+    assert_eq!(host.fm().available(), fm_before + EXTENT_SIZE);
+
+    // b's handle still resolves to the same addresses and bytes
+    let still = host.get(b.mmid).expect("b survives a's extent release");
+    assert_eq!(still.hpa, b.hpa);
+    assert_eq!(still.dpa, b.dpa);
+    let mut buf = [0u8; 10];
+    host.read(b.mmid, 0, &mut buf).unwrap();
+    assert_eq!(&buf, b"still-here");
+    let hpa = host.iommu_mut().translate(dev, still.bus_addr.unwrap(), 64, false).unwrap();
+    assert_eq!(hpa, b.hpa);
+
+    host.free(dev, b.mmid).unwrap();
+    assert_eq!(host.module().leased(), 0);
+    host.check_invariants().unwrap();
+}
+
+#[test]
+fn data_path_bounds_reject_overflowing_offsets() {
+    let mut host = host_gib(1);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    let a = host.alloc(dev, PAGE_SIZE).unwrap();
+    // straightforward overrun
+    assert!(host.write(a.mmid, PAGE_SIZE - 2, b"xxxx").is_err());
+    let mut buf = [0u8; 8];
+    assert!(host.read(a.mmid, PAGE_SIZE - 4, &mut buf).is_err());
+    // offsets chosen so that offset + len wraps around u64 — must be
+    // rejected, not wrapped past the bounds check
+    assert!(host.write(a.mmid, u64::MAX - 2, b"xxxx").is_err());
+    assert!(host.read(a.mmid, u64::MAX - 2, &mut buf).is_err());
+    host.free(dev, a.mmid).unwrap();
+}
+
+#[test]
+fn mixed_class_interleaving_preserves_invariants() {
+    let mut host = host_gib(2);
+    let dev = Bdf::new(1, 0, 0);
+    host.attach_pcie(dev);
+    let accel = host.attach_cxl_device().unwrap();
+    let mut live = Vec::new();
+    for i in 0..24u64 {
+        let consumer = if i % 3 == 0 { Consumer::Cxl(accel) } else { Consumer::Pcie(dev) };
+        if let Ok(a) = host.alloc(consumer, (i % 7 + 1) * PAGE_SIZE) {
+            live.push((consumer, a.mmid));
+        }
+        if i % 5 == 0 && !live.is_empty() {
+            let (c, mmid) = live.swap_remove(0);
+            host.free(c, mmid).unwrap();
+        }
+        host.check_invariants().unwrap();
+    }
+    for (c, mmid) in live {
+        host.free(c, mmid).unwrap();
+    }
+    assert_eq!(host.module().live_allocs(), 0);
+    assert_eq!(host.module().leased(), 0);
+    host.check_invariants().unwrap();
+}

@@ -23,8 +23,10 @@ fn random_api_interleavings_preserve_invariants() {
         },
         |script: &Vec<(u64, u64)>| {
             let mut sys = System::builder().expander_gib(2).build().unwrap();
-            let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
-            let dev2 = sys.attach_pcie_ssd(SsdSpec::gen5());
+            let dev_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+            let dev2_id = sys.attach_pcie_ssd(SsdSpec::gen5());
+            let dev = sys.consumer(dev_id).unwrap();
+            let dev2 = sys.consumer(dev2_id).unwrap();
             let accel = sys.attach_cxl_device("accel").unwrap();
             let mut live: Vec<MmId> = Vec::new();
             let mut live_cxl: Vec<MmId> = Vec::new();
@@ -33,15 +35,15 @@ fn random_api_interleavings_preserve_invariants() {
                 let pages = pages.max(1); // shrinking may zero sizes
                 match op {
                     0 => {
-                        if let Ok(a) = sys.pcie_alloc(dev, pages * PAGE_SIZE) {
+                        if let Ok(a) = sys.alloc(dev, pages * PAGE_SIZE) {
                             live.push(a.mmid);
                         }
                     }
                     1 => {
-                        if let Ok(a) = sys.cxl_alloc(accel, pages * PAGE_SIZE) {
+                        if let Ok(a) = sys.alloc(accel, pages * PAGE_SIZE) {
                             // CXL allocs freed immediately half the time
                             if rng.chance(0.5) {
-                                sys.cxl_free(accel, a.mmid).unwrap();
+                                sys.free(accel, a.mmid).unwrap();
                             } else {
                                 live_cxl.push(a.mmid);
                             }
@@ -51,13 +53,15 @@ fn random_api_interleavings_preserve_invariants() {
                         if !live.is_empty() {
                             let i = (rng.next_below(live.len() as u64)) as usize;
                             let mmid = live.swap_remove(i);
-                            sys.pcie_free(dev, mmid).unwrap();
+                            sys.free(dev, mmid).unwrap();
                         }
                     }
                     _ => {
                         if !live.is_empty() {
                             let i = (rng.next_below(live.len() as u64)) as usize;
-                            let _ = sys.pcie_share(dev2, live[i]);
+                            // owner-authorised zero-copy share; repeats
+                            // are idempotent by design
+                            let _ = sys.share(dev, dev2, live[i]);
                         }
                     }
                 }
@@ -70,12 +74,12 @@ fn random_api_interleavings_preserve_invariants() {
             }
             // teardown: everything freeable, everything returns to the FM
             for mmid in live {
-                if sys.pcie_free(dev, mmid).is_err() {
+                if sys.free(dev, mmid).is_err() {
                     return false;
                 }
             }
             for mmid in live_cxl {
-                if sys.cxl_free(accel, mmid).is_err() {
+                if sys.free(accel, mmid).is_err() {
                     return false;
                 }
             }
@@ -94,10 +98,11 @@ fn allocations_never_overlap() {
         |rng| prop::vec_of(rng, 40, |r| r.next_below(256) + 1),
         |sizes: &Vec<u64>| {
             let mut sys = System::builder().expander_gib(2).build().unwrap();
-            let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+            let dev_id = sys.attach_pcie_ssd(SsdSpec::gen4());
+            let dev = sys.consumer(dev_id).unwrap();
             let mut spans: Vec<(u64, u64)> = Vec::new();
             for &pages in sizes {
-                match sys.pcie_alloc(dev, pages * PAGE_SIZE) {
+                match sys.alloc(dev, pages * PAGE_SIZE) {
                     Ok(a) => {
                         let new = (a.dpa.0, a.dpa.0 + a.size);
                         for &(s, e) in &spans {
