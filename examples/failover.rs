@@ -36,7 +36,7 @@ fn main() -> Result<()> {
 
     println!("steady state: LMB-CXL indexing at {:.0} KIOPS", kiops(IndexPlacement::LmbCxl));
 
-    let states = fd.fail(sys.lmb_mut());
+    let states = fd.fail(sys.lmb());
     assert_eq!(states[&l2p.mmid], ServingState::Unavailable);
     println!(
         "expander FAILED (FailStop): L2P unavailable -> firmware falls back \
@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     );
     assert!(sys.alloc(ssd, 4096).is_err(), "no new allocations during outage");
 
-    fd.recover(sys.lmb_mut(), |_| Ok(0))?;
+    fd.recover(sys.lmb(), |_| Ok(0))?;
     let mut probe = [0u8; 4];
     sys.read_alloc(l2p.mmid, 0, &mut probe)?;
     assert_eq!(probe, [0xAA; 4]);
@@ -64,7 +64,7 @@ fn main() -> Result<()> {
     let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
     fd.register_critical(crit.mmid);
 
-    let states = fd.fail(sys.lmb_mut());
+    let states = fd.fail(sys.lmb());
     assert_eq!(states[&crit.mmid], ServingState::HostShadow);
     assert_eq!(states[&scratch.mmid], ServingState::Unavailable);
     // shadow-served index = HMB-class latency instead of CXL-class
@@ -76,7 +76,7 @@ fn main() -> Result<()> {
         fabric.path_latency(PathKind::CxlP2pToHdm)
     );
 
-    let restored = fd.recover(sys.lmb_mut(), |mmid| {
+    let restored = fd.recover(sys.lmb(), |mmid| {
         // copy the shadow back into HDM
         Ok(if mmid == crit.mmid { crit.size } else { 0 })
     })?;

@@ -35,17 +35,13 @@ impl LmbHashIndex {
         let mut slot = Self::hash(key) % self.buckets;
         for probes in 1..=64u32 {
             let mut cur = [0u8; 16];
-            sys.fm()
-                .expander()
-                .read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
+            sys.fabric_ref().read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
             let occupied = u64::from_le_bytes(cur[..8].try_into().unwrap());
             if occupied == 0 || occupied == Self::hash(key) | 1 {
                 let mut rec = [0u8; 16];
                 rec[..8].copy_from_slice(&(Self::hash(key) | 1).to_le_bytes());
                 rec[8..12].copy_from_slice(&ppa.to_le_bytes());
-                sys.fm_mut()
-                    .expander_mut()
-                    .write_dpa(Dpa(self.base.0 + slot * BUCKET), &rec)?;
+                sys.fabric_ref().write_dpa(Dpa(self.base.0 + slot * BUCKET), &rec)?;
                 return Ok(probes);
             }
             slot = (slot + 1) % self.buckets;
@@ -57,9 +53,7 @@ impl LmbHashIndex {
         let mut slot = Self::hash(key) % self.buckets;
         for probes in 1..=64u32 {
             let mut cur = [0u8; 16];
-            sys.fm()
-                .expander()
-                .read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
+            sys.fabric_ref().read_dpa(Dpa(self.base.0 + slot * BUCKET), &mut cur)?;
             let tag = u64::from_le_bytes(cur[..8].try_into().unwrap());
             if tag == 0 {
                 return Ok((None, probes));

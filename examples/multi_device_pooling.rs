@@ -1,6 +1,10 @@
-//! Multi-device pooling + dynamic capacity (§1, §3.1): many devices
-//! share one expander through the FM, capacity moves between consumers
-//! on demand, and shared-memory interference is measurable.
+//! Multi-device pooling + dynamic capacity (§1, §3.1): devices on
+//! *different hosts* share one expander through the FM-arbitrated
+//! fabric, capacity moves between consumers on demand, and
+//! shared-memory interference is measurable. (Until the shared-fabric
+//! split this example had to fake pooling with two devices under a
+//! single host; the cross-host part now runs on the real `Cluster` —
+//! see `examples/multi_host_sharding.rs` for isolation + failover.)
 //!
 //! Also shows `alloc_many`: batch allocation is all-or-nothing, so an
 //! oversubscribed claim rolls back instead of squatting on extents.
@@ -9,59 +13,66 @@
 
 use lmb::coordinator::contention;
 use lmb::cxl::fabric::Fabric;
-use lmb::cxl::types::{EXTENT_SIZE, GIB};
+use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB};
 use lmb::prelude::*;
 use lmb::ssd::IndexPlacement;
 use lmb::workload::fio::{FioJob, IoPattern};
 
 fn main() -> Result<()> {
-    // ---- dynamic capacity: extents migrate between consumers ----
-    let mut sys = System::builder().expander_gib(2).build()?; // 8 extents
-    let a_id = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let b_id = sys.attach_pcie_ssd(SsdSpec::gen5());
-    let a = sys.consumer(a_id)?;
-    let b = sys.consumer(b_id)?;
+    // ---- dynamic capacity: extents migrate between hosts' devices ----
+    let mut cluster = Cluster::builder()
+        .hosts(2)
+        .expander_gib(2) // 8 extents
+        .host_dram_gib(4)
+        .build()?;
+    let a = Bdf::new(1, 0, 0); // host 0's Gen4 SSD
+    let b = Bdf::new(1, 0, 0); // host 1's Gen5 SSD (per-host BDF space)
+    cluster.host_mut(0)?.attach_pcie(a);
+    cluster.host_mut(1)?.attach_pcie(b);
 
-    // device A grabs 6 extents' worth in one batch
-    let mut a_allocs = sys.alloc_many(a, &[EXTENT_SIZE; 6])?;
+    // host 0's device grabs 6 extents' worth in one batch
+    let mut a_allocs = cluster.alloc_many(0, a, &[EXTENT_SIZE; 6])?;
     println!(
-        "A holds {} MiB; FM has {} MiB free",
-        sys.module().leased() >> 20,
-        sys.fm().available() >> 20
+        "host0's A holds {} MiB; FM has {} MiB free",
+        cluster.leased_to(0)? >> 20,
+        cluster.available() >> 20
     );
 
-    // device B wants 4 extents atomically: only 2 are available, so the
-    // batch fails and rolls back — nothing left half-claimed
-    match sys.alloc_many(b, &[EXTENT_SIZE; 4]) {
-        Err(e) => println!("B batch blocked (rolled back cleanly): {e}"),
+    // host 1's device wants 4 extents atomically: only 2 are available,
+    // so the batch fails and rolls back — nothing left half-claimed
+    match cluster.alloc_many(1, b, &[EXTENT_SIZE; 4]) {
+        Err(e) => println!("host1's B batch blocked (rolled back cleanly): {e}"),
         Ok(_) => unreachable!("cannot fit 4 extents"),
     }
-    assert_eq!(sys.fm().available(), 2 * EXTENT_SIZE, "rollback released B's partial claim");
+    assert_eq!(cluster.available(), 2 * EXTENT_SIZE, "rollback released B's partial claim");
 
     // one at a time, B claims what exists -> partial progress
     let mut b_allocs = Vec::new();
     for _ in 0..4 {
-        match sys.alloc(b, EXTENT_SIZE) {
+        match cluster.alloc(1, b, EXTENT_SIZE) {
             Ok(al) => b_allocs.push(al),
             Err(e) => {
-                println!("B alloc blocked as expected: {e}");
+                println!("host1's B alloc blocked as expected: {e}");
                 break;
             }
         }
     }
     assert_eq!(b_allocs.len(), 2);
 
-    // A frees half -> B can proceed (on-demand vs pre-reserve, §1)
+    // host 0 frees half -> host 1 proceeds (on-demand vs pre-reserve,
+    // §1) — capacity migrates across *hosts* with no copying
     for al in a_allocs.drain(..3) {
-        sys.free(a, al.mmid)?;
+        cluster.free(0, a, al.mmid)?;
     }
-    b_allocs.extend(sys.alloc_many(b, &[EXTENT_SIZE; 2])?);
+    b_allocs.extend(cluster.alloc_many(1, b, &[EXTENT_SIZE; 2])?);
     println!(
-        "after A released 3 extents, B completed its 4 ({} MiB each side free={} MiB)",
-        (b_allocs.len() as u64 * EXTENT_SIZE) >> 20,
-        sys.fm().available() >> 20
+        "after host0 released 3 extents, host1 completed its 4 \
+         (A={} MiB, B={} MiB, free={} MiB)",
+        cluster.leased_to(0)? >> 20,
+        cluster.leased_to(1)? >> 20,
+        cluster.available() >> 20
     );
-    sys.fm().check_invariants()?;
+    cluster.check_invariants()?;
 
     // ---- interference: N Gen5 SSDs indexing through one expander ----
     let fabric = Fabric::default();

@@ -1,0 +1,109 @@
+//! Multi-host sharding (§3.1–3.2): the paper's scalability claim — one
+//! CXL expander supplements the onboard DRAM of PCIe devices across
+//! *multiple hosts*, with the FM arbitrating leases.
+//!
+//! Two hosts bind to one 1 GiB expander through a shared `FabricRef`;
+//! four devices (a PCIe SSD + a CXL accelerator per host) consume LMB
+//! memory. Shows per-host lease accounting (`leased_to`), cross-host
+//! mmid isolation, cluster-wide expander failover, and host-crash
+//! containment (the victim's leases — and its stale P2P grants — are
+//! reclaimed without perturbing the sibling).
+//!
+//! Run: `cargo run --release --example multi_host_sharding`
+
+use lmb::cxl::types::{Bdf, EXTENT_SIZE, PAGE_SIZE};
+use lmb::lmb::failure::{FailureDomain, FailurePolicy, ServingState};
+use lmb::prelude::*;
+
+fn print_pool(cluster: &Cluster) {
+    print!("  pool: {:>4} MiB free |", cluster.available() >> 20);
+    for (slot, _) in cluster.hosts() {
+        print!(" host{} holds {:>3} MiB |", slot, cluster.leased_to(slot).unwrap() >> 20);
+    }
+    println!();
+}
+
+fn main() -> Result<()> {
+    // one 1 GiB expander (4 extents), two hosts on one switch
+    let mut cluster = Cluster::builder().hosts(2).expander_gib(1).host_dram_gib(4).build()?;
+
+    // four devices: each host fronts a PCIe SSD and a CXL accelerator
+    let ssd = Bdf::new(1, 0, 0); // per-host BDF space
+    cluster.host_mut(0)?.attach_pcie(ssd);
+    cluster.host_mut(1)?.attach_pcie(ssd);
+    let accel0 = cluster.attach_cxl_device(0)?;
+    let accel1 = cluster.attach_cxl_device(1)?;
+
+    // ---- sharding: hosts alternate extent claims until the pool dries ----
+    println!("two hosts shard a 1 GiB expander (256 MiB extents):");
+    let mut allocs: [Vec<LmbAlloc>; 2] = [Vec::new(), Vec::new()];
+    'drain: loop {
+        for slot in 0..2 {
+            match cluster.alloc(slot, ssd, EXTENT_SIZE) {
+                Ok(a) => allocs[slot].push(a),
+                Err(e) => {
+                    println!("  host{slot} blocked: {e}");
+                    break 'drain;
+                }
+            }
+            print_pool(&cluster);
+        }
+    }
+    assert_eq!(cluster.available(), 0);
+    assert_eq!(cluster.leased_to(0)?, 2 * EXTENT_SIZE);
+    assert_eq!(cluster.leased_to(1)?, 2 * EXTENT_SIZE);
+
+    // each host shares one buffer with its accelerator (P2P via SAT)
+    let s0 = cluster.share(0, ssd, accel0, allocs[0][0].mmid)?;
+    let s1 = cluster.share(1, ssd, accel1, allocs[1][0].mmid)?;
+    println!("  P2P shares programmed: accel0 -> dpa {}, accel1 -> dpa {}", s0.dpa, s1.dpa);
+
+    // ---- isolation: host 1 can never free/share host 0's memory ----
+    let foreign = allocs[0][1].mmid;
+    assert!(matches!(cluster.free(1, ssd, foreign), Err(Error::NotOwner { .. })));
+    assert!(matches!(cluster.share(1, ssd, accel1, foreign), Err(Error::NotOwner { .. })));
+    println!("\nisolation: host1 denied free/share of host0's {foreign:?} (NotOwner)");
+
+    // ---- cluster-wide failover: one expander outage hits both hosts ----
+    let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+    fd.register_critical(allocs[0][0].mmid); // host0's L2P-class buffer
+    fd.register_critical(allocs[1][0].mmid); // host1's
+    let states = fd.fail_cluster(&cluster);
+    let shadowed = states.values().filter(|s| **s == ServingState::HostShadow).count();
+    let offline = states.values().filter(|s| **s == ServingState::Unavailable).count();
+    println!(
+        "expander FAILED: {shadowed} critical allocs spill to their own hosts' \
+         DRAM shadows, {offline} scratch buffers offline"
+    );
+    assert!(cluster.alloc(0, ssd, PAGE_SIZE).is_err());
+    assert!(cluster.alloc(1, ssd, PAGE_SIZE).is_err());
+    let restored = fd.recover_cluster(&cluster, |mmid| {
+        Ok(states.contains_key(&mmid) as u64 * EXTENT_SIZE)
+    })?;
+    println!("recovered: {} MiB copied back from host shadows", restored >> 20);
+
+    // ---- crash containment: host0 dies, host1 keeps running ----
+    cluster.crash_host(0)?;
+    println!("\nhost0 CRASHED:");
+    print_pool(&cluster);
+    assert_eq!(cluster.available(), 2 * EXTENT_SIZE, "host0's extents reclaimed");
+    assert_eq!(cluster.leased_to(1)?, 2 * EXTENT_SIZE, "host1 untouched");
+    assert!(
+        !cluster.fm().expander().sat().check(accel0, s0.dpa, 64, false),
+        "host0's stale P2P grant revoked with its lease"
+    );
+    assert!(
+        cluster.fm().expander().sat().check(accel1, s1.dpa, 64, true),
+        "host1's P2P grant survives the sibling's crash"
+    );
+
+    // the survivor immediately claims the freed capacity...
+    cluster.alloc(1, ssd, EXTENT_SIZE)?;
+    cluster.alloc(1, ssd, EXTENT_SIZE)?;
+    // ...and a replacement host can join the same fabric later
+    let slot = cluster.join_host()?;
+    println!("host1 absorbed the freed extents; replacement joined as slot {slot}");
+    cluster.check_invariants()?;
+    println!("\nall cluster invariants hold");
+    Ok(())
+}

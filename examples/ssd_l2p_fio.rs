@@ -40,9 +40,9 @@ fn main() -> Result<()> {
     for lpa in 0..seg_entries {
         ftl.update(lpa, (lpa as u32).wrapping_mul(2654435761) >> 2);
     }
-    ftl.flush_to_lmb(sys.fm_mut().expander_mut(), alloc.dpa, 0, seg_entries)?;
+    ftl.flush_to_fabric(sys.fabric_ref(), alloc.dpa, 0, seg_entries)?;
     let mut check = L2pTable::new(seg_entries);
-    check.load_from_lmb(sys.fm().expander(), alloc.dpa, 0, seg_entries)?;
+    check.load_from_fabric(sys.fabric_ref(), alloc.dpa, 0, seg_entries)?;
     let probe = 123_457u64;
     assert_eq!(
         check.snapshot(probe, 1)[0],

@@ -1,0 +1,418 @@
+//! Multi-host cluster (§3.1–3.2 scalability): one CXL expander
+//! supplements the onboard DRAM of PCIe devices across *multiple
+//! hosts*, with the FM arbitrating leases.
+//!
+//! The [`Cluster`] builds one fabric (switch + expander behind a
+//! [`FabricRef`]), binds N [`LmbHost`]s to it, and routes per-host
+//! alloc/free/share. Two properties the paper's architecture implies
+//! are enforced here and testable:
+//!
+//! * **Cross-host isolation** — mmids come from the fabric-global
+//!   namespace, so a handle minted on host A can never alias host B's
+//!   memory; routing an operation at the wrong host fails with
+//!   [`Error::NotOwner`] instead of silently touching foreign state.
+//! * **Crash containment** — [`Cluster::crash_host`] reclaims the
+//!   victim's leases through [`FabricManager::release_host`] (including
+//!   stale SAT grants and HDM decoders) without perturbing sibling
+//!   hosts' extents; stable `ExtentId`s keep every surviving placement
+//!   valid.
+//!
+//! Cluster-wide expander failure/recovery is driven by
+//! [`FailureDomain::fail_cluster`](crate::lmb::failure::FailureDomain::fail_cluster).
+//!
+//! ```
+//! use lmb::cluster::Cluster;
+//! use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB};
+//!
+//! // 1 GiB expander (4 extents), two hosts
+//! let mut cluster = Cluster::builder()
+//!     .hosts(2)
+//!     .expander_gib(1)
+//!     .host_dram_gib(1)
+//!     .build()
+//!     .unwrap();
+//! let dev = Bdf::new(1, 0, 0);
+//! cluster.host_mut(0).unwrap().attach_pcie(dev);
+//! cluster.host_mut(1).unwrap().attach_pcie(dev);
+//!
+//! let a = cluster.alloc(0, dev, EXTENT_SIZE).unwrap();
+//! let _b = cluster.alloc(1, dev, EXTENT_SIZE).unwrap();
+//! assert_eq!(cluster.leased_to(0).unwrap(), EXTENT_SIZE);
+//!
+//! // host 1 cannot free host 0's memory
+//! assert!(cluster.free(1, dev, a.mmid).is_err());
+//!
+//! // a crash returns host 0's capacity to the shared pool
+//! cluster.crash_host(0).unwrap();
+//! assert_eq!(cluster.available(), GIB - EXTENT_SIZE);
+//! ```
+
+use std::cell::Ref;
+use std::collections::HashSet;
+
+use crate::cxl::expander::{Expander, ExpanderConfig};
+use crate::cxl::fabric::{Fabric, FabricConfig};
+use crate::cxl::fm::{FabricManager, FabricRef};
+use crate::cxl::switch::PbrSwitch;
+use crate::cxl::types::{gib_to_bytes, MmId, Spid, GIB};
+use crate::error::{Error, Result};
+use crate::lmb::{Consumer, LmbAlloc, LmbHost};
+
+/// N LMB hosts arbitrating one switch + expander through a shared
+/// [`FabricRef`]. Hosts are addressed by their slot index (stable
+/// across crashes: a crashed slot stays empty, later joins append).
+#[derive(Debug)]
+pub struct Cluster {
+    fabric: FabricRef,
+    /// Latency model for the shared fabric (one per cluster).
+    latency: Fabric,
+    slots: Vec<Option<LmbHost>>,
+    host_dram: u64,
+}
+
+/// Builder for [`Cluster`].
+#[derive(Debug)]
+pub struct ClusterBuilder {
+    expander: ExpanderConfig,
+    fabric: FabricConfig,
+    switch_ports: u8,
+    host_dram: u64,
+    hosts: usize,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        ClusterBuilder {
+            expander: ExpanderConfig::default(),
+            fabric: FabricConfig::default(),
+            switch_ports: 32,
+            host_dram: 16 * GIB,
+            hosts: 2,
+        }
+    }
+}
+
+impl ClusterBuilder {
+    /// Number of hosts bound at build time (more can join later).
+    pub fn hosts(mut self, n: usize) -> Self {
+        self.hosts = n;
+        self
+    }
+
+    /// Expander DRAM capacity in GiB (checked, like
+    /// [`SystemBuilder`](crate::system::SystemBuilder)).
+    pub fn expander_gib(mut self, gib: u64) -> Self {
+        self.expander.dram_capacity = gib_to_bytes(gib);
+        self
+    }
+
+    /// Add a PM partition of `gib` GiB.
+    pub fn pm_gib(mut self, gib: u64) -> Self {
+        self.expander.pm_capacity = gib_to_bytes(gib);
+        self
+    }
+
+    /// Per-host DRAM size in GiB.
+    pub fn host_dram_gib(mut self, gib: u64) -> Self {
+        self.host_dram = gib_to_bytes(gib);
+        self
+    }
+
+    /// Switch edge-port budget (hosts + devices + GFD).
+    pub fn switch_ports(mut self, ports: u8) -> Self {
+        self.switch_ports = ports;
+        self
+    }
+
+    /// Override fabric latency constants.
+    pub fn fabric_config(mut self, cfg: FabricConfig) -> Self {
+        self.fabric = cfg;
+        self
+    }
+
+    pub fn build(self) -> Result<Cluster> {
+        let fabric = FabricRef::new(FabricManager::new(
+            PbrSwitch::new(self.switch_ports),
+            Expander::new(self.expander),
+        ));
+        let mut cluster = Cluster {
+            fabric,
+            latency: Fabric::new(self.fabric),
+            slots: Vec::new(),
+            host_dram: self.host_dram,
+        };
+        for _ in 0..self.hosts {
+            cluster.join_host()?;
+        }
+        Ok(cluster)
+    }
+}
+
+impl Cluster {
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
+    /// The shared fabric handle (clone it to bind hosts out-of-band or
+    /// to drive failure injection).
+    pub fn fabric_ref(&self) -> &FabricRef {
+        &self.fabric
+    }
+
+    /// Scoped read-only view of the shared FM.
+    pub fn fm(&self) -> Ref<'_, FabricManager> {
+        self.fabric.get()
+    }
+
+    /// The cluster's fabric latency model.
+    pub fn latency(&self) -> &Fabric {
+        &self.latency
+    }
+
+    /// Bind one more host to the shared fabric; returns its slot index.
+    pub fn join_host(&mut self) -> Result<usize> {
+        let host = LmbHost::bind(self.fabric.clone(), self.host_dram)?;
+        self.slots.push(Some(host));
+        Ok(self.slots.len() - 1)
+    }
+
+    /// Number of slots ever created (crashed ones included).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of currently bound hosts.
+    pub fn alive_hosts(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// The host in `slot`, if it is alive.
+    pub fn host(&self, slot: usize) -> Result<&LmbHost> {
+        self.slots
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| Error::FabricManager(format!("no live host in slot {slot}")))
+    }
+
+    pub fn host_mut(&mut self, slot: usize) -> Result<&mut LmbHost> {
+        self.slots
+            .get_mut(slot)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| Error::FabricManager(format!("no live host in slot {slot}")))
+    }
+
+    /// Iterate the live hosts as `(slot, host)`.
+    pub fn hosts(&self) -> impl Iterator<Item = (usize, &LmbHost)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|h| (i, h)))
+    }
+
+    /// Bind a CXL device through `slot`'s host (P2P consumers are
+    /// fabric-wide; the slot just names who programs the grant).
+    pub fn attach_cxl_device(&mut self, slot: usize) -> Result<Spid> {
+        self.host_mut(slot)?.attach_cxl_device()
+    }
+
+    // ---- routed per-host LMB surface ----
+
+    /// Allocate on `slot`'s host for `consumer`.
+    pub fn alloc(
+        &mut self,
+        slot: usize,
+        consumer: impl Into<Consumer>,
+        size: u64,
+    ) -> Result<LmbAlloc> {
+        self.host_mut(slot)?.alloc(consumer, size)
+    }
+
+    /// All-or-nothing batch allocation on `slot`'s host.
+    pub fn alloc_many(
+        &mut self,
+        slot: usize,
+        consumer: impl Into<Consumer>,
+        sizes: &[u64],
+    ) -> Result<Vec<LmbAlloc>> {
+        self.host_mut(slot)?.alloc_many(consumer, sizes)
+    }
+
+    /// Free `mmid` through `slot`'s host. Cross-host isolation: if the
+    /// mmid belongs to a *different* host this fails with
+    /// [`Error::NotOwner`] — fabric-global mmids guarantee a foreign
+    /// handle can never alias a local allocation.
+    pub fn free(&mut self, slot: usize, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
+        self.check_home(slot, mmid)?;
+        self.host_mut(slot)?.free(consumer, mmid)
+    }
+
+    /// Owner-authorised share through `slot`'s host, with the same
+    /// cross-host isolation rule as [`Cluster::free`].
+    pub fn share(
+        &mut self,
+        slot: usize,
+        owner: impl Into<Consumer>,
+        target: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<LmbAlloc> {
+        self.check_home(slot, mmid)?;
+        self.host_mut(slot)?.share(owner, target, mmid)
+    }
+
+    /// Reject an operation routed at `slot` for an mmid that lives on a
+    /// sibling host. (An mmid unknown everywhere falls through to the
+    /// module's own `UnknownMmId` error.)
+    fn check_home(&self, slot: usize, mmid: MmId) -> Result<()> {
+        if self.host(slot)?.get(mmid).is_none() && self.owner_slot_of(mmid).is_some() {
+            return Err(Error::NotOwner { mmid });
+        }
+        Ok(())
+    }
+
+    /// Which slot's host holds `mmid`, if any.
+    pub fn owner_slot_of(&self, mmid: MmId) -> Option<usize> {
+        self.hosts().find(|(_, h)| h.get(mmid).is_some()).map(|(i, _)| i)
+    }
+
+    // ---- capacity / accounting ----
+
+    /// Unleased capacity in the shared pool.
+    pub fn available(&self) -> u64 {
+        self.fabric.available()
+    }
+
+    /// Bytes the FM has leased to `slot`'s host.
+    pub fn leased_to(&self, slot: usize) -> Result<u64> {
+        Ok(self.fabric.leased_to(self.host(slot)?.host()))
+    }
+
+    // ---- failure domain ----
+
+    /// Crash `slot`'s host: its module state vanishes and the FM
+    /// reclaims every lease (revoking stale SAT grants and HDM decoders
+    /// with them). Siblings keep their extents, placements and grants.
+    pub fn crash_host(&mut self, slot: usize) -> Result<()> {
+        let host = self
+            .slots
+            .get_mut(slot)
+            .ok_or_else(|| Error::FabricManager(format!("no slot {slot}")))?
+            .take()
+            .ok_or_else(|| Error::FabricManager(format!("host in slot {slot} already gone")))?;
+        self.fabric.release_host(host.host());
+        Ok(())
+    }
+
+    /// Fabric + every live host's module invariants, plus the
+    /// cluster-level ones: fabric-global mmid uniqueness and exact
+    /// lease accounting across hosts.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.fabric.check_invariants()?;
+        let mut seen: HashSet<MmId> = HashSet::new();
+        let mut leased_sum = 0;
+        for (slot, host) in self.hosts() {
+            host.module().check_invariants()?;
+            for mmid in host.module().mmids() {
+                if !seen.insert(mmid) {
+                    return Err(Error::FabricManager(format!(
+                        "mmid {mmid:?} appears on two hosts (slot {slot})"
+                    )));
+                }
+            }
+            let fm_view = self.fabric.leased_to(host.host());
+            let module_view = host.module().leased();
+            if fm_view != module_view {
+                return Err(Error::FabricManager(format!(
+                    "slot {slot}: FM says {fm_view} B leased, module says {module_view} B"
+                )));
+            }
+            leased_sum += fm_view;
+        }
+        let capacity = self.fabric.get().expander().capacity();
+        if self.fabric.available() + leased_sum != capacity {
+            return Err(Error::FabricManager(format!(
+                "cluster capacity leak: free {} + leased {} != {}",
+                self.fabric.available(),
+                leased_sum,
+                capacity
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::{Bdf, EXTENT_SIZE, PAGE_SIZE};
+
+    fn two_hosts() -> (Cluster, Bdf) {
+        let b = Cluster::builder().hosts(2).expander_gib(1).host_dram_gib(1);
+        (b.build().unwrap(), Bdf::new(1, 0, 0))
+    }
+
+    #[test]
+    fn builder_binds_n_hosts_to_one_fabric() {
+        let (cluster, _) = two_hosts();
+        assert_eq!(cluster.alive_hosts(), 2);
+        let ids: Vec<_> = cluster.hosts().map(|(_, h)| h.host()).collect();
+        assert_ne!(ids[0], ids[1]);
+        assert_eq!(cluster.available(), GIB);
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn routed_ops_and_owner_lookup() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
+        let b = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
+        assert_eq!(cluster.owner_slot_of(a.mmid), Some(0));
+        assert_eq!(cluster.owner_slot_of(b.mmid), Some(1));
+        assert_eq!(cluster.owner_slot_of(MmId(0xdead)), None);
+        cluster.free(0, dev, a.mmid).unwrap();
+        cluster.free(1, dev, b.mmid).unwrap();
+        assert_eq!(cluster.available(), GIB);
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_host_free_and_share_rejected_as_not_owner() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
+        assert!(matches!(cluster.free(1, dev, a.mmid), Err(Error::NotOwner { .. })));
+        assert!(matches!(cluster.share(1, dev, dev, a.mmid), Err(Error::NotOwner { .. })));
+        // a genuinely unknown mmid is still UnknownMmId
+        assert!(matches!(cluster.free(1, dev, MmId(0xdead)), Err(Error::UnknownMmId(_))));
+        // the owner path still works
+        cluster.free(0, dev, a.mmid).unwrap();
+    }
+
+    #[test]
+    fn crash_host_is_contained_and_rejoinable() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        cluster.alloc(0, dev, EXTENT_SIZE).unwrap();
+        let survivor = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
+        cluster.host_mut(1).unwrap().write(survivor.mmid, 0, b"sibling").unwrap();
+
+        cluster.crash_host(0).unwrap();
+        assert!(cluster.host(0).is_err());
+        assert!(cluster.crash_host(0).is_err(), "double crash rejected");
+        assert_eq!(cluster.alive_hosts(), 1);
+        assert_eq!(cluster.available(), GIB - EXTENT_SIZE, "victim's extent reclaimed");
+
+        // the sibling's placement is untouched
+        let mut buf = [0u8; 7];
+        cluster.host(1).unwrap().read(survivor.mmid, 0, &mut buf).unwrap();
+        assert_eq!(&buf, b"sibling");
+        cluster.check_invariants().unwrap();
+
+        // a replacement host joins the same pool
+        let slot = cluster.join_host().unwrap();
+        assert_eq!(slot, 2);
+        cluster.host_mut(slot).unwrap().attach_pcie(dev);
+        cluster.alloc(slot, dev, PAGE_SIZE).unwrap();
+        cluster.check_invariants().unwrap();
+    }
+}

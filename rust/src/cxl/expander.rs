@@ -172,6 +172,16 @@ impl Expander {
         Ok(())
     }
 
+    /// Remove every HDM decoder whose target DPA window overlaps
+    /// `range` (host teardown: a crashed host's windows must not
+    /// survive into a re-lease of the same media). Returns the number
+    /// of decoders removed.
+    pub fn remove_decoders_overlapping_dpa(&mut self, range: Range) -> usize {
+        let before = self.decoders.len();
+        self.decoders.retain(|d| !Range::new(d.dpa_base.0, d.hpa_window.len).overlaps(&range));
+        before - self.decoders.len()
+    }
+
     /// Translate a host HPA to a DPA via the HDM decoders.
     pub fn decode_hpa(&self, hpa: Hpa) -> Result<Dpa> {
         self.decoders
@@ -294,6 +304,12 @@ impl Expander {
 
     pub fn sat_revoke(&mut self, spid: Spid, range: Range) -> Result<()> {
         self.sat.revoke(spid, range)
+    }
+
+    /// Revoke every SAT grant overlapping `range`, across all SPIDs
+    /// (media reclaim; see [`SatTable::revoke_overlapping`]).
+    pub fn sat_revoke_overlapping(&mut self, range: Range) -> usize {
+        self.sat.revoke_overlapping(range)
     }
 }
 

@@ -9,13 +9,22 @@
 //!
 //! The FM also fronts the "GFD Component Management Command Set" used to
 //! maintain SAT entries for CXL-device P2P access (§3.3).
+//!
+//! Ownership: since the shared-fabric split no single host owns the FM.
+//! It lives behind [`FabricRef`], a cheap-clone handle every
+//! [`LmbHost`](crate::lmb::LmbHost) (and the multi-host
+//! [`Cluster`](crate::cluster::Cluster)) binds through. Leases are keyed
+//! by [`HostId`] and mmids are drawn from a fabric-global namespace, so
+//! no handle-holder can free or share memory it does not own.
 
+use std::cell::{Ref, RefCell, RefMut};
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::cxl::expander::Expander;
 use crate::cxl::sat::SatPerm;
 use crate::cxl::switch::PbrSwitch;
-use crate::cxl::types::{Dpa, Dpid, Range, Spid, EXTENT_SIZE};
+use crate::cxl::types::{Dpa, Dpid, MmId, Range, Spid, EXTENT_SIZE};
 use crate::error::{Error, Result};
 
 /// Identifies a host that has bound to the fabric.
@@ -45,6 +54,10 @@ pub struct FabricManager {
     leases: HashMap<u64, Extent>,
     hosts: HashMap<HostId, Spid>,
     next_host: u32,
+    /// Fabric-global mmid counter (§3.2): handles are unique across
+    /// every host sharing the expander, so one host's mmid can never
+    /// alias another's — cross-host isolation keys off this.
+    next_mmid: u64,
 }
 
 impl FabricManager {
@@ -57,7 +70,23 @@ impl FabricManager {
             leases: HashMap::new(),
             hosts: HashMap::new(),
             next_host: 0,
+            next_mmid: 1,
         }
+    }
+
+    /// Wrap this FM in a shared [`FabricRef`] handle (the only way
+    /// hosts bind after the ownership split).
+    pub fn into_shared(self) -> FabricRef {
+        FabricRef::new(self)
+    }
+
+    /// Draw the next mmid from the fabric-global namespace. Called by
+    /// the LMB modules at allocation time so handles never collide
+    /// across hosts.
+    pub fn alloc_mmid(&mut self) -> MmId {
+        let id = MmId(self.next_mmid);
+        self.next_mmid += 1;
+        id
     }
 
     pub fn switch(&self) -> &PbrSwitch {
@@ -186,10 +215,20 @@ impl FabricManager {
     }
 
     /// Release everything a host holds (host crash / module unload).
+    ///
+    /// Before each extent returns to the pool, every SAT grant and HDM
+    /// decoder covering its DPA range is torn down: a crashed host
+    /// cannot clean up after itself, and a stale CXL device keeping P2P
+    /// access to re-leased memory would be an isolation hole. Siblings'
+    /// extents cover disjoint DPA ranges, so their grants, decoders and
+    /// placements are untouched.
     pub fn release_host(&mut self, host: HostId) {
         let to_release: Vec<Extent> =
             self.leases.values().filter(|e| e.owner == host).copied().collect();
         for e in to_release {
+            let media = Range::new(e.dpa.0, e.len);
+            self.expander.sat_revoke_overlapping(media);
+            self.expander.remove_decoders_overlapping_dpa(media);
             let _ = self.release_extent(host, e);
         }
         if let Some(spid) = self.hosts.remove(&host) {
@@ -228,11 +267,135 @@ impl FabricManager {
     }
 }
 
+/// Shared, cheap-to-clone handle to the [`FabricManager`].
+///
+/// The ownership split for multi-host sharding: no `LmbHost` owns the
+/// FM any more — the switch, expander, lease table and fabric-global
+/// mmid namespace live behind this handle, and any number of hosts bind
+/// through clones of it. The `RefCell` is an implementation detail:
+/// every method scopes its borrow internally, so callers never juggle
+/// `Ref`/`RefMut` guards.
+///
+/// There is deliberately **no** public way to mutate lease or
+/// access-control state through the handle — no `&mut FabricManager`,
+/// no `&mut Expander` (whose SAT is the access-control state), and no
+/// forwarded `allocate_extent`/`release_extent`/`sat_grant` taking a
+/// caller-supplied [`HostId`]. Those paths are crate-internal and only
+/// reachable through the owner-checked `LmbHost`/`LmbModule`/`Cluster`
+/// surfaces, so lease ownership and grant checks cannot be bypassed.
+/// Publicly the handle offers reads ([`FabricRef::get`], `available`,
+/// `leased_to`, …), the host-trusted data plane
+/// ([`FabricRef::write_dpa`] / [`FabricRef::read_dpa`]), failure
+/// injection, and device binding.
+#[derive(Debug, Clone)]
+pub struct FabricRef {
+    inner: Rc<RefCell<FabricManager>>,
+}
+
+impl FabricRef {
+    pub fn new(fm: FabricManager) -> Self {
+        FabricRef { inner: Rc::new(RefCell::new(fm)) }
+    }
+
+    /// Scoped read-only view of the FM. Do not hold the guard across a
+    /// call that mutates the fabric (alloc/free/bind): the `RefCell`
+    /// will panic on the conflicting borrow.
+    pub fn get(&self) -> Ref<'_, FabricManager> {
+        self.inner.borrow()
+    }
+
+    /// Crate-internal mutable borrow for the `LmbModule` plumbing. Not
+    /// public: handing out `&mut FabricManager` would let callers skip
+    /// the per-host lease ownership checks.
+    pub(crate) fn lock(&self) -> RefMut<'_, FabricManager> {
+        self.inner.borrow_mut()
+    }
+
+    /// Number of live handles sharing this fabric (hosts + clusters +
+    /// caller clones).
+    pub fn handle_count(&self) -> usize {
+        Rc::strong_count(&self.inner)
+    }
+
+    // ---- forwarded FM control plane (scoped borrows) ----
+
+    /// [`FabricManager::bind_cxl_device`] — attaching a CXL consumer
+    /// takes a switch port but cannot touch any host's leases.
+    pub fn bind_cxl_device(&self) -> Result<Spid> {
+        self.lock().bind_cxl_device()
+    }
+
+    /// [`FabricManager::gfd_dpid`].
+    pub fn gfd_dpid(&self) -> Option<Dpid> {
+        self.get().gfd_dpid()
+    }
+
+    /// [`FabricManager::available`].
+    pub fn available(&self) -> u64 {
+        self.get().available()
+    }
+
+    /// [`FabricManager::leased_to`].
+    pub fn leased_to(&self, host: HostId) -> u64 {
+        self.get().leased_to(host)
+    }
+
+    /// [`FabricManager::lease_count`].
+    pub fn lease_count(&self) -> usize {
+        self.get().lease_count()
+    }
+
+    /// [`FabricManager::release_host`] — crate-internal: reclaiming a
+    /// host is the [`Cluster`](crate::cluster::Cluster) crash path, not
+    /// something an arbitrary handle-holder may do to a sibling.
+    pub(crate) fn release_host(&self, host: HostId) {
+        self.lock().release_host(host)
+    }
+
+    /// [`FabricManager::check_invariants`].
+    pub fn check_invariants(&self) -> Result<()> {
+        self.get().check_invariants()
+    }
+
+    // ---- expander data plane / failure injection ----
+
+    /// Functional write at a DPA through the shared expander.
+    pub fn write_dpa(&self, dpa: Dpa, data: &[u8]) -> Result<()> {
+        self.lock().expander_mut().write_dpa(dpa, data)
+    }
+
+    /// Functional read at a DPA through the shared expander.
+    pub fn read_dpa(&self, dpa: Dpa, out: &mut [u8]) -> Result<()> {
+        self.get().expander().read_dpa(dpa, out)
+    }
+
+    /// Fail / recover the shared expander (failure-injection hook; one
+    /// expander failure hits every bound host).
+    pub fn set_expander_failed(&self, failed: bool) {
+        self.lock().expander_mut().set_failed(failed);
+    }
+
+    pub fn expander_failed(&self) -> bool {
+        self.get().expander().is_failed()
+    }
+
+    /// Scoped mutable access to the expander for in-crate data-plane
+    /// helpers that need `&mut Expander` (e.g. the L2P table's
+    /// `flush_to_fabric`). Crate-internal on purpose: the expander
+    /// carries the SAT, and handing `&mut Expander` to arbitrary
+    /// callers would let them program grants without the module's owner
+    /// checks. External data-plane access goes through
+    /// [`FabricRef::write_dpa`] / [`FabricRef::read_dpa`].
+    pub(crate) fn with_expander_mut<R>(&self, f: impl FnOnce(&mut Expander) -> R) -> R {
+        f(self.lock().expander_mut())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cxl::expander::ExpanderConfig;
-    use crate::cxl::types::GIB;
+    use crate::cxl::types::{GIB, PAGE_SIZE};
 
     fn fm(cap: u64) -> FabricManager {
         let mut f = FabricManager::new(
@@ -305,11 +468,101 @@ mod tests {
     }
 
     #[test]
+    fn release_host_revokes_stale_sat_grants() {
+        // Regression: release_host used to free a host's extents and
+        // unbind its SPID without touching the SAT, so a CXL device
+        // kept P2P access to memory later re-leased to another host.
+        let mut f = fm(GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let dev = f.bind_cxl_device().unwrap();
+        let e = f.allocate_extent(h).unwrap();
+        f.sat_grant(dev, Range::new(e.dpa.0, PAGE_SIZE), SatPerm::ReadWrite).unwrap();
+        assert!(f.expander().sat().check(dev, e.dpa, 64, true));
+
+        f.release_host(h);
+        assert!(
+            !f.expander().sat().check(dev, e.dpa, 64, false),
+            "stale P2P grant revoked with the lease"
+        );
+
+        // the reclaimed DPA re-leases cleanly: a fresh grant over the
+        // same range is not rejected as overlapping
+        let (h2, _) = f.bind_host().unwrap();
+        let e2 = f.allocate_extent(h2).unwrap();
+        assert_eq!(e2.dpa, e.dpa, "first-fit re-leases the freed extent");
+        f.sat_grant(dev, Range::new(e2.dpa.0, PAGE_SIZE), SatPerm::ReadWrite).unwrap();
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_host_preserves_sibling_grants_and_decoders() {
+        let mut f = fm(GIB);
+        let (ha, _) = f.bind_host().unwrap();
+        let (hb, _) = f.bind_host().unwrap();
+        let dev = f.bind_cxl_device().unwrap();
+        let ea = f.allocate_extent(ha).unwrap();
+        let eb = f.allocate_extent(hb).unwrap();
+        f.sat_grant(dev, Range::new(eb.dpa.0, PAGE_SIZE), SatPerm::ReadWrite).unwrap();
+        f.expander_mut().add_decoder(Range::new(1 << 40, eb.len), eb.dpa).unwrap();
+
+        f.release_host(ha);
+        assert_eq!(f.available(), GIB - EXTENT_SIZE, "only ha's extent returned");
+        assert_eq!(f.leased_to(hb), EXTENT_SIZE);
+        assert!(f.expander().sat().check(dev, eb.dpa, 64, true), "sibling grant untouched");
+        assert_eq!(f.expander().decode_hpa(crate::cxl::types::Hpa(1 << 40)).unwrap(), eb.dpa);
+        let _ = ea;
+    }
+
+    #[test]
     fn failed_expander_blocks_allocation() {
         let mut f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         f.expander_mut().set_failed(true);
         assert!(matches!(f.allocate_extent(h), Err(Error::ExpanderFailed(_))));
+    }
+
+    #[test]
+    fn fabric_ref_shares_one_fm_across_clones() {
+        let fabric = fm(GIB).into_shared();
+        let other = fabric.clone();
+        assert_eq!(fabric.handle_count(), 2);
+        // lease mutation is crate-internal (module/cluster paths); the
+        // test reaches it through the same scoped borrow they use
+        let (h1, _) = fabric.lock().bind_host().unwrap();
+        let (h2, _) = other.lock().bind_host().unwrap();
+        assert_ne!(h1, h2, "clones bind against the same id space");
+        fabric.lock().allocate_extent(h1).unwrap();
+        other.lock().allocate_extent(h2).unwrap();
+        assert_eq!(fabric.available(), GIB - 2 * EXTENT_SIZE);
+        assert_eq!(fabric.leased_to(h1), EXTENT_SIZE);
+        assert_eq!(other.leased_to(h2), EXTENT_SIZE);
+        fabric.release_host(h1);
+        assert_eq!(other.available(), GIB - EXTENT_SIZE, "capacity back in the shared pool");
+        other.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fabric_ref_expander_data_plane_round_trip() {
+        let fabric = fm(GIB).into_shared();
+        fabric.write_dpa(Dpa(0x4000), b"shared-bytes").unwrap();
+        let mut buf = [0u8; 12];
+        fabric.read_dpa(Dpa(0x4000), &mut buf).unwrap();
+        assert_eq!(&buf, b"shared-bytes");
+        fabric.set_expander_failed(true);
+        assert!(fabric.expander_failed());
+        assert!(fabric.read_dpa(Dpa(0x4000), &mut buf).is_err());
+        fabric.set_expander_failed(false);
+        let pages = fabric.with_expander_mut(|e| e.resident_pages());
+        assert!(pages > 0);
+    }
+
+    #[test]
+    fn mmid_namespace_is_fabric_global() {
+        let mut f = fm(GIB);
+        let a = f.alloc_mmid();
+        let b = f.alloc_mmid();
+        assert_ne!(a, b);
+        assert!(b > a, "monotone, never reused");
     }
 
     #[test]

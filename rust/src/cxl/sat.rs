@@ -98,6 +98,22 @@ impl SatTable {
         }
     }
 
+    /// Revoke every grant — for any SPID — whose window overlaps `range`.
+    /// Used when media is reclaimed (host crash / extent release): a
+    /// stale device grant must not survive into a re-lease of the same
+    /// DPA range. Returns the number of entries removed.
+    pub fn revoke_overlapping(&mut self, range: Range) -> usize {
+        let mut removed = 0;
+        for list in self.grants.values_mut() {
+            let before = list.len();
+            list.retain(|e| !e.range.overlaps(&range));
+            removed += before - list.len();
+        }
+        self.grants.retain(|_, list| !list.is_empty());
+        self.entries -= removed;
+        removed
+    }
+
     /// Check an access of `len` bytes at `dpa`. Write accesses require
     /// [`SatPerm::ReadWrite`].
     pub fn check(&self, spid: Spid, dpa: Dpa, len: u64, write: bool) -> bool {
@@ -164,6 +180,23 @@ mod tests {
         t.grant(Spid(1), Range::new(0, 64), SatPerm::ReadWrite).unwrap();
         t.grant(Spid(1), Range::new(64, 64), SatPerm::ReadWrite).unwrap();
         assert!(t.grant(Spid(1), Range::new(128, 64), SatPerm::ReadWrite).is_err());
+    }
+
+    #[test]
+    fn revoke_overlapping_sweeps_every_spid() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0x1000, 0x1000), SatPerm::ReadWrite).unwrap();
+        t.grant(Spid(2), Range::new(0x1800, 0x1000), SatPerm::ReadOnly).unwrap();
+        t.grant(Spid(1), Range::new(0x8000, 0x1000), SatPerm::ReadWrite).unwrap();
+        // reclaim [0x1000, 0x3000): both overlapping grants go, the
+        // disjoint one survives
+        assert_eq!(t.revoke_overlapping(Range::new(0x1000, 0x2000)), 2);
+        assert!(!t.check(Spid(1), Dpa(0x1000), 64, false));
+        assert!(!t.check(Spid(2), Dpa(0x1800), 64, false));
+        assert!(t.check(Spid(1), Dpa(0x8000), 64, true));
+        assert_eq!(t.len(), 1);
+        // nothing left to revoke in that window
+        assert_eq!(t.revoke_overlapping(Range::new(0x1000, 0x2000)), 0);
     }
 
     #[test]

@@ -178,6 +178,16 @@ pub const fn align_up(v: u64, align: u64) -> u64 {
     (v + align - 1) & !(align - 1)
 }
 
+/// `gib` GiB in bytes, panicking with a clear message on `u64` overflow.
+/// Builder sugar (`expander_gib`, `host_dram_gib`, …) funnels through
+/// this: a silently wrapped size would build a tiny (or empty) expander
+/// and surface as a baffling `OutOfCapacity` much later.
+#[inline]
+pub fn gib_to_bytes(gib: u64) -> u64 {
+    gib.checked_mul(GIB)
+        .unwrap_or_else(|| panic!("{gib} GiB overflows u64 — use a capacity below 2^34 GiB"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +223,19 @@ mod tests {
     #[test]
     fn extent_size_matches_paper() {
         assert_eq!(EXTENT_SIZE, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn gib_conversion_is_exact_in_range() {
+        assert_eq!(gib_to_bytes(0), 0);
+        assert_eq!(gib_to_bytes(4), 4 * GIB);
+        assert_eq!(gib_to_bytes((1 << 34) - 1), ((1 << 34) - 1) * GIB);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u64")]
+    fn gib_conversion_rejects_overflow() {
+        gib_to_bytes(1 << 34);
     }
 
     #[test]

@@ -31,15 +31,42 @@ pub struct AddressSpace {
     windows: Vec<HdmWindow>,
     /// Bump pointer for placing new HDM windows above existing ranges.
     next_window_base: u64,
+    /// Exclusive upper bound for auto-placed windows (multi-host: the
+    /// end of this host's HPA region, so a window-hungry host errors
+    /// instead of bleeding into a sibling's region in the shared
+    /// decoder table). `None` = unbounded (single-host rigs).
+    window_limit: Option<u64>,
 }
 
 impl AddressSpace {
     /// A host with `dram_bytes` of local DRAM at HPA 0.
     pub fn new(dram_bytes: u64) -> Self {
+        Self::with_window_region(dram_bytes, 0, None)
+    }
+
+    /// Like [`AddressSpace::new`], but HDM windows are placed starting
+    /// at `window_base` (raised above DRAM if needed). Multi-host
+    /// sharding uses this to give each host a disjoint HPA region, so
+    /// the expander's shared decoder table never sees two hosts claim
+    /// the same window.
+    pub fn with_window_base(dram_bytes: u64, window_base: u64) -> Self {
+        Self::with_window_region(dram_bytes, window_base, None)
+    }
+
+    /// [`AddressSpace::with_window_base`] plus an exclusive end for the
+    /// auto-placement region: [`AddressSpace::place_hdm_window`] fails
+    /// cleanly once the budget is spent (the bump pointer never reuses
+    /// freed window space).
+    pub fn with_window_region(
+        dram_bytes: u64,
+        window_base: u64,
+        window_limit: Option<u64>,
+    ) -> Self {
         AddressSpace {
             dram: Range::new(0, dram_bytes),
             windows: Vec::new(),
-            next_window_base: dram_bytes.next_power_of_two().max(1 << 32),
+            next_window_base: window_base.max(dram_bytes.next_power_of_two().max(1 << 32)),
+            window_limit,
         }
     }
 
@@ -57,9 +84,19 @@ impl AddressSpace {
     }
 
     /// Place a new HDM window for `len` bytes at an automatically chosen
-    /// HPA; returns the window's base HPA.
+    /// HPA; returns the window's base HPA. Fails if the window would
+    /// leave this host's region (see [`AddressSpace::with_window_region`])
+    /// or wrap the HPA space.
     pub fn place_hdm_window(&mut self, len: u64, dpa_base: Dpa) -> Result<Hpa> {
         let base = self.next_window_base;
+        let end = base
+            .checked_add(len)
+            .ok_or_else(|| Error::Config("HDM window wraps the HPA space".into()))?;
+        if self.window_limit.is_some_and(|limit| end > limit) {
+            return Err(Error::Config(format!(
+                "HDM window budget exhausted: {base:#x}+{len:#x} crosses the host region end"
+            )));
+        }
         self.add_hdm_window(Range::new(base, len), dpa_base)?;
         Ok(Hpa(base))
     }
@@ -112,7 +149,7 @@ impl AddressSpace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cxl::types::GIB;
+    use crate::cxl::types::{GIB, PAGE_SIZE};
 
     #[test]
     fn dram_resolution() {
@@ -139,6 +176,29 @@ mod tests {
         assert!(s.add_hdm_window(Range::new(a.0, 0x1000), Dpa(GIB)).is_err());
         let b = s.place_hdm_window(GIB, Dpa(GIB)).unwrap();
         assert!(b.0 >= a.0 + GIB);
+        assert_eq!(s.window_count(), 2);
+    }
+
+    #[test]
+    fn explicit_window_base_is_honoured_and_clamped() {
+        let mut s = AddressSpace::with_window_base(GIB, 1 << 44);
+        assert_eq!(s.place_hdm_window(GIB, Dpa(0)).unwrap(), Hpa(1 << 44));
+        // a base below the DRAM floor is raised, never overlapped
+        let mut low = AddressSpace::with_window_base(GIB, 0x1000);
+        let placed = low.place_hdm_window(GIB, Dpa(0)).unwrap();
+        assert!(placed.0 >= GIB, "window cannot land inside host DRAM");
+    }
+
+    #[test]
+    fn window_region_limit_bounds_auto_placement() {
+        let base = 1u64 << 44;
+        let mut s = AddressSpace::with_window_region(GIB, base, Some(base + 4 * GIB));
+        s.place_hdm_window(3 * GIB, Dpa(0)).unwrap();
+        // 2 GiB more would cross the region end — clean error, no spill
+        assert!(s.place_hdm_window(2 * GIB, Dpa(0)).is_err(), "budget exhausted");
+        // exactly filling the region is allowed
+        s.place_hdm_window(GIB, Dpa(0)).unwrap();
+        assert!(s.place_hdm_window(PAGE_SIZE, Dpa(0)).is_err());
         assert_eq!(s.window_count(), 2);
     }
 

@@ -20,6 +20,23 @@
 //! Python never runs at simulation time: [`runtime`] loads the AOT HLO
 //! via the PJRT C API (`xla` crate) and executes it from the hot path.
 //!
+//! ## Fabric ownership model
+//!
+//! Since the shared-fabric split (multi-host sharding), no host owns
+//! the fabric. The switch, expander, lease table and fabric-global mmid
+//! namespace live in the [`cxl::fm::FabricManager`], which sits behind
+//! [`cxl::fm::FabricRef`] — a cheap-clone shared handle. Each
+//! [`lmb::LmbHost`] holds one clone plus the state that really is
+//! per-host: its IOMMU, host physical address space (HDM windows in a
+//! host-disjoint HPA region), and the loaded [`lmb::LmbModule`]. Leases
+//! are keyed by `HostId` and mmids never collide across hosts, so no
+//! handle-holder can free or share memory it does not own — and there
+//! is deliberately no public path to `&mut FabricManager` that could
+//! bypass those checks. [`cluster::Cluster`] composes the pieces:
+//! one fabric, N hosts, routed per-host alloc/free/share, crash
+//! containment ([`cluster::Cluster::crash_host`]) and cluster-wide
+//! expander failover ([`lmb::failure::FailureDomain::fail_cluster`]).
+//!
 //! ## Quick start
 //!
 //! The control plane is the unified, consumer-generic API on
@@ -41,6 +58,7 @@
 //! ```
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cxl;
@@ -60,9 +78,11 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::cluster::{Cluster, ClusterBuilder};
     pub use crate::coordinator::{Coordinator, ExperimentReport, SchemeRow};
     pub use crate::cxl::expander::ExpanderConfig;
     pub use crate::cxl::fabric::{Fabric, PathKind};
+    pub use crate::cxl::fm::{FabricManager, FabricRef, HostId};
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
     pub use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule, LmbRegion};

@@ -2,36 +2,47 @@
 //!
 //! The original surface forced every caller to thread
 //! `(&mut FabricManager, &mut Iommu, &mut AddressSpace)` through six
-//! near-duplicate `pcie_*`/`cxl_*` methods. The context owns that triple
-//! (plus the loaded [`LmbModule`]) and exposes the consumer-generic,
-//! handle-based API everything else in the crate builds on: `System`,
-//! the failure domain, the examples, and the benches. One `LmbHost` per
-//! bound host; sharding across hosts means constructing several contexts
-//! (ROADMAP: multi-host sharding, async batching).
+//! near-duplicate `pcie_*`/`cxl_*` methods. The context carries the
+//! per-host pieces of that triple (plus the loaded [`LmbModule`]) and a
+//! shared [`FabricRef`], and exposes the consumer-generic, handle-based
+//! API everything else in the crate builds on: `System`, the failure
+//! domain, the examples, and the benches. One `LmbHost` per bound host;
+//! sharding across hosts means binding several contexts to clones of
+//! one `FabricRef` (see [`crate::cluster::Cluster`]).
 
-use crate::cxl::fm::{FabricManager, HostId};
+use std::cell::Ref;
+
+use crate::cxl::fm::{FabricManager, FabricRef, HostId};
 use crate::cxl::types::{Bdf, Dpa, MmId, Spid};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
 use crate::lmb::{Consumer, LmbAlloc, LmbModule};
 use crate::pcie::iommu::Iommu;
 
-/// Per-host LMB context: owns the fabric manager, IOMMU and host address
-/// space, and dispatches the class-specific access-control setup on
-/// [`Consumer`].
+/// Spacing between the HDM-window regions of successive hosts. Every
+/// host maps leased extents into its own physical address space; giving
+/// each host a disjoint 256 TiB region keeps the expander's (shared)
+/// decoder table free of cross-host HPA collisions.
+const HOST_WINDOW_STRIDE: u64 = 1 << 48;
+
+/// Per-host LMB context: holds this host's IOMMU, address space and
+/// loaded module plus a shared handle to the fabric manager, and
+/// dispatches the class-specific access-control setup on [`Consumer`].
 ///
 /// ```
 /// use lmb::cxl::expander::{Expander, ExpanderConfig};
-/// use lmb::cxl::fm::FabricManager;
+/// use lmb::cxl::fm::{FabricManager, FabricRef};
 /// use lmb::cxl::switch::PbrSwitch;
 /// use lmb::cxl::types::{Bdf, GIB, PAGE_SIZE};
 /// use lmb::lmb::LmbHost;
 ///
-/// let fm = FabricManager::new(
+/// let fabric = FabricRef::new(FabricManager::new(
 ///     PbrSwitch::new(8),
 ///     Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
-/// );
-/// let mut host = LmbHost::bind(fm, GIB).unwrap();
+/// ));
+/// let mut host = LmbHost::bind(fabric.clone(), GIB).unwrap();
+/// // any number of hosts bind to the same expander through clones
+/// let sibling = LmbHost::bind(fabric.clone(), GIB).unwrap();
 ///
 /// // a PCIe SSD allocates buffer memory; a CXL accelerator shares it
 /// let ssd = Bdf::new(1, 0, 0);
@@ -40,14 +51,18 @@ use crate::pcie::iommu::Iommu;
 /// let a = host.alloc(ssd, 8 * PAGE_SIZE).unwrap();
 /// assert!(a.bus_addr.is_some(), "PCIe consumers get an IOMMU mapping");
 /// let shared = host.share(ssd, accel, a.mmid).unwrap();
-/// assert_eq!(shared.dpid, host.fm().gfd_dpid(), "CXL consumers get the GFD DPID");
+/// assert_eq!(shared.dpid, fabric.gfd_dpid(), "CXL consumers get the GFD DPID");
+///
+/// // leases are arbitrated per host by the shared FM
+/// assert!(fabric.leased_to(host.host()) > 0);
+/// assert_eq!(fabric.leased_to(sibling.host()), 0);
 ///
 /// host.free(ssd, a.mmid).unwrap();
 /// assert_eq!(host.module().live_allocs(), 0);
 /// ```
 #[derive(Debug)]
 pub struct LmbHost {
-    fm: FabricManager,
+    fabric: FabricRef,
     iommu: Iommu,
     space: AddressSpace,
     module: LmbModule,
@@ -56,25 +71,46 @@ pub struct LmbHost {
 }
 
 impl LmbHost {
-    /// Bind a host root port to the fabric and load its LMB module
-    /// (§3.1: the module loads before any device driver initialises).
-    /// Attaches the GFD first if bring-up has not happened yet, so the
-    /// module always learns the real GFD DPID.
-    pub fn bind(mut fm: FabricManager, host_dram: u64) -> Result<Self> {
-        let gfd_dpid = match fm.gfd_dpid() {
-            Some(d) => d,
-            None => fm.attach_gfd()?,
+    /// Bind a host root port to the shared fabric and load its LMB
+    /// module (§3.1: the module loads before any device driver
+    /// initialises). Attaches the GFD first if bring-up has not
+    /// happened yet, so the module always learns the real GFD DPID.
+    pub fn bind(fabric: FabricRef, host_dram: u64) -> Result<Self> {
+        // DRAM larger than the stride would push this host's HDM windows
+        // into the next host's HPA region and collide in the shared
+        // decoder table — reject up front rather than fail on first alloc
+        if host_dram > HOST_WINDOW_STRIDE {
+            return Err(Error::Config(format!(
+                "host DRAM of {host_dram} B exceeds the per-host HDM window stride (2^48 B)"
+            )));
+        }
+        let (host, host_spid, gfd_dpid, window_base) = {
+            let mut fm = fabric.lock();
+            let gfd_dpid = match fm.gfd_dpid() {
+                Some(d) => d,
+                None => fm.attach_gfd()?,
+            };
+            let (host, host_spid) = fm.bind_host()?;
+            // host ids are never reused, so pathological bind/crash churn
+            // could run the window space dry — fail loudly, not wrap
+            let window_base = match HOST_WINDOW_STRIDE.checked_mul(u64::from(host.0) + 1) {
+                Some(base) => base,
+                None => {
+                    fm.release_host(host);
+                    return Err(Error::FabricManager(format!(
+                        "host id {} exhausts the per-host HPA window space",
+                        host.0
+                    )));
+                }
+            };
+            (host, host_spid, gfd_dpid, window_base)
         };
-        let (host, host_spid) = fm.bind_host()?;
         let module = LmbModule::load(host, gfd_dpid);
-        Ok(LmbHost {
-            fm,
-            iommu: Iommu::new(),
-            space: AddressSpace::new(host_dram),
-            module,
-            host,
-            host_spid,
-        })
+        // bound the window region so a window-hungry host errors cleanly
+        // instead of spilling into the next host's HPA region
+        let window_end = window_base.saturating_add(HOST_WINDOW_STRIDE);
+        let space = AddressSpace::with_window_region(host_dram, window_base, Some(window_end));
+        Ok(LmbHost { fabric, iommu: Iommu::new(), space, module, host, host_spid })
     }
 
     pub fn host(&self) -> HostId {
@@ -93,14 +129,15 @@ impl LmbHost {
 
     /// Bind a CXL device (accelerator, CXL-SSD) to the fabric.
     pub fn attach_cxl_device(&mut self) -> Result<Spid> {
-        self.fm.bind_cxl_device()
+        self.fabric.bind_cxl_device()
     }
 
     // ---- the unified Table 2 surface ----
 
     /// Allocate `size` bytes of LMB memory for `consumer`.
     pub fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
-        self.module.alloc(&mut self.fm, &mut self.iommu, &mut self.space, consumer, size)
+        let mut fm = self.fabric.lock();
+        self.module.alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size)
     }
 
     /// Batch allocation, all-or-nothing: if any request fails, every
@@ -129,7 +166,8 @@ impl LmbHost {
 
     /// Free `mmid`, which must be owned by `consumer`.
     pub fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
-        self.module.free(&mut self.fm, &mut self.iommu, &mut self.space, consumer, mmid)
+        let mut fm = self.fabric.lock();
+        self.module.free(&mut fm, &mut self.iommu, &mut self.space, consumer, mmid)
     }
 
     /// Zero-copy share of `mmid` (owned by `owner`) into `target`'s
@@ -140,7 +178,8 @@ impl LmbHost {
         target: impl Into<Consumer>,
         mmid: MmId,
     ) -> Result<LmbAlloc> {
-        self.module.share(&mut self.fm, &mut self.iommu, owner, target, mmid)
+        let mut fm = self.fabric.lock();
+        self.module.share(&mut fm, &mut self.iommu, owner, target, mmid)
     }
 
     /// Allocate with RAII semantics: the returned [`LmbRegion`] frees the
@@ -166,7 +205,7 @@ impl LmbHost {
             Some(end) if end <= a.size => {}
             _ => return Err(Error::Config("write beyond allocation".into())),
         }
-        self.fm.expander_mut().write_dpa(Dpa(a.dpa.0 + offset), data)
+        self.fabric.write_dpa(Dpa(a.dpa.0 + offset), data)
     }
 
     /// Functional read from an LMB allocation.
@@ -176,7 +215,7 @@ impl LmbHost {
             Some(end) if end <= a.size => {}
             _ => return Err(Error::Config("read beyond allocation".into())),
         }
-        self.fm.expander().read_dpa(Dpa(a.dpa.0 + offset), out)
+        self.fabric.read_dpa(Dpa(a.dpa.0 + offset), out)
     }
 
     // ---- lookups / component access ----
@@ -191,12 +230,18 @@ impl LmbHost {
         self.module.mmids()
     }
 
-    pub fn fm(&self) -> &FabricManager {
-        &self.fm
+    /// The shared fabric handle this host is bound through. Clone it to
+    /// bind further hosts to the same switch + expander.
+    pub fn fabric_ref(&self) -> &FabricRef {
+        &self.fabric
     }
 
-    pub fn fm_mut(&mut self) -> &mut FabricManager {
-        &mut self.fm
+    /// Scoped read-only view of the shared FM (see [`FabricRef::get`]
+    /// for the borrow rules). There is deliberately no mutable
+    /// counterpart: mutations go through FM methods keyed by [`HostId`]
+    /// so lease ownership checks cannot be bypassed.
+    pub fn fm(&self) -> Ref<'_, FabricManager> {
+        self.fabric.get()
     }
 
     pub fn iommu(&self) -> &Iommu {
@@ -215,16 +260,10 @@ impl LmbHost {
         &self.module
     }
 
-    /// Split borrow for failure handling: the FM mutably plus the module
-    /// immutably (see [`crate::lmb::failure::FailureDomain`]).
-    pub fn failure_parts(&mut self) -> (&mut FabricManager, &LmbModule) {
-        (&mut self.fm, &self.module)
-    }
-
     /// Module + FM invariants in one sweep (property tests).
     pub fn check_invariants(&self) -> Result<()> {
         self.module.check_invariants()?;
-        self.fm.check_invariants()
+        self.fabric.check_invariants()
     }
 }
 
@@ -296,12 +335,15 @@ mod tests {
     use crate::cxl::switch::PbrSwitch;
     use crate::cxl::types::{EXTENT_SIZE, GIB, PAGE_SIZE};
 
-    fn host_with(expander_bytes: u64) -> LmbHost {
-        let fm = FabricManager::new(
+    fn fabric_with(expander_bytes: u64) -> FabricRef {
+        FabricRef::new(FabricManager::new(
             PbrSwitch::new(16),
             Expander::new(ExpanderConfig { dram_capacity: expander_bytes, ..Default::default() }),
-        );
-        LmbHost::bind(fm, GIB).unwrap()
+        ))
+    }
+
+    fn host_with(expander_bytes: u64) -> LmbHost {
+        LmbHost::bind(fabric_with(expander_bytes), GIB).unwrap()
     }
 
     #[test]
@@ -313,13 +355,45 @@ mod tests {
 
     #[test]
     fn bind_reuses_existing_gfd() {
-        let mut fm = FabricManager::new(
-            PbrSwitch::new(16),
-            Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
-        );
-        let dpid = fm.attach_gfd().unwrap();
-        let host = LmbHost::bind(fm, GIB).unwrap();
+        let fabric = fabric_with(GIB);
+        let dpid = fabric.lock().attach_gfd().unwrap();
+        let host = LmbHost::bind(fabric, GIB).unwrap();
         assert_eq!(host.module().gfd_dpid(), dpid);
+    }
+
+    #[test]
+    fn multiple_hosts_share_one_fabric() {
+        let fabric = fabric_with(GIB); // 4 extents
+        let mut h1 = LmbHost::bind(fabric.clone(), GIB).unwrap();
+        let mut h2 = LmbHost::bind(fabric.clone(), GIB).unwrap();
+        assert_ne!(h1.host(), h2.host());
+        assert_ne!(h1.host_spid(), h2.host_spid());
+
+        let d1 = Bdf::new(1, 0, 0);
+        let d2 = Bdf::new(1, 0, 0); // same BDF, different host — fine
+        h1.attach_pcie(d1);
+        h2.attach_pcie(d2);
+        let a1 = h1.alloc(d1, PAGE_SIZE).unwrap();
+        let a2 = h2.alloc(d2, PAGE_SIZE).unwrap();
+
+        // leases draw from one pool, accounted per host
+        assert_eq!(fabric.available(), GIB - 2 * EXTENT_SIZE);
+        assert_eq!(fabric.leased_to(h1.host()), EXTENT_SIZE);
+        assert_eq!(fabric.leased_to(h2.host()), EXTENT_SIZE);
+
+        // mmids are fabric-global: no collision across hosts, and a
+        // foreign handle is unknown to the other module
+        assert_ne!(a1.mmid, a2.mmid);
+        assert!(matches!(h2.free(d2, a1.mmid), Err(Error::UnknownMmId(_))));
+        assert!(matches!(h1.share(d1, d1, a2.mmid), Err(Error::UnknownMmId(_))));
+
+        // placements land in disjoint DPA extents
+        assert_ne!(a1.dpa.align_down(EXTENT_SIZE), a2.dpa.align_down(EXTENT_SIZE));
+
+        h1.free(d1, a1.mmid).unwrap();
+        h2.free(d2, a2.mmid).unwrap();
+        assert_eq!(fabric.available(), GIB);
+        fabric.check_invariants().unwrap();
     }
 
     #[test]

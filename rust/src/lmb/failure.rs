@@ -14,10 +14,21 @@
 //!   for availability.
 //!
 //! Recovery re-validates leases and rebuilds access-control state.
+//!
+//! Since the shared-fabric split the domain is cluster-wide: one
+//! expander backs every bound host, so a failure hits them all at once.
+//! [`FailureDomain::fail_cluster`] / [`FailureDomain::recover_cluster`]
+//! sweep every host's allocations — each host's critical allocations
+//! spill to *its own* host-DRAM shadow. A host *crash* is the other
+//! cluster failure mode and is handled by
+//! [`Cluster::crash_host`](crate::cluster::Cluster::crash_host) /
+//! [`FabricManager::release_host`](crate::cxl::fm::FabricManager::release_host),
+//! which reclaims the leases without perturbing sibling hosts.
 
 use std::collections::HashMap;
 
-use crate::cxl::fm::FabricManager;
+use crate::cluster::Cluster;
+use crate::cxl::fm::FabricRef;
 use crate::cxl::types::MmId;
 use crate::error::{Error, Result};
 use crate::lmb::{LmbHost, LmbModule};
@@ -84,36 +95,27 @@ impl FailureDomain {
 
     /// Inject an expander failure through a host context; returns the
     /// serving state for each live allocation.
-    pub fn fail(&mut self, lmb: &mut LmbHost) -> HashMap<MmId, ServingState> {
-        let (fm, module) = lmb.failure_parts();
-        self.fail_expander(fm, module)
+    pub fn fail(&mut self, lmb: &LmbHost) -> HashMap<MmId, ServingState> {
+        self.fail_expander(lmb.fabric_ref(), lmb.module())
     }
 
     /// Recover the expander through a host context (see
     /// [`FailureDomain::recover_expander`] for the copy-back contract).
-    pub fn recover<F>(&mut self, lmb: &mut LmbHost, copy_back: F) -> Result<u64>
+    pub fn recover<F>(&mut self, lmb: &LmbHost, copy_back: F) -> Result<u64>
     where
         F: FnMut(MmId) -> Result<u64>,
     {
-        let (fm, module) = lmb.failure_parts();
-        self.recover_expander(fm, module, copy_back)
+        self.recover_expander(lmb.fabric_ref(), lmb.module(), copy_back)
     }
 
     /// Inject an expander failure; returns the serving state for each
     /// live allocation in `module`.
     pub fn fail_expander(
         &mut self,
-        fm: &mut FabricManager,
+        fabric: &FabricRef,
         module: &LmbModule,
     ) -> HashMap<MmId, ServingState> {
-        fm.expander_mut().set_failed(true);
-        self.expander_up = false;
-        self.failovers += 1;
-        module
-            .mmids()
-            .into_iter()
-            .map(|mmid| (mmid, self.serving_state(mmid)))
-            .collect()
+        self.fail_with(fabric, module.mmids())
     }
 
     /// Recover the expander. Shadowed allocations must be copied back
@@ -121,8 +123,59 @@ impl FailureDomain {
     /// (returning bytes restored) so the bench can account for it.
     pub fn recover_expander<F>(
         &mut self,
-        fm: &mut FabricManager,
+        fabric: &FabricRef,
         module: &LmbModule,
+        copy_back: F,
+    ) -> Result<u64>
+    where
+        F: FnMut(MmId) -> Result<u64>,
+    {
+        self.recover_with(fabric, module.mmids(), copy_back)
+    }
+
+    /// Cluster-wide failure: the shared expander goes down once and the
+    /// outage hits every bound host. Returns the serving state of every
+    /// live allocation across the cluster — under `WriteThroughShadow`
+    /// each host's critical allocations are served from *that host's*
+    /// own DRAM shadow (mmids are fabric-global, so one map covers all
+    /// hosts without collisions).
+    pub fn fail_cluster(&mut self, cluster: &Cluster) -> HashMap<MmId, ServingState> {
+        let mmids: Vec<MmId> =
+            cluster.hosts().flat_map(|(_, host)| host.module().mmids()).collect();
+        self.fail_with(cluster.fabric_ref(), mmids)
+    }
+
+    /// Cluster-wide recovery: every host's shadowed critical
+    /// allocations are copied back (the hook receives each mmid and
+    /// returns bytes restored) before serving switches back to the
+    /// expander.
+    pub fn recover_cluster<F>(&mut self, cluster: &Cluster, copy_back: F) -> Result<u64>
+    where
+        F: FnMut(MmId) -> Result<u64>,
+    {
+        let mmids: Vec<MmId> =
+            cluster.hosts().flat_map(|(_, host)| host.module().mmids()).collect();
+        self.recover_with(cluster.fabric_ref(), mmids, copy_back)
+    }
+
+    /// Shared failure core: down the expander once, sweep `mmids`.
+    fn fail_with(
+        &mut self,
+        fabric: &FabricRef,
+        mmids: impl IntoIterator<Item = MmId>,
+    ) -> HashMap<MmId, ServingState> {
+        fabric.set_expander_failed(true);
+        self.expander_up = false;
+        self.failovers += 1;
+        mmids.into_iter().map(|mmid| (mmid, self.serving_state(mmid))).collect()
+    }
+
+    /// Shared recovery core: bring the expander back, copy shadowed
+    /// criticals among `mmids` back before serving switches.
+    fn recover_with<F>(
+        &mut self,
+        fabric: &FabricRef,
+        mmids: impl IntoIterator<Item = MmId>,
         mut copy_back: F,
     ) -> Result<u64>
     where
@@ -131,10 +184,10 @@ impl FailureDomain {
         if self.expander_up {
             return Err(Error::FabricManager("expander is not failed".into()));
         }
-        fm.expander_mut().set_failed(false);
+        fabric.set_expander_failed(false);
         let mut restored = 0;
         if self.policy == FailurePolicy::WriteThroughShadow {
-            for mmid in module.mmids() {
+            for mmid in mmids {
                 if self.is_critical(mmid) {
                     restored += copy_back(mmid)?;
                 }
@@ -171,11 +224,11 @@ mod tests {
     use crate::cxl::types::{Bdf, GIB, PAGE_SIZE};
 
     fn rig() -> (LmbHost, Bdf) {
-        let fm = FabricManager::new(
+        let fabric = FabricRef::new(crate::cxl::fm::FabricManager::new(
             PbrSwitch::new(8),
             Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
-        );
-        let mut lmb = LmbHost::bind(fm, GIB).unwrap();
+        ));
+        let mut lmb = LmbHost::bind(fabric, GIB).unwrap();
         let dev = Bdf::new(1, 0, 0);
         lmb.attach_pcie(dev);
         (lmb, dev)
@@ -186,11 +239,11 @@ mod tests {
         let (mut lmb, dev) = rig();
         let a = lmb.alloc(dev, PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::FailStop);
-        let states = fd.fail(&mut lmb);
+        let states = fd.fail(&lmb);
         assert_eq!(states[&a.mmid], ServingState::Unavailable);
         // new allocations fail during the outage
         assert!(lmb.alloc(dev, PAGE_SIZE).is_err());
-        fd.recover(&mut lmb, |_| Ok(0)).unwrap();
+        fd.recover(&lmb, |_| Ok(0)).unwrap();
         assert_eq!(fd.serving_state(a.mmid), ServingState::Expander);
         assert!(lmb.alloc(dev, PAGE_SIZE).is_ok());
     }
@@ -202,7 +255,7 @@ mod tests {
         let plain = lmb.alloc(dev, PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
         fd.register_critical(crit.mmid);
-        let states = fd.fail(&mut lmb);
+        let states = fd.fail(&lmb);
         assert_eq!(states[&crit.mmid], ServingState::HostShadow);
         assert_eq!(states[&plain.mmid], ServingState::Unavailable);
     }
@@ -213,9 +266,9 @@ mod tests {
         let a = lmb.alloc(dev, 4 * PAGE_SIZE).unwrap();
         let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
         fd.register_critical(a.mmid);
-        fd.fail(&mut lmb);
+        fd.fail(&lmb);
         let restored = fd
-            .recover(&mut lmb, |mmid| {
+            .recover(&lmb, |mmid| {
                 assert_eq!(mmid, a.mmid);
                 Ok(a.size)
             })
@@ -227,8 +280,50 @@ mod tests {
 
     #[test]
     fn double_recovery_rejected() {
-        let (mut lmb, _dev) = rig();
+        let (lmb, _dev) = rig();
         let mut fd = FailureDomain::new(FailurePolicy::FailStop);
-        assert!(fd.recover(&mut lmb, |_| Ok(0)).is_err());
+        assert!(fd.recover(&lmb, |_| Ok(0)).is_err());
+    }
+
+    #[test]
+    fn cluster_failover_spills_each_hosts_criticals_to_its_own_shadow() {
+        let mut cluster = Cluster::builder()
+            .hosts(3)
+            .expander_gib(2)
+            .host_dram_gib(1)
+            .build()
+            .unwrap();
+        let mut criticals = Vec::new();
+        let mut plains = Vec::new();
+        for i in 0..3 {
+            let dev = Bdf::new(1, 0, 0);
+            cluster.host_mut(i).unwrap().attach_pcie(dev);
+            criticals.push(cluster.alloc(i, dev, PAGE_SIZE).unwrap().mmid);
+            plains.push(cluster.alloc(i, dev, PAGE_SIZE).unwrap().mmid);
+        }
+        let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+        for &mmid in &criticals {
+            fd.register_critical(mmid);
+        }
+
+        let states = fd.fail_cluster(&cluster);
+        assert_eq!(states.len(), 6, "one entry per live allocation, cluster-wide");
+        for &mmid in &criticals {
+            assert_eq!(states[&mmid], ServingState::HostShadow);
+        }
+        for &mmid in &plains {
+            assert_eq!(states[&mmid], ServingState::Unavailable);
+        }
+        // the single shared expander being down blocks *every* host
+        for i in 0..3 {
+            let dev = Bdf::new(1, 0, 0);
+            assert!(cluster.alloc(i, dev, PAGE_SIZE).is_err());
+        }
+
+        let restored = fd.recover_cluster(&cluster, |_| Ok(PAGE_SIZE)).unwrap();
+        assert_eq!(restored, 3 * PAGE_SIZE, "one copy-back per host's critical");
+        let dev = Bdf::new(1, 0, 0);
+        assert!(cluster.alloc(0, dev, PAGE_SIZE).is_ok());
+        cluster.check_invariants().unwrap();
     }
 }

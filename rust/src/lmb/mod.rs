@@ -1,9 +1,11 @@
 //! The LMB kernel module (§3) — the paper's contribution.
 //!
 //! One instance runs per host. Device drivers reach it through a single
-//! consumer-generic API; the per-host [`LmbHost`] context owns the
-//! fabric-manager / IOMMU / address-space plumbing so callers never
-//! thread those by hand:
+//! consumer-generic API; the per-host [`LmbHost`] context carries the
+//! truly per-host state (IOMMU, address space, module) plus a shared
+//! [`FabricRef`](crate::cxl::fm::FabricRef) to the FM arbitrating the
+//! expander, so callers never thread that plumbing by hand — and any
+//! number of hosts bind to one fabric:
 //!
 //! | Operation | Unified interface            | Table 2 shims (deprecated)                        |
 //! |-----------|------------------------------|---------------------------------------------------|
@@ -113,8 +115,10 @@ struct AllocRecord {
 pub struct LmbModule {
     host: HostId,
     sub: SubAllocator,
+    /// Live allocations. Mmids come from the FM's fabric-global
+    /// namespace ([`FabricManager::alloc_mmid`]), so a handle minted on
+    /// one host can never alias another host's allocation.
     allocs: HashMap<MmId, AllocRecord>,
-    next_mmid: u64,
     /// §3.1: "we promote the loading priority of the LMB module" — the
     /// module must be initialised before device drivers allocate.
     loaded: bool,
@@ -132,7 +136,6 @@ impl LmbModule {
             host,
             sub: SubAllocator::new(),
             allocs: HashMap::new(),
-            next_mmid: 1,
             loaded: true,
             gfd_dpid,
         }
@@ -167,12 +170,6 @@ impl LmbModule {
     /// The consumer owning `mmid`, if it is live.
     pub fn owner_of(&self, mmid: MmId) -> Option<Consumer> {
         self.allocs.get(&mmid).map(|r| r.owner)
-    }
-
-    fn next_mmid(&mut self) -> MmId {
-        let id = MmId(self.next_mmid);
-        self.next_mmid += 1;
-        id
     }
 
     /// Ensure capacity for `size`, leasing extents from the FM as needed
@@ -297,7 +294,7 @@ impl LmbModule {
                 return Err(e);
             }
         };
-        let mmid = self.next_mmid();
+        let mmid = fm.alloc_mmid();
         self.allocs.insert(
             mmid,
             AllocRecord {
@@ -333,7 +330,7 @@ impl LmbModule {
             self.sub.free(placement);
             return Err(e);
         }
-        let mmid = self.next_mmid();
+        let mmid = fm.alloc_mmid();
         self.allocs.insert(
             mmid,
             AllocRecord {

@@ -10,6 +10,7 @@
 use std::collections::HashMap;
 
 use crate::cxl::expander::Expander;
+use crate::cxl::fm::FabricRef;
 use crate::cxl::types::Dpa;
 use crate::error::Result;
 
@@ -75,6 +76,30 @@ impl L2pTable {
             buf.extend_from_slice(&ppa.to_le_bytes());
         }
         expander.write_dpa(dpa, &buf)
+    }
+
+    /// [`L2pTable::flush_to_lmb`] through a shared fabric handle — the
+    /// multi-host route to the expander data plane (there is no public
+    /// `&mut Expander` on [`FabricRef`], so firmware flushes go here).
+    pub fn flush_to_fabric(
+        &self,
+        fabric: &FabricRef,
+        dpa: Dpa,
+        first: u64,
+        count: u64,
+    ) -> Result<()> {
+        fabric.with_expander_mut(|e| self.flush_to_lmb(e, dpa, first, count))
+    }
+
+    /// [`L2pTable::load_from_lmb`] through a shared fabric handle.
+    pub fn load_from_fabric(
+        &mut self,
+        fabric: &FabricRef,
+        dpa: Dpa,
+        first: u64,
+        count: u64,
+    ) -> Result<()> {
+        self.load_from_lmb(fabric.get().expander(), dpa, first, count)
     }
 
     /// Load entries `[first, first+count)` back from LMB memory.

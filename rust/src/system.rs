@@ -6,11 +6,13 @@
 //! the unified `alloc`/`free`/`share` surface. The Table-2-named methods
 //! remain as deprecated shims for the paper mapping.
 
+use std::cell::Ref;
+
 use crate::cxl::expander::{Expander, ExpanderConfig};
 use crate::cxl::fabric::{Fabric, FabricConfig};
-use crate::cxl::fm::{FabricManager, HostId};
+use crate::cxl::fm::{FabricManager, FabricRef, HostId};
 use crate::cxl::switch::PbrSwitch;
-use crate::cxl::types::{Bdf, MmId, Spid, GIB};
+use crate::cxl::types::{gib_to_bytes, Bdf, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
 use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule};
@@ -52,6 +54,7 @@ pub struct SystemBuilder {
     fabric: FabricConfig,
     host_dram: u64,
     switch_ports: u8,
+    shared: Option<FabricRef>,
 }
 
 impl Default for SystemBuilder {
@@ -61,20 +64,22 @@ impl Default for SystemBuilder {
             fabric: FabricConfig::default(),
             host_dram: 16 * GIB,
             switch_ports: 32,
+            shared: None,
         }
     }
 }
 
 impl SystemBuilder {
-    /// Expander DRAM capacity in GiB.
+    /// Expander DRAM capacity in GiB (checked: an overflowing size
+    /// panics instead of silently wrapping to a tiny expander).
     pub fn expander_gib(mut self, gib: u64) -> Self {
-        self.expander.dram_capacity = gib * GIB;
+        self.expander.dram_capacity = gib_to_bytes(gib);
         self
     }
 
-    /// Add a PM partition of `gib` GiB.
+    /// Add a PM partition of `gib` GiB (checked like `expander_gib`).
     pub fn pm_gib(mut self, gib: u64) -> Self {
-        self.expander.pm_capacity = gib * GIB;
+        self.expander.pm_capacity = gib_to_bytes(gib);
         self
     }
 
@@ -84,20 +89,32 @@ impl SystemBuilder {
         self
     }
 
-    /// Host DRAM size in GiB.
+    /// Host DRAM size in GiB (checked like `expander_gib`).
     pub fn host_dram_gib(mut self, gib: u64) -> Self {
-        self.host_dram = gib * GIB;
+        self.host_dram = gib_to_bytes(gib);
+        self
+    }
+
+    /// Bind this System's host to an existing shared fabric instead of
+    /// building a private switch + expander (multi-host sharding; see
+    /// also [`crate::cluster::Cluster`]). The expander and switch-port
+    /// settings on this builder are ignored when joining.
+    pub fn join_fabric(mut self, fabric: FabricRef) -> Self {
+        self.shared = Some(fabric);
         self
     }
 
     pub fn build(self) -> Result<System> {
-        let fm = FabricManager::new(
-            PbrSwitch::new(self.switch_ports),
-            Expander::new(self.expander),
-        );
+        let fabric_ref = match self.shared {
+            Some(f) => f,
+            None => FabricRef::new(FabricManager::new(
+                PbrSwitch::new(self.switch_ports),
+                Expander::new(self.expander),
+            )),
+        };
         // §3.1: LmbHost::bind attaches the GFD, binds the host, and loads
         // the LMB module before any device driver initialises.
-        let lmb = LmbHost::bind(fm, self.host_dram)?;
+        let lmb = LmbHost::bind(fabric_ref, self.host_dram)?;
         Ok(System {
             fabric: Fabric::new(self.fabric),
             lmb,
@@ -126,12 +143,17 @@ impl System {
         &mut self.lmb
     }
 
-    pub fn fm(&self) -> &FabricManager {
-        self.lmb.fm()
+    /// The shared fabric handle this System's host is bound through
+    /// (clone it + [`SystemBuilder::join_fabric`] to add more hosts).
+    pub fn fabric_ref(&self) -> &FabricRef {
+        self.lmb.fabric_ref()
     }
 
-    pub fn fm_mut(&mut self) -> &mut FabricManager {
-        self.lmb.fm_mut()
+    /// Scoped read-only view of the shared FM. Mutations go through the
+    /// [`FabricRef`] API, which keys every lease operation by host — no
+    /// `&mut FabricManager` escape hatch exists.
+    pub fn fm(&self) -> Ref<'_, FabricManager> {
+        self.lmb.fm()
     }
 
     pub fn iommu(&self) -> &Iommu {
@@ -148,12 +170,6 @@ impl System {
 
     pub fn module(&self) -> &LmbModule {
         self.lmb.module()
-    }
-
-    /// Split borrow for failure handling: the FM mutably plus the module
-    /// immutably (see [`crate::lmb::failure::FailureDomain`]).
-    pub fn failure_parts(&mut self) -> (&mut FabricManager, &LmbModule) {
-        self.lmb.failure_parts()
     }
 
     /// Attach a PCIe SSD: enumerates a BDF and creates its IOMMU domain.
@@ -343,6 +359,39 @@ mod tests {
         assert!(sys.write_alloc(a.mmid, PAGE_SIZE - 2, b"xxxx").is_err());
         let mut buf = [0u8; 8];
         assert!(sys.read_alloc(a.mmid, PAGE_SIZE - 4, &mut buf).is_err());
+    }
+
+    #[test]
+    fn two_systems_share_one_fabric() {
+        use crate::cxl::types::EXTENT_SIZE;
+        let mut a = System::builder().expander_gib(1).build().unwrap(); // 4 extents
+        let mut b = System::builder().join_fabric(a.fabric_ref().clone()).build().unwrap();
+        assert_ne!(a.host(), b.host());
+        let a_dev = a.attach_pcie_ssd(SsdSpec::gen4());
+        let b_dev = b.attach_pcie_ssd(SsdSpec::gen5());
+        let ac = a.consumer(a_dev).unwrap();
+        let bc = b.consumer(b_dev).unwrap();
+        // leases draw from the one pool...
+        a.alloc(ac, EXTENT_SIZE).unwrap();
+        let bm = b.alloc(bc, EXTENT_SIZE).unwrap();
+        assert_eq!(a.fm().available(), 2 * EXTENT_SIZE);
+        // ...and host A cannot touch host B's allocation
+        assert!(matches!(a.free(ac, bm.mmid), Err(Error::UnknownMmId(_))));
+        b.free(bc, bm.mmid).unwrap();
+        assert_eq!(a.fm().available(), 3 * EXTENT_SIZE);
+        a.fm().check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u64")]
+    fn builder_rejects_overflowing_expander_size() {
+        let _ = System::builder().expander_gib(u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u64")]
+    fn builder_rejects_overflowing_host_dram_size() {
+        let _ = System::builder().host_dram_gib(1 << 40);
     }
 
     #[test]

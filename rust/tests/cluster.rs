@@ -1,0 +1,167 @@
+//! Multi-host sharding acceptance: N `LmbHost`s arbitrate one expander
+//! through a shared `FabricRef`. Concurrent allocation drains the pool
+//! to `OutOfCapacity`, a host crash returns exactly its capacity
+//! (verified by `leased_to`/`available`) without perturbing siblings,
+//! and mmids are isolated across hosts.
+
+use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
+use lmb::lmb::failure::{FailureDomain, FailurePolicy, ServingState};
+use lmb::prelude::*;
+
+fn cluster(hosts: usize, expander_gib: u64) -> (Cluster, Bdf) {
+    let mut c = Cluster::builder()
+        .hosts(hosts)
+        .expander_gib(expander_gib)
+        .host_dram_gib(1)
+        .build()
+        .unwrap();
+    let dev = Bdf::new(1, 0, 0);
+    for slot in 0..hosts {
+        c.host_mut(slot).unwrap().attach_pcie(dev);
+    }
+    (c, dev)
+}
+
+#[test]
+fn two_hosts_alloc_concurrently_until_out_of_capacity() {
+    // 1 GiB expander = 4 extents; the hosts alternate extent claims
+    let (mut cluster, dev) = cluster(2, 1);
+    let mut counts = [0u32; 2];
+    let mut done = [false; 2];
+    while !(done[0] && done[1]) {
+        for slot in 0..2 {
+            if done[slot] {
+                continue;
+            }
+            match cluster.alloc(slot, dev, EXTENT_SIZE) {
+                Ok(_) => counts[slot] += 1,
+                Err(Error::OutOfCapacity { available, .. }) => {
+                    assert_eq!(available, 0, "pool fully drained");
+                    done[slot] = true;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    }
+    // interleaved claims split the pool evenly
+    assert_eq!(counts, [2, 2]);
+    assert_eq!(cluster.available(), 0);
+    assert_eq!(cluster.leased_to(0).unwrap(), 2 * EXTENT_SIZE);
+    assert_eq!(cluster.leased_to(1).unwrap(), 2 * EXTENT_SIZE);
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn host_crash_returns_capacity_to_the_pool() {
+    let (mut cluster, dev) = cluster(2, 1);
+    cluster.alloc(0, dev, EXTENT_SIZE).unwrap();
+    cluster.alloc(0, dev, EXTENT_SIZE).unwrap();
+    let keeper = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
+    cluster.host_mut(1).unwrap().write(keeper.mmid, 0, b"intact").unwrap();
+    assert_eq!(cluster.available(), GIB - 3 * EXTENT_SIZE);
+    assert_eq!(cluster.leased_to(0).unwrap(), 2 * EXTENT_SIZE);
+
+    cluster.crash_host(0).unwrap();
+
+    // the victim's two extents are back; the sibling's lease is not
+    assert_eq!(cluster.available(), GIB - EXTENT_SIZE);
+    assert_eq!(cluster.leased_to(1).unwrap(), EXTENT_SIZE);
+    // the sibling's placement survives, bytes and translation intact
+    let mut buf = [0u8; 6];
+    cluster.host(1).unwrap().read(keeper.mmid, 0, &mut buf).unwrap();
+    assert_eq!(&buf, b"intact");
+    let still = cluster.host(1).unwrap().get(keeper.mmid).unwrap();
+    assert_eq!(still.hpa, keeper.hpa);
+    assert_eq!(still.dpa, keeper.dpa);
+    // and the freed capacity is immediately claimable by the survivor
+    cluster.alloc(1, dev, EXTENT_SIZE).unwrap();
+    cluster.alloc(1, dev, EXTENT_SIZE).unwrap();
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn crashed_hosts_stale_p2p_grants_do_not_survive_release() {
+    let (mut cluster, dev) = cluster(2, 1);
+    // host 0's SSD shares an allocation with a CXL accelerator (P2P)
+    let accel = cluster.attach_cxl_device(0).unwrap();
+    let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
+    let shared = cluster.share(0, dev, accel, a.mmid).unwrap();
+    assert!(cluster.fm().expander().sat().check(accel, shared.dpa, 64, true));
+
+    cluster.crash_host(0).unwrap();
+    assert!(
+        !cluster.fm().expander().sat().check(accel, shared.dpa, 64, false),
+        "release_host revoked the stale grant"
+    );
+
+    // host 1 re-leases the same media; the accelerator has no access
+    // until host 1 explicitly grants it
+    let b = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
+    assert_eq!(b.dpa, a.dpa, "first-fit re-leases the reclaimed extent");
+    assert!(!cluster.fm().expander().sat().check(accel, b.dpa, 64, false));
+    let reshared = cluster.share(1, dev, accel, b.mmid).unwrap();
+    assert_eq!(reshared.dpa, b.dpa);
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn mmids_are_fabric_global_and_isolated() {
+    let (mut cluster, dev) = cluster(3, 2);
+    let mut all = Vec::new();
+    for slot in 0..3 {
+        for _ in 0..4 {
+            all.push((slot, cluster.alloc(slot, dev, PAGE_SIZE).unwrap().mmid));
+        }
+    }
+    // no two hosts ever mint the same mmid
+    let mut ids: Vec<_> = all.iter().map(|&(_, m)| m).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), all.len(), "fabric-global mmids never collide");
+    // no host can free or share any other host's mmid
+    for &(owner, mmid) in &all {
+        for slot in 0..3 {
+            if slot == owner {
+                continue;
+            }
+            assert!(
+                matches!(cluster.free(slot, dev, mmid), Err(Error::NotOwner { .. })),
+                "slot {slot} must not free slot {owner}'s {mmid:?}"
+            );
+            assert!(
+                matches!(cluster.share(slot, dev, dev, mmid), Err(Error::NotOwner { .. })),
+                "slot {slot} must not share slot {owner}'s {mmid:?}"
+            );
+        }
+    }
+    // owners can
+    for (owner, mmid) in all {
+        cluster.free(owner, dev, mmid).unwrap();
+    }
+    assert_eq!(cluster.available(), 2 * GIB);
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn shared_expander_failure_hits_every_host_and_recovers() {
+    let (mut cluster, dev) = cluster(2, 1);
+    let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
+    let b = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
+    let mut fd = FailureDomain::new(FailurePolicy::WriteThroughShadow);
+    fd.register_critical(a.mmid);
+
+    let states = fd.fail_cluster(&cluster);
+    assert_eq!(states[&a.mmid], ServingState::HostShadow, "critical spills to host 0's DRAM");
+    assert_eq!(states[&b.mmid], ServingState::Unavailable);
+    assert!(cluster.alloc(0, dev, PAGE_SIZE).is_err(), "outage blocks host 0");
+    assert!(cluster.alloc(1, dev, PAGE_SIZE).is_err(), "outage blocks host 1");
+
+    let restored = fd.recover_cluster(&cluster, |mmid| {
+        assert_eq!(mmid, a.mmid);
+        Ok(a.size)
+    });
+    assert_eq!(restored.unwrap(), PAGE_SIZE);
+    assert!(cluster.alloc(0, dev, PAGE_SIZE).is_ok());
+    assert!(cluster.alloc(1, dev, PAGE_SIZE).is_ok());
+    cluster.check_invariants().unwrap();
+}

@@ -31,15 +31,11 @@ fn l2p_table_lives_in_expander_and_serves_lookups() {
     for lpa in (0..seg_entries).step_by(3) {
         table.update(lpa, (lpa as u32) * 7 + 1);
     }
-    table
-        .flush_to_lmb(sys.fm_mut().expander_mut(), alloc.dpa, 0, seg_entries)
-        .unwrap();
+    table.flush_to_fabric(sys.fabric_ref(), alloc.dpa, 0, seg_entries).unwrap();
 
     // A second FTL instance (simulating reboot) reloads from LMB.
     let mut reloaded = L2pTable::new(seg_entries);
-    reloaded
-        .load_from_lmb(sys.fm().expander(), alloc.dpa, 0, seg_entries)
-        .unwrap();
+    reloaded.load_from_fabric(sys.fabric_ref(), alloc.dpa, 0, seg_entries).unwrap();
     for lpa in 0..seg_entries {
         let want = if lpa % 3 == 0 { (lpa as u32) * 7 + 1 } else { UNMAPPED };
         assert_eq!(reloaded.snapshot(lpa, 1)[0], want, "lpa {lpa}");
@@ -157,12 +153,12 @@ fn expander_failure_and_recovery() {
     let a = sys.alloc(dev, 4096).unwrap();
     sys.write_alloc(a.mmid, 0, b"survives?").unwrap();
 
-    sys.fm_mut().expander_mut().set_failed(true);
+    sys.fabric_ref().set_expander_failed(true);
     assert!(sys.alloc(dev, 4096).is_err(), "no alloc during outage");
     let mut buf = [0u8; 9];
     assert!(sys.read_alloc(a.mmid, 0, &mut buf).is_err(), "no access during outage");
 
-    sys.fm_mut().expander_mut().set_failed(false);
+    sys.fabric_ref().set_expander_failed(false);
     sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
     assert_eq!(&buf, b"survives?", "DRAM contents modeled as retained");
     sys.alloc(dev, 4096).unwrap();

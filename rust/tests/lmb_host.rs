@@ -4,18 +4,18 @@
 //! across extent release (the `ExtentId` refactor's contract).
 
 use lmb::cxl::expander::{Expander, ExpanderConfig};
-use lmb::cxl::fm::FabricManager;
+use lmb::cxl::fm::{FabricManager, FabricRef};
 use lmb::cxl::switch::PbrSwitch;
 use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
 use lmb::lmb::LmbHost;
 use lmb::prelude::*;
 
 fn host_gib(gib: u64) -> LmbHost {
-    let fm = FabricManager::new(
+    let fabric = FabricRef::new(FabricManager::new(
         PbrSwitch::new(16),
         Expander::new(ExpanderConfig { dram_capacity: gib * GIB, ..Default::default() }),
-    );
-    LmbHost::bind(fm, GIB).unwrap()
+    ));
+    LmbHost::bind(fabric, GIB).unwrap()
 }
 
 #[test]

@@ -88,6 +88,116 @@ fn random_api_interleavings_preserve_invariants() {
     );
 }
 
+/// Multi-host interleavings: ≥3 hosts share one expander through a
+/// `FabricRef`d FM; random alloc/free/share/crash scripts preserve
+/// * the FM + every module's invariants (checked after every step),
+/// * the cluster-level ones (global mmid uniqueness, exact per-host
+///   lease accounting), and
+/// * the cross-host isolation rule: a host can never free or share a
+///   sibling's mmid (`NotOwner` through the cluster router,
+///   `UnknownMmId` straight at the module).
+#[test]
+fn multi_host_interleavings_preserve_invariants_and_isolation() {
+    use lmb::cxl::types::Bdf;
+    prop::check(
+        "cluster api interleaving",
+        24,
+        |rng| {
+            // (op, host-selector, size-pages) triples
+            prop::vec_of(rng, 60, |r| (r.next_below(6), r.next_below(8), r.next_below(32) + 1))
+        },
+        |script: &Vec<(u64, u64, u64)>| {
+            let mut cluster = Cluster::builder()
+                .hosts(3)
+                .expander_gib(2)
+                .host_dram_gib(1)
+                .build()
+                .unwrap();
+            let dev_a = Bdf::new(1, 0, 0);
+            let dev_b = Bdf::new(2, 0, 0);
+            for slot in 0..3 {
+                let host = cluster.host_mut(slot).unwrap();
+                host.attach_pcie(dev_a);
+                host.attach_pcie(dev_b);
+            }
+            // live[slot] is non-empty only while slot's host is alive
+            let mut live: Vec<Vec<MmId>> = vec![Vec::new(); 3];
+            let mut rng = Pcg64::new(0xc1a5e);
+            for &(op, hsel, pages) in script {
+                let slot = (hsel % 3) as usize;
+                let alive = cluster.host(slot).is_ok();
+                let pages = pages.max(1); // shrinking may zero sizes
+                match op {
+                    0 if alive => {
+                        if let Ok(a) = cluster.alloc(slot, dev_a, pages * PAGE_SIZE) {
+                            live[slot].push(a.mmid);
+                        }
+                    }
+                    1 if alive && !live[slot].is_empty() => {
+                        let i = rng.next_below(live[slot].len() as u64) as usize;
+                        let mmid = live[slot].swap_remove(i);
+                        cluster.free(slot, dev_a, mmid).unwrap();
+                    }
+                    2 if alive && !live[slot].is_empty() => {
+                        // owner-authorised intra-host share; repeats are
+                        // idempotent by design
+                        let i = rng.next_below(live[slot].len() as u64) as usize;
+                        cluster.share(slot, dev_a, dev_b, live[slot][i]).unwrap();
+                    }
+                    3 if alive => {
+                        // isolation: freeing a sibling's mmid must fail
+                        let victim = (slot + 1 + (hsel as usize % 2)) % 3;
+                        if victim != slot {
+                            if let Some(&foreign) = live[victim].first() {
+                                let denied = cluster.free(slot, dev_a, foreign);
+                                if !matches!(denied, Err(Error::NotOwner { .. })) {
+                                    return false;
+                                }
+                                let raw = cluster.host_mut(slot).unwrap().free(dev_a, foreign);
+                                if !matches!(raw, Err(Error::UnknownMmId(_))) {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    4 if alive => {
+                        // isolation: sharing a sibling's mmid must fail
+                        let victim = (slot + 1) % 3;
+                        if let Some(&foreign) = live[victim].last() {
+                            let denied = cluster.share(slot, dev_a, dev_b, foreign);
+                            if !matches!(denied, Err(Error::NotOwner { .. })) {
+                                return false;
+                            }
+                        }
+                    }
+                    5 if alive && cluster.alive_hosts() > 2 => {
+                        // crash: leases reclaimed, siblings untouched
+                        cluster.crash_host(slot).unwrap();
+                        live[slot].clear();
+                    }
+                    _ => {}
+                }
+                if cluster.check_invariants().is_err() {
+                    return false;
+                }
+            }
+            // teardown: survivors free everything; since crashed hosts
+            // were reclaimed at crash time, the whole pool returns
+            for slot in 0..3 {
+                if cluster.host(slot).is_err() {
+                    continue;
+                }
+                for mmid in std::mem::take(&mut live[slot]) {
+                    if cluster.free(slot, dev_a, mmid).is_err() {
+                        return false;
+                    }
+                }
+            }
+            cluster.check_invariants().is_ok() && cluster.available() == 2 * GIB
+        },
+    );
+}
+
 /// Isolation: no sequence of allocations ever hands two devices
 /// overlapping DPA ranges (unless explicitly shared).
 #[test]
