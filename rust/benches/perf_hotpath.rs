@@ -1,23 +1,62 @@
-//! PERF — the L3 hot path: batched data-plane execution.
+//! PERF — the L3 hot paths.
 //!
-//! Measures simulated-IOs/second through (a) the native mirror and
-//! (b) the AOT XLA executable via PJRT, plus batch construction alone,
-//! isolating dispatch overhead. DESIGN.md §Perf target: >= 10 M
-//! simulated IOs/s end-to-end so the simulator never bottlenecks a
-//! <= 3.5 M IOPS device model.
+//! Part 1 measures the batched data-plane execution: simulated-IOs/s
+//! through (a) the native mirror and (b) the AOT XLA executable via
+//! PJRT, plus batch construction alone, isolating dispatch overhead.
+//! DESIGN.md §Perf target: >= 10 M simulated IOs/s end-to-end so the
+//! simulator never bottlenecks a <= 3.5 M IOPS device model.
+//!
+//! Part 2 measures the shared-fabric per-access lookups at pool scale
+//! (hundreds of HDM decoder windows and SAT grants behind one
+//! expander): the indexed fast paths — sorted decoder table + one-entry
+//! TLB, binary-searched SAT — against the old linear scans preserved in
+//! `lmb::testing::oracle`. The indexed paths must win by >= 5x at that
+//! scale, asserted, not eyeballed.
+//!
+//! Every measurement is also dumped to `BENCH_hotpath.json` at the repo
+//! root (name, mean/min/p50 ns, items/s) so the perf trajectory is
+//! machine-readable PR-over-PR. `LMB_BENCH_ITERS` trims iteration
+//! counts for the CI smoke run.
+
+use std::path::Path;
 
 use lmb::coordinator::variant_for;
+use lmb::cxl::expander::{Expander, ExpanderConfig};
 use lmb::cxl::fabric::Fabric;
-use lmb::cxl::types::GIB;
+use lmb::cxl::sat::{SatPerm, SatTable};
+use lmb::cxl::types::{Dpa, Hpa, Range, Spid, GIB, MIB};
 use lmb::pcie::link::PcieGen;
 use lmb::runtime::{Artifacts, BatchBuilder, NativeModel};
+use lmb::sim::rng::Pcg64;
 use lmb::ssd::controller::Controller;
 use lmb::ssd::spec::SsdSpec;
 use lmb::ssd::IndexPlacement;
-use lmb::testing::bench;
+use lmb::testing::bench::{self, Measurement};
+use lmb::testing::oracle::{LinearDecoders, LinearSat};
 use lmb::workload::fio::{FioJob, IoPattern};
 
+/// Pool-scale decoder count (acceptance floor: >= 64).
+const DECODERS: u64 = 256;
+/// Pool-scale SAT population (acceptance floor: >= 256 grants).
+const SAT_SPIDS: u16 = 4;
+const GRANTS_PER_SPID: u64 = 256;
+/// Lookups per measured iteration.
+const LOOKUPS: usize = 8192;
+
 fn main() {
+    let mut rows: Vec<(Measurement, Option<u64>)> = Vec::new();
+    let iters = bench::iters(200);
+
+    data_plane(&mut rows, iters);
+    translation_and_sat(&mut rows, iters);
+
+    let json_path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json"));
+    bench::write_json(json_path, &rows).expect("write BENCH_hotpath.json");
+    println!("\nwrote {} records to {}", rows.len(), json_path.display());
+    println!("\nPERF OK");
+}
+
+fn data_plane(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
     let fabric = Fabric::default();
     let spec = SsdSpec::gen4();
     let ctl = Controller::new(spec.clone(), IndexPlacement::LmbCxl, fabric);
@@ -29,22 +68,25 @@ fn main() {
 
     // batch construction only
     let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
-    let m = bench::measure("batch build (rng + fill, reused buffers)", 5, 200, || {
+    let m = bench::measure("batch build (rng + fill, reused buffers)", 5, iters, || {
         let _ = builder.next_batch();
     });
     bench::report(&m, Some(batch as u64));
+    let m_build = m.clone();
+    rows.push((m, Some(batch as u64)));
 
     // native model
     let native = NativeModel::new(widths);
     let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
     let mut scratch = lmb::runtime::native::NativeScratch::new(batch);
-    let m_native = bench::measure("native model (build + run, scratch reuse)", 5, 200, || {
+    let m_native = bench::measure("native model (build + run, scratch reuse)", 5, iters, || {
         let inputs = builder.next_batch();
         native.run_with_scratch(inputs, &mut scratch).unwrap();
         std::hint::black_box(&scratch.latency);
     });
     bench::report(&m_native, Some(batch as u64));
     let native_mios = batch as f64 / m_native.mean_ns * 1e3;
+    rows.push((m_native.clone(), Some(batch as u64)));
 
     // XLA model (if artifacts built)
     let dir = Artifacts::default_dir();
@@ -52,23 +94,126 @@ fn main() {
         let artifacts = Artifacts::load(&dir).unwrap();
         let model = artifacts.get(name).unwrap();
         let mut builder = BatchBuilder::new(&ctl, &job, rate, batch, 1);
-        let m_xla = bench::measure("xla-pjrt model (build + dispatch + run)", 5, 200, || {
+        let m_xla = bench::measure("xla-pjrt model (build + dispatch + run)", 5, iters, || {
             let inputs = builder.next_batch();
             let out = model.run(inputs).unwrap();
             std::hint::black_box(&out.latency);
         });
         bench::report(&m_xla, Some(batch as u64));
         let xla_mios = batch as f64 / m_xla.mean_ns * 1e3;
+        rows.push((m_xla.clone(), Some(batch as u64)));
         println!(
-            "\nsimulated IOs/s: native {:.1} M/s, xla {:.1} M/s (dispatch overhead {:.0}us/batch)",
-            native_mios,
-            xla_mios,
-            (m_xla.mean_ns - m.mean_ns) / 1e3
+            "\nsimulated IOs/s: native {native_mios:.1} M/s, xla {xla_mios:.1} M/s \
+             (dispatch overhead {:.0}us/batch)",
+            (m_xla.mean_ns - m_build.mean_ns) / 1e3
         );
         assert!(xla_mios > 3.5, "XLA path must outrun the fastest modeled device");
     } else {
         println!("(artifacts not built; XLA row skipped — run `make artifacts`)");
     }
     assert!(native_mios > 10.0, "native path must exceed 10M IOs/s, got {native_mios}");
-    println!("\nPERF OK");
+}
+
+fn translation_and_sat(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
+    println!("\n## PERF — translation / SAT at pool scale ({DECODERS} decoders)\n");
+
+    // an expander carrying DECODERS disjoint 1 MiB HDM windows (2 MiB
+    // HPA stride) — the post-sharding shape where many hosts' extents
+    // sit behind one decoder table
+    let cfg = ExpanderConfig { dram_capacity: GIB, ..Default::default() };
+    let mut exp = Expander::new(cfg);
+    let mut lin = LinearDecoders::new();
+    let hpa_base = 1u64 << 40;
+    for i in 0..DECODERS {
+        let window = Range::new(hpa_base + i * 2 * MIB, MIB);
+        let dpa = Dpa(i * MIB);
+        exp.add_decoder(window, dpa).unwrap();
+        assert!(lin.add(window, dpa.0));
+    }
+    exp.check_invariants().unwrap();
+
+    // uniform-random lookups across every window: the worst case for
+    // the one-entry TLB, so the measured win is the binary search alone
+    let mut rng = Pcg64::new(0xdec0de);
+    let lookups: Vec<Hpa> = (0..LOOKUPS)
+        .map(|_| Hpa(hpa_base + rng.next_below(DECODERS) * 2 * MIB + rng.next_below(MIB)))
+        .collect();
+
+    let m_idx = bench::measure("hpa decode, indexed + TLB (rand)", 3, iters, || {
+        for &h in &lookups {
+            std::hint::black_box(exp.decode_hpa(h).unwrap());
+        }
+    });
+    bench::report(&m_idx, Some(LOOKUPS as u64));
+    let m_lin = bench::measure("hpa decode, linear oracle (rand)", 3, iters, || {
+        for &h in &lookups {
+            std::hint::black_box(lin.decode(h).unwrap());
+        }
+    });
+    bench::report(&m_lin, Some(LOOKUPS as u64));
+
+    // sequential striding within one window — the TLB's home turf
+    let seq: Vec<Hpa> = (0..LOOKUPS as u64).map(|i| Hpa(hpa_base + (i * 64) % MIB)).collect();
+    let m_seq = bench::measure("hpa decode, indexed + TLB (seq)", 3, iters, || {
+        for &h in &seq {
+            std::hint::black_box(exp.decode_hpa(h).unwrap());
+        }
+    });
+    bench::report(&m_seq, Some(LOOKUPS as u64));
+    let (hits, misses) = exp.tlb_stats();
+    println!("  decoder TLB: {hits} hits / {misses} misses");
+
+    let speedup = m_lin.mean_ns / m_idx.mean_ns;
+    println!("  indexed translation beats linear scan by {speedup:.1}x");
+    rows.push((m_idx, Some(LOOKUPS as u64)));
+    rows.push((m_lin, Some(LOOKUPS as u64)));
+    rows.push((m_seq, Some(LOOKUPS as u64)));
+    assert!(
+        speedup >= 5.0,
+        "indexed decode must beat the linear scan by >= 5x, got {speedup:.1}x"
+    );
+
+    // SAT: SAT_SPIDS requesters x GRANTS_PER_SPID disjoint 1 MiB grants
+    let total_grants = u64::from(SAT_SPIDS) * GRANTS_PER_SPID;
+    println!("\n## PERF — SAT check at pool scale ({total_grants} grants)\n");
+    let mut sat = SatTable::new(total_grants as usize + 16);
+    let mut lsat = LinearSat::new();
+    for s in 0..SAT_SPIDS {
+        for g in 0..GRANTS_PER_SPID {
+            let r = Range::new(g * 2 * MIB, MIB);
+            sat.grant(Spid(s), r, SatPerm::ReadWrite).unwrap();
+            assert!(lsat.grant(Spid(s), r, SatPerm::ReadWrite));
+        }
+    }
+    sat.check_invariants().unwrap();
+
+    let probes: Vec<(Spid, Dpa)> = (0..LOOKUPS)
+        .map(|_| {
+            let s = Spid(rng.next_below(u64::from(SAT_SPIDS)) as u16);
+            let d = Dpa(rng.next_below(GRANTS_PER_SPID) * 2 * MIB + rng.next_below(MIB - 64));
+            (s, d)
+        })
+        .collect();
+
+    let m_sat_idx = bench::measure("sat check, binary search", 3, iters, || {
+        for &(s, d) in &probes {
+            std::hint::black_box(sat.check(s, d, 64, true));
+        }
+    });
+    bench::report(&m_sat_idx, Some(LOOKUPS as u64));
+    let m_sat_lin = bench::measure("sat check, linear oracle", 3, iters, || {
+        for &(s, d) in &probes {
+            std::hint::black_box(lsat.check(s, d, 64, true));
+        }
+    });
+    bench::report(&m_sat_lin, Some(LOOKUPS as u64));
+
+    let speedup = m_sat_lin.mean_ns / m_sat_idx.mean_ns;
+    println!("  indexed SAT check beats linear scan by {speedup:.1}x");
+    rows.push((m_sat_idx, Some(LOOKUPS as u64)));
+    rows.push((m_sat_lin, Some(LOOKUPS as u64)));
+    assert!(
+        speedup >= 5.0,
+        "indexed SAT check must beat the linear scan by >= 5x, got {speedup:.1}x"
+    );
 }

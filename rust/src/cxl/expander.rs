@@ -10,11 +10,12 @@
 //! end, not just timed. Storage is a sparse 4 KiB page map, so a
 //! simulated multi-TiB expander costs only what is actually touched.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 
 use crate::cxl::packet::{CxlMemReq, MemAddr, MemOp};
 use crate::cxl::sat::{SatPerm, SatTable};
-use crate::cxl::types::{Dpa, DmpId, Hpa, MediaType, Range, Requester, Spid, GIB, PAGE_SIZE};
+use crate::cxl::types::{Dpa, DmpId, Dpid, Hpa, MediaType, Range, Requester, Spid, GIB, PAGE_SIZE};
 use crate::error::{Error, Result};
 use crate::sim::time::SimTime;
 
@@ -80,13 +81,29 @@ impl Default for ExpanderConfig {
 #[derive(Debug)]
 pub struct Expander {
     cfg: ExpanderConfig,
+    /// DMPs, sorted by DPA base and non-overlapping — `dmp_for` binary
+    /// searches them (real expanders decode partitions with fixed
+    /// segment registers, not a table walk).
     dmps: Vec<Dmp>,
+    /// HDM decoders, kept sorted by HPA window base and non-overlapping
+    /// (enforced at insert time), so `decode_hpa` is a binary search
+    /// instead of the old per-access linear scan.
     decoders: Vec<HdmDecoder>,
     sat: SatTable,
     /// Sparse functional backing store: DPA page index → page bytes.
     pages: HashMap<u64, Box<[u8]>>,
     /// Whole-device failure flag (§1 challenge; see `lmb::failure`).
     failed: bool,
+    /// The GFD's own DPID, set at bring-up ([`Expander::set_gfd_dpid`]);
+    /// reported in [`Error::SatViolation`] so the error names the real
+    /// P2P destination, not a placeholder.
+    gfd_dpid: Dpid,
+    /// One-entry last-hit translation cache (device-TLB analogue):
+    /// consecutive accesses inside one HDM window skip the decoder
+    /// search entirely. Invalidated whenever a decoder is removed.
+    tlb: Cell<Option<HdmDecoder>>,
+    tlb_hits: Cell<u64>,
+    tlb_misses: Cell<u64>,
     /// Accesses served (ops, bytes) — used by contention accounting.
     pub served_ops: u64,
     pub served_bytes: u64,
@@ -116,6 +133,10 @@ impl Expander {
             sat,
             pages: HashMap::new(),
             failed: false,
+            gfd_dpid: Dpid(0),
+            tlb: Cell::new(None),
+            tlb_hits: Cell::new(0),
+            tlb_misses: Cell::new(0),
             served_ops: 0,
             served_bytes: 0,
         }
@@ -142,9 +163,14 @@ impl Expander {
         &mut self.sat
     }
 
-    /// Program an HDM decoder (FM/host setup path).
+    /// Program an HDM decoder (FM/host setup path). The decoder table is
+    /// kept sorted by window base; because live windows are disjoint,
+    /// only the two neighbours of the insertion point can overlap a new
+    /// window, so the overlap check is O(log n) too.
     pub fn add_decoder(&mut self, hpa_window: Range, dpa_base: Dpa) -> Result<()> {
-        if self.decoders.iter().any(|d| d.hpa_window.overlaps(&hpa_window)) {
+        let idx = self.decoders.partition_point(|d| d.hpa_window.base < hpa_window.base);
+        let overlaps_at = |i: usize| self.decoders[i].hpa_window.overlaps(&hpa_window);
+        if (idx > 0 && overlaps_at(idx - 1)) || (idx < self.decoders.len() && overlaps_at(idx)) {
             return Err(Error::FabricManager("overlapping HDM decoder window".into()));
         }
         if !self.dpa_valid(dpa_base, hpa_window.len) {
@@ -153,22 +179,23 @@ impl Expander {
                 hpa_window.len
             )));
         }
-        self.decoders.push(HdmDecoder { hpa_window, dpa_base });
+        self.decoders.insert(idx, HdmDecoder { hpa_window, dpa_base });
         Ok(())
     }
 
     fn dpa_valid(&self, dpa: Dpa, len: u64) -> bool {
-        self.dmps.iter().any(|d| d.range.contains_span(dpa.0, len.max(1)))
+        self.dmp_lookup(dpa, len).is_some()
     }
 
     /// Remove the HDM decoder whose window starts at `hpa_base` (used by
     /// the LMB module when an extent is released back to the FM).
     pub fn remove_decoder(&mut self, hpa_base: u64) -> Result<()> {
-        let before = self.decoders.len();
-        self.decoders.retain(|d| d.hpa_window.base != hpa_base);
-        if self.decoders.len() == before {
+        let idx = self.decoders.partition_point(|d| d.hpa_window.base < hpa_base);
+        if idx >= self.decoders.len() || self.decoders[idx].hpa_window.base != hpa_base {
             return Err(Error::DecodeFault(format!("no decoder at {hpa_base:#x}")));
         }
+        self.decoders.remove(idx);
+        self.tlb.set(None);
         Ok(())
     }
 
@@ -179,23 +206,63 @@ impl Expander {
     pub fn remove_decoders_overlapping_dpa(&mut self, range: Range) -> usize {
         let before = self.decoders.len();
         self.decoders.retain(|d| !Range::new(d.dpa_base.0, d.hpa_window.len).overlaps(&range));
+        self.tlb.set(None);
         before - self.decoders.len()
     }
 
-    /// Translate a host HPA to a DPA via the HDM decoders.
+    /// Translate a host HPA to a DPA via the HDM decoders: a one-entry
+    /// last-hit cache (device-TLB analogue) in front of a binary search
+    /// over the sorted decoder table.
     pub fn decode_hpa(&self, hpa: Hpa) -> Result<Dpa> {
-        self.decoders
-            .iter()
-            .find(|d| d.hpa_window.contains(hpa.0))
-            .map(|d| Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)))
-            .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))
+        if let Some(d) = self.tlb.get() {
+            if d.hpa_window.contains(hpa.0) {
+                self.tlb_hits.set(self.tlb_hits.get() + 1);
+                return Ok(Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)));
+            }
+        }
+        self.tlb_misses.set(self.tlb_misses.get() + 1);
+        // windows are sorted and disjoint: the only candidate is the
+        // last window whose base is <= the address
+        let idx = self.decoders.partition_point(|d| d.hpa_window.base <= hpa.0);
+        let d = idx
+            .checked_sub(1)
+            .map(|i| self.decoders[i])
+            .filter(|d| d.hpa_window.contains(hpa.0))
+            .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))?;
+        self.tlb.set(Some(d));
+        Ok(Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)))
+    }
+
+    /// Translation-cache counters: `(hits, misses)` since construction.
+    pub fn tlb_stats(&self) -> (u64, u64) {
+        (self.tlb_hits.get(), self.tlb_misses.get())
+    }
+
+    /// Binary search the sorted, disjoint DMP table for the partition
+    /// wholly containing `[dpa, dpa+len)`.
+    fn dmp_lookup(&self, dpa: Dpa, len: u64) -> Option<&Dmp> {
+        let idx = self.dmps.partition_point(|d| d.range.base <= dpa.0);
+        idx.checked_sub(1)
+            .map(|i| &self.dmps[i])
+            .filter(|d| d.range.contains_span(dpa.0, len.max(1)))
     }
 
     fn dmp_for(&self, dpa: Dpa, len: u64) -> Result<&Dmp> {
-        self.dmps
-            .iter()
-            .find(|d| d.range.contains_span(dpa.0, len.max(1)))
+        self.dmp_lookup(dpa, len)
             .ok_or_else(|| Error::DecodeFault(format!("{dpa:?} outside media")))
+    }
+
+    /// Record the GFD's DPID at bring-up (called by
+    /// [`FabricManager::attach_gfd`](crate::cxl::fm::FabricManager::attach_gfd))
+    /// so SAT violations can name the real P2P destination.
+    pub fn set_gfd_dpid(&mut self, dpid: Dpid) {
+        self.gfd_dpid = dpid;
+    }
+
+    /// The GFD DPID reported in access-control errors (`Dpid(0)` before
+    /// bring-up).
+    pub fn gfd_dpid(&self) -> Dpid {
+        self.gfd_dpid
     }
 
     /// Fail / recover the whole expander (failure-injection hooks).
@@ -239,7 +306,7 @@ impl Expander {
         if let Requester::CxlDevice(spid) = req.requester {
             let write = req.op == MemOp::MemWr;
             if !self.sat.check(spid, dpa, req.len as u64, write) {
-                return Err(Error::SatViolation { spid, dpid: crate::cxl::types::Dpid(0) });
+                return Err(Error::SatViolation { spid, dpid: self.gfd_dpid });
             }
         }
         self.served_ops += 1;
@@ -310,6 +377,34 @@ impl Expander {
     /// (media reclaim; see [`SatTable::revoke_overlapping`]).
     pub fn sat_revoke_overlapping(&mut self, range: Range) -> usize {
         self.sat.revoke_overlapping(range)
+    }
+
+    /// Indexing invariants the fast paths rely on: decoder and DMP
+    /// tables sorted by base and disjoint, the cached TLB entry (if any)
+    /// present in the decoder table, and the SAT's own sortedness.
+    pub fn check_invariants(&self) -> Result<()> {
+        for w in self.decoders.windows(2) {
+            if w[1].hpa_window.base < w[0].hpa_window.end()
+                || w[1].hpa_window.base < w[0].hpa_window.base
+            {
+                return Err(Error::FabricManager("decoder table unsorted or overlapping".into()));
+            }
+        }
+        for w in self.dmps.windows(2) {
+            if w[1].range.base < w[0].range.end() || w[1].range.base < w[0].range.base {
+                return Err(Error::FabricManager("DMP table unsorted or overlapping".into()));
+            }
+        }
+        if let Some(t) = self.tlb.get() {
+            let cached_live = self
+                .decoders
+                .iter()
+                .any(|d| d.hpa_window == t.hpa_window && d.dpa_base == t.dpa_base);
+            if !cached_live {
+                return Err(Error::FabricManager("stale decoder TLB entry".into()));
+            }
+        }
+        self.sat.check_invariants()
     }
 }
 
@@ -422,5 +517,56 @@ mod tests {
         let mut e = expander();
         let req = CxlMemReq::read(MemAddr::Dpa(Dpa(2 * GIB)), 64, Requester::Host(Spid(0)));
         assert!(matches!(e.access(&req), Err(Error::DecodeFault(_))));
+    }
+
+    #[test]
+    fn out_of_order_decoder_inserts_keep_table_sorted() {
+        let mut e = expander();
+        // insert in descending / interleaved base order
+        e.add_decoder(Range::new(0x9000, 0x1000), Dpa(0x3000)).unwrap();
+        e.add_decoder(Range::new(0x1000, 0x1000), Dpa(0x1000)).unwrap();
+        e.add_decoder(Range::new(0x5000, 0x1000), Dpa(0x2000)).unwrap();
+        e.check_invariants().unwrap();
+        assert_eq!(e.decode_hpa(Hpa(0x1010)).unwrap(), Dpa(0x1010));
+        assert_eq!(e.decode_hpa(Hpa(0x5fff)).unwrap(), Dpa(0x2fff));
+        assert_eq!(e.decode_hpa(Hpa(0x9000)).unwrap(), Dpa(0x3000));
+        assert!(e.decode_hpa(Hpa(0x2000)).is_err(), "gap between windows");
+        // overlap detection still works against both neighbours
+        assert!(e.add_decoder(Range::new(0x800, 0x900), Dpa(0)).is_err());
+        assert!(e.add_decoder(Range::new(0x5800, 0x100), Dpa(0)).is_err());
+        assert!(e.add_decoder(Range::new(0x9000, 0x1000), Dpa(0)).is_err(), "same base");
+    }
+
+    #[test]
+    fn translation_cache_hits_and_invalidates() {
+        let mut e = expander();
+        e.add_decoder(Range::new(0x1000, 0x1000), Dpa(0)).unwrap();
+        e.add_decoder(Range::new(0x8000, 0x1000), Dpa(0x4000)).unwrap();
+        assert_eq!(e.tlb_stats(), (0, 0));
+        e.decode_hpa(Hpa(0x1000)).unwrap(); // miss, fills
+        e.decode_hpa(Hpa(0x1040)).unwrap(); // hit
+        e.decode_hpa(Hpa(0x1fff)).unwrap(); // hit
+        assert_eq!(e.tlb_stats(), (2, 1));
+        e.decode_hpa(Hpa(0x8000)).unwrap(); // miss, refills
+        assert_eq!(e.tlb_stats(), (2, 2));
+        e.check_invariants().unwrap();
+        // removal invalidates: the stale window must fault, not hit
+        e.remove_decoder(0x8000).unwrap();
+        assert!(e.decode_hpa(Hpa(0x8000)).is_err());
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sat_violation_reports_real_gfd_dpid() {
+        let mut e = expander();
+        e.set_gfd_dpid(Dpid(7));
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0x40)), 64, Requester::CxlDevice(Spid(3)));
+        match e.access(&req) {
+            Err(Error::SatViolation { spid, dpid }) => {
+                assert_eq!(spid, Spid(3));
+                assert_eq!(dpid, Dpid(7), "error carries the GFD's real DPID");
+            }
+            other => panic!("expected SatViolation, got {other:?}"),
+        }
     }
 }

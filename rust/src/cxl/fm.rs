@@ -50,8 +50,15 @@ pub struct FabricManager {
     expander: Expander,
     /// Free DPA extents (sorted by base; adjacent frees coalesce).
     free: Vec<Range>,
+    /// Running total of `free` — keeps [`FabricManager::available`] O(1)
+    /// (it sits on the `OutOfCapacity` error path and in every invariant
+    /// check, so re-summing the free list there scaled with pool churn).
+    free_bytes: u64,
     /// Live leases keyed by DPA base.
     leases: HashMap<u64, Extent>,
+    /// Running per-host lease totals — keeps [`FabricManager::leased_to`]
+    /// O(1) instead of a scan over every live lease.
+    leased_bytes: HashMap<HostId, u64>,
     hosts: HashMap<HostId, Spid>,
     next_host: u32,
     /// Fabric-global mmid counter (§3.2): handles are unique across
@@ -62,12 +69,15 @@ pub struct FabricManager {
 
 impl FabricManager {
     pub fn new(switch: PbrSwitch, expander: Expander) -> Self {
-        let free = vec![Range::new(0, expander.capacity())];
+        let free_bytes = expander.capacity();
+        let free = vec![Range::new(0, free_bytes)];
         FabricManager {
             switch,
             expander,
             free,
+            free_bytes,
             leases: HashMap::new(),
+            leased_bytes: HashMap::new(),
             hosts: HashMap::new(),
             next_host: 0,
             next_mmid: 1,
@@ -125,6 +135,9 @@ impl FabricManager {
     /// CXL consumers via the Table 2 alloc/share out-params.
     pub fn attach_gfd(&mut self) -> Result<Dpid> {
         let (_port, dpid) = self.switch.attach_gfd()?;
+        // the expander reports this DPID in SAT-violation errors, so a
+        // rejected P2P access names the real GFD port
+        self.expander.set_gfd_dpid(dpid);
         Ok(dpid)
     }
 
@@ -133,14 +146,16 @@ impl FabricManager {
         self.switch.gfd_dpid()
     }
 
-    /// Capacity not currently leased.
+    /// Capacity not currently leased. O(1): a running counter, not a
+    /// free-list walk.
     pub fn available(&self) -> u64 {
-        self.free.iter().map(|r| r.len).sum()
+        self.free_bytes
     }
 
-    /// Capacity currently leased to `host`.
+    /// Capacity currently leased to `host`. O(1): a running per-host
+    /// counter, not a lease-table scan.
     pub fn leased_to(&self, host: HostId) -> u64 {
-        self.leases.values().filter(|e| e.owner == host).map(|e| e.len).sum()
+        self.leased_bytes.get(&host).copied().unwrap_or(0)
     }
 
     /// FM API: lease one 256 MB extent to `host` (§3.2).
@@ -169,6 +184,8 @@ impl FabricManager {
         } else {
             self.free[pos] = Range::new(r.base + len, r.len - len);
         }
+        self.free_bytes -= len;
+        *self.leased_bytes.entry(host).or_insert(0) += len;
         self.leases.insert(ext.dpa.0, ext);
         Ok(ext)
     }
@@ -183,6 +200,13 @@ impl FabricManager {
             None => return Err(Error::FabricManager("unknown extent".into())),
         }
         self.leases.remove(&ext.dpa.0);
+        self.free_bytes += ext.len;
+        if let Some(v) = self.leased_bytes.get_mut(&host) {
+            *v -= ext.len;
+            if *v == 0 {
+                self.leased_bytes.remove(&host);
+            }
+        }
         // insert into the sorted free list and coalesce neighbours
         let mut r = Range::new(ext.dpa.0, ext.len);
         let idx = self.free.partition_point(|f| f.base < r.base);
@@ -241,10 +265,14 @@ impl FabricManager {
         self.leases.len()
     }
 
-    /// Invariant: free list is sorted, non-overlapping, coalesced, and
-    /// free+leased covers exactly the media. Used by property tests.
+    /// Invariant: free list is sorted, non-overlapping, coalesced, the
+    /// running `free_bytes`/`leased_bytes` counters agree with the
+    /// ground-truth tables, free+leased covers exactly the media, and
+    /// the expander's own indexing invariants (sorted decoder/DMP/SAT
+    /// tables) hold. Used by property tests.
     pub fn check_invariants(&self) -> Result<()> {
         let mut prev_end = None;
+        let mut free_sum = 0;
         for r in &self.free {
             if let Some(pe) = prev_end {
                 if r.base < pe {
@@ -255,6 +283,23 @@ impl FabricManager {
                 }
             }
             prev_end = Some(r.end());
+            free_sum += r.len;
+        }
+        if free_sum != self.free_bytes {
+            return Err(Error::FabricManager(format!(
+                "free_bytes drift: counter {} != free list sum {free_sum}",
+                self.free_bytes
+            )));
+        }
+        let mut per_host: HashMap<HostId, u64> = HashMap::new();
+        for e in self.leases.values() {
+            *per_host.entry(e.owner).or_insert(0) += e.len;
+        }
+        if per_host != self.leased_bytes {
+            return Err(Error::FabricManager(format!(
+                "leased_bytes drift: counters {:?} != lease table {per_host:?}",
+                self.leased_bytes
+            )));
         }
         let total: u64 = self.available() + self.leases.values().map(|e| e.len).sum::<u64>();
         if total != self.expander.capacity() {
@@ -263,7 +308,7 @@ impl FabricManager {
                 self.expander.capacity()
             )));
         }
-        Ok(())
+        self.expander.check_invariants()
     }
 }
 
@@ -511,6 +556,45 @@ mod tests {
         assert!(f.expander().sat().check(dev, eb.dpa, 64, true), "sibling grant untouched");
         assert_eq!(f.expander().decode_hpa(crate::cxl::types::Hpa(1 << 40)).unwrap(), eb.dpa);
         let _ = ea;
+    }
+
+    #[test]
+    fn running_counters_track_alloc_release_and_crash() {
+        let mut f = fm(GIB);
+        let (h1, _) = f.bind_host().unwrap();
+        let (h2, _) = f.bind_host().unwrap();
+        let a = f.allocate_extent(h1).unwrap();
+        let b = f.allocate_extent(h2).unwrap();
+        f.allocate_extent(h1).unwrap();
+        assert_eq!(f.available(), GIB - 3 * EXTENT_SIZE);
+        assert_eq!(f.leased_to(h1), 2 * EXTENT_SIZE);
+        assert_eq!(f.leased_to(h2), EXTENT_SIZE);
+        f.check_invariants().unwrap();
+        f.release_extent(h1, a).unwrap();
+        assert_eq!(f.leased_to(h1), EXTENT_SIZE);
+        f.check_invariants().unwrap();
+        f.release_host(h1);
+        assert_eq!(f.leased_to(h1), 0);
+        assert_eq!(f.available(), GIB - EXTENT_SIZE);
+        f.check_invariants().unwrap();
+        f.release_extent(h2, b).unwrap();
+        assert_eq!(f.available(), GIB);
+        assert_eq!(f.leased_to(h2), 0);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn p2p_violation_through_fm_names_real_gfd_dpid() {
+        use crate::cxl::packet::{CxlMemReq, MemAddr};
+        use crate::cxl::types::Requester;
+        let mut f = fm(GIB);
+        let gfd = f.gfd_dpid().unwrap();
+        let dev = f.bind_cxl_device().unwrap();
+        let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0x40)), 64, Requester::CxlDevice(dev));
+        match f.expander_mut().access(&req) {
+            Err(Error::SatViolation { dpid, .. }) => assert_eq!(dpid, gfd),
+            other => panic!("expected SatViolation, got {other:?}"),
+        }
     }
 
     #[test]

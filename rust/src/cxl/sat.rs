@@ -27,9 +27,12 @@ pub struct SatEntry {
 
 /// The SPID Access Table.
 ///
-/// Organised as SPID → sorted list of granted DPA windows. Real GFDs use
-/// a fixed number of segment registers; we model that with a configurable
-/// entry budget so table exhaustion is an observable failure mode.
+/// Organised as SPID → list of granted DPA windows, kept sorted by
+/// window base and non-overlapping (enforced at grant time), so the
+/// per-access [`SatTable::check`] is a binary search rather than a
+/// linear walk of the grant list. Real GFDs use a fixed number of
+/// segment registers; we model that with a configurable entry budget so
+/// table exhaustion is an observable failure mode.
 #[derive(Debug)]
 pub struct SatTable {
     grants: HashMap<Spid, Vec<SatEntry>>,
@@ -62,13 +65,17 @@ impl SatTable {
             )));
         }
         let list = self.grants.entry(spid).or_default();
-        if list.iter().any(|e| e.range.overlaps(&range)) {
+        // sorted + disjoint: only the insertion point's neighbours can
+        // overlap a new window, so the reject check is O(log n)
+        let idx = list.partition_point(|e| e.range.base < range.base);
+        let overlaps_at = |i: usize| list[i].range.overlaps(&range);
+        if (idx > 0 && overlaps_at(idx - 1)) || (idx < list.len() && overlaps_at(idx)) {
             return Err(Error::FabricManager(format!(
                 "overlapping SAT grant for SPID {spid:?} at {:#x}+{:#x}",
                 range.base, range.len
             )));
         }
-        list.push(SatEntry { range, perm });
+        list.insert(idx, SatEntry { range, perm });
         self.entries += 1;
         Ok(())
     }
@@ -79,13 +86,18 @@ impl SatTable {
             .grants
             .get_mut(&spid)
             .ok_or_else(|| Error::FabricManager(format!("no grants for SPID {spid:?}")))?;
-        let before = list.len();
-        list.retain(|e| !(e.range.base == range.base && e.range.len == range.len));
-        if list.len() == before {
+        // entries are disjoint, so at most one can sit at `range.base`
+        let idx = list.partition_point(|e| e.range.base < range.base);
+        let found = idx < list.len() && list[idx].range == range;
+        if !found {
             return Err(Error::FabricManager(format!(
                 "no matching SAT entry for SPID {spid:?} at {:#x}",
                 range.base
             )));
+        }
+        list.remove(idx);
+        if list.is_empty() {
+            self.grants.remove(&spid);
         }
         self.entries -= 1;
         Ok(())
@@ -115,15 +127,42 @@ impl SatTable {
     }
 
     /// Check an access of `len` bytes at `dpa`. Write accesses require
-    /// [`SatPerm::ReadWrite`].
+    /// [`SatPerm::ReadWrite`]. Binary search over the sorted grant list:
+    /// windows are disjoint, so the only candidate is the last entry
+    /// whose base is <= the address.
     pub fn check(&self, spid: Spid, dpa: Dpa, len: u64, write: bool) -> bool {
         let Some(list) = self.grants.get(&spid) else {
             return false;
         };
-        list.iter().any(|e| {
-            e.range.contains_span(dpa.0, len.max(1))
-                && (!write || e.perm == SatPerm::ReadWrite)
-        })
+        let idx = list.partition_point(|e| e.range.base <= dpa.0);
+        let Some(e) = idx.checked_sub(1).map(|i| &list[i]) else {
+            return false;
+        };
+        e.range.contains_span(dpa.0, len.max(1)) && (!write || e.perm == SatPerm::ReadWrite)
+    }
+
+    /// Indexing invariants the binary-search fast path relies on: every
+    /// SPID's grant list sorted by base and disjoint, and the live-entry
+    /// counter exact.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut counted = 0;
+        for (spid, list) in &self.grants {
+            for w in list.windows(2) {
+                if w[1].range.base < w[0].range.end() || w[1].range.base < w[0].range.base {
+                    return Err(Error::FabricManager(format!(
+                        "SAT grants for SPID {spid:?} unsorted or overlapping"
+                    )));
+                }
+            }
+            counted += list.len();
+        }
+        if counted != self.entries {
+            return Err(Error::FabricManager(format!(
+                "SAT entry count drift: counted {counted}, cached {}",
+                self.entries
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -197,6 +236,37 @@ mod tests {
         assert_eq!(t.len(), 1);
         // nothing left to revoke in that window
         assert_eq!(t.revoke_overlapping(Range::new(0x1000, 0x2000)), 0);
+    }
+
+    #[test]
+    fn out_of_order_grants_keep_lists_sorted() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0x8000, 0x1000), SatPerm::ReadWrite).unwrap();
+        t.grant(Spid(1), Range::new(0x1000, 0x1000), SatPerm::ReadOnly).unwrap();
+        t.grant(Spid(1), Range::new(0x4000, 0x1000), SatPerm::ReadWrite).unwrap();
+        t.check_invariants().unwrap();
+        assert!(t.check(Spid(1), Dpa(0x1000), 64, false));
+        assert!(!t.check(Spid(1), Dpa(0x1000), 64, true), "read-only window");
+        assert!(t.check(Spid(1), Dpa(0x4fc0), 64, true));
+        assert!(t.check(Spid(1), Dpa(0x8000), 64, true));
+        assert!(!t.check(Spid(1), Dpa(0x2000), 64, false), "gap between windows");
+        // overlap rejection against both neighbours of the insert point
+        assert!(t.grant(Spid(1), Range::new(0x4800, 0x1000), SatPerm::ReadWrite).is_err());
+        assert!(t.grant(Spid(1), Range::new(0x3800, 0x900), SatPerm::ReadWrite).is_err());
+        t.revoke(Spid(1), Range::new(0x4000, 0x1000)).unwrap();
+        assert!(!t.check(Spid(1), Dpa(0x4000), 64, false));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn revoke_requires_exact_range_match() {
+        let mut t = table();
+        let r = Range::new(0x2000, 0x1000);
+        t.grant(Spid(3), r, SatPerm::ReadWrite).unwrap();
+        assert!(t.revoke(Spid(3), Range::new(0x2000, 0x800)).is_err(), "length mismatch");
+        assert!(t.revoke(Spid(3), Range::new(0x2800, 0x800)).is_err(), "base mismatch");
+        t.revoke(Spid(3), r).unwrap();
+        assert!(t.is_empty());
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub enum Error {
     /// Unknown memory id passed to free/share.
     UnknownMmId(MmId),
 
+    /// A [`Placement`](crate::lmb::allocator::Placement) referenced an
+    /// extent the sub-allocator no longer tracks (stale handle after the
+    /// extent was released to the FM).
+    StalePlacement { extent: u64 },
+
     /// The caller does not own the memory id.
     NotOwner { mmid: MmId },
 
@@ -72,6 +77,9 @@ impl fmt::Display for Error {
                 write!(f, "lmb allocation failed: requested {requested} B ({reason})")
             }
             Error::UnknownMmId(mmid) => write!(f, "unknown memory id {mmid:?}"),
+            Error::StalePlacement { extent } => {
+                write!(f, "stale placement: extent {extent} is no longer leased")
+            }
             Error::NotOwner { mmid } => {
                 write!(f, "memory id {mmid:?} is not owned by the calling device")
             }

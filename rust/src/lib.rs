@@ -37,6 +37,31 @@
 //! containment ([`cluster::Cluster::crash_host`]) and cluster-wide
 //! expander failover ([`lmb::failure::FailureDomain::fail_cluster`]).
 //!
+//! ## Hot-path indexing
+//!
+//! The per-access lookups are all sublinear, mirroring how real CXL
+//! hardware decodes with fixed registers rather than table walks:
+//!
+//! * the expander keeps its HDM decoder and DMP tables **sorted and
+//!   disjoint**, so `decode_hpa`/DMP resolution are binary searches,
+//!   fronted by a **one-entry last-hit translation cache** (a
+//!   device-TLB analogue, hit/miss counters on
+//!   [`cxl::expander::Expander::tlb_stats`]);
+//! * the SAT keeps each SPID's grant list **sorted by window base**, so
+//!   the per-P2P-op [`cxl::sat::SatTable::check`] is a binary search;
+//! * the FM carries running `free_bytes` / per-host `leased_bytes`
+//!   counters (O(1) `available`/`leased_to`), and the module
+//!   sub-allocator caches each extent's **largest free run** so
+//!   placement skips extents that cannot fit without probing their
+//!   free lists;
+//! * the batched host data path ([`lmb::LmbHost::io_session`]) resolves
+//!   an allocation once and streams N ops under a single fabric borrow.
+//!
+//! The old linear scans survive as executable oracles in
+//! [`testing::oracle`]; property tests assert behavioural equivalence
+//! and `benches/perf_hotpath.rs` measures the win (>= 5x at pool scale,
+//! asserted) and dumps `BENCH_hotpath.json` for PR-over-PR tracking.
+//!
 //! ## Quick start
 //!
 //! The control plane is the unified, consumer-generic API on
@@ -85,7 +110,7 @@ pub mod prelude {
     pub use crate::cxl::fm::{FabricManager, FabricRef, HostId};
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
-    pub use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule, LmbRegion};
+    pub use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;
     pub use crate::ssd::spec::SsdSpec;

@@ -7,9 +7,13 @@
 //! structures, never the expander backing store.
 //!
 //! Policy: first-fit over per-extent free lists with coalescing on free.
-//! When an extent drains to fully-free it is reported so the module can
-//! release it to the FM ("When all device memory in a memory block has
-//! been freed, the kernel module releases the area to FM").
+//! Each extent caches its largest free run, so placement skips extents
+//! that cannot fit a request in O(1) instead of probing their free
+//! lists (the old probe-every-extent scan survives as a bench/test
+//! oracle in [`crate::testing::oracle`]). When an extent drains to
+//! fully-free it is reported so the module can release it to the FM
+//! ("When all device memory in a memory block has been freed, the
+//! kernel module releases the area to FM").
 //!
 //! Extents are identified by stable [`ExtentId`]s: releasing one extent
 //! never invalidates placements held in any other extent, so callers keep
@@ -21,6 +25,7 @@ use std::collections::BTreeMap;
 
 use crate::cxl::fm::Extent;
 use crate::cxl::types::{align_up, Dpa, Hpa, Range, PAGE_SIZE};
+use crate::error::{Error, Result};
 
 /// Stable identity of a leased extent within one allocator.
 ///
@@ -38,12 +43,16 @@ pub struct ExtentState {
     /// Free offsets within the extent (sorted, coalesced).
     free: Vec<Range>,
     pub used: u64,
+    /// Cached length of the largest free run. Lets
+    /// [`SubAllocator::alloc`] reject an extent that cannot fit a
+    /// request in O(1) instead of probing its whole free list.
+    largest_free: u64,
 }
 
 impl ExtentState {
     pub fn new(extent: Extent, hpa_base: Hpa) -> Self {
         let free = vec![Range::new(0, extent.len)];
-        ExtentState { extent, hpa_base, free, used: 0 }
+        ExtentState { extent, hpa_base, free, used: 0, largest_free: extent.len }
     }
 
     fn alloc(&mut self, len: u64) -> Option<u64> {
@@ -55,6 +64,11 @@ impl ExtentState {
             self.free[pos] = Range::new(r.base + len, r.len - len);
         }
         self.used += len;
+        // only carving the (unique-length or not) largest run can lower
+        // the cached maximum; smaller runs leave it untouched
+        if r.len == self.largest_free {
+            self.largest_free = self.free.iter().map(|f| f.len).max().unwrap_or(0);
+        }
         Some(r.base)
     }
 
@@ -67,20 +81,25 @@ impl ExtentState {
         }
         if idx > 0 && self.free[idx - 1].end() == r.base {
             let prev = self.free[idx - 1];
-            self.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
+            let merged = Range::new(prev.base, prev.len + r.len);
+            self.free[idx - 1] = merged;
+            r = merged;
         } else {
             self.free.insert(idx, r);
         }
         self.used -= len;
+        // freeing only ever grows or merges runs, so the new run is the
+        // sole candidate for a larger maximum — O(1) maintenance
+        self.largest_free = self.largest_free.max(r.len);
     }
 
     pub fn is_empty(&self) -> bool {
         self.used == 0
     }
 
-    /// Largest free run (fragmentation observability).
+    /// Largest free run (fragmentation observability; cached, O(1)).
     pub fn largest_free(&self) -> u64 {
-        self.free.iter().map(|r| r.len).max().unwrap_or(0)
+        self.largest_free
     }
 }
 
@@ -120,9 +139,15 @@ impl SubAllocator {
     }
 
     /// Try to place `size` bytes (rounded to pages) in any leased extent.
+    /// First-fit in adoption order, but extents whose cached
+    /// `largest_free` cannot fit the request are skipped in O(1) —
+    /// fragmented or full extents no longer cost a free-list probe each.
     pub fn alloc(&mut self, size: u64) -> Option<Placement> {
         let len = align_up(size.max(1), PAGE_SIZE);
         for (&id, st) in self.extents.iter_mut() {
+            if st.largest_free < len {
+                continue;
+            }
             if let Some(off) = st.alloc(len) {
                 return Some(Placement {
                     extent: id,
@@ -136,21 +161,25 @@ impl SubAllocator {
         None
     }
 
-    /// Free a placement; returns `Some(id)` when that extent is now fully
-    /// free (caller should release it to the FM).
-    pub fn free(&mut self, p: Placement) -> Option<ExtentId> {
+    /// Free a placement; returns `Ok(Some(id))` when that extent is now
+    /// fully free (caller should release it to the FM), and
+    /// [`Error::StalePlacement`] when the placement references an extent
+    /// this allocator no longer tracks — a stale handle is a reportable
+    /// error, not an abort.
+    pub fn free(&mut self, p: Placement) -> Result<Option<ExtentId>> {
         let st = self
             .extents
             .get_mut(&p.extent)
-            .expect("placement references a leased extent");
+            .ok_or(Error::StalePlacement { extent: p.extent.0 })?;
         st.free(p.offset, p.len);
-        st.is_empty().then_some(p.extent)
+        Ok(st.is_empty().then_some(p.extent))
     }
 
-    /// Drop a (fully free) extent from tracking, returning it. Every
-    /// other extent keeps its id, so live placements stay valid.
-    pub fn remove_extent(&mut self, id: ExtentId) -> ExtentState {
-        self.extents.remove(&id).expect("extent is leased")
+    /// Drop a (fully free) extent from tracking, returning it — `None`
+    /// if `id` is not (or no longer) tracked. Every other extent keeps
+    /// its id, so live placements stay valid.
+    pub fn remove_extent(&mut self, id: ExtentId) -> Option<ExtentState> {
+        self.extents.remove(&id)
     }
 
     /// Look up one extent's state.
@@ -178,12 +207,14 @@ impl SubAllocator {
     }
 
     /// Invariant check for property tests: free lists sorted, coalesced,
-    /// within bounds, and used+free == extent length.
+    /// within bounds, used+free == extent length, and the cached
+    /// `largest_free` agreeing with the actual free list.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (id, st) in self.extents.iter() {
             let i = id.0;
             let mut prev_end: Option<u64> = None;
             let mut free_total = 0;
+            let mut largest = 0;
             for r in &st.free {
                 if r.end() > st.extent.len {
                     return Err(format!("extent {i}: free range beyond extent"));
@@ -198,11 +229,18 @@ impl SubAllocator {
                 }
                 prev_end = Some(r.end());
                 free_total += r.len;
+                largest = largest.max(r.len);
             }
             if free_total + st.used != st.extent.len {
                 return Err(format!(
                     "extent {i}: leak (free {free_total} + used {} != {})",
                     st.used, st.extent.len
+                ));
+            }
+            if largest != st.largest_free {
+                return Err(format!(
+                    "extent {i}: largest_free drift (cached {}, actual {largest})",
+                    st.largest_free
                 ));
             }
         }
@@ -249,9 +287,9 @@ mod tests {
         let p1 = a.alloc(PAGE_SIZE).unwrap();
         let p2 = a.alloc(PAGE_SIZE).unwrap();
         let p3 = a.alloc(PAGE_SIZE).unwrap();
-        assert_eq!(a.free(p1), None);
-        assert_eq!(a.free(p3), None);
-        assert_eq!(a.free(p2), Some(id), "middle free drains the extent");
+        assert_eq!(a.free(p1).unwrap(), None);
+        assert_eq!(a.free(p3).unwrap(), None);
+        assert_eq!(a.free(p2).unwrap(), Some(id), "middle free drains the extent");
         a.check_invariants().unwrap();
         assert_eq!(a.extent(id).unwrap().largest_free(), EXTENT_SIZE);
         // after coalescing, a full-extent allocation fits again
@@ -283,12 +321,12 @@ mod tests {
         assert_eq!(p0.extent, id0);
         assert_eq!(p1.extent, id1);
         // drain and drop the first extent
-        assert_eq!(a.free(p0), Some(id0));
-        let st = a.remove_extent(id0);
+        assert_eq!(a.free(p0).unwrap(), Some(id0));
+        let st = a.remove_extent(id0).unwrap();
         assert_eq!(st.hpa_base, Hpa(4 * GIB));
         // p1's id still resolves, and freeing through it still works
         assert!(a.extent(p1.extent).is_some());
-        assert_eq!(a.free(p1), Some(id1));
+        assert_eq!(a.free(p1).unwrap(), Some(id1));
         a.check_invariants().unwrap();
         // a newly adopted extent gets a fresh id, never a recycled one
         let id2 = a.adopt(extent(2 * EXTENT_SIZE), Hpa(6 * GIB));
@@ -318,9 +356,48 @@ mod tests {
             } else {
                 let i = rng.next_below(live.len() as u64) as usize;
                 let p = live.swap_remove(i);
-                a.free(p);
+                a.free(p).unwrap();
             }
             a.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn stale_placement_is_an_error_not_an_abort() {
+        let mut a = SubAllocator::new();
+        let id = a.adopt(extent(0), Hpa(4 * GIB));
+        let p = a.alloc(PAGE_SIZE).unwrap();
+        assert_eq!(a.free(p).unwrap(), Some(id), "extent drained");
+        let st = a.remove_extent(id).unwrap();
+        assert_eq!(st.extent.dpa, Dpa(0));
+        // the extent is gone: freeing through the stale handle reports
+        assert!(matches!(a.free(p), Err(Error::StalePlacement { extent }) if extent == id.0));
+        // and a double remove is a None, not a panic
+        assert!(a.remove_extent(id).is_none());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn largest_free_cache_tracks_churn_and_skips_full_extents() {
+        let mut a = SubAllocator::new();
+        let id0 = a.adopt(extent(0), Hpa(4 * GIB));
+        a.adopt(extent(EXTENT_SIZE), Hpa(5 * GIB));
+        // fill extent 0 completely; its cached largest_free must be 0
+        let big = a.alloc(EXTENT_SIZE).unwrap();
+        assert_eq!(big.extent, id0);
+        assert_eq!(a.extent(id0).unwrap().largest_free(), 0);
+        // small allocations skip the full extent and land in extent 1
+        let small = a.alloc(PAGE_SIZE).unwrap();
+        assert_ne!(small.extent, id0);
+        a.check_invariants().unwrap();
+        // carving and returning runs keeps the cache exact (checked
+        // against the real free list by check_invariants)
+        let q = a.alloc(3 * PAGE_SIZE).unwrap();
+        a.free(small).unwrap();
+        a.check_invariants().unwrap();
+        a.free(q).unwrap();
+        a.free(big).unwrap();
+        a.check_invariants().unwrap();
+        assert_eq!(a.extent(id0).unwrap().largest_free(), EXTENT_SIZE);
     }
 }

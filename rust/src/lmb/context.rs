@@ -10,7 +10,7 @@
 //! sharding across hosts means binding several contexts to clones of
 //! one `FabricRef` (see [`crate::cluster::Cluster`]).
 
-use std::cell::Ref;
+use std::cell::{Ref, RefMut};
 
 use crate::cxl::fm::{FabricManager, FabricRef, HostId};
 use crate::cxl::types::{Bdf, Dpa, MmId, Spid};
@@ -142,20 +142,31 @@ impl LmbHost {
 
     /// Batch allocation, all-or-nothing: if any request fails, every
     /// allocation already made by this call is rolled back (freed) and
-    /// the original error is returned.
+    /// the original error is returned. The whole batch — rollback
+    /// included — runs under a single fabric lock instead of
+    /// re-acquiring it per element.
     pub fn alloc_many(
         &mut self,
         consumer: impl Into<Consumer>,
         sizes: &[u64],
     ) -> Result<Vec<LmbAlloc>> {
         let consumer = consumer.into();
+        let mut fm = self.fabric.lock();
         let mut done: Vec<LmbAlloc> = Vec::with_capacity(sizes.len());
         for &size in sizes {
-            match self.alloc(consumer, size) {
+            let res =
+                self.module.alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size);
+            match res {
                 Ok(a) => done.push(a),
                 Err(e) => {
                     for a in done.into_iter().rev() {
-                        let _ = self.free(consumer, a.mmid);
+                        let _ = self.module.free(
+                            &mut fm,
+                            &mut self.iommu,
+                            &mut self.space,
+                            consumer,
+                            a.mmid,
+                        );
                     }
                     return Err(e);
                 }
@@ -218,6 +229,21 @@ impl LmbHost {
         self.fabric.read_dpa(Dpa(a.dpa.0 + offset), out)
     }
 
+    /// Batched data path: resolve `mmid`'s placement once and stream any
+    /// number of reads/writes under a single scoped fabric borrow.
+    ///
+    /// [`LmbHost::write`]/[`LmbHost::read`] re-lock the shared fabric
+    /// and re-resolve the mmid on every call — fine for one-off control
+    /// traffic, linear overhead on the data path. The session borrows
+    /// this host mutably for its lifetime (no other host op can slip in
+    /// underneath) and holds the fabric lock, so drop it before any
+    /// sibling host on the same fabric needs to run.
+    pub fn io_session(&mut self, mmid: MmId) -> Result<IoSession<'_>> {
+        let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
+        let fm = self.fabric.lock();
+        Ok(IoSession { fm, mmid, dpa: a.dpa, size: a.size })
+    }
+
     // ---- lookups / component access ----
 
     /// Look up a live allocation by handle.
@@ -264,6 +290,52 @@ impl LmbHost {
     pub fn check_invariants(&self) -> Result<()> {
         self.module.check_invariants()?;
         self.fabric.check_invariants()
+    }
+}
+
+/// A batched I/O session over one LMB allocation: the placement is
+/// resolved once at [`LmbHost::io_session`] time and every op reuses it
+/// under the one fabric borrow the session holds.
+///
+/// Bounds are still checked per op against the allocation's size; what
+/// the session removes is the per-op mmid lookup and `RefCell`
+/// lock/unlock pair of the unbatched [`LmbHost::write`]/[`LmbHost::read`].
+#[derive(Debug)]
+pub struct IoSession<'h> {
+    fm: RefMut<'h, FabricManager>,
+    mmid: MmId,
+    dpa: Dpa,
+    size: u64,
+}
+
+impl IoSession<'_> {
+    /// The allocation this session streams to.
+    pub fn mmid(&self) -> MmId {
+        self.mmid
+    }
+
+    /// Allocation size in bytes (ops are bounds-checked against it).
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    fn check_bounds(&self, offset: u64, len: u64, what: &str) -> Result<()> {
+        match offset.checked_add(len) {
+            Some(end) if end <= self.size => Ok(()),
+            _ => Err(Error::Config(format!("{what} beyond allocation"))),
+        }
+    }
+
+    /// Functional write at `offset` within the allocation.
+    pub fn write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.check_bounds(offset, data.len() as u64, "write")?;
+        self.fm.expander_mut().write_dpa(Dpa(self.dpa.0 + offset), data)
+    }
+
+    /// Functional read at `offset` within the allocation.
+    pub fn read(&self, offset: u64, out: &mut [u8]) -> Result<()> {
+        self.check_bounds(offset, out.len() as u64, "read")?;
+        self.fm.expander().read_dpa(Dpa(self.dpa.0 + offset), out)
     }
 }
 
@@ -431,6 +503,41 @@ mod tests {
         let region = host.alloc_scoped(dev, PAGE_SIZE).unwrap();
         region.free().unwrap();
         assert_eq!(host.module().live_allocs(), 0);
+    }
+
+    #[test]
+    fn io_session_streams_under_one_borrow() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let a = host.alloc(dev, 4 * PAGE_SIZE).unwrap();
+        {
+            let mut io = host.io_session(a.mmid).unwrap();
+            assert_eq!(io.mmid(), a.mmid);
+            assert_eq!(io.size(), 4 * PAGE_SIZE);
+            // stream many ops without re-locking / re-resolving
+            for i in 0..64u64 {
+                io.write(i * 8, &i.to_le_bytes()).unwrap();
+            }
+            let mut buf = [0u8; 8];
+            io.read(63 * 8, &mut buf).unwrap();
+            assert_eq!(u64::from_le_bytes(buf), 63);
+            // per-op bounds checks still apply
+            assert!(io.write(4 * PAGE_SIZE - 2, b"xxxx").is_err());
+            assert!(io.read(4 * PAGE_SIZE, &mut buf).is_err());
+            assert!(io.write(u64::MAX, b"x").is_err(), "offset overflow caught");
+        }
+        // session dropped: the unbatched path sees the same bytes
+        let mut buf = [0u8; 8];
+        host.read(a.mmid, 0, &mut buf).unwrap();
+        assert_eq!(u64::from_le_bytes(buf), 0);
+        host.free(dev, a.mmid).unwrap();
+    }
+
+    #[test]
+    fn io_session_unknown_mmid_rejected() {
+        let mut host = host_with(GIB);
+        assert!(matches!(host.io_session(MmId(404)), Err(Error::UnknownMmId(_))));
     }
 
     #[test]

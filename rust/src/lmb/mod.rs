@@ -37,7 +37,7 @@ pub mod allocator;
 pub mod context;
 pub mod failure;
 
-pub use context::{LmbHost, LmbRegion};
+pub use context::{IoSession, LmbHost, LmbRegion};
 
 use std::collections::HashMap;
 
@@ -290,7 +290,7 @@ impl LmbModule {
         let bus = match iommu.map(dev, placement.hpa, placement.len, IommuPerm::ReadWrite) {
             Ok(b) => b,
             Err(e) => {
-                self.sub.free(placement);
+                let _ = self.sub.free(placement);
                 return Err(e);
             }
         };
@@ -327,7 +327,7 @@ impl LmbModule {
         let placement = self.ensure_capacity(fm, space, size)?;
         let range = Range::new(placement.dpa.0, placement.len);
         if let Err(e) = fm.sat_grant(dev, range, SatPerm::ReadWrite) {
-            self.sub.free(placement);
+            let _ = self.sub.free(placement);
             return Err(e);
         }
         let mmid = fm.alloc_mmid();
@@ -392,11 +392,13 @@ impl LmbModule {
                 fm.sat_revoke(spid, Range::new(rec.placement.dpa.0, rec.placement.len))?;
             }
         }
-        if let Some(id) = self.sub.free(rec.placement) {
+        // a stale placement (extent already released) surfaces as
+        // Error::StalePlacement here instead of aborting the process
+        if let Some(id) = self.sub.free(rec.placement)? {
             // Extent fully drained — release it to the FM. ExtentIds are
             // stable, so every other live placement stays valid with no
             // rebasing sweep.
-            let st = self.sub.remove_extent(id);
+            let st = self.sub.remove_extent(id).ok_or(Error::StalePlacement { extent: id.0 })?;
             fm.expander_mut().remove_decoder(st.hpa_base.0)?;
             space.remove_hdm_window(st.hpa_base)?;
             fm.release_extent(self.host, st.extent)?;

@@ -15,7 +15,7 @@ use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, Bdf, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
-use crate::lmb::{Consumer, LmbAlloc, LmbHost, LmbModule};
+use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule};
 use crate::pcie::iommu::Iommu;
 use crate::ssd::spec::SsdSpec;
 
@@ -295,6 +295,12 @@ impl System {
     /// Functional read from an LMB allocation.
     pub fn read_alloc(&self, mmid: MmId, offset: u64, out: &mut [u8]) -> Result<()> {
         self.lmb.read(mmid, offset, out)
+    }
+
+    /// Batched data path: resolve `mmid` once and stream N ops under one
+    /// fabric borrow (see [`LmbHost::io_session`]).
+    pub fn io_session(&mut self, mmid: MmId) -> Result<IoSession<'_>> {
+        self.lmb.io_session(mmid)
     }
 }
 

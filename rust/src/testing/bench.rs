@@ -2,8 +2,13 @@
 //!
 //! Used by the `rust/benches/*.rs` targets (built with `harness =
 //! false`): warm-up + timed repetitions, reporting min/mean/p50 wall
-//! time per iteration and derived throughput.
+//! time per iteration and derived throughput. Results can be dumped as
+//! machine-readable JSON ([`write_json`]) so the perf trajectory is
+//! tracked PR-over-PR, and iteration counts honour the
+//! `LMB_BENCH_ITERS` override ([`iters`]) so CI can smoke-run the
+//! benches cheaply.
 
+use std::path::Path;
 use std::time::Instant;
 
 /// Result of one measured benchmark.
@@ -21,6 +26,20 @@ impl Measurement {
     pub fn per_sec(&self) -> f64 {
         1e9 / self.mean_ns
     }
+}
+
+/// Measured-iteration count: `default`, unless the `LMB_BENCH_ITERS`
+/// environment variable overrides it (CI smoke runs set a small value
+/// so every bench target stays exercisable on each PR).
+pub fn iters(default: u32) -> u32 {
+    iters_from(std::env::var("LMB_BENCH_ITERS").ok().as_deref(), default)
+}
+
+/// Parsing behind [`iters`], split out so tests never have to mutate
+/// the process environment (a data race under the parallel test
+/// harness: `set_var` racing any concurrent `getenv` is UB on glibc).
+fn iters_from(var: Option<&str>, default: u32) -> u32 {
+    var.and_then(|v| v.parse::<u32>().ok()).filter(|&n| n > 0).unwrap_or(default)
 }
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
@@ -77,6 +96,61 @@ pub fn report(m: &Measurement, items_per_iter: Option<u64>) {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialise one measurement (plus its per-iteration item count, if
+/// meaningful) as a JSON object.
+pub fn to_json(m: &Measurement, items_per_iter: Option<u64>) -> String {
+    let items = match items_per_iter {
+        Some(n) => n.to_string(),
+        None => "null".to_string(),
+    };
+    let items_per_sec = match items_per_iter {
+        Some(n) => format!("{:.1}", n as f64 / m.mean_ns * 1e9),
+        None => "null".to_string(),
+    };
+    format!(
+        concat!(
+            "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.3}, \"min_ns\": {:.3}, ",
+            "\"p50_ns\": {:.3}, \"items_per_iter\": {items}, \"items_per_sec\": {items_per_sec}}}"
+        ),
+        json_escape(&m.name),
+        m.iters,
+        m.mean_ns,
+        m.min_ns,
+        m.p50_ns,
+    )
+}
+
+/// Write a bench run's measurements to `path` as a JSON array (e.g.
+/// `BENCH_hotpath.json` at the repo root — the machine-readable record
+/// the CI smoke step parses and the perf trajectory is tracked by).
+pub fn write_json(path: &Path, rows: &[(Measurement, Option<u64>)]) -> std::io::Result<()> {
+    let mut body = String::from("[\n");
+    for (i, (m, items)) in rows.iter().enumerate() {
+        body.push_str("  ");
+        body.push_str(&to_json(m, *items));
+        if i + 1 < rows.len() {
+            body.push(',');
+        }
+        body.push('\n');
+    }
+    body.push_str("]\n");
+    std::fs::write(path, body)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +179,49 @@ mod tests {
             p50_ns: 1e6,
         };
         assert!((m.per_sec() - 1000.0).abs() < 1e-9);
+    }
+
+    fn sample() -> Measurement {
+        Measurement {
+            name: "dec \"fast\"".into(),
+            iters: 4,
+            mean_ns: 250.0,
+            min_ns: 100.0,
+            p50_ns: 200.0,
+        }
+    }
+
+    #[test]
+    fn json_record_shape_and_escaping() {
+        let j = to_json(&sample(), Some(1000));
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\": \"dec \\\"fast\\\"\""), "quotes escaped: {j}");
+        assert!(j.contains("\"mean_ns\": 250.000"));
+        assert!(j.contains("\"items_per_iter\": 1000"));
+        assert!(j.contains("\"items_per_sec\": 4000000000.0"));
+        let j = to_json(&sample(), None);
+        assert!(j.contains("\"items_per_iter\": null"));
+        assert!(j.contains("\"items_per_sec\": null"));
+    }
+
+    #[test]
+    fn json_file_round_trip() {
+        let path = std::env::temp_dir().join("lmb_bench_json_test.json");
+        write_json(&path, &[(sample(), Some(8)), (sample(), None)]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.starts_with("[\n"));
+        assert!(body.trim_end().ends_with(']'));
+        assert_eq!(body.matches("\"name\"").count(), 2);
+        assert_eq!(body.matches(',').count(), 13, "one record separator + field commas");
+    }
+
+    #[test]
+    fn iters_override_parsing() {
+        assert_eq!(iters_from(None, 200), 200);
+        assert_eq!(iters_from(Some("7"), 200), 7);
+        assert_eq!(iters_from(Some("0"), 200), 200, "zero falls back to the default");
+        assert_eq!(iters_from(Some("junk"), 200), 200);
+        assert_eq!(iters_from(Some(""), 200), 200);
     }
 }

@@ -15,4 +15,5 @@
 //! ```
 
 pub mod bench;
+pub mod oracle;
 pub mod prop;

@@ -1,0 +1,287 @@
+//! Linear-scan reference oracles for the indexed hot paths.
+//!
+//! These are the *old* per-access implementations — unsorted tables
+//! walked front to back — preserved verbatim as executable
+//! specifications. The property tests in `tests/prop_invariants.rs`
+//! drive them in lockstep with the indexed fast paths (sorted decoder
+//! table + TLB, binary-searched SAT, `largest_free`-skipping
+//! sub-allocator) and assert behavioural equivalence; the benches in
+//! `benches/perf_hotpath.rs` and `benches/ablation_allocator.rs` time
+//! them against the fast paths so the speedup is measured, not
+//! asserted.
+
+use std::collections::HashMap;
+
+use crate::cxl::sat::SatPerm;
+use crate::cxl::types::{align_up, Dpa, Hpa, Range, Spid, PAGE_SIZE};
+
+/// The old `Expander` decoder table: an unsorted `Vec` scanned per
+/// translation.
+#[derive(Debug, Default)]
+pub struct LinearDecoders {
+    entries: Vec<(Range, u64)>,
+}
+
+impl LinearDecoders {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Program a window; `false` if it overlaps an existing one.
+    pub fn add(&mut self, hpa_window: Range, dpa_base: u64) -> bool {
+        if self.entries.iter().any(|(w, _)| w.overlaps(&hpa_window)) {
+            return false;
+        }
+        self.entries.push((hpa_window, dpa_base));
+        true
+    }
+
+    /// Remove the window starting at `hpa_base`; `false` if absent.
+    pub fn remove(&mut self, hpa_base: u64) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|(w, _)| w.base != hpa_base);
+        self.entries.len() != before
+    }
+
+    /// Translate by scanning every window (the old `decode_hpa`).
+    pub fn decode(&self, hpa: Hpa) -> Option<Dpa> {
+        self.entries
+            .iter()
+            .find(|(w, _)| w.contains(hpa.0))
+            .map(|(w, dpa)| Dpa(dpa + (hpa.0 - w.base)))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The old `SatTable`: per-SPID grant lists in insertion order, scanned
+/// front to back on every check (the same structure the real table used
+/// before the sorted/binary-search rewrite, so bench comparisons are
+/// apples to apples).
+#[derive(Debug, Default)]
+pub struct LinearSat {
+    grants: HashMap<Spid, Vec<(Range, SatPerm)>>,
+    entries: usize,
+}
+
+impl LinearSat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grant a window; `false` if it overlaps a same-SPID grant.
+    pub fn grant(&mut self, spid: Spid, range: Range, perm: SatPerm) -> bool {
+        let list = self.grants.entry(spid).or_default();
+        if list.iter().any(|(r, _)| r.overlaps(&range)) {
+            return false;
+        }
+        list.push((range, perm));
+        self.entries += 1;
+        true
+    }
+
+    /// Revoke the exact `(spid, range)` grant; `false` if absent.
+    pub fn revoke(&mut self, spid: Spid, range: Range) -> bool {
+        let Some(list) = self.grants.get_mut(&spid) else {
+            return false;
+        };
+        let before = list.len();
+        list.retain(|(r, _)| *r != range);
+        let removed = before - list.len();
+        self.entries -= removed;
+        removed > 0
+    }
+
+    /// Revoke every grant (any SPID) overlapping `range`; returns the
+    /// number removed (mirrors `SatTable::revoke_overlapping`).
+    pub fn revoke_overlapping(&mut self, range: Range) -> usize {
+        let mut removed = 0;
+        for list in self.grants.values_mut() {
+            let before = list.len();
+            list.retain(|(r, _)| !r.overlaps(&range));
+            removed += before - list.len();
+        }
+        self.entries -= removed;
+        removed
+    }
+
+    /// The old linear `check`: walk the requester's grant list.
+    pub fn check(&self, spid: Spid, dpa: Dpa, len: u64, write: bool) -> bool {
+        let Some(list) = self.grants.get(&spid) else {
+            return false;
+        };
+        list.iter().any(|(r, p)| {
+            r.contains_span(dpa.0, len.max(1)) && (!write || *p == SatPerm::ReadWrite)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+}
+
+/// A placement handed out by [`LinearSubAllocator`]; field-for-field
+/// comparable with `lmb::allocator::Placement`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinearPlacement {
+    /// Adoption-order id (mirrors `ExtentId.0`).
+    pub extent: u64,
+    pub offset: u64,
+    pub len: u64,
+    pub dpa: Dpa,
+    pub hpa: Hpa,
+}
+
+#[derive(Debug)]
+struct LinearExtent {
+    id: u64,
+    dpa_base: u64,
+    hpa_base: u64,
+    len: u64,
+    /// Sorted, coalesced free list (identical policy to the fast path).
+    free: Vec<Range>,
+    used: u64,
+}
+
+/// The old `SubAllocator`: first-fit in adoption order, probing every
+/// extent's free list with no `largest_free` skip.
+#[derive(Debug, Default)]
+pub struct LinearSubAllocator {
+    extents: Vec<LinearExtent>,
+    next_id: u64,
+}
+
+impl LinearSubAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adopt an extent of `len` bytes at `dpa_base`, mapped at
+    /// `hpa_base`; returns its stable adoption-order id.
+    pub fn adopt(&mut self, dpa_base: u64, hpa_base: u64, len: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.extents.push(LinearExtent {
+            id,
+            dpa_base,
+            hpa_base,
+            len,
+            free: vec![Range::new(0, len)],
+            used: 0,
+        });
+        id
+    }
+
+    /// First-fit placement, probing every extent's free list.
+    pub fn alloc(&mut self, size: u64) -> Option<LinearPlacement> {
+        let len = align_up(size.max(1), PAGE_SIZE);
+        for st in self.extents.iter_mut() {
+            let Some(pos) = st.free.iter().position(|r| r.len >= len) else {
+                continue;
+            };
+            let r = st.free[pos];
+            if r.len == len {
+                st.free.remove(pos);
+            } else {
+                st.free[pos] = Range::new(r.base + len, r.len - len);
+            }
+            st.used += len;
+            return Some(LinearPlacement {
+                extent: st.id,
+                offset: r.base,
+                len,
+                dpa: Dpa(st.dpa_base + r.base),
+                hpa: Hpa(st.hpa_base + r.base),
+            });
+        }
+        None
+    }
+
+    /// Free a placement; `Some(true)` when the extent drained fully,
+    /// `None` on a stale extent id.
+    pub fn free(&mut self, p: LinearPlacement) -> Option<bool> {
+        let st = self.extents.iter_mut().find(|s| s.id == p.extent)?;
+        let mut r = Range::new(p.offset, p.len);
+        let idx = st.free.partition_point(|f| f.base < r.base);
+        if idx < st.free.len() && r.end() == st.free[idx].base {
+            r = Range::new(r.base, r.len + st.free[idx].len);
+            st.free.remove(idx);
+        }
+        if idx > 0 && st.free[idx - 1].end() == r.base {
+            let prev = st.free[idx - 1];
+            st.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
+        } else {
+            st.free.insert(idx, r);
+        }
+        st.used -= p.len;
+        Some(st.used == 0)
+    }
+
+    /// Drop a drained extent; `false` if the id is unknown.
+    pub fn remove_extent(&mut self, id: u64) -> bool {
+        let before = self.extents.len();
+        self.extents.retain(|s| s.id != id);
+        self.extents.len() != before
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.extents.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_decoders_translate_and_reject_overlap() {
+        let mut d = LinearDecoders::new();
+        assert!(d.add(Range::new(0x1000, 0x1000), 0));
+        assert!(!d.add(Range::new(0x1800, 0x1000), 0x10_0000), "overlap rejected");
+        assert_eq!(d.decode(Hpa(0x1040)), Some(Dpa(0x40)));
+        assert_eq!(d.decode(Hpa(0x3000)), None);
+        assert!(d.remove(0x1000));
+        assert!(!d.remove(0x1000), "already gone");
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn linear_sat_checks_like_the_old_table() {
+        let mut s = LinearSat::new();
+        assert!(s.grant(Spid(1), Range::new(0, 0x1000), SatPerm::ReadOnly));
+        assert!(!s.grant(Spid(1), Range::new(0x800, 0x1000), SatPerm::ReadWrite));
+        assert!(s.grant(Spid(2), Range::new(0x800, 0x1000), SatPerm::ReadWrite));
+        assert!(s.check(Spid(1), Dpa(0), 64, false));
+        assert!(!s.check(Spid(1), Dpa(0), 64, true), "read-only");
+        assert!(s.check(Spid(2), Dpa(0x800), 64, true));
+        assert_eq!(s.revoke_overlapping(Range::new(0, 0x2000)), 2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn linear_suballocator_first_fit_round_trip() {
+        let mut a = LinearSubAllocator::new();
+        let id = a.adopt(0, 1 << 32, 4 * PAGE_SIZE);
+        let p = a.alloc(PAGE_SIZE + 1).unwrap();
+        assert_eq!(p.extent, id);
+        assert_eq!(p.len, 2 * PAGE_SIZE);
+        assert_eq!(p.hpa, Hpa(1 << 32));
+        let q = a.alloc(PAGE_SIZE).unwrap();
+        assert_eq!(q.offset, 2 * PAGE_SIZE);
+        assert!(!a.free(p).unwrap(), "q still live");
+        assert!(a.free(q).unwrap(), "now drained");
+        assert!(a.remove_extent(id));
+        assert!(a.free(q).is_none(), "stale extent id reported");
+        assert_eq!(a.extent_count(), 0);
+    }
+}

@@ -104,6 +104,18 @@ impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let (a, b, c, d) = self;
+        let mut out: Vec<Self> =
+            a.shrink().into_iter().map(|x| (x, b.clone(), c.clone(), d.clone())).collect();
+        out.extend(b.shrink().into_iter().map(|x| (a.clone(), x, c.clone(), d.clone())));
+        out.extend(c.shrink().into_iter().map(|x| (a.clone(), b.clone(), x, d.clone())));
+        out.extend(d.shrink().into_iter().map(|x| (a.clone(), b.clone(), c.clone(), x)));
+        out
+    }
+}
+
 const BASE_SEED: u64 = 0x1_5eed_cafe;
 const MAX_SHRINK_STEPS: usize = 2000;
 

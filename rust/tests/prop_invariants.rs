@@ -230,6 +230,195 @@ fn allocations_never_overlap() {
     );
 }
 
+/// The indexed decoder fast path (sorted table + binary search + TLB)
+/// is behaviourally identical to the old linear scan, preserved as
+/// `testing::oracle::LinearDecoders`: random interleavings of decoder
+/// insert (including overlap rejections), removal, and translation
+/// probes agree op-for-op, while the expander's sortedness/TLB
+/// invariants hold throughout.
+#[test]
+fn decoder_fast_path_matches_linear_oracle() {
+    use lmb::cxl::expander::{Expander, ExpanderConfig};
+    use lmb::testing::oracle::LinearDecoders;
+    prop::check(
+        "decoder fast path ≡ linear oracle",
+        24,
+        |rng| {
+            // (op, slot, len-pages): windows at a 4-page stride with
+            // lengths up to 8 pages, so neighbours genuinely overlap
+            prop::vec_of(rng, 80, |r| (r.next_below(3), r.next_below(48), r.next_below(8) + 1))
+        },
+        |script: &Vec<(u64, u64, u64)>| {
+            let cfg = ExpanderConfig { dram_capacity: GIB, ..Default::default() };
+            let mut e = Expander::new(cfg);
+            let mut o = LinearDecoders::new();
+            let hpa0 = 1u64 << 40;
+            let window = |slot: u64, pages: u64| {
+                Range::new(hpa0 + slot * 4 * PAGE_SIZE, pages.max(1) * PAGE_SIZE)
+            };
+            for &(op, slot, pages) in script {
+                match op {
+                    0 => {
+                        let w = window(slot, pages);
+                        let dpa = Dpa(slot * 8 * PAGE_SIZE);
+                        let fast = e.add_decoder(w, dpa).is_ok();
+                        if fast != o.add(w, dpa.0) {
+                            return false;
+                        }
+                    }
+                    1 => {
+                        let base = hpa0 + slot * 4 * PAGE_SIZE;
+                        if e.remove_decoder(base).is_ok() != o.remove(base) {
+                            return false;
+                        }
+                    }
+                    _ => {
+                        // probe every slot boundary plus an interior point
+                        for s in 0..49u64 {
+                            for off in [0, 1, 2 * PAGE_SIZE - 1, 17 + slot] {
+                                let hpa = Hpa(hpa0 + s * 4 * PAGE_SIZE + off);
+                                if e.decode_hpa(hpa).ok() != o.decode(hpa) {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                if e.check_invariants().is_err() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The binary-searched SAT is behaviourally identical to the old
+/// per-SPID linear scan (`testing::oracle::LinearSat`) across random
+/// grant / revoke / revoke-overlapping interleavings, probed on a
+/// dense grid after every mutation.
+#[test]
+fn sat_fast_path_matches_linear_oracle() {
+    use lmb::cxl::sat::{SatPerm, SatTable};
+    use lmb::cxl::types::{Dpa, Range, Spid};
+    use lmb::testing::oracle::LinearSat;
+    prop::check(
+        "SAT fast path ≡ linear oracle",
+        24,
+        |rng| {
+            prop::vec_of(rng, 80, |r| {
+                (r.next_below(4), r.next_below(3), r.next_below(48), r.next_below(6) + 1)
+            })
+        },
+        |script: &Vec<(u64, u64, u64, u64)>| {
+            let mut sat = SatTable::new(4096);
+            let mut o = LinearSat::new();
+            for &(op, spid, slot, pages) in script {
+                let pages = pages.max(1); // shrinking may zero sizes
+                let spid = Spid(spid as u16);
+                let range = Range::new(slot * 4 * PAGE_SIZE, pages * PAGE_SIZE);
+                let perm = if pages % 2 == 0 { SatPerm::ReadOnly } else { SatPerm::ReadWrite };
+                match op {
+                    0 => {
+                        if sat.grant(spid, range, perm).is_ok() != o.grant(spid, range, perm) {
+                            return false;
+                        }
+                    }
+                    1 => {
+                        if sat.revoke(spid, range).is_ok() != o.revoke(spid, range) {
+                            return false;
+                        }
+                    }
+                    2 => {
+                        if sat.revoke_overlapping(range) != o.revoke_overlapping(range) {
+                            return false;
+                        }
+                    }
+                    _ => {
+                        for s in 0..4u16 {
+                            for point in 0..50u64 {
+                                let dpa = Dpa(point * 4 * PAGE_SIZE + 33);
+                                let write = point % 2 == 0;
+                                let fast = sat.check(Spid(s), dpa, 64, write);
+                                if fast != o.check(Spid(s), dpa, 64, write) {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                if sat.check_invariants().is_err() || sat.len() != o.len() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The `largest_free`-skipping sub-allocator hands out byte-identical
+/// placements (and reports identical extent-drain events) to the old
+/// probe-every-extent first-fit (`testing::oracle::LinearSubAllocator`)
+/// across random alloc/free churn, with the cached-maximum invariant
+/// checked after every step.
+#[test]
+fn suballocator_fast_path_matches_linear_oracle() {
+    use lmb::cxl::fm::Extent;
+    use lmb::lmb::allocator::SubAllocator;
+    use lmb::testing::oracle::LinearSubAllocator;
+    const EXT_LEN: u64 = 512 * PAGE_SIZE; // 2 MiB keeps cases quick
+    prop::check(
+        "sub-allocator fast path ≡ linear oracle",
+        24,
+        |rng| prop::vec_of(rng, 100, |r| (r.next_below(5), r.next_below(64) + 1)),
+        |script: &Vec<(u64, u64)>| {
+            let mut fast = SubAllocator::new();
+            let mut slow = LinearSubAllocator::new();
+            for k in 0..3u64 {
+                let ext = Extent { dpa: Dpa(k * EXT_LEN), len: EXT_LEN, owner: HostId(0) };
+                fast.adopt(ext, Hpa((1 << 41) + k * EXT_LEN));
+                slow.adopt(k * EXT_LEN, (1 << 41) + k * EXT_LEN, EXT_LEN);
+            }
+            let mut live = Vec::new();
+            for &(op, pages) in script {
+                if op < 3 || live.is_empty() {
+                    // alloc (biased): placements must match field-for-field
+                    let fp = fast.alloc(pages * PAGE_SIZE);
+                    let sp = slow.alloc(pages * PAGE_SIZE);
+                    match (fp, sp) {
+                        (None, None) => {}
+                        (Some(f), Some(s)) => {
+                            let same = f.extent.0 == s.extent
+                                && f.offset == s.offset
+                                && f.len == s.len
+                                && f.dpa == s.dpa
+                                && f.hpa == s.hpa;
+                            if !same {
+                                return false;
+                            }
+                            live.push((f, s));
+                        }
+                        _ => return false,
+                    }
+                } else {
+                    // free a pseudo-random live placement (same index in
+                    // both worlds); drain events must agree
+                    let i = (pages as usize * 31) % live.len();
+                    let (f, s) = live.swap_remove(i);
+                    let fast_drained = fast.free(f).unwrap().is_some();
+                    if fast_drained != slow.free(s).unwrap() {
+                        return false;
+                    }
+                }
+                if fast.check_invariants().is_err() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
 /// SAT never grants access that was not explicitly programmed: random
 /// grant sets, then probe random (spid, dpa) points against a shadow
 /// model.
