@@ -1,20 +1,169 @@
 //! ABL-CONT — §1 challenge: "Performance interference due to multiple
 //! devices accessing shared memory adds complexity."
 //!
-//! Sweeps fleet size × expander random-access bandwidth. At realistic
-//! DDR bandwidths the index traffic of even 8 enterprise SSDs barely
-//! loads the expander (a *finding*: the interference concern is
-//! secondary to raw latency); a deliberately under-provisioned expander
-//! exposes the queueing knee.
+//! Part 1 drives the *real* queued-allocation path: N hosts × M
+//! requests churn through the cluster-wide `AllocQueue` under both
+//! placement policies. First-fit (the FIFO baseline) re-packs freed
+//! low-DPA extents forever, concentrating every live lease in the
+//! lowest placement regions; the contention-aware policy prices each
+//! carve point with the coordinator's M/M/1 cost model and spreads the
+//! same request stream across regions. The modeled max-region cost —
+//! deterministic, since queue scheduling is tick-driven — must come
+//! out strictly lower for the aware policy, asserted. Wall time and
+//! the cost scalars are emitted to `BENCH_contention.json` at the repo
+//! root (cost scalars ride in `mean_ns` scaled by 1e3 — they are cost
+//! units, not nanoseconds) so the placement trajectory is
+//! machine-readable PR-over-PR.
+//!
+//! Part 2 keeps the device-level queueing sweep: fleet size × expander
+//! random-access bandwidth. At realistic DDR bandwidths the index
+//! traffic of even 8 enterprise SSDs barely loads the expander (a
+//! *finding*: the interference concern is secondary to raw latency); a
+//! deliberately under-provisioned expander exposes the queueing knee.
 
-use lmb::coordinator::contention;
+use std::collections::VecDeque;
+use std::path::Path;
+
+use lmb::cluster::Cluster;
+use lmb::coordinator::contention::{self, placement_cost};
 use lmb::cxl::fabric::Fabric;
-use lmb::cxl::types::GIB;
+use lmb::cxl::types::{Bdf, MmId, EXTENT_SIZE, GIB};
+use lmb::lmb::queue::{PlacementPolicy, Request};
 use lmb::ssd::spec::SsdSpec;
 use lmb::ssd::IndexPlacement;
+use lmb::testing::bench::{self, Measurement};
 use lmb::workload::fio::{FioJob, IoPattern};
 
-fn main() {
+/// Hosts sharing one expander through the cluster queue.
+const HOSTS: usize = 4;
+/// Alloc rounds per drive (each round: one extent-sized request per
+/// host, plus retirement of everything beyond the live window).
+const ROUNDS: usize = 24;
+/// Live extents each host keeps — the churn that lets first-fit
+/// re-concentrate freed capacity.
+const LIVE_PER_HOST: usize = 4;
+
+/// Push N hosts × M requests through the cluster `AllocQueue` under
+/// `policy`; returns the cluster at steady state.
+fn drive_queue(policy: PlacementPolicy) -> Cluster {
+    let dev = Bdf::new(1, 0, 0);
+    let mut cluster = Cluster::builder()
+        .hosts(HOSTS)
+        .expander_gib(16) // 2 GiB placement regions, 8 extents each
+        .host_dram_gib(1)
+        .placement_policy(policy)
+        .lane_quota(2)
+        .build()
+        .unwrap();
+    for slot in 0..HOSTS {
+        cluster.host_mut(slot).unwrap().attach_pcie(dev);
+    }
+    let mut live: Vec<VecDeque<MmId>> = vec![VecDeque::new(); HOSTS];
+    for _ in 0..ROUNDS {
+        // every host submits one extent-sized allocation; the queue
+        // schedules them fairly and executes per-slot groups under one
+        // fabric lock each
+        let tickets: Vec<_> = (0..HOSTS)
+            .map(|slot| {
+                let req = Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE };
+                (slot, cluster.submit(slot, req).unwrap())
+            })
+            .collect();
+        cluster.drain_queue();
+        for (slot, t) in tickets {
+            let a = cluster.take_completion(t).unwrap().into_alloc().unwrap();
+            live[slot].push_back(a.mmid);
+        }
+        // retire the oldest leases beyond the live window (queued frees)
+        let mut frees = Vec::new();
+        for (slot, window) in live.iter_mut().enumerate() {
+            while window.len() > LIVE_PER_HOST {
+                let mmid = window.pop_front().unwrap();
+                let req = Request::Free { consumer: dev.into(), mmid };
+                frees.push(cluster.submit(slot, req).unwrap());
+            }
+        }
+        cluster.drain_queue();
+        for t in frees {
+            cluster.take_completion(t).unwrap().result.unwrap();
+        }
+    }
+    cluster.check_invariants().unwrap();
+    cluster
+}
+
+/// The modeled contention metric: the worst region's queueing cost at
+/// its steady-state load (same cost model the placement policy uses).
+fn max_region_cost(cluster: &Cluster) -> f64 {
+    let fm = cluster.fm();
+    let (region_len, loads) = fm.placement_regions();
+    let mut worst = 0.0f64;
+    for &load in loads {
+        worst = worst.max(placement_cost(load, region_len));
+    }
+    worst
+}
+
+fn queue_placement_ablation(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
+    println!(
+        "## ABL-CONT — AllocQueue placement: {HOSTS} hosts x {} requests, \
+         contention-aware vs FIFO (first-fit)\n",
+        ROUNDS * HOSTS
+    );
+
+    // deterministic cost comparison (tick-driven scheduling, no RNG)
+    let fifo = drive_queue(PlacementPolicy::FirstFit);
+    let aware = drive_queue(PlacementPolicy::ContentionAware);
+    let fifo_cost = max_region_cost(&fifo);
+    let aware_cost = max_region_cost(&aware);
+    let serviced = aware.queue().stats().completed;
+    {
+        let fm_fifo = fifo.fm();
+        let fm_aware = aware.fm();
+        let (len, fifo_loads) = fm_fifo.placement_regions();
+        let (_, aware_loads) = fm_aware.placement_regions();
+        println!("  region len {} MiB", len >> 20);
+        println!("  fifo  loads (extents/region): {:?}", per_region_extents(fifo_loads));
+        println!("  aware loads (extents/region): {:?}", per_region_extents(aware_loads));
+        println!("  modeled max-region cost: fifo {fifo_cost:.2}, aware {aware_cost:.2}");
+    }
+    assert!(
+        aware_cost < fifo_cost,
+        "contention-aware placement must beat FIFO: aware {aware_cost} vs fifo {fifo_cost}"
+    );
+
+    // wall time of the full N x M drive under each policy
+    for (label, policy) in [
+        ("queue drive, contention-aware", PlacementPolicy::ContentionAware),
+        ("queue drive, first-fit (fifo)", PlacementPolicy::FirstFit),
+    ] {
+        let m = bench::measure(label, 1, iters, || {
+            std::hint::black_box(drive_queue(policy));
+        });
+        bench::report(&m, Some(serviced));
+        rows.push((m, Some(serviced)));
+    }
+
+    // the deterministic cost scalars, scaled x1e3 into the mean_ns slot
+    // so the regression gate tracks placement quality PR-over-PR
+    for (name, cost) in [
+        ("modeled max-region cost x1e3, contention-aware", aware_cost),
+        ("modeled max-region cost x1e3, first-fit (fifo)", fifo_cost),
+    ] {
+        let v = cost * 1e3;
+        rows.push((
+            Measurement { name: name.into(), iters: 1, mean_ns: v, min_ns: v, p50_ns: v },
+            None,
+        ));
+    }
+    println!();
+}
+
+fn per_region_extents(loads: &[u64]) -> Vec<u64> {
+    loads.iter().map(|&l| l / EXTENT_SIZE).collect()
+}
+
+fn device_sweep() {
     let fabric = Fabric::default();
     let spec = SsdSpec::gen5();
     let job = FioJob::paper(IoPattern::RandRead, 64 * GIB);
@@ -55,4 +204,16 @@ fn main() {
     let drop = 1.0 - loaded.per_device_kiops / base.per_device_kiops;
     assert!(drop > 0.25, "under-provisioned expander should bite, got {drop}");
     println!("ABL-CONT OK (knee at {:.0}% drop for 16 devices on 5 GB/s)", drop * 100.0);
+}
+
+fn main() {
+    let mut rows: Vec<(Measurement, Option<u64>)> = Vec::new();
+    let iters = bench::iters(24);
+
+    queue_placement_ablation(&mut rows, iters);
+    device_sweep();
+
+    let json_path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_contention.json"));
+    bench::write_json(json_path, &rows).expect("write BENCH_contention.json");
+    println!("\nwrote {} records to {}", rows.len(), json_path.display());
 }

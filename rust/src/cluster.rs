@@ -56,11 +56,25 @@ use crate::cxl::fm::{FabricManager, FabricRef};
 use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, MmId, Spid, GIB};
 use crate::error::{Error, Result};
+use crate::lmb::queue::{
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled, Ticket,
+    DEFAULT_LANE_QUOTA,
+};
 use crate::lmb::{Consumer, LmbAlloc, LmbHost};
 
 /// N LMB hosts arbitrating one switch + expander through a shared
 /// [`FabricRef`]. Hosts are addressed by their slot index (stable
 /// across crashes: a crashed slot stays empty, later joins append).
+///
+/// The cluster carries the fleet-wide [`AllocQueue`]: submissions are
+/// routed per slot ([`Cluster::submit`]), scheduled fairly across hosts
+/// (rotating per-lane quota, [`Cluster::tick_queue`]), executed under
+/// one fabric lock per slot group, and reaped via
+/// [`Cluster::take_completion`]. The synchronous routed surface
+/// ([`Cluster::alloc`] / [`Cluster::free`] / [`Cluster::share`]) is a
+/// one-shot submit + drain over that same queue. A host crash cancels
+/// its queued-but-unscheduled submissions
+/// ([`AllocQueue::cancel_lane`]) before its leases are reclaimed.
 #[derive(Debug)]
 pub struct Cluster {
     fabric: FabricRef,
@@ -68,6 +82,12 @@ pub struct Cluster {
     latency: Fabric,
     slots: Vec<Option<LmbHost>>,
     host_dram: u64,
+    /// Cluster-wide allocation queue (one lane per slot).
+    queue: AllocQueue,
+    /// Per-lane requests serviced per scheduling tick.
+    lane_quota: usize,
+    /// Placement policy installed on every joining host.
+    policy: PlacementPolicy,
 }
 
 /// Builder for [`Cluster`].
@@ -78,6 +98,8 @@ pub struct ClusterBuilder {
     switch_ports: u8,
     host_dram: u64,
     hosts: usize,
+    lane_quota: usize,
+    policy: PlacementPolicy,
 }
 
 impl Default for ClusterBuilder {
@@ -88,6 +110,8 @@ impl Default for ClusterBuilder {
             switch_ports: 32,
             host_dram: 16 * GIB,
             hosts: 2,
+            lane_quota: DEFAULT_LANE_QUOTA,
+            policy: PlacementPolicy::ContentionAware,
         }
     }
 }
@@ -130,6 +154,19 @@ impl ClusterBuilder {
         self
     }
 
+    /// Extent-placement policy installed on every host (default:
+    /// contention-aware; first-fit is the ablation baseline).
+    pub fn placement_policy(mut self, policy: PlacementPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Per-host requests serviced per queue tick (fairness quantum).
+    pub fn lane_quota(mut self, quota: usize) -> Self {
+        self.lane_quota = quota.max(1);
+        self
+    }
+
     pub fn build(self) -> Result<Cluster> {
         let fabric = FabricRef::new(FabricManager::new(
             PbrSwitch::new(self.switch_ports),
@@ -140,6 +177,9 @@ impl ClusterBuilder {
             latency: Fabric::new(self.fabric),
             slots: Vec::new(),
             host_dram: self.host_dram,
+            queue: AllocQueue::new(),
+            lane_quota: self.lane_quota,
+            policy: self.policy,
         };
         for _ in 0..self.hosts {
             cluster.join_host()?;
@@ -171,7 +211,8 @@ impl Cluster {
 
     /// Bind one more host to the shared fabric; returns its slot index.
     pub fn join_host(&mut self) -> Result<usize> {
-        let host = LmbHost::bind(self.fabric.clone(), self.host_dram)?;
+        let mut host = LmbHost::bind(self.fabric.clone(), self.host_dram)?;
+        host.set_placement_policy(self.policy);
         self.slots.push(Some(host));
         Ok(self.slots.len() - 1)
     }
@@ -212,7 +253,7 @@ impl Cluster {
         self.host_mut(slot)?.attach_cxl_device()
     }
 
-    // ---- routed per-host LMB surface ----
+    // ---- routed per-host LMB surface (one-shot over the queue) ----
 
     /// Allocate on `slot`'s host for `consumer`.
     pub fn alloc(
@@ -221,16 +262,24 @@ impl Cluster {
         consumer: impl Into<Consumer>,
         size: u64,
     ) -> Result<LmbAlloc> {
-        self.host_mut(slot)?.alloc(consumer, size)
+        let consumer = consumer.into();
+        let outcome = self.submit_and_wait(slot, Request::Alloc { consumer, size })?;
+        outcome.into_alloc()
     }
 
-    /// All-or-nothing batch allocation on `slot`'s host.
+    /// All-or-nothing batch allocation on `slot`'s host. Everything
+    /// already queued cluster-wide is drained first, so the batch never
+    /// jumps ahead of pending submissions; the batch itself then runs
+    /// through the host's own queue path ([`LmbHost::alloc_many`]),
+    /// which rolls a partial batch back before any sibling lane can
+    /// observe — or fail against — its transient claims.
     pub fn alloc_many(
         &mut self,
         slot: usize,
         consumer: impl Into<Consumer>,
         sizes: &[u64],
     ) -> Result<Vec<LmbAlloc>> {
+        self.drain_queue();
         self.host_mut(slot)?.alloc_many(consumer, sizes)
     }
 
@@ -239,8 +288,11 @@ impl Cluster {
     /// [`Error::NotOwner`] — fabric-global mmids guarantee a foreign
     /// handle can never alias a local allocation.
     pub fn free(&mut self, slot: usize, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
-        self.check_home(slot, mmid)?;
-        self.host_mut(slot)?.free(consumer, mmid)
+        let consumer = consumer.into();
+        match self.submit_and_wait(slot, Request::Free { consumer, mmid })? {
+            Outcome::Freed => Ok(()),
+            other => unreachable!("free submission yielded {other:?}"),
+        }
     }
 
     /// Owner-authorised share through `slot`'s host, with the same
@@ -252,8 +304,125 @@ impl Cluster {
         target: impl Into<Consumer>,
         mmid: MmId,
     ) -> Result<LmbAlloc> {
-        self.check_home(slot, mmid)?;
-        self.host_mut(slot)?.share(owner, target, mmid)
+        let owner = owner.into();
+        let target = target.into();
+        let outcome = self.submit_and_wait(slot, Request::Share { owner, target, mmid })?;
+        outcome.into_alloc()
+    }
+
+    // ---- cluster-wide queued allocation ----
+
+    /// Enqueue a request on `slot`'s lane of the cluster queue; errors
+    /// immediately if the slot has no live host. Nothing executes until
+    /// [`Cluster::tick_queue`] / [`Cluster::drain_queue`] (or a
+    /// synchronous routed call, whose one-shot drain services the whole
+    /// queue).
+    pub fn submit(&mut self, slot: usize, request: Request) -> Result<Ticket> {
+        self.host(slot)?; // reject routing at a dead/unknown slot
+        Ok(self.queue.submit(slot, request))
+    }
+
+    /// Where a submission is in its lifecycle.
+    pub fn poll_submission(&self, ticket: Ticket) -> QueueStatus {
+        self.queue.poll(ticket)
+    }
+
+    /// Claim a serviced submission's completion (tickets are
+    /// single-use).
+    pub fn take_completion(&mut self, ticket: Ticket) -> Option<Completion> {
+        self.queue.take(ticket)
+    }
+
+    /// The cluster-wide allocation queue (stats / pending inspection).
+    pub fn queue(&self) -> &AllocQueue {
+        &self.queue
+    }
+
+    /// One deterministic scheduling tick: pop up to the per-lane quota
+    /// from every live slot (lanes visited in rotating order, so no
+    /// host starves), execute each slot's group under a single fabric
+    /// lock, and post completions. Returns how many requests were
+    /// serviced.
+    pub fn tick_queue(&mut self) -> usize {
+        let mut rest = self.queue.schedule(self.lane_quota);
+        let total = rest.len();
+        while !rest.is_empty() {
+            let lane = rest[0].lane;
+            let cut = rest.iter().position(|s| s.lane != lane).unwrap_or(rest.len());
+            let tail = rest.split_off(cut);
+            let group = std::mem::replace(&mut rest, tail);
+            self.execute_group(lane, group);
+        }
+        total
+    }
+
+    /// Tick until the cluster queue is idle; returns how many
+    /// submissions were serviced.
+    pub fn drain_queue(&mut self) -> usize {
+        let mut total = 0;
+        loop {
+            let n = self.tick_queue();
+            if n == 0 {
+                return total;
+            }
+            total += n;
+        }
+    }
+
+    /// Execute one slot's scheduled group. Requests that reference a
+    /// sibling host's mmid complete with [`Error::NotOwner`] (the
+    /// router's cross-host isolation rule) without touching the fabric;
+    /// the rest run under the host's single-lock execution path.
+    fn execute_group(&mut self, lane: usize, group: Vec<Scheduled>) {
+        if self.host(lane).is_err() {
+            // the host vanished between scheduling and execution
+            // (defensive: crash_host cancels the lane first)
+            for s in group {
+                self.queue.complete(Completion {
+                    ticket: s.ticket,
+                    lane,
+                    result: Err(Error::Cancelled { ticket: s.ticket.0 }),
+                });
+            }
+            return;
+        }
+        let mut runnable = Vec::with_capacity(group.len());
+        for s in group {
+            if let Some(mmid) = s.request.target_mmid() {
+                if self.check_home(lane, mmid).is_err() {
+                    self.queue.complete(Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::NotOwner { mmid }),
+                    });
+                    continue;
+                }
+            }
+            runnable.push(s);
+        }
+        if runnable.is_empty() {
+            return;
+        }
+        let host = self
+            .slots
+            .get_mut(lane)
+            .and_then(|s| s.as_mut())
+            .expect("host liveness checked above");
+        let completions = host.execute_requests(runnable);
+        for c in completions {
+            self.queue.complete(c);
+        }
+    }
+
+    /// One-shot path for the synchronous routed surface: submit, drain,
+    /// claim.
+    fn submit_and_wait(&mut self, slot: usize, request: Request) -> Result<Outcome> {
+        let ticket = self.submit(slot, request)?;
+        self.drain_queue();
+        match self.queue.take(ticket) {
+            Some(c) => c.result,
+            None => Err(Error::FabricManager("cluster queue lost a completion".into())),
+        }
     }
 
     /// Reject an operation routed at `slot` for an mmid that lives on a
@@ -285,9 +454,12 @@ impl Cluster {
 
     // ---- failure domain ----
 
-    /// Crash `slot`'s host: its module state vanishes and the FM
-    /// reclaims every lease (revoking stale SAT grants and HDM decoders
-    /// with them). Siblings keep their extents, placements and grants.
+    /// Crash `slot`'s host: its queued-but-unscheduled submissions are
+    /// cancelled (each completes with [`Error::Cancelled`], so no
+    /// ticket dangles and nothing executes against reclaimed memory),
+    /// its module state vanishes, and the FM reclaims every lease
+    /// (revoking stale SAT grants and HDM decoders with them). Siblings
+    /// keep their extents, placements, grants and queued submissions.
     pub fn crash_host(&mut self, slot: usize) -> Result<()> {
         let host = self
             .slots
@@ -295,6 +467,7 @@ impl Cluster {
             .ok_or_else(|| Error::FabricManager(format!("no slot {slot}")))?
             .take()
             .ok_or_else(|| Error::FabricManager(format!("host in slot {slot} already gone")))?;
+        self.queue.cancel_lane(slot);
         self.fabric.release_host(host.host());
         Ok(())
     }
@@ -385,6 +558,78 @@ mod tests {
         assert!(matches!(cluster.free(1, dev, MmId(0xdead)), Err(Error::UnknownMmId(_))));
         // the owner path still works
         cluster.free(0, dev, a.mmid).unwrap();
+    }
+
+    #[test]
+    fn queued_submissions_route_and_complete_per_slot() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+        let t0 = cluster.submit(0, req.clone()).unwrap();
+        let t1 = cluster.submit(1, req).unwrap();
+        assert_eq!(cluster.poll_submission(t0), QueueStatus::Queued);
+        assert_eq!(cluster.queue().pending(), 2);
+        assert_eq!(cluster.drain_queue(), 2);
+        let a0 = cluster.take_completion(t0).unwrap().into_alloc().unwrap();
+        let a1 = cluster.take_completion(t1).unwrap().into_alloc().unwrap();
+        assert_eq!(cluster.owner_slot_of(a0.mmid), Some(0));
+        assert_eq!(cluster.owner_slot_of(a1.mmid), Some(1));
+        assert_eq!(cluster.leased_to(0).unwrap(), EXTENT_SIZE);
+        assert_eq!(cluster.leased_to(1).unwrap(), EXTENT_SIZE);
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn queued_cross_host_ops_complete_with_not_owner() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
+        // a queued free routed at the wrong slot completes NotOwner
+        let req = Request::Free { consumer: dev.into(), mmid: a.mmid };
+        let t = cluster.submit(1, req).unwrap();
+        cluster.drain_queue();
+        let c = cluster.take_completion(t).unwrap();
+        assert!(matches!(c.result, Err(Error::NotOwner { .. })), "got {:?}", c.result);
+        // the allocation is untouched and the owner path still works
+        assert_eq!(cluster.owner_slot_of(a.mmid), Some(0));
+        cluster.free(0, dev, a.mmid).unwrap();
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn queue_is_fair_across_hosts_under_flood() {
+        // slot 0 floods 3 extents' worth; slot 1 asks for one. With a
+        // 1 GiB pool (4 extents) and per-lane quota 1, fair rotation
+        // guarantees slot 1's single request is serviced long before
+        // the flood can drain the pool.
+        let dev = Bdf::new(1, 0, 0);
+        let mut c = Cluster::builder()
+            .hosts(2)
+            .expander_gib(1)
+            .host_dram_gib(1)
+            .lane_quota(1)
+            .build()
+            .unwrap();
+        c.host_mut(0).unwrap().attach_pcie(dev);
+        c.host_mut(1).unwrap().attach_pcie(dev);
+        let req = Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE };
+        let flood: Vec<_> = (0..4).map(|_| c.submit(0, req.clone()).unwrap()).collect();
+        let light = c.submit(1, req).unwrap();
+        c.drain_queue();
+        assert!(
+            c.take_completion(light).unwrap().result.is_ok(),
+            "fair scheduling served the light host before the flood drained the pool"
+        );
+        let mut flood_ok = 0;
+        for t in flood {
+            if c.take_completion(t).unwrap().result.is_ok() {
+                flood_ok += 1;
+            }
+        }
+        assert_eq!(flood_ok, 3, "the flood got the remaining extents");
+        c.check_invariants().unwrap();
     }
 
     #[test]

@@ -14,6 +14,28 @@ use crate::ssd::spec::SsdSpec;
 use crate::ssd::IndexPlacement;
 use crate::workload::fio::FioJob;
 
+/// M/M/1 queueing-delay factor ρ/(1−ρ) — the curve [`solve`] iterates
+/// to a fixed point. Exposed on its own so other layers (the FM's
+/// contention-aware extent placement, the alloc-queue ablation) price
+/// load with the *same* model the device-level solver uses, not a
+/// reimplementation that could drift.
+pub fn queueing_delay(rho: f64) -> f64 {
+    let rho = rho.clamp(0.0, 0.999);
+    rho / (1.0 - rho)
+}
+
+/// Modeled contention cost of directing `load` bytes of traffic at a
+/// region/port of `capacity` bytes: the queueing delay at the implied
+/// utilisation. Monotone in `load`, convex as the region saturates, so
+/// a placement policy minimising it spreads load across regions long
+/// before any one region hits its knee.
+pub fn placement_cost(load: u64, capacity: u64) -> f64 {
+    if capacity == 0 {
+        return f64::INFINITY;
+    }
+    queueing_delay(load as f64 / capacity as f64)
+}
+
 /// Result of a contention run.
 #[derive(Debug, Clone)]
 pub struct ContentionPoint {
@@ -56,7 +78,7 @@ pub fn solve(
         let load = devices as f64 * x * per_io_accesses;
         rho = (load / access_cap).min(0.999);
         // queueing inflates the *media* component of each access
-        let extra = media_ns * rho / (1.0 - rho);
+        let extra = media_ns * queueing_delay(rho);
         let new_inflation = (base_access + extra) / base_access;
         // damped update for stable convergence
         inflation = 0.5 * inflation + 0.5 * new_inflation;
@@ -145,5 +167,24 @@ mod tests {
         let small = solve(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 40e9).unwrap();
         let large = solve(&spec, IndexPlacement::LmbCxl, &fabric, &job, 8, 160e9).unwrap();
         assert!(large.per_device_kiops > small.per_device_kiops);
+    }
+
+    #[test]
+    fn queueing_delay_shape() {
+        assert_eq!(queueing_delay(0.0), 0.0);
+        assert!((queueing_delay(0.5) - 1.0).abs() < 1e-12);
+        // monotone and clamped: past the 0.999 knee the cost saturates
+        assert!(queueing_delay(0.9) > queueing_delay(0.5));
+        assert_eq!(queueing_delay(1.0), queueing_delay(2.0));
+        assert_eq!(queueing_delay(-0.5), 0.0, "negative utilisation clamps to idle");
+    }
+
+    #[test]
+    fn placement_cost_prefers_less_loaded_regions() {
+        // the decision the FM's contention-aware placement makes: a
+        // half-full region always prices below a nearly-full one
+        assert!(placement_cost(1 << 28, 1 << 31) < placement_cost(3 << 29, 1 << 31));
+        assert_eq!(placement_cost(0, 1 << 30), 0.0);
+        assert!(placement_cost(5, 0).is_infinite(), "zero-capacity region is unplaceable");
     }
 }

@@ -21,15 +21,42 @@ use std::cell::{Ref, RefCell, RefMut};
 use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::coordinator::contention;
 use crate::cxl::expander::Expander;
 use crate::cxl::sat::SatPerm;
 use crate::cxl::switch::PbrSwitch;
-use crate::cxl::types::{Dpa, Dpid, MmId, Range, Spid, EXTENT_SIZE};
+use crate::cxl::types::{align_up, Dpa, Dpid, MmId, Range, Spid, EXTENT_SIZE};
 use crate::error::{Error, Result};
 
 /// Identifies a host that has bound to the fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct HostId(pub u32);
+
+/// How the FM chooses *where* in the expander's DPA space a fresh
+/// extent is carved.
+///
+/// The expander's media is split into a fixed number of equal regions
+/// (DMP/port analogues). [`PlacementPolicy::ContentionAware`] prices
+/// every candidate carve point with the same M/M/1 cost model the
+/// device-level contention solver uses
+/// ([`contention::placement_cost`]) and picks the candidate in the
+/// least-loaded region; when every candidate region carries equal load
+/// (e.g. a fresh pool) the tie-break is the lowest DPA — i.e. it falls
+/// back to exactly first-fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Lowest-DPA free range that fits (the FM primitive's historical
+    /// behaviour; the queue ablation's FIFO baseline).
+    #[default]
+    FirstFit,
+    /// Minimise modeled region contention; ties fall back to first-fit.
+    ContentionAware,
+}
+
+/// Number of placement regions the DPA space is divided into (each at
+/// least one extent long, so tiny test expanders degenerate to one
+/// region per extent and both policies coincide).
+const PLACEMENT_REGIONS: u64 = 8;
 
 /// An extent of expander capacity leased to a host.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +86,12 @@ pub struct FabricManager {
     /// Running per-host lease totals — keeps [`FabricManager::leased_to`]
     /// O(1) instead of a scan over every live lease.
     leased_bytes: HashMap<HostId, u64>,
+    /// Length of one placement region (DPA space / [`PLACEMENT_REGIONS`],
+    /// rounded up to whole extents).
+    region_len: u64,
+    /// Leased bytes per placement region, attributed by each lease's
+    /// base DPA — the load signal the contention-aware policy prices.
+    region_load: Vec<u64>,
     hosts: HashMap<HostId, Spid>,
     next_host: u32,
     /// Fabric-global mmid counter (§3.2): handles are unique across
@@ -71,6 +104,9 @@ impl FabricManager {
     pub fn new(switch: PbrSwitch, expander: Expander) -> Self {
         let free_bytes = expander.capacity();
         let free = vec![Range::new(0, free_bytes)];
+        let region_len =
+            align_up(free_bytes.div_ceil(PLACEMENT_REGIONS).max(1), EXTENT_SIZE).max(EXTENT_SIZE);
+        let region_count = free_bytes.div_ceil(region_len).max(1) as usize;
         FabricManager {
             switch,
             expander,
@@ -78,6 +114,8 @@ impl FabricManager {
             free_bytes,
             leases: HashMap::new(),
             leased_bytes: HashMap::new(),
+            region_len,
+            region_load: vec![0; region_count],
             hosts: HashMap::new(),
             next_host: 0,
             next_mmid: 1,
@@ -164,30 +202,116 @@ impl FabricManager {
     }
 
     /// Lease an extent of arbitrary (page-aligned) size — used by tests
-    /// and by the dynamic-capacity ablation.
+    /// and by the dynamic-capacity ablation. First-fit (the historical
+    /// primitive); policy-driven placement goes through
+    /// [`FabricManager::allocate_extent_placed`].
     pub fn allocate_extent_sized(&mut self, host: HostId, len: u64) -> Result<Extent> {
+        self.allocate_extent_placed(host, len, PlacementPolicy::FirstFit)
+    }
+
+    /// Lease an extent, choosing the carve point by `policy` (see
+    /// [`PlacementPolicy`]). The LMB modules call this with the policy
+    /// their host was configured with.
+    pub fn allocate_extent_placed(
+        &mut self,
+        host: HostId,
+        len: u64,
+        policy: PlacementPolicy,
+    ) -> Result<Extent> {
         if !self.hosts.contains_key(&host) {
             return Err(Error::FabricManager(format!("unknown host {host:?}")));
         }
         if self.expander.is_failed() {
             return Err(Error::ExpanderFailed("device offline".into()));
         }
-        // first-fit over the free list
-        let pos = self.free.iter().position(|r| r.len >= len).ok_or(Error::OutOfCapacity {
+        let candidate = match policy {
+            PlacementPolicy::FirstFit => self
+                .free
+                .iter()
+                .position(|r| r.len >= len)
+                .map(|pos| (pos, self.free[pos].base)),
+            PlacementPolicy::ContentionAware => self.pick_least_contended(len),
+        };
+        let (pos, base) = candidate.ok_or(Error::OutOfCapacity {
             requested: len,
             available: self.available(),
         })?;
+        Ok(self.carve(pos, base, len, host))
+    }
+
+    /// Cheapest carve point under the contention model: every free
+    /// range's base plus each region boundary inside it is a candidate;
+    /// each is priced by [`contention::placement_cost`] on the load its
+    /// region would carry after the lease. Candidates are visited in
+    /// ascending DPA order and only a strictly cheaper one replaces the
+    /// incumbent, so equal-cost choices resolve to the lowest DPA —
+    /// first-fit — exactly as documented on [`PlacementPolicy`].
+    fn pick_least_contended(&self, len: u64) -> Option<(usize, u64)> {
+        let mut best: Option<(f64, usize, u64)> = None;
+        for (pos, r) in self.free.iter().enumerate() {
+            if r.len < len {
+                continue;
+            }
+            let mut candidate = r.base;
+            loop {
+                let load = self.region_load[self.region_of(candidate)] + len;
+                let cost = contention::placement_cost(load, self.region_len);
+                let cheaper = match best {
+                    None => true,
+                    Some((incumbent, _, _)) => cost < incumbent,
+                };
+                if cheaper {
+                    best = Some((cost, pos, candidate));
+                }
+                // advance to the next region boundary inside this range
+                let next = (candidate / self.region_len + 1) * self.region_len;
+                if next <= candidate || next + len > r.end() {
+                    break;
+                }
+                candidate = next;
+            }
+        }
+        best.map(|(_, pos, base)| (pos, base))
+    }
+
+    /// Carve `[base, base+len)` out of free-list entry `pos` and record
+    /// the lease — the single mutation point shared by both placement
+    /// policies, so the running counters can never diverge between them.
+    fn carve(&mut self, pos: usize, base: u64, len: u64, host: HostId) -> Extent {
         let r = self.free[pos];
-        let ext = Extent { dpa: Dpa(r.base), len, owner: host };
-        if r.len == len {
-            self.free.remove(pos);
-        } else {
-            self.free[pos] = Range::new(r.base + len, r.len - len);
+        debug_assert!(base >= r.base && base + len <= r.end());
+        let left = base - r.base;
+        let right = r.end() - (base + len);
+        match (left > 0, right > 0) {
+            (false, false) => {
+                self.free.remove(pos);
+            }
+            (true, false) => self.free[pos] = Range::new(r.base, left),
+            (false, true) => self.free[pos] = Range::new(base + len, right),
+            (true, true) => {
+                self.free[pos] = Range::new(r.base, left);
+                self.free.insert(pos + 1, Range::new(base + len, right));
+            }
         }
         self.free_bytes -= len;
         *self.leased_bytes.entry(host).or_insert(0) += len;
-        self.leases.insert(ext.dpa.0, ext);
-        Ok(ext)
+        let region = self.region_of(base);
+        self.region_load[region] += len;
+        let ext = Extent { dpa: Dpa(base), len, owner: host };
+        self.leases.insert(base, ext);
+        ext
+    }
+
+    /// Placement region holding `dpa` (by base address).
+    fn region_of(&self, dpa: u64) -> usize {
+        ((dpa / self.region_len) as usize).min(self.region_load.len() - 1)
+    }
+
+    /// Placement-region observability: `(region_len, per-region leased
+    /// bytes)`. The contention ablation derives its modeled cost metric
+    /// from this.
+    pub fn placement_regions(&self) -> (u64, &[u64]) {
+        (self.region_len, &self.region_load)
     }
 
     /// FM API: return an extent (must be wholly unused by the caller).
@@ -201,6 +325,8 @@ impl FabricManager {
         }
         self.leases.remove(&ext.dpa.0);
         self.free_bytes += ext.len;
+        let region = self.region_of(ext.dpa.0);
+        self.region_load[region] -= ext.len;
         if let Some(v) = self.leased_bytes.get_mut(&host) {
             *v -= ext.len;
             if *v == 0 {
@@ -292,13 +418,21 @@ impl FabricManager {
             )));
         }
         let mut per_host: HashMap<HostId, u64> = HashMap::new();
+        let mut per_region = vec![0u64; self.region_load.len()];
         for e in self.leases.values() {
             *per_host.entry(e.owner).or_insert(0) += e.len;
+            per_region[self.region_of(e.dpa.0)] += e.len;
         }
         if per_host != self.leased_bytes {
             return Err(Error::FabricManager(format!(
                 "leased_bytes drift: counters {:?} != lease table {per_host:?}",
                 self.leased_bytes
+            )));
+        }
+        if per_region != self.region_load {
+            return Err(Error::FabricManager(format!(
+                "region_load drift: counters {:?} != lease table {per_region:?}",
+                self.region_load
             )));
         }
         let total: u64 = self.available() + self.leases.values().map(|e| e.len).sum::<u64>();
@@ -647,6 +781,65 @@ mod tests {
         let b = f.alloc_mmid();
         assert_ne!(a, b);
         assert!(b > a, "monotone, never reused");
+    }
+
+    #[test]
+    fn contention_aware_placement_spreads_across_regions() {
+        // 4 GiB pool → 512 MiB regions (two extents each). First-fit
+        // packs sequentially; contention-aware places each new extent in
+        // the least-loaded region, so the first 8 extents land in 8
+        // distinct regions.
+        let mut f = fm(4 * GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let (region_len, loads) = f.placement_regions();
+        assert_eq!(region_len, 512 * 1024 * 1024);
+        assert_eq!(loads.len(), 8);
+        let mut regions_hit = std::collections::HashSet::new();
+        for _ in 0..8 {
+            let e = f
+                .allocate_extent_placed(h, EXTENT_SIZE, PlacementPolicy::ContentionAware)
+                .unwrap();
+            regions_hit.insert(e.dpa.0 / region_len);
+            f.check_invariants().unwrap();
+        }
+        assert_eq!(regions_hit.len(), 8, "one extent per region before any region doubles up");
+        let (_, loads) = f.placement_regions();
+        assert!(loads.iter().all(|&l| l == EXTENT_SIZE), "perfectly balanced: {loads:?}");
+    }
+
+    #[test]
+    fn contention_aware_ties_fall_back_to_first_fit() {
+        // on an empty pool every region prices identically, so the
+        // cheapest candidate is the lowest DPA — first-fit
+        let mut f = fm(4 * GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let aware =
+            f.allocate_extent_placed(h, EXTENT_SIZE, PlacementPolicy::ContentionAware).unwrap();
+        assert_eq!(aware.dpa, Dpa(0), "tie-break is first-fit");
+        // and mid-range carving keeps the free list sorted + counted
+        f.check_invariants().unwrap();
+        f.release_extent(h, aware).unwrap();
+        f.check_invariants().unwrap();
+        assert_eq!(f.available(), 4 * GIB);
+    }
+
+    #[test]
+    fn placed_and_first_fit_leases_share_one_accounting_path() {
+        // interleave both policies; counters and invariants must hold,
+        // and a mid-free-range carve must split the range cleanly
+        let mut f = fm(4 * GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let a = f.allocate_extent(h).unwrap(); // first-fit → dpa 0
+        let b =
+            f.allocate_extent_placed(h, EXTENT_SIZE, PlacementPolicy::ContentionAware).unwrap();
+        assert_ne!(a.dpa.0 / (512 * 1024 * 1024), b.dpa.0 / (512 * 1024 * 1024));
+        f.check_invariants().unwrap();
+        // releasing the mid-space lease re-coalesces around it
+        f.release_extent(h, b).unwrap();
+        f.check_invariants().unwrap();
+        f.release_extent(h, a).unwrap();
+        assert_eq!(f.available(), 4 * GIB);
+        f.check_invariants().unwrap();
     }
 
     #[test]

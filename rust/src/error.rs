@@ -38,6 +38,11 @@ pub enum Error {
     /// The caller does not own the memory id.
     NotOwner { mmid: MmId },
 
+    /// A queued submission was cancelled before it was scheduled (its
+    /// host crashed and the lane was drained — see
+    /// [`AllocQueue::cancel_lane`](crate::lmb::queue::AllocQueue::cancel_lane)).
+    Cancelled { ticket: u64 },
+
     /// IOMMU rejected a device access (PCIe-side isolation, §3.3).
     IommuFault { bdf: String, hpa: Hpa, reason: String },
 
@@ -82,6 +87,9 @@ impl fmt::Display for Error {
             }
             Error::NotOwner { mmid } => {
                 write!(f, "memory id {mmid:?} is not owned by the calling device")
+            }
+            Error::Cancelled { ticket } => {
+                write!(f, "queued submission {ticket} cancelled before scheduling")
             }
             Error::IommuFault { bdf, hpa, reason } => {
                 write!(f, "iommu fault: device {bdf} access to {hpa:?} denied ({reason})")

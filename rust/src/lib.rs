@@ -62,6 +62,31 @@
 //! and `benches/perf_hotpath.rs` measures the win (>= 5x at pool scale,
 //! asserted) and dumps `BENCH_hotpath.json` for PR-over-PR tracking.
 //!
+//! ## Queued allocation
+//!
+//! Allocation is a submission/completion protocol over
+//! [`lmb::queue::AllocQueue`]: `submit` enqueues an alloc/free/share
+//! [`lmb::queue::Request`] on a per-host lane and returns a
+//! [`lmb::queue::Ticket`]; deterministic tick-driven scheduling
+//! (`tick_queue`/`drain_queue` on [`lmb::LmbHost`], [`system::System`]
+//! and [`cluster::Cluster`]) pops a rotating per-lane quota — fair
+//! across hosts, no RNG or clock, so tests replay from seeded request
+//! streams — and executes each host's group under a **single fabric
+//! lock**; `poll`/`take` observe and claim [`lmb::queue::Completion`]s.
+//! The synchronous `alloc`/`free`/`share` are one-shot submit + drain
+//! over the same queue, so there is exactly one allocation code path.
+//! Placement is contention-aware by default: the FM splits the DPA
+//! space into regions and prices every candidate carve point with the
+//! coordinator's M/M/1 cost model
+//! ([`coordinator::contention::placement_cost`]), spreading extents
+//! across regions and falling back to first-fit on ties
+//! ([`cxl::fm::PlacementPolicy`]). A crashed host's
+//! queued-but-unscheduled submissions are cancelled
+//! ([`error::Error::Cancelled`]) before its leases are reclaimed. The
+//! `RefCell` behind [`cxl::fm::FabricRef`] remains the single-threaded
+//! stand-in; the queue's schedule/execute split is where a real
+//! lock/actor boundary lands next.
+//!
 //! ## Quick start
 //!
 //! The control plane is the unified, consumer-generic API on
@@ -110,6 +135,10 @@ pub mod prelude {
     pub use crate::cxl::fm::{FabricManager, FabricRef, HostId};
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
+    pub use crate::lmb::queue::{
+        AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request,
+        Ticket,
+    };
     pub use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;

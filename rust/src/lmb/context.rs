@@ -16,6 +16,10 @@ use crate::cxl::fm::{FabricManager, FabricRef, HostId};
 use crate::cxl::types::{Bdf, Dpa, MmId, Spid};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
+use crate::lmb::queue::{
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled, Ticket,
+    DEFAULT_LANE_QUOTA,
+};
 use crate::lmb::{Consumer, LmbAlloc, LmbModule};
 use crate::pcie::iommu::Iommu;
 
@@ -68,6 +72,10 @@ pub struct LmbHost {
     module: LmbModule,
     host: HostId,
     host_spid: Spid,
+    /// This host's own allocation queue (single lane). The synchronous
+    /// `alloc`/`free`/`share` are one-shot submit + drain over it, so
+    /// queued and synchronous callers share one allocation code path.
+    queue: AllocQueue,
 }
 
 impl LmbHost {
@@ -110,7 +118,15 @@ impl LmbHost {
         // instead of spilling into the next host's HPA region
         let window_end = window_base.saturating_add(HOST_WINDOW_STRIDE);
         let space = AddressSpace::with_window_region(host_dram, window_base, Some(window_end));
-        Ok(LmbHost { fabric, iommu: Iommu::new(), space, module, host, host_spid })
+        Ok(LmbHost {
+            fabric,
+            iommu: Iommu::new(),
+            space,
+            module,
+            host,
+            host_spid,
+            queue: AllocQueue::new(),
+        })
     }
 
     pub fn host(&self) -> HostId {
@@ -133,52 +149,78 @@ impl LmbHost {
     }
 
     // ---- the unified Table 2 surface ----
+    //
+    // Since the queued-allocation refactor these are one-shot
+    // submit + drain over this host's [`AllocQueue`]: synchronous and
+    // queued callers exercise the identical scheduling and execution
+    // path ([`LmbHost::execute_requests`]).
 
     /// Allocate `size` bytes of LMB memory for `consumer`.
     pub fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
-        let mut fm = self.fabric.lock();
-        self.module.alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size)
+        let consumer = consumer.into();
+        let outcome = self.submit_and_wait(Request::Alloc { consumer, size })?;
+        outcome.into_alloc()
     }
 
-    /// Batch allocation, all-or-nothing: if any request fails, every
-    /// allocation already made by this call is rolled back (freed) and
-    /// the original error is returned. The whole batch — rollback
-    /// included — runs under a single fabric lock instead of
-    /// re-acquiring it per element.
+    /// Batch allocation, all-or-nothing: the whole batch is submitted to
+    /// the queue and drained in one go (each tick executes under a
+    /// single fabric lock); if any request fails, every allocation made
+    /// by this call is rolled back (freed) and the first error is
+    /// returned.
     pub fn alloc_many(
         &mut self,
         consumer: impl Into<Consumer>,
         sizes: &[u64],
     ) -> Result<Vec<LmbAlloc>> {
         let consumer = consumer.into();
-        let mut fm = self.fabric.lock();
-        let mut done: Vec<LmbAlloc> = Vec::with_capacity(sizes.len());
-        for &size in sizes {
-            let res =
-                self.module.alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size);
-            match res {
-                Ok(a) => done.push(a),
+        let tickets: Vec<Ticket> = sizes
+            .iter()
+            .map(|&size| self.queue.submit(0, Request::Alloc { consumer, size }))
+            .collect();
+        self.drain_queue();
+        let mut done: Vec<LmbAlloc> = Vec::with_capacity(tickets.len());
+        let mut first_err = None;
+        for t in tickets {
+            let result = match self.queue.take(t) {
+                Some(c) => c.result,
+                None => Err(Error::FabricManager("queue lost a completion".into())),
+            };
+            match result {
+                Ok(Outcome::Alloc(a)) => done.push(a),
+                Ok(_) => unreachable!("alloc submission yielded a non-alloc outcome"),
                 Err(e) => {
-                    for a in done.into_iter().rev() {
-                        let _ = self.module.free(
-                            &mut fm,
-                            &mut self.iommu,
-                            &mut self.space,
-                            consumer,
-                            a.mmid,
-                        );
+                    if first_err.is_none() {
+                        first_err = Some(e);
                     }
-                    return Err(e);
                 }
             }
         }
-        Ok(done)
+        match first_err {
+            None => Ok(done),
+            Some(e) => {
+                // roll back under a single fabric lock, newest first
+                let mut fm = self.fabric.lock();
+                for a in done.into_iter().rev() {
+                    let _ = self.module.free(
+                        &mut fm,
+                        &mut self.iommu,
+                        &mut self.space,
+                        consumer,
+                        a.mmid,
+                    );
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Free `mmid`, which must be owned by `consumer`.
     pub fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
-        let mut fm = self.fabric.lock();
-        self.module.free(&mut fm, &mut self.iommu, &mut self.space, consumer, mmid)
+        let consumer = consumer.into();
+        match self.submit_and_wait(Request::Free { consumer, mmid })? {
+            Outcome::Freed => Ok(()),
+            other => unreachable!("free submission yielded {other:?}"),
+        }
     }
 
     /// Zero-copy share of `mmid` (owned by `owner`) into `target`'s
@@ -189,8 +231,114 @@ impl LmbHost {
         target: impl Into<Consumer>,
         mmid: MmId,
     ) -> Result<LmbAlloc> {
+        let owner = owner.into();
+        let target = target.into();
+        let outcome = self.submit_and_wait(Request::Share { owner, target, mmid })?;
+        outcome.into_alloc()
+    }
+
+    // ---- queued allocation (submission / completion model) ----
+
+    /// Enqueue a control-plane request on this host's queue; returns a
+    /// completion handle. Nothing executes until [`LmbHost::tick_queue`]
+    /// or [`LmbHost::drain_queue`] (or any synchronous call, which
+    /// drains the queue as its one-shot path).
+    pub fn submit(&mut self, request: Request) -> Ticket {
+        self.queue.submit(0, request)
+    }
+
+    /// Where a submission is in its lifecycle.
+    pub fn poll_submission(&self, ticket: Ticket) -> QueueStatus {
+        self.queue.poll(ticket)
+    }
+
+    /// Claim a serviced submission's completion (tickets are
+    /// single-use).
+    pub fn take_completion(&mut self, ticket: Ticket) -> Option<Completion> {
+        self.queue.take(ticket)
+    }
+
+    /// Run one deterministic scheduling tick: pop up to the lane quota
+    /// of queued requests and execute them under a single fabric lock.
+    /// Returns how many were serviced.
+    pub fn tick_queue(&mut self) -> usize {
+        let batch = self.queue.schedule(DEFAULT_LANE_QUOTA);
+        let completions = self.execute_requests(batch);
+        let n = completions.len();
+        for c in completions {
+            self.queue.complete(c);
+        }
+        n
+    }
+
+    /// Tick until the queue is idle; returns how many submissions were
+    /// serviced.
+    pub fn drain_queue(&mut self) -> usize {
+        let mut total = 0;
+        loop {
+            let n = self.tick_queue();
+            if n == 0 {
+                return total;
+            }
+            total += n;
+        }
+    }
+
+    /// This host's allocation queue (stats / pending inspection).
+    pub fn queue(&self) -> &AllocQueue {
+        &self.queue
+    }
+
+    /// The extent-placement policy this host's module requests.
+    pub fn placement_policy(&self) -> PlacementPolicy {
+        self.module.placement_policy()
+    }
+
+    /// Override the extent-placement policy (ablation baselines).
+    pub fn set_placement_policy(&mut self, policy: PlacementPolicy) {
+        self.module.set_placement_policy(policy);
+    }
+
+    /// Execute scheduled requests against this host under **one** fabric
+    /// lock — the single allocation code path beneath both the
+    /// synchronous surface and every queue (this host's own and the
+    /// cluster-wide one, which routes each slot's scheduled group here).
+    /// One completion per request; a failure completes its own ticket
+    /// and does not stop the rest of the group.
+    pub fn execute_requests(&mut self, batch: Vec<Scheduled>) -> Vec<Completion> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let mut completions = Vec::with_capacity(batch.len());
         let mut fm = self.fabric.lock();
-        self.module.share(&mut fm, &mut self.iommu, owner, target, mmid)
+        for s in batch {
+            let result = match s.request {
+                Request::Alloc { consumer, size } => self
+                    .module
+                    .alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size)
+                    .map(Outcome::Alloc),
+                Request::Free { consumer, mmid } => self
+                    .module
+                    .free(&mut fm, &mut self.iommu, &mut self.space, consumer, mmid)
+                    .map(|()| Outcome::Freed),
+                Request::Share { owner, target, mmid } => self
+                    .module
+                    .share(&mut fm, &mut self.iommu, owner, target, mmid)
+                    .map(Outcome::Shared),
+            };
+            completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
+        }
+        completions
+    }
+
+    /// One-shot path for the synchronous surface: submit, drain, claim.
+    fn submit_and_wait(&mut self, request: Request) -> Result<Outcome> {
+        let ticket = self.submit(request);
+        self.drain_queue();
+        match self.queue.take(ticket) {
+            Some(c) => c.result,
+            None => Err(Error::FabricManager("queue lost a completion".into())),
+        }
     }
 
     /// Allocate with RAII semantics: the returned [`LmbRegion`] frees the
@@ -538,6 +686,80 @@ mod tests {
     fn io_session_unknown_mmid_rejected() {
         let mut host = host_with(GIB);
         assert!(matches!(host.io_session(MmId(404)), Err(Error::UnknownMmId(_))));
+    }
+
+    #[test]
+    fn queued_submissions_complete_on_drain() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let t_alloc = host.submit(Request::Alloc { consumer: dev.into(), size: 4 * PAGE_SIZE });
+        assert_eq!(host.poll_submission(t_alloc), QueueStatus::Queued);
+        assert_eq!(host.module().live_allocs(), 0, "nothing executes before a tick");
+        assert_eq!(host.drain_queue(), 1);
+        assert_eq!(host.poll_submission(t_alloc), QueueStatus::Ready);
+        let a = host.take_completion(t_alloc).unwrap().into_alloc().unwrap();
+        assert_eq!(a.size, 4 * PAGE_SIZE);
+        assert_eq!(host.poll_submission(t_alloc), QueueStatus::Unknown, "ticket retired");
+
+        // a queued free completes with Outcome::Freed
+        let t_free = host.submit(Request::Free { consumer: dev.into(), mmid: a.mmid });
+        assert_eq!(host.drain_queue(), 1);
+        let c = host.take_completion(t_free).unwrap();
+        assert!(matches!(c.result, Ok(Outcome::Freed)));
+        assert_eq!(host.module().live_allocs(), 0);
+        host.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sync_calls_drain_previously_queued_submissions() {
+        // the sync surface is submit+drain over the same queue, so a
+        // pending queued alloc is serviced (FIFO, before the sync op)
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let t = host.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE });
+        let b = host.alloc(dev, PAGE_SIZE).unwrap();
+        let a = host.take_completion(t).unwrap().into_alloc().unwrap();
+        assert!(a.mmid < b.mmid, "queued submission serviced first");
+        assert_eq!(host.module().live_allocs(), 2);
+        let stats = host.queue().stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn queued_failure_completes_with_error_not_panic() {
+        let mut host = host_with(GIB); // 4 extents
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let ok: Vec<_> = (0..4)
+            .map(|_| host.submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE }))
+            .collect();
+        let doomed = host.submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE });
+        host.drain_queue();
+        for t in ok {
+            assert!(host.take_completion(t).unwrap().result.is_ok());
+        }
+        let c = host.take_completion(doomed).unwrap();
+        assert!(matches!(c.result, Err(Error::OutOfCapacity { .. })), "got {:?}", c.result);
+        assert_eq!(host.module().leased(), GIB, "failure did not disturb the group");
+        host.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn placement_policy_is_configurable_per_host() {
+        let mut host = host_with(4 * GIB);
+        assert_eq!(host.placement_policy(), PlacementPolicy::ContentionAware);
+        host.set_placement_policy(PlacementPolicy::FirstFit);
+        assert_eq!(host.placement_policy(), PlacementPolicy::FirstFit);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        // first-fit packs from DPA 0 upward
+        let a = host.alloc(dev, EXTENT_SIZE).unwrap();
+        let b = host.alloc(dev, EXTENT_SIZE).unwrap();
+        assert_eq!(a.dpa, Dpa(0));
+        assert_eq!(b.dpa, Dpa(EXTENT_SIZE));
     }
 
     #[test]

@@ -36,8 +36,12 @@
 pub mod allocator;
 pub mod context;
 pub mod failure;
+pub mod queue;
 
 pub use context::{IoSession, LmbHost, LmbRegion};
+pub use queue::{
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request, Ticket,
+};
 
 use std::collections::HashMap;
 
@@ -125,6 +129,10 @@ pub struct LmbModule {
     /// The GFD's DPID handed to CXL consumers for P2P addressing,
     /// plumbed from [`FabricManager::attach_gfd`] through host binding.
     gfd_dpid: Dpid,
+    /// How the FM places this module's fresh extents (see
+    /// [`PlacementPolicy`]); contention-aware by default, first-fit as
+    /// the ablation baseline.
+    policy: PlacementPolicy,
 }
 
 impl LmbModule {
@@ -138,11 +146,22 @@ impl LmbModule {
             allocs: HashMap::new(),
             loaded: true,
             gfd_dpid,
+            policy: PlacementPolicy::ContentionAware,
         }
     }
 
     pub fn host(&self) -> HostId {
         self.host
+    }
+
+    /// The extent-placement policy this module asks the FM for.
+    pub fn placement_policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Override the extent-placement policy (ablations / baselines).
+    pub fn set_placement_policy(&mut self, policy: PlacementPolicy) {
+        self.policy = policy;
     }
 
     pub fn is_loaded(&self) -> bool {
@@ -192,7 +211,7 @@ impl LmbModule {
         // exceeds one extent. Each extent gets an HDM window + decoder.
         let needed = size.div_ceil(EXTENT_SIZE).max(1);
         for _ in 0..needed {
-            let ext = fm.allocate_extent(self.host)?;
+            let ext = fm.allocate_extent_placed(self.host, EXTENT_SIZE, self.policy)?;
             let hpa = match space.place_hdm_window(ext.len, ext.dpa) {
                 Ok(h) => h,
                 Err(e) => {

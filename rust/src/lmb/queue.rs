@@ -1,0 +1,422 @@
+//! Queued allocation (§3.2 at fleet scale): submissions, completions,
+//! and deterministic tick-driven scheduling over the shared FM.
+//!
+//! The paper's allocator API is synchronous per host, but its
+//! scalability story has many devices' allocation traffic contending on
+//! one Fabric Manager. [`AllocQueue`] turns that contention point into
+//! a scheduling point:
+//!
+//! * **Submission** — [`AllocQueue::submit`] enqueues a [`Request`]
+//!   (alloc / free / share) on a *lane* (one lane per host slot) and
+//!   returns a [`Ticket`] immediately; nothing touches the fabric yet.
+//! * **Scheduling** — [`AllocQueue::schedule`] pops up to a per-lane
+//!   quota of requests per tick, visiting lanes in rotating order so
+//!   every host makes progress (no lane can starve a sibling). The
+//!   schedule is a pure function of the submission history — no clock,
+//!   no RNG — so queued tests replay deterministically from a seeded
+//!   request stream.
+//! * **Execution** — the queue owner (an
+//!   [`LmbHost`](crate::lmb::LmbHost) for its own lane, the
+//!   [`Cluster`](crate::cluster::Cluster) across slots) executes each
+//!   scheduled group under a **single fabric lock** via
+//!   [`LmbHost::execute_requests`](crate::lmb::LmbHost::execute_requests)
+//!   — the same single-lock batch entry `alloc_many` established — and
+//!   posts a [`Completion`] per ticket back with
+//!   [`AllocQueue::complete`].
+//! * **Completion** — callers observe progress with
+//!   [`AllocQueue::poll`] and claim results with [`AllocQueue::take`]
+//!   (tickets are single-use: once taken, a ticket is gone).
+//!
+//! Placement is where the contention model bites: each executing host
+//! carries a [`PlacementPolicy`], and under
+//! [`PlacementPolicy::ContentionAware`] the FM prices every candidate
+//! carve point with the coordinator's queueing cost model and spreads
+//! extents across placement regions (falling back to first-fit on
+//! ties). The synchronous `alloc`/`free`/`share` surfaces are one-shot
+//! submit + drain over this queue, so there is exactly one allocation
+//! code path whether callers are synchronous or queued.
+//!
+//! When a host crashes, its lane is cancelled
+//! ([`AllocQueue::cancel_lane`]): queued-but-unscheduled submissions
+//! complete with [`Error::Cancelled`] instead of leaking tickets or
+//! executing against reclaimed leases.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::cxl::types::MmId;
+use crate::error::{Error, Result};
+use crate::lmb::{Consumer, LmbAlloc};
+
+pub use crate::cxl::fm::PlacementPolicy;
+
+/// Default per-lane quota a drain tick schedules (see
+/// [`AllocQueue::schedule`]).
+pub const DEFAULT_LANE_QUOTA: usize = 16;
+
+/// Completion handle returned by [`AllocQueue::submit`]. Single-use:
+/// taking the completion retires the ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ticket(pub u64);
+
+/// One queued control-plane operation.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Allocate `size` bytes for `consumer` (→ [`Outcome::Alloc`]).
+    Alloc { consumer: Consumer, size: u64 },
+    /// Free `mmid`, which must be owned by `consumer` (→ [`Outcome::Freed`]).
+    Free { consumer: Consumer, mmid: MmId },
+    /// Owner-authorised zero-copy share (→ [`Outcome::Shared`]).
+    Share { owner: Consumer, target: Consumer, mmid: MmId },
+}
+
+impl Request {
+    /// The mmid an already-live allocation this request operates on, if
+    /// any — the cluster router checks its home host before dispatch.
+    pub fn target_mmid(&self) -> Option<MmId> {
+        match self {
+            Request::Alloc { .. } => None,
+            Request::Free { mmid, .. } | Request::Share { mmid, .. } => Some(*mmid),
+        }
+    }
+}
+
+/// Successful result of a serviced [`Request`].
+#[derive(Debug, Clone, Copy)]
+pub enum Outcome {
+    Alloc(LmbAlloc),
+    Freed,
+    Shared(LmbAlloc),
+}
+
+impl Outcome {
+    /// Unwrap the allocation handle an alloc/share outcome carries (the
+    /// common case for synchronous callers).
+    pub fn into_alloc(self) -> Result<LmbAlloc> {
+        match self {
+            Outcome::Alloc(a) | Outcome::Shared(a) => Ok(a),
+            Outcome::Freed => Err(Error::FabricManager(
+                "completion carried a free outcome, not an allocation".into(),
+            )),
+        }
+    }
+}
+
+/// A serviced (or cancelled) submission, claimed via
+/// [`AllocQueue::take`].
+#[derive(Debug)]
+pub struct Completion {
+    pub ticket: Ticket,
+    /// Lane (host slot) the submission was routed on.
+    pub lane: usize,
+    pub result: Result<Outcome>,
+}
+
+impl Completion {
+    /// Whether this submission was cancelled (lane drained on host
+    /// crash) rather than executed.
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self.result, Err(Error::Cancelled { .. }))
+    }
+
+    /// Unwrap an allocation outcome (the common case for sync callers).
+    pub fn into_alloc(self) -> Result<LmbAlloc> {
+        self.result?.into_alloc()
+    }
+}
+
+/// Where a ticket currently is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueStatus {
+    /// Submitted, not yet scheduled.
+    Queued,
+    /// Popped by [`AllocQueue::schedule`], completion not yet posted
+    /// (only observable between a manual `schedule` and `complete`).
+    InFlight,
+    /// Completion ready to [`AllocQueue::take`].
+    Ready,
+    /// Cancelled by [`AllocQueue::cancel_lane`]; `take` yields the
+    /// [`Error::Cancelled`] completion.
+    Cancelled,
+    /// Never submitted, or already taken.
+    Unknown,
+}
+
+/// Lifetime counters (observability; also what the ablation reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub ticks: u64,
+}
+
+/// A scheduled request handed to the executor for one tick.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    pub ticket: Ticket,
+    pub lane: usize,
+    pub request: Request,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EntryState {
+    Queued,
+    InFlight,
+}
+
+/// The queued-allocation scheduler. See the module docs for the
+/// submission → schedule → execute → complete lifecycle.
+#[derive(Debug, Default)]
+pub struct AllocQueue {
+    /// Per-lane FIFOs, keyed by lane id (sorted, so rotation order is
+    /// deterministic). Empty lanes are removed eagerly.
+    lanes: BTreeMap<usize, VecDeque<(Ticket, Request)>>,
+    /// Lifecycle of every ticket not yet completed.
+    states: HashMap<u64, EntryState>,
+    /// Posted completions awaiting [`AllocQueue::take`].
+    completions: HashMap<u64, Completion>,
+    next_ticket: u64,
+    /// First lane the next tick serves (rotates for fairness).
+    rr_start: usize,
+    stats: QueueStats,
+}
+
+impl AllocQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue `request` on `lane`; returns its completion handle.
+    pub fn submit(&mut self, lane: usize, request: Request) -> Ticket {
+        let ticket = Ticket(self.next_ticket);
+        self.next_ticket += 1;
+        self.lanes.entry(lane).or_default().push_back((ticket, request));
+        self.states.insert(ticket.0, EntryState::Queued);
+        self.stats.submitted += 1;
+        ticket
+    }
+
+    /// Pop one tick's worth of work: up to `quota` requests per lane,
+    /// lanes visited in ascending order starting from the rotation
+    /// cursor. Each lane's pops stay contiguous in the returned batch so
+    /// the executor can service a whole lane group under one fabric
+    /// lock. Deterministic: identical submission histories produce
+    /// identical schedules.
+    pub fn schedule(&mut self, quota: usize) -> Vec<Scheduled> {
+        if self.lanes.is_empty() || quota == 0 {
+            return Vec::new();
+        }
+        // rotation: lanes >= cursor first, then wrap around
+        let order: Vec<usize> = {
+            let after: Vec<usize> = self.lanes.range(self.rr_start..).map(|(&l, _)| l).collect();
+            let before: Vec<usize> = self.lanes.range(..self.rr_start).map(|(&l, _)| l).collect();
+            after.into_iter().chain(before).collect()
+        };
+        let mut batch = Vec::new();
+        for lane in &order {
+            let queue = self.lanes.get_mut(lane).expect("lane listed but missing");
+            for _ in 0..quota {
+                match queue.pop_front() {
+                    Some((ticket, request)) => {
+                        self.states.insert(ticket.0, EntryState::InFlight);
+                        batch.push(Scheduled { ticket, lane: *lane, request });
+                    }
+                    None => break,
+                }
+            }
+            if queue.is_empty() {
+                self.lanes.remove(lane);
+            }
+        }
+        // next tick starts after the lane served first this tick
+        if let Some(&first) = order.first() {
+            self.rr_start = first + 1;
+        }
+        self.stats.ticks += 1;
+        batch
+    }
+
+    /// Post the result of a scheduled request.
+    pub fn complete(&mut self, completion: Completion) {
+        let ticket = completion.ticket;
+        if completion.is_cancelled() {
+            self.stats.cancelled += 1;
+        } else {
+            self.stats.completed += 1;
+        }
+        self.states.remove(&ticket.0);
+        self.completions.insert(ticket.0, completion);
+    }
+
+    /// Drop every queued-but-unscheduled submission on `lane`, posting
+    /// an [`Error::Cancelled`] completion for each so no ticket is left
+    /// dangling. Returns how many were cancelled. The cluster's host
+    /// crash path calls this before releasing the host's leases.
+    pub fn cancel_lane(&mut self, lane: usize) -> usize {
+        let Some(queue) = self.lanes.remove(&lane) else {
+            return 0;
+        };
+        let n = queue.len();
+        for (ticket, _) in queue {
+            self.states.remove(&ticket.0);
+            self.completions.insert(
+                ticket.0,
+                Completion { ticket, lane, result: Err(Error::Cancelled { ticket: ticket.0 }) },
+            );
+            self.stats.cancelled += 1;
+        }
+        n
+    }
+
+    /// Where `ticket` is in its lifecycle.
+    pub fn poll(&self, ticket: Ticket) -> QueueStatus {
+        if let Some(c) = self.completions.get(&ticket.0) {
+            if c.is_cancelled() {
+                return QueueStatus::Cancelled;
+            }
+            return QueueStatus::Ready;
+        }
+        match self.states.get(&ticket.0) {
+            Some(EntryState::Queued) => QueueStatus::Queued,
+            Some(EntryState::InFlight) => QueueStatus::InFlight,
+            None => QueueStatus::Unknown,
+        }
+    }
+
+    /// Claim a completion; the ticket is retired. `None` while still
+    /// queued/in-flight (poll first) or if the ticket is unknown.
+    pub fn take(&mut self, ticket: Ticket) -> Option<Completion> {
+        self.completions.remove(&ticket.0)
+    }
+
+    /// Submissions not yet scheduled (across all lanes).
+    pub fn pending(&self) -> usize {
+        self.lanes.values().map(VecDeque::len).sum()
+    }
+
+    /// Submissions not yet scheduled on one lane.
+    pub fn pending_on(&self, lane: usize) -> usize {
+        self.lanes.get(&lane).map_or(0, VecDeque::len)
+    }
+
+    /// Completions posted but not yet taken.
+    pub fn ready(&self) -> usize {
+        self.completions.len()
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::types::{Bdf, PAGE_SIZE};
+
+    fn alloc_req(pages: u64) -> Request {
+        Request::Alloc { consumer: Consumer::Pcie(Bdf::new(1, 0, 0)), size: pages * PAGE_SIZE }
+    }
+
+    #[test]
+    fn submit_poll_take_lifecycle() {
+        let mut q = AllocQueue::new();
+        let t = q.submit(0, alloc_req(1));
+        assert_eq!(q.poll(t), QueueStatus::Queued);
+        assert_eq!(q.pending(), 1);
+        let batch = q.schedule(8);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.poll(t), QueueStatus::InFlight);
+        q.complete(Completion { ticket: t, lane: 0, result: Ok(Outcome::Freed) });
+        assert_eq!(q.poll(t), QueueStatus::Ready);
+        let c = q.take(t).unwrap();
+        assert_eq!(c.ticket, t);
+        assert_eq!(q.poll(t), QueueStatus::Unknown, "tickets are single-use");
+        assert!(q.take(t).is_none());
+        let s = q.stats();
+        assert_eq!((s.submitted, s.completed, s.cancelled, s.ticks), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn schedule_is_fair_across_lanes_and_rotates() {
+        let mut q = AllocQueue::new();
+        // lane 0 floods; lane 1 submits two
+        let heavy: Vec<Ticket> = (0..6).map(|_| q.submit(0, alloc_req(1))).collect();
+        let light: Vec<Ticket> = (0..2).map(|_| q.submit(1, alloc_req(1))).collect();
+        // quota 2: both lanes progress every tick — the flood cannot
+        // starve the light lane
+        let b1 = q.schedule(2);
+        let lanes1: Vec<usize> = b1.iter().map(|s| s.lane).collect();
+        assert_eq!(lanes1, [0, 0, 1, 1], "lane groups contiguous, both served");
+        assert!(b1.iter().any(|s| s.ticket == light[0]));
+        // rotation: the next tick starts at lane 1 (empty now) → lane 0
+        let b2 = q.schedule(2);
+        assert_eq!(b2.len(), 2);
+        assert!(b2.iter().all(|s| s.lane == 0));
+        let b3 = q.schedule(2);
+        assert_eq!(b3.len(), 2);
+        assert_eq!(q.pending(), 0);
+        assert!(q.schedule(2).is_empty());
+        let _ = heavy;
+    }
+
+    #[test]
+    fn rotation_starts_later_lanes_first_on_the_next_tick() {
+        let mut q = AllocQueue::new();
+        for lane in 0..3 {
+            q.submit(lane, alloc_req(1));
+            q.submit(lane, alloc_req(1));
+        }
+        let b1 = q.schedule(1);
+        assert_eq!(b1.iter().map(|s| s.lane).collect::<Vec<_>>(), [0, 1, 2]);
+        // cursor moved past lane 0: the wrap order is now 1, 2, 0
+        let b2 = q.schedule(1);
+        assert_eq!(b2.iter().map(|s| s.lane).collect::<Vec<_>>(), [1, 2, 0]);
+    }
+
+    #[test]
+    fn deterministic_schedules_for_identical_histories() {
+        let drive = || {
+            let mut q = AllocQueue::new();
+            for i in 0..12u64 {
+                q.submit((i % 3) as usize, alloc_req(i + 1));
+            }
+            let mut order = Vec::new();
+            loop {
+                let batch = q.schedule(2);
+                if batch.is_empty() {
+                    break;
+                }
+                order.extend(batch.into_iter().map(|s| (s.lane, s.ticket.0)));
+            }
+            order
+        };
+        assert_eq!(drive(), drive());
+    }
+
+    #[test]
+    fn cancel_lane_completes_queued_submissions_as_cancelled() {
+        let mut q = AllocQueue::new();
+        let doomed: Vec<Ticket> = (0..3).map(|_| q.submit(4, alloc_req(1))).collect();
+        let survivor = q.submit(5, alloc_req(1));
+        assert_eq!(q.cancel_lane(4), 3);
+        assert_eq!(q.cancel_lane(4), 0, "idempotent");
+        for t in doomed {
+            assert_eq!(q.poll(t), QueueStatus::Cancelled);
+            let c = q.take(t).unwrap();
+            assert!(c.is_cancelled());
+            assert!(matches!(c.result, Err(Error::Cancelled { ticket }) if ticket == t.0));
+        }
+        assert_eq!(q.poll(survivor), QueueStatus::Queued, "sibling lane untouched");
+        assert_eq!(q.stats().cancelled, 3);
+        assert_eq!(q.pending(), 1);
+    }
+
+    #[test]
+    fn zero_quota_schedules_nothing() {
+        let mut q = AllocQueue::new();
+        let t = q.submit(0, alloc_req(1));
+        assert!(q.schedule(0).is_empty());
+        assert_eq!(q.poll(t), QueueStatus::Queued);
+    }
+}

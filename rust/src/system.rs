@@ -15,6 +15,7 @@ use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, Bdf, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
+use crate::lmb::queue::{AllocQueue, Completion, QueueStatus, Request, Ticket};
 use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule};
 use crate::pcie::iommu::Iommu;
 use crate::ssd::spec::SsdSpec;
@@ -239,6 +240,38 @@ impl System {
         self.lmb.share(owner, target, mmid)
     }
 
+    // ---- queued allocation (forwarded to the LmbHost queue) ----
+
+    /// Enqueue a control-plane request; see [`LmbHost::submit`].
+    pub fn submit(&mut self, request: Request) -> Ticket {
+        self.lmb.submit(request)
+    }
+
+    /// Where a submission is in its lifecycle.
+    pub fn poll_submission(&self, ticket: Ticket) -> QueueStatus {
+        self.lmb.poll_submission(ticket)
+    }
+
+    /// Claim a serviced submission's completion.
+    pub fn take_completion(&mut self, ticket: Ticket) -> Option<Completion> {
+        self.lmb.take_completion(ticket)
+    }
+
+    /// One deterministic queue tick; see [`LmbHost::tick_queue`].
+    pub fn tick_queue(&mut self) -> usize {
+        self.lmb.tick_queue()
+    }
+
+    /// Tick until the queue is idle; see [`LmbHost::drain_queue`].
+    pub fn drain_queue(&mut self) -> usize {
+        self.lmb.drain_queue()
+    }
+
+    /// The host's allocation queue (stats / pending inspection).
+    pub fn queue(&self) -> &AllocQueue {
+        self.lmb.queue()
+    }
+
     // ---- deprecated Table 2 shims ----
 
     /// `lmb_PCIe_alloc` for an attached SSD.
@@ -398,6 +431,23 @@ mod tests {
     #[should_panic(expected = "overflows u64")]
     fn builder_rejects_overflowing_host_dram_size() {
         let _ = System::builder().host_dram_gib(1 << 40);
+    }
+
+    #[test]
+    fn queued_surface_forwards_to_host_queue() {
+        let mut sys = System::builder().expander_gib(1).build().unwrap();
+        let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
+        let dev = sys.consumer(ssd).unwrap();
+        let t = sys.submit(Request::Alloc { consumer: dev, size: PAGE_SIZE });
+        assert_eq!(sys.poll_submission(t), QueueStatus::Queued);
+        assert_eq!(sys.drain_queue(), 1);
+        let a = sys.take_completion(t).unwrap().into_alloc().unwrap();
+        sys.write_alloc(a.mmid, 0, b"queued").unwrap();
+        let mut buf = [0u8; 6];
+        sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
+        assert_eq!(&buf, b"queued");
+        sys.free(dev, a.mmid).unwrap();
+        assert_eq!(sys.queue().stats().completed, 2);
     }
 
     #[test]

@@ -119,6 +119,33 @@ impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
 const BASE_SEED: u64 = 0x1_5eed_cafe;
 const MAX_SHRINK_STEPS: usize = 2000;
 
+/// Base seed for [`check`]: the `LMB_PROP_SEED` environment variable
+/// when set (decimal, or hex with an `0x` prefix — the same form the
+/// failure message prints), else [`BASE_SEED`]. CI pins the variable so
+/// a red property run reproduces locally with the identical cases; a
+/// set-but-unparseable value panics rather than silently voiding that
+/// contract by falling back to the default seed.
+pub fn base_seed() -> u64 {
+    match std::env::var("LMB_PROP_SEED") {
+        Err(_) => BASE_SEED,
+        Ok(v) => match parse_seed(Some(&v)) {
+            Some(seed) => seed,
+            None => panic!("LMB_PROP_SEED {v:?} is not a decimal or 0x-prefixed hex u64"),
+        },
+    }
+}
+
+/// Parsing behind [`base_seed`], split out so tests never mutate the
+/// process environment (a data race under the parallel test harness).
+fn parse_seed(var: Option<&str>) -> Option<u64> {
+    let v = var?.trim();
+    let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(&hex.replace('_', ""), 16),
+        None => v.parse::<u64>(),
+    };
+    parsed.ok()
+}
+
 /// Run `cases` random checks of `prop` over values drawn by `gen`.
 ///
 /// Panics with the shrunk counterexample and reproduction seed on
@@ -129,7 +156,7 @@ where
     G: Fn(&mut Pcg64) -> T,
     P: Fn(&T) -> bool,
 {
-    check_seeded(name, BASE_SEED, cases, gen, prop)
+    check_seeded(name, base_seed(), cases, gen, prop)
 }
 
 /// [`check`] with an explicit base seed (printed seeds reproduce 1 case).
@@ -205,6 +232,17 @@ mod tests {
             );
         });
         assert!(result.is_err(), "property should fail");
+    }
+
+    #[test]
+    fn seed_override_parsing() {
+        assert_eq!(parse_seed(None), None);
+        assert_eq!(parse_seed(Some("12345")), Some(12345));
+        assert_eq!(parse_seed(Some("0x15eedcafe")), Some(0x1_5eed_cafe));
+        assert_eq!(parse_seed(Some("0x1_5eed_cafe")), Some(0x1_5eed_cafe), "underscores ok");
+        assert_eq!(parse_seed(Some(" 0XFF ")), Some(0xff), "whitespace + upper-case prefix");
+        assert_eq!(parse_seed(Some("junk")), None);
+        assert_eq!(parse_seed(Some("")), None);
     }
 
     #[test]

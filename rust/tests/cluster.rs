@@ -105,6 +105,46 @@ fn crashed_hosts_stale_p2p_grants_do_not_survive_release() {
 }
 
 #[test]
+fn crash_with_pending_submissions_cancels_them_without_orphans() {
+    // Regression: `crash_host` used to reclaim leases but leave the
+    // victim's queued-but-unscheduled submissions in the cluster queue —
+    // dangling tickets that would execute against a dead slot.
+    let (mut cluster, dev) = cluster(2, 1);
+    cluster.alloc(0, dev, EXTENT_SIZE).unwrap();
+    let extent_req = Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE };
+    let page_req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+    let pending: Vec<_> = (0..3)
+        .map(|_| cluster.submit(0, extent_req.clone()).unwrap())
+        .collect();
+    let sibling = cluster.submit(1, page_req.clone()).unwrap();
+    assert_eq!(cluster.queue().pending(), 4);
+
+    cluster.crash_host(0).unwrap();
+
+    // every pending victim submission completed as cancelled — no
+    // orphaned completions, and none of them leased anything
+    for t in pending {
+        assert_eq!(cluster.poll_submission(t), QueueStatus::Cancelled);
+        let c = cluster.take_completion(t).unwrap();
+        assert!(c.is_cancelled());
+        assert!(matches!(c.result, Err(Error::Cancelled { .. })));
+    }
+    assert_eq!(cluster.available(), GIB, "victim's lease reclaimed, no queued alloc leaked");
+    assert_eq!(cluster.queue().pending(), 1, "sibling's submission survives the crash");
+
+    // the sibling's queued work services normally afterwards
+    cluster.drain_queue();
+    let a = cluster.take_completion(sibling).unwrap().into_alloc().unwrap();
+    assert_eq!(cluster.owner_slot_of(a.mmid), Some(1));
+    assert_eq!(cluster.available(), GIB - EXTENT_SIZE);
+    assert_eq!(cluster.queue().pending(), 0);
+    assert_eq!(cluster.queue().ready(), 0, "no completion left unclaimed");
+    // submissions routed at the dead slot are rejected up front
+    assert!(cluster.submit(0, page_req).is_err());
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
 fn mmids_are_fabric_global_and_isolated() {
     let (mut cluster, dev) = cluster(3, 2);
     let mut all = Vec::new();

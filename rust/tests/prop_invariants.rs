@@ -198,6 +198,177 @@ fn multi_host_interleavings_preserve_invariants_and_isolation() {
     );
 }
 
+/// Queued ≡ synchronous: the same request stream pushed through the
+/// cluster-wide `AllocQueue` (burst submit, then drain) and through the
+/// synchronous routed surface must land in identical end states —
+/// per-op success/mmid sequences, every live placement's (dpa, hpa,
+/// size), per-host lease accounting, pool availability and SAT
+/// population. This is the contract that lets the sync surface be a
+/// one-shot submit+drain over the queue without behaviour change.
+///
+/// Bursts target a single host so FIFO lane order equals submission
+/// order in both worlds (cross-host *fairness* ordering is pinned by
+/// the queue's own unit tests; it is deliberately not stream order).
+#[test]
+fn queued_and_synchronous_allocation_agree() {
+    use lmb::cxl::types::Bdf;
+    use std::collections::HashSet;
+
+    type Burst = (u64, Vec<(u64, u64, u64)>);
+
+    /// Per-op outcome + full end-state summary of one world.
+    type WorldTrace = (Vec<(bool, u64)>, Vec<Vec<(u64, u64, u64, u64)>>, u64, Vec<u64>, usize);
+
+    fn run_world(script: &[Burst], queued: bool) -> Option<WorldTrace> {
+        let dev_a = Bdf::new(1, 0, 0);
+        let dev_b = Bdf::new(2, 0, 0);
+        let mut cluster = Cluster::builder()
+            .hosts(3)
+            .expander_gib(2)
+            .host_dram_gib(1)
+            .build()
+            .unwrap();
+        for slot in 0..3 {
+            let host = cluster.host_mut(slot).unwrap();
+            host.attach_pcie(dev_a);
+            host.attach_pcie(dev_b);
+        }
+        let mut live: Vec<Vec<MmId>> = vec![Vec::new(); 3];
+        let mut ops_trace: Vec<(bool, u64)> = Vec::new();
+        for (slot_sel, ops) in script {
+            let slot = (slot_sel % 3) as usize;
+            // resolve picks against the pre-burst snapshot in both
+            // worlds, skipping duplicate frees, so the resolved request
+            // list is a pure function of the shared state
+            let snapshot = live[slot].clone();
+            let mut freed: HashSet<usize> = HashSet::new();
+            let mut requests: Vec<Request> = Vec::new();
+            for &(op, pages, pick) in ops {
+                match op % 3 {
+                    0 => requests.push(Request::Alloc {
+                        consumer: dev_a.into(),
+                        size: (pages.max(1)).min(64) * PAGE_SIZE,
+                    }),
+                    1 => {
+                        if snapshot.is_empty() {
+                            continue;
+                        }
+                        let i = pick as usize % snapshot.len();
+                        if !freed.insert(i) {
+                            continue;
+                        }
+                        requests.push(Request::Free {
+                            consumer: dev_a.into(),
+                            mmid: snapshot[i],
+                        });
+                    }
+                    _ => {
+                        if snapshot.is_empty() {
+                            continue;
+                        }
+                        let i = pick as usize % snapshot.len();
+                        requests.push(Request::Share {
+                            owner: dev_a.into(),
+                            target: dev_b.into(),
+                            mmid: snapshot[i],
+                        });
+                    }
+                }
+            }
+            // execute the burst
+            let results: Vec<(Request, Result<Outcome, Error>)> = if queued {
+                let tickets: Vec<(Ticket, Request)> = requests
+                    .into_iter()
+                    .map(|r| (cluster.submit(slot, r.clone()).unwrap(), r))
+                    .collect();
+                cluster.drain_queue();
+                tickets
+                    .into_iter()
+                    .map(|(t, r)| cluster.take_completion(t).map(|c| (r, c.result)))
+                    .collect::<Option<Vec<_>>>()?
+            } else {
+                requests
+                    .into_iter()
+                    .map(|r| {
+                        let res = match r.clone() {
+                            Request::Alloc { consumer, size } => cluster
+                                .alloc(slot, consumer, size)
+                                .map(Outcome::Alloc),
+                            Request::Free { consumer, mmid } => {
+                                cluster.free(slot, consumer, mmid).map(|()| Outcome::Freed)
+                            }
+                            Request::Share { owner, target, mmid } => {
+                                cluster.share(slot, owner, target, mmid).map(Outcome::Shared)
+                            }
+                        };
+                        (r, res)
+                    })
+                    .collect()
+            };
+            // fold outcomes into the shared live-set + trace
+            for (req, res) in results {
+                match (&req, &res) {
+                    (Request::Alloc { .. }, Ok(Outcome::Alloc(a))) => {
+                        live[slot].push(a.mmid);
+                        ops_trace.push((true, a.mmid.0));
+                    }
+                    (Request::Free { mmid, .. }, Ok(Outcome::Freed)) => {
+                        live[slot].retain(|&m| m != *mmid);
+                        ops_trace.push((true, mmid.0));
+                    }
+                    (Request::Share { .. }, Ok(Outcome::Shared(a))) => {
+                        ops_trace.push((true, a.mmid.0));
+                    }
+                    (_, Err(_)) => ops_trace.push((false, 0)),
+                    _ => return None, // outcome/request kind mismatch
+                }
+            }
+            if cluster.check_invariants().is_err() {
+                return None;
+            }
+        }
+        // end-state summary
+        let mut placements: Vec<Vec<(u64, u64, u64, u64)>> = Vec::new();
+        let mut leased: Vec<u64> = Vec::new();
+        for slot in 0..3 {
+            let host = cluster.host(slot).unwrap();
+            let mut rows: Vec<(u64, u64, u64, u64)> = host
+                .mmids()
+                .into_iter()
+                .map(|m| {
+                    let a = host.get(m).unwrap();
+                    (m.0, a.dpa.0, a.hpa.0, a.size)
+                })
+                .collect();
+            rows.sort_unstable();
+            placements.push(rows);
+            leased.push(cluster.leased_to(slot).unwrap());
+        }
+        let sat_len = cluster.fm().expander().sat().len();
+        Some((ops_trace, placements, cluster.available(), leased, sat_len))
+    }
+
+    prop::check(
+        "queued ≡ synchronous cluster allocation",
+        24,
+        |rng| {
+            prop::vec_of(rng, 10, |r| {
+                (
+                    r.next_below(3),
+                    prop::vec_of(r, 8, |r2| {
+                        (r2.next_below(3), r2.next_below(16) + 1, r2.next_below(8))
+                    }),
+                )
+            })
+        },
+        |script: &Vec<Burst>| {
+            let q = run_world(script, true);
+            let s = run_world(script, false);
+            q.is_some() && q == s
+        },
+    );
+}
+
 /// Isolation: no sequence of allocations ever hands two devices
 /// overlapping DPA ranges (unless explicitly shared).
 #[test]
