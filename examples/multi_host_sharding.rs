@@ -89,11 +89,11 @@ fn main() -> Result<()> {
     assert_eq!(cluster.available(), 2 * EXTENT_SIZE, "host0's extents reclaimed");
     assert_eq!(cluster.leased_to(1)?, 2 * EXTENT_SIZE, "host1 untouched");
     assert!(
-        !cluster.fm().expander().sat().check(accel0, s0.dpa, 64, false),
+        !cluster.with_fm(|fm| fm.expander().sat().check(accel0, s0.dpa, 64, false))?,
         "host0's stale P2P grant revoked with its lease"
     );
     assert!(
-        cluster.fm().expander().sat().check(accel1, s1.dpa, 64, true),
+        cluster.with_fm(|fm| fm.expander().sat().check(accel1, s1.dpa, 64, true))?,
         "host1's P2P grant survives the sibling's crash"
     );
 

@@ -58,20 +58,22 @@ fn main() -> Result<()> {
     sys.read_alloc(shared.mmid, 0, &mut buf)?;
     println!("accelerator reads: {:?}", std::str::from_utf8(&buf).unwrap());
 
-    // 6. Access-control check: the accelerator's SAT entry exists...
-    assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
+    // 6. Access-control check (the scoped fabric view: the closure
+    //    runs with the FM locked, nothing escapes): the accelerator's
+    //    SAT entry exists...
+    assert!(sys.with_fm(|fm| fm.expander().sat().check(accel, shared.dpa, 64, true))?);
     // ...and only the owner could have created it:
     assert!(sys.share(accel, accel, alloc.mmid).is_err(), "non-owner share denied");
 
     // 7. free tears everything down: IOMMU mapping, SAT entry, and
     //    (fully-drained) extents go back to the fabric manager.
     sys.free(ssd, alloc.mmid)?;
-    assert!(!sys.fm().expander().sat().check(accel, shared.dpa, 64, false));
+    assert!(!sys.with_fm(|fm| fm.expander().sat().check(accel, shared.dpa, 64, false))?);
     println!(
         "freed: module leases {} B, live allocs {}, FM has {} GiB available",
         sys.module().leased(),
         sys.module().live_allocs(),
-        sys.fm().available() >> 30
+        sys.with_fm(|fm| fm.available())? >> 30
     );
 
     // 8. RAII: a scoped region frees itself — handy for staging buffers.

@@ -51,7 +51,7 @@ fn main() -> Result<()> {
     println!(
         "mapping verified through the expander backing store \
          ({} resident 4K pages)\n",
-        sys.fm().expander().resident_pages()
+        sys.with_fm(|fm| fm.expander().resident_pages())?
     );
 
     // ---- data plane: the paper's Figure 6 on both devices ----

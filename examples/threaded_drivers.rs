@@ -1,0 +1,109 @@
+//! Threaded drivers: four per-device driver threads share ONE CXL
+//! memory expander through the thread-safe fabric API.
+//!
+//! This is the deployment shape §3.1 implies but a single-threaded
+//! fabric handle could never express: each PCIe device's driver runs
+//! on its own thread (as real kernel drivers do), submits
+//! alloc/free/share through a cloneable `SubmitHandle`, and blocks on
+//! completions — while the Fabric Manager runs as a *service*
+//! (`FmService::run`): an actor loop that drains the MPSC intake,
+//! schedules fairly across lanes, executes each host's group under a
+//! single fabric lock acquisition, and publishes completions to the
+//! shared table the driver threads wait on.
+//!
+//! Run with: `cargo run --release --example threaded_drivers`
+
+use std::thread;
+
+use lmb::cxl::expander::{Expander, ExpanderConfig};
+use lmb::cxl::switch::PbrSwitch;
+use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
+use lmb::prelude::*;
+
+const DRIVERS: usize = 4;
+const OPS_PER_DRIVER: u64 = 24;
+
+fn main() -> Result<()> {
+    // one switch + one 4 GiB expander behind a Send+Sync FabricRef
+    let fabric = FabricRef::new(FabricManager::new(
+        PbrSwitch::new(16),
+        Expander::new(ExpanderConfig { dram_capacity: 4 * GIB, ..Default::default() }),
+    ));
+    println!("fabric up: 4 GiB expander, {DRIVERS} hosts binding from one process\n");
+
+    // one LmbHost per device's host context, all on the same fabric
+    let hosts: Vec<LmbHost> = (0..DRIVERS)
+        .map(|_| {
+            let mut h = LmbHost::bind(fabric.clone(), GIB)?;
+            h.attach_pcie(Bdf::new(1, 0, 0));
+            Ok(h)
+        })
+        .collect::<Result<_>>()?;
+
+    // the FM becomes a service: mint one SubmitHandle per driver
+    // thread, then move the service onto its own thread
+    let service = FmService::new(hosts).with_lane_quota(4);
+    let handles: Vec<SubmitHandle> = (0..DRIVERS)
+        .map(|lane| service.handle(lane))
+        .collect::<Result<_>>()?;
+    let fm_thread = thread::spawn(move || service.run());
+
+    // four driver threads: each models an SSD driver growing and
+    // shrinking its L2P working set in LMB memory
+    let drivers: Vec<_> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(lane, handle)| {
+            thread::spawn(move || -> Result<(usize, u64)> {
+                let dev = Bdf::new(1, 0, 0);
+                let mut live: Vec<MmId> = Vec::new();
+                let mut serviced = 0u64;
+                for i in 0..OPS_PER_DRIVER {
+                    let pages = (lane as u64 + i) % 16 + 1;
+                    let t = handle
+                        .submit(Request::Alloc { consumer: dev.into(), size: pages * PAGE_SIZE })?;
+                    // block on the shared completion table — the FM
+                    // service thread posts the result
+                    let alloc = handle.wait(t)?.into_alloc()?;
+                    live.push(alloc.mmid);
+                    serviced += 1;
+                    if i % 4 == 3 {
+                        let mmid = live.remove(0);
+                        let t = handle.submit(Request::Free { consumer: dev.into(), mmid })?;
+                        handle.wait(t)?.result?;
+                        serviced += 1;
+                    }
+                }
+                // keep the working set: the main thread audits it below
+                Ok((lane, serviced))
+            })
+        })
+        .collect();
+
+    for d in drivers {
+        let (lane, serviced) = d.join().expect("driver thread panicked")?;
+        println!("driver {lane}: {serviced} queued ops serviced through its SubmitHandle");
+    }
+
+    // all handles dropped -> the service loop drains, stops, and hands
+    // the hosts back for inspection
+    let hosts = fm_thread.join().expect("FM service thread panicked");
+    println!("\nFM service stopped (all handles dropped). Final state:");
+    for (lane, host) in hosts.iter().enumerate() {
+        println!(
+            "  host {lane}: {} live allocs, {} MiB leased",
+            host.module().live_allocs(),
+            host.module().leased() >> 20
+        );
+        host.check_invariants()?;
+    }
+    let leased: u64 = hosts.iter().map(|h| h.module().leased()).sum();
+    assert_eq!(fabric.available(), 4 * GIB - leased);
+    assert!(leased >= DRIVERS as u64 * EXTENT_SIZE);
+    fabric.check_invariants()?;
+    println!(
+        "\npool: {} GiB free of 4 GiB — one fabric, {DRIVERS} driver threads, zero guard types",
+        fabric.available() >> 30
+    );
+    Ok(())
+}

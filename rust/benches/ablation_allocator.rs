@@ -46,8 +46,7 @@ fn main() {
         }
     });
     bench::report(&m, Some(1));
-    sys.module().check_invariants().unwrap();
-    sys.fm().check_invariants().unwrap();
+    sys.check_invariants().unwrap();
     println!(
         "after churn: {} live allocs, {} MiB used / {} MiB leased ({} extents)",
         sys.module().live_allocs(),

@@ -95,13 +95,16 @@ fn drive_queue(policy: PlacementPolicy) -> Cluster {
 /// The modeled contention metric: the worst region's queueing cost at
 /// its steady-state load (same cost model the placement policy uses).
 fn max_region_cost(cluster: &Cluster) -> f64 {
-    let fm = cluster.fm();
-    let (region_len, loads) = fm.placement_regions();
-    let mut worst = 0.0f64;
-    for &load in loads {
-        worst = worst.max(placement_cost(load, region_len));
-    }
-    worst
+    cluster
+        .with_fm(|fm| {
+            let (region_len, loads) = fm.placement_regions();
+            let mut worst = 0.0f64;
+            for &load in loads {
+                worst = worst.max(placement_cost(load, region_len));
+            }
+            worst
+        })
+        .expect("fabric lock poisoned")
 }
 
 fn queue_placement_ablation(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
@@ -118,13 +121,14 @@ fn queue_placement_ablation(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u
     let aware_cost = max_region_cost(&aware);
     let serviced = aware.queue().stats().completed;
     {
-        let fm_fifo = fifo.fm();
-        let fm_aware = aware.fm();
-        let (len, fifo_loads) = fm_fifo.placement_regions();
-        let (_, aware_loads) = fm_aware.placement_regions();
+        let (len, fifo_loads) =
+            fifo.with_fm(|fm| (fm.placement_regions().0, fm.placement_regions().1.to_vec()))
+                .unwrap();
+        let aware_loads =
+            aware.with_fm(|fm| fm.placement_regions().1.to_vec()).unwrap();
         println!("  region len {} MiB", len >> 20);
-        println!("  fifo  loads (extents/region): {:?}", per_region_extents(fifo_loads));
-        println!("  aware loads (extents/region): {:?}", per_region_extents(aware_loads));
+        println!("  fifo  loads (extents/region): {:?}", per_region_extents(&fifo_loads));
+        println!("  aware loads (extents/region): {:?}", per_region_extents(&aware_loads));
         println!("  modeled max-region cost: fifo {fifo_cost:.2}, aware {aware_cost:.2}");
     }
     assert!(

@@ -47,7 +47,6 @@
 //! assert_eq!(cluster.available(), GIB - EXTENT_SIZE);
 //! ```
 
-use std::cell::Ref;
 use std::collections::HashSet;
 
 use crate::cxl::expander::{Expander, ExpanderConfig};
@@ -57,8 +56,8 @@ use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::lmb::queue::{
-    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled, Ticket,
-    DEFAULT_LANE_QUOTA,
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled,
+    SubmitHandle, Ticket, DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::{Consumer, LmbAlloc, LmbHost};
 
@@ -199,9 +198,11 @@ impl Cluster {
         &self.fabric
     }
 
-    /// Scoped read-only view of the shared FM.
-    pub fn fm(&self) -> Ref<'_, FabricManager> {
-        self.fabric.get()
+    /// Scoped read-only view of the shared FM: the closure runs with
+    /// the fabric locked; no guard type escapes (see
+    /// [`FabricRef::with_fm`]).
+    pub fn with_fm<R>(&self, f: impl FnOnce(&FabricManager) -> R) -> Result<R> {
+        self.fabric.with_fm(f)
     }
 
     /// The cluster's fabric latency model.
@@ -331,6 +332,18 @@ impl Cluster {
     /// single-use).
     pub fn take_completion(&mut self, ticket: Ticket) -> Option<Completion> {
         self.queue.take(ticket)
+    }
+
+    /// A cloneable, `Send` submission endpoint onto `slot`'s lane of
+    /// the cluster queue: per-device driver threads submit (and
+    /// `poll`/`take`/`wait`) from their own contexts while the cluster
+    /// owner keeps ticking ([`Cluster::tick_queue`] pumps the intake
+    /// channel every tick). Errors if the slot has no live host — but
+    /// note a handle outliving its host is safe: submissions landing on
+    /// a crashed slot complete with [`Error::Cancelled`].
+    pub fn submit_handle(&self, slot: usize) -> Result<SubmitHandle> {
+        self.host(slot)?;
+        self.queue.handle(slot)
     }
 
     /// The cluster-wide allocation queue (stats / pending inspection).
@@ -497,7 +510,9 @@ impl Cluster {
             }
             leased_sum += fm_view;
         }
-        let capacity = self.fabric.get().expander().capacity();
+        // poison-tolerant like every other read in this sweep: the
+        // audit must keep working after a panic poisoned the lock
+        let capacity = self.fabric.capacity();
         if self.fabric.available() + leased_sum != capacity {
             return Err(Error::FabricManager(format!(
                 "cluster capacity leak: free {} + leased {} != {}",
@@ -566,7 +581,7 @@ mod tests {
         cluster.host_mut(0).unwrap().attach_pcie(dev);
         cluster.host_mut(1).unwrap().attach_pcie(dev);
         let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
-        let t0 = cluster.submit(0, req.clone()).unwrap();
+        let t0 = cluster.submit(0, req).unwrap();
         let t1 = cluster.submit(1, req).unwrap();
         assert_eq!(cluster.poll_submission(t0), QueueStatus::Queued);
         assert_eq!(cluster.queue().pending(), 2);
@@ -615,7 +630,7 @@ mod tests {
         c.host_mut(0).unwrap().attach_pcie(dev);
         c.host_mut(1).unwrap().attach_pcie(dev);
         let req = Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE };
-        let flood: Vec<_> = (0..4).map(|_| c.submit(0, req.clone()).unwrap()).collect();
+        let flood: Vec<_> = (0..4).map(|_| c.submit(0, req).unwrap()).collect();
         let light = c.submit(1, req).unwrap();
         c.drain_queue();
         assert!(

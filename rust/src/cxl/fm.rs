@@ -11,15 +11,18 @@
 //! maintain SAT entries for CXL-device P2P access (§3.3).
 //!
 //! Ownership: since the shared-fabric split no single host owns the FM.
-//! It lives behind [`FabricRef`], a cheap-clone handle every
-//! [`LmbHost`](crate::lmb::LmbHost) (and the multi-host
+//! It lives behind [`FabricRef`], a cheap-clone `Send + Sync` handle
+//! every [`LmbHost`](crate::lmb::LmbHost) (and the multi-host
 //! [`Cluster`](crate::cluster::Cluster)) binds through. Leases are keyed
 //! by [`HostId`] and mmids are drawn from a fabric-global namespace, so
-//! no handle-holder can free or share memory it does not own.
+//! no handle-holder can free or share memory it does not own. Access is
+//! scoped ([`FabricRef::with_fm`] and friends): no lock guard type ever
+//! escapes this module, and a panic inside a scope poisons the lock —
+//! later callers see [`Error::FabricPoisoned`] instead of deadlocking
+//! on torn state.
 
-use std::cell::{Ref, RefCell, RefMut};
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::coordinator::contention;
 use crate::cxl::expander::Expander;
@@ -446,14 +449,25 @@ impl FabricManager {
     }
 }
 
-/// Shared, cheap-to-clone handle to the [`FabricManager`].
+/// Shared, cheap-to-clone, `Send + Sync` handle to the
+/// [`FabricManager`].
 ///
 /// The ownership split for multi-host sharding: no `LmbHost` owns the
 /// FM any more — the switch, expander, lease table and fabric-global
-/// mmid namespace live behind this handle, and any number of hosts bind
-/// through clones of it. The `RefCell` is an implementation detail:
-/// every method scopes its borrow internally, so callers never juggle
-/// `Ref`/`RefMut` guards.
+/// mmid namespace live behind this handle, and any number of hosts
+/// (and their driver threads) bind through clones of it. The
+/// `Arc<Mutex<_>>` is an implementation detail: every method scopes
+/// its lock internally or hands a borrow to a caller closure
+/// ([`FabricRef::with_fm`]), so no guard type escapes this module and
+/// nothing can hold the fabric locked across unrelated work.
+///
+/// **Poisoning.** If a thread panics inside a fabric scope the lock is
+/// poisoned. Fallible operations then return
+/// [`Error::FabricPoisoned`] instead of panicking again; the
+/// infallible observability reads (`available`, `leased_to`, …) and
+/// [`FabricRef::check_invariants`] deliberately bypass the poison flag
+/// — the invariant checker is exactly the tool that decides whether
+/// post-panic state is salvageable.
 ///
 /// There is deliberately **no** public way to mutate lease or
 /// access-control state through the handle — no `&mut FabricManager`,
@@ -462,100 +476,130 @@ impl FabricManager {
 /// caller-supplied [`HostId`]. Those paths are crate-internal and only
 /// reachable through the owner-checked `LmbHost`/`LmbModule`/`Cluster`
 /// surfaces, so lease ownership and grant checks cannot be bypassed.
-/// Publicly the handle offers reads ([`FabricRef::get`], `available`,
-/// `leased_to`, …), the host-trusted data plane
+/// Publicly the handle offers scoped reads ([`FabricRef::with_fm`],
+/// `available`, `leased_to`, …), the host-trusted data plane
 /// ([`FabricRef::write_dpa`] / [`FabricRef::read_dpa`]), failure
 /// injection, and device binding.
 #[derive(Debug, Clone)]
 pub struct FabricRef {
-    inner: Rc<RefCell<FabricManager>>,
+    inner: Arc<Mutex<FabricManager>>,
 }
 
 impl FabricRef {
     pub fn new(fm: FabricManager) -> Self {
-        FabricRef { inner: Rc::new(RefCell::new(fm)) }
+        FabricRef { inner: Arc::new(Mutex::new(fm)) }
     }
 
-    /// Scoped read-only view of the FM. Do not hold the guard across a
-    /// call that mutates the fabric (alloc/free/bind): the `RefCell`
-    /// will panic on the conflicting borrow.
-    pub fn get(&self) -> Ref<'_, FabricManager> {
-        self.inner.borrow()
+    /// Take the lock, surfacing poison as [`Error::FabricPoisoned`].
+    /// Private: guards must not outlive a method of this module.
+    fn guard(&self) -> Result<MutexGuard<'_, FabricManager>> {
+        self.inner.lock().map_err(|_| Error::FabricPoisoned)
     }
 
-    /// Crate-internal mutable borrow for the `LmbModule` plumbing. Not
-    /// public: handing out `&mut FabricManager` would let callers skip
-    /// the per-host lease ownership checks.
-    pub(crate) fn lock(&self) -> RefMut<'_, FabricManager> {
-        self.inner.borrow_mut()
+    /// Take the lock even when poisoned. Reserved for observability
+    /// reads and the invariant checker: the state behind a poisoned
+    /// lock is exactly what a post-mortem needs to look at.
+    fn guard_ignore_poison(&self) -> MutexGuard<'_, FabricManager> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Run `f` with a shared view of the FM. The lock is held only for
+    /// the closure's duration; do not call back into this handle from
+    /// inside `f` (the lock is not reentrant).
+    pub fn with_fm<R>(&self, f: impl FnOnce(&FabricManager) -> R) -> Result<R> {
+        let fm = self.guard()?;
+        Ok(f(&fm))
+    }
+
+    /// Run `f` with exclusive access to the FM. Crate-internal: handing
+    /// `&mut FabricManager` to arbitrary callers would let them skip
+    /// the per-host lease ownership checks. A panic inside `f` poisons
+    /// the lock; the next caller sees [`Error::FabricPoisoned`].
+    pub(crate) fn with_fm_mut<R>(&self, f: impl FnOnce(&mut FabricManager) -> R) -> Result<R> {
+        let mut fm = self.guard()?;
+        Ok(f(&mut fm))
     }
 
     /// Number of live handles sharing this fabric (hosts + clusters +
     /// caller clones).
     pub fn handle_count(&self) -> usize {
-        Rc::strong_count(&self.inner)
+        Arc::strong_count(&self.inner)
     }
 
-    // ---- forwarded FM control plane (scoped borrows) ----
+    // ---- forwarded FM control plane (scoped locks) ----
 
     /// [`FabricManager::bind_cxl_device`] — attaching a CXL consumer
     /// takes a switch port but cannot touch any host's leases.
     pub fn bind_cxl_device(&self) -> Result<Spid> {
-        self.lock().bind_cxl_device()
+        self.guard()?.bind_cxl_device()
     }
 
-    /// [`FabricManager::gfd_dpid`].
+    /// [`FabricManager::gfd_dpid`]. Poison-tolerant read.
     pub fn gfd_dpid(&self) -> Option<Dpid> {
-        self.get().gfd_dpid()
+        self.guard_ignore_poison().gfd_dpid()
     }
 
-    /// [`FabricManager::available`].
+    /// [`FabricManager::available`]. Poison-tolerant read.
     pub fn available(&self) -> u64 {
-        self.get().available()
+        self.guard_ignore_poison().available()
     }
 
-    /// [`FabricManager::leased_to`].
+    /// [`FabricManager::leased_to`]. Poison-tolerant read.
     pub fn leased_to(&self, host: HostId) -> u64 {
-        self.get().leased_to(host)
+        self.guard_ignore_poison().leased_to(host)
     }
 
-    /// [`FabricManager::lease_count`].
+    /// [`FabricManager::lease_count`]. Poison-tolerant read.
     pub fn lease_count(&self) -> usize {
-        self.get().lease_count()
+        self.guard_ignore_poison().lease_count()
+    }
+
+    /// Total expander media capacity. Poison-tolerant read, so the
+    /// cluster-level capacity audit keeps working after a panic.
+    pub fn capacity(&self) -> u64 {
+        self.guard_ignore_poison().expander().capacity()
     }
 
     /// [`FabricManager::release_host`] — crate-internal: reclaiming a
     /// host is the [`Cluster`](crate::cluster::Cluster) crash path, not
     /// something an arbitrary handle-holder may do to a sibling.
+    /// Poison-tolerant: crash cleanup must run even after a panic.
     pub(crate) fn release_host(&self, host: HostId) {
-        self.lock().release_host(host)
+        self.guard_ignore_poison().release_host(host)
     }
 
-    /// [`FabricManager::check_invariants`].
+    /// [`FabricManager::check_invariants`]. Deliberately
+    /// poison-tolerant: after a panic inside a fabric scope this is the
+    /// audit that decides whether the state underneath is still sound.
     pub fn check_invariants(&self) -> Result<()> {
-        self.get().check_invariants()
+        self.guard_ignore_poison().check_invariants()
     }
 
     // ---- expander data plane / failure injection ----
 
     /// Functional write at a DPA through the shared expander.
     pub fn write_dpa(&self, dpa: Dpa, data: &[u8]) -> Result<()> {
-        self.lock().expander_mut().write_dpa(dpa, data)
+        self.guard()?.expander_mut().write_dpa(dpa, data)
     }
 
     /// Functional read at a DPA through the shared expander.
     pub fn read_dpa(&self, dpa: Dpa, out: &mut [u8]) -> Result<()> {
-        self.get().expander().read_dpa(dpa, out)
+        self.guard()?.expander().read_dpa(dpa, out)
     }
 
     /// Fail / recover the shared expander (failure-injection hook; one
-    /// expander failure hits every bound host).
+    /// expander failure hits every bound host). Poison-tolerant so
+    /// failure drills can still run after an unrelated panic.
     pub fn set_expander_failed(&self, failed: bool) {
-        self.lock().expander_mut().set_failed(failed);
+        self.guard_ignore_poison().expander_mut().set_failed(failed);
     }
 
+    /// Poison-tolerant read.
     pub fn expander_failed(&self) -> bool {
-        self.get().expander().is_failed()
+        self.guard_ignore_poison().expander().is_failed()
     }
 
     /// Scoped mutable access to the expander for in-crate data-plane
@@ -565,8 +609,9 @@ impl FabricRef {
     /// callers would let them program grants without the module's owner
     /// checks. External data-plane access goes through
     /// [`FabricRef::write_dpa`] / [`FabricRef::read_dpa`].
-    pub(crate) fn with_expander_mut<R>(&self, f: impl FnOnce(&mut Expander) -> R) -> R {
-        f(self.lock().expander_mut())
+    pub(crate) fn with_expander_mut<R>(&self, f: impl FnOnce(&mut Expander) -> R) -> Result<R> {
+        let mut fm = self.guard()?;
+        Ok(f(fm.expander_mut()))
     }
 }
 
@@ -745,12 +790,12 @@ mod tests {
         let other = fabric.clone();
         assert_eq!(fabric.handle_count(), 2);
         // lease mutation is crate-internal (module/cluster paths); the
-        // test reaches it through the same scoped borrow they use
-        let (h1, _) = fabric.lock().bind_host().unwrap();
-        let (h2, _) = other.lock().bind_host().unwrap();
+        // test reaches it through the same scoped lock they use
+        let (h1, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
+        let (h2, _) = other.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
         assert_ne!(h1, h2, "clones bind against the same id space");
-        fabric.lock().allocate_extent(h1).unwrap();
-        other.lock().allocate_extent(h2).unwrap();
+        fabric.with_fm_mut(|fm| fm.allocate_extent(h1)).unwrap().unwrap();
+        other.with_fm_mut(|fm| fm.allocate_extent(h2)).unwrap().unwrap();
         assert_eq!(fabric.available(), GIB - 2 * EXTENT_SIZE);
         assert_eq!(fabric.leased_to(h1), EXTENT_SIZE);
         assert_eq!(other.leased_to(h2), EXTENT_SIZE);
@@ -770,8 +815,63 @@ mod tests {
         assert!(fabric.expander_failed());
         assert!(fabric.read_dpa(Dpa(0x4000), &mut buf).is_err());
         fabric.set_expander_failed(false);
-        let pages = fabric.with_expander_mut(|e| e.resident_pages());
+        let pages = fabric.with_expander_mut(|e| e.resident_pages()).unwrap();
         assert!(pages > 0);
+    }
+
+    #[test]
+    fn fabric_ref_is_send_sync_and_shares_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<FabricRef>();
+
+        let fabric = fm(GIB).into_shared();
+        let (h, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
+        let worker = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || {
+                fabric.with_fm_mut(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+                fabric.available()
+            })
+        };
+        let seen = worker.join().unwrap();
+        assert_eq!(seen, GIB - EXTENT_SIZE);
+        assert_eq!(fabric.leased_to(h), EXTENT_SIZE, "lease visible from the spawning thread");
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn panic_inside_scope_poisons_and_surfaces_fabric_poisoned() {
+        let fabric = fm(GIB).into_shared();
+        let (h, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
+        fabric.with_fm_mut(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+
+        // panic on another thread mid-scope: the lock poisons, the
+        // process does not abort
+        let victim = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || {
+                let _: Result<()> = fabric
+                    .with_fm_mut(|_fm| panic!("driver thread died holding the fabric lock"));
+            })
+        };
+        assert!(victim.join().is_err(), "the panicking thread reports the panic");
+
+        // fallible paths surface the poison as a typed error...
+        assert!(matches!(fabric.with_fm(|fm| fm.lease_count()), Err(Error::FabricPoisoned)));
+        assert!(matches!(fabric.with_fm_mut(|fm| fm.alloc_mmid()), Err(Error::FabricPoisoned)));
+        assert!(matches!(fabric.write_dpa(Dpa(0), b"x"), Err(Error::FabricPoisoned)));
+        assert!(matches!(fabric.bind_cxl_device(), Err(Error::FabricPoisoned)));
+
+        // ...while the poison-tolerant audit surface still works: the
+        // panic struck before any mutation, so the state is sound
+        fabric.check_invariants().unwrap();
+        assert_eq!(fabric.available(), GIB - EXTENT_SIZE);
+        assert_eq!(fabric.leased_to(h), EXTENT_SIZE);
+
+        // and crash reclaim still runs post-poison
+        fabric.release_host(h);
+        assert_eq!(fabric.available(), GIB);
+        fabric.check_invariants().unwrap();
     }
 
     #[test]

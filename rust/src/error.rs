@@ -43,6 +43,14 @@ pub enum Error {
     /// [`AllocQueue::cancel_lane`](crate::lmb::queue::AllocQueue::cancel_lane)).
     Cancelled { ticket: u64 },
 
+    /// The shared fabric lock is poisoned: another thread panicked
+    /// while holding it, so the `FabricManager` state may be
+    /// mid-mutation. Surfaced by every fallible
+    /// [`FabricRef`](crate::cxl::fm::FabricRef) operation after the
+    /// panic; `FabricRef::check_invariants` deliberately bypasses the
+    /// poison flag so the actual state can still be audited.
+    FabricPoisoned,
+
     /// IOMMU rejected a device access (PCIe-side isolation, §3.3).
     IommuFault { bdf: String, hpa: Hpa, reason: String },
 
@@ -90,6 +98,9 @@ impl fmt::Display for Error {
             }
             Error::Cancelled { ticket } => {
                 write!(f, "queued submission {ticket} cancelled before scheduling")
+            }
+            Error::FabricPoisoned => {
+                write!(f, "fabric lock poisoned: a thread panicked while holding it")
             }
             Error::IommuFault { bdf, hpa, reason } => {
                 write!(f, "iommu fault: device {bdf} access to {hpa:?} denied ({reason})")

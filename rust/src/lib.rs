@@ -25,17 +25,41 @@
 //! Since the shared-fabric split (multi-host sharding), no host owns
 //! the fabric. The switch, expander, lease table and fabric-global mmid
 //! namespace live in the [`cxl::fm::FabricManager`], which sits behind
-//! [`cxl::fm::FabricRef`] — a cheap-clone shared handle. Each
-//! [`lmb::LmbHost`] holds one clone plus the state that really is
-//! per-host: its IOMMU, host physical address space (HDM windows in a
-//! host-disjoint HPA region), and the loaded [`lmb::LmbModule`]. Leases
-//! are keyed by `HostId` and mmids never collide across hosts, so no
-//! handle-holder can free or share memory it does not own — and there
-//! is deliberately no public path to `&mut FabricManager` that could
-//! bypass those checks. [`cluster::Cluster`] composes the pieces:
-//! one fabric, N hosts, routed per-host alloc/free/share, crash
-//! containment ([`cluster::Cluster::crash_host`]) and cluster-wide
-//! expander failover ([`lmb::failure::FailureDomain::fail_cluster`]).
+//! [`cxl::fm::FabricRef`] — a cheap-clone, **`Send + Sync`** handle
+//! over `Arc<Mutex<_>>`. Each [`lmb::LmbHost`] holds one clone plus the
+//! state that really is per-host: its IOMMU, host physical address
+//! space (HDM windows in a host-disjoint HPA region), and the loaded
+//! [`lmb::LmbModule`]. Leases are keyed by `HostId` and mmids never
+//! collide across hosts, so no handle-holder can free or share memory
+//! it does not own — and there is deliberately no public path to
+//! `&mut FabricManager` that could bypass those checks.
+//! [`cluster::Cluster`] composes the pieces: one fabric, N hosts,
+//! routed per-host alloc/free/share, crash containment
+//! ([`cluster::Cluster::crash_host`]) and cluster-wide expander
+//! failover ([`lmb::failure::FailureDomain::fail_cluster`]).
+//!
+//! **Threading model.** Fabric access is *scoped*: readers call
+//! `with_fm(|fm| ..)` (on `FabricRef`, `LmbHost`, `System`, `Cluster`);
+//! the crate-internal mutator is `with_fm_mut`. No lock guard type
+//! ever escapes `cxl::fm` — there is no `lock()`/`get()` returning a
+//! guard, so callers cannot hold the fabric across unrelated work, and
+//! the batched data path is the closure-scoped
+//! [`lmb::LmbHost::with_io_session`]. The rules:
+//!
+//! * **Lock ordering** — the fabric mutex is the *innermost* lock in
+//!   the crate. Queue completion tables never hold it, and a fabric
+//!   scope must never call back into `FabricRef`/queue APIs (the mutex
+//!   is not reentrant; a re-entry deadlocks).
+//! * **Who may block** — only [`lmb::SubmitHandle::wait`] and the
+//!   [`lmb::FmService::run`] loop park a thread. Everything else
+//!   (submit, poll, take, every `with_fm` scope) is non-blocking
+//!   beyond the short critical section.
+//! * **Poisoning** — a panic inside a fabric scope poisons the lock;
+//!   subsequent fallible calls surface
+//!   [`error::Error::FabricPoisoned`] instead of deadlocking or
+//!   aborting, while `check_invariants` and the observability reads
+//!   deliberately bypass the poison flag so post-panic state can be
+//!   audited (and crash reclaim still runs).
 //!
 //! ## Hot-path indexing
 //!
@@ -54,8 +78,9 @@
 //!   sub-allocator caches each extent's **largest free run** so
 //!   placement skips extents that cannot fit without probing their
 //!   free lists;
-//! * the batched host data path ([`lmb::LmbHost::io_session`]) resolves
-//!   an allocation once and streams N ops under a single fabric borrow.
+//! * the batched host data path ([`lmb::LmbHost::with_io_session`])
+//!   resolves an allocation once and streams N ops under a single
+//!   scoped fabric lock.
 //!
 //! The old linear scans survive as executable oracles in
 //! [`testing::oracle`]; property tests assert behavioural equivalence
@@ -64,28 +89,34 @@
 //!
 //! ## Queued allocation
 //!
-//! Allocation is a submission/completion protocol over
+//! Allocation is an MPSC submission/completion protocol over
 //! [`lmb::queue::AllocQueue`]: `submit` enqueues an alloc/free/share
 //! [`lmb::queue::Request`] on a per-host lane and returns a
-//! [`lmb::queue::Ticket`]; deterministic tick-driven scheduling
-//! (`tick_queue`/`drain_queue` on [`lmb::LmbHost`], [`system::System`]
-//! and [`cluster::Cluster`]) pops a rotating per-lane quota — fair
-//! across hosts, no RNG or clock, so tests replay from seeded request
-//! streams — and executes each host's group under a **single fabric
-//! lock**; `poll`/`take` observe and claim [`lmb::queue::Completion`]s.
-//! The synchronous `alloc`/`free`/`share` are one-shot submit + drain
-//! over the same queue, so there is exactly one allocation code path.
-//! Placement is contention-aware by default: the FM splits the DPA
-//! space into regions and prices every candidate carve point with the
-//! coordinator's M/M/1 cost model
+//! [`lmb::queue::Ticket`] — from the owning thread directly, or from
+//! any driver thread through a cloneable
+//! [`lmb::SubmitHandle`] (`submit_handle()` on `LmbHost`, `System`,
+//! `Cluster`; `handle()` on [`lmb::FmService`]). Deterministic
+//! tick-driven scheduling (`tick_queue`/`drain_queue`, or the
+//! [`lmb::FmService::run`] actor loop that owns the execute side) pops
+//! a rotating per-lane quota — fair across hosts, no RNG or clock, so
+//! for a fixed arrival order tests replay from seeded request streams
+//! — and executes each host's group under a **single fabric lock
+//! acquisition** ([`lmb::LmbHost::execute_requests`]). Completions
+//! land in a table shared with every handle: `poll`/`take` from any
+//! thread, or block on [`lmb::SubmitHandle::wait`] (never from the
+//! thread driving the queue). The synchronous `alloc`/`free`/`share`
+//! are one-shot submit + drain over the same queue, so there is
+//! exactly one allocation code path whether callers are synchronous,
+//! queued, or threaded. Placement is contention-aware by default: the
+//! FM splits the DPA space into regions and prices every candidate
+//! carve point with the coordinator's M/M/1 cost model
 //! ([`coordinator::contention::placement_cost`]), spreading extents
 //! across regions and falling back to first-fit on ties
 //! ([`cxl::fm::PlacementPolicy`]). A crashed host's
 //! queued-but-unscheduled submissions are cancelled
-//! ([`error::Error::Cancelled`]) before its leases are reclaimed. The
-//! `RefCell` behind [`cxl::fm::FabricRef`] remains the single-threaded
-//! stand-in; the queue's schedule/execute split is where a real
-//! lock/actor boundary lands next.
+//! ([`error::Error::Cancelled`]) before its leases are reclaimed, and
+//! cancellation is terminal: `poll` keeps answering `Cancelled` even
+//! after the completion is taken.
 //!
 //! ## Quick start
 //!
@@ -137,9 +168,11 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::lmb::queue::{
         AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request,
-        Ticket,
+        SubmitHandle, Ticket,
     };
-    pub use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion};
+    pub use crate::lmb::{
+        Consumer, FmService, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion,
+    };
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;
     pub use crate::ssd::spec::SsdSpec;

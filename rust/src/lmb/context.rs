@@ -10,15 +10,13 @@
 //! sharding across hosts means binding several contexts to clones of
 //! one `FabricRef` (see [`crate::cluster::Cluster`]).
 
-use std::cell::{Ref, RefMut};
-
 use crate::cxl::fm::{FabricManager, FabricRef, HostId};
-use crate::cxl::types::{Bdf, Dpa, MmId, Spid};
+use crate::cxl::types::{Bdf, Dpa, Dpid, MmId, Spid};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
 use crate::lmb::queue::{
-    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled, Ticket,
-    DEFAULT_LANE_QUOTA,
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled,
+    SubmitHandle, Ticket, DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::{Consumer, LmbAlloc, LmbModule};
 use crate::pcie::iommu::Iommu;
@@ -92,27 +90,28 @@ impl LmbHost {
                 "host DRAM of {host_dram} B exceeds the per-host HDM window stride (2^48 B)"
             )));
         }
-        let (host, host_spid, gfd_dpid, window_base) = {
-            let mut fm = fabric.lock();
-            let gfd_dpid = match fm.gfd_dpid() {
-                Some(d) => d,
-                None => fm.attach_gfd()?,
-            };
-            let (host, host_spid) = fm.bind_host()?;
-            // host ids are never reused, so pathological bind/crash churn
-            // could run the window space dry — fail loudly, not wrap
-            let window_base = match HOST_WINDOW_STRIDE.checked_mul(u64::from(host.0) + 1) {
-                Some(base) => base,
-                None => {
-                    fm.release_host(host);
-                    return Err(Error::FabricManager(format!(
-                        "host id {} exhausts the per-host HPA window space",
-                        host.0
-                    )));
-                }
-            };
-            (host, host_spid, gfd_dpid, window_base)
-        };
+        let (host, host_spid, gfd_dpid, window_base) =
+            fabric.with_fm_mut(|fm| -> Result<(HostId, Spid, Dpid, u64)> {
+                let gfd_dpid = match fm.gfd_dpid() {
+                    Some(d) => d,
+                    None => fm.attach_gfd()?,
+                };
+                let (host, host_spid) = fm.bind_host()?;
+                // host ids are never reused, so pathological bind/crash
+                // churn could run the window space dry — fail loudly,
+                // not wrap
+                let window_base = match HOST_WINDOW_STRIDE.checked_mul(u64::from(host.0) + 1) {
+                    Some(base) => base,
+                    None => {
+                        fm.release_host(host);
+                        return Err(Error::FabricManager(format!(
+                            "host id {} exhausts the per-host HPA window space",
+                            host.0
+                        )));
+                    }
+                };
+                Ok((host, host_spid, gfd_dpid, window_base))
+            })??;
         let module = LmbModule::load(host, gfd_dpid);
         // bound the window region so a window-hungry host errors cleanly
         // instead of spilling into the next host's HPA region
@@ -199,16 +198,14 @@ impl LmbHost {
             None => Ok(done),
             Some(e) => {
                 // roll back under a single fabric lock, newest first
-                let mut fm = self.fabric.lock();
-                for a in done.into_iter().rev() {
-                    let _ = self.module.free(
-                        &mut fm,
-                        &mut self.iommu,
-                        &mut self.space,
-                        consumer,
-                        a.mmid,
-                    );
-                }
+                let module = &mut self.module;
+                let iommu = &mut self.iommu;
+                let space = &mut self.space;
+                self.fabric.with_fm_mut(|fm| {
+                    for a in done.into_iter().rev() {
+                        let _ = module.free(fm, iommu, space, consumer, a.mmid);
+                    }
+                })?;
                 Err(e)
             }
         }
@@ -258,9 +255,19 @@ impl LmbHost {
         self.queue.take(ticket)
     }
 
-    /// Run one deterministic scheduling tick: pop up to the lane quota
-    /// of queued requests and execute them under a single fabric lock.
-    /// Returns how many were serviced.
+    /// A cloneable, `Send` submission endpoint onto this host's queue:
+    /// device driver threads submit (and `poll`/`take`/`wait`) from
+    /// their own contexts while this host's owner keeps ticking the
+    /// queue — or hand the whole host to an
+    /// [`FmService`](crate::lmb::FmService) and let the service loop
+    /// drive execution.
+    pub fn submit_handle(&self) -> Result<SubmitHandle> {
+        self.queue.handle(0)
+    }
+
+    /// Run one deterministic scheduling tick: pump the intake channel,
+    /// pop up to the lane quota of queued requests and execute them
+    /// under a single fabric lock. Returns how many were serviced.
     pub fn tick_queue(&mut self) -> usize {
         let batch = self.queue.schedule(DEFAULT_LANE_QUOTA);
         let completions = self.execute_requests(batch);
@@ -300,35 +307,50 @@ impl LmbHost {
     }
 
     /// Execute scheduled requests against this host under **one** fabric
-    /// lock — the single allocation code path beneath both the
-    /// synchronous surface and every queue (this host's own and the
-    /// cluster-wide one, which routes each slot's scheduled group here).
-    /// One completion per request; a failure completes its own ticket
-    /// and does not stop the rest of the group.
+    /// lock acquisition — the single allocation code path beneath the
+    /// synchronous surface and every queue (this host's own, the
+    /// cluster-wide one, and the [`FmService`](crate::lmb::FmService)
+    /// loop, all of which route each slot's scheduled group here). One
+    /// completion per request; a failure completes its own ticket and
+    /// does not stop the rest of the group. If the fabric lock is
+    /// poisoned, every ticket in the group completes with
+    /// [`Error::FabricPoisoned`] instead of stranding its waiter.
     pub fn execute_requests(&mut self, batch: Vec<Scheduled>) -> Vec<Completion> {
         if batch.is_empty() {
             return Vec::new();
         }
-        let mut completions = Vec::with_capacity(batch.len());
-        let mut fm = self.fabric.lock();
-        for s in batch {
-            let result = match s.request {
-                Request::Alloc { consumer, size } => self
-                    .module
-                    .alloc(&mut fm, &mut self.iommu, &mut self.space, consumer, size)
-                    .map(Outcome::Alloc),
-                Request::Free { consumer, mmid } => self
-                    .module
-                    .free(&mut fm, &mut self.iommu, &mut self.space, consumer, mmid)
-                    .map(|()| Outcome::Freed),
-                Request::Share { owner, target, mmid } => self
-                    .module
-                    .share(&mut fm, &mut self.iommu, owner, target, mmid)
-                    .map(Outcome::Shared),
-            };
-            completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
+        let module = &mut self.module;
+        let iommu = &mut self.iommu;
+        let space = &mut self.space;
+        let executed = self.fabric.with_fm_mut(|fm| {
+            let mut completions = Vec::with_capacity(batch.len());
+            for s in &batch {
+                let result = match s.request {
+                    Request::Alloc { consumer, size } => {
+                        module.alloc(fm, iommu, space, consumer, size).map(Outcome::Alloc)
+                    }
+                    Request::Free { consumer, mmid } => {
+                        module.free(fm, iommu, space, consumer, mmid).map(|()| Outcome::Freed)
+                    }
+                    Request::Share { owner, target, mmid } => {
+                        module.share(fm, iommu, owner, target, mmid).map(Outcome::Shared)
+                    }
+                };
+                completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
+            }
+            completions
+        });
+        match executed {
+            Ok(completions) => completions,
+            Err(_) => batch
+                .into_iter()
+                .map(|s| Completion {
+                    ticket: s.ticket,
+                    lane: s.lane,
+                    result: Err(Error::FabricPoisoned),
+                })
+                .collect(),
         }
-        completions
     }
 
     /// One-shot path for the synchronous surface: submit, drain, claim.
@@ -377,19 +399,28 @@ impl LmbHost {
         self.fabric.read_dpa(Dpa(a.dpa.0 + offset), out)
     }
 
-    /// Batched data path: resolve `mmid`'s placement once and stream any
-    /// number of reads/writes under a single scoped fabric borrow.
+    /// Batched data path: resolve `mmid`'s placement once and stream
+    /// any number of reads/writes under a single fabric lock
+    /// acquisition, scoped to the closure.
     ///
     /// [`LmbHost::write`]/[`LmbHost::read`] re-lock the shared fabric
     /// and re-resolve the mmid on every call — fine for one-off control
-    /// traffic, linear overhead on the data path. The session borrows
-    /// this host mutably for its lifetime (no other host op can slip in
-    /// underneath) and holds the fabric lock, so drop it before any
-    /// sibling host on the same fabric needs to run.
-    pub fn io_session(&mut self, mmid: MmId) -> Result<IoSession<'_>> {
+    /// traffic, linear overhead on the data path. The closure receives
+    /// an [`IoSession`] whose ops reuse the resolved placement; the
+    /// fabric stays locked exactly for the closure's duration, so no
+    /// guard can leak and no sibling host (or driver thread) is blocked
+    /// past the scope. Do not call back into fabric APIs from inside
+    /// the closure — the lock is not reentrant.
+    pub fn with_io_session<R>(
+        &mut self,
+        mmid: MmId,
+        f: impl FnOnce(&mut IoSession<'_>) -> Result<R>,
+    ) -> Result<R> {
         let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        let fm = self.fabric.lock();
-        Ok(IoSession { fm, mmid, dpa: a.dpa, size: a.size })
+        self.fabric.with_fm_mut(|fm| {
+            let mut io = IoSession { fm, mmid, dpa: a.dpa, size: a.size };
+            f(&mut io)
+        })?
     }
 
     // ---- lookups / component access ----
@@ -410,12 +441,13 @@ impl LmbHost {
         &self.fabric
     }
 
-    /// Scoped read-only view of the shared FM (see [`FabricRef::get`]
-    /// for the borrow rules). There is deliberately no mutable
+    /// Scoped read-only view of the shared FM: the closure runs with
+    /// the fabric locked and nothing escapes the scope (see
+    /// [`FabricRef::with_fm`]). There is deliberately no mutable
     /// counterpart: mutations go through FM methods keyed by [`HostId`]
     /// so lease ownership checks cannot be bypassed.
-    pub fn fm(&self) -> Ref<'_, FabricManager> {
-        self.fabric.get()
+    pub fn with_fm<R>(&self, f: impl FnOnce(&FabricManager) -> R) -> Result<R> {
+        self.fabric.with_fm(f)
     }
 
     pub fn iommu(&self) -> &Iommu {
@@ -442,15 +474,18 @@ impl LmbHost {
 }
 
 /// A batched I/O session over one LMB allocation: the placement is
-/// resolved once at [`LmbHost::io_session`] time and every op reuses it
-/// under the one fabric borrow the session holds.
+/// resolved once at [`LmbHost::with_io_session`] time and every op
+/// reuses it under the single fabric lock the enclosing scope holds.
 ///
-/// Bounds are still checked per op against the allocation's size; what
-/// the session removes is the per-op mmid lookup and `RefCell`
-/// lock/unlock pair of the unbatched [`LmbHost::write`]/[`LmbHost::read`].
+/// The session is only ever lent to the caller's closure — it borrows
+/// the locked `FabricManager`, so it cannot outlive the scope and no
+/// lock guard ever escapes. Bounds are still checked per op against
+/// the allocation's size; what the session removes is the per-op mmid
+/// lookup and lock/unlock pair of the unbatched
+/// [`LmbHost::write`]/[`LmbHost::read`].
 #[derive(Debug)]
 pub struct IoSession<'h> {
-    fm: RefMut<'h, FabricManager>,
+    fm: &'h mut FabricManager,
     mmid: MmId,
     dpa: Dpa,
     size: u64,
@@ -570,13 +605,14 @@ mod tests {
     fn bind_attaches_gfd_and_loads_module() {
         let host = host_with(GIB);
         assert!(host.module().is_loaded());
-        assert_eq!(Some(host.module().gfd_dpid()), host.fm().gfd_dpid());
+        let fabric_dpid = host.with_fm(|fm| fm.gfd_dpid()).unwrap();
+        assert_eq!(Some(host.module().gfd_dpid()), fabric_dpid);
     }
 
     #[test]
     fn bind_reuses_existing_gfd() {
         let fabric = fabric_with(GIB);
-        let dpid = fabric.lock().attach_gfd().unwrap();
+        let dpid = fabric.with_fm_mut(|fm| fm.attach_gfd()).unwrap().unwrap();
         let host = LmbHost::bind(fabric, GIB).unwrap();
         assert_eq!(host.module().gfd_dpid(), dpid);
     }
@@ -654,28 +690,30 @@ mod tests {
     }
 
     #[test]
-    fn io_session_streams_under_one_borrow() {
+    fn io_session_streams_under_one_scoped_lock() {
         let mut host = host_with(GIB);
         let dev = Bdf::new(1, 0, 0);
         host.attach_pcie(dev);
         let a = host.alloc(dev, 4 * PAGE_SIZE).unwrap();
-        {
-            let mut io = host.io_session(a.mmid).unwrap();
+        host.with_io_session(a.mmid, |io| {
             assert_eq!(io.mmid(), a.mmid);
             assert_eq!(io.size(), 4 * PAGE_SIZE);
             // stream many ops without re-locking / re-resolving
             for i in 0..64u64 {
-                io.write(i * 8, &i.to_le_bytes()).unwrap();
+                io.write(i * 8, &i.to_le_bytes())?;
             }
             let mut buf = [0u8; 8];
-            io.read(63 * 8, &mut buf).unwrap();
+            io.read(63 * 8, &mut buf)?;
             assert_eq!(u64::from_le_bytes(buf), 63);
             // per-op bounds checks still apply
             assert!(io.write(4 * PAGE_SIZE - 2, b"xxxx").is_err());
             assert!(io.read(4 * PAGE_SIZE, &mut buf).is_err());
             assert!(io.write(u64::MAX, b"x").is_err(), "offset overflow caught");
-        }
-        // session dropped: the unbatched path sees the same bytes
+            Ok(())
+        })
+        .unwrap();
+        // scope over: the lock is free and the unbatched path sees the
+        // same bytes
         let mut buf = [0u8; 8];
         host.read(a.mmid, 0, &mut buf).unwrap();
         assert_eq!(u64::from_le_bytes(buf), 0);
@@ -683,9 +721,28 @@ mod tests {
     }
 
     #[test]
+    fn io_session_returns_closure_value() {
+        let mut host = host_with(GIB);
+        let dev = Bdf::new(1, 0, 0);
+        host.attach_pcie(dev);
+        let a = host.alloc(dev, PAGE_SIZE).unwrap();
+        let sum = host
+            .with_io_session(a.mmid, |io| {
+                io.write(0, &[3, 4])?;
+                let mut buf = [0u8; 2];
+                io.read(0, &mut buf)?;
+                Ok(u64::from(buf[0]) + u64::from(buf[1]))
+            })
+            .unwrap();
+        assert_eq!(sum, 7, "value-returning scoped API");
+        host.free(dev, a.mmid).unwrap();
+    }
+
+    #[test]
     fn io_session_unknown_mmid_rejected() {
         let mut host = host_with(GIB);
-        assert!(matches!(host.io_session(MmId(404)), Err(Error::UnknownMmId(_))));
+        let res = host.with_io_session(MmId(404), |_io| Ok(()));
+        assert!(matches!(res, Err(Error::UnknownMmId(_))));
     }
 
     #[test]
@@ -769,12 +826,13 @@ mod tests {
         let mut host = host_with(GIB);
         let dev = Bdf::new(1, 0, 0);
         host.attach_pcie(dev);
-        let before = host.fm().available();
+        let before = host.with_fm(|fm| fm.available()).unwrap();
         let err = host.alloc_many(dev, &[EXTENT_SIZE; 6]).unwrap_err();
         assert!(matches!(err, Error::OutOfCapacity { .. }), "got {err:?}");
         assert_eq!(host.module().live_allocs(), 0, "partial allocs rolled back");
         assert_eq!(host.module().leased(), 0);
-        assert_eq!(host.fm().available(), before, "every extent back at the FM");
+        let after = host.with_fm(|fm| fm.available()).unwrap();
+        assert_eq!(after, before, "every extent back at the FM");
         assert_eq!(host.iommu().mapping_count(dev), 0);
         host.check_invariants().unwrap();
         // a batch that fits succeeds afterwards

@@ -15,8 +15,11 @@
 //!
 //! A [`Consumer`] names the device class; dispatching on it replaces the
 //! old duplicated `pcie_*`/`cxl_*` method pairs. The paper-named shims
-//! remain so the Table 2 mapping stays legible, delegating to the same
-//! internals.
+//! survive only at the [`System`](crate::system::System) facade (where
+//! they delegate to the owner-checked unified paths); the module-level
+//! shims that took a raw `&mut FabricManager` were retired with the
+//! thread-safe fabric split — no direct-borrow path into the FM
+//! remains.
 //!
 //! Mechanics (§3.2–§3.3):
 //! * capacity comes from the FM in 256 MB extents, each mapped into host
@@ -37,11 +40,14 @@ pub mod allocator;
 pub mod context;
 pub mod failure;
 pub mod queue;
+pub mod service;
 
 pub use context::{IoSession, LmbHost, LmbRegion};
 pub use queue::{
-    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request, Ticket,
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request,
+    SubmitHandle, Ticket,
 };
+pub use service::FmService;
 
 use std::collections::HashMap;
 
@@ -496,84 +502,6 @@ impl LmbModule {
         })
     }
 
-    // ---- deprecated Table 2 shims (paper-named, §3.2 Table 2) ----
-
-    /// `lmb_PCIe_alloc(*dev, size, *hpa, *mmid)`.
-    #[deprecated(note = "use `LmbModule::alloc` (or `LmbHost::alloc`) with a `Consumer`")]
-    pub fn pcie_alloc(
-        &mut self,
-        fm: &mut FabricManager,
-        iommu: &mut Iommu,
-        space: &mut AddressSpace,
-        dev: Bdf,
-        size: u64,
-    ) -> Result<LmbAlloc> {
-        self.alloc_pcie(fm, iommu, space, dev, size)
-    }
-
-    /// `lmb_CXL_alloc(*CXLd, size, *hpa, *DPID, *mmid)`.
-    #[deprecated(note = "use `LmbModule::alloc` (or `LmbHost::alloc`) with a `Consumer`")]
-    pub fn cxl_alloc(
-        &mut self,
-        fm: &mut FabricManager,
-        space: &mut AddressSpace,
-        dev: Spid,
-        size: u64,
-    ) -> Result<LmbAlloc> {
-        self.alloc_cxl(fm, space, dev, size)
-    }
-
-    /// `lmb_PCIe_free(*dev, mmid)`.
-    #[deprecated(note = "use `LmbModule::free` (or `LmbHost::free`) with a `Consumer`")]
-    pub fn pcie_free(
-        &mut self,
-        fm: &mut FabricManager,
-        iommu: &mut Iommu,
-        space: &mut AddressSpace,
-        dev: Bdf,
-        mmid: MmId,
-    ) -> Result<()> {
-        self.free(fm, iommu, space, dev, mmid)
-    }
-
-    /// `lmb_CXL_free(*CXLd, mmid)`.
-    #[deprecated(note = "use `LmbModule::free` (or `LmbHost::free`) with a `Consumer`")]
-    pub fn cxl_free(
-        &mut self,
-        fm: &mut FabricManager,
-        iommu: &mut Iommu,
-        space: &mut AddressSpace,
-        dev: Spid,
-        mmid: MmId,
-    ) -> Result<()> {
-        self.free(fm, iommu, space, dev, mmid)
-    }
-
-    /// `lmb_PCIe_share(*dev, mmid, *hpa)` — the paper's signature has no
-    /// sharer argument, so the shim is self-authorised; it still
-    /// deduplicates repeat shares.
-    #[deprecated(note = "use `LmbModule::share` (or `LmbHost::share`), which checks ownership")]
-    pub fn pcie_share(
-        &mut self,
-        iommu: &mut Iommu,
-        target: Bdf,
-        mmid: MmId,
-    ) -> Result<LmbAlloc> {
-        self.share_to_pcie(iommu, target, mmid)
-    }
-
-    /// `lmb_CXL_share(*CXLd, mmid, *hpa, *DPID)` — self-authorised like
-    /// [`LmbModule::pcie_share`]; still deduplicates repeat shares.
-    #[deprecated(note = "use `LmbModule::share` (or `LmbHost::share`), which checks ownership")]
-    pub fn cxl_share(
-        &mut self,
-        fm: &mut FabricManager,
-        target: Spid,
-        mmid: MmId,
-    ) -> Result<LmbAlloc> {
-        self.share_to_cxl(fm, target, mmid)
-    }
-
     // ---- lookups / invariants ----
 
     /// Look up a live allocation (tests / coordinator bookkeeping).
@@ -875,29 +803,5 @@ mod tests {
         r.free(dev, a.mmid).unwrap();
         assert!(r.alloc(dev, PAGE_SIZE).is_ok());
         r.module.check_invariants().unwrap();
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn table2_shims_delegate_to_unified_paths() {
-        // The deprecated paper-named shims remain thin wrappers over the
-        // same internals — allocate via shim, free via unified, and vice
-        // versa, across both consumer classes.
-        let mut r = rig();
-        let dev = r.dev;
-        let spid = r.fm.bind_cxl_device().unwrap();
-        let a = r
-            .module
-            .pcie_alloc(&mut r.fm, &mut r.iommu, &mut r.space, dev, PAGE_SIZE)
-            .unwrap();
-        let b = r.module.cxl_alloc(&mut r.fm, &mut r.space, spid, PAGE_SIZE).unwrap();
-        let s = r.module.cxl_share(&mut r.fm, spid, a.mmid).unwrap();
-        assert_eq!(s.dpa, a.dpa);
-        r.free(dev, a.mmid).unwrap();
-        r.module
-            .cxl_free(&mut r.fm, &mut r.iommu, &mut r.space, spid, b.mmid)
-            .unwrap();
-        assert_eq!(r.module.live_allocs(), 0);
-        assert_eq!(r.module.leased(), 0);
     }
 }

@@ -1,31 +1,42 @@
-//! Queued allocation (§3.2 at fleet scale): submissions, completions,
-//! and deterministic tick-driven scheduling over the shared FM.
+//! Queued allocation (§3.2 at fleet scale): MPSC submissions,
+//! completions, and deterministic tick-driven scheduling over the
+//! shared FM.
 //!
 //! The paper's allocator API is synchronous per host, but its
 //! scalability story has many devices' allocation traffic contending on
 //! one Fabric Manager. [`AllocQueue`] turns that contention point into
-//! a scheduling point:
+//! a scheduling point — and, since the thread-safe fabric split, a
+//! *thread* boundary:
 //!
 //! * **Submission** — [`AllocQueue::submit`] enqueues a [`Request`]
 //!   (alloc / free / share) on a *lane* (one lane per host slot) and
 //!   returns a [`Ticket`] immediately; nothing touches the fabric yet.
-//! * **Scheduling** — [`AllocQueue::schedule`] pops up to a per-lane
-//!   quota of requests per tick, visiting lanes in rotating order so
-//!   every host makes progress (no lane can starve a sibling). The
-//!   schedule is a pure function of the submission history — no clock,
-//!   no RNG — so queued tests replay deterministically from a seeded
-//!   request stream.
+//!   Driver threads do the same through a cloneable [`SubmitHandle`]
+//!   ([`AllocQueue::handle`]): an `mpsc::Sender`-backed producer that
+//!   mints tickets from the queue's shared counter and sends
+//!   [`Submission`]s across threads — many producers, one consumer
+//!   (the queue owner / FM service loop).
+//! * **Scheduling** — [`AllocQueue::schedule`] first drains the intake
+//!   channel into the per-lane FIFOs ([`AllocQueue::pump`]), then pops
+//!   up to a per-lane quota of requests per tick, visiting lanes in
+//!   rotating order so every host makes progress (no lane can starve a
+//!   sibling). For a fixed arrival order the schedule is a pure
+//!   function of the submission history — no clock, no RNG — so queued
+//!   tests replay deterministically from a seeded request stream.
 //! * **Execution** — the queue owner (an
 //!   [`LmbHost`](crate::lmb::LmbHost) for its own lane, the
-//!   [`Cluster`](crate::cluster::Cluster) across slots) executes each
-//!   scheduled group under a **single fabric lock** via
+//!   [`Cluster`](crate::cluster::Cluster) across slots, or the
+//!   [`FmService`](crate::lmb::service::FmService) actor loop) executes
+//!   each scheduled group under **one fabric lock acquisition** via
 //!   [`LmbHost::execute_requests`](crate::lmb::LmbHost::execute_requests)
-//!   — the same single-lock batch entry `alloc_many` established — and
-//!   posts a [`Completion`] per ticket back with
+//!   and posts a [`Completion`] per ticket with
 //!   [`AllocQueue::complete`].
-//! * **Completion** — callers observe progress with
-//!   [`AllocQueue::poll`] and claim results with [`AllocQueue::take`]
-//!   (tickets are single-use: once taken, a ticket is gone).
+//! * **Completion** — completions land in a completion table shared
+//!   with every [`SubmitHandle`], so callers on *any* thread observe
+//!   progress with `poll`, claim results with `take` (tickets are
+//!   single-use), or block on [`SubmitHandle::wait`]. Never call
+//!   `wait` from the thread that drives the queue — nothing would be
+//!   left to post the completion.
 //!
 //! Placement is where the contention model bites: each executing host
 //! carries a [`PlacementPolicy`], and under
@@ -34,14 +45,20 @@
 //! extents across placement regions (falling back to first-fit on
 //! ties). The synchronous `alloc`/`free`/`share` surfaces are one-shot
 //! submit + drain over this queue, so there is exactly one allocation
-//! code path whether callers are synchronous or queued.
+//! code path whether callers are synchronous, queued, or threaded.
 //!
 //! When a host crashes, its lane is cancelled
 //! ([`AllocQueue::cancel_lane`]): queued-but-unscheduled submissions
 //! complete with [`Error::Cancelled`] instead of leaking tickets or
-//! executing against reclaimed leases.
+//! executing against reclaimed leases. Cancellation is **terminal**:
+//! `poll` keeps reporting [`QueueStatus::Cancelled`] even after the
+//! completion is taken, so a late poller can always distinguish "never
+//! submitted" from "cancelled by a crash".
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::cxl::types::MmId;
 use crate::error::{Error, Result};
@@ -58,8 +75,10 @@ pub const DEFAULT_LANE_QUOTA: usize = 16;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Ticket(pub u64);
 
-/// One queued control-plane operation.
-#[derive(Debug, Clone)]
+/// One queued control-plane operation. All fields are plain ids, so
+/// requests are `Copy` — the execute path reads them out of a batch
+/// without cloning.
+#[derive(Debug, Clone, Copy)]
 pub enum Request {
     /// Allocate `size` bytes for `consumer` (→ [`Outcome::Alloc`]).
     Alloc { consumer: Consumer, size: u64 },
@@ -78,6 +97,15 @@ impl Request {
             Request::Free { mmid, .. } | Request::Share { mmid, .. } => Some(*mmid),
         }
     }
+}
+
+/// The MPSC wire format: one ticketed request routed at a lane. What a
+/// [`SubmitHandle`] sends and [`AllocQueue::pump`] receives.
+#[derive(Debug)]
+pub struct Submission {
+    pub ticket: Ticket,
+    pub lane: usize,
+    pub request: Request,
 }
 
 /// Successful result of a serviced [`Request`].
@@ -102,7 +130,8 @@ impl Outcome {
 }
 
 /// A serviced (or cancelled) submission, claimed via
-/// [`AllocQueue::take`].
+/// [`AllocQueue::take`] / [`SubmitHandle::take`] /
+/// [`SubmitHandle::wait`].
 #[derive(Debug)]
 pub struct Completion {
     pub ticket: Ticket,
@@ -134,10 +163,11 @@ pub enum QueueStatus {
     InFlight,
     /// Completion ready to [`AllocQueue::take`].
     Ready,
-    /// Cancelled by [`AllocQueue::cancel_lane`]; `take` yields the
-    /// [`Error::Cancelled`] completion.
+    /// Cancelled ([`AllocQueue::cancel_lane`] on a host crash).
+    /// Terminal: this status persists even after the cancelled
+    /// completion has been taken.
     Cancelled,
-    /// Never submitted, or already taken.
+    /// Never submitted, or already taken (non-cancelled).
     Unknown,
 }
 
@@ -164,45 +194,308 @@ enum EntryState {
     InFlight,
 }
 
+/// Ticket lifecycle + posted completions, shared between the queue
+/// owner and every [`SubmitHandle`] clone. The interior mutex is held
+/// only for map operations (never across fabric work), and its own
+/// poisoning is recovered via `into_inner` — the maps are always left
+/// structurally sound, so a panicking reader cannot brick the table.
+#[derive(Debug, Default)]
+struct CompletionTable {
+    state: Mutex<TableState>,
+    ready: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct TableState {
+    /// Lifecycle of every ticket not yet completed.
+    states: HashMap<u64, EntryState>,
+    /// Posted completions awaiting `take`.
+    completions: HashMap<u64, Completion>,
+    /// Every ticket ever cancelled — kept after `take` so
+    /// [`QueueStatus::Cancelled`] is terminal, not a transient that
+    /// decays to `Unknown`. Deliberate trade-off: retention grows with
+    /// lifetime cancellations (one `u64` each), which is what makes
+    /// the status terminal for late pollers; a queue that cancels
+    /// unboundedly many tickets should be recreated at a natural epoch
+    /// (e.g. a new `Cluster`) rather than live forever.
+    cancelled: HashSet<u64>,
+    /// Set when the owning [`AllocQueue`] is dropped: no completion can
+    /// ever be posted again, so blocked waiters must error out rather
+    /// than park forever.
+    closed: bool,
+}
+
+impl CompletionTable {
+    fn locked(&self) -> MutexGuard<'_, TableState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn mark_queued(&self, ticket: Ticket) {
+        self.locked().states.insert(ticket.0, EntryState::Queued);
+    }
+
+    fn mark_in_flight(&self, ticket: Ticket) {
+        self.locked().states.insert(ticket.0, EntryState::InFlight);
+    }
+
+    fn forget(&self, ticket: Ticket) {
+        self.locked().states.remove(&ticket.0);
+    }
+
+    fn post(&self, completion: Completion) {
+        {
+            let mut s = self.locked();
+            s.states.remove(&completion.ticket.0);
+            if completion.is_cancelled() {
+                s.cancelled.insert(completion.ticket.0);
+            }
+            s.completions.insert(completion.ticket.0, completion);
+        }
+        self.ready.notify_all();
+    }
+
+    fn poll(&self, ticket: Ticket) -> QueueStatus {
+        let s = self.locked();
+        if let Some(c) = s.completions.get(&ticket.0) {
+            return if c.is_cancelled() { QueueStatus::Cancelled } else { QueueStatus::Ready };
+        }
+        match s.states.get(&ticket.0) {
+            Some(EntryState::Queued) => QueueStatus::Queued,
+            Some(EntryState::InFlight) => QueueStatus::InFlight,
+            None if s.cancelled.contains(&ticket.0) => QueueStatus::Cancelled,
+            None => QueueStatus::Unknown,
+        }
+    }
+
+    fn take(&self, ticket: Ticket) -> Option<Completion> {
+        self.locked().completions.remove(&ticket.0)
+    }
+
+    fn wait(&self, ticket: Ticket) -> Result<Completion> {
+        let mut s = self.locked();
+        loop {
+            if let Some(c) = s.completions.remove(&ticket.0) {
+                return Ok(c);
+            }
+            if !s.states.contains_key(&ticket.0) {
+                // no pending state and no completion: either never
+                // submitted or already claimed — blocking would hang
+                return Err(Error::FabricManager(format!(
+                    "ticket {} is unknown or its completion was already claimed",
+                    ticket.0
+                )));
+            }
+            if s.closed {
+                // the queue owner is gone (dropped, or its thread
+                // panicked and unwound): nothing will ever post this
+                // completion — error out instead of parking forever
+                return Err(Error::FabricManager(format!(
+                    "allocation queue dropped with ticket {} still pending",
+                    ticket.0
+                )));
+            }
+            s = match self.ready.wait(s) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Mark the table dead (owning queue dropped) and wake every
+    /// blocked waiter so it can error out.
+    fn close(&self) {
+        self.locked().closed = true;
+        self.ready.notify_all();
+    }
+
+    fn ready_len(&self) -> usize {
+        self.locked().completions.len()
+    }
+}
+
+/// Cloneable, `Send` submission endpoint: lets a per-device driver
+/// thread push alloc/free/share [`Request`]s onto one lane of an
+/// [`AllocQueue`] owned by another thread (typically the
+/// [`FmService`](crate::lmb::service::FmService) loop), and observe /
+/// claim / block on the shared completion table from its own thread.
+///
+/// Backed by an `mpsc::Sender`, so handles are many-producer: clone
+/// freely, move clones into threads. Dropping every handle (plus
+/// closing the queue's intake) is what lets a service loop terminate.
+#[derive(Debug, Clone)]
+pub struct SubmitHandle {
+    lane: usize,
+    tx: Sender<Submission>,
+    next_ticket: Arc<AtomicU64>,
+    table: Arc<CompletionTable>,
+}
+
+impl SubmitHandle {
+    /// The lane this handle submits to.
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
+    /// Enqueue `request`; returns its completion handle. Fails only if
+    /// the owning queue is gone (receiver dropped).
+    pub fn submit(&self, request: Request) -> Result<Ticket> {
+        let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
+        self.table.mark_queued(ticket);
+        if self.tx.send(Submission { ticket, lane: self.lane, request }).is_err() {
+            self.table.forget(ticket);
+            return Err(Error::FabricManager("allocation queue is gone".into()));
+        }
+        Ok(ticket)
+    }
+
+    /// Where `ticket` is in its lifecycle (thread-safe).
+    pub fn poll(&self, ticket: Ticket) -> QueueStatus {
+        self.table.poll(ticket)
+    }
+
+    /// Claim a completion; the ticket is retired (thread-safe).
+    pub fn take(&self, ticket: Ticket) -> Option<Completion> {
+        self.table.take(ticket)
+    }
+
+    /// Block until `ticket`'s completion is posted, then claim it.
+    /// Errors immediately on an unknown or already-claimed ticket
+    /// instead of hanging. Never call this from the thread that drives
+    /// the queue — nothing would be left to post the completion.
+    pub fn wait(&self, ticket: Ticket) -> Result<Completion> {
+        self.table.wait(ticket)
+    }
+}
+
 /// The queued-allocation scheduler. See the module docs for the
 /// submission → schedule → execute → complete lifecycle.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct AllocQueue {
     /// Per-lane FIFOs, keyed by lane id (sorted, so rotation order is
     /// deterministic). Empty lanes are removed eagerly.
     lanes: BTreeMap<usize, VecDeque<(Ticket, Request)>>,
-    /// Lifecycle of every ticket not yet completed.
-    states: HashMap<u64, EntryState>,
-    /// Posted completions awaiting [`AllocQueue::take`].
-    completions: HashMap<u64, Completion>,
-    next_ticket: u64,
+    /// Ticket lifecycle + completions, shared with every handle.
+    table: Arc<CompletionTable>,
+    /// Fabric-side ticket namespace, shared with every handle so
+    /// cross-thread submissions never collide with local ones.
+    next_ticket: Arc<AtomicU64>,
+    /// MPSC intake. `intake_tx` is the template every handle clones;
+    /// dropping it (see [`AllocQueue::close_intake`]) lets the channel
+    /// disconnect once external handles are gone.
+    intake_tx: Option<Sender<Submission>>,
+    intake_rx: Receiver<Submission>,
     /// First lane the next tick serves (rotates for fairness).
     rr_start: usize,
     stats: QueueStats,
 }
 
+impl Default for AllocQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for AllocQueue {
+    /// Wake (with an error) any [`SubmitHandle::wait`]er still parked
+    /// on the shared table: once the queue is gone — dropped normally
+    /// or unwound by a panic in its owning thread — no completion can
+    /// ever be posted, and a silent permanent park would hang driver
+    /// threads.
+    fn drop(&mut self) {
+        self.table.close();
+    }
+}
+
 impl AllocQueue {
     pub fn new() -> Self {
-        Self::default()
+        let (tx, rx) = channel();
+        AllocQueue {
+            lanes: BTreeMap::new(),
+            table: Arc::new(CompletionTable::default()),
+            next_ticket: Arc::new(AtomicU64::new(0)),
+            intake_tx: Some(tx),
+            intake_rx: rx,
+            rr_start: 0,
+            stats: QueueStats::default(),
+        }
     }
 
-    /// Enqueue `request` on `lane`; returns its completion handle.
+    /// Enqueue `request` on `lane` from the owning thread; returns its
+    /// completion handle. (Driver threads use [`AllocQueue::handle`].)
     pub fn submit(&mut self, lane: usize, request: Request) -> Ticket {
-        let ticket = Ticket(self.next_ticket);
-        self.next_ticket += 1;
+        let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
+        self.table.mark_queued(ticket);
         self.lanes.entry(lane).or_default().push_back((ticket, request));
-        self.states.insert(ticket.0, EntryState::Queued);
         self.stats.submitted += 1;
         ticket
     }
 
-    /// Pop one tick's worth of work: up to `quota` requests per lane,
-    /// lanes visited in ascending order starting from the rotation
-    /// cursor. Each lane's pops stay contiguous in the returned batch so
-    /// the executor can service a whole lane group under one fabric
-    /// lock. Deterministic: identical submission histories produce
+    /// A cloneable submission endpoint for `lane`, usable from any
+    /// thread. Fails once the intake has been closed.
+    pub fn handle(&self, lane: usize) -> Result<SubmitHandle> {
+        match &self.intake_tx {
+            Some(tx) => Ok(SubmitHandle {
+                lane,
+                tx: tx.clone(),
+                next_ticket: Arc::clone(&self.next_ticket),
+                table: Arc::clone(&self.table),
+            }),
+            None => Err(Error::FabricManager("queue intake is closed".into())),
+        }
+    }
+
+    /// Stop minting new handles and drop the queue's own sender, so the
+    /// intake channel disconnects when the last external handle drops —
+    /// the termination condition of
+    /// [`FmService::run`](crate::lmb::service::FmService::run).
+    pub(crate) fn close_intake(&mut self) {
+        self.intake_tx = None;
+    }
+
+    fn ingest(&mut self, sub: Submission) {
+        self.lanes.entry(sub.lane).or_default().push_back((sub.ticket, sub.request));
+        self.stats.submitted += 1;
+    }
+
+    /// Drain every submission currently buffered in the intake channel
+    /// into the per-lane FIFOs; returns how many arrived. Called
+    /// automatically by [`AllocQueue::schedule`] and
+    /// [`AllocQueue::cancel_lane`].
+    pub fn pump(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(sub) = self.intake_rx.try_recv() {
+            self.ingest(sub);
+            n += 1;
+        }
+        n
+    }
+
+    /// Block until at least one submission arrives (then drain the
+    /// burst), or return `false` when the channel has disconnected —
+    /// every handle dropped after [`AllocQueue::close_intake`].
+    pub(crate) fn pump_blocking(&mut self) -> bool {
+        match self.intake_rx.recv() {
+            Ok(sub) => {
+                self.ingest(sub);
+                self.pump();
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Pop one tick's worth of work: pump the intake, then up to
+    /// `quota` requests per lane, lanes visited in ascending order
+    /// starting from the rotation cursor. Each lane's pops stay
+    /// contiguous in the returned batch so the executor can service a
+    /// whole lane group under one fabric lock. Deterministic for a
+    /// fixed arrival order: identical submission histories produce
     /// identical schedules.
     pub fn schedule(&mut self, quota: usize) -> Vec<Scheduled> {
+        self.pump();
         if self.lanes.is_empty() || quota == 0 {
             return Vec::new();
         }
@@ -218,7 +511,7 @@ impl AllocQueue {
             for _ in 0..quota {
                 match queue.pop_front() {
                     Some((ticket, request)) => {
-                        self.states.insert(ticket.0, EntryState::InFlight);
+                        self.table.mark_in_flight(ticket);
                         batch.push(Scheduled { ticket, lane: *lane, request });
                     }
                     None => break,
@@ -236,60 +529,54 @@ impl AllocQueue {
         batch
     }
 
-    /// Post the result of a scheduled request.
+    /// Post the result of a scheduled request; wakes any
+    /// [`SubmitHandle::wait`]er on the ticket.
     pub fn complete(&mut self, completion: Completion) {
-        let ticket = completion.ticket;
         if completion.is_cancelled() {
             self.stats.cancelled += 1;
         } else {
             self.stats.completed += 1;
         }
-        self.states.remove(&ticket.0);
-        self.completions.insert(ticket.0, completion);
+        self.table.post(completion);
     }
 
-    /// Drop every queued-but-unscheduled submission on `lane`, posting
-    /// an [`Error::Cancelled`] completion for each so no ticket is left
-    /// dangling. Returns how many were cancelled. The cluster's host
-    /// crash path calls this before releasing the host's leases.
+    /// Drop every queued-but-unscheduled submission on `lane` (the
+    /// intake is pumped first so in-channel submissions are caught
+    /// too), posting an [`Error::Cancelled`] completion for each so no
+    /// ticket is left dangling. Returns how many were cancelled. The
+    /// cluster's host crash path calls this before releasing the
+    /// host's leases.
     pub fn cancel_lane(&mut self, lane: usize) -> usize {
+        self.pump();
         let Some(queue) = self.lanes.remove(&lane) else {
             return 0;
         };
         let n = queue.len();
         for (ticket, _) in queue {
-            self.states.remove(&ticket.0);
-            self.completions.insert(
-                ticket.0,
-                Completion { ticket, lane, result: Err(Error::Cancelled { ticket: ticket.0 }) },
-            );
             self.stats.cancelled += 1;
+            self.table.post(Completion {
+                ticket,
+                lane,
+                result: Err(Error::Cancelled { ticket: ticket.0 }),
+            });
         }
         n
     }
 
     /// Where `ticket` is in its lifecycle.
     pub fn poll(&self, ticket: Ticket) -> QueueStatus {
-        if let Some(c) = self.completions.get(&ticket.0) {
-            if c.is_cancelled() {
-                return QueueStatus::Cancelled;
-            }
-            return QueueStatus::Ready;
-        }
-        match self.states.get(&ticket.0) {
-            Some(EntryState::Queued) => QueueStatus::Queued,
-            Some(EntryState::InFlight) => QueueStatus::InFlight,
-            None => QueueStatus::Unknown,
-        }
+        self.table.poll(ticket)
     }
 
     /// Claim a completion; the ticket is retired. `None` while still
     /// queued/in-flight (poll first) or if the ticket is unknown.
     pub fn take(&mut self, ticket: Ticket) -> Option<Completion> {
-        self.completions.remove(&ticket.0)
+        self.table.take(ticket)
     }
 
-    /// Submissions not yet scheduled (across all lanes).
+    /// Submissions pumped but not yet scheduled (across all lanes).
+    /// Handle submissions still in the intake channel are not counted
+    /// until the next pump.
     pub fn pending(&self) -> usize {
         self.lanes.values().map(VecDeque::len).sum()
     }
@@ -301,7 +588,7 @@ impl AllocQueue {
 
     /// Completions posted but not yet taken.
     pub fn ready(&self) -> usize {
-        self.completions.len()
+        self.table.ready_len()
     }
 
     pub fn stats(&self) -> QueueStats {
@@ -406,6 +693,9 @@ mod tests {
             let c = q.take(t).unwrap();
             assert!(c.is_cancelled());
             assert!(matches!(c.result, Err(Error::Cancelled { ticket }) if ticket == t.0));
+            // regression: cancellation is terminal — a taken cancelled
+            // ticket must not decay to Unknown
+            assert_eq!(q.poll(t), QueueStatus::Cancelled, "cancel survives take");
         }
         assert_eq!(q.poll(survivor), QueueStatus::Queued, "sibling lane untouched");
         assert_eq!(q.stats().cancelled, 3);
@@ -418,5 +708,112 @@ mod tests {
         let t = q.submit(0, alloc_req(1));
         assert!(q.schedule(0).is_empty());
         assert_eq!(q.poll(t), QueueStatus::Queued);
+    }
+
+    #[test]
+    fn handle_submissions_flow_through_the_channel() {
+        let mut q = AllocQueue::new();
+        let h = q.handle(3).unwrap();
+        let t = h.submit(alloc_req(1)).unwrap();
+        assert_eq!(q.poll(t), QueueStatus::Queued, "status visible before the pump");
+        assert_eq!(q.pending(), 0, "not in a lane until pumped");
+        assert_eq!(q.pump(), 1);
+        assert_eq!(q.pending_on(3), 1);
+        let batch = q.schedule(8);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].lane, 3);
+        assert_eq!(h.poll(t), QueueStatus::InFlight);
+        q.complete(Completion { ticket: t, lane: 3, result: Ok(Outcome::Freed) });
+        assert_eq!(h.poll(t), QueueStatus::Ready);
+        let c = h.take(t).unwrap();
+        assert_eq!(c.ticket, t);
+        assert_eq!(q.stats().submitted, 1, "pumped submissions are counted");
+    }
+
+    #[test]
+    fn local_and_handle_tickets_share_one_namespace() {
+        let mut q = AllocQueue::new();
+        let h = q.handle(1).unwrap();
+        let a = q.submit(0, alloc_req(1));
+        let b = h.submit(alloc_req(1)).unwrap();
+        let c = q.submit(0, alloc_req(1));
+        let mut ids = [a.0, b.0, c.0];
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3, "no ticket collision across producers");
+    }
+
+    #[test]
+    fn handle_submit_fails_once_queue_is_dropped() {
+        let q = AllocQueue::new();
+        let h = q.handle(0).unwrap();
+        drop(q);
+        let err = h.submit(alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::FabricManager(_)));
+    }
+
+    #[test]
+    fn wait_on_unknown_ticket_errors_instead_of_hanging() {
+        let q = AllocQueue::new();
+        let h = q.handle(0).unwrap();
+        assert!(h.wait(Ticket(999)).is_err());
+    }
+
+    #[test]
+    fn threaded_wait_errors_when_queue_drops_with_ticket_pending() {
+        // regression: if the queue owner dies (drop or panic-unwind)
+        // with a submission still pending, a blocked waiter must be
+        // woken with an error, not parked forever
+        let q = AllocQueue::new();
+        let h = q.handle(0).unwrap();
+        let t = h.submit(alloc_req(1)).unwrap();
+        let waiter = std::thread::spawn(move || h.wait(t));
+        drop(q);
+        let res = waiter.join().unwrap();
+        assert!(res.is_err(), "waiter woken with an error after the queue died");
+    }
+
+    #[test]
+    fn threaded_handles_submit_and_wait_across_threads() {
+        const DRIVERS: usize = 4;
+        const OPS: usize = 8;
+        let mut q = AllocQueue::new();
+        let drivers: Vec<_> = (0..DRIVERS)
+            .map(|lane| {
+                let h = q.handle(lane).unwrap();
+                std::thread::spawn(move || {
+                    let tickets: Vec<Ticket> =
+                        (0..OPS).map(|_| h.submit(alloc_req(1)).unwrap()).collect();
+                    // block on the shared table from this thread
+                    tickets
+                        .into_iter()
+                        .map(|t| {
+                            let c = h.wait(t).unwrap();
+                            assert_eq!(h.poll(t), QueueStatus::Unknown, "retired after wait");
+                            usize::from(c.result.is_ok())
+                        })
+                        .sum::<usize>()
+                })
+            })
+            .collect();
+        // the consumer side: schedule + complete until all serviced
+        let mut serviced = 0;
+        while serviced < DRIVERS * OPS {
+            let batch = q.schedule(2);
+            if batch.is_empty() {
+                std::thread::yield_now();
+                continue;
+            }
+            for s in batch {
+                serviced += 1;
+                let result = Ok(Outcome::Freed);
+                q.complete(Completion { ticket: s.ticket, lane: s.lane, result });
+            }
+        }
+        for d in drivers {
+            assert_eq!(d.join().unwrap(), OPS, "every driver op serviced exactly once");
+        }
+        assert_eq!(q.stats().completed, (DRIVERS * OPS) as u64);
+        assert_eq!(q.ready(), 0, "every completion claimed by its waiter");
     }
 }

@@ -1,0 +1,267 @@
+//! The FM service loop: the actor that owns the execute side of the
+//! allocation queue.
+//!
+//! With the thread-safe fabric split, driver threads no longer tick the
+//! queue themselves — they hold cloneable [`SubmitHandle`]s and the
+//! *service* owns the hosts plus the consumer end of the MPSC intake.
+//! What used to be a caller-driven `tick_queue` grows into
+//! [`FmService::run`]: an actor loop that
+//!
+//! 1. drains submissions from every handle (the MPSC pump),
+//! 2. schedules them with the rotating per-lane quota (fair across
+//!    hosts, deterministic for a fixed arrival order),
+//! 3. executes each host's scheduled group under **one fabric lock
+//!    acquisition** ([`LmbHost::execute_requests`]), and
+//! 4. publishes [`Completion`]s through the completion table the
+//!    handles read (`poll` / `take` / blocking `wait`) from any thread.
+//!
+//! The loop parks on the intake channel when idle and terminates when
+//! every handle has been dropped and all accepted work is drained, then
+//! hands the hosts back — so a test (or an orchestrator) can join the
+//! service thread and audit final state:
+//!
+//! ```
+//! use lmb::cxl::expander::{Expander, ExpanderConfig};
+//! use lmb::cxl::fm::{FabricManager, FabricRef};
+//! use lmb::cxl::switch::PbrSwitch;
+//! use lmb::cxl::types::{Bdf, GIB, PAGE_SIZE};
+//! use lmb::lmb::{FmService, LmbHost, Request};
+//!
+//! let fabric = FabricRef::new(FabricManager::new(
+//!     PbrSwitch::new(8),
+//!     Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+//! ));
+//! let dev = Bdf::new(1, 0, 0);
+//! let hosts: Vec<LmbHost> = (0..2)
+//!     .map(|_| {
+//!         let mut h = LmbHost::bind(fabric.clone(), GIB).unwrap();
+//!         h.attach_pcie(dev);
+//!         h
+//!     })
+//!     .collect();
+//!
+//! let service = FmService::new(hosts);
+//! let handles: Vec<_> = (0..2).map(|lane| service.handle(lane).unwrap()).collect();
+//! let fm_thread = std::thread::spawn(move || service.run());
+//!
+//! // driver threads submit from their own contexts and block on results
+//! let drivers: Vec<_> = handles
+//!     .into_iter()
+//!     .map(|h| {
+//!         std::thread::spawn(move || {
+//!             let t = h
+//!                 .submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE })
+//!                 .unwrap();
+//!             h.wait(t).unwrap().into_alloc().unwrap()
+//!         })
+//!     })
+//!     .collect();
+//! for d in drivers {
+//!     d.join().unwrap();
+//! }
+//! // all handles dropped → the service loop drains and returns the hosts
+//! let hosts = fm_thread.join().unwrap();
+//! assert_eq!(hosts.iter().map(|h| h.module().live_allocs()).sum::<usize>(), 2);
+//! ```
+
+use crate::error::{Error, Result};
+use crate::lmb::queue::{AllocQueue, QueueStats, Scheduled, SubmitHandle, DEFAULT_LANE_QUOTA};
+use crate::lmb::LmbHost;
+
+/// The FM-side actor owning hosts and the execute half of an
+/// [`AllocQueue`]. Lane `i` of the queue maps to `hosts[i]`.
+///
+/// `FmService` is `Send`: build it, mint [`SubmitHandle`]s, then move
+/// it into its service thread and call [`FmService::run`]. Host crash
+/// simulation stays on [`Cluster`](crate::cluster::Cluster) — the
+/// service models the steady-state arbitration loop, not failure
+/// injection.
+#[derive(Debug)]
+pub struct FmService {
+    queue: AllocQueue,
+    hosts: Vec<LmbHost>,
+    lane_quota: usize,
+}
+
+impl FmService {
+    /// Wrap `hosts` (all bound to one shared fabric) in a service. The
+    /// hosts' own per-context queues are unused from here on; every
+    /// submission flows through the service's queue.
+    pub fn new(hosts: Vec<LmbHost>) -> Self {
+        FmService { queue: AllocQueue::new(), hosts, lane_quota: DEFAULT_LANE_QUOTA }
+    }
+
+    /// Per-lane requests serviced per scheduling tick (fairness
+    /// quantum).
+    pub fn with_lane_quota(mut self, quota: usize) -> Self {
+        self.lane_quota = quota.max(1);
+        self
+    }
+
+    /// A cloneable submission endpoint for `lane`'s host. Mint every
+    /// handle **before** calling [`FmService::run`] — the run loop
+    /// closes the intake so it can observe disconnection.
+    pub fn handle(&self, lane: usize) -> Result<SubmitHandle> {
+        if lane >= self.hosts.len() {
+            return Err(Error::FabricManager(format!(
+                "no host behind lane {lane} ({} lanes)",
+                self.hosts.len()
+            )));
+        }
+        self.queue.handle(lane)
+    }
+
+    /// The hosts the service arbitrates (lane order).
+    pub fn hosts(&self) -> &[LmbHost] {
+        &self.hosts
+    }
+
+    /// Queue counters (submitted / completed / cancelled / ticks).
+    pub fn stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// One scheduling tick: pump the intake, pop up to the per-lane
+    /// quota from every lane (rotating order), execute each lane's
+    /// group against its host under a single fabric lock, and post
+    /// completions. Returns how many requests were serviced.
+    pub fn tick(&mut self) -> usize {
+        let mut rest = self.queue.schedule(self.lane_quota);
+        let total = rest.len();
+        while !rest.is_empty() {
+            let lane = rest[0].lane;
+            let cut = rest.iter().position(|s| s.lane != lane).unwrap_or(rest.len());
+            let tail = rest.split_off(cut);
+            let group = std::mem::replace(&mut rest, tail);
+            self.execute_group(lane, group);
+        }
+        total
+    }
+
+    fn execute_group(&mut self, lane: usize, group: Vec<Scheduled>) {
+        match self.hosts.get_mut(lane) {
+            Some(host) => {
+                for c in host.execute_requests(group) {
+                    self.queue.complete(c);
+                }
+            }
+            None => {
+                // a handle minted for a lane this service never had —
+                // impossible through FmService::handle, but a forged
+                // Submission must not strand its waiter
+                for s in group {
+                    self.queue.complete(crate::lmb::queue::Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::FabricManager(format!("no host behind lane {lane}"))),
+                    });
+                }
+            }
+        }
+    }
+
+    /// The actor loop. Closes the intake (no new handles), then
+    /// alternates draining ticks with parking on the channel; exits
+    /// when every [`SubmitHandle`] has been dropped and all accepted
+    /// submissions have completed, returning the hosts for final
+    /// inspection.
+    pub fn run(mut self) -> Vec<LmbHost> {
+        self.queue.close_intake();
+        loop {
+            // drain everything currently visible
+            while self.tick() > 0 {}
+            // park until new work arrives or the last handle drops
+            if !self.queue.pump_blocking() {
+                break;
+            }
+        }
+        // the disconnect may have raced a final burst into the buffer
+        while self.tick() > 0 {}
+        self.hosts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::expander::{Expander, ExpanderConfig};
+    use crate::cxl::fm::{FabricManager, FabricRef};
+    use crate::cxl::switch::PbrSwitch;
+    use crate::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
+    use crate::lmb::queue::{QueueStatus, Request};
+
+    fn fabric_with(bytes: u64) -> FabricRef {
+        FabricRef::new(FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig { dram_capacity: bytes, ..Default::default() }),
+        ))
+    }
+
+    fn service(hosts: usize, expander_bytes: u64) -> (FmService, FabricRef, Bdf) {
+        let fabric = fabric_with(expander_bytes);
+        let dev = Bdf::new(1, 0, 0);
+        let hosts: Vec<LmbHost> = (0..hosts)
+            .map(|_| {
+                let mut h = LmbHost::bind(fabric.clone(), GIB).unwrap();
+                h.attach_pcie(dev);
+                h
+            })
+            .collect();
+        (FmService::new(hosts), fabric, dev)
+    }
+
+    #[test]
+    fn manual_ticks_execute_handle_submissions() {
+        let (mut svc, fabric, dev) = service(2, GIB);
+        let h0 = svc.handle(0).unwrap();
+        let h1 = svc.handle(1).unwrap();
+        let t0 = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        let t1 = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 2);
+        let a0 = h0.take(t0).unwrap().into_alloc().unwrap();
+        let a1 = h1.take(t1).unwrap().into_alloc().unwrap();
+        assert_ne!(a0.mmid, a1.mmid, "fabric-global mmids across service lanes");
+        assert_eq!(fabric.lease_count(), 2);
+        // frees flow back the same way
+        let f0 = h0.submit(Request::Free { consumer: dev.into(), mmid: a0.mmid }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        assert_eq!(h0.poll(f0), QueueStatus::Ready);
+        h0.take(f0).unwrap().result.unwrap();
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unknown_lane_is_rejected_at_handle_time() {
+        let (svc, _fabric, _dev) = service(1, GIB);
+        assert!(svc.handle(0).is_ok());
+        assert!(svc.handle(1).is_err());
+    }
+
+    #[test]
+    fn run_terminates_when_handles_drop_and_returns_hosts() {
+        let (svc, fabric, dev) = service(2, GIB);
+        let handles: Vec<SubmitHandle> = (0..2).map(|l| svc.handle(l).unwrap()).collect();
+        let fm_thread = std::thread::spawn(move || svc.run());
+        let drivers: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let t = h
+                        .submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE })
+                        .unwrap();
+                    h.wait(t).unwrap().into_alloc().unwrap().mmid
+                })
+            })
+            .collect();
+        let mmids: Vec<_> = drivers.into_iter().map(|d| d.join().unwrap()).collect();
+        let hosts = fm_thread.join().unwrap();
+        assert_eq!(hosts.len(), 2);
+        assert_eq!(mmids.len(), 2);
+        let live: usize = hosts.iter().map(|h| h.module().live_allocs()).sum();
+        assert_eq!(live, 2);
+        assert_eq!(fabric.available(), GIB - 2 * EXTENT_SIZE);
+        for host in &hosts {
+            host.check_invariants().unwrap();
+        }
+    }
+}

@@ -88,7 +88,7 @@ impl L2pTable {
         first: u64,
         count: u64,
     ) -> Result<()> {
-        fabric.with_expander_mut(|e| self.flush_to_lmb(e, dpa, first, count))
+        fabric.with_expander_mut(|e| self.flush_to_lmb(e, dpa, first, count))?
     }
 
     /// [`L2pTable::load_from_lmb`] through a shared fabric handle.
@@ -99,7 +99,7 @@ impl L2pTable {
         first: u64,
         count: u64,
     ) -> Result<()> {
-        self.load_from_lmb(fabric.get().expander(), dpa, first, count)
+        fabric.with_fm(|fm| self.load_from_lmb(fm.expander(), dpa, first, count))?
     }
 
     /// Load entries `[first, first+count)` back from LMB memory.

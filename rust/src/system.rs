@@ -6,8 +6,6 @@
 //! the unified `alloc`/`free`/`share` surface. The Table-2-named methods
 //! remain as deprecated shims for the paper mapping.
 
-use std::cell::Ref;
-
 use crate::cxl::expander::{Expander, ExpanderConfig};
 use crate::cxl::fabric::{Fabric, FabricConfig};
 use crate::cxl::fm::{FabricManager, FabricRef, HostId};
@@ -15,7 +13,7 @@ use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, Bdf, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::host::AddressSpace;
-use crate::lmb::queue::{AllocQueue, Completion, QueueStatus, Request, Ticket};
+use crate::lmb::queue::{AllocQueue, Completion, QueueStatus, Request, SubmitHandle, Ticket};
 use crate::lmb::{Consumer, IoSession, LmbAlloc, LmbHost, LmbModule};
 use crate::pcie::iommu::Iommu;
 use crate::ssd::spec::SsdSpec;
@@ -150,11 +148,18 @@ impl System {
         self.lmb.fabric_ref()
     }
 
-    /// Scoped read-only view of the shared FM. Mutations go through the
-    /// [`FabricRef`] API, which keys every lease operation by host — no
-    /// `&mut FabricManager` escape hatch exists.
-    pub fn fm(&self) -> Ref<'_, FabricManager> {
-        self.lmb.fm()
+    /// Scoped read-only view of the shared FM: the closure runs with
+    /// the fabric locked; no guard type escapes. Mutations go through
+    /// the [`FabricRef`] API, which keys every lease operation by host
+    /// — no `&mut FabricManager` escape hatch exists.
+    pub fn with_fm<R>(&self, f: impl FnOnce(&FabricManager) -> R) -> Result<R> {
+        self.lmb.with_fm(f)
+    }
+
+    /// Module + FM invariants in one sweep (property tests; also the
+    /// post-panic audit — see [`FabricRef::check_invariants`]).
+    pub fn check_invariants(&self) -> Result<()> {
+        self.lmb.check_invariants()
     }
 
     pub fn iommu(&self) -> &Iommu {
@@ -257,6 +262,12 @@ impl System {
         self.lmb.take_completion(ticket)
     }
 
+    /// A cloneable, `Send` submission endpoint onto this System's host
+    /// queue; see [`LmbHost::submit_handle`].
+    pub fn submit_handle(&self) -> Result<SubmitHandle> {
+        self.lmb.submit_handle()
+    }
+
     /// One deterministic queue tick; see [`LmbHost::tick_queue`].
     pub fn tick_queue(&mut self) -> usize {
         self.lmb.tick_queue()
@@ -330,10 +341,14 @@ impl System {
         self.lmb.read(mmid, offset, out)
     }
 
-    /// Batched data path: resolve `mmid` once and stream N ops under one
-    /// fabric borrow (see [`LmbHost::io_session`]).
-    pub fn io_session(&mut self, mmid: MmId) -> Result<IoSession<'_>> {
-        self.lmb.io_session(mmid)
+    /// Batched data path: resolve `mmid` once and stream N ops under
+    /// one scoped fabric lock (see [`LmbHost::with_io_session`]).
+    pub fn with_io_session<R>(
+        &mut self,
+        mmid: MmId,
+        f: impl FnOnce(&mut IoSession<'_>) -> Result<R>,
+    ) -> Result<R> {
+        self.lmb.with_io_session(mmid, f)
     }
 }
 
@@ -369,8 +384,10 @@ mod tests {
         sys.write_alloc(a.mmid, 0, b"tensor-bytes").unwrap();
         let shared = sys.share(dev, accel, a.mmid).unwrap();
         assert_eq!(shared.dpa, a.dpa, "same physical bytes, no copy");
-        assert!(sys.fm().expander().sat().check(accel, shared.dpa, 64, true));
-        assert_eq!(shared.dpid, sys.fm().gfd_dpid(), "P2P handle names the real GFD");
+        let granted = sys.with_fm(|fm| fm.expander().sat().check(accel, shared.dpa, 64, true));
+        assert!(granted.unwrap());
+        let gfd = sys.with_fm(|fm| fm.gfd_dpid()).unwrap();
+        assert_eq!(shared.dpid, gfd, "P2P handle names the real GFD");
     }
 
     #[test]
@@ -413,12 +430,12 @@ mod tests {
         // leases draw from the one pool...
         a.alloc(ac, EXTENT_SIZE).unwrap();
         let bm = b.alloc(bc, EXTENT_SIZE).unwrap();
-        assert_eq!(a.fm().available(), 2 * EXTENT_SIZE);
+        assert_eq!(a.with_fm(|fm| fm.available()).unwrap(), 2 * EXTENT_SIZE);
         // ...and host A cannot touch host B's allocation
         assert!(matches!(a.free(ac, bm.mmid), Err(Error::UnknownMmId(_))));
         b.free(bc, bm.mmid).unwrap();
-        assert_eq!(a.fm().available(), 3 * EXTENT_SIZE);
-        a.fm().check_invariants().unwrap();
+        assert_eq!(a.with_fm(|fm| fm.available()).unwrap(), 3 * EXTENT_SIZE);
+        a.check_invariants().unwrap();
     }
 
     #[test]

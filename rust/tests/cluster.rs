@@ -86,11 +86,14 @@ fn crashed_hosts_stale_p2p_grants_do_not_survive_release() {
     let accel = cluster.attach_cxl_device(0).unwrap();
     let a = cluster.alloc(0, dev, PAGE_SIZE).unwrap();
     let shared = cluster.share(0, dev, accel, a.mmid).unwrap();
-    assert!(cluster.fm().expander().sat().check(accel, shared.dpa, 64, true));
+    let sat_check = |cluster: &Cluster, dpa, write| {
+        cluster.with_fm(|fm| fm.expander().sat().check(accel, dpa, 64, write)).unwrap()
+    };
+    assert!(sat_check(&cluster, shared.dpa, true));
 
     cluster.crash_host(0).unwrap();
     assert!(
-        !cluster.fm().expander().sat().check(accel, shared.dpa, 64, false),
+        !sat_check(&cluster, shared.dpa, false),
         "release_host revoked the stale grant"
     );
 
@@ -98,7 +101,7 @@ fn crashed_hosts_stale_p2p_grants_do_not_survive_release() {
     // until host 1 explicitly grants it
     let b = cluster.alloc(1, dev, PAGE_SIZE).unwrap();
     assert_eq!(b.dpa, a.dpa, "first-fit re-leases the reclaimed extent");
-    assert!(!cluster.fm().expander().sat().check(accel, b.dpa, 64, false));
+    assert!(!sat_check(&cluster, b.dpa, false));
     let reshared = cluster.share(1, dev, accel, b.mmid).unwrap();
     assert_eq!(reshared.dpa, b.dpa);
     cluster.check_invariants().unwrap();
@@ -114,9 +117,9 @@ fn crash_with_pending_submissions_cancels_them_without_orphans() {
     let extent_req = Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE };
     let page_req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
     let pending: Vec<_> = (0..3)
-        .map(|_| cluster.submit(0, extent_req.clone()).unwrap())
+        .map(|_| cluster.submit(0, extent_req).unwrap())
         .collect();
-    let sibling = cluster.submit(1, page_req.clone()).unwrap();
+    let sibling = cluster.submit(1, page_req).unwrap();
     assert_eq!(cluster.queue().pending(), 4);
 
     cluster.crash_host(0).unwrap();
@@ -141,6 +144,71 @@ fn crash_with_pending_submissions_cancels_them_without_orphans() {
     assert_eq!(cluster.queue().ready(), 0, "no completion left unclaimed");
     // submissions routed at the dead slot are rejected up front
     assert!(cluster.submit(0, page_req).is_err());
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn crash_cancelled_tickets_poll_cancelled_terminally() {
+    // Regression: a ticket cancelled by `crash_host` used to decay to
+    // `QueueStatus::Unknown` once its completion was taken — a late
+    // poller (a driver thread re-checking a ticket it already reaped)
+    // could no longer tell "cancelled by a crash" from "never
+    // submitted". Cancellation must be terminal.
+    let (mut cluster, dev) = cluster(2, 1);
+    let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+    let doomed = cluster.submit(0, req).unwrap();
+    let normal = cluster.submit(1, req).unwrap();
+
+    cluster.crash_host(0).unwrap();
+    assert_eq!(cluster.poll_submission(doomed), QueueStatus::Cancelled);
+    let c = cluster.take_completion(doomed).unwrap();
+    assert!(c.is_cancelled());
+    // the fix: still Cancelled after the take, not Unknown
+    assert_eq!(
+        cluster.poll_submission(doomed),
+        QueueStatus::Cancelled,
+        "cancellation is terminal across take_completion"
+    );
+
+    // a normally-serviced ticket still retires to Unknown (single-use)
+    cluster.drain_queue();
+    cluster.take_completion(normal).unwrap().result.unwrap();
+    assert_eq!(cluster.poll_submission(normal), QueueStatus::Unknown);
+    cluster.check_invariants().unwrap();
+}
+
+#[test]
+fn threaded_submit_handles_feed_the_cluster_queue() {
+    // Driver threads submit through cloneable `SubmitHandle`s while the
+    // cluster owner ticks the queue from its own thread — the MPSC path
+    // the Rc<RefCell> fabric could not express.
+    let (mut cluster, dev) = cluster(2, 1);
+    let handles: Vec<SubmitHandle> =
+        (0..2).map(|slot| cluster.submit_handle(slot).unwrap()).collect();
+    let drivers: Vec<_> = handles
+        .into_iter()
+        .map(|h| {
+            std::thread::spawn(move || {
+                let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+                let t = h.submit(req).unwrap();
+                h.wait(t).unwrap().into_alloc().unwrap().mmid
+            })
+        })
+        .collect();
+    // tick until both submissions have been pumped, executed, claimed
+    let mut drivers: Vec<_> = drivers.into_iter().map(Some).collect();
+    let mut mmids = Vec::new();
+    while mmids.len() < 2 {
+        cluster.drain_queue();
+        for slot in drivers.iter_mut() {
+            if slot.as_ref().is_some_and(|d| d.is_finished()) {
+                mmids.push(slot.take().unwrap().join().unwrap());
+            }
+        }
+        std::thread::yield_now();
+    }
+    assert_ne!(mmids[0], mmids[1], "fabric-global mmids");
+    assert_eq!(cluster.leased_to(0).unwrap() + cluster.leased_to(1).unwrap(), 2 * EXTENT_SIZE);
     cluster.check_invariants().unwrap();
 }
 

@@ -18,6 +18,10 @@ fn host_gib(gib: u64) -> LmbHost {
     LmbHost::bind(fabric, GIB).unwrap()
 }
 
+fn sat_check(host: &LmbHost, spid: Spid, dpa: Dpa, write: bool) -> bool {
+    host.with_fm(|fm| fm.expander().sat().check(spid, dpa, 64, write)).unwrap()
+}
+
 #[test]
 fn pcie_round_trip() {
     let mut host = host_gib(4);
@@ -49,10 +53,10 @@ fn cxl_round_trip_carries_real_gfd_dpid() {
     assert!(a.bus_addr.is_none());
     // satellite check: the DPID is the fabric's actual GFD port id,
     // plumbed through attach_gfd -> bind -> load, not a sentinel
-    assert_eq!(a.dpid, host.fm().gfd_dpid());
-    assert!(host.fm().expander().sat().check(accel, a.dpa, 64, true));
+    assert_eq!(a.dpid, host.with_fm(|fm| fm.gfd_dpid()).unwrap());
+    assert!(sat_check(&host, accel, a.dpa, true));
     host.free(accel, a.mmid).unwrap();
-    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+    assert!(!sat_check(&host, accel, a.dpa, false));
     host.check_invariants().unwrap();
 }
 
@@ -68,14 +72,15 @@ fn share_is_owner_authorised_and_idempotent() {
 
     // non-owner may not share
     assert!(matches!(host.share(other, accel, a.mmid), Err(Error::NotOwner { .. })));
-    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+    assert!(!sat_check(&host, accel, a.dpa, false));
 
     // owner shares across classes (Figure 5); repeats add no state
     let s1 = host.share(owner, accel, a.mmid).unwrap();
-    let sat_entries = host.fm().expander().sat().len();
+    let sat_entries = host.with_fm(|fm| fm.expander().sat().len()).unwrap();
     let s2 = host.share(owner, accel, a.mmid).unwrap();
     assert_eq!(s1.dpa, s2.dpa);
-    assert_eq!(host.fm().expander().sat().len(), sat_entries, "no duplicate SAT entry");
+    let sat_now = host.with_fm(|fm| fm.expander().sat().len()).unwrap();
+    assert_eq!(sat_now, sat_entries, "no duplicate SAT entry");
 
     let p1 = host.share(owner, other, a.mmid).unwrap();
     let p2 = host.share(owner, other, a.mmid).unwrap();
@@ -85,7 +90,7 @@ fn share_is_owner_authorised_and_idempotent() {
     // owner free sweeps every share
     host.free(owner, a.mmid).unwrap();
     assert_eq!(host.iommu().mapping_count(other), 0);
-    assert!(!host.fm().expander().sat().check(accel, a.dpa, 64, false));
+    assert!(!sat_check(&host, accel, a.dpa, false));
 }
 
 #[test]
@@ -118,10 +123,11 @@ fn alloc_many_is_atomic() {
     let mut host = host_gib(1);
     let dev = Bdf::new(1, 0, 0);
     host.attach_pcie(dev);
-    let fm_before = host.fm().available();
+    let fm_before = host.with_fm(|fm| fm.available()).unwrap();
     assert!(host.alloc_many(dev, &[EXTENT_SIZE; 6]).is_err());
     assert_eq!(host.module().live_allocs(), 0, "partial batch rolled back");
-    assert_eq!(host.fm().available(), fm_before, "all extents returned");
+    let fm_after = host.with_fm(|fm| fm.available()).unwrap();
+    assert_eq!(fm_after, fm_before, "all extents returned");
     assert_eq!(host.iommu().mapping_count(dev), 0, "no stale IOMMU mappings");
     // the batch that fits succeeds and is fully usable
     let got = host.alloc_many(dev, &[EXTENT_SIZE; 4]).unwrap();
@@ -145,10 +151,10 @@ fn extent_release_keeps_other_placements_valid() {
     let a = host.alloc(dev, EXTENT_SIZE).unwrap(); // extent 0, full
     let b = host.alloc(dev, 4 * PAGE_SIZE).unwrap(); // extent 1
     host.write(b.mmid, 0, b"still-here").unwrap();
-    let fm_before = host.fm().available();
+    let fm_before = host.with_fm(|fm| fm.available()).unwrap();
 
     host.free(dev, a.mmid).unwrap(); // drains + releases extent 0
-    assert_eq!(host.fm().available(), fm_before + EXTENT_SIZE);
+    assert_eq!(host.with_fm(|fm| fm.available()).unwrap(), fm_before + EXTENT_SIZE);
 
     // b's handle still resolves to the same addresses and bytes
     let still = host.get(b.mmid).expect("b survives a's extent release");

@@ -65,10 +65,7 @@ fn random_api_interleavings_preserve_invariants() {
                         }
                     }
                 }
-                if sys.fm().check_invariants().is_err() {
-                    return false;
-                }
-                if sys.module().check_invariants().is_err() {
+                if sys.check_invariants().is_err() {
                     return false;
                 }
             }
@@ -83,7 +80,7 @@ fn random_api_interleavings_preserve_invariants() {
                     return false;
                 }
             }
-            sys.module().live_allocs() == 0 && sys.fm().check_invariants().is_ok()
+            sys.module().live_allocs() == 0 && sys.check_invariants().is_ok()
         },
     );
 }
@@ -279,7 +276,7 @@ fn queued_and_synchronous_allocation_agree() {
             let results: Vec<(Request, Result<Outcome, Error>)> = if queued {
                 let tickets: Vec<(Ticket, Request)> = requests
                     .into_iter()
-                    .map(|r| (cluster.submit(slot, r.clone()).unwrap(), r))
+                    .map(|r| (cluster.submit(slot, r).unwrap(), r))
                     .collect();
                 cluster.drain_queue();
                 tickets
@@ -290,7 +287,7 @@ fn queued_and_synchronous_allocation_agree() {
                 requests
                     .into_iter()
                     .map(|r| {
-                        let res = match r.clone() {
+                        let res = match r {
                             Request::Alloc { consumer, size } => cluster
                                 .alloc(slot, consumer, size)
                                 .map(Outcome::Alloc),
@@ -344,7 +341,7 @@ fn queued_and_synchronous_allocation_agree() {
             placements.push(rows);
             leased.push(cluster.leased_to(slot).unwrap());
         }
-        let sat_len = cluster.fm().expander().sat().len();
+        let sat_len = cluster.with_fm(|fm| fm.expander().sat().len()).unwrap();
         Some((ops_trace, placements, cluster.available(), leased, sat_len))
     }
 
