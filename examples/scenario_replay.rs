@@ -1,0 +1,73 @@
+//! Scenario engine walkthrough: replay a committed descriptor, then an
+//! inline one, against the real fabric.
+//!
+//! A scenario is data, not code — a TOML-subset descriptor naming a
+//! topology, a Zipf tenant population, an arrival process, fault
+//! injections and completion floors. The harness builds a `Cluster`,
+//! converts it to the `FmService` actor, and multiplexes the tenants
+//! over the service's lanes in simulated time; the replay hard-asserts
+//! count conservation, the floors, and the fabric invariants before
+//! reporting per-op and per-tenant-mean percentiles.
+//!
+//! Run: `cargo run --release --example scenario_replay`
+//! Env: `LMB_SCENARIO_SEED` pins the seed, `LMB_SCENARIO_SCALE`
+//! divides tenant/op counts (try `LMB_SCENARIO_SCALE=100` for a quick
+//! pass).
+
+use lmb::prelude::*;
+use lmb::scenario::{committed_scenarios, load_effective, Descriptor};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    // ---- 1. a committed descriptor, exactly as CI replays it ----
+    let files = committed_scenarios()?;
+    println!("{} committed scenarios:", files.len());
+    for f in &files {
+        println!("  {}", f.display());
+    }
+    let steady = files
+        .iter()
+        .find(|p| p.file_name().is_some_and(|n| n == "steady_zipf.toml"))
+        .expect("steady_zipf.toml is committed");
+    let spec = load_effective(steady)?;
+    println!(
+        "\nreplaying {}: {} tenants, {} ops, {} hosts, seed {:#x}",
+        spec.name, spec.tenants, spec.ops, spec.hosts, spec.seed
+    );
+    let report = ScenarioHarness::new(spec).run()?;
+    println!("  {}", report.summary());
+    println!("  ~{:.0} simulated ops/s", report.ops_per_sec());
+
+    // ---- 2. an inline descriptor: crash a host mid-burst ----
+    let desc = Descriptor::parse(
+        "name = \"inline_crash\"\n\
+         hosts = 3\n\
+         tenants = 50_000\n\
+         ops = 6_000\n\
+         alloc_bytes = 65_536\n\
+         churn = 0.5\n\
+         expander_gib = 4\n\
+         seed = 42\n\
+         [arrival]\n\
+         kind = \"bursts\"\n\
+         burst_ops = 128\n\
+         gap_ns = 250\n\
+         idle_ns = 10_000\n\
+         [[faults]]\n\
+         kind = \"crash_host\"\n\
+         slot = 2\n\
+         at_us = 200\n\
+         [expect]\n\
+         min_ok = 100\n\
+         min_cancelled = 1\n",
+    )?;
+    let spec = lmb::scenario::ScenarioSpec::from_descriptor(&desc, Path::new("."))?;
+    let report = ScenarioHarness::new(spec).run()?;
+    println!("\ninline crash scenario:\n  {}", report.summary());
+    assert!(report.cancelled >= 1, "the crash cancelled queued lane work");
+    println!(
+        "  crash at 200us: {} cancelled, {} tenants re-homed onto 2 lanes",
+        report.cancelled, report.distinct_tenants
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! SCENARIOS — replay every committed descriptor under `scenarios/`
+//! through the real FmService and dump per-scenario + per-tenant
+//! percentile summaries to `BENCH_scenarios.json` at the repo root.
+//!
+//! The replay itself hard-asserts correctness (count conservation, the
+//! descriptor's completion floors, service + fabric invariants); this
+//! target is the artifact producer CI uploads per SHA. Honors
+//! `LMB_SCENARIO_SEED` (pin the whole suite to one seed) and
+//! `LMB_SCENARIO_SCALE` (divide tenant/op counts for smoke runs —
+//! the reports record the *effective* counts).
+
+use std::path::Path;
+use std::time::Instant;
+
+use lmb::scenario::{committed_scenarios, load_effective, write_scenarios_json, ScenarioHarness};
+
+fn main() {
+    let files = committed_scenarios().expect("scenarios/ directory at the repo root");
+    assert!(files.len() >= 5, "committed suite lost scenarios: {}", files.len());
+    println!("## SCENARIOS — {} committed descriptors\n", files.len());
+
+    let mut reports = Vec::new();
+    for path in &files {
+        let spec = load_effective(path).expect("committed descriptors validate");
+        let wall = Instant::now();
+        let report = ScenarioHarness::new(spec)
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        println!("{}  [{:.2?} wall]", report.summary(), wall.elapsed());
+        reports.push(report);
+    }
+
+    let json_path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios.json"));
+    write_scenarios_json(json_path, &reports).expect("write BENCH_scenarios.json");
+    println!("\nwrote {} records to {}", reports.len(), json_path.display());
+    println!("\nSCENARIOS OK");
+}

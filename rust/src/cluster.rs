@@ -59,7 +59,7 @@ use crate::lmb::queue::{
     AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled,
     SubmitHandle, Ticket, DEFAULT_LANE_QUOTA,
 };
-use crate::lmb::{Consumer, LmbAlloc, LmbHost};
+use crate::lmb::{Consumer, FmService, LmbAlloc, LmbHost};
 
 /// N LMB hosts arbitrating one switch + expander through a shared
 /// [`FabricRef`]. Hosts are addressed by their slot index (stable
@@ -523,6 +523,39 @@ impl Cluster {
         }
         Ok(())
     }
+
+    /// Convert a fully-built cluster into the actor-side triple the
+    /// scenario engine drives: the [`FmService`] owning the hosts (lane
+    /// `i` = slot `i`, same lane quota), a [`FabricRef`] clone for
+    /// failure injection and invariant sweeps, and the cluster's
+    /// latency model. The builder stays the one place topology is
+    /// configured; the service becomes the one place requests execute.
+    ///
+    /// Refuses if any slot has crashed (lane numbering would silently
+    /// shift) or the cluster queue still holds undrained submissions
+    /// (their tickets would be stranded — the service has its own
+    /// queue).
+    pub fn into_service(mut self) -> Result<(FmService, FabricRef, Fabric)> {
+        self.queue.pump();
+        if self.queue.pending() > 0 || self.queue.ready() > 0 {
+            return Err(Error::FabricManager(
+                "drain the cluster queue before converting to a service".into(),
+            ));
+        }
+        let mut hosts = Vec::with_capacity(self.slots.len());
+        for (slot, h) in self.slots.drain(..).enumerate() {
+            match h {
+                Some(h) => hosts.push(h),
+                None => {
+                    return Err(Error::FabricManager(format!(
+                        "slot {slot} has crashed; rebuild the cluster before converting"
+                    )))
+                }
+            }
+        }
+        let svc = FmService::new(hosts).with_lane_quota(self.lane_quota);
+        Ok((svc, self.fabric.clone(), self.latency.clone()))
+    }
 }
 
 #[cfg(test)]
@@ -674,5 +707,32 @@ mod tests {
         cluster.host_mut(slot).unwrap().attach_pcie(dev);
         cluster.alloc(slot, dev, PAGE_SIZE).unwrap();
         cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn into_service_hands_hosts_to_the_actor_side() {
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.host_mut(1).unwrap().attach_pcie(dev);
+        let (mut svc, fabric, latency) = cluster.into_service().unwrap();
+        assert_eq!(svc.lanes(), 2);
+        assert!(latency.path_latency(crate::cxl::fabric::PathKind::HostToHdm).as_ns() > 0);
+        let h = svc.handle(1).unwrap();
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        h.take(t).unwrap().into_alloc().unwrap();
+        assert_eq!(fabric.lease_count(), 1);
+        svc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn into_service_refuses_crashed_or_undrained_clusters() {
+        let (mut cluster, _) = two_hosts();
+        cluster.crash_host(0).unwrap();
+        assert!(cluster.into_service().is_err());
+        let (mut cluster, dev) = two_hosts();
+        cluster.host_mut(0).unwrap().attach_pcie(dev);
+        cluster.submit(0, Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert!(cluster.into_service().is_err(), "undrained submissions would strand tickets");
     }
 }

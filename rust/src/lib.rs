@@ -118,6 +118,32 @@
 //! cancellation is terminal: `poll` keeps answering `Cancelled` even
 //! after the completion is taken.
 //!
+//! ## Scenario engine
+//!
+//! [`scenario`] replays declarative million-tenant workloads against
+//! the real fabric. A scenario is **data, not code**: a TOML-subset
+//! descriptor committed under `scenarios/` at the repository root
+//! (parsed by the zero-dependency [`scenario::Descriptor`], validated
+//! into a [`scenario::ScenarioSpec`]) naming a topology, a Zipf tenant
+//! population, an arrival process (steady, fio-style bursts, or a
+//! recorded trace), fault injections (host crash/join, expander
+//! outage) and hard completion-count floors. The
+//! [`scenario::ScenarioHarness`] builds a [`cluster::Cluster`],
+//! converts it to the [`lmb::FmService`] actor
+//! ([`cluster::Cluster::into_service`]), and drives it from the
+//! deterministic [`sim::engine::Engine`]: simulated-time arrivals
+//! multiplex up to 10^6 tenants over the service's lanes through real
+//! [`lmb::SubmitHandle`]s — nothing is mocked. Arrival gaps are fixed
+//! by the descriptor (the seeded RNG only picks tenants and op kinds,
+//! never times), so one seed yields one history and fault windows land
+//! at every scale; the same descriptor and seed serialise to a
+//! byte-identical [`scenario::ScenarioReport`] (`BENCH_scenarios.json`,
+//! with per-op *and* per-tenant-mean p50/p99/p999). `LMB_SCENARIO_SEED`
+//! pins the seed across the suite and `LMB_SCENARIO_SCALE` divides the
+//! tenant/op counts for CI. Adding a scenario is dropping a descriptor
+//! in `scenarios/` — the suite test and the `scenarios` bench pick it
+//! up automatically.
+//!
 //! ## Quick start
 //!
 //! The control plane is the unified, consumer-generic API on
@@ -149,6 +175,7 @@ pub mod host;
 pub mod lmb;
 pub mod pcie;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod ssd;
 pub mod system;
@@ -173,6 +200,7 @@ pub mod prelude {
     pub use crate::lmb::{
         Consumer, FmService, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion,
     };
+    pub use crate::scenario::{ScenarioHarness, ScenarioReport, ScenarioSpec};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;
     pub use crate::ssd::spec::SsdSpec;

@@ -339,6 +339,23 @@ impl SubmitHandle {
         self.lane
     }
 
+    /// A handle onto the **same queue** aimed at a different lane — how
+    /// a failover path re-homes a tenant's submissions after its host
+    /// crashes, and how a lane added at runtime
+    /// ([`FmService::join_host`](crate::lmb::FmService::join_host))
+    /// gets an endpoint without reopening the intake. Tickets still
+    /// come from the shared counter and completions land in the shared
+    /// table, so `poll`/`take`/`wait` on either handle observe both
+    /// lanes' traffic.
+    pub fn retarget(&self, lane: usize) -> SubmitHandle {
+        SubmitHandle {
+            lane,
+            tx: self.tx.clone(),
+            next_ticket: Arc::clone(&self.next_ticket),
+            table: Arc::clone(&self.table),
+        }
+    }
+
     /// Enqueue `request`; returns its completion handle. Fails only if
     /// the owning queue is gone (receiver dropped).
     pub fn submit(&self, request: Request) -> Result<Ticket> {
@@ -815,5 +832,26 @@ mod tests {
         }
         assert_eq!(q.stats().completed, (DRIVERS * OPS) as u64);
         assert_eq!(q.ready(), 0, "every completion claimed by its waiter");
+    }
+
+    #[test]
+    fn retargeted_handle_shares_tickets_and_completions() {
+        let mut q = AllocQueue::new();
+        let h0 = q.handle(0).unwrap();
+        let h1 = h0.retarget(1);
+        assert_eq!((h0.lane(), h1.lane()), (0, 1));
+        let t0 = h0.submit(alloc_req(1)).unwrap();
+        let t1 = h1.submit(alloc_req(1)).unwrap();
+        assert_ne!(t0, t1, "tickets minted from the shared counter");
+        let batch = q.schedule(8);
+        assert_eq!(batch.iter().map(|s| s.lane).collect::<Vec<_>>(), [0, 1]);
+        for s in batch {
+            let (ticket, lane) = (s.ticket, s.lane);
+            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+        }
+        // either handle observes both lanes' completions (shared table)
+        assert_eq!(h1.poll(t0), QueueStatus::Ready);
+        assert!(h0.take(t1).is_some());
+        assert!(h1.take(t0).is_some());
     }
 }

@@ -69,17 +69,22 @@ use crate::lmb::queue::{AllocQueue, QueueStats, Scheduled, SubmitHandle, DEFAULT
 use crate::lmb::LmbHost;
 
 /// The FM-side actor owning hosts and the execute half of an
-/// [`AllocQueue`]. Lane `i` of the queue maps to `hosts[i]`.
+/// [`AllocQueue`]. Lane `i` of the queue maps to the host in slot `i`.
 ///
 /// `FmService` is `Send`: build it, mint [`SubmitHandle`]s, then move
-/// it into its service thread and call [`FmService::run`]. Host crash
-/// simulation stays on [`Cluster`](crate::cluster::Cluster) — the
-/// service models the steady-state arbitration loop, not failure
-/// injection.
+/// it into its service thread and call [`FmService::run`]. Failure
+/// injection runs through the service too — the scenario engine
+/// ([`crate::scenario`]) crashes lanes mid-burst with
+/// [`FmService::crash_host`] (cancel the lane, reclaim the leases) and
+/// re-homes tenants onto lanes added at runtime with
+/// [`FmService::join_host`] + [`SubmitHandle::retarget`].
 #[derive(Debug)]
 pub struct FmService {
     queue: AllocQueue,
-    hosts: Vec<LmbHost>,
+    /// One slot per lane; `None` marks a crashed host whose lane stays
+    /// allocated (late submissions complete as cancelled, they never
+    /// execute against reclaimed leases).
+    slots: Vec<Option<LmbHost>>,
     lane_quota: usize,
 }
 
@@ -88,7 +93,11 @@ impl FmService {
     /// hosts' own per-context queues are unused from here on; every
     /// submission flows through the service's queue.
     pub fn new(hosts: Vec<LmbHost>) -> Self {
-        FmService { queue: AllocQueue::new(), hosts, lane_quota: DEFAULT_LANE_QUOTA }
+        FmService {
+            queue: AllocQueue::new(),
+            slots: hosts.into_iter().map(Some).collect(),
+            lane_quota: DEFAULT_LANE_QUOTA,
+        }
     }
 
     /// Per-lane requests serviced per scheduling tick (fairness
@@ -100,20 +109,83 @@ impl FmService {
 
     /// A cloneable submission endpoint for `lane`'s host. Mint every
     /// handle **before** calling [`FmService::run`] — the run loop
-    /// closes the intake so it can observe disconnection.
+    /// closes the intake so it can observe disconnection. (Under
+    /// manual [`FmService::tick`] driving the intake stays open, so
+    /// handles for lanes added by [`FmService::join_host`] can be
+    /// minted at any time.)
     pub fn handle(&self, lane: usize) -> Result<SubmitHandle> {
-        if lane >= self.hosts.len() {
-            return Err(Error::FabricManager(format!(
+        match self.slots.get(lane) {
+            Some(Some(_)) => self.queue.handle(lane),
+            Some(None) => {
+                Err(Error::FabricManager(format!("host behind lane {lane} has crashed")))
+            }
+            None => Err(Error::FabricManager(format!(
                 "no host behind lane {lane} ({} lanes)",
-                self.hosts.len()
-            )));
+                self.slots.len()
+            ))),
         }
-        self.queue.handle(lane)
     }
 
-    /// The hosts the service arbitrates (lane order).
-    pub fn hosts(&self) -> &[LmbHost] {
-        &self.hosts
+    /// The live hosts the service arbitrates, as `(lane, host)` pairs
+    /// in lane order (crashed lanes are skipped).
+    pub fn hosts(&self) -> impl Iterator<Item = (usize, &LmbHost)> {
+        self.slots.iter().enumerate().filter_map(|(lane, s)| s.as_ref().map(|h| (lane, h)))
+    }
+
+    /// The host behind `lane`, if it is alive.
+    pub fn host(&self, lane: usize) -> Result<&LmbHost> {
+        self.slots
+            .get(lane)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| Error::FabricManager(format!("no live host behind lane {lane}")))
+    }
+
+    /// Number of lanes ever created (live + crashed).
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of live hosts.
+    pub fn alive(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Crash the host behind `lane` mid-flight: its
+    /// queued-but-unscheduled submissions complete with
+    /// [`Error::Cancelled`], its leases/SAT grants/decoders are
+    /// reclaimed through the fabric, and the lane goes dead — later
+    /// submissions aimed at it are cancelled at execute time instead
+    /// of touching reclaimed memory.
+    pub fn crash_host(&mut self, lane: usize) -> Result<()> {
+        let host = self
+            .slots
+            .get_mut(lane)
+            .ok_or_else(|| Error::FabricManager(format!("no lane {lane}")))?
+            .take()
+            .ok_or_else(|| Error::FabricManager(format!("host behind lane {lane} already gone")))?;
+        self.queue.cancel_lane(lane);
+        host.fabric_ref().release_host(host.host());
+        Ok(())
+    }
+
+    /// Add a host (bound to the same shared fabric) behind a fresh
+    /// lane; returns the lane id. Mint an endpoint for it with
+    /// [`FmService::handle`] (manual ticking) or by retargeting an
+    /// existing handle ([`SubmitHandle::retarget`]).
+    pub fn join_host(&mut self, host: LmbHost) -> usize {
+        self.slots.push(Some(host));
+        self.slots.len() - 1
+    }
+
+    /// Invariant sweep over every live host (module bookkeeping, IOMMU
+    /// mappings, fabric lease accounting). Deliberately works through
+    /// the hosts' own poison-bypassing checks so post-crash state can
+    /// be audited.
+    pub fn check_invariants(&self) -> Result<()> {
+        for (_, host) in self.hosts() {
+            host.check_invariants()?;
+        }
+        Ok(())
     }
 
     /// Queue counters (submitted / completed / cancelled / ticks).
@@ -139,10 +211,23 @@ impl FmService {
     }
 
     fn execute_group(&mut self, lane: usize, group: Vec<Scheduled>) {
-        match self.hosts.get_mut(lane) {
-            Some(host) => {
+        match self.slots.get_mut(lane) {
+            Some(Some(host)) => {
                 for c in host.execute_requests(group) {
                     self.queue.complete(c);
+                }
+            }
+            Some(None) => {
+                // the host crashed after these submissions were sent:
+                // cancel them (terminal) rather than execute against
+                // reclaimed leases — mirrors AllocQueue::cancel_lane
+                // for work that raced past the cancellation
+                for s in group {
+                    self.queue.complete(crate::lmb::queue::Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::Cancelled { ticket: s.ticket.0 }),
+                    });
                 }
             }
             None => {
@@ -177,7 +262,7 @@ impl FmService {
         }
         // the disconnect may have raced a final burst into the buffer
         while self.tick() > 0 {}
-        self.hosts
+        self.slots.into_iter().flatten().collect()
     }
 }
 
@@ -263,5 +348,53 @@ mod tests {
         for host in &hosts {
             host.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn crash_host_cancels_lane_and_reclaims_leases() {
+        let (mut svc, fabric, dev) = service(2, GIB);
+        let h0 = svc.handle(0).unwrap();
+        let h1 = svc.handle(1).unwrap();
+        let a = h0.submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        h0.take(a).unwrap().result.unwrap();
+        assert_eq!(fabric.available(), GIB - EXTENT_SIZE);
+        // one queued-but-unscheduled request dies with the host
+        let doomed = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        svc.crash_host(0).unwrap();
+        assert!(h0.take(doomed).unwrap().is_cancelled());
+        assert_eq!(fabric.available(), GIB, "crash reclaims the victim's extents");
+        assert_eq!((svc.alive(), svc.lanes()), (1, 2));
+        assert!(svc.handle(0).is_err(), "dead lane mints no new endpoints");
+        assert!(svc.crash_host(0).is_err(), "double crash is rejected");
+        // a submission that raced past the cancellation cancels at
+        // execute time instead of touching reclaimed memory
+        let late = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        assert!(h0.take(late).unwrap().is_cancelled());
+        // the surviving lane still executes
+        let ok = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        h1.take(ok).unwrap().into_alloc().unwrap();
+        svc.check_invariants().unwrap();
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn join_host_adds_a_lane_behind_a_retargeted_handle() {
+        let (mut svc, fabric, dev) = service(1, GIB);
+        let h0 = svc.handle(0).unwrap();
+        let mut joined = crate::lmb::LmbHost::bind(fabric.clone(), GIB).unwrap();
+        joined.attach_pcie(dev);
+        let lane = svc.join_host(joined);
+        assert_eq!(lane, 1);
+        assert_eq!((svc.alive(), svc.lanes()), (2, 2));
+        let h1 = h0.retarget(lane);
+        let t = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        h1.take(t).unwrap().into_alloc().unwrap();
+        assert_eq!(svc.host(lane).unwrap().module().live_allocs(), 1);
+        assert_eq!(svc.hosts().count(), 2);
+        svc.check_invariants().unwrap();
     }
 }

@@ -1,0 +1,414 @@
+//! Scenario descriptors: a zero-dependency TOML-subset parser.
+//!
+//! Scenarios are **data, not code** — the committed `scenarios/*.toml`
+//! files at the repository root are the only inputs the replay harness
+//! takes, so adding a workload never means recompiling. The crate is
+//! deliberately dependency-free (no crates.io registry in the offline
+//! toolchain image), so the subset is hand-rolled here. Supported
+//! grammar, one directive per line:
+//!
+//! ```toml
+//! # comment                      (blank lines ignored)
+//! key = "string"                 # \" and \\ escapes
+//! key = 42                       # unsigned integer; 0x-hex and _ ok
+//! key = 0.99                     # float
+//! key = true                     # booleans
+//! [section]                      # named table (one level)
+//! [[events]]                     # array-of-tables: appends an entry
+//! ```
+//!
+//! Everything else — nested tables, inline arrays, dotted keys,
+//! datetimes, multi-line strings — is rejected with a line-numbered
+//! [`Error::Config`], as are duplicate keys and redefined sections:
+//! descriptors are small and hand-written, so a loud parse failure
+//! beats a silently-ignored typo. Schema validation (which keys are
+//! allowed where) lives in [`super::spec`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    /// Unsigned — the schema has no negative quantities, and `u64`
+    /// keeps 64-bit seeds exact (an `i64` would truncate them).
+    Int(u64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+        }
+    }
+}
+
+/// One flat `key = value` table (the root, a `[section]`, or one
+/// `[[entry]]` of an array-of-tables).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Required string.
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => Err(bad_type(key, "string", v)),
+            None => Err(missing(key, "string")),
+        }
+    }
+
+    /// Required unsigned integer.
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        match self.get(key) {
+            Some(Value::Int(n)) => Ok(*n),
+            Some(v) => Err(bad_type(key, "integer", v)),
+            None => Err(missing(key, "integer")),
+        }
+    }
+
+    /// Optional unsigned integer with a default.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(Value::Int(n)) => Ok(*n),
+            Some(v) => Err(bad_type(key, "integer", v)),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional float with a default; integers coerce.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(Value::Float(x)) => Ok(*x),
+            Some(Value::Int(n)) => Ok(*n as f64),
+            Some(v) => Err(bad_type(key, "float", v)),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional string with a default.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => Err(bad_type(key, "string", v)),
+            None => Ok(default),
+        }
+    }
+
+    /// Reject keys outside `allowed` — a loud failure for typos like
+    /// `zipf_thetta` that TOML-as-data would otherwise silently drop.
+    pub fn deny_unknown(&self, ctx: &str, allowed: &[&str]) -> Result<()> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                return Err(Error::Config(format!(
+                    "{ctx}: unknown key `{k}` (allowed: {})",
+                    allowed.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn missing(key: &str, want: &str) -> Error {
+    Error::Config(format!("missing key `{key}` ({want})"))
+}
+
+fn bad_type(key: &str, want: &str, got: &Value) -> Error {
+    Error::Config(format!("key `{key}`: expected {want}, got {}", got.type_name()))
+}
+
+/// A whole parsed descriptor: root keys, named `[tables]`, and
+/// `[[arrays]]` of tables.
+#[derive(Debug, Clone, Default)]
+pub struct Descriptor {
+    pub root: Table,
+    tables: BTreeMap<String, Table>,
+    arrays: BTreeMap<String, Vec<Table>>,
+}
+
+/// Where `key = value` lines currently land during the parse.
+enum Cursor {
+    Root,
+    Table(String),
+    Array(String),
+}
+
+impl Descriptor {
+    /// Named `[table]`, if present.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+
+    /// Entries of a `[[name]]` array-of-tables (empty if absent).
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Names of all `[tables]` present.
+    pub fn table_names(&self) -> impl Iterator<Item = &str> {
+        self.tables.keys().map(String::as_str)
+    }
+
+    /// Names of all `[[arrays]]` present.
+    pub fn array_names(&self) -> impl Iterator<Item = &str> {
+        self.arrays.keys().map(String::as_str)
+    }
+
+    /// Parse descriptor text. Errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> Result<Descriptor> {
+        let mut desc = Descriptor::default();
+        let mut cursor = Cursor::Root;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+                let name = valid_name(lineno, name)?;
+                if desc.tables.contains_key(&name) {
+                    return Err(at(lineno, format!("`{name}` is already a [table]")));
+                }
+                desc.arrays.entry(name.clone()).or_default().push(Table::default());
+                cursor = Cursor::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+                let name = valid_name(lineno, name)?;
+                if desc.arrays.contains_key(&name) {
+                    return Err(at(lineno, format!("`{name}` is already an [[array]]")));
+                }
+                if desc.tables.contains_key(&name) {
+                    return Err(at(lineno, format!("section [{name}] redefined")));
+                }
+                desc.tables.insert(name.clone(), Table::default());
+                cursor = Cursor::Table(name);
+            } else if let Some((key, rest)) = line.split_once('=') {
+                let key = valid_name(lineno, key.trim())?;
+                let value = parse_value(lineno, rest.trim())?;
+                let table = match &cursor {
+                    Cursor::Root => &mut desc.root,
+                    Cursor::Table(name) => desc.tables.get_mut(name).expect("cursor table"),
+                    Cursor::Array(name) => desc
+                        .arrays
+                        .get_mut(name)
+                        .and_then(|v| v.last_mut())
+                        .expect("cursor array entry"),
+                };
+                if table.entries.insert(key.clone(), value).is_some() {
+                    return Err(at(lineno, format!("duplicate key `{key}`")));
+                }
+            } else {
+                return Err(at(
+                    lineno,
+                    format!("unparseable line {line:?} (expected `key = value` or `[section]`)"),
+                ));
+            }
+        }
+        Ok(desc)
+    }
+
+    /// Parse a descriptor file; errors are prefixed with the path.
+    pub fn load(path: &Path) -> Result<Descriptor> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Descriptor::parse(&text).map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+    }
+}
+
+fn at(lineno: usize, msg: String) -> Error {
+    Error::Config(format!("line {lineno}: {msg}"))
+}
+
+/// Strip a trailing `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            _ if escaped => escaped = false,
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn valid_name(lineno: usize, name: &str) -> Result<String> {
+    let name = name.trim();
+    let ok = !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+    if !ok {
+        return Err(at(lineno, format!("bad key/section name {name:?}")));
+    }
+    Ok(name.to_string())
+}
+
+fn parse_value(lineno: usize, raw: &str) -> Result<Value> {
+    if raw.is_empty() {
+        return Err(at(lineno, "missing value after `=`".into()));
+    }
+    if let Some(rest) = raw.strip_prefix('"') {
+        return parse_string(lineno, rest);
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if raw.starts_with('-') {
+        return Err(at(lineno, format!("negative value {raw:?} (schema is unsigned)")));
+    }
+    let digits = raw.replace('_', "");
+    if let Some(hex) = digits.strip_prefix("0x").or_else(|| digits.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16)
+            .map(Value::Int)
+            .map_err(|_| at(lineno, format!("bad hex integer {raw:?}")));
+    }
+    if let Ok(n) = digits.parse::<u64>() {
+        return Ok(Value::Int(n));
+    }
+    if let Ok(x) = digits.parse::<f64>() {
+        if x.is_finite() {
+            return Ok(Value::Float(x));
+        }
+    }
+    Err(at(lineno, format!("unparseable value {raw:?}")))
+}
+
+/// Body of a `"..."` string (opening quote already stripped).
+fn parse_string(lineno: usize, rest: &str) -> Result<Value> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => return Err(at(lineno, format!("unsupported escape `\\{other}`"))),
+                None => return Err(at(lineno, "dangling escape at end of string".into())),
+            },
+            '"' => {
+                let tail: String = chars.collect();
+                if !tail.trim().is_empty() {
+                    return Err(at(lineno, format!("trailing garbage after string: {tail:?}")));
+                }
+                return Ok(Value::Str(out));
+            }
+            c => out.push(c),
+        }
+    }
+    Err(at(lineno, "unterminated string".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a scenario
+name = "steady"        # trailing comment
+tenants = 100_000
+seed = 0xdead_beef
+zipf_theta = 0.99
+paper = true
+
+[arrival]
+kind = "steady"
+gap_ns = 2000
+
+[[faults]]
+kind = "crash_host"
+slot = 1
+
+[[faults]]
+kind = "join_host"
+"#;
+
+    #[test]
+    fn scenario_descriptor_parses_the_subset() {
+        let d = Descriptor::parse(SAMPLE).unwrap();
+        assert_eq!(d.root.str("name").unwrap(), "steady");
+        assert_eq!(d.root.u64("tenants").unwrap(), 100_000);
+        assert_eq!(d.root.u64("seed").unwrap(), 0xdead_beef);
+        assert!((d.root.f64_or("zipf_theta", 0.0).unwrap() - 0.99).abs() < 1e-12);
+        assert_eq!(d.root.get("paper"), Some(&Value::Bool(true)));
+        let arrival = d.table("arrival").unwrap();
+        assert_eq!(arrival.str("kind").unwrap(), "steady");
+        assert_eq!(arrival.u64("gap_ns").unwrap(), 2000);
+        let faults = d.array("faults");
+        assert_eq!(faults.len(), 2);
+        assert_eq!(faults[0].str("kind").unwrap(), "crash_host");
+        assert_eq!(faults[0].u64("slot").unwrap(), 1);
+        assert_eq!(faults[1].str("kind").unwrap(), "join_host");
+        assert!(d.array("nope").is_empty());
+    }
+
+    #[test]
+    fn scenario_descriptor_strings_escape_and_guard_hashes() {
+        let d = Descriptor::parse(r#"msg = "a \"b\" # not a comment \\" "#).unwrap();
+        assert_eq!(d.root.str("msg").unwrap(), r#"a "b" # not a comment \"#);
+    }
+
+    #[test]
+    fn scenario_descriptor_rejects_malformed_lines() {
+        for (bad, why) in [
+            ("key value", "no equals"),
+            ("key = ", "empty value"),
+            ("key = \"unterminated", "unterminated string"),
+            ("key = \"x\" junk", "trailing garbage"),
+            ("key = \"\\q\"", "bad escape"),
+            ("key = -5", "negative"),
+            ("key = 1.2.3", "bad float"),
+            ("key = 0xzz", "bad hex"),
+            ("a = 1\na = 2", "duplicate key"),
+            ("[t]\nx = 1\n[t]", "section redefined"),
+            ("[t]\n[[t]]", "table vs array clash"),
+            ("[[t]]\n[t]", "array vs table clash"),
+            ("[bad name]", "bad section name"),
+            ("k ey = 1", "bad key name"),
+            ("= 1", "empty key"),
+            ("[unclosed", "unparseable header"),
+        ] {
+            let err = Descriptor::parse(bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{why}: wrong error kind {err:?}");
+            assert!(err.to_string().contains("line "), "{why}: no line number in {err}");
+        }
+    }
+
+    #[test]
+    fn scenario_descriptor_typed_accessors_enforce_types() {
+        let d = Descriptor::parse("n = 3\ns = \"x\"").unwrap();
+        assert!(d.root.str("n").is_err());
+        assert!(d.root.u64("s").is_err());
+        assert!(d.root.u64("absent").is_err());
+        assert_eq!(d.root.u64_or("absent", 7).unwrap(), 7);
+        assert_eq!(d.root.f64_or("n", 0.0).unwrap(), 3.0, "ints coerce to float");
+        assert_eq!(d.root.str_or("absent", "dflt").unwrap(), "dflt");
+        d.root.deny_unknown("root", &["n", "s"]).unwrap();
+        assert!(d.root.deny_unknown("root", &["n"]).is_err());
+    }
+}

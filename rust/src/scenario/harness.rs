@@ -1,0 +1,502 @@
+//! The scenario replay harness: descriptor in, report out, real fabric
+//! in between.
+//!
+//! The harness is the bridge between the DES side of the crate
+//! ([`Engine`], simulated time, seeded RNG) and the control-plane side
+//! (the [`FmService`] actor executing against the shared
+//! [`FabricRef`]). Nothing is mocked: every op is a real
+//! [`Request`] submitted through a real [`SubmitHandle`], scheduled by
+//! the service's fair rotating quota, executed by the real allocator
+//! under the fabric lock, and reaped from the real completion table —
+//! the replay just decides *when* (simulated arrivals, service ticks)
+//! and *who* (a Zipf-skewed tenant population multiplexed over the
+//! lanes).
+//!
+//! Event loop invariants:
+//!
+//! * a `Service` event is pending whenever an op is in flight (arrivals
+//!   arm it; services re-arm while the inflight set is non-empty), so
+//!   every submission is eventually executed and reaped;
+//! * arrival gaps are fixed by the spec — the RNG never touches the
+//!   clock, so fault times hit the same arrival count on every seed;
+//! * completion latency = queueing delay in simulated time (submit →
+//!   reap) + the spec's modeled fabric path latency.
+//!
+//! After the last event the harness **hard-asserts** the run: exact
+//! count conservation (`submitted == ok + failed + cancelled`), the
+//! spec's completion floors, an empty inflight set, and full service +
+//! fabric invariant sweeps. A scenario that completes without
+//! panicking has really pushed its ops through the fabric.
+
+use std::collections::VecDeque;
+
+use crate::cluster::Cluster;
+use crate::cxl::fm::FabricRef;
+use crate::cxl::types::{Bdf, GIB};
+use crate::error::{Error, Result};
+use crate::lmb::queue::{Completion, Outcome, PlacementPolicy, Request, SubmitHandle, Ticket};
+use crate::lmb::{FmService, LmbHost};
+use crate::scenario::report::ScenarioReport;
+use crate::scenario::spec::{Arrival, FaultKind, ScenarioSpec};
+use crate::scenario::tenant::{AllocRec, TenantBook};
+use crate::sim::engine::Engine;
+use crate::sim::rng::Pcg64;
+use crate::sim::stats::LatencyHistogram;
+use crate::sim::time::SimTime;
+use crate::workload::tenants::TenantPopulation;
+use crate::workload::trace::Trace;
+
+/// Replay events. Arrivals cascade (each schedules the next until the
+/// op budget is spent); services re-arm while work is in flight;
+/// faults are scheduled up front at their descriptor times.
+#[derive(Debug)]
+enum Ev {
+    Arrival,
+    Service,
+    Fault(usize),
+}
+
+/// One submitted-but-unreaped op.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    ticket: Ticket,
+    tenant: u64,
+    lane: usize,
+    dev: usize,
+    submitted: SimTime,
+}
+
+/// Drives one [`ScenarioSpec`] against a freshly built fabric.
+#[derive(Debug)]
+pub struct ScenarioHarness {
+    spec: ScenarioSpec,
+}
+
+impl ScenarioHarness {
+    pub fn new(spec: ScenarioSpec) -> Self {
+        ScenarioHarness { spec }
+    }
+
+    /// Load a descriptor (with the environment hooks applied) and
+    /// replay it.
+    pub fn replay_file(path: &std::path::Path) -> Result<ScenarioReport> {
+        ScenarioHarness::new(crate::scenario::load_effective(path)?).run()
+    }
+
+    /// Build the cluster, convert it to the service, and replay the
+    /// scenario to completion. Panics (hard assert) if the run violates
+    /// count conservation, the spec's floors, or any invariant.
+    pub fn run(&self) -> Result<ScenarioReport> {
+        let spec = &self.spec;
+        let devices: Vec<Bdf> = (0..spec.devices).map(|d| Bdf::new(d as u8 + 1, 0, 0)).collect();
+
+        let mut cluster = Cluster::builder()
+            .hosts(spec.hosts)
+            .expander_gib(spec.expander_gib)
+            .host_dram_gib(spec.host_dram_gib)
+            .lane_quota(spec.lane_quota)
+            .build()?;
+        for slot in 0..spec.hosts {
+            for dev in &devices {
+                cluster.host_mut(slot)?.attach_pcie(*dev);
+            }
+        }
+        let (svc, fabric, latency) = cluster.into_service()?;
+
+        let mut handles: Vec<Option<SubmitHandle>> = Vec::with_capacity(spec.hosts);
+        for lane in 0..spec.hosts {
+            handles.push(Some(svc.handle(lane)?));
+        }
+        let reaper = handles[0].clone().expect("lane 0 exists at build time");
+
+        let trace_tenants: Vec<u64> = match &spec.arrival {
+            Arrival::Trace { file, .. } => {
+                let trace = Trace::load(file)?;
+                if trace.is_empty() {
+                    return Err(Error::Config(format!("trace {} has no requests", file.display())));
+                }
+                trace.requests.iter().map(|r| r.lpa % spec.tenants).collect()
+            }
+            _ => Vec::new(),
+        };
+
+        let mut replay = Replay {
+            spec,
+            devices,
+            svc,
+            fabric,
+            path_latency: latency.path_latency(spec.path),
+            handles,
+            reaper,
+            alive: (0..spec.hosts).collect(),
+            engine: Engine::new(),
+            rng: Pcg64::with_stream(spec.seed, crate::scenario::fnv1a(&spec.name)),
+            population: TenantPopulation::new(spec.tenants, spec.zipf_theta),
+            trace_tenants,
+            emitted: 0,
+            inflight: VecDeque::new(),
+            service_armed: false,
+            book: TenantBook::new(),
+            ops_hist: LatencyHistogram::new(),
+            submitted: 0,
+            ok: 0,
+            failed: 0,
+            cancelled: 0,
+            failed_capacity: 0,
+            failed_expander: 0,
+        };
+        replay.run()
+    }
+}
+
+/// All mutable replay state, so event handlers are plain `&mut self`
+/// methods.
+struct Replay<'a> {
+    spec: &'a ScenarioSpec,
+    devices: Vec<Bdf>,
+    svc: FmService,
+    fabric: FabricRef,
+    path_latency: SimTime,
+    /// One endpoint per lane; `None` marks a crashed lane.
+    handles: Vec<Option<SubmitHandle>>,
+    /// Any handle works for reaping — the completion table is shared.
+    reaper: SubmitHandle,
+    /// Lanes tenants currently map onto (crashes remove, joins append).
+    alive: Vec<usize>,
+    engine: Engine<Ev>,
+    rng: Pcg64,
+    population: TenantPopulation,
+    /// Pre-resolved tenant per arrival for trace-driven scenarios.
+    trace_tenants: Vec<u64>,
+    /// Arrivals emitted so far.
+    emitted: u64,
+    inflight: VecDeque<Pending>,
+    /// Whether a `Service` event is scheduled (the loop invariant).
+    service_armed: bool,
+    book: TenantBook,
+    ops_hist: LatencyHistogram,
+    submitted: u64,
+    ok: u64,
+    failed: u64,
+    cancelled: u64,
+    failed_capacity: u64,
+    failed_expander: u64,
+}
+
+impl Replay<'_> {
+    fn run(&mut self) -> Result<ScenarioReport> {
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            self.engine.schedule_at(f.at, Ev::Fault(i));
+        }
+        self.engine.schedule_at(SimTime::ZERO, Ev::Arrival);
+
+        while let Some((_, ev)) = self.engine.pop() {
+            match ev {
+                Ev::Arrival => self.on_arrival(),
+                Ev::Service => self.on_service(),
+                Ev::Fault(i) => self.on_fault(i)?,
+            }
+        }
+
+        // ---- hard asserts: the run really went through the fabric ----
+        let name = &self.spec.name;
+        assert!(
+            self.inflight.is_empty(),
+            "{name}: {} ops still in flight after the event queue drained",
+            self.inflight.len()
+        );
+        assert_eq!(self.svc.tick(), 0, "{name}: service still had schedulable work");
+        assert_eq!(
+            self.submitted,
+            self.ok + self.failed + self.cancelled,
+            "{name}: completion counts do not conserve submissions"
+        );
+        assert_eq!(self.submitted, self.spec.ops, "{name}: arrival budget not fully emitted");
+        let e = &self.spec.expect;
+        assert!(self.ok >= e.min_ok, "{name}: ok {} below the spec floor {}", self.ok, e.min_ok);
+        assert!(
+            self.failed >= e.min_failed,
+            "{name}: failed {} below the spec floor {}",
+            self.failed,
+            e.min_failed
+        );
+        assert!(
+            self.cancelled >= e.min_cancelled,
+            "{name}: cancelled {} below the spec floor {}",
+            self.cancelled,
+            e.min_cancelled
+        );
+        self.svc.check_invariants()?;
+        self.fabric.check_invariants()?;
+
+        let tenant_means = self.book.tenant_mean_histogram();
+        Ok(ScenarioReport {
+            name: name.clone(),
+            seed: self.spec.seed,
+            hosts: self.spec.hosts,
+            tenants: self.spec.tenants,
+            distinct_tenants: self.book.distinct_tenants(),
+            submitted: self.submitted,
+            ok: self.ok,
+            failed: self.failed,
+            cancelled: self.cancelled,
+            failed_capacity: self.failed_capacity,
+            failed_expander: self.failed_expander,
+            sim_duration: self.engine.now(),
+            op_mean: self.ops_hist.mean(),
+            op_p50: self.ops_hist.p50(),
+            op_p99: self.ops_hist.p99(),
+            op_p999: self.ops_hist.p999(),
+            op_max: self.ops_hist.max(),
+            tenant_p50: tenant_means.p50(),
+            tenant_p99: tenant_means.p99(),
+            tenant_p999: tenant_means.p999(),
+        })
+    }
+
+    /// Emit one op for one tenant, then schedule the next arrival and
+    /// make sure a service tick is armed.
+    fn on_arrival(&mut self) {
+        let tenant = match &self.spec.arrival {
+            Arrival::Trace { .. } => {
+                self.trace_tenants[(self.emitted as usize) % self.trace_tenants.len()]
+            }
+            _ => self.population.sample(&mut self.rng),
+        };
+        // two draws per arrival regardless of outcome: the op-mix
+        // decision never perturbs the tenant sequence
+        let share_roll = self.rng.chance(self.spec.share_fraction);
+        let churn_roll = self.rng.chance(self.spec.churn);
+
+        let (lane, dev, request) = if share_roll && self.devices.len() > 1 {
+            match self.book.pop_alloc(tenant) {
+                // share to the next device over; the shared allocation
+                // (and its original) stay live to the end of the run
+                Some(rec) => {
+                    let target = (rec.dev + 1) % self.devices.len();
+                    (
+                        rec.lane,
+                        rec.dev,
+                        Request::Share {
+                            owner: self.devices[rec.dev].into(),
+                            target: self.devices[target].into(),
+                            mmid: rec.mmid,
+                        },
+                    )
+                }
+                None => self.alloc_op(tenant),
+            }
+        } else if churn_roll {
+            match self.book.pop_alloc(tenant) {
+                Some(rec) => (
+                    rec.lane,
+                    rec.dev,
+                    Request::Free { consumer: self.devices[rec.dev].into(), mmid: rec.mmid },
+                ),
+                None => self.alloc_op(tenant),
+            }
+        } else {
+            self.alloc_op(tenant)
+        };
+
+        let handle = self.handles[lane]
+            .as_ref()
+            .expect("ops only route at live lanes (crashes purge the book and the rotation)");
+        let ticket = handle.submit(request).expect("service queue outlives the replay");
+        self.inflight.push_back(Pending {
+            ticket,
+            tenant,
+            lane,
+            dev,
+            submitted: self.engine.now(),
+        });
+        self.submitted += 1;
+        self.emitted += 1;
+
+        if self.emitted < self.spec.ops {
+            let gap = match &self.spec.arrival {
+                Arrival::Steady { gap } | Arrival::Trace { gap, .. } => *gap,
+                Arrival::Bursts { burst_ops, gap, idle } => {
+                    if self.emitted % burst_ops == 0 {
+                        *idle
+                    } else {
+                        *gap
+                    }
+                }
+            };
+            self.engine.schedule_in(gap, Ev::Arrival);
+        }
+        if !self.service_armed {
+            self.engine.schedule_in(self.spec.service_interval, Ev::Service);
+            self.service_armed = true;
+        }
+    }
+
+    /// The allocation op for `tenant` on its current lane affinity.
+    fn alloc_op(&mut self, tenant: u64) -> (usize, usize, Request) {
+        let lane = self.alive[(tenant % self.alive.len() as u64) as usize];
+        let dev = (tenant % self.devices.len() as u64) as usize;
+        (
+            lane,
+            dev,
+            Request::Alloc { consumer: self.devices[dev].into(), size: self.spec.alloc_bytes },
+        )
+    }
+
+    /// One FM service tick, then reap every completion that landed.
+    fn on_service(&mut self) {
+        self.service_armed = false;
+        self.svc.tick();
+        let mut still = VecDeque::with_capacity(self.inflight.len());
+        while let Some(p) = self.inflight.pop_front() {
+            match self.reaper.take(p.ticket) {
+                Some(c) => self.absorb(p, c),
+                None => still.push_back(p),
+            }
+        }
+        self.inflight = still;
+        if !self.inflight.is_empty() {
+            self.engine.schedule_in(self.spec.service_interval, Ev::Service);
+            self.service_armed = true;
+        }
+    }
+
+    /// Fold one completion into the counters, the latency aggregates,
+    /// and (for allocations) the tenant book.
+    fn absorb(&mut self, p: Pending, c: Completion) {
+        match c.result {
+            Ok(outcome) => {
+                self.ok += 1;
+                let latency = (self.engine.now() - p.submitted) + self.path_latency;
+                self.ops_hist.record(latency);
+                self.book.record_latency(p.tenant, latency);
+                if let Outcome::Alloc(a) = outcome {
+                    self.book.record_alloc(
+                        p.tenant,
+                        AllocRec { mmid: a.mmid, lane: p.lane, dev: p.dev },
+                    );
+                }
+            }
+            Err(Error::Cancelled { .. }) => self.cancelled += 1,
+            Err(Error::OutOfCapacity { .. }) | Err(Error::AllocFailed { .. }) => {
+                self.failed += 1;
+                self.failed_capacity += 1;
+            }
+            Err(Error::ExpanderFailed(_)) => {
+                self.failed += 1;
+                self.failed_expander += 1;
+            }
+            Err(_) => self.failed += 1,
+        }
+    }
+
+    /// Apply one scheduled fault to the live fabric.
+    fn on_fault(&mut self, idx: usize) -> Result<()> {
+        match self.spec.faults[idx].kind {
+            FaultKind::CrashHost { slot } => {
+                self.svc.crash_host(slot)?;
+                self.handles[slot] = None;
+                self.alive.retain(|&l| l != slot);
+                // the leases died with the host: drop the book's
+                // references so churn never frees a dangling mmid
+                self.book.purge_lane(slot);
+            }
+            FaultKind::JoinHost => {
+                let mut host = LmbHost::bind(self.fabric.clone(), self.spec.host_dram_gib * GIB)?;
+                host.set_placement_policy(PlacementPolicy::ContentionAware);
+                for dev in &self.devices {
+                    host.attach_pcie(*dev);
+                }
+                let lane = self.svc.join_host(host);
+                debug_assert_eq!(lane, self.handles.len());
+                self.handles.push(Some(self.reaper.retarget(lane)));
+                self.alive.push(lane);
+            }
+            FaultKind::FailExpander => self.fabric.set_expander_failed(true),
+            FaultKind::RecoverExpander => self.fabric.set_expander_failed(false),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::descriptor::Descriptor;
+    use std::path::Path;
+
+    /// Base topology; `extra` must not repeat these keys (the parser
+    /// rejects duplicates). Size knobs go through [`sized`].
+    fn spec(extra: &str) -> ScenarioSpec {
+        sized("ops = 2000\nexpander_gib = 2\nalloc_bytes = 65536", extra)
+    }
+
+    fn sized(size: &str, extra: &str) -> ScenarioSpec {
+        let text =
+            format!("name = \"inline\"\nhosts = 2\ntenants = 4096\nseed = 11\n{size}\n{extra}");
+        let desc = Descriptor::parse(&text).unwrap();
+        ScenarioSpec::from_descriptor(&desc, Path::new(".")).unwrap()
+    }
+
+    #[test]
+    fn scenario_harness_runs_a_steady_mix_through_the_real_service() {
+        let report = ScenarioHarness::new(spec("")).run().unwrap();
+        assert_eq!(report.submitted, 2000);
+        assert_eq!(report.submitted, report.ok + report.failed + report.cancelled);
+        assert!(report.ok > 1000, "most ops succeed: {}", report.summary());
+        assert!(report.distinct_tenants > 100, "the Zipf head materialised");
+        assert!(report.op_p50 >= SimTime::ns(190), "path latency is a floor");
+        assert!(report.op_p99 >= report.op_p50);
+        assert!(report.sim_duration > SimTime::ZERO);
+    }
+
+    #[test]
+    fn scenario_harness_is_deterministic_per_seed_and_diverges_across_seeds() {
+        let a = ScenarioHarness::new(spec("")).run().unwrap();
+        let b = ScenarioHarness::new(spec("")).run().unwrap();
+        assert_eq!(a.to_json(), b.to_json(), "same seed, same history");
+        let c = ScenarioHarness::new(spec("zipf_theta = 0.5")).run().unwrap();
+        assert_ne!(
+            a.distinct_tenants,
+            c.distinct_tenants,
+            "a different mix produces a different history"
+        );
+    }
+
+    #[test]
+    fn scenario_harness_crash_and_expander_faults_show_up_in_counts() {
+        let report = ScenarioHarness::new(spec(
+            "lane_quota = 32\n\
+             [[faults]]\nkind = \"crash_host\"\nslot = 1\nat_us = 300\n\
+             [[faults]]\nkind = \"fail_expander\"\nat_us = 600\n\
+             [[faults]]\nkind = \"recover_expander\"\nat_us = 900\n\
+             [[faults]]\nkind = \"join_host\"\nat_us = 1200\n",
+        ))
+        .run()
+        .unwrap();
+        assert!(report.cancelled >= 1, "crash mid-stream cancels queued lane work");
+        assert!(report.failed_expander >= 1, "allocs during the outage fail");
+        assert!(report.ok > 500, "the fabric recovers: {}", report.summary());
+    }
+
+    #[test]
+    fn scenario_harness_share_fanout_exercises_cross_device_grants() {
+        let report = ScenarioHarness::new(spec("devices = 3\nshare_fraction = 0.3\nchurn = 0.2"))
+            .run()
+            .unwrap();
+        assert!(report.ok > 1000, "{}", report.summary());
+    }
+
+    #[test]
+    fn scenario_harness_capacity_exhaustion_fails_loudly_not_silently() {
+        // 1 GiB pool, 8 MiB allocs, low churn: the pool must exhaust
+        let report = ScenarioHarness::new(sized(
+            "ops = 1500\nexpander_gib = 1\nalloc_bytes = 8388608",
+            "churn = 0.1",
+        ))
+        .run()
+        .unwrap();
+        assert!(report.failed_capacity > 100, "{}", report.summary());
+        assert!(report.ok >= 128, "the pool's worth of allocs succeeded first");
+    }
+}

@@ -1,0 +1,203 @@
+//! Scenario engine: replay declarative million-tenant workloads
+//! against the real fabric.
+//!
+//! A *scenario* is data, not code: a small TOML-subset descriptor
+//! (committed under `scenarios/` at the repository root) naming a
+//! topology, a tenant population, an arrival process, fault injections
+//! and hard completion-count floors. The harness loads the descriptor,
+//! builds a real [`Cluster`](crate::cluster::Cluster), converts it to
+//! the actor-side [`FmService`](crate::lmb::FmService)
+//! ([`Cluster::into_service`](crate::cluster::Cluster::into_service)),
+//! and drives it tick-by-tick from the deterministic
+//! [`Engine`](crate::sim::engine::Engine) — every allocation, free and
+//! share executes through the same `FmService` code path production
+//! callers use; nothing is mocked.
+//!
+//! Pipeline:
+//!
+//! 1. [`descriptor`] — zero-dependency parser for the descriptor text.
+//! 2. [`spec`] — schema validation into a typed [`ScenarioSpec`].
+//! 3. [`harness`] — the replay: simulated-time arrivals multiplexing a
+//!    Zipf-skewed tenant population over the service's lanes, faults
+//!    (host crash, host join, expander outage) injected mid-stream.
+//! 4. [`report`] — per-scenario and per-tenant latency percentiles,
+//!    emitted as `BENCH_scenarios.json` through the bench JSON writer.
+//!
+//! # Determinism contract
+//!
+//! One seed, one history. Arrival *times* are fixed by the descriptor
+//! (never RNG-sampled), so fault windows hit the same arrival count at
+//! every scale; the RNG (a per-scenario [`Pcg64`] stream keyed by
+//! seed + name hash) only picks tenants and op kinds. Every iteration
+//! that feeds the report is over sorted containers. The result: the
+//! same descriptor and seed produce a byte-identical report — the
+//! `scenario_suite` integration test enforces this.
+//!
+//! # Environment hooks
+//!
+//! * `LMB_SCENARIO_SEED` — overrides every descriptor's seed (decimal
+//!   or `0x`-hex, like `LMB_PROP_SEED`). CI pins it so a red scenario
+//!   run reproduces locally; a set-but-unparseable value panics.
+//! * `LMB_SCENARIO_SCALE` — divides tenant and op counts (clamped to
+//!   floors of 64 tenants / 500 ops), so CI replays every committed
+//!   scenario in seconds while local runs keep the full 10^5–10^6
+//!   tenant populations.
+//!
+//! # Adding a scenario
+//!
+//! Drop a `.toml` descriptor in `scenarios/` (see that directory's
+//! existing files for the schema: root keys for topology and mix, an
+//! `[arrival]` table, optional `[[faults]]` entries, an `[expect]`
+//! table of completion floors). The committed-suite test and the
+//! `scenarios` bench target pick it up automatically — no code change.
+
+pub mod descriptor;
+pub mod harness;
+pub mod report;
+pub mod spec;
+pub mod tenant;
+
+pub use descriptor::{Descriptor, Table, Value};
+pub use harness::ScenarioHarness;
+pub use report::{write_scenarios_json, ScenarioReport};
+pub use spec::{Arrival, Expectations, FaultEvent, FaultKind, ScenarioSpec};
+pub use tenant::{AllocRec, TenantBook, TenantLatency};
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+#[allow(unused_imports)] // rustdoc link target
+use crate::sim::rng::Pcg64;
+
+/// Seed override for every scenario: the `LMB_SCENARIO_SEED`
+/// environment variable when set (decimal, or hex with an `0x` prefix,
+/// underscores allowed — the same grammar as `LMB_PROP_SEED`), else
+/// `None` (each descriptor's own seed applies). A set-but-unparseable
+/// value panics rather than silently replaying a different history
+/// than the one CI pinned.
+pub fn seed_override() -> Option<u64> {
+    match std::env::var("LMB_SCENARIO_SEED") {
+        Err(_) => None,
+        Ok(v) => match parse_seed(Some(&v)) {
+            Some(seed) => Some(seed),
+            None => panic!("LMB_SCENARIO_SEED {v:?} is not a decimal or 0x-prefixed hex u64"),
+        },
+    }
+}
+
+/// Parsing behind [`seed_override`], split out so tests never mutate
+/// the process environment (`set_var` racing a concurrent `getenv` is
+/// UB on glibc under the parallel test harness).
+fn parse_seed(var: Option<&str>) -> Option<u64> {
+    let v = var?.trim();
+    let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(&hex.replace('_', ""), 16),
+        None => v.parse::<u64>(),
+    };
+    parsed.ok()
+}
+
+/// Tenant/op divisor: the `LMB_SCENARIO_SCALE` environment variable
+/// when set (a positive decimal), else 1 (full scale). Panics on a
+/// set-but-unparseable or zero value.
+pub fn scale() -> u64 {
+    match std::env::var("LMB_SCENARIO_SCALE") {
+        Err(_) => 1,
+        Ok(v) => match parse_scale(Some(&v)) {
+            Some(s) => s,
+            None => panic!("LMB_SCENARIO_SCALE {v:?} is not a positive decimal u64"),
+        },
+    }
+}
+
+/// Parsing behind [`scale`] (same no-`set_var` rationale as
+/// [`parse_seed`]).
+fn parse_scale(var: Option<&str>) -> Option<u64> {
+    var?.trim().parse::<u64>().ok().filter(|&s| s > 0)
+}
+
+/// FNV-1a hash of a scenario name: the RNG *stream* id, so two
+/// scenarios sharing one pinned seed still draw independent tenant
+/// sequences (PCG streams are independent per increment).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The committed scenario directory (`scenarios/` at the repository
+/// root, next to the crate).
+pub fn committed_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+/// Every committed descriptor, sorted by file name (deterministic
+/// replay and report order).
+pub fn committed_scenarios() -> Result<Vec<PathBuf>> {
+    let dir = committed_dir();
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .map_err(|e| Error::Config(format!("scenario dir {}: {e}", dir.display())))?
+    {
+        let path = entry?.path();
+        if path.extension().is_some_and(|x| x == "toml") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Load a descriptor and apply the environment hooks: the
+/// [`seed_override`] (if any) replaces the descriptor seed, then
+/// [`scale`] divides the tenant/op counts.
+pub fn load_effective(path: &Path) -> Result<ScenarioSpec> {
+    let mut spec = ScenarioSpec::load(path)?;
+    if let Some(seed) = seed_override() {
+        spec.seed = seed;
+    }
+    Ok(spec.scaled(scale()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_seed_parsing_mirrors_prop() {
+        assert_eq!(parse_seed(None), None);
+        assert_eq!(parse_seed(Some("42")), Some(42));
+        assert_eq!(parse_seed(Some(" 0xdead_beef ")), Some(0xdead_beef));
+        assert_eq!(parse_seed(Some("0Xff")), Some(0xff));
+        assert_eq!(parse_seed(Some("junk")), None);
+        assert_eq!(parse_seed(Some("-3")), None);
+    }
+
+    #[test]
+    fn scenario_scale_parsing() {
+        assert_eq!(parse_scale(None), None);
+        assert_eq!(parse_scale(Some("10")), Some(10));
+        assert_eq!(parse_scale(Some(" 1 ")), Some(1));
+        assert_eq!(parse_scale(Some("0")), None, "zero would divide everything away");
+        assert_eq!(parse_scale(Some("ten")), None);
+    }
+
+    #[test]
+    fn scenario_fnv_distinguishes_names() {
+        assert_ne!(fnv1a("steady_zipf"), fnv1a("burst_storm"));
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325, "FNV-1a offset basis");
+        assert_eq!(fnv1a("a"), fnv1a("a"), "pure function");
+    }
+
+    #[test]
+    fn scenario_committed_directory_exists_and_lists_sorted() {
+        let files = committed_scenarios().unwrap();
+        assert!(files.len() >= 5, "at least five committed scenarios, got {}", files.len());
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+}

@@ -1,0 +1,200 @@
+//! Scenario reports: per-scenario and per-tenant percentile summaries,
+//! serialised as `BENCH_scenarios.json`.
+//!
+//! Every field is a *simulated* quantity (counts, engine time,
+//! histogram quantiles) — no wall clock, no host state — so the same
+//! descriptor and seed serialise to byte-identical JSON. That property
+//! is load-bearing: the determinism test diffs two whole report files.
+//! The array framing comes from the bench JSON writer
+//! ([`bench::write_json_rows`]), so the CI validators parse scenario
+//! records with the same code path as the perf records.
+
+use std::path::Path;
+
+use crate::sim::stats::LatencyHistogram;
+use crate::sim::time::SimTime;
+use crate::testing::bench;
+
+/// Everything a scenario replay measured.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// Effective seed (after any `LMB_SCENARIO_SEED` override).
+    pub seed: u64,
+    /// Hosts at build time (faults may change the live count mid-run).
+    pub hosts: usize,
+    /// Effective tenant population (after any `LMB_SCENARIO_SCALE`).
+    pub tenants: u64,
+    /// Tenants that completed at least one op (the materialised head).
+    pub distinct_tenants: u64,
+    pub submitted: u64,
+    pub ok: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Of `failed`: capacity exhaustion (FM or module allocator).
+    pub failed_capacity: u64,
+    /// Of `failed`: expander offline.
+    pub failed_expander: u64,
+    /// Simulated time at the last event.
+    pub sim_duration: SimTime,
+    pub op_mean: SimTime,
+    pub op_p50: SimTime,
+    pub op_p99: SimTime,
+    pub op_p999: SimTime,
+    pub op_max: SimTime,
+    /// Percentiles over per-tenant *mean* latency (one sample per
+    /// tenant): the fairness view a hot-tenant-dominated op histogram
+    /// hides.
+    pub tenant_p50: SimTime,
+    pub tenant_p99: SimTime,
+    pub tenant_p999: SimTime,
+}
+
+impl ScenarioReport {
+    /// Submitted ops per simulated second.
+    pub fn ops_per_sec(&self) -> f64 {
+        let secs = self.sim_duration.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.submitted as f64 / secs
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ops over {} tenants in {} (ok {} / failed {} / cancelled {}) \
+             op p50={} p99={} p999={} | tenant-mean p50={} p99={}",
+            self.name,
+            self.submitted,
+            self.tenants,
+            self.sim_duration,
+            self.ok,
+            self.failed,
+            self.cancelled,
+            self.op_p50,
+            self.op_p99,
+            self.op_p999,
+            self.tenant_p50,
+            self.tenant_p99,
+        )
+    }
+
+    /// One JSON object. Deterministic: fixed key order, integer
+    /// nanoseconds for every latency, one fixed-precision float.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"name\": \"{}\", \"seed\": {}, \"hosts\": {}, \"tenants\": {}, ",
+                "\"distinct_tenants\": {}, \"submitted\": {}, \"ok\": {}, \"failed\": {}, ",
+                "\"cancelled\": {}, \"failed_capacity\": {}, \"failed_expander\": {}, ",
+                "\"sim_duration_ns\": {}, \"ops_per_sec\": {:.1}, ",
+                "\"op_mean_ns\": {}, \"op_p50_ns\": {}, \"op_p99_ns\": {}, ",
+                "\"op_p999_ns\": {}, \"op_max_ns\": {}, ",
+                "\"tenant_p50_ns\": {}, \"tenant_p99_ns\": {}, \"tenant_p999_ns\": {}}}"
+            ),
+            bench::json_escape(&self.name),
+            self.seed,
+            self.hosts,
+            self.tenants,
+            self.distinct_tenants,
+            self.submitted,
+            self.ok,
+            self.failed,
+            self.cancelled,
+            self.failed_capacity,
+            self.failed_expander,
+            self.sim_duration.as_ns(),
+            self.ops_per_sec(),
+            self.op_mean.as_ns(),
+            self.op_p50.as_ns(),
+            self.op_p99.as_ns(),
+            self.op_p999.as_ns(),
+            self.op_max.as_ns(),
+            self.tenant_p50.as_ns(),
+            self.tenant_p99.as_ns(),
+            self.tenant_p999.as_ns(),
+        )
+    }
+}
+
+/// Write a suite's reports to `path` as one JSON array (e.g.
+/// `BENCH_scenarios.json` at the repo root), via the bench writer's
+/// array framing.
+pub fn write_scenarios_json(path: &Path, reports: &[ScenarioReport]) -> std::io::Result<()> {
+    let rows: Vec<String> = reports.iter().map(ScenarioReport::to_json).collect();
+    bench::write_json_rows(path, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScenarioReport {
+        let mut ops = LatencyHistogram::new();
+        let mut tenants = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            ops.record(SimTime::us(i));
+        }
+        tenants.record(SimTime::us(50));
+        ScenarioReport {
+            name: "steady \"zipf\"".into(),
+            seed: 7,
+            hosts: 4,
+            tenants: 1_000_000,
+            distinct_tenants: 812,
+            submitted: 100,
+            ok: 90,
+            failed: 6,
+            cancelled: 4,
+            failed_capacity: 5,
+            failed_expander: 1,
+            sim_duration: SimTime::ms(10),
+            op_mean: ops.mean(),
+            op_p50: ops.p50(),
+            op_p99: ops.p99(),
+            op_p999: ops.p999(),
+            op_max: ops.max(),
+            tenant_p50: tenants.p50(),
+            tenant_p99: tenants.p99(),
+            tenant_p999: tenants.p999(),
+        }
+    }
+
+    #[test]
+    fn scenario_report_json_shape() {
+        let j = sample().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\": \"steady \\\"zipf\\\"\""), "escaped: {j}");
+        assert!(j.contains("\"submitted\": 100"));
+        assert!(j.contains("\"failed_expander\": 1"));
+        assert!(j.contains("\"sim_duration_ns\": 10000000"));
+        // 100 ops over 10 simulated ms = 10000 ops/s
+        assert!(j.contains("\"ops_per_sec\": 10000.0"), "{j}");
+        assert!(j.contains("\"tenant_p50_ns\":"));
+    }
+
+    #[test]
+    fn scenario_report_json_is_deterministic() {
+        assert_eq!(sample().to_json(), sample().to_json());
+    }
+
+    #[test]
+    fn scenario_report_file_framing_matches_bench_writer() {
+        let path = std::env::temp_dir().join("lmb_scenario_report_test.json");
+        write_scenarios_json(&path, &[sample(), sample()]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.starts_with("[\n"));
+        assert!(body.trim_end().ends_with(']'));
+        assert_eq!(body.matches("\"name\"").count(), 2);
+    }
+
+    #[test]
+    fn scenario_report_zero_duration_guard() {
+        let mut r = sample();
+        r.sim_duration = SimTime::ZERO;
+        assert_eq!(r.ops_per_sec(), 0.0);
+        assert!(r.to_json().contains("\"ops_per_sec\": 0.0"));
+    }
+}

@@ -1,0 +1,466 @@
+//! Typed scenario specifications: descriptor → validated [`ScenarioSpec`].
+//!
+//! The descriptor layer ([`super::descriptor`]) only knows keys and
+//! scalars; this layer knows the schema — which keys exist, their
+//! defaults, their legal ranges, and the cross-field rules (a share
+//! workload needs ≥ 2 devices, a crash fault needs a slot that exists,
+//! a trace arrival needs a readable file). Everything is validated
+//! here, before a single host is bound, so a bad descriptor fails with
+//! one [`Error::Config`] instead of a panic mid-replay.
+
+use std::path::{Path, PathBuf};
+
+use crate::cxl::fabric::PathKind;
+use crate::error::{Error, Result};
+use crate::lmb::queue::DEFAULT_LANE_QUOTA;
+use crate::pcie::link::PcieGen;
+use crate::scenario::descriptor::{Descriptor, Table};
+use crate::sim::time::SimTime;
+
+/// How operations arrive in simulated time. Gaps are **fixed** (not
+/// RNG-sampled) so fault windows line up with the same arrival count
+/// under every seed — the RNG decides *who* arrives and *what* they do,
+/// never *when*.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// One op every `gap`.
+    Steady { gap: SimTime },
+    /// `burst_ops` ops spaced `gap` apart, then `idle`, repeating.
+    Bursts { burst_ops: u64, gap: SimTime, idle: SimTime },
+    /// Tenants driven by a recorded IO trace (`lpa % tenants` names the
+    /// tenant behind each arrival), one op every `gap`.
+    Trace { file: PathBuf, gap: SimTime },
+}
+
+/// What a fault event does to the running fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Crash the host behind `slot`: queued lane work cancels, leases
+    /// reclaim, tenants re-home onto surviving lanes.
+    CrashHost { slot: usize },
+    /// Bind a fresh host to the fabric behind a new lane.
+    JoinHost,
+    /// Take the expander offline: every allocation fails until recovery.
+    FailExpander,
+    /// Bring the expander back.
+    RecoverExpander,
+}
+
+/// One scheduled fault injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// Hard minimums asserted after the replay (completion-count floors;
+/// the harness always additionally asserts exact conservation and
+/// invariants).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Expectations {
+    pub min_ok: u64,
+    pub min_failed: u64,
+    pub min_cancelled: u64,
+}
+
+/// A fully validated scenario, ready for
+/// [`ScenarioHarness::run`](crate::scenario::harness::ScenarioHarness::run).
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub hosts: usize,
+    /// PCIe consumers attached to every host (tenants rotate over them).
+    pub devices: usize,
+    pub tenants: u64,
+    pub ops: u64,
+    pub zipf_theta: f64,
+    pub alloc_bytes: u64,
+    /// Probability an arrival frees one of its tenant's live
+    /// allocations (when it has any).
+    pub churn: f64,
+    /// Probability an arrival shares one of its tenant's live
+    /// allocations to a sibling device (when it has any).
+    pub share_fraction: f64,
+    pub expander_gib: u64,
+    pub host_dram_gib: u64,
+    pub lane_quota: usize,
+    /// Gap between FM service ticks in simulated time.
+    pub service_interval: SimTime,
+    /// Fabric path whose modeled latency is added to every completed
+    /// op's queueing delay.
+    pub path: PathKind,
+    pub seed: u64,
+    pub arrival: Arrival,
+    /// Fault injections, sorted by time.
+    pub faults: Vec<FaultEvent>,
+    pub expect: Expectations,
+}
+
+const ROOT_KEYS: &[&str] = &[
+    "name",
+    "hosts",
+    "devices",
+    "tenants",
+    "ops",
+    "zipf_theta",
+    "alloc_bytes",
+    "churn",
+    "share_fraction",
+    "expander_gib",
+    "host_dram_gib",
+    "lane_quota",
+    "service_interval_us",
+    "path",
+    "seed",
+];
+
+impl ScenarioSpec {
+    /// Load and validate a descriptor file. Trace paths resolve
+    /// relative to the descriptor's directory.
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let desc = Descriptor::load(path)?;
+        let base = path.parent().unwrap_or_else(|| Path::new("."));
+        Self::from_descriptor(&desc, base)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// Validate a parsed descriptor into a spec.
+    pub fn from_descriptor(desc: &Descriptor, base: &Path) -> Result<ScenarioSpec> {
+        desc.root.deny_unknown("root", ROOT_KEYS)?;
+        for t in desc.table_names() {
+            if t != "arrival" && t != "expect" {
+                return Err(Error::Config(format!("unknown section [{t}]")));
+            }
+        }
+        for a in desc.array_names() {
+            if a != "faults" {
+                return Err(Error::Config(format!("unknown array [[{a}]]")));
+            }
+        }
+
+        let name = desc.root.str("name")?.to_string();
+        if name.is_empty() {
+            return Err(Error::Config("scenario name must be non-empty".into()));
+        }
+        let hosts = desc.root.u64_or("hosts", 2)? as usize;
+        if hosts == 0 {
+            return Err(Error::Config("hosts must be >= 1".into()));
+        }
+        let devices = desc.root.u64_or("devices", 1)? as usize;
+        if devices == 0 || devices > 32 {
+            return Err(Error::Config("devices must be in 1..=32".into()));
+        }
+        let tenants = desc.root.u64_or("tenants", 100_000)?;
+        if tenants == 0 {
+            return Err(Error::Config("tenants must be >= 1".into()));
+        }
+        let ops = desc.root.u64_or("ops", 10_000)?;
+        if ops == 0 {
+            return Err(Error::Config("ops must be >= 1".into()));
+        }
+        let zipf_theta = desc.root.f64_or("zipf_theta", 0.99)?;
+        // theta == 1.0 passes the sampler's half-open range assert but
+        // degenerates (alpha = 1/(1-theta) diverges) — exclude the pole
+        if !((0.0..1.0).contains(&zipf_theta) || (zipf_theta > 1.0 && zipf_theta < 2.0)) {
+            return Err(Error::Config(format!("zipf_theta {zipf_theta} outside [0,1) ∪ (1,2)")));
+        }
+        let alloc_bytes = desc.root.u64_or("alloc_bytes", 64 * 1024)?;
+        if alloc_bytes == 0 {
+            return Err(Error::Config("alloc_bytes must be >= 1".into()));
+        }
+        let churn = desc.root.f64_or("churn", 0.5)?;
+        let share_fraction = desc.root.f64_or("share_fraction", 0.0)?;
+        for (key, v) in [("churn", churn), ("share_fraction", share_fraction)] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(Error::Config(format!("{key} {v} outside [0,1]")));
+            }
+        }
+        if share_fraction > 0.0 && devices < 2 {
+            return Err(Error::Config(
+                "share_fraction > 0 needs devices >= 2 (a share must have a distinct target)"
+                    .into(),
+            ));
+        }
+        let expander_gib = desc.root.u64_or("expander_gib", 8)?;
+        let host_dram_gib = desc.root.u64_or("host_dram_gib", 1)?;
+        if expander_gib == 0 || host_dram_gib == 0 {
+            return Err(Error::Config("expander_gib / host_dram_gib must be >= 1".into()));
+        }
+        let lane_quota = desc.root.u64_or("lane_quota", DEFAULT_LANE_QUOTA as u64)? as usize;
+        if lane_quota == 0 {
+            return Err(Error::Config("lane_quota must be >= 1".into()));
+        }
+        let service_interval = SimTime::us(desc.root.u64_or("service_interval_us", 64)?);
+        if service_interval == SimTime::ZERO {
+            return Err(Error::Config("service_interval_us must be >= 1".into()));
+        }
+        let path = parse_path(desc.root.str_or("path", "host_to_hdm")?)?;
+        let seed = desc.root.u64_or("seed", crate::scenario::fnv1a(&name))?;
+
+        let arrival = parse_arrival(desc.table("arrival"), base)?;
+        let mut faults = Vec::new();
+        for (i, t) in desc.array("faults").iter().enumerate() {
+            faults.push(
+                parse_fault(t, hosts).map_err(|e| Error::Config(format!("faults[{i}]: {e}")))?,
+            );
+        }
+        faults.sort_by_key(|f| f.at);
+        let crashes = faults
+            .iter()
+            .filter(|f| matches!(f.kind, FaultKind::CrashHost { .. }))
+            .count();
+        if crashes >= hosts {
+            return Err(Error::Config(format!(
+                "{crashes} crash faults would kill all {hosts} hosts"
+            )));
+        }
+        let mut crashed = std::collections::HashSet::new();
+        for f in &faults {
+            if let FaultKind::CrashHost { slot } = f.kind {
+                if !crashed.insert(slot) {
+                    return Err(Error::Config(format!("slot {slot} crashed twice")));
+                }
+            }
+        }
+
+        let expect = parse_expect(desc.table("expect"))?;
+
+        Ok(ScenarioSpec {
+            name,
+            hosts,
+            devices,
+            tenants,
+            ops,
+            zipf_theta,
+            alloc_bytes,
+            churn,
+            share_fraction,
+            expander_gib,
+            host_dram_gib,
+            lane_quota,
+            service_interval,
+            path,
+            seed,
+            arrival,
+            faults,
+            expect,
+        })
+    }
+
+    /// Divide the tenant and op counts by `scale` (clamped so even an
+    /// aggressive CI divisor leaves a meaningful run: ≥ 64 tenants,
+    /// ≥ 500 ops). Expectation floors are *not* rescaled — committed
+    /// descriptors must choose floors that hold at every scale.
+    pub fn scaled(mut self, scale: u64) -> Self {
+        let scale = scale.max(1);
+        self.tenants = (self.tenants / scale).max(64.min(self.tenants));
+        self.ops = (self.ops / scale).max(500.min(self.ops));
+        self
+    }
+}
+
+fn parse_path(s: &str) -> Result<PathKind> {
+    match s {
+        "onboard_dram" => Ok(PathKind::OnboardDram),
+        "host_dram" => Ok(PathKind::HostDram),
+        "host_to_hdm" => Ok(PathKind::HostToHdm),
+        "cxl_p2p" => Ok(PathKind::CxlP2pToHdm),
+        "pcie_gen4" => Ok(PathKind::PcieToHdm(PcieGen::Gen4)),
+        "pcie_gen5" => Ok(PathKind::PcieToHdm(PcieGen::Gen5)),
+        other => Err(Error::Config(format!(
+            "unknown path {other:?} (expected onboard_dram, host_dram, host_to_hdm, \
+             cxl_p2p, pcie_gen4 or pcie_gen5)"
+        ))),
+    }
+}
+
+fn parse_arrival(table: Option<&Table>, base: &Path) -> Result<Arrival> {
+    let Some(t) = table else {
+        return Ok(Arrival::Steady { gap: SimTime::us(1) });
+    };
+    let gap = SimTime::ns(t.u64_or("gap_ns", 1_000)?);
+    if gap == SimTime::ZERO {
+        return Err(Error::Config("[arrival] gap_ns must be >= 1".into()));
+    }
+    match t.str_or("kind", "steady")? {
+        "steady" => {
+            t.deny_unknown("[arrival]", &["kind", "gap_ns"])?;
+            Ok(Arrival::Steady { gap })
+        }
+        "bursts" => {
+            t.deny_unknown("[arrival]", &["kind", "gap_ns", "burst_ops", "idle_ns"])?;
+            let burst_ops = t.u64_or("burst_ops", 256)?;
+            let idle = SimTime::ns(t.u64_or("idle_ns", 20_000)?);
+            if burst_ops == 0 {
+                return Err(Error::Config("[arrival] burst_ops must be >= 1".into()));
+            }
+            Ok(Arrival::Bursts { burst_ops, gap, idle })
+        }
+        "trace" => {
+            t.deny_unknown("[arrival]", &["kind", "gap_ns", "file"])?;
+            let file = base.join(t.str("file")?);
+            if !file.is_file() {
+                return Err(Error::Config(format!(
+                    "[arrival] trace file {} not found",
+                    file.display()
+                )));
+            }
+            Ok(Arrival::Trace { file, gap })
+        }
+        other => Err(Error::Config(format!(
+            "[arrival] unknown kind {other:?} (expected steady, bursts or trace)"
+        ))),
+    }
+}
+
+fn parse_fault(t: &Table, hosts: usize) -> Result<FaultEvent> {
+    let at = SimTime::us(t.u64("at_us")?);
+    let kind = match t.str("kind")? {
+        "crash_host" => {
+            t.deny_unknown("fault", &["kind", "at_us", "slot"])?;
+            let slot = t.u64("slot")? as usize;
+            if slot >= hosts {
+                return Err(Error::Config(format!(
+                    "crash_host slot {slot} out of range (hosts = {hosts})"
+                )));
+            }
+            FaultKind::CrashHost { slot }
+        }
+        "join_host" => {
+            t.deny_unknown("fault", &["kind", "at_us"])?;
+            FaultKind::JoinHost
+        }
+        "fail_expander" => {
+            t.deny_unknown("fault", &["kind", "at_us"])?;
+            FaultKind::FailExpander
+        }
+        "recover_expander" => {
+            t.deny_unknown("fault", &["kind", "at_us"])?;
+            FaultKind::RecoverExpander
+        }
+        other => Err(Error::Config(format!(
+            "unknown fault kind {other:?} (expected crash_host, join_host, \
+             fail_expander or recover_expander)"
+        )))?,
+    };
+    Ok(FaultEvent { at, kind })
+}
+
+fn parse_expect(table: Option<&Table>) -> Result<Expectations> {
+    let Some(t) = table else {
+        return Ok(Expectations::default());
+    };
+    t.deny_unknown("[expect]", &["min_ok", "min_failed", "min_cancelled"])?;
+    Ok(Expectations {
+        min_ok: t.u64_or("min_ok", 0)?,
+        min_failed: t.u64_or("min_failed", 0)?,
+        min_cancelled: t.u64_or("min_cancelled", 0)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(extra: &str) -> Result<ScenarioSpec> {
+        let text = format!("name = \"t\"\n{extra}");
+        let desc = Descriptor::parse(&text)?;
+        ScenarioSpec::from_descriptor(&desc, Path::new("."))
+    }
+
+    #[test]
+    fn scenario_spec_defaults_are_sane() {
+        let s = minimal("").unwrap();
+        assert_eq!((s.hosts, s.devices), (2, 1));
+        assert_eq!((s.tenants, s.ops), (100_000, 10_000));
+        assert_eq!(s.arrival, Arrival::Steady { gap: SimTime::us(1) });
+        assert_eq!(s.path, PathKind::HostToHdm);
+        assert!(s.faults.is_empty());
+        assert_eq!(s.expect, Expectations::default());
+        assert_eq!(s.seed, crate::scenario::fnv1a("t"), "default seed derives from the name");
+    }
+
+    #[test]
+    fn scenario_spec_full_descriptor_round_trips() {
+        let s = minimal(
+            "hosts = 4\ndevices = 2\ntenants = 1_000_000\nops = 60_000\n\
+             zipf_theta = 0.9\nalloc_bytes = 65536\nchurn = 0.4\nshare_fraction = 0.1\n\
+             expander_gib = 8\nhost_dram_gib = 2\nlane_quota = 32\n\
+             service_interval_us = 16\npath = \"cxl_p2p\"\nseed = 7\n\
+             [arrival]\nkind = \"bursts\"\nburst_ops = 128\ngap_ns = 200\nidle_ns = 5000\n\
+             [expect]\nmin_ok = 100\n\
+             [[faults]]\nkind = \"fail_expander\"\nat_us = 900\n\
+             [[faults]]\nkind = \"crash_host\"\nslot = 1\nat_us = 300\n",
+        )
+        .unwrap();
+        assert_eq!(s.tenants, 1_000_000);
+        assert_eq!(s.path, PathKind::CxlP2pToHdm);
+        assert_eq!(
+            s.arrival,
+            Arrival::Bursts { burst_ops: 128, gap: SimTime::ns(200), idle: SimTime::ns(5000) }
+        );
+        // faults sorted by time regardless of descriptor order
+        assert_eq!(
+            s.faults[0],
+            FaultEvent { at: SimTime::us(300), kind: FaultKind::CrashHost { slot: 1 } }
+        );
+        assert_eq!(s.faults[1].kind, FaultKind::FailExpander);
+        assert_eq!(s.expect.min_ok, 100);
+    }
+
+    #[test]
+    fn scenario_spec_rejects_bad_descriptors() {
+        for (extra, why) in [
+            ("hosts = 0", "zero hosts"),
+            ("tenants = 0", "zero tenants"),
+            ("ops = 0", "zero ops"),
+            ("zipf_theta = 1.0", "theta at the pole"),
+            ("zipf_theta = 2.5", "theta too large"),
+            ("churn = 1.5", "churn out of range"),
+            ("share_fraction = 0.5", "share with one device"),
+            ("alloc_bytes = 0", "zero alloc"),
+            ("lane_quota = 0", "zero quota"),
+            ("service_interval_us = 0", "zero interval"),
+            ("path = \"warp\"", "unknown path"),
+            ("typo_key = 1", "unknown root key"),
+            ("[typo_section]\nx = 1", "unknown section"),
+            ("[[typo_array]]\nx = 1", "unknown array"),
+            ("[arrival]\nkind = \"fractal\"", "unknown arrival"),
+            ("[arrival]\ngap_ns = 0", "zero gap"),
+            ("[arrival]\nkind = \"trace\"\nfile = \"no/such/file.trace\"", "missing trace file"),
+            ("[[faults]]\nkind = \"crash_host\"\nslot = 9\nat_us = 1", "slot out of range"),
+            ("[[faults]]\nkind = \"unplug\"\nat_us = 1", "unknown fault"),
+            ("[[faults]]\nkind = \"join_host\"", "fault missing at_us"),
+            (
+                "[[faults]]\nkind = \"crash_host\"\nslot = 0\nat_us = 1\n\
+                 [[faults]]\nkind = \"crash_host\"\nslot = 1\nat_us = 2",
+                "crashes kill every host",
+            ),
+            ("[expect]\nmin_oops = 1", "unknown expect key"),
+        ] {
+            let err = minimal(extra).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{why}: {err:?}");
+        }
+        // double-crash of one slot (with enough hosts to survive)
+        let err = minimal(
+            "hosts = 4\n\
+             [[faults]]\nkind = \"crash_host\"\nslot = 1\nat_us = 1\n\
+             [[faults]]\nkind = \"crash_host\"\nslot = 1\nat_us = 2",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("crashed twice"), "{err}");
+    }
+
+    #[test]
+    fn scenario_spec_scaling_clamps() {
+        let s = minimal("tenants = 1_000_000\nops = 60_000").unwrap();
+        let s10 = s.clone().scaled(10);
+        assert_eq!((s10.tenants, s10.ops), (100_000, 6_000));
+        let huge = s.clone().scaled(1_000_000_000);
+        assert_eq!((huge.tenants, huge.ops), (64, 500), "clamped floors");
+        let tiny = minimal("tenants = 8\nops = 9").unwrap().scaled(1_000);
+        assert_eq!((tiny.tenants, tiny.ops), (8, 9), "never clamps above the spec");
+        let s1 = s.scaled(0);
+        assert_eq!((s1.tenants, s1.ops), (1_000_000, 60_000), "scale 0 behaves as 1");
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-tenant bookkeeping for scenario replays.
+//!
+//! A scenario multiplexes up to 10^6 tenants, but only tenants that
+//! actually complete an allocation materialise state here — the Zipf
+//! head. The book tracks which live allocations each tenant owns (so
+//! churn frees and shares reference real mmids on real lanes) and the
+//! per-tenant latency aggregates behind the report's tenant-level
+//! percentiles (full per-tenant histograms would be ~88 MB each; a
+//! `(count, sum, max)` triple is enough to rank tenants by mean).
+
+use std::collections::BTreeMap;
+
+use crate::cxl::types::MmId;
+use crate::sim::stats::LatencyHistogram;
+use crate::sim::time::SimTime;
+
+/// One live allocation a tenant owns: enough to route a later free or
+/// share at the home lane with the owning device.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocRec {
+    pub mmid: MmId,
+    /// Lane (host slot) the allocation executed on — frees/shares must
+    /// route here (cross-host routing fails `NotOwner` by design).
+    pub lane: usize,
+    /// Index into the scenario's device list of the owning consumer.
+    pub dev: usize,
+}
+
+/// Per-tenant latency aggregate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantLatency {
+    pub ops: u64,
+    pub sum_ns: u128,
+    pub max_ns: u64,
+}
+
+impl TenantLatency {
+    pub fn mean_ns(&self) -> u64 {
+        if self.ops == 0 {
+            0
+        } else {
+            (self.sum_ns / self.ops as u128) as u64
+        }
+    }
+}
+
+/// Tenant-indexed scenario state. `BTreeMap` keyed by tenant id keeps
+/// every iteration order deterministic — the report's tenant-level
+/// percentiles must be byte-identical across runs of the same seed.
+#[derive(Debug, Default)]
+pub struct TenantBook {
+    allocs: BTreeMap<u64, Vec<AllocRec>>,
+    latency: BTreeMap<u64, TenantLatency>,
+    live: usize,
+}
+
+impl TenantBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed allocation for `tenant`.
+    pub fn record_alloc(&mut self, tenant: u64, rec: AllocRec) {
+        self.allocs.entry(tenant).or_default().push(rec);
+        self.live += 1;
+    }
+
+    /// Whether `tenant` owns any live allocation.
+    pub fn has_alloc(&self, tenant: u64) -> bool {
+        self.allocs.get(&tenant).is_some_and(|v| !v.is_empty())
+    }
+
+    /// Pop `tenant`'s most recent allocation (LIFO — deterministic and
+    /// cache-friendly for hot tenants). `None` if it owns nothing.
+    pub fn pop_alloc(&mut self, tenant: u64) -> Option<AllocRec> {
+        let recs = self.allocs.get_mut(&tenant)?;
+        let rec = recs.pop();
+        if recs.is_empty() {
+            self.allocs.remove(&tenant);
+        }
+        if rec.is_some() {
+            self.live -= 1;
+        }
+        rec
+    }
+
+    /// Drop every allocation that lived on `lane` (host crash: the
+    /// leases are gone; a later free would dangle). Returns how many
+    /// were purged.
+    pub fn purge_lane(&mut self, lane: usize) -> usize {
+        let mut purged = 0;
+        self.allocs.retain(|_, recs| {
+            let before = recs.len();
+            recs.retain(|r| r.lane != lane);
+            purged += before - recs.len();
+            !recs.is_empty()
+        });
+        self.live -= purged;
+        purged
+    }
+
+    /// Live allocations across every tenant.
+    pub fn live_allocs(&self) -> usize {
+        self.live
+    }
+
+    /// Fold one completed-op latency into `tenant`'s aggregate.
+    pub fn record_latency(&mut self, tenant: u64, t: SimTime) {
+        let agg = self.latency.entry(tenant).or_default();
+        agg.ops += 1;
+        agg.sum_ns += t.as_ns() as u128;
+        agg.max_ns = agg.max_ns.max(t.as_ns());
+    }
+
+    /// Tenants that completed at least one op.
+    pub fn distinct_tenants(&self) -> u64 {
+        self.latency.len() as u64
+    }
+
+    /// Distribution of per-tenant *mean* latency, one sample per tenant
+    /// in ascending tenant order (deterministic): the histogram behind
+    /// the report's tenant-level p50/p99/p999 — "how slow is the
+    /// typical tenant's experience", which a global op histogram hides
+    /// when one hot tenant dominates the sample count.
+    pub fn tenant_mean_histogram(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for agg in self.latency.values() {
+            h.record(SimTime::ns(agg.mean_ns()));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(lane: usize) -> AllocRec {
+        AllocRec { mmid: MmId(7), lane, dev: 0 }
+    }
+
+    #[test]
+    fn scenario_book_alloc_lifecycle() {
+        let mut b = TenantBook::new();
+        assert!(!b.has_alloc(3));
+        assert!(b.pop_alloc(3).is_none());
+        b.record_alloc(3, AllocRec { mmid: MmId(1), lane: 0, dev: 0 });
+        b.record_alloc(3, AllocRec { mmid: MmId(2), lane: 1, dev: 1 });
+        assert_eq!(b.live_allocs(), 2);
+        let top = b.pop_alloc(3).unwrap();
+        assert_eq!(top.mmid, MmId(2), "LIFO pop");
+        assert!(b.has_alloc(3));
+        assert_eq!(b.pop_alloc(3).unwrap().mmid, MmId(1));
+        assert!(!b.has_alloc(3));
+        assert_eq!(b.live_allocs(), 0);
+    }
+
+    #[test]
+    fn scenario_book_purges_a_crashed_lane() {
+        let mut b = TenantBook::new();
+        b.record_alloc(1, rec(0));
+        b.record_alloc(1, rec(1));
+        b.record_alloc(2, rec(1));
+        assert_eq!(b.purge_lane(1), 2);
+        assert_eq!(b.live_allocs(), 1);
+        assert!(b.has_alloc(1), "tenant 1 keeps its lane-0 allocation");
+        assert!(!b.has_alloc(2), "tenant 2 lost everything with the lane");
+        assert_eq!(b.purge_lane(1), 0, "idempotent");
+    }
+
+    #[test]
+    fn scenario_book_tenant_latency_aggregates() {
+        let mut b = TenantBook::new();
+        b.record_latency(5, SimTime::us(10));
+        b.record_latency(5, SimTime::us(30));
+        b.record_latency(9, SimTime::us(100));
+        assert_eq!(b.distinct_tenants(), 2);
+        let h = b.tenant_mean_histogram();
+        assert_eq!(h.count(), 2, "one sample per tenant");
+        // tenant 5's mean is 20us, tenant 9's is 100us
+        assert!(h.min() <= SimTime::us(20) && h.min() >= SimTime::us(19));
+        assert_eq!(h.max(), SimTime::us(100));
+    }
+}

@@ -22,22 +22,23 @@ impl SimTime {
         SimTime(n)
     }
 
-    /// Construct from microseconds.
+    /// Construct from microseconds (saturating, like all `SimTime`
+    /// arithmetic).
     #[inline]
     pub const fn us(n: u64) -> Self {
-        SimTime(n * 1_000)
+        SimTime(n.saturating_mul(1_000))
     }
 
-    /// Construct from milliseconds.
+    /// Construct from milliseconds (saturating).
     #[inline]
     pub const fn ms(n: u64) -> Self {
-        SimTime(n * 1_000_000)
+        SimTime(n.saturating_mul(1_000_000))
     }
 
-    /// Construct from seconds.
+    /// Construct from seconds (saturating).
     #[inline]
     pub const fn secs(n: u64) -> Self {
-        SimTime(n * 1_000_000_000)
+        SimTime(n.saturating_mul(1_000_000_000))
     }
 
     /// Value in nanoseconds.
@@ -159,6 +160,22 @@ mod tests {
     fn arithmetic_saturates() {
         assert_eq!(SimTime::ns(5) - SimTime::ns(9), SimTime::ZERO);
         assert_eq!(SimTime::MAX + SimTime::ns(1), SimTime::MAX);
+    }
+
+    #[test]
+    fn constructors_saturate_instead_of_overflowing() {
+        // the module contract is saturating arithmetic everywhere; the
+        // unit constructors must not be the one wrapping/panicking hole
+        assert_eq!(SimTime::us(u64::MAX), SimTime::MAX);
+        assert_eq!(SimTime::ms(u64::MAX), SimTime::MAX);
+        assert_eq!(SimTime::secs(u64::MAX), SimTime::MAX);
+        // just past the last representable whole unit saturates too
+        assert_eq!(SimTime::secs(u64::MAX / 1_000_000_000 + 1), SimTime::MAX);
+        assert_eq!(SimTime::ms(u64::MAX / 1_000_000 + 1), SimTime::MAX);
+        assert_eq!(SimTime::us(u64::MAX / 1_000 + 1), SimTime::MAX);
+        // the largest exactly-representable values stay exact
+        let whole_secs = u64::MAX / 1_000_000_000;
+        assert_eq!(SimTime::secs(whole_secs).as_ns(), whole_secs * 1_000_000_000);
     }
 
     #[test]

@@ -96,7 +96,9 @@ pub fn report(m: &Measurement, items_per_iter: Option<u64>) {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// Escape a string for embedding in a JSON literal (shared with the
+/// scenario report writer, which emits its own record shape).
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -138,10 +140,19 @@ pub fn to_json(m: &Measurement, items_per_iter: Option<u64>) -> String {
 /// `BENCH_hotpath.json` at the repo root — the machine-readable record
 /// the CI smoke step parses and the perf trajectory is tracked by).
 pub fn write_json(path: &Path, rows: &[(Measurement, Option<u64>)]) -> std::io::Result<()> {
+    let rows: Vec<String> = rows.iter().map(|(m, items)| to_json(m, *items)).collect();
+    write_json_rows(path, &rows)
+}
+
+/// Low-level JSON-array writer behind [`write_json`]: each row is one
+/// pre-serialised JSON object. Lets other record shapes (the scenario
+/// engine's `BENCH_scenarios.json`) share the exact array framing the
+/// CI validators parse.
+pub fn write_json_rows(path: &Path, rows: &[String]) -> std::io::Result<()> {
     let mut body = String::from("[\n");
-    for (i, (m, items)) in rows.iter().enumerate() {
+    for (i, row) in rows.iter().enumerate() {
         body.push_str("  ");
-        body.push_str(&to_json(m, *items));
+        body.push_str(row);
         if i + 1 < rows.len() {
             body.push(',');
         }

@@ -7,9 +7,11 @@
 //! workloads").
 
 pub mod fio;
+pub mod tenants;
 pub mod trace;
 pub mod zipf;
 
 pub use fio::{FioJob, IoEngine, IoPattern, IoRequest};
+pub use tenants::TenantPopulation;
 pub use trace::Trace;
 pub use zipf::Zipfian;

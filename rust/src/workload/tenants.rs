@@ -1,0 +1,93 @@
+//! Zipf-skewed tenant populations.
+//!
+//! The scenario engine multiplexes 10^5–10^6 simulated tenants over a
+//! handful of hosts; real multi-tenant pools are never uniform, so the
+//! population is sampled Zipfian (YCSB-style θ): tenant 0 is the
+//! hottest, and under θ ≈ 0.99 a tiny head of tenants generates most of
+//! the control-plane traffic — exactly the contention profile a shared
+//! CXL memory pool has to arbitrate.
+
+use crate::sim::rng::Pcg64;
+use crate::workload::zipf::Zipfian;
+
+/// A population of `len` tenants with Zipf-skewed activity.
+///
+/// Only a sampler — per-tenant *state* stays with the caller (the
+/// population may be 10^6 strong while only the sampled head ever
+/// materialises any bookkeeping).
+#[derive(Debug, Clone)]
+pub struct TenantPopulation {
+    zipf: Zipfian,
+}
+
+impl TenantPopulation {
+    /// `tenants` must be ≥ 1; `theta` in `[0,1) ∪ (1,2)` (0 ≈ uniform,
+    /// 0.99 = classic YCSB skew).
+    pub fn new(tenants: u64, theta: f64) -> Self {
+        TenantPopulation { zipf: Zipfian::new(tenants, theta) }
+    }
+
+    /// Draw the tenant behind the next arrival (tenant 0 is hottest).
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        self.zipf.sample(rng)
+    }
+
+    /// Population size.
+    pub fn len(&self) -> u64 {
+        self.zipf.n()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.zipf.n() == 0
+    }
+
+    /// Probability mass of the hottest tenant (diagnostics: how
+    /// pathological the head of the population is).
+    pub fn p_hottest(&self) -> f64 {
+        self.zipf.p_top()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_population() {
+        let pop = TenantPopulation::new(100_000, 0.99);
+        let mut rng = Pcg64::new(11);
+        for _ in 0..10_000 {
+            assert!(pop.sample(&mut rng) < pop.len());
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_on_the_head() {
+        let pop = TenantPopulation::new(1_000_000, 0.99);
+        let mut rng = Pcg64::new(12);
+        let n = 50_000;
+        let head_hits = (0..n).filter(|_| pop.sample(&mut rng) < 100).count();
+        // under θ=0.99 the top 100 of a million tenants should carry a
+        // conspicuously outsized share of arrivals
+        assert!(
+            head_hits as f64 / n as f64 > 0.2,
+            "head share = {}",
+            head_hits as f64 / n as f64
+        );
+        assert!(pop.p_hottest() > 0.05);
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let pop = TenantPopulation::new(10_000, 0.9);
+        let a: Vec<u64> = {
+            let mut rng = Pcg64::new(13);
+            (0..64).map(|_| pop.sample(&mut rng)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut rng = Pcg64::new(13);
+            (0..64).map(|_| pop.sample(&mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

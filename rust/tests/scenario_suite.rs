@@ -1,0 +1,157 @@
+//! Scenario engine integration suite.
+//!
+//! Replays every committed descriptor under `scenarios/` through the
+//! real [`FmService`](lmb::prelude::FmService) (the harness hard-asserts
+//! completion-count conservation, the descriptor's floors, and the
+//! service + fabric invariant sweeps), and proves the determinism
+//! contract end to end: the same descriptor and seed serialise to a
+//! byte-identical `BENCH_scenarios.json`.
+//!
+//! Honors the same environment hooks as CI: `LMB_SCENARIO_SEED` pins
+//! every descriptor's seed, `LMB_SCENARIO_SCALE` divides tenant/op
+//! counts (CI runs the whole suite at scale 10 in seconds; an
+//! unscaled local run replays the full 10^5–10^6 tenant populations).
+
+use lmb::scenario::{
+    committed_scenarios, load_effective, write_scenarios_json, Descriptor, ScenarioHarness,
+    ScenarioSpec,
+};
+use lmb::Error;
+use std::path::Path;
+
+/// Every committed scenario replays through the real service. The
+/// interesting asserts (conservation, floors, invariants) live in the
+/// harness; this test adds suite-level coverage checks so the committed
+/// set keeps exercising every subsystem the engine claims to.
+#[test]
+fn scenario_committed_suite_replays_on_the_real_fabric() {
+    let files = committed_scenarios().unwrap();
+    assert!(files.len() >= 5, "the committed suite holds at least five scenarios");
+
+    let mut reports = Vec::new();
+    let mut specs = Vec::new();
+    for path in &files {
+        let spec = load_effective(path).unwrap();
+        let report = ScenarioHarness::new(spec.clone())
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(report.name, spec.name);
+        assert_eq!(report.submitted, spec.ops, "{}: full op budget emitted", spec.name);
+        assert!(report.distinct_tenants >= 2, "{}: tenants multiplexed", spec.name);
+        specs.push(spec);
+        reports.push(report);
+    }
+
+    // suite-level coverage: the committed set spans faults, capacity
+    // pressure, sharing and every arrival kind
+    assert!(specs.iter().any(|s| !s.faults.is_empty()), "a committed scenario injects faults");
+    assert!(
+        specs.iter().any(|s| s.share_fraction > 0.0),
+        "a committed scenario exercises sharing"
+    );
+    assert!(
+        reports.iter().any(|r| r.failed_capacity > 0),
+        "a committed scenario exhausts capacity"
+    );
+    assert!(
+        reports.iter().any(|r| r.cancelled > 0),
+        "a committed scenario cancels work via a crash"
+    );
+}
+
+/// Determinism, proven at the artifact level: replay one committed
+/// descriptor twice in one process and diff the serialised report
+/// files byte for byte.
+#[test]
+fn scenario_same_seed_same_bytes() {
+    let files = committed_scenarios().unwrap();
+    // the smallest committed scenario keeps this double-replay cheap
+    let path = files
+        .iter()
+        .find(|p| p.file_name().is_some_and(|n| n == "trace_replay.toml"))
+        .expect("trace_replay.toml is committed");
+
+    let mut bodies = Vec::new();
+    for i in 0..2 {
+        let report = ScenarioHarness::new(load_effective(path).unwrap()).run().unwrap();
+        let out = std::env::temp_dir().join(format!("lmb_scenario_det_{i}.json"));
+        write_scenarios_json(&out, &[report]).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        bodies.push(body);
+    }
+    assert_eq!(bodies[0], bodies[1], "same descriptor + seed ⇒ byte-identical report");
+    assert!(bodies[0].contains("\"op_p999_ns\""), "percentiles serialised");
+}
+
+/// A different seed really changes the history (the determinism test
+/// above would pass vacuously if the seed were ignored).
+#[test]
+fn scenario_seed_actually_steers_the_replay() {
+    let files = committed_scenarios().unwrap();
+    let path = files
+        .iter()
+        .find(|p| p.file_name().is_some_and(|n| n == "trace_replay.toml"))
+        .unwrap();
+    let spec = load_effective(path).unwrap();
+    let mut reseeded = spec.clone();
+    reseeded.seed = spec.seed.wrapping_add(1);
+    let a = ScenarioHarness::new(spec).run().unwrap();
+    let b = ScenarioHarness::new(reseeded).run().unwrap();
+    assert_eq!(a.submitted, b.submitted, "the op budget is seed-independent");
+    assert_ne!(
+        (a.seed, a.to_json()),
+        (b.seed, b.to_json()),
+        "a different seed changes the serialised history"
+    );
+}
+
+/// Malformed descriptors fail the load with one `Error::Config`
+/// carrying the file path — never a panic mid-replay.
+#[test]
+fn scenario_malformed_descriptors_error_cleanly() {
+    let dir = std::env::temp_dir().join("lmb_scenario_malformed");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, body) in [
+        ("syntax.toml", "name = \"x\"\nops = "),
+        ("unterminated.toml", "name = \"x"),
+        ("unknown_key.toml", "name = \"x\"\nwarp_factor = 9"),
+        ("bad_range.toml", "name = \"x\"\nhosts = 0"),
+        ("theta_pole.toml", "name = \"x\"\nzipf_theta = 1.0"),
+        ("bad_fault.toml", "name = \"x\"\n[[faults]]\nkind = \"unplug\"\nat_us = 1"),
+        ("missing_trace.toml", "name = \"x\"\n[arrival]\nkind = \"trace\"\nfile = \"gone\""),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        let err = lmb::scenario::ScenarioSpec::load(&path).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{name}: {err:?}");
+        assert!(err.to_string().contains(name), "{name}: the error names the file: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+    // a missing file surfaces the IO error with the path prefixed
+    let err = ScenarioSpec::load(&dir.join("nope.toml")).unwrap_err();
+    assert!(err.to_string().contains("nope.toml"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The committed descriptors stay within the schema this crate
+/// version documents: every one parses, validates, and declares at
+/// least one expectation floor (a scenario that asserts nothing
+/// beyond conservation is a smell).
+#[test]
+fn scenario_committed_descriptors_declare_floors() {
+    for path in committed_scenarios().unwrap() {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let desc = Descriptor::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let spec = ScenarioSpec::from_descriptor(&desc, path.parent().unwrap_or(Path::new(".")))
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let e = spec.expect;
+        assert!(
+            e.min_ok + e.min_failed + e.min_cancelled > 0,
+            "{}: declares at least one completion floor",
+            path.display()
+        );
+        let stem = path.file_stem().unwrap().to_string_lossy().replace('-', "_");
+        assert_eq!(spec.name, stem, "{}: name matches the file stem", path.display());
+    }
+}
