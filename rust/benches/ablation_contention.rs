@@ -99,7 +99,7 @@ fn max_region_cost(cluster: &Cluster) -> f64 {
         .with_fm(|fm| {
             let (region_len, loads) = fm.placement_regions();
             let mut worst = 0.0f64;
-            for &load in loads {
+            for &load in &loads {
                 worst = worst.max(placement_cost(load, region_len));
             }
             worst
@@ -121,11 +121,8 @@ fn queue_placement_ablation(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u
     let aware_cost = max_region_cost(&aware);
     let serviced = aware.queue().stats().completed;
     {
-        let (len, fifo_loads) =
-            fifo.with_fm(|fm| (fm.placement_regions().0, fm.placement_regions().1.to_vec()))
-                .unwrap();
-        let aware_loads =
-            aware.with_fm(|fm| fm.placement_regions().1.to_vec()).unwrap();
+        let (len, fifo_loads) = fifo.with_fm(|fm| fm.placement_regions()).unwrap();
+        let aware_loads = aware.with_fm(|fm| fm.placement_regions().1).unwrap();
         println!("  region len {} MiB", len >> 20);
         println!("  fifo  loads (extents/region): {:?}", per_region_extents(&fifo_loads));
         println!("  aware loads (extents/region): {:?}", per_region_extents(&aware_loads));

@@ -10,8 +10,9 @@
 //! end, not just timed. Storage is a sparse 4 KiB page map, so a
 //! simulated multi-TiB expander costs only what is actually touched.
 
-use std::cell::Cell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 use crate::cxl::packet::{CxlMemReq, MemAddr, MemOp};
 use crate::cxl::sat::{SatPerm, SatTable};
@@ -101,9 +102,13 @@ pub struct Expander {
     /// One-entry last-hit translation cache (device-TLB analogue):
     /// consecutive accesses inside one HDM window skip the decoder
     /// search entirely. Invalidated whenever a decoder is removed.
-    tlb: Cell<Option<HdmDecoder>>,
-    tlb_hits: Cell<u64>,
-    tlb_misses: Cell<u64>,
+    /// Behind its own mutex (not the expander's outer `RwLock`) so the
+    /// shared-read decode path can still refill it; refills are
+    /// best-effort (`try_lock`) — losing the race costs one extra
+    /// binary search, never a stall.
+    tlb: Mutex<Option<HdmDecoder>>,
+    tlb_hits: AtomicU64,
+    tlb_misses: AtomicU64,
     /// Accesses served (ops, bytes) — used by contention accounting.
     pub served_ops: u64,
     pub served_bytes: u64,
@@ -134,9 +139,9 @@ impl Expander {
             pages: HashMap::new(),
             failed: false,
             gfd_dpid: Dpid(0),
-            tlb: Cell::new(None),
-            tlb_hits: Cell::new(0),
-            tlb_misses: Cell::new(0),
+            tlb: Mutex::new(None),
+            tlb_hits: AtomicU64::new(0),
+            tlb_misses: AtomicU64::new(0),
             served_ops: 0,
             served_bytes: 0,
         }
@@ -195,7 +200,7 @@ impl Expander {
             return Err(Error::DecodeFault(format!("no decoder at {hpa_base:#x}")));
         }
         self.decoders.remove(idx);
-        self.tlb.set(None);
+        self.tlb_clear();
         Ok(())
     }
 
@@ -206,36 +211,50 @@ impl Expander {
     pub fn remove_decoders_overlapping_dpa(&mut self, range: Range) -> usize {
         let before = self.decoders.len();
         self.decoders.retain(|d| !Range::new(d.dpa_base.0, d.hpa_window.len).overlaps(&range));
-        self.tlb.set(None);
+        self.tlb_clear();
         before - self.decoders.len()
+    }
+
+    /// Invalidate the translation cache (decoder removal paths; `&mut`
+    /// contexts go straight through the lock, tolerating poison).
+    fn tlb_clear(&mut self) {
+        *self.tlb.get_mut().unwrap_or_else(PoisonError::into_inner) = None;
     }
 
     /// Translate a host HPA to a DPA via the HDM decoders: a one-entry
     /// last-hit cache (device-TLB analogue) in front of a binary search
     /// over the sorted decoder table.
     pub fn decode_hpa(&self, hpa: Hpa) -> Result<Dpa> {
-        if let Some(d) = self.tlb.get() {
+        // best-effort cache: if another reader holds it (or it is
+        // poisoned), skip it — correctness never depends on the TLB
+        let mut tlb = self.tlb.try_lock().ok();
+        if let Some(Some(d)) = tlb.as_deref() {
             if d.hpa_window.contains(hpa.0) {
-                self.tlb_hits.set(self.tlb_hits.get() + 1);
+                self.tlb_hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)));
             }
         }
-        self.tlb_misses.set(self.tlb_misses.get() + 1);
-        // windows are sorted and disjoint: the only candidate is the
-        // last window whose base is <= the address
+        self.tlb_misses.fetch_add(1, Ordering::Relaxed);
+        let d = self.decoder_for(hpa)?;
+        if let Some(slot) = tlb.as_deref_mut() {
+            *slot = Some(d);
+        }
+        Ok(Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)))
+    }
+
+    /// Uncached decoder lookup: windows are sorted and disjoint, so the
+    /// only candidate is the last window whose base is <= the address.
+    fn decoder_for(&self, hpa: Hpa) -> Result<HdmDecoder> {
         let idx = self.decoders.partition_point(|d| d.hpa_window.base <= hpa.0);
-        let d = idx
-            .checked_sub(1)
+        idx.checked_sub(1)
             .map(|i| self.decoders[i])
             .filter(|d| d.hpa_window.contains(hpa.0))
-            .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))?;
-        self.tlb.set(Some(d));
-        Ok(Dpa(d.dpa_base.0 + (hpa.0 - d.hpa_window.base)))
+            .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))
     }
 
     /// Translation-cache counters: `(hits, misses)` since construction.
     pub fn tlb_stats(&self) -> (u64, u64) {
-        (self.tlb_hits.get(), self.tlb_misses.get())
+        (self.tlb_hits.load(Ordering::Relaxed), self.tlb_misses.load(Ordering::Relaxed))
     }
 
     /// Binary search the sorted, disjoint DMP table for the partition
@@ -395,7 +414,8 @@ impl Expander {
                 return Err(Error::FabricManager("DMP table unsorted or overlapping".into()));
             }
         }
-        if let Some(t) = self.tlb.get() {
+        let cached = *self.tlb.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(t) = cached {
             let cached_live = self
                 .decoders
                 .iter()

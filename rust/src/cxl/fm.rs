@@ -10,19 +10,51 @@
 //! The FM also fronts the "GFD Component Management Command Set" used to
 //! maintain SAT entries for CXL-device P2P access (§3.3).
 //!
+//! # Sharded concurrency
+//!
+//! The FM's mutable state is sharded so driver threads stop serialising
+//! on one big fabric mutex:
+//!
+//! * **Region shards** — the DPA space is split into placement regions
+//!   (the same boundaries the contention-aware policy prices), each
+//!   holding its own free list, lease table and load counter behind its
+//!   own `Mutex<RegionShard>`.
+//! * **Control plane** — switch/port bindings and per-host lease totals
+//!   behind one `Mutex<ControlPlane>` (cold path only).
+//! * **Expander** — decoder/DMP/SAT tables and the backing store behind
+//!   an `RwLock`, so `decode_hpa`/`dmp_for`/SAT checks are shared reads
+//!   that never contend with each other or with allocation.
+//! * **Counters** — mmids and the free-byte total are atomics; the
+//!   steady-state module path (sub-allocator hit, no extent traffic)
+//!   takes *no* fabric lock at all beyond a shared expander read.
+//!
+//! **Lock order** (outermost first): `seal` → `control` → region shards
+//! in **ascending index** → `expander`. Extent-granularity ops (alloc,
+//! release, crash reclaim) take the control lock plus the region locks
+//! they span in ascending order — ordered two-phase locking, so the
+//! global placement decision stays byte-identical to the old
+//! single-lock FM while disjoint-region work proceeds in parallel
+//! elsewhere. [`FabricManager::lock_stats`] exposes acquisition /
+//! contention / multi-region counters for all of this.
+//!
 //! Ownership: since the shared-fabric split no single host owns the FM.
 //! It lives behind [`FabricRef`], a cheap-clone `Send + Sync` handle
 //! every [`LmbHost`](crate::lmb::LmbHost) (and the multi-host
 //! [`Cluster`](crate::cluster::Cluster)) binds through. Leases are keyed
 //! by [`HostId`] and mmids are drawn from a fabric-global namespace, so
-//! no handle-holder can free or share memory it does not own. Access is
-//! scoped ([`FabricRef::with_fm`] and friends): no lock guard type ever
-//! escapes this module, and a panic inside a scope poisons the lock —
-//! later callers see [`Error::FabricPoisoned`] instead of deadlocking
-//! on torn state.
+//! no handle-holder can free or share memory it does not own. A panic
+//! inside a fabric scope ([`FabricRef::with_fm`]) poisons the fabric
+//! seal — later fallible callers see [`Error::FabricPoisoned`] instead
+//! of deadlocking on torn state — while a panic holding a single region
+//! lock poisons only that region: its waiters get
+//! [`Error::FabricPoisoned`], disjoint regions keep allocating.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{
+    Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError,
+};
 
 use crate::coordinator::contention;
 use crate::cxl::expander::Expander;
@@ -58,7 +90,9 @@ pub enum PlacementPolicy {
 
 /// Number of placement regions the DPA space is divided into (each at
 /// least one extent long, so tiny test expanders degenerate to one
-/// region per extent and both policies coincide).
+/// region per extent and both policies coincide). Each region is also a
+/// lock shard: lease state for disjoint regions is mutated under
+/// disjoint locks.
 const PLACEMENT_REGIONS: u64 = 8;
 
 /// An extent of expander capacity leased to a host.
@@ -69,59 +103,185 @@ pub struct Extent {
     pub owner: HostId,
 }
 
+/// Cold-path fabric state: port bindings and per-host accounting. One
+/// lock, taken only by bind/unbind and extent-granularity ops — never
+/// by the module steady state.
+#[derive(Debug)]
+struct ControlPlane {
+    switch: PbrSwitch,
+    hosts: HashMap<HostId, Spid>,
+    next_host: u32,
+    /// Running per-host lease totals — keeps [`FabricManager::leased_to`]
+    /// O(1) instead of a scan over every live lease.
+    leased_bytes: HashMap<HostId, u64>,
+}
+
+/// One placement region's slice of the lease/free state. Guarded by its
+/// own mutex; the struct itself is plain data.
+#[derive(Debug)]
+struct RegionShard {
+    /// The DPA span this shard owns (the last shard may be short).
+    span: Range,
+    /// Free DPA sub-ranges inside `span` (sorted by base; adjacent
+    /// frees coalesce *within* the shard — cross-shard adjacency is
+    /// re-merged by the allocation-time view).
+    free: Vec<Range>,
+    /// Live leases homed here, keyed by base DPA. An extent is homed at
+    /// its base's region even if its tail crosses into the next shard
+    /// (matching the historical base-attributed `region_load`).
+    leases: HashMap<u64, Extent>,
+    /// Leased bytes attributed to this region — the load signal the
+    /// contention-aware policy prices.
+    load: u64,
+}
+
+/// Internal atomic counters behind [`FabricManager::lock_stats`].
+#[derive(Debug, Default)]
+struct LockCounters {
+    region_acquisitions: AtomicU64,
+    region_contended: AtomicU64,
+    control_acquisitions: AtomicU64,
+    control_contended: AtomicU64,
+    cross_region_ops: AtomicU64,
+}
+
+/// Snapshot of the fabric's lock-contention counters (observability:
+/// the scaling bench asserts the steady-state module path stays off the
+/// region locks entirely).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LockStats {
+    /// Region-shard lock acquisitions (each shard counts once per
+    /// multi-region op).
+    pub region_acquisitions: u64,
+    /// Region-shard acquisitions that found the lock held and had to
+    /// block.
+    pub region_contended: u64,
+    /// Control-plane lock acquisitions.
+    pub control_acquisitions: u64,
+    /// Control-plane acquisitions that had to block.
+    pub control_contended: u64,
+    /// Ops that took the ordered multi-region path (extent placement
+    /// over >1 shard, spanning releases, host crash reclaim).
+    pub cross_region_ops: u64,
+}
+
+/// Acquire `m` through the stats-counting path: `try_lock` first (so an
+/// uncontended acquisition is one atomic + one CAS), fall back to a
+/// blocking `lock` and count the contention.
+fn lock_counted<'a, T>(
+    m: &'a Mutex<T>,
+    acq: &AtomicU64,
+    contended: &AtomicU64,
+) -> std::result::Result<MutexGuard<'a, T>, PoisonError<MutexGuard<'a, T>>> {
+    acq.fetch_add(1, Ordering::Relaxed);
+    match m.try_lock() {
+        Ok(g) => Ok(g),
+        Err(TryLockError::Poisoned(p)) => Err(p),
+        Err(TryLockError::WouldBlock) => {
+            contended.fetch_add(1, Ordering::Relaxed);
+            m.lock()
+        }
+    }
+}
+
+/// Shared read guard over the expander (decoder/DMP/SAT tables and the
+/// backing store). Derefs to [`Expander`]; any number may be held
+/// concurrently, so `decode_hpa`/SAT checks never contend with each
+/// other or with allocation.
+pub struct ExpanderRead<'a>(RwLockReadGuard<'a, Expander>);
+
+impl Deref for ExpanderRead<'_> {
+    type Target = Expander;
+    fn deref(&self) -> &Expander {
+        &self.0
+    }
+}
+
+/// Exclusive write guard over the expander (decoder/SAT mutation, data
+/// writes, failure injection). Crate-internal acquisition only.
+pub struct ExpanderWrite<'a>(RwLockWriteGuard<'a, Expander>);
+
+impl Deref for ExpanderWrite<'_> {
+    type Target = Expander;
+    fn deref(&self) -> &Expander {
+        &self.0
+    }
+}
+
+impl DerefMut for ExpanderWrite<'_> {
+    fn deref_mut(&mut self) -> &mut Expander {
+        &mut self.0
+    }
+}
+
 /// The Fabric Manager.
 ///
 /// Owns the switch and expander; everything else goes through its API —
 /// mirroring the paper, where the FM "can be implemented as software in
-/// the host or firmware on a switch".
+/// the host or firmware on a switch". Every method takes `&self`: the
+/// sharded locks described in the module docs are internal, so the FM
+/// can sit directly behind an `Arc` and be driven from any number of
+/// threads.
 #[derive(Debug)]
 pub struct FabricManager {
-    switch: PbrSwitch,
-    expander: Expander,
-    /// Free DPA extents (sorted by base; adjacent frees coalesce).
-    free: Vec<Range>,
-    /// Running total of `free` — keeps [`FabricManager::available`] O(1)
-    /// (it sits on the `OutOfCapacity` error path and in every invariant
-    /// check, so re-summing the free list there scaled with pool churn).
-    free_bytes: u64,
-    /// Live leases keyed by DPA base.
-    leases: HashMap<u64, Extent>,
-    /// Running per-host lease totals — keeps [`FabricManager::leased_to`]
-    /// O(1) instead of a scan over every live lease.
-    leased_bytes: HashMap<HostId, u64>,
+    /// Fabric-wide panic seal. Held only for the duration of
+    /// [`FabricRef::with_fm`] scopes; a panic inside one poisons it,
+    /// and every fallible entry point checks it first so torn state is
+    /// reported as [`Error::FabricPoisoned`] instead of being re-used.
+    seal: Mutex<()>,
+    control: Mutex<ControlPlane>,
+    /// One shard per placement region, in ascending DPA order. Multi-
+    /// region ops lock ascending — the deadlock-freedom rule.
+    regions: Vec<Mutex<RegionShard>>,
+    expander: RwLock<Expander>,
+    /// Running total of free bytes — keeps [`FabricManager::available`]
+    /// O(1) and lock-free.
+    free_bytes: AtomicU64,
     /// Length of one placement region (DPA space / [`PLACEMENT_REGIONS`],
     /// rounded up to whole extents).
     region_len: u64,
-    /// Leased bytes per placement region, attributed by each lease's
-    /// base DPA — the load signal the contention-aware policy prices.
-    region_load: Vec<u64>,
-    hosts: HashMap<HostId, Spid>,
-    next_host: u32,
+    /// Total media capacity (cached; the expander sits behind its lock).
+    capacity: u64,
     /// Fabric-global mmid counter (§3.2): handles are unique across
     /// every host sharing the expander, so one host's mmid can never
     /// alias another's — cross-host isolation keys off this.
-    next_mmid: u64,
+    next_mmid: AtomicU64,
+    stats: LockCounters,
 }
 
 impl FabricManager {
     pub fn new(switch: PbrSwitch, expander: Expander) -> Self {
-        let free_bytes = expander.capacity();
-        let free = vec![Range::new(0, free_bytes)];
+        let capacity = expander.capacity();
         let region_len =
-            align_up(free_bytes.div_ceil(PLACEMENT_REGIONS).max(1), EXTENT_SIZE).max(EXTENT_SIZE);
-        let region_count = free_bytes.div_ceil(region_len).max(1) as usize;
+            align_up(capacity.div_ceil(PLACEMENT_REGIONS).max(1), EXTENT_SIZE).max(EXTENT_SIZE);
+        let region_count = capacity.div_ceil(region_len).max(1);
+        let regions = (0..region_count)
+            .map(|i| {
+                let base = i * region_len;
+                let len = capacity.saturating_sub(base).min(region_len);
+                Mutex::new(RegionShard {
+                    span: Range::new(base, len),
+                    free: if len > 0 { vec![Range::new(base, len)] } else { Vec::new() },
+                    leases: HashMap::new(),
+                    load: 0,
+                })
+            })
+            .collect();
         FabricManager {
-            switch,
-            expander,
-            free,
-            free_bytes,
-            leases: HashMap::new(),
-            leased_bytes: HashMap::new(),
+            seal: Mutex::new(()),
+            control: Mutex::new(ControlPlane {
+                switch,
+                hosts: HashMap::new(),
+                next_host: 0,
+                leased_bytes: HashMap::new(),
+            }),
+            regions,
+            expander: RwLock::new(expander),
+            free_bytes: AtomicU64::new(capacity),
             region_len,
-            region_load: vec![0; region_count],
-            hosts: HashMap::new(),
-            next_host: 0,
-            next_mmid: 1,
+            capacity,
+            next_mmid: AtomicU64::new(1),
+            stats: LockCounters::default(),
         }
     }
 
@@ -131,76 +291,163 @@ impl FabricManager {
         FabricRef::new(self)
     }
 
+    /// `Err(FabricPoisoned)` once a panic has struck inside a fabric
+    /// scope. Lock-free; every fallible module entry point calls this
+    /// first.
+    pub(crate) fn seal_check(&self) -> Result<()> {
+        if self.seal.is_poisoned() {
+            return Err(Error::FabricPoisoned);
+        }
+        Ok(())
+    }
+
     /// Draw the next mmid from the fabric-global namespace. Called by
     /// the LMB modules at allocation time so handles never collide
-    /// across hosts.
-    pub fn alloc_mmid(&mut self) -> MmId {
-        let id = MmId(self.next_mmid);
-        self.next_mmid += 1;
-        id
+    /// across hosts. Lock-free: this sits on the steady-state path.
+    pub(crate) fn alloc_mmid(&self) -> MmId {
+        MmId(self.next_mmid.fetch_add(1, Ordering::Relaxed))
     }
 
-    pub fn switch(&self) -> &PbrSwitch {
-        &self.switch
+    // ---- lock plumbing ----
+
+    fn control(&self) -> Result<MutexGuard<'_, ControlPlane>> {
+        let s = &self.stats;
+        lock_counted(&self.control, &s.control_acquisitions, &s.control_contended)
+            .map_err(|_| Error::FabricPoisoned)
     }
 
-    pub fn switch_mut(&mut self) -> &mut PbrSwitch {
-        &mut self.switch
+    fn control_ignore_poison(&self) -> MutexGuard<'_, ControlPlane> {
+        let s = &self.stats;
+        lock_counted(&self.control, &s.control_acquisitions, &s.control_contended)
+            .unwrap_or_else(PoisonError::into_inner)
     }
 
-    pub fn expander(&self) -> &Expander {
-        &self.expander
+    /// One region shard, surfacing that shard's poison as
+    /// [`Error::FabricPoisoned`] — a panic in region `i` fails region
+    /// `i`'s waiters, not the whole fabric.
+    fn region(&self, idx: usize) -> Result<MutexGuard<'_, RegionShard>> {
+        let s = &self.stats;
+        lock_counted(&self.regions[idx], &s.region_acquisitions, &s.region_contended)
+            .map_err(|_| Error::FabricPoisoned)
     }
 
-    pub fn expander_mut(&mut self) -> &mut Expander {
-        &mut self.expander
+    /// All region shards in ascending index order, *skipping* poisoned
+    /// shards: their capacity is quarantined (invisible to placement)
+    /// until the invariant audit decides it is salvageable, while every
+    /// healthy region keeps allocating.
+    fn lock_regions_for_alloc(&self) -> Vec<(usize, MutexGuard<'_, RegionShard>)> {
+        if self.regions.len() > 1 {
+            self.stats.cross_region_ops.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut guards = Vec::with_capacity(self.regions.len());
+        for (idx, m) in self.regions.iter().enumerate() {
+            match lock_counted(m, &self.stats.region_acquisitions, &self.stats.region_contended) {
+                Ok(g) => guards.push((idx, g)),
+                Err(_poisoned) => {}
+            }
+        }
+        guards
     }
+
+    /// Uncounted, poison-tolerant access to every shard at once —
+    /// observability and the post-mortem audit only.
+    fn peek_all_regions(&self) -> Vec<MutexGuard<'_, RegionShard>> {
+        self.regions.iter().map(|m| m.lock().unwrap_or_else(PoisonError::into_inner)).collect()
+    }
+
+    fn peek_control(&self) -> MutexGuard<'_, ControlPlane> {
+        self.control.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Shared (read) access to the expander. Poison-tolerant: the
+    /// expander's own mutations are short library code, and reads are
+    /// exactly what a post-mortem needs.
+    pub fn expander(&self) -> ExpanderRead<'_> {
+        ExpanderRead(self.expander.read().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    /// Exclusive (write) access to the expander. Crate-internal: the
+    /// expander carries the SAT, and handing write access to arbitrary
+    /// callers would bypass the module's owner checks.
+    pub(crate) fn expander_mut(&self) -> ExpanderWrite<'_> {
+        ExpanderWrite(self.expander.write().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    /// Poison a region lock by panicking while holding it — the fault
+    /// injection behind `testing::poison_region`. Never called on a
+    /// production path.
+    pub(crate) fn panic_holding_region(&self, idx: usize) {
+        let _guard = self.regions[idx].lock().unwrap_or_else(PoisonError::into_inner);
+        panic!("fault injection: panicking while holding region {idx} lock");
+    }
+
+    // ---- control plane ----
 
     /// Bind a host root port to the fabric.
-    pub fn bind_host(&mut self) -> Result<(HostId, Spid)> {
-        let (spid, _) = self.switch.bind_host()?;
-        let id = HostId(self.next_host);
-        self.next_host += 1;
-        self.hosts.insert(id, spid);
+    pub(crate) fn bind_host(&self) -> Result<(HostId, Spid)> {
+        let mut control = self.control()?;
+        let (spid, _) = control.switch.bind_host()?;
+        let id = HostId(control.next_host);
+        control.next_host += 1;
+        control.hosts.insert(id, spid);
         Ok((id, spid))
     }
 
     /// Bind a CXL device (accelerator, CXL-SSD) to the fabric.
-    pub fn bind_cxl_device(&mut self) -> Result<Spid> {
-        let (spid, _) = self.switch.bind_cxl_device()?;
+    pub(crate) fn bind_cxl_device(&self) -> Result<Spid> {
+        let (spid, _) = self.control()?.switch.bind_cxl_device()?;
         Ok(spid)
     }
 
     /// Attach the GFD expander port (done once during bring-up). Returns
     /// the GFD's DPID — the P2P destination id the LMB module hands to
     /// CXL consumers via the Table 2 alloc/share out-params.
-    pub fn attach_gfd(&mut self) -> Result<Dpid> {
-        let (_port, dpid) = self.switch.attach_gfd()?;
+    pub(crate) fn attach_gfd(&self) -> Result<Dpid> {
+        let mut control = self.control()?;
+        let (_port, dpid) = control.switch.attach_gfd()?;
         // the expander reports this DPID in SAT-violation errors, so a
         // rejected P2P access names the real GFD port
-        self.expander.set_gfd_dpid(dpid);
+        self.expander_mut().set_gfd_dpid(dpid);
         Ok(dpid)
     }
 
     /// DPID of the attached GFD (None before bring-up).
     pub fn gfd_dpid(&self) -> Option<Dpid> {
-        self.switch.gfd_dpid()
+        self.peek_control().switch.gfd_dpid()
     }
 
-    /// Capacity not currently leased. O(1): a running counter, not a
-    /// free-list walk.
+    /// Capacity not currently leased. O(1) and lock-free: a running
+    /// atomic counter, not a free-list walk.
     pub fn available(&self) -> u64 {
-        self.free_bytes
+        self.free_bytes.load(Ordering::Relaxed)
     }
 
     /// Capacity currently leased to `host`. O(1): a running per-host
     /// counter, not a lease-table scan.
     pub fn leased_to(&self, host: HostId) -> u64 {
-        self.leased_bytes.get(&host).copied().unwrap_or(0)
+        self.peek_control().leased_bytes.get(&host).copied().unwrap_or(0)
     }
 
+    /// Total media capacity (cached at construction).
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Snapshot the lock acquisition/contention counters.
+    pub fn lock_stats(&self) -> LockStats {
+        LockStats {
+            region_acquisitions: self.stats.region_acquisitions.load(Ordering::Relaxed),
+            region_contended: self.stats.region_contended.load(Ordering::Relaxed),
+            control_acquisitions: self.stats.control_acquisitions.load(Ordering::Relaxed),
+            control_contended: self.stats.control_contended.load(Ordering::Relaxed),
+            cross_region_ops: self.stats.cross_region_ops.load(Ordering::Relaxed),
+        }
+    }
+
+    // ---- extent granting (ordered multi-region path) ----
+
     /// FM API: lease one 256 MB extent to `host` (§3.2).
-    pub fn allocate_extent(&mut self, host: HostId) -> Result<Extent> {
+    pub(crate) fn allocate_extent(&self, host: HostId) -> Result<Extent> {
         self.allocate_extent_sized(host, EXTENT_SIZE)
     }
 
@@ -208,38 +455,75 @@ impl FabricManager {
     /// and by the dynamic-capacity ablation. First-fit (the historical
     /// primitive); policy-driven placement goes through
     /// [`FabricManager::allocate_extent_placed`].
-    pub fn allocate_extent_sized(&mut self, host: HostId, len: u64) -> Result<Extent> {
+    pub(crate) fn allocate_extent_sized(&self, host: HostId, len: u64) -> Result<Extent> {
         self.allocate_extent_placed(host, len, PlacementPolicy::FirstFit)
     }
 
     /// Lease an extent, choosing the carve point by `policy` (see
     /// [`PlacementPolicy`]). The LMB modules call this with the policy
     /// their host was configured with.
-    pub fn allocate_extent_placed(
-        &mut self,
+    ///
+    /// Placement is a *global* decision (both policies scan the whole
+    /// free space), so this is the ordered two-phase path: control lock,
+    /// then every healthy region shard ascending. The per-shard free
+    /// lists are stitched back into the exact free list the single-lock
+    /// FM kept — adjacent spans merge across shard boundaries — so both
+    /// policies pick byte-identical carve points.
+    pub(crate) fn allocate_extent_placed(
+        &self,
         host: HostId,
         len: u64,
         policy: PlacementPolicy,
     ) -> Result<Extent> {
-        if !self.hosts.contains_key(&host) {
+        let mut control = self.control()?;
+        if !control.hosts.contains_key(&host) {
             return Err(Error::FabricManager(format!("unknown host {host:?}")));
         }
-        if self.expander.is_failed() {
+        let mut shards = self.lock_regions_for_alloc();
+        if self.expander().is_failed() {
             return Err(Error::ExpanderFailed("device offline".into()));
         }
-        let candidate = match policy {
-            PlacementPolicy::FirstFit => self
-                .free
-                .iter()
-                .position(|r| r.len >= len)
-                .map(|pos| (pos, self.free[pos].base)),
-            PlacementPolicy::ContentionAware => self.pick_least_contended(len),
+        // merged view: the historical global free list (sorted, fully
+        // coalesced), plus per-region loads for the contention model
+        let mut merged: Vec<Range> = Vec::new();
+        let mut loads = vec![0u64; self.regions.len()];
+        for (idx, g) in &shards {
+            loads[*idx] = g.load;
+            for r in &g.free {
+                match merged.last_mut() {
+                    Some(last) if last.end() == r.base => {
+                        *last = Range::new(last.base, last.len + r.len)
+                    }
+                    _ => merged.push(*r),
+                }
+            }
+        }
+        let base = match policy {
+            PlacementPolicy::FirstFit => merged.iter().find(|r| r.len >= len).map(|r| r.base),
+            PlacementPolicy::ContentionAware => self.pick_least_contended(&merged, &loads, len),
         };
-        let (pos, base) = candidate.ok_or(Error::OutOfCapacity {
+        let base = base.ok_or(Error::OutOfCapacity {
             requested: len,
             available: self.available(),
         })?;
-        Ok(self.carve(pos, base, len, host))
+        // carve [base, base+len) out of every shard it crosses; the
+        // lease is homed at the base's shard (base-attributed load)
+        let home = (base / self.region_len) as usize;
+        let last = ((base + len - 1) / self.region_len) as usize;
+        let ext = Extent { dpa: Dpa(base), len, owner: host };
+        for (idx, g) in shards.iter_mut() {
+            if *idx < home || *idx > last {
+                continue;
+            }
+            carve_span(g, base, base + len);
+            if *idx == home {
+                g.load += len;
+                g.leases.insert(base, ext);
+            }
+        }
+        self.free_bytes.fetch_sub(len, Ordering::Relaxed);
+        *control.leased_bytes.entry(host).or_insert(0) += len;
+        Ok(ext)
     }
 
     /// Cheapest carve point under the contention model: every free
@@ -249,22 +533,22 @@ impl FabricManager {
     /// ascending DPA order and only a strictly cheaper one replaces the
     /// incumbent, so equal-cost choices resolve to the lowest DPA —
     /// first-fit — exactly as documented on [`PlacementPolicy`].
-    fn pick_least_contended(&self, len: u64) -> Option<(usize, u64)> {
-        let mut best: Option<(f64, usize, u64)> = None;
-        for (pos, r) in self.free.iter().enumerate() {
+    fn pick_least_contended(&self, free: &[Range], loads: &[u64], len: u64) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for r in free {
             if r.len < len {
                 continue;
             }
             let mut candidate = r.base;
             loop {
-                let load = self.region_load[self.region_of(candidate)] + len;
+                let load = loads[(candidate / self.region_len) as usize] + len;
                 let cost = contention::placement_cost(load, self.region_len);
                 let cheaper = match best {
                     None => true,
-                    Some((incumbent, _, _)) => cost < incumbent,
+                    Some((incumbent, _)) => cost < incumbent,
                 };
                 if cheaper {
-                    best = Some((cost, pos, candidate));
+                    best = Some((cost, candidate));
                 }
                 // advance to the next region boundary inside this range
                 let next = (candidate / self.region_len + 1) * self.region_len;
@@ -274,97 +558,104 @@ impl FabricManager {
                 candidate = next;
             }
         }
-        best.map(|(_, pos, base)| (pos, base))
+        best.map(|(_, base)| base)
     }
 
-    /// Carve `[base, base+len)` out of free-list entry `pos` and record
-    /// the lease — the single mutation point shared by both placement
-    /// policies, so the running counters can never diverge between them.
-    fn carve(&mut self, pos: usize, base: u64, len: u64, host: HostId) -> Extent {
-        let r = self.free[pos];
-        debug_assert!(base >= r.base && base + len <= r.end());
-        let left = base - r.base;
-        let right = r.end() - (base + len);
-        match (left > 0, right > 0) {
-            (false, false) => {
-                self.free.remove(pos);
-            }
-            (true, false) => self.free[pos] = Range::new(r.base, left),
-            (false, true) => self.free[pos] = Range::new(base + len, right),
-            (true, true) => {
-                self.free[pos] = Range::new(r.base, left);
-                self.free.insert(pos + 1, Range::new(base + len, right));
-            }
+    /// Placement region owning `dpa`, attributed strictly by range: a
+    /// DPA at or past the media capacity is an error, **not** silently
+    /// clamped into the last region (the historical `region_of` used
+    /// `min(..)` saturation, which mis-attributed out-of-range DPAs to
+    /// the final region).
+    pub fn region_index(&self, dpa: u64) -> Result<usize> {
+        if dpa >= self.capacity {
+            return Err(Error::FabricManager(format!(
+                "DPA {dpa:#x} beyond media capacity {:#x}",
+                self.capacity
+            )));
         }
-        self.free_bytes -= len;
-        *self.leased_bytes.entry(host).or_insert(0) += len;
-        let region = self.region_of(base);
-        self.region_load[region] += len;
-        let ext = Extent { dpa: Dpa(base), len, owner: host };
-        self.leases.insert(base, ext);
-        ext
-    }
-
-    /// Placement region holding `dpa` (by base address).
-    fn region_of(&self, dpa: u64) -> usize {
-        ((dpa / self.region_len) as usize).min(self.region_load.len() - 1)
+        Ok((dpa / self.region_len) as usize)
     }
 
     /// Placement-region observability: `(region_len, per-region leased
     /// bytes)`. The contention ablation derives its modeled cost metric
-    /// from this.
-    pub fn placement_regions(&self) -> (u64, &[u64]) {
-        (self.region_len, &self.region_load)
+    /// from this. Uncounted reads (does not disturb `lock_stats`).
+    pub fn placement_regions(&self) -> (u64, Vec<u64>) {
+        let loads = self.peek_all_regions().iter().map(|g| g.load).collect();
+        (self.region_len, loads)
+    }
+
+    /// The global free list, stitched from the shards (sorted, merged
+    /// across shard boundaries) — observability and tests.
+    pub fn free_ranges(&self) -> Vec<Range> {
+        let guards = self.peek_all_regions();
+        let mut merged: Vec<Range> = Vec::new();
+        for g in &guards {
+            for r in &g.free {
+                match merged.last_mut() {
+                    Some(last) if last.end() == r.base => {
+                        *last = Range::new(last.base, last.len + r.len)
+                    }
+                    _ => merged.push(*r),
+                }
+            }
+        }
+        merged
     }
 
     /// FM API: return an extent (must be wholly unused by the caller).
-    pub fn release_extent(&mut self, host: HostId, ext: Extent) -> Result<()> {
-        match self.leases.get(&ext.dpa.0) {
+    /// Locks only the shards the extent spans, ascending.
+    pub(crate) fn release_extent(&self, host: HostId, ext: Extent) -> Result<()> {
+        let home = self.region_index(ext.dpa.0)?;
+        let last = self.region_index(ext.dpa.0 + ext.len.max(1) - 1)?;
+        let mut control = self.control()?;
+        if home != last {
+            self.stats.cross_region_ops.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut guards = Vec::with_capacity(last - home + 1);
+        for idx in home..=last {
+            guards.push(self.region(idx)?);
+        }
+        match guards[0].leases.get(&ext.dpa.0) {
             Some(e) if e.owner == host && e.len == ext.len => {}
             Some(_) => {
                 return Err(Error::FabricManager("extent not owned by caller".into()));
             }
             None => return Err(Error::FabricManager("unknown extent".into())),
         }
-        self.leases.remove(&ext.dpa.0);
-        self.free_bytes += ext.len;
-        let region = self.region_of(ext.dpa.0);
-        self.region_load[region] -= ext.len;
-        if let Some(v) = self.leased_bytes.get_mut(&host) {
+        guards[0].leases.remove(&ext.dpa.0);
+        guards[0].load -= ext.len;
+        for g in guards.iter_mut() {
+            free_span(g, ext.dpa.0, ext.dpa.0 + ext.len);
+        }
+        self.free_bytes.fetch_add(ext.len, Ordering::Relaxed);
+        if let Some(v) = control.leased_bytes.get_mut(&host) {
             *v -= ext.len;
             if *v == 0 {
-                self.leased_bytes.remove(&host);
+                control.leased_bytes.remove(&host);
             }
-        }
-        // insert into the sorted free list and coalesce neighbours
-        let mut r = Range::new(ext.dpa.0, ext.len);
-        let idx = self.free.partition_point(|f| f.base < r.base);
-        // coalesce with next
-        if idx < self.free.len() && r.end() == self.free[idx].base {
-            r = Range::new(r.base, r.len + self.free[idx].len);
-            self.free.remove(idx);
-        }
-        // coalesce with previous
-        if idx > 0 && self.free[idx - 1].end() == r.base {
-            let prev = self.free[idx - 1];
-            self.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
-        } else {
-            self.free.insert(idx, r);
         }
         Ok(())
     }
 
-    /// GFD management: add a SAT entry for a CXL device (§3.3).
-    pub fn sat_grant(&mut self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
-        if !self.switch.is_bound(spid) {
+    // ---- GFD management ----
+
+    /// GFD management: add a SAT entry for a CXL device (§3.3). The
+    /// control lock is held across the grant so a concurrent
+    /// crash-reclaim cannot interleave between the bind check and the
+    /// SAT write.
+    pub(crate) fn sat_grant(&self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
+        let control = self.control()?;
+        if !control.switch.is_bound(spid) {
             return Err(Error::FabricManager(format!("SPID {spid:?} not bound")));
         }
-        self.expander.sat_grant(spid, range, perm)
+        let res = self.expander_mut().sat_grant(spid, range, perm);
+        drop(control);
+        res
     }
 
     /// GFD management: remove a SAT entry.
-    pub fn sat_revoke(&mut self, spid: Spid, range: Range) -> Result<()> {
-        self.expander.sat_revoke(spid, range)
+    pub(crate) fn sat_revoke(&self, spid: Spid, range: Range) -> Result<()> {
+        self.expander_mut().sat_revoke(spid, range)
     }
 
     /// Release everything a host holds (host crash / module unload).
@@ -375,77 +666,182 @@ impl FabricManager {
     /// access to re-leased memory would be an isolation hole. Siblings'
     /// extents cover disjoint DPA ranges, so their grants, decoders and
     /// placements are untouched.
-    pub fn release_host(&mut self, host: HostId) {
-        let to_release: Vec<Extent> =
-            self.leases.values().filter(|e| e.owner == host).copied().collect();
-        for e in to_release {
-            let media = Range::new(e.dpa.0, e.len);
-            self.expander.sat_revoke_overlapping(media);
-            self.expander.remove_decoders_overlapping_dpa(media);
-            let _ = self.release_extent(host, e);
-        }
-        if let Some(spid) = self.hosts.remove(&host) {
-            let _ = self.switch.unbind(spid);
-        }
-    }
-
-    /// Number of live leases (for invariant checks).
-    pub fn lease_count(&self) -> usize {
-        self.leases.len()
-    }
-
-    /// Invariant: free list is sorted, non-overlapping, coalesced, the
-    /// running `free_bytes`/`leased_bytes` counters agree with the
-    /// ground-truth tables, free+leased covers exactly the media, and
-    /// the expander's own indexing invariants (sorted decoder/DMP/SAT
-    /// tables) hold. Used by property tests.
-    pub fn check_invariants(&self) -> Result<()> {
-        let mut prev_end = None;
-        let mut free_sum = 0;
-        for r in &self.free {
-            if let Some(pe) = prev_end {
-                if r.base < pe {
-                    return Err(Error::FabricManager("free list overlap".into()));
-                }
-                if r.base == pe {
-                    return Err(Error::FabricManager("free list not coalesced".into()));
-                }
+    ///
+    /// Poison-tolerant throughout (crash cleanup must run even after a
+    /// panic), and a full ordered sweep: control, every region
+    /// ascending, then one expander write scope.
+    pub(crate) fn release_host(&self, host: HostId) {
+        self.stats.cross_region_ops.fetch_add(1, Ordering::Relaxed);
+        let mut control = self.control_ignore_poison();
+        let mut guards: Vec<MutexGuard<'_, RegionShard>> = self
+            .regions
+            .iter()
+            .map(|m| {
+                lock_counted(m, &self.stats.region_acquisitions, &self.stats.region_contended)
+                    .unwrap_or_else(PoisonError::into_inner)
+            })
+            .collect();
+        let owned: Vec<Extent> = guards
+            .iter()
+            .flat_map(|g| g.leases.values().filter(|e| e.owner == host).copied())
+            .collect();
+        {
+            let mut exp = self.expander_mut();
+            for e in &owned {
+                let media = Range::new(e.dpa.0, e.len);
+                exp.sat_revoke_overlapping(media);
+                exp.remove_decoders_overlapping_dpa(media);
             }
-            prev_end = Some(r.end());
-            free_sum += r.len;
         }
-        if free_sum != self.free_bytes {
+        let mut reclaimed = 0;
+        for e in &owned {
+            let home = (e.dpa.0 / self.region_len) as usize;
+            let last = ((e.dpa.0 + e.len.max(1) - 1) / self.region_len) as usize;
+            guards[home].leases.remove(&e.dpa.0);
+            guards[home].load -= e.len;
+            for g in guards[home..=last].iter_mut() {
+                free_span(g, e.dpa.0, e.dpa.0 + e.len);
+            }
+            reclaimed += e.len;
+        }
+        self.free_bytes.fetch_add(reclaimed, Ordering::Relaxed);
+        control.leased_bytes.remove(&host);
+        if let Some(spid) = control.hosts.remove(&host) {
+            let _ = control.switch.unbind(spid);
+        }
+    }
+
+    /// Number of live leases (for invariant checks). Uncounted reads.
+    pub fn lease_count(&self) -> usize {
+        self.peek_all_regions().iter().map(|g| g.leases.len()).sum()
+    }
+
+    /// Invariant: every shard's free list is sorted, non-overlapping,
+    /// coalesced and inside its span; every lease is homed in the right
+    /// shard; the running `free_bytes` / `leased_bytes` / per-region
+    /// load counters agree with the ground-truth tables; free+leased
+    /// covers exactly the media; and the expander's own indexing
+    /// invariants (sorted decoder/DMP/SAT tables) hold. Used by
+    /// property tests. Poison-tolerant: after a panic this is the audit
+    /// that decides whether the state underneath is still sound.
+    pub fn check_invariants(&self) -> Result<()> {
+        let control = self.peek_control();
+        let guards = self.peek_all_regions();
+        let mut free_sum = 0u64;
+        let mut leased_sum = 0u64;
+        let mut per_host: HashMap<HostId, u64> = HashMap::new();
+        for (idx, g) in guards.iter().enumerate() {
+            let mut prev_end = None;
+            for r in &g.free {
+                if r.base < g.span.base || r.end() > g.span.end() {
+                    return Err(Error::FabricManager(format!(
+                        "region {idx}: free range outside shard span"
+                    )));
+                }
+                if let Some(pe) = prev_end {
+                    if r.base < pe {
+                        return Err(Error::FabricManager("free list overlap".into()));
+                    }
+                    if r.base == pe {
+                        return Err(Error::FabricManager("free list not coalesced".into()));
+                    }
+                }
+                prev_end = Some(r.end());
+                free_sum += r.len;
+            }
+            let mut shard_leased = 0u64;
+            for e in g.leases.values() {
+                if (e.dpa.0 / self.region_len) as usize != idx {
+                    return Err(Error::FabricManager(format!(
+                        "lease {:#x} homed in wrong region {idx}",
+                        e.dpa.0
+                    )));
+                }
+                *per_host.entry(e.owner).or_insert(0) += e.len;
+                shard_leased += e.len;
+            }
+            if shard_leased != g.load {
+                return Err(Error::FabricManager(format!(
+                    "region {idx} load drift: counter {} != lease sum {shard_leased}",
+                    g.load
+                )));
+            }
+            leased_sum += shard_leased;
+        }
+        if free_sum != self.available() {
             return Err(Error::FabricManager(format!(
                 "free_bytes drift: counter {} != free list sum {free_sum}",
-                self.free_bytes
+                self.available()
             )));
         }
-        let mut per_host: HashMap<HostId, u64> = HashMap::new();
-        let mut per_region = vec![0u64; self.region_load.len()];
-        for e in self.leases.values() {
-            *per_host.entry(e.owner).or_insert(0) += e.len;
-            per_region[self.region_of(e.dpa.0)] += e.len;
-        }
-        if per_host != self.leased_bytes {
+        if per_host != control.leased_bytes {
             return Err(Error::FabricManager(format!(
                 "leased_bytes drift: counters {:?} != lease table {per_host:?}",
-                self.leased_bytes
+                control.leased_bytes
             )));
         }
-        if per_region != self.region_load {
+        if free_sum + leased_sum != self.capacity {
             return Err(Error::FabricManager(format!(
-                "region_load drift: counters {:?} != lease table {per_region:?}",
-                self.region_load
+                "capacity leak: free+leased={} != {}",
+                free_sum + leased_sum,
+                self.capacity
             )));
         }
-        let total: u64 = self.available() + self.leases.values().map(|e| e.len).sum::<u64>();
-        if total != self.expander.capacity() {
-            return Err(Error::FabricManager(format!(
-                "capacity leak: free+leased={total} != {}",
-                self.expander.capacity()
-            )));
+        drop(guards);
+        drop(control);
+        self.expander().check_invariants()
+    }
+}
+
+/// Carve `[lo, hi)` (clamped to the shard's span) out of the shard's
+/// free list. The span to remove always lies inside a single free range
+/// of the shard: the allocation view only merges *adjacent* pieces, and
+/// a shard's own free list is kept coalesced.
+fn carve_span(shard: &mut RegionShard, lo: u64, hi: u64) {
+    let lo = lo.max(shard.span.base);
+    let hi = hi.min(shard.span.end());
+    if lo >= hi {
+        return;
+    }
+    let pos = shard.free.partition_point(|r| r.base <= lo) - 1;
+    let r = shard.free[pos];
+    debug_assert!(lo >= r.base && hi <= r.end());
+    let left = lo - r.base;
+    let right = r.end() - hi;
+    match (left > 0, right > 0) {
+        (false, false) => {
+            shard.free.remove(pos);
         }
-        self.expander.check_invariants()
+        (true, false) => shard.free[pos] = Range::new(r.base, left),
+        (false, true) => shard.free[pos] = Range::new(hi, right),
+        (true, true) => {
+            shard.free[pos] = Range::new(r.base, left);
+            shard.free.insert(pos + 1, Range::new(hi, right));
+        }
+    }
+}
+
+/// Return `[lo, hi)` (clamped to the shard's span) to the shard's free
+/// list, inserting sorted and coalescing with both neighbours.
+fn free_span(shard: &mut RegionShard, lo: u64, hi: u64) {
+    let lo = lo.max(shard.span.base);
+    let hi = hi.min(shard.span.end());
+    if lo >= hi {
+        return;
+    }
+    let mut r = Range::new(lo, hi - lo);
+    let idx = shard.free.partition_point(|f| f.base < r.base);
+    // coalesce with next
+    if idx < shard.free.len() && r.end() == shard.free[idx].base {
+        r = Range::new(r.base, r.len + shard.free[idx].len);
+        shard.free.remove(idx);
+    }
+    // coalesce with previous
+    if idx > 0 && shard.free[idx - 1].end() == r.base {
+        let prev = shard.free[idx - 1];
+        shard.free[idx - 1] = Range::new(prev.base, prev.len + r.len);
+    } else {
+        shard.free.insert(idx, r);
     }
 }
 
@@ -455,72 +851,55 @@ impl FabricManager {
 /// The ownership split for multi-host sharding: no `LmbHost` owns the
 /// FM any more — the switch, expander, lease table and fabric-global
 /// mmid namespace live behind this handle, and any number of hosts
-/// (and their driver threads) bind through clones of it. The
-/// `Arc<Mutex<_>>` is an implementation detail: every method scopes
-/// its lock internally or hands a borrow to a caller closure
-/// ([`FabricRef::with_fm`]), so no guard type escapes this module and
-/// nothing can hold the fabric locked across unrelated work.
+/// (and their driver threads) bind through clones of it. Since the FM
+/// shards its own locks (module docs), the handle is a plain `Arc`:
+/// concurrent callers contend only on the specific region / control /
+/// expander lock their operation needs, not on one fabric-wide mutex.
 ///
-/// **Poisoning.** If a thread panics inside a fabric scope the lock is
-/// poisoned. Fallible operations then return
-/// [`Error::FabricPoisoned`] instead of panicking again; the
-/// infallible observability reads (`available`, `leased_to`, …) and
-/// [`FabricRef::check_invariants`] deliberately bypass the poison flag
-/// — the invariant checker is exactly the tool that decides whether
-/// post-panic state is salvageable.
+/// **Poisoning.** A panic inside a [`FabricRef::with_fm`] scope poisons
+/// the fabric *seal*; fallible operations then return
+/// [`Error::FabricPoisoned`] instead of running on torn state. A panic
+/// holding a single region lock poisons only that region: its waiters
+/// see [`Error::FabricPoisoned`], while allocation quarantines the
+/// shard and keeps serving from healthy regions. The infallible
+/// observability reads (`available`, `leased_to`, …) and
+/// [`FabricRef::check_invariants`] deliberately bypass both poison
+/// flags — the invariant checker is exactly the tool that decides
+/// whether post-panic state is salvageable.
 ///
 /// There is deliberately **no** public way to mutate lease or
-/// access-control state through the handle — no `&mut FabricManager`,
-/// no `&mut Expander` (whose SAT is the access-control state), and no
-/// forwarded `allocate_extent`/`release_extent`/`sat_grant` taking a
-/// caller-supplied [`HostId`]. Those paths are crate-internal and only
-/// reachable through the owner-checked `LmbHost`/`LmbModule`/`Cluster`
-/// surfaces, so lease ownership and grant checks cannot be bypassed.
-/// Publicly the handle offers scoped reads ([`FabricRef::with_fm`],
-/// `available`, `leased_to`, …), the host-trusted data plane
+/// access-control state through the handle — the FM's extent / SAT /
+/// binding mutators are crate-internal and only reachable through the
+/// owner-checked `LmbHost`/`LmbModule`/`Cluster` surfaces, so lease
+/// ownership and grant checks cannot be bypassed. Publicly the handle
+/// offers scoped reads ([`FabricRef::with_fm`], `available`,
+/// `leased_to`, …), the host-trusted data plane
 /// ([`FabricRef::write_dpa`] / [`FabricRef::read_dpa`]), failure
 /// injection, and device binding.
 #[derive(Debug, Clone)]
 pub struct FabricRef {
-    inner: Arc<Mutex<FabricManager>>,
+    inner: Arc<FabricManager>,
 }
 
 impl FabricRef {
     pub fn new(fm: FabricManager) -> Self {
-        FabricRef { inner: Arc::new(Mutex::new(fm)) }
+        FabricRef { inner: Arc::new(fm) }
     }
 
-    /// Take the lock, surfacing poison as [`Error::FabricPoisoned`].
-    /// Private: guards must not outlive a method of this module.
-    fn guard(&self) -> Result<MutexGuard<'_, FabricManager>> {
-        self.inner.lock().map_err(|_| Error::FabricPoisoned)
-    }
-
-    /// Take the lock even when poisoned. Reserved for observability
-    /// reads and the invariant checker: the state behind a poisoned
-    /// lock is exactly what a post-mortem needs to look at.
-    fn guard_ignore_poison(&self) -> MutexGuard<'_, FabricManager> {
-        match self.inner.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
-    }
-
-    /// Run `f` with a shared view of the FM. The lock is held only for
-    /// the closure's duration; do not call back into this handle from
-    /// inside `f` (the lock is not reentrant).
+    /// Run `f` with a shared view of the FM. The fabric seal is held
+    /// for the closure's duration: a panic inside `f` poisons it and
+    /// later fallible callers see [`Error::FabricPoisoned`]. Reads
+    /// inside the closure take the FM's internal shard locks as needed;
+    /// do not stash borrows past the closure.
     pub fn with_fm<R>(&self, f: impl FnOnce(&FabricManager) -> R) -> Result<R> {
-        let fm = self.guard()?;
-        Ok(f(&fm))
+        let _seal = self.inner.seal.lock().map_err(|_| Error::FabricPoisoned)?;
+        Ok(f(&self.inner))
     }
 
-    /// Run `f` with exclusive access to the FM. Crate-internal: handing
-    /// `&mut FabricManager` to arbitrary callers would let them skip
-    /// the per-host lease ownership checks. A panic inside `f` poisons
-    /// the lock; the next caller sees [`Error::FabricPoisoned`].
-    pub(crate) fn with_fm_mut<R>(&self, f: impl FnOnce(&mut FabricManager) -> R) -> Result<R> {
-        let mut fm = self.guard()?;
-        Ok(f(&mut fm))
+    /// Direct crate-internal access to the sharded FM (no seal scope):
+    /// the module/queue execute paths take exactly the locks they need.
+    pub(crate) fn manager(&self) -> &FabricManager {
+        &self.inner
     }
 
     /// Number of live handles sharing this fabric (hosts + clusters +
@@ -529,38 +908,50 @@ impl FabricRef {
         Arc::strong_count(&self.inner)
     }
 
+    /// Region-poison fault injection for tests (see
+    /// `testing::poison_region`).
+    pub(crate) fn poison_region_for_test(&self, idx: usize) {
+        self.inner.panic_holding_region(idx)
+    }
+
     // ---- forwarded FM control plane (scoped locks) ----
 
     /// [`FabricManager::bind_cxl_device`] — attaching a CXL consumer
     /// takes a switch port but cannot touch any host's leases.
     pub fn bind_cxl_device(&self) -> Result<Spid> {
-        self.guard()?.bind_cxl_device()
+        self.inner.seal_check()?;
+        self.inner.bind_cxl_device()
     }
 
     /// [`FabricManager::gfd_dpid`]. Poison-tolerant read.
     pub fn gfd_dpid(&self) -> Option<Dpid> {
-        self.guard_ignore_poison().gfd_dpid()
+        self.inner.gfd_dpid()
     }
 
-    /// [`FabricManager::available`]. Poison-tolerant read.
+    /// [`FabricManager::available`]. Poison-tolerant, lock-free read.
     pub fn available(&self) -> u64 {
-        self.guard_ignore_poison().available()
+        self.inner.available()
     }
 
     /// [`FabricManager::leased_to`]. Poison-tolerant read.
     pub fn leased_to(&self, host: HostId) -> u64 {
-        self.guard_ignore_poison().leased_to(host)
+        self.inner.leased_to(host)
     }
 
     /// [`FabricManager::lease_count`]. Poison-tolerant read.
     pub fn lease_count(&self) -> usize {
-        self.guard_ignore_poison().lease_count()
+        self.inner.lease_count()
     }
 
     /// Total expander media capacity. Poison-tolerant read, so the
     /// cluster-level capacity audit keeps working after a panic.
     pub fn capacity(&self) -> u64 {
-        self.guard_ignore_poison().expander().capacity()
+        self.inner.capacity()
+    }
+
+    /// [`FabricManager::lock_stats`]. Poison-tolerant, lock-free read.
+    pub fn lock_stats(&self) -> LockStats {
+        self.inner.lock_stats()
     }
 
     /// [`FabricManager::release_host`] — crate-internal: reclaiming a
@@ -568,38 +959,41 @@ impl FabricRef {
     /// something an arbitrary handle-holder may do to a sibling.
     /// Poison-tolerant: crash cleanup must run even after a panic.
     pub(crate) fn release_host(&self, host: HostId) {
-        self.guard_ignore_poison().release_host(host)
+        self.inner.release_host(host)
     }
 
     /// [`FabricManager::check_invariants`]. Deliberately
     /// poison-tolerant: after a panic inside a fabric scope this is the
     /// audit that decides whether the state underneath is still sound.
     pub fn check_invariants(&self) -> Result<()> {
-        self.guard_ignore_poison().check_invariants()
+        self.inner.check_invariants()
     }
 
     // ---- expander data plane / failure injection ----
 
     /// Functional write at a DPA through the shared expander.
     pub fn write_dpa(&self, dpa: Dpa, data: &[u8]) -> Result<()> {
-        self.guard()?.expander_mut().write_dpa(dpa, data)
+        self.inner.seal_check()?;
+        self.inner.expander_mut().write_dpa(dpa, data)
     }
 
-    /// Functional read at a DPA through the shared expander.
+    /// Functional read at a DPA through the shared expander. Takes only
+    /// the expander read lock: concurrent readers proceed in parallel.
     pub fn read_dpa(&self, dpa: Dpa, out: &mut [u8]) -> Result<()> {
-        self.guard()?.expander().read_dpa(dpa, out)
+        self.inner.seal_check()?;
+        self.inner.expander().read_dpa(dpa, out)
     }
 
     /// Fail / recover the shared expander (failure-injection hook; one
     /// expander failure hits every bound host). Poison-tolerant so
     /// failure drills can still run after an unrelated panic.
     pub fn set_expander_failed(&self, failed: bool) {
-        self.guard_ignore_poison().expander_mut().set_failed(failed);
+        self.inner.expander_mut().set_failed(failed);
     }
 
     /// Poison-tolerant read.
     pub fn expander_failed(&self) -> bool {
-        self.guard_ignore_poison().expander().is_failed()
+        self.inner.expander().is_failed()
     }
 
     /// Scoped mutable access to the expander for in-crate data-plane
@@ -610,8 +1004,9 @@ impl FabricRef {
     /// checks. External data-plane access goes through
     /// [`FabricRef::write_dpa`] / [`FabricRef::read_dpa`].
     pub(crate) fn with_expander_mut<R>(&self, f: impl FnOnce(&mut Expander) -> R) -> Result<R> {
-        let mut fm = self.guard()?;
-        Ok(f(fm.expander_mut()))
+        self.inner.seal_check()?;
+        let mut exp = self.inner.expander_mut();
+        Ok(f(&mut exp))
     }
 }
 
@@ -622,7 +1017,7 @@ mod tests {
     use crate::cxl::types::{GIB, PAGE_SIZE};
 
     fn fm(cap: u64) -> FabricManager {
-        let mut f = FabricManager::new(
+        let f = FabricManager::new(
             PbrSwitch::new(16),
             Expander::new(ExpanderConfig { dram_capacity: cap, ..Default::default() }),
         );
@@ -632,7 +1027,7 @@ mod tests {
 
     #[test]
     fn extent_lease_and_release_roundtrip() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         let e = f.allocate_extent(h).unwrap();
         assert_eq!(e.len, EXTENT_SIZE);
@@ -644,7 +1039,7 @@ mod tests {
 
     #[test]
     fn capacity_exhaustion_reports_available() {
-        let mut f = fm(EXTENT_SIZE); // room for exactly one extent
+        let f = fm(EXTENT_SIZE); // room for exactly one extent
         let (h, _) = f.bind_host().unwrap();
         f.allocate_extent(h).unwrap();
         match f.allocate_extent(h) {
@@ -655,7 +1050,7 @@ mod tests {
 
     #[test]
     fn release_coalesces_neighbours() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         let a = f.allocate_extent(h).unwrap();
         let b = f.allocate_extent(h).unwrap();
@@ -665,12 +1060,21 @@ mod tests {
         f.release_extent(h, b).unwrap(); // middle release must merge all
         f.check_invariants().unwrap();
         assert_eq!(f.available(), GIB);
-        assert_eq!(f.free.len(), 1, "free list fully coalesced");
+        assert_eq!(f.free_ranges().len(), 1, "free list fully coalesced");
+    }
+
+    #[test]
+    fn free_ranges_merge_across_shard_boundaries() {
+        // a fresh pool is split across region shards internally, but
+        // the merged observability view is the one historical range
+        let f = fm(GIB);
+        assert!(f.placement_regions().1.len() > 1, "sharded pool");
+        assert_eq!(f.free_ranges(), vec![Range::new(0, GIB)]);
     }
 
     #[test]
     fn multi_host_isolation() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h1, _) = f.bind_host().unwrap();
         let (h2, _) = f.bind_host().unwrap();
         let e1 = f.allocate_extent(h1).unwrap();
@@ -681,7 +1085,7 @@ mod tests {
 
     #[test]
     fn release_host_reclaims_everything() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         f.allocate_extent(h).unwrap();
         f.allocate_extent(h).unwrap();
@@ -696,7 +1100,7 @@ mod tests {
         // Regression: release_host used to free a host's extents and
         // unbind its SPID without touching the SAT, so a CXL device
         // kept P2P access to memory later re-leased to another host.
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         let dev = f.bind_cxl_device().unwrap();
         let e = f.allocate_extent(h).unwrap();
@@ -720,7 +1124,7 @@ mod tests {
 
     #[test]
     fn release_host_preserves_sibling_grants_and_decoders() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (ha, _) = f.bind_host().unwrap();
         let (hb, _) = f.bind_host().unwrap();
         let dev = f.bind_cxl_device().unwrap();
@@ -739,7 +1143,7 @@ mod tests {
 
     #[test]
     fn running_counters_track_alloc_release_and_crash() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h1, _) = f.bind_host().unwrap();
         let (h2, _) = f.bind_host().unwrap();
         let a = f.allocate_extent(h1).unwrap();
@@ -766,7 +1170,7 @@ mod tests {
     fn p2p_violation_through_fm_names_real_gfd_dpid() {
         use crate::cxl::packet::{CxlMemReq, MemAddr};
         use crate::cxl::types::Requester;
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let gfd = f.gfd_dpid().unwrap();
         let dev = f.bind_cxl_device().unwrap();
         let req = CxlMemReq::read(MemAddr::Dpa(Dpa(0x40)), 64, Requester::CxlDevice(dev));
@@ -778,10 +1182,38 @@ mod tests {
 
     #[test]
     fn failed_expander_blocks_allocation() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let (h, _) = f.bind_host().unwrap();
         f.expander_mut().set_failed(true);
         assert!(matches!(f.allocate_extent(h), Err(Error::ExpanderFailed(_))));
+    }
+
+    #[test]
+    fn region_index_attributes_by_range_not_clamp() {
+        // 9 extents of media → 512 MiB regions, with a short 256 MiB
+        // final region: [0,2E) [2E,4E) [4E,6E) [6E,8E) [8E,9E)
+        let f = fm(9 * EXTENT_SIZE);
+        let (region_len, loads) = f.placement_regions();
+        assert_eq!(region_len, 2 * EXTENT_SIZE);
+        assert_eq!(loads.len(), 5);
+        assert_eq!(f.region_index(0).unwrap(), 0);
+        assert_eq!(f.region_index(8 * EXTENT_SIZE).unwrap(), 4);
+        // the final boundary: last valid byte is region 4 ...
+        assert_eq!(f.region_index(9 * EXTENT_SIZE - 1).unwrap(), 4);
+        // ... but capacity itself, and anything past it, is an error —
+        // the old `min(..)` clamp silently attributed these to region 4
+        assert!(f.region_index(9 * EXTENT_SIZE).is_err());
+        assert!(f.region_index(9 * EXTENT_SIZE + region_len).is_err());
+        assert!(f.region_index(u64::MAX).is_err());
+        // the short final region is still allocatable end to end
+        let (h, _) = f.bind_host().unwrap();
+        let mut last = None;
+        for _ in 0..9 {
+            last = Some(f.allocate_extent(h).unwrap());
+        }
+        assert_eq!(last.unwrap().dpa, Dpa(8 * EXTENT_SIZE), "9th extent fills the short region");
+        assert!(f.allocate_extent(h).is_err(), "pool exactly full");
+        f.check_invariants().unwrap();
     }
 
     #[test]
@@ -790,12 +1222,12 @@ mod tests {
         let other = fabric.clone();
         assert_eq!(fabric.handle_count(), 2);
         // lease mutation is crate-internal (module/cluster paths); the
-        // test reaches it through the same scoped lock they use
-        let (h1, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
-        let (h2, _) = other.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
+        // test reaches it through the same scoped seal they use
+        let (h1, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let (h2, _) = other.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
         assert_ne!(h1, h2, "clones bind against the same id space");
-        fabric.with_fm_mut(|fm| fm.allocate_extent(h1)).unwrap().unwrap();
-        other.with_fm_mut(|fm| fm.allocate_extent(h2)).unwrap().unwrap();
+        fabric.with_fm(|fm| fm.allocate_extent(h1)).unwrap().unwrap();
+        other.with_fm(|fm| fm.allocate_extent(h2)).unwrap().unwrap();
         assert_eq!(fabric.available(), GIB - 2 * EXTENT_SIZE);
         assert_eq!(fabric.leased_to(h1), EXTENT_SIZE);
         assert_eq!(other.leased_to(h2), EXTENT_SIZE);
@@ -825,11 +1257,11 @@ mod tests {
         assert_send_sync::<FabricRef>();
 
         let fabric = fm(GIB).into_shared();
-        let (h, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
         let worker = {
             let fabric = fabric.clone();
             std::thread::spawn(move || {
-                fabric.with_fm_mut(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+                fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
                 fabric.available()
             })
         };
@@ -842,25 +1274,28 @@ mod tests {
     #[test]
     fn panic_inside_scope_poisons_and_surfaces_fabric_poisoned() {
         let fabric = fm(GIB).into_shared();
-        let (h, _) = fabric.with_fm_mut(|fm| fm.bind_host()).unwrap().unwrap();
-        fabric.with_fm_mut(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
 
-        // panic on another thread mid-scope: the lock poisons, the
+        // panic on another thread mid-scope: the seal poisons, the
         // process does not abort
         let victim = {
             let fabric = fabric.clone();
             std::thread::spawn(move || {
-                let _: Result<()> = fabric
-                    .with_fm_mut(|_fm| panic!("driver thread died holding the fabric lock"));
+                let _: Result<()> =
+                    fabric.with_fm(|_fm| panic!("driver thread died holding the fabric seal"));
             })
         };
         assert!(victim.join().is_err(), "the panicking thread reports the panic");
 
         // fallible paths surface the poison as a typed error...
         assert!(matches!(fabric.with_fm(|fm| fm.lease_count()), Err(Error::FabricPoisoned)));
-        assert!(matches!(fabric.with_fm_mut(|fm| fm.alloc_mmid()), Err(Error::FabricPoisoned)));
         assert!(matches!(fabric.write_dpa(Dpa(0), b"x"), Err(Error::FabricPoisoned)));
         assert!(matches!(fabric.bind_cxl_device(), Err(Error::FabricPoisoned)));
+        assert!(matches!(
+            fabric.with_expander_mut(|e| e.resident_pages()),
+            Err(Error::FabricPoisoned)
+        ));
 
         // ...while the poison-tolerant audit surface still works: the
         // panic struck before any mutation, so the state is sound
@@ -875,8 +1310,79 @@ mod tests {
     }
 
     #[test]
+    fn poisoned_region_is_quarantined_not_fatal() {
+        // 4 GiB pool → 8 regions of 512 MiB. Poison region 0's lock;
+        // the rest of the fabric must keep allocating.
+        let f = fm(4 * GIB);
+        let (h, _) = f.bind_host().unwrap();
+        let e0 = f.allocate_extent(h).unwrap();
+        assert_eq!(e0.dpa, Dpa(0), "first-fit starts in region 0");
+        let (region_len, _) = f.placement_regions();
+
+        let fabric = f.into_shared();
+        let t = {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || fabric.poison_region_for_test(0))
+        };
+        assert!(t.join().is_err(), "fault injection panics by design");
+
+        let fm = fabric.manager();
+        // waiters on the poisoned region get the typed error...
+        assert!(
+            matches!(fm.release_extent(h, e0), Err(Error::FabricPoisoned)),
+            "release into the poisoned region reports FabricPoisoned"
+        );
+        // ...the fabric seal is NOT poisoned, and disjoint regions keep
+        // serving: first-fit now skips region 0's quarantined free space
+        fabric.with_fm(|_| ()).unwrap();
+        let e1 = fm.allocate_extent(h).unwrap();
+        assert_eq!(e1.dpa, Dpa(region_len), "placement skips the quarantined shard");
+        fm.release_extent(h, e1).unwrap();
+        // the audit still runs (poison-tolerant) and the books balance:
+        // the injected panic mutated nothing
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lock_stats_count_acquisitions_and_cross_region_ops() {
+        let f = fm(GIB); // 4 regions of 256 MiB
+        let s0 = f.lock_stats();
+        assert_eq!(s0, LockStats::default());
+
+        let (h, _) = f.bind_host().unwrap();
+        let s1 = f.lock_stats();
+        assert_eq!(s1.control_acquisitions, 1, "bind takes only the control lock");
+        assert_eq!(s1.region_acquisitions, 0);
+
+        let e = f.allocate_extent(h).unwrap();
+        let s2 = f.lock_stats();
+        assert_eq!(s2.region_acquisitions, 4, "placement locks every shard once");
+        assert_eq!(s2.cross_region_ops, s1.cross_region_ops + 1);
+
+        f.release_extent(h, e).unwrap();
+        let s3 = f.lock_stats();
+        assert_eq!(s3.region_acquisitions, 5, "release locks only the spanned shard");
+        assert_eq!(s3.cross_region_ops, s2.cross_region_ops, "single-shard release");
+
+        f.release_host(h);
+        let s4 = f.lock_stats();
+        assert_eq!(s4.cross_region_ops, s3.cross_region_ops + 1, "crash reclaim is a full sweep");
+
+        // single-threaded: nothing ever blocked
+        assert_eq!(s4.region_contended, 0);
+        assert_eq!(s4.control_contended, 0);
+
+        // observability reads are uncounted by design
+        let _ = f.placement_regions();
+        let _ = f.free_ranges();
+        let _ = f.lease_count();
+        f.check_invariants().unwrap();
+        assert_eq!(f.lock_stats(), s4);
+    }
+
+    #[test]
     fn mmid_namespace_is_fabric_global() {
-        let mut f = fm(GIB);
+        let f = fm(GIB);
         let a = f.alloc_mmid();
         let b = f.alloc_mmid();
         assert_ne!(a, b);
@@ -889,7 +1395,7 @@ mod tests {
         // packs sequentially; contention-aware places each new extent in
         // the least-loaded region, so the first 8 extents land in 8
         // distinct regions.
-        let mut f = fm(4 * GIB);
+        let f = fm(4 * GIB);
         let (h, _) = f.bind_host().unwrap();
         let (region_len, loads) = f.placement_regions();
         assert_eq!(region_len, 512 * 1024 * 1024);
@@ -911,7 +1417,7 @@ mod tests {
     fn contention_aware_ties_fall_back_to_first_fit() {
         // on an empty pool every region prices identically, so the
         // cheapest candidate is the lowest DPA — first-fit
-        let mut f = fm(4 * GIB);
+        let f = fm(4 * GIB);
         let (h, _) = f.bind_host().unwrap();
         let aware =
             f.allocate_extent_placed(h, EXTENT_SIZE, PlacementPolicy::ContentionAware).unwrap();
@@ -927,7 +1433,7 @@ mod tests {
     fn placed_and_first_fit_leases_share_one_accounting_path() {
         // interleave both policies; counters and invariants must hold,
         // and a mid-free-range carve must split the range cleanly
-        let mut f = fm(4 * GIB);
+        let f = fm(4 * GIB);
         let (h, _) = f.bind_host().unwrap();
         let a = f.allocate_extent(h).unwrap(); // first-fit → dpa 0
         let b =
@@ -944,10 +1450,8 @@ mod tests {
 
     #[test]
     fn sat_grant_requires_bound_spid() {
-        let mut f = fm(GIB);
-        assert!(f
-            .sat_grant(Spid(99), Range::new(0, 4096), SatPerm::ReadWrite)
-            .is_err());
+        let f = fm(GIB);
+        assert!(f.sat_grant(Spid(99), Range::new(0, 4096), SatPerm::ReadWrite).is_err());
         let spid = f.bind_cxl_device().unwrap();
         f.sat_grant(spid, Range::new(0, 4096), SatPerm::ReadWrite).unwrap();
     }

@@ -25,41 +25,70 @@
 //! Since the shared-fabric split (multi-host sharding), no host owns
 //! the fabric. The switch, expander, lease table and fabric-global mmid
 //! namespace live in the [`cxl::fm::FabricManager`], which sits behind
-//! [`cxl::fm::FabricRef`] — a cheap-clone, **`Send + Sync`** handle
-//! over `Arc<Mutex<_>>`. Each [`lmb::LmbHost`] holds one clone plus the
-//! state that really is per-host: its IOMMU, host physical address
-//! space (HDM windows in a host-disjoint HPA region), and the loaded
-//! [`lmb::LmbModule`]. Leases are keyed by `HostId` and mmids never
-//! collide across hosts, so no handle-holder can free or share memory
-//! it does not own — and there is deliberately no public path to
-//! `&mut FabricManager` that could bypass those checks.
-//! [`cluster::Cluster`] composes the pieces: one fabric, N hosts,
-//! routed per-host alloc/free/share, crash containment
-//! ([`cluster::Cluster::crash_host`]) and cluster-wide expander
-//! failover ([`lmb::failure::FailureDomain::fail_cluster`]).
+//! [`cxl::fm::FabricRef`] — a cheap-clone, **`Send + Sync`** handle.
+//! Each [`lmb::LmbHost`] holds one clone plus the state that really is
+//! per-host: its IOMMU, host physical address space (HDM windows in a
+//! host-disjoint HPA region), and the loaded [`lmb::LmbModule`]. Leases
+//! are keyed by `HostId` and mmids never collide across hosts, so no
+//! handle-holder can free or share memory it does not own — and there
+//! is deliberately no public path to mutate the fabric directly, which
+//! could bypass those checks. [`cluster::Cluster`] composes the pieces:
+//! one fabric, N hosts, routed per-host alloc/free/share, crash
+//! containment ([`cluster::Cluster::crash_host`]) and cluster-wide
+//! expander failover ([`lmb::failure::FailureDomain::fail_cluster`]).
 //!
-//! **Threading model.** Fabric access is *scoped*: readers call
-//! `with_fm(|fm| ..)` (on `FabricRef`, `LmbHost`, `System`, `Cluster`);
-//! the crate-internal mutator is `with_fm_mut`. No lock guard type
-//! ever escapes `cxl::fm` — there is no `lock()`/`get()` returning a
-//! guard, so callers cannot hold the fabric across unrelated work, and
-//! the batched data path is the closure-scoped
-//! [`lmb::LmbHost::with_io_session`]. The rules:
+//! **Sharded lock hierarchy.** The fabric is not one mutex: mutable
+//! state is sharded along the placement-region boundaries the
+//! contention-aware policy already spreads leases across, so
+//! disjoint-region allocation traffic never serialises. Every
+//! `FabricManager` method takes `&self`; internally the locks are, in
+//! strict acquisition order,
 //!
-//! * **Lock ordering** — the fabric mutex is the *innermost* lock in
-//!   the crate. Queue completion tables never hold it, and a fabric
-//!   scope must never call back into `FabricRef`/queue APIs (the mutex
-//!   is not reentrant; a re-entry deadlocks).
+//! 1. **seal** — a scope mutex held only by `with_fm(|fm| ..)`; its
+//!    poison bit is the fabric-wide "a scoped caller panicked" seal,
+//!    and the lock-free `seal_check` at the alloc/free/share entry
+//!    points is what turns it into [`error::Error::FabricPoisoned`];
+//! 2. **control plane** — one mutex over the lease table, per-host
+//!    accounting and placement bookkeeping (taken only by lease-grant /
+//!    release / crash-reclaim paths, never by warm-extent alloc/free);
+//! 3. **region shards** — one mutex per placement region over that
+//!    region's sub-allocator free lists and load counters; multi-region
+//!    ops (extent placement scans, spanning releases, crash reclaim)
+//!    take shards in **ascending region index** (ordered two-phase
+//!    locking, so concurrent cross-region ops cannot deadlock);
+//! 4. **expander** — an `RwLock` over the decoder/DMP/SAT tables and
+//!    backing store, *innermost*: `decode_hpa`, DMP resolution and SAT
+//!    checks take the read side and never contend with allocation,
+//!    which only takes the write side to program or tear down decoders.
+//!
+//! No lock guard type escapes `cxl::fm`, so callers cannot hold fabric
+//! locks across unrelated work; the batched data path is the
+//! closure-scoped [`lmb::LmbHost::with_io_session`]. The rules:
+//!
 //! * **Who may block** — only [`lmb::SubmitHandle::wait`] and the
 //!   [`lmb::FmService::run`] loop park a thread. Everything else
-//!   (submit, poll, take, every `with_fm` scope) is non-blocking
-//!   beyond the short critical section.
-//! * **Poisoning** — a panic inside a fabric scope poisons the lock;
-//!   subsequent fallible calls surface
-//!   [`error::Error::FabricPoisoned`] instead of deadlocking or
-//!   aborting, while `check_invariants` and the observability reads
-//!   deliberately bypass the poison flag so post-panic state can be
-//!   audited (and crash reclaim still runs).
+//!   (submit, poll, take, every `with_fm` scope, every sharded FM call)
+//!   is non-blocking beyond short per-shard critical sections.
+//! * **Poisoning** — a panic inside a `with_fm` scope poisons the seal:
+//!   every subsequent fallible call on any host surfaces
+//!   [`error::Error::FabricPoisoned`]. A panic while holding one
+//!   *region* shard quarantines only that shard — its waiters get the
+//!   typed error, disjoint regions keep allocating, and placement
+//!   routes new leases around it. `check_invariants` and the
+//!   observability reads deliberately bypass both poison layers so
+//!   post-panic state can be audited (and crash reclaim still runs).
+//! * **Contention observability** —
+//!   [`cxl::fm::FabricManager::lock_stats`] snapshots per-layer
+//!   acquisition/contention counters ([`cxl::fm::LockStats`]); the
+//!   scaling bench (`benches/concurrency_scaling.rs`) asserts the warm
+//!   alloc/free path stays region-lock-free, and
+//!   `examples/threaded_drivers.rs` prints the counters live.
+//! * **Parallel execution** — with the shards in place,
+//!   [`lmb::FmService::run`] fans disjoint hosts' scheduled groups out
+//!   to a worker pool (lane *i* pinned to worker *i* mod *W*, so
+//!   per-lane FIFO order is preserved); `with_workers(1)` recovers the
+//!   serial actor loop, and `BENCH_concurrency.json` tracks the ≥2x
+//!   ops/s the pool buys at 4 driver threads.
 //!
 //! ## Hot-path indexing
 //!
@@ -97,11 +126,13 @@
 //! [`lmb::SubmitHandle`] (`submit_handle()` on `LmbHost`, `System`,
 //! `Cluster`; `handle()` on [`lmb::FmService`]). Deterministic
 //! tick-driven scheduling (`tick_queue`/`drain_queue`, or the
-//! [`lmb::FmService::run`] actor loop that owns the execute side) pops
-//! a rotating per-lane quota — fair across hosts, no RNG or clock, so
-//! for a fixed arrival order tests replay from seeded request streams
-//! — and executes each host's group under a **single fabric lock
-//! acquisition** ([`lmb::LmbHost::execute_requests`]). Completions
+//! [`lmb::FmService::run`] loop that owns the execute side and fans
+//! lane groups out to its worker pool) pops a rotating per-lane quota —
+//! fair across hosts, no RNG or clock, so for a fixed arrival order
+//! tests replay from seeded request streams — and executes each host's
+//! group against the sharded fabric, each request taking only the
+//! region locks it touches ([`lmb::LmbHost::execute_requests`]), so
+//! disjoint hosts' groups execute concurrently. Completions
 //! land in a table shared with every handle: `poll`/`take` from any
 //! thread, or block on [`lmb::SubmitHandle::wait`] (never from the
 //! thread driving the queue). The synchronous `alloc`/`free`/`share`
@@ -190,7 +221,7 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, ExperimentReport, SchemeRow};
     pub use crate::cxl::expander::ExpanderConfig;
     pub use crate::cxl::fabric::{Fabric, PathKind};
-    pub use crate::cxl::fm::{FabricManager, FabricRef, HostId};
+    pub use crate::cxl::fm::{FabricManager, FabricRef, HostId, LockStats};
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
     pub use crate::lmb::queue::{

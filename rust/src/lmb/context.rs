@@ -91,7 +91,7 @@ impl LmbHost {
             )));
         }
         let (host, host_spid, gfd_dpid, window_base) =
-            fabric.with_fm_mut(|fm| -> Result<(HostId, Spid, Dpid, u64)> {
+            fabric.with_fm(|fm| -> Result<(HostId, Spid, Dpid, u64)> {
                 let gfd_dpid = match fm.gfd_dpid() {
                     Some(d) => d,
                     None => fm.attach_gfd()?,
@@ -162,10 +162,9 @@ impl LmbHost {
     }
 
     /// Batch allocation, all-or-nothing: the whole batch is submitted to
-    /// the queue and drained in one go (each tick executes under a
-    /// single fabric lock); if any request fails, every allocation made
-    /// by this call is rolled back (freed) and the first error is
-    /// returned.
+    /// the queue and drained in one go; if any request fails, every
+    /// allocation made by this call is rolled back (freed) and the
+    /// first error is returned.
     pub fn alloc_many(
         &mut self,
         consumer: impl Into<Consumer>,
@@ -197,15 +196,13 @@ impl LmbHost {
         match first_err {
             None => Ok(done),
             Some(e) => {
-                // roll back under a single fabric lock, newest first
-                let module = &mut self.module;
-                let iommu = &mut self.iommu;
-                let space = &mut self.space;
-                self.fabric.with_fm_mut(|fm| {
-                    for a in done.into_iter().rev() {
-                        let _ = module.free(fm, iommu, space, consumer, a.mmid);
-                    }
-                })?;
+                // roll back newest first; the sharded FM takes its own
+                // per-region locks per free
+                let LmbHost { fabric, iommu, space, module, .. } = self;
+                let fm = fabric.manager();
+                for a in done.into_iter().rev() {
+                    let _ = module.free(fm, iommu, space, consumer, a.mmid);
+                }
                 Err(e)
             }
         }
@@ -266,8 +263,8 @@ impl LmbHost {
     }
 
     /// Run one deterministic scheduling tick: pump the intake channel,
-    /// pop up to the lane quota of queued requests and execute them
-    /// under a single fabric lock. Returns how many were serviced.
+    /// pop up to the lane quota of queued requests and execute them.
+    /// Returns how many were serviced.
     pub fn tick_queue(&mut self) -> usize {
         let batch = self.queue.schedule(DEFAULT_LANE_QUOTA);
         let completions = self.execute_requests(batch);
@@ -306,51 +303,39 @@ impl LmbHost {
         self.module.set_placement_policy(policy);
     }
 
-    /// Execute scheduled requests against this host under **one** fabric
-    /// lock acquisition — the single allocation code path beneath the
-    /// synchronous surface and every queue (this host's own, the
-    /// cluster-wide one, and the [`FmService`](crate::lmb::FmService)
-    /// loop, all of which route each slot's scheduled group here). One
-    /// completion per request; a failure completes its own ticket and
-    /// does not stop the rest of the group. If the fabric lock is
-    /// poisoned, every ticket in the group completes with
-    /// [`Error::FabricPoisoned`] instead of stranding its waiter.
+    /// Execute scheduled requests against this host — the single
+    /// allocation code path beneath the synchronous surface and every
+    /// queue (this host's own, the cluster-wide one, and the
+    /// [`FmService`](crate::lmb::FmService) loop, all of which route
+    /// each slot's scheduled group here). The sharded FM takes its own
+    /// per-region locks per request, so disjoint-region groups on
+    /// sibling hosts execute concurrently. One completion per request;
+    /// a failure completes its own ticket and does not stop the rest of
+    /// the group. A sealed (panic-poisoned) fabric completes every
+    /// ticket with [`Error::FabricPoisoned`] via the module's per-call
+    /// seal check instead of stranding its waiter.
     pub fn execute_requests(&mut self, batch: Vec<Scheduled>) -> Vec<Completion> {
         if batch.is_empty() {
             return Vec::new();
         }
-        let module = &mut self.module;
-        let iommu = &mut self.iommu;
-        let space = &mut self.space;
-        let executed = self.fabric.with_fm_mut(|fm| {
-            let mut completions = Vec::with_capacity(batch.len());
-            for s in &batch {
-                let result = match s.request {
-                    Request::Alloc { consumer, size } => {
-                        module.alloc(fm, iommu, space, consumer, size).map(Outcome::Alloc)
-                    }
-                    Request::Free { consumer, mmid } => {
-                        module.free(fm, iommu, space, consumer, mmid).map(|()| Outcome::Freed)
-                    }
-                    Request::Share { owner, target, mmid } => {
-                        module.share(fm, iommu, owner, target, mmid).map(Outcome::Shared)
-                    }
-                };
-                completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
-            }
-            completions
-        });
-        match executed {
-            Ok(completions) => completions,
-            Err(_) => batch
-                .into_iter()
-                .map(|s| Completion {
-                    ticket: s.ticket,
-                    lane: s.lane,
-                    result: Err(Error::FabricPoisoned),
-                })
-                .collect(),
+        let LmbHost { fabric, iommu, space, module, .. } = self;
+        let fm = fabric.manager();
+        let mut completions = Vec::with_capacity(batch.len());
+        for s in &batch {
+            let result = match s.request {
+                Request::Alloc { consumer, size } => {
+                    module.alloc(fm, iommu, space, consumer, size).map(Outcome::Alloc)
+                }
+                Request::Free { consumer, mmid } => {
+                    module.free(fm, iommu, space, consumer, mmid).map(|()| Outcome::Freed)
+                }
+                Request::Share { owner, target, mmid } => {
+                    module.share(fm, iommu, owner, target, mmid).map(Outcome::Shared)
+                }
+            };
+            completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
         }
+        completions
     }
 
     /// One-shot path for the synchronous surface: submit, drain, claim.
@@ -400,24 +385,24 @@ impl LmbHost {
     }
 
     /// Batched data path: resolve `mmid`'s placement once and stream
-    /// any number of reads/writes under a single fabric lock
-    /// acquisition, scoped to the closure.
+    /// any number of reads/writes, scoped to the closure.
     ///
-    /// [`LmbHost::write`]/[`LmbHost::read`] re-lock the shared fabric
+    /// [`LmbHost::write`]/[`LmbHost::read`] re-check the fabric seal
     /// and re-resolve the mmid on every call — fine for one-off control
     /// traffic, linear overhead on the data path. The closure receives
-    /// an [`IoSession`] whose ops reuse the resolved placement; the
-    /// fabric stays locked exactly for the closure's duration, so no
-    /// guard can leak and no sibling host (or driver thread) is blocked
-    /// past the scope. Do not call back into fabric APIs from inside
-    /// the closure — the lock is not reentrant.
+    /// an [`IoSession`] whose ops reuse the resolved placement under
+    /// the seal scope held for the closure's duration; each op takes
+    /// only the expander's device lock, so allocation on sibling hosts
+    /// proceeds concurrently. Do not call back into sealed fabric APIs
+    /// ([`FabricRef::with_fm`] etc.) from inside the closure — the seal
+    /// is not reentrant.
     pub fn with_io_session<R>(
         &mut self,
         mmid: MmId,
         f: impl FnOnce(&mut IoSession<'_>) -> Result<R>,
     ) -> Result<R> {
         let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        self.fabric.with_fm_mut(|fm| {
+        self.fabric.with_fm(|fm| {
             let mut io = IoSession { fm, mmid, dpa: a.dpa, size: a.size };
             f(&mut io)
         })?
@@ -475,17 +460,18 @@ impl LmbHost {
 
 /// A batched I/O session over one LMB allocation: the placement is
 /// resolved once at [`LmbHost::with_io_session`] time and every op
-/// reuses it under the single fabric lock the enclosing scope holds.
+/// reuses it under the seal scope the enclosing closure holds.
 ///
 /// The session is only ever lent to the caller's closure — it borrows
-/// the locked `FabricManager`, so it cannot outlive the scope and no
-/// lock guard ever escapes. Bounds are still checked per op against
-/// the allocation's size; what the session removes is the per-op mmid
-/// lookup and lock/unlock pair of the unbatched
-/// [`LmbHost::write`]/[`LmbHost::read`].
+/// the sealed `FabricManager`, so it cannot outlive the scope and no
+/// guard ever escapes. Bounds are still checked per op against the
+/// allocation's size; what the session removes is the per-op mmid
+/// lookup and seal-check of the unbatched
+/// [`LmbHost::write`]/[`LmbHost::read`]. Ops contend only on the
+/// expander's device lock, never on region or control-plane locks.
 #[derive(Debug)]
 pub struct IoSession<'h> {
-    fm: &'h mut FabricManager,
+    fm: &'h FabricManager,
     mmid: MmId,
     dpa: Dpa,
     size: u64,
@@ -612,7 +598,7 @@ mod tests {
     #[test]
     fn bind_reuses_existing_gfd() {
         let fabric = fabric_with(GIB);
-        let dpid = fabric.with_fm_mut(|fm| fm.attach_gfd()).unwrap().unwrap();
+        let dpid = fabric.with_fm(|fm| fm.attach_gfd()).unwrap().unwrap();
         let host = LmbHost::bind(fabric, GIB).unwrap();
         assert_eq!(host.module().gfd_dpid(), dpid);
     }

@@ -201,7 +201,7 @@ impl LmbModule {
     /// (§3.2: one 256 MB block at a time; large requests lease several).
     fn ensure_capacity(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         space: &mut AddressSpace,
         size: u64,
     ) -> Result<Placement> {
@@ -245,12 +245,13 @@ impl LmbModule {
     /// mapping, CXL consumers a SAT grant plus the GFD DPID.
     pub fn alloc(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         iommu: &mut Iommu,
         space: &mut AddressSpace,
         consumer: impl Into<Consumer>,
         size: u64,
     ) -> Result<LmbAlloc> {
+        fm.seal_check()?;
         match consumer.into() {
             Consumer::Pcie(dev) => self.alloc_pcie(fm, iommu, space, dev, size),
             Consumer::Cxl(dev) => self.alloc_cxl(fm, space, dev, size),
@@ -262,12 +263,13 @@ impl LmbModule {
     /// extent back to the FM.
     pub fn free(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         iommu: &mut Iommu,
         space: &mut AddressSpace,
         consumer: impl Into<Consumer>,
         mmid: MmId,
     ) -> Result<()> {
+        fm.seal_check()?;
         let rec = self.take_record(consumer.into(), mmid)?;
         self.free_inner(fm, iommu, space, rec)
     }
@@ -278,12 +280,13 @@ impl LmbModule {
     /// existing view instead of programming duplicate state.
     pub fn share(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         iommu: &mut Iommu,
         owner: impl Into<Consumer>,
         target: impl Into<Consumer>,
         mmid: MmId,
     ) -> Result<LmbAlloc> {
+        fm.seal_check()?;
         let owner = owner.into();
         let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
         if rec.owner != owner {
@@ -299,7 +302,7 @@ impl LmbModule {
 
     fn alloc_pcie(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         iommu: &mut Iommu,
         space: &mut AddressSpace,
         dev: Bdf,
@@ -341,7 +344,7 @@ impl LmbModule {
 
     fn alloc_cxl(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         space: &mut AddressSpace,
         dev: Spid,
         size: u64,
@@ -387,7 +390,7 @@ impl LmbModule {
     /// sub-allocation, release a drained extent back to the FM.
     fn free_inner(
         &mut self,
-        fm: &mut FabricManager,
+        fm: &FabricManager,
         iommu: &mut Iommu,
         space: &mut AddressSpace,
         rec: AllocRecord,
@@ -466,12 +469,7 @@ impl LmbModule {
 
     /// Grant a CXL target P2P access (no owner check — the unified
     /// [`LmbModule::share`] performs it).
-    fn share_to_cxl(
-        &mut self,
-        fm: &mut FabricManager,
-        target: Spid,
-        mmid: MmId,
-    ) -> Result<LmbAlloc> {
+    fn share_to_cxl(&mut self, fm: &FabricManager, target: Spid, mmid: MmId) -> Result<LmbAlloc> {
         let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
         let placement = rec.placement;
         // idempotence: an existing grant (owner or prior share) is
@@ -546,7 +544,7 @@ mod tests {
     }
 
     fn rig() -> Rig {
-        let mut fm = FabricManager::new(
+        let fm = FabricManager::new(
             PbrSwitch::new(16),
             Expander::new(ExpanderConfig { dram_capacity: 4 * GIB, ..Default::default() }),
         );
@@ -566,11 +564,11 @@ mod tests {
 
     impl Rig {
         fn alloc(&mut self, consumer: impl Into<Consumer>, size: u64) -> Result<LmbAlloc> {
-            self.module.alloc(&mut self.fm, &mut self.iommu, &mut self.space, consumer, size)
+            self.module.alloc(&self.fm, &mut self.iommu, &mut self.space, consumer, size)
         }
 
         fn free(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
-            self.module.free(&mut self.fm, &mut self.iommu, &mut self.space, consumer, mmid)
+            self.module.free(&self.fm, &mut self.iommu, &mut self.space, consumer, mmid)
         }
 
         fn share(
@@ -579,7 +577,7 @@ mod tests {
             target: impl Into<Consumer>,
             mmid: MmId,
         ) -> Result<LmbAlloc> {
-            self.module.share(&mut self.fm, &mut self.iommu, owner, target, mmid)
+            self.module.share(&self.fm, &mut self.iommu, owner, target, mmid)
         }
     }
 

@@ -26,11 +26,13 @@
 //! * **Execution** — the queue owner (an
 //!   [`LmbHost`](crate::lmb::LmbHost) for its own lane, the
 //!   [`Cluster`](crate::cluster::Cluster) across slots, or the
-//!   [`FmService`](crate::lmb::service::FmService) actor loop) executes
-//!   each scheduled group under **one fabric lock acquisition** via
+//!   [`FmService`](crate::lmb::service::FmService) worker pool) executes
+//!   each scheduled group via
 //!   [`LmbHost::execute_requests`](crate::lmb::LmbHost::execute_requests)
-//!   and posts a [`Completion`] per ticket with
-//!   [`AllocQueue::complete`].
+//!   — the sharded FM takes per-region locks per request, so
+//!   disjoint-region groups execute concurrently — and posts a
+//!   [`Completion`] per ticket with [`AllocQueue::complete`] (or, from
+//!   a worker thread, a [`CompletionPoster`]).
 //! * **Completion** — completions land in a completion table shared
 //!   with every [`SubmitHandle`], so callers on *any* thread observe
 //!   progress with `poll`, claim results with `take` (tickets are
@@ -387,6 +389,31 @@ impl SubmitHandle {
     }
 }
 
+/// Cloneable, `Send` completion endpoint onto a queue's shared table:
+/// what an [`FmService`](crate::lmb::service::FmService) worker thread
+/// uses to post completions for the groups it executed while the
+/// service loop keeps scheduling. Completed/cancelled tallies land in
+/// the queue's shared counters, so [`AllocQueue::stats`] observes
+/// worker-posted completions exactly like owner-posted ones.
+#[derive(Debug, Clone)]
+pub(crate) struct CompletionPoster {
+    table: Arc<CompletionTable>,
+    completed: Arc<AtomicU64>,
+    cancelled: Arc<AtomicU64>,
+}
+
+impl CompletionPoster {
+    /// Post one completion; wakes any [`SubmitHandle::wait`]er on it.
+    pub(crate) fn post(&self, completion: Completion) {
+        if completion.is_cancelled() {
+            self.cancelled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.table.post(completion);
+    }
+}
+
 /// The queued-allocation scheduler. See the module docs for the
 /// submission → schedule → execute → complete lifecycle.
 #[derive(Debug)]
@@ -406,7 +433,12 @@ pub struct AllocQueue {
     intake_rx: Receiver<Submission>,
     /// First lane the next tick serves (rotates for fairness).
     rr_start: usize,
+    /// Owner-side counters (`submitted`, `ticks`); the completion
+    /// tallies live in the shared atomics below so worker threads
+    /// posting through a [`CompletionPoster`] are counted too.
     stats: QueueStats,
+    completed: Arc<AtomicU64>,
+    cancelled: Arc<AtomicU64>,
 }
 
 impl Default for AllocQueue {
@@ -437,6 +469,18 @@ impl AllocQueue {
             intake_rx: rx,
             rr_start: 0,
             stats: QueueStats::default(),
+            completed: Arc::new(AtomicU64::new(0)),
+            cancelled: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// A cloneable completion endpoint onto this queue's shared table
+    /// (worker threads of the service loop).
+    pub(crate) fn poster(&self) -> CompletionPoster {
+        CompletionPoster {
+            table: Arc::clone(&self.table),
+            completed: Arc::clone(&self.completed),
+            cancelled: Arc::clone(&self.cancelled),
         }
     }
 
@@ -550,9 +594,9 @@ impl AllocQueue {
     /// [`SubmitHandle::wait`]er on the ticket.
     pub fn complete(&mut self, completion: Completion) {
         if completion.is_cancelled() {
-            self.stats.cancelled += 1;
+            self.cancelled.fetch_add(1, Ordering::Relaxed);
         } else {
-            self.stats.completed += 1;
+            self.completed.fetch_add(1, Ordering::Relaxed);
         }
         self.table.post(completion);
     }
@@ -570,7 +614,7 @@ impl AllocQueue {
         };
         let n = queue.len();
         for (ticket, _) in queue {
-            self.stats.cancelled += 1;
+            self.cancelled.fetch_add(1, Ordering::Relaxed);
             self.table.post(Completion {
                 ticket,
                 lane,
@@ -609,7 +653,12 @@ impl AllocQueue {
     }
 
     pub fn stats(&self) -> QueueStats {
-        self.stats
+        QueueStats {
+            submitted: self.stats.submitted,
+            completed: self.completed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            ticks: self.stats.ticks,
+        }
     }
 }
 

@@ -10,8 +10,10 @@
 //! 1. drains submissions from every handle (the MPSC pump),
 //! 2. schedules them with the rotating per-lane quota (fair across
 //!    hosts, deterministic for a fixed arrival order),
-//! 3. executes each host's scheduled group under **one fabric lock
-//!    acquisition** ([`LmbHost::execute_requests`]), and
+//! 3. fans each host's scheduled group out to a **worker pool** — lane
+//!    `i` is pinned to worker `i % W`, so one host's requests stay
+//!    ordered while disjoint hosts execute concurrently against the
+//!    sharded fabric ([`LmbHost::execute_requests`]) — and
 //! 4. publishes [`Completion`]s through the completion table the
 //!    handles read (`poll` / `take` / blocking `wait`) from any thread.
 //!
@@ -64,8 +66,13 @@
 //! assert_eq!(hosts.iter().map(|h| h.module().live_allocs()).sum::<usize>(), 2);
 //! ```
 
+use std::sync::mpsc::{channel, Receiver, Sender};
+
 use crate::error::{Error, Result};
-use crate::lmb::queue::{AllocQueue, QueueStats, Scheduled, SubmitHandle, DEFAULT_LANE_QUOTA};
+use crate::lmb::queue::{
+    AllocQueue, Completion, CompletionPoster, QueueStats, Scheduled, SubmitHandle,
+    DEFAULT_LANE_QUOTA,
+};
 use crate::lmb::LmbHost;
 
 /// The FM-side actor owning hosts and the execute half of an
@@ -86,6 +93,9 @@ pub struct FmService {
     /// execute against reclaimed leases).
     slots: Vec<Option<LmbHost>>,
     lane_quota: usize,
+    /// Worker-pool width for [`FmService::run`]; `None` = size to the
+    /// machine (`available_parallelism`, capped at the lane count).
+    workers: Option<usize>,
 }
 
 impl FmService {
@@ -97,6 +107,7 @@ impl FmService {
             queue: AllocQueue::new(),
             slots: hosts.into_iter().map(Some).collect(),
             lane_quota: DEFAULT_LANE_QUOTA,
+            workers: None,
         }
     }
 
@@ -104,6 +115,16 @@ impl FmService {
     /// quantum).
     pub fn with_lane_quota(mut self, quota: usize) -> Self {
         self.lane_quota = quota.max(1);
+        self
+    }
+
+    /// Fix the [`FmService::run`] worker-pool width. `1` forces the
+    /// serial actor loop (the pre-sharding behavior — the baseline the
+    /// scaling bench compares against); the default sizes the pool to
+    /// the machine, capped at the lane count. Manual [`FmService::tick`]
+    /// driving is always serial regardless of this setting.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
         self
     }
 
@@ -195,8 +216,10 @@ impl FmService {
 
     /// One scheduling tick: pump the intake, pop up to the per-lane
     /// quota from every lane (rotating order), execute each lane's
-    /// group against its host under a single fabric lock, and post
-    /// completions. Returns how many requests were serviced.
+    /// group against its host, and post completions. Always serial —
+    /// the deterministic replay path the scenario engine and the
+    /// queued≡sync equivalence driver build on. Returns how many
+    /// requests were serviced.
     pub fn tick(&mut self) -> usize {
         let mut rest = self.queue.schedule(self.lane_quota);
         let total = rest.len();
@@ -245,25 +268,143 @@ impl FmService {
         }
     }
 
-    /// The actor loop. Closes the intake (no new handles), then
+    /// The service loop. Closes the intake (no new handles), then
     /// alternates draining ticks with parking on the channel; exits
     /// when every [`SubmitHandle`] has been dropped and all accepted
-    /// submissions have completed, returning the hosts for final
-    /// inspection.
+    /// submissions have completed, returning the hosts (in lane order)
+    /// for final inspection.
+    ///
+    /// With more than one worker (see [`FmService::with_workers`]) the
+    /// loop becomes a scheduler thread fanning lane groups out to a
+    /// pool: lane `i` is pinned to worker `i % W`, so per-lane FIFO
+    /// order is preserved while disjoint hosts' groups execute
+    /// concurrently against the sharded fabric. Scheduling (which
+    /// requests run, in which per-lane order) stays deterministic for
+    /// a fixed arrival order; only cross-lane completion interleaving
+    /// varies, exactly as it already does for threaded submitters.
     pub fn run(mut self) -> Vec<LmbHost> {
         self.queue.close_intake();
-        loop {
-            // drain everything currently visible
+        let workers = self
+            .workers
+            .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, usize::from))
+            .min(self.slots.len())
+            .max(1);
+        if workers <= 1 {
+            loop {
+                // drain everything currently visible
+                while self.tick() > 0 {}
+                // park until new work arrives or the last handle drops
+                if !self.queue.pump_blocking() {
+                    break;
+                }
+            }
+            // the disconnect may have raced a final burst into the buffer
             while self.tick() > 0 {}
-            // park until new work arrives or the last handle drops
-            if !self.queue.pump_blocking() {
-                break;
+            return self.slots.into_iter().flatten().collect();
+        }
+        self.run_pool(workers)
+    }
+
+    /// Schedule one batch and route each lane group to its pinned
+    /// worker; returns how many requests were dispatched. A closed
+    /// worker channel means that worker panicked — its groups' waiters
+    /// are woken by the queue teardown, so the send error is dropped.
+    fn dispatch(
+        queue: &mut AllocQueue,
+        lane_quota: usize,
+        txs: &[Sender<(usize, Vec<Scheduled>)>],
+    ) -> usize {
+        let mut rest = queue.schedule(lane_quota);
+        let total = rest.len();
+        while !rest.is_empty() {
+            let lane = rest[0].lane;
+            let cut = rest.iter().position(|s| s.lane != lane).unwrap_or(rest.len());
+            let tail = rest.split_off(cut);
+            let group = std::mem::replace(&mut rest, tail);
+            let _ = txs[lane % txs.len()].send((lane, group));
+        }
+        total
+    }
+
+    fn run_pool(self, workers: usize) -> Vec<LmbHost> {
+        let FmService { mut queue, slots, lane_quota, .. } = self;
+        let poster = queue.poster();
+        // static lane→worker partition: worker w owns lanes ≡ w (mod W)
+        let mut shards: Vec<Vec<(usize, Option<LmbHost>)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (lane, slot) in slots.into_iter().enumerate() {
+            shards[lane % workers].push((lane, slot));
+        }
+        let mut returned: Vec<(usize, Option<LmbHost>)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut txs: Vec<Sender<(usize, Vec<Scheduled>)>> = Vec::with_capacity(workers);
+            let mut joins = Vec::with_capacity(workers);
+            for shard in shards {
+                let (tx, rx) = channel();
+                let poster = poster.clone();
+                joins.push(scope.spawn(move || worker_loop(shard, rx, poster)));
+                txs.push(tx);
+            }
+            loop {
+                while Self::dispatch(&mut queue, lane_quota, &txs) > 0 {}
+                if !queue.pump_blocking() {
+                    break;
+                }
+            }
+            // the disconnect may have raced a final burst into the buffer
+            while Self::dispatch(&mut queue, lane_quota, &txs) > 0 {}
+            // closing the channels drains the workers and hands the
+            // host slots back
+            drop(txs);
+            for j in joins {
+                match j.join() {
+                    Ok(shard) => returned.extend(shard),
+                    Err(panic) => std::panic::resume_unwind(panic),
+                }
+            }
+        });
+        returned.sort_by_key(|&(lane, _)| lane);
+        returned.into_iter().filter_map(|(_, slot)| slot).collect()
+    }
+}
+
+/// One pool worker: executes lane groups against the hosts it owns and
+/// posts completions from its own thread. Mirrors the three
+/// [`FmService::tick`] execute branches (live host / crashed lane /
+/// forged lane) so pooled and serial runs complete identically.
+fn worker_loop(
+    mut shard: Vec<(usize, Option<LmbHost>)>,
+    rx: Receiver<(usize, Vec<Scheduled>)>,
+    poster: CompletionPoster,
+) -> Vec<(usize, Option<LmbHost>)> {
+    while let Ok((lane, group)) = rx.recv() {
+        match shard.iter_mut().find(|&&mut (l, _)| l == lane) {
+            Some((_, Some(host))) => {
+                for c in host.execute_requests(group) {
+                    poster.post(c);
+                }
+            }
+            Some((_, None)) => {
+                for s in group {
+                    poster.post(Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::Cancelled { ticket: s.ticket.0 }),
+                    });
+                }
+            }
+            None => {
+                for s in group {
+                    poster.post(Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::FabricManager(format!("no host behind lane {lane}"))),
+                    });
+                }
             }
         }
-        // the disconnect may have raced a final burst into the buffer
-        while self.tick() > 0 {}
-        self.slots.into_iter().flatten().collect()
     }
+    shard
 }
 
 #[cfg(test)]
@@ -348,6 +489,69 @@ mod tests {
         for host in &hosts {
             host.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn pooled_run_executes_across_workers_and_returns_hosts_in_lane_order() {
+        let (svc, fabric, dev) = service(4, 4 * GIB);
+        let svc = svc.with_workers(4);
+        let handles: Vec<SubmitHandle> = (0..4).map(|l| svc.handle(l).unwrap()).collect();
+        let fm_thread = std::thread::spawn(move || svc.run());
+        let drivers: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let mut live = Vec::new();
+                    for _ in 0..8 {
+                        let t = h
+                            .submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE })
+                            .unwrap();
+                        live.push(h.wait(t).unwrap().into_alloc().unwrap());
+                    }
+                    for a in live.drain(..4) {
+                        let t = h
+                            .submit(Request::Free { consumer: dev.into(), mmid: a.mmid })
+                            .unwrap();
+                        h.wait(t).unwrap().result.unwrap();
+                    }
+                    live.len()
+                })
+            })
+            .collect();
+        for d in drivers {
+            assert_eq!(d.join().unwrap(), 4, "every driver kept 4 of its 8 allocs");
+        }
+        let hosts = fm_thread.join().unwrap();
+        assert_eq!(hosts.len(), 4);
+        assert!(
+            hosts.windows(2).all(|w| w[0].host() < w[1].host()),
+            "hosts hand back in lane order even though workers finish out of order"
+        );
+        let live: usize = hosts.iter().map(|h| h.module().live_allocs()).sum();
+        assert_eq!(live, 16);
+        for host in &hosts {
+            host.check_invariants().unwrap();
+        }
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pooled_run_cancels_dead_lane_groups() {
+        let (mut svc, fabric, dev) = service(2, GIB);
+        let h0 = svc.handle(0).unwrap();
+        let h1 = svc.handle(1).unwrap();
+        svc.crash_host(0).unwrap();
+        let svc = svc.with_workers(2);
+        let fm_thread = std::thread::spawn(move || svc.run());
+        let doomed = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert!(h0.wait(doomed).unwrap().is_cancelled(), "dead lane cancels at execute time");
+        let ok = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        h1.wait(ok).unwrap().into_alloc().unwrap();
+        drop((h0, h1));
+        let hosts = fm_thread.join().unwrap();
+        assert_eq!(hosts.len(), 1, "the crashed slot is not handed back");
+        assert_eq!(hosts[0].module().live_allocs(), 1);
+        fabric.check_invariants().unwrap();
     }
 
     #[test]

@@ -99,7 +99,7 @@ impl L2pTable {
         first: u64,
         count: u64,
     ) -> Result<()> {
-        fabric.with_fm(|fm| self.load_from_lmb(fm.expander(), dpa, first, count))?
+        fabric.with_fm(|fm| self.load_from_lmb(&fm.expander(), dpa, first, count))?
     }
 
     /// Load entries `[first, first+count)` back from LMB memory.

@@ -17,3 +17,18 @@
 pub mod bench;
 pub mod oracle;
 pub mod prop;
+
+use crate::cxl::fm::FabricRef;
+
+/// Region-poison fault injection: panic a throwaway thread while it
+/// holds `region`'s shard lock — exactly the state an unwound
+/// allocation path leaves behind. The sharded-poison tests use this to
+/// prove one poisoned region quarantines itself without sealing the
+/// fabric or deadlocking disjoint regions. Panics (in the calling
+/// thread) if `region` is out of range.
+pub fn poison_region(fabric: &FabricRef, region: usize) {
+    std::thread::scope(|s| {
+        let poisoner = s.spawn(|| fabric.poison_region_for_test(region)).join();
+        assert!(poisoner.is_err(), "poisoning thread must panic");
+    });
+}

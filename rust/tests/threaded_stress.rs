@@ -14,7 +14,7 @@ use std::thread;
 
 use lmb::cxl::expander::{Expander, ExpanderConfig};
 use lmb::cxl::switch::PbrSwitch;
-use lmb::cxl::types::{Bdf, EXTENT_SIZE, GIB, PAGE_SIZE};
+use lmb::cxl::types::{Bdf, Dpa, EXTENT_SIZE, GIB, PAGE_SIZE};
 use lmb::prelude::*;
 
 const DRIVERS: usize = 4;
@@ -194,4 +194,42 @@ fn threaded_panic_poisons_fabric_and_is_reported_not_fatal() {
     host.check_invariants().unwrap();
     assert_eq!(fabric.available(), before);
     assert_eq!(fabric.leased_to(host.host()), EXTENT_SIZE);
+}
+
+#[test]
+fn threaded_region_poison_quarantines_one_region_not_the_fabric() {
+    // Satellite: under the sharded lock hierarchy a panic while holding
+    // ONE region's lock must surface Error::FabricPoisoned to that
+    // region's waiters — without deadlocking them and without sealing
+    // the fabric or poisoning disjoint regions.
+    let fabric = fabric_gib(4); // 8 regions x 512 MiB
+    let dev = Bdf::new(1, 0, 0);
+    let mut h0 = LmbHost::bind(fabric.clone(), GIB).unwrap();
+    let mut h1 = LmbHost::bind(fabric.clone(), GIB).unwrap();
+    h0.attach_pcie(dev);
+    h1.attach_pcie(dev);
+
+    let a0 = h0.alloc(dev, EXTENT_SIZE).unwrap();
+    assert_eq!(a0.dpa, Dpa(0), "first lease homes in region 0");
+    let a1 = h1.alloc(dev, EXTENT_SIZE).unwrap();
+    assert!(a1.dpa.0 > a0.dpa.0, "contention-aware placement spread to a sibling region");
+
+    lmb::testing::poison_region(&fabric, 0);
+
+    // region 0's waiters get the typed error, not a deadlock or abort
+    assert!(matches!(h0.free(dev, a0.mmid), Err(Error::FabricPoisoned)));
+
+    // disjoint regions keep allocating and freeing: the poisoned shard
+    // is quarantined out of the free view, not fatal
+    let b = h1.alloc(dev, EXTENT_SIZE).unwrap();
+    assert!(b.dpa.0 > a1.dpa.0, "new leases route around the quarantined shard");
+    h1.free(dev, b.mmid).unwrap();
+    h1.free(dev, a1.mmid).unwrap();
+    let c = h0.alloc(dev, EXTENT_SIZE).unwrap();
+    assert!(c.dpa.0 >= EXTENT_SIZE, "even the bitten host allocates again, elsewhere");
+
+    // the fabric as a whole is not sealed: scoped reads and the
+    // poison-tolerant audit still work
+    assert!(fabric.with_fm(|fm| fm.gfd_dpid().is_some()).unwrap());
+    fabric.check_invariants().unwrap();
 }
