@@ -56,7 +56,7 @@ use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{gib_to_bytes, MmId, Spid, GIB};
 use crate::error::{Error, Result};
 use crate::lmb::queue::{
-    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStatus, Request, Scheduled,
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueLimits, QueueStatus, Request, Scheduled,
     SubmitHandle, Ticket, DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::{Consumer, FmService, LmbAlloc, LmbHost};
@@ -99,6 +99,7 @@ pub struct ClusterBuilder {
     hosts: usize,
     lane_quota: usize,
     policy: PlacementPolicy,
+    limits: QueueLimits,
 }
 
 impl Default for ClusterBuilder {
@@ -111,6 +112,7 @@ impl Default for ClusterBuilder {
             hosts: 2,
             lane_quota: DEFAULT_LANE_QUOTA,
             policy: PlacementPolicy::ContentionAware,
+            limits: QueueLimits::default(),
         }
     }
 }
@@ -166,17 +168,27 @@ impl ClusterBuilder {
         self
     }
 
+    /// Per-lane admission budgets for the cluster queue (and any
+    /// [`FmService`] built from it): op-depth and queued-byte caps
+    /// enforced at submit time (backpressure).
+    pub fn queue_limits(mut self, limits: QueueLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
     pub fn build(self) -> Result<Cluster> {
         let fabric = FabricRef::new(FabricManager::new(
             PbrSwitch::new(self.switch_ports),
             Expander::new(self.expander),
         ));
+        let mut queue = AllocQueue::new();
+        queue.set_limits(self.limits);
         let mut cluster = Cluster {
             fabric,
             latency: Fabric::new(self.fabric),
             slots: Vec::new(),
             host_dram: self.host_dram,
-            queue: AllocQueue::new(),
+            queue,
             lane_quota: self.lane_quota,
             policy: self.policy,
         };
@@ -314,13 +326,16 @@ impl Cluster {
     // ---- cluster-wide queued allocation ----
 
     /// Enqueue a request on `slot`'s lane of the cluster queue; errors
-    /// immediately if the slot has no live host. Nothing executes until
-    /// [`Cluster::tick_queue`] / [`Cluster::drain_queue`] (or a
+    /// immediately if the slot has no live host, or with
+    /// [`Error::QueueFull`] / [`Error::BudgetExceeded`] when the lane's
+    /// admission budget ([`ClusterBuilder::queue_limits`]) is spent —
+    /// the owner never blocks on its own backlog. Nothing executes
+    /// until [`Cluster::tick_queue`] / [`Cluster::drain_queue`] (or a
     /// synchronous routed call, whose one-shot drain services the whole
     /// queue).
     pub fn submit(&mut self, slot: usize, request: Request) -> Result<Ticket> {
         self.host(slot)?; // reject routing at a dead/unknown slot
-        Ok(self.queue.submit(slot, request))
+        self.queue.try_submit(slot, request)
     }
 
     /// Where a submission is in its lifecycle.
@@ -553,7 +568,9 @@ impl Cluster {
                 }
             }
         }
-        let svc = FmService::new(hosts).with_lane_quota(self.lane_quota);
+        let svc = FmService::new(hosts)
+            .with_lane_quota(self.lane_quota)
+            .with_limits(self.queue.limits());
         Ok((svc, self.fabric.clone(), self.latency.clone()))
     }
 }

@@ -51,7 +51,7 @@
 
 use std::collections::HashMap;
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{
     Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError,
 };
@@ -247,6 +247,10 @@ pub struct FabricManager {
     /// alias another's — cross-host isolation keys off this.
     next_mmid: AtomicU64,
     stats: LockCounters,
+    /// Pending injected latency strikes (fault plan `slow_region`). Each
+    /// pending strike makes the next placement stall for a bounded spin
+    /// before proceeding — a latency fault, never a correctness fault.
+    slow_region: AtomicU32,
 }
 
 impl FabricManager {
@@ -282,6 +286,37 @@ impl FabricManager {
             capacity,
             next_mmid: AtomicU64::new(1),
             stats: LockCounters::default(),
+            slow_region: AtomicU32::new(0),
+        }
+    }
+
+    /// Arm `n` latency strikes: each makes one subsequent placement
+    /// stall for a bounded spin before touching any lock. Used by the
+    /// fault-injection layer to model a congested region without
+    /// changing any allocation outcome.
+    pub fn inject_slow_region(&self, n: u32) {
+        self.slow_region.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Consume one pending latency strike, if armed. The stall is a
+    /// bounded `yield_now` spin so a slow region can never hang a test.
+    fn consume_slow_region(&self) {
+        let mut cur = self.slow_region.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.slow_region.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    for _ in 0..64 {
+                        std::thread::yield_now();
+                    }
+                    return;
+                }
+                Err(seen) => cur = seen,
+            }
         }
     }
 
@@ -475,6 +510,7 @@ impl FabricManager {
         len: u64,
         policy: PlacementPolicy,
     ) -> Result<Extent> {
+        self.consume_slow_region();
         let mut control = self.control()?;
         if !control.hosts.contains_key(&host) {
             return Err(Error::FabricManager(format!("unknown host {host:?}")));
@@ -994,6 +1030,12 @@ impl FabricRef {
     /// Poison-tolerant read.
     pub fn expander_failed(&self) -> bool {
         self.inner.expander().is_failed()
+    }
+
+    /// [`FabricManager::inject_slow_region`] — arm `n` bounded latency
+    /// strikes against subsequent placements (failure-injection hook).
+    pub fn inject_slow_region(&self, n: u32) {
+        self.inner.inject_slow_region(n)
     }
 
     /// Scoped mutable access to the expander for in-crate data-plane

@@ -41,7 +41,29 @@ pub enum Error {
     /// A queued submission was cancelled before it was scheduled (its
     /// host crashed and the lane was drained — see
     /// [`AllocQueue::cancel_lane`](crate::lmb::queue::AllocQueue::cancel_lane)).
+    /// A submit rejected eagerly because the target lane is already
+    /// dead carries [`NO_TICKET`](crate::lmb::queue::NO_TICKET).
     Cancelled { ticket: u64 },
+
+    /// A lane's bounded intake is at its op-depth limit (backpressure).
+    /// Transient: the queue drains as the service ticks, so a bounded
+    /// retry or a blocking submit is the right response.
+    QueueFull { lane: usize, depth: usize },
+
+    /// A submission would push the lane past its byte budget. Permanent
+    /// for this request: retrying without freeing or shrinking cannot
+    /// succeed, and blocking submits refuse to wait on it.
+    BudgetExceeded { lane: usize, queued_bytes: u64, limit_bytes: u64 },
+
+    /// A queued submission's deadline passed before it executed (or a
+    /// `wait_timeout` elapsed). Terminal for the ticket when posted by
+    /// the service; retryable by re-submitting with a later deadline.
+    TimedOut { ticket: u64 },
+
+    /// The service loop that owned the queue has exited: the intake
+    /// channel is closed and pending completions will never be posted.
+    /// Surfaced instead of blocking forever in `wait`/`submit`.
+    ServiceGone,
 
     /// The shared fabric lock is poisoned: another thread panicked
     /// while holding it, so the `FabricManager` state may be
@@ -79,6 +101,56 @@ pub enum Error {
     Io(std::io::Error),
 }
 
+impl Error {
+    /// Transient-vs-permanent taxonomy for the retry layer.
+    ///
+    /// Transient errors name conditions that can clear on their own —
+    /// the expander coming back from an outage, a quarantined region
+    /// being routed around, a poisoned fabric lock recovered by
+    /// `into_inner`, a bounded intake draining — so `FmService` retries
+    /// them with bounded deterministic backoff before surfacing
+    /// failure. Everything else is permanent for the request that hit
+    /// it: retrying the identical submission cannot succeed.
+    ///
+    /// The match is deliberately exhaustive (no `_` arm): adding an
+    /// `Error` variant without classifying it is a compile error, and
+    /// the taxonomy meta-test in this module pins each arm's value.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            // Clears when the device recovers or placement reroutes.
+            Error::ExpanderFailed(_) => true,
+            // A poisoned lock is recovered on the next `locked()` pass.
+            Error::FabricPoisoned => true,
+            // Backpressure: the lane drains as the service ticks.
+            Error::QueueFull { .. } => true,
+
+            // Capacity/allocator outcomes: stable until a free lands,
+            // which no blind retry performs.
+            Error::OutOfCapacity { .. } => false,
+            Error::AllocFailed { .. } => false,
+            // Protocol misuse and stale handles never self-heal.
+            Error::UnknownMmId(_) => false,
+            Error::StalePlacement { .. } => false,
+            Error::NotOwner { .. } => false,
+            // Terminal ticket states.
+            Error::Cancelled { .. } => false,
+            Error::TimedOut { .. } => false,
+            Error::ServiceGone => false,
+            // Budgets are a property of the request, not the moment.
+            Error::BudgetExceeded { .. } => false,
+            // Access-control denials are policy, not weather.
+            Error::IommuFault { .. } => false,
+            Error::SatViolation { .. } => false,
+            Error::DecodeFault(_) => false,
+            Error::FabricManager(_) => false,
+            Error::Device(_) => false,
+            Error::Config(_) => false,
+            Error::Runtime(_) => false,
+            Error::Io(_) => false,
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -98,6 +170,20 @@ impl fmt::Display for Error {
             }
             Error::Cancelled { ticket } => {
                 write!(f, "queued submission {ticket} cancelled before scheduling")
+            }
+            Error::QueueFull { lane, depth } => {
+                write!(f, "lane {lane} intake full at depth {depth} (backpressure)")
+            }
+            Error::BudgetExceeded { lane, queued_bytes, limit_bytes } => write!(
+                f,
+                "lane {lane} byte budget exceeded: {queued_bytes} B queued against a \
+                 {limit_bytes} B limit"
+            ),
+            Error::TimedOut { ticket } => {
+                write!(f, "submission {ticket} deadline passed before completion")
+            }
+            Error::ServiceGone => {
+                write!(f, "service loop exited: intake closed, completions will never post")
             }
             Error::FabricPoisoned => {
                 write!(f, "fabric lock poisoned: a thread panicked while holding it")
@@ -164,5 +250,105 @@ mod tests {
         let e: Error = io.into();
         assert!(std::error::Error::source(&e).is_some());
         assert!(e.to_string().contains("gone"));
+    }
+
+    /// One representative value per variant. Kept next to the taxonomy
+    /// so that growing `Error` forces both lists (and `is_transient`'s
+    /// exhaustive match) to grow in the same diff.
+    fn every_variant() -> Vec<Error> {
+        vec![
+            Error::OutOfCapacity { requested: 1, available: 0 },
+            Error::AllocFailed { requested: 1, reason: "frag".into() },
+            Error::UnknownMmId(MmId(1)),
+            Error::StalePlacement { extent: 1 },
+            Error::NotOwner { mmid: MmId(1) },
+            Error::Cancelled { ticket: 1 },
+            Error::QueueFull { lane: 0, depth: 1 },
+            Error::BudgetExceeded { lane: 0, queued_bytes: 2, limit_bytes: 1 },
+            Error::TimedOut { ticket: 1 },
+            Error::ServiceGone,
+            Error::FabricPoisoned,
+            Error::IommuFault { bdf: "0:0.0".into(), hpa: Hpa(0), reason: "no map".into() },
+            Error::SatViolation { spid: Spid(1), dpid: Dpid(1) },
+            Error::DecodeFault("x".into()),
+            Error::ExpanderFailed("x".into()),
+            Error::FabricManager("x".into()),
+            Error::Device("x".into()),
+            Error::Config("x".into()),
+            Error::Runtime("x".into()),
+            Error::Io(std::io::Error::other("x")),
+        ]
+    }
+
+    /// The oracle: a second exhaustive match, written as the *intended*
+    /// classification. `is_transient` drifting from it (or a new
+    /// variant missing from `every_variant`) fails here; a new variant
+    /// missing from either match refuses to compile.
+    fn expected_transient(e: &Error) -> bool {
+        match e {
+            Error::ExpanderFailed(_) | Error::FabricPoisoned | Error::QueueFull { .. } => true,
+            Error::OutOfCapacity { .. }
+            | Error::AllocFailed { .. }
+            | Error::UnknownMmId(_)
+            | Error::StalePlacement { .. }
+            | Error::NotOwner { .. }
+            | Error::Cancelled { .. }
+            | Error::TimedOut { .. }
+            | Error::ServiceGone
+            | Error::BudgetExceeded { .. }
+            | Error::IommuFault { .. }
+            | Error::SatViolation { .. }
+            | Error::DecodeFault(_)
+            | Error::FabricManager(_)
+            | Error::Device(_)
+            | Error::Config(_)
+            | Error::Runtime(_)
+            | Error::Io(_) => false,
+        }
+    }
+
+    #[test]
+    fn every_error_variant_is_classified() {
+        let all = every_variant();
+        // Debug names double as a uniqueness check that the sample set
+        // really covers distinct variants (not one variant twice).
+        let mut names: Vec<String> = all
+            .iter()
+            .map(|e| {
+                let d = format!("{e:?}");
+                d.split(|c: char| c == ' ' || c == '(' || c == '{')
+                    .next()
+                    .unwrap_or_default()
+                    .to_string()
+            })
+            .collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate variant in every_variant()");
+
+        for e in &all {
+            assert_eq!(
+                e.is_transient(),
+                expected_transient(e),
+                "taxonomy drift for {e:?}"
+            );
+        }
+        // Spot-pin the load-bearing members of each class.
+        assert!(Error::ExpanderFailed("outage".into()).is_transient());
+        assert!(Error::QueueFull { lane: 3, depth: 64 }.is_transient());
+        assert!(!Error::BudgetExceeded { lane: 0, queued_bytes: 9, limit_bytes: 8 }.is_transient());
+        assert!(!Error::ServiceGone.is_transient());
+        assert!(!Error::TimedOut { ticket: 7 }.is_transient());
+    }
+
+    #[test]
+    fn new_variant_displays_are_actionable() {
+        let e = Error::QueueFull { lane: 2, depth: 128 };
+        assert!(e.to_string().contains("backpressure"), "{e}");
+        let e = Error::BudgetExceeded { lane: 1, queued_bytes: 4096, limit_bytes: 1024 };
+        assert!(e.to_string().contains("byte budget"), "{e}");
+        let e = Error::TimedOut { ticket: 42 };
+        assert!(e.to_string().contains("deadline"), "{e}");
+        assert!(Error::ServiceGone.to_string().contains("intake closed"));
     }
 }

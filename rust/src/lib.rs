@@ -149,6 +149,56 @@
 //! cancellation is terminal: `poll` keeps answering `Cancelled` even
 //! after the completion is taken.
 //!
+//! ## Robustness model
+//!
+//! The submission plane is **bounded and fault-tolerant by
+//! construction** — misbehaving tenants, overdue work and injected
+//! faults surface as typed errors or terminal completions, never as
+//! unbounded queues or hangs:
+//!
+//! * **Backpressure** — every lane's intake is bounded by
+//!   [`lmb::queue::QueueLimits`] (op-count *and* byte budgets, charged
+//!   at submit while work is queued, released when it is scheduled or
+//!   resolved). [`lmb::SubmitHandle::try_submit`] never blocks: a full
+//!   lane is [`error::Error::QueueFull`], an oversized or over-budget
+//!   request is [`error::Error::BudgetExceeded`]. The blocking
+//!   [`lmb::SubmitHandle::submit`] parks until admission instead. The
+//!   queue *owner* (the thread that drains it) is exempt from blocking
+//!   admission — blocking there would deadlock — so `Cluster::submit`
+//!   uses the non-blocking path. The payoff is the flooding-tenant
+//!   bound gated in CI (`benches/qos_isolation.rs`, `BENCH_qos.json`):
+//!   a victim lane's p99 stays within 3x its quiet baseline while a
+//!   neighbour floods its own lane.
+//! * **Deadlines** — submissions may carry a
+//!   [`sim::time::SimTime`] deadline
+//!   ([`lmb::SubmitHandle::try_submit_with_deadline`]); the service
+//!   expires overdue tickets at the top of every
+//!   [`lmb::FmService::tick_at`] with the terminal
+//!   [`error::Error::TimedOut`] before scheduling new work, and
+//!   [`lmb::SubmitHandle::wait_timeout`] bounds the waiter's side.
+//! * **Transient vs permanent** — [`error::Error::is_transient`] is
+//!   the crate-wide taxonomy: expander outages, fabric poisoning and
+//!   full queues are worth retrying; everything else is permanent.
+//!   [`lmb::FmService`] retries transient group failures under a
+//!   bounded, deterministic [`lmb::RetryPolicy`] (exponential backoff
+//!   expressed as yield counts — no clocks), then surfaces the typed
+//!   error. `retries_performed()` counts the heals.
+//! * **Liveness of the contract** — [`lmb::SubmitHandle::wait`] on a
+//!   ticket whose service has been dropped returns
+//!   [`error::Error::ServiceGone`] instead of parking forever, and
+//!   retargeting a handle onto a crashed lane is an eager
+//!   [`error::Error::Cancelled`].
+//! * **Deterministic fault injection** — [`lmb::FaultPlan`] arms any
+//!   of the five declared [`lmb::FaultPoint`]s (`intake_drop`,
+//!   `mid_group_panic`, `expander_nak`, `slow_region`,
+//!   `crash_between`) at a per-million strike rate. Strikes are a pure
+//!   function of (seed, fault point, opportunity index) — no RNG
+//!   state, no clocks — so a faulty history replays bit-for-bit
+//!   (`tests/fault_matrix.rs` proves it per point). Scenarios arm
+//!   plans declaratively (`[fault_plan]` in the descriptor, or the
+//!   `LMB_FAULT_POINT`/`LMB_FAULT_RATE_PPM` env override CI sweeps in
+//!   its fault-matrix job).
+//!
 //! ## Scenario engine
 //!
 //! [`scenario`] replays declarative million-tenant workloads against
@@ -225,13 +275,14 @@ pub mod prelude {
     pub use crate::cxl::types::*;
     pub use crate::error::{Error, Result};
     pub use crate::lmb::queue::{
-        AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request,
-        SubmitHandle, Ticket,
+        AllocQueue, Completion, Outcome, PlacementPolicy, QueueLimits, QueueStats, QueueStatus,
+        Request, SubmitHandle, Ticket, NO_TICKET,
     };
     pub use crate::lmb::{
-        Consumer, FmService, IoSession, LmbAlloc, LmbHost, LmbModule, LmbRegion,
+        Consumer, FaultPlan, FaultPoint, FmService, IoSession, LmbAlloc, LmbHost, LmbModule,
+        LmbRegion, RetryPolicy,
     };
-    pub use crate::scenario::{ScenarioHarness, ScenarioReport, ScenarioSpec};
+    pub use crate::scenario::{FaultPlanSpec, ScenarioHarness, ScenarioReport, ScenarioSpec};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};
     pub use crate::sim::time::SimTime;
     pub use crate::ssd::spec::SsdSpec;

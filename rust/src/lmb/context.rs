@@ -241,6 +241,20 @@ impl LmbHost {
         self.queue.submit(0, request)
     }
 
+    /// [`LmbHost::submit`] with a completion deadline: if the request
+    /// is still queued when the service clock passes `deadline`
+    /// (see [`FmService::tick_at`](crate::lmb::FmService::tick_at) /
+    /// `AllocQueue::expire_due`), it completes with
+    /// [`Error::TimedOut`](crate::error::Error::TimedOut) instead of
+    /// executing.
+    pub fn submit_with_deadline(
+        &mut self,
+        request: Request,
+        deadline: crate::sim::SimTime,
+    ) -> Ticket {
+        self.queue.submit_with_deadline(0, request, deadline)
+    }
+
     /// Where a submission is in its lifecycle.
     pub fn poll_submission(&self, ticket: Ticket) -> QueueStatus {
         self.queue.poll(ticket)

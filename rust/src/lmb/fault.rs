@@ -1,0 +1,303 @@
+//! Deterministic fault injection for the submission plane.
+//!
+//! A [`FaultPlan`] is a seeded schedule of failures threaded through
+//! [`FmService`](crate::lmb::service::FmService): each *fault point*
+//! names a place in the schedule→execute pipeline where the plan may
+//! strike, and whether it strikes on a given opportunity is a pure
+//! function of `(seed, point, opportunity index)` — no clocks, no OS
+//! randomness — so a red run replays bit-for-bit from its seed. The
+//! scenario engine exposes the same knobs declaratively
+//! (`[fault_plan]` in a descriptor) and the CI fault matrix forces one
+//! point at a time via `LMB_FAULT_POINT`/`LMB_FAULT_RATE_PPM`.
+//!
+//! The catalog (see the "Robustness model" section in the crate docs):
+//!
+//! | point | strikes where | observable outcome |
+//! |---|---|---|
+//! | `intake_drop` | after scheduling, before dispatch | ticket completes `Err(Cancelled)` |
+//! | `mid_group_panic` | halfway through a lane group | tail of the group completes `Err(FabricPoisoned)` |
+//! | `expander_nak` | first execution attempt | `Err(ExpanderFailed)`, retried as transient |
+//! | `slow_region` | before a group executes | next fabric allocation stalls briefly |
+//! | `crash_between` | between schedule and execute | whole group cancelled, host crashed |
+
+use crate::error::Error;
+
+/// A place in the submission pipeline where a [`FaultPlan`] may strike.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultPoint {
+    /// Drop a scheduled submission on the floor (completes cancelled).
+    IntakeDrop,
+    /// Fail the back half of a lane group as if a worker panicked
+    /// mid-batch while holding fabric state (poisoned-then-recovered).
+    MidGroupPanic,
+    /// NAK the first execution attempt with a transient expander error
+    /// (exercises the retry/backoff path end to end).
+    ExpanderNak,
+    /// Make the next fabric allocation stall briefly (a slow region,
+    /// not a failed one — latency fault, not an error).
+    SlowRegion,
+    /// Crash the group's host between schedule and execute — the
+    /// crash-reclaim *race* the scenario ROADMAP item asks for.
+    CrashBetween,
+}
+
+impl FaultPoint {
+    /// Every declared point, in catalog order. The CI fault matrix
+    /// iterates this list; keep it in sync with the enum.
+    pub const ALL: [FaultPoint; 5] = [
+        FaultPoint::IntakeDrop,
+        FaultPoint::MidGroupPanic,
+        FaultPoint::ExpanderNak,
+        FaultPoint::SlowRegion,
+        FaultPoint::CrashBetween,
+    ];
+
+    /// Stable wire name (descriptors, `LMB_FAULT_POINT`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPoint::IntakeDrop => "intake_drop",
+            FaultPoint::MidGroupPanic => "mid_group_panic",
+            FaultPoint::ExpanderNak => "expander_nak",
+            FaultPoint::SlowRegion => "slow_region",
+            FaultPoint::CrashBetween => "crash_between",
+        }
+    }
+
+    /// Parse a wire name back to a point.
+    pub fn from_name(s: &str) -> Result<FaultPoint, Error> {
+        FaultPoint::ALL
+            .iter()
+            .copied()
+            .find(|p| p.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = FaultPoint::ALL.iter().map(|p| p.name()).collect();
+                Error::Config(format!(
+                    "unknown fault point '{s}' (expected one of {})",
+                    names.join(", ")
+                ))
+            })
+    }
+
+    fn id(&self) -> u64 {
+        match self {
+            FaultPoint::IntakeDrop => 1,
+            FaultPoint::MidGroupPanic => 2,
+            FaultPoint::ExpanderNak => 3,
+            FaultPoint::SlowRegion => 4,
+            FaultPoint::CrashBetween => 5,
+        }
+    }
+}
+
+/// Per-point state: enabled rate plus deterministic progress counters.
+#[derive(Debug, Clone, Copy, Default)]
+struct PointState {
+    /// Strike probability in parts-per-million (0 = disabled).
+    rate_ppm: u32,
+    /// Opportunities seen so far (the deterministic "time" axis).
+    seq: u64,
+    /// Opportunities that struck.
+    strikes: u64,
+}
+
+/// A seeded, deterministic schedule of injected faults.
+///
+/// `strike(point)` advances that point's opportunity counter and
+/// returns whether this opportunity fails; the decision hashes
+/// `(seed, point id, seq)` through SplitMix64 and compares against the
+/// enabled rate, so two plans built with the same seed and rates make
+/// identical decisions in the same call order.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    points: [PointState; FaultPoint::ALL.len()],
+    /// Remaining host crashes `CrashBetween` may perform. Crashing is
+    /// irreversible inside one service, so it is budgeted (default 1)
+    /// rather than rate-unbounded — otherwise a high rate kills every
+    /// lane and the plan stops observing anything.
+    crash_budget: u32,
+}
+
+impl FaultPlan {
+    /// A plan with every point disabled. Enable points with
+    /// [`enable`](Self::enable).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, points: [PointState::default(); 5], crash_budget: 1 }
+    }
+
+    /// Enable `point` at `rate_ppm` parts-per-million per opportunity
+    /// (1_000_000 = every opportunity strikes).
+    pub fn enable(mut self, point: FaultPoint, rate_ppm: u32) -> Self {
+        self.points[Self::slot(point)].rate_ppm = rate_ppm.min(1_000_000);
+        self
+    }
+
+    /// Cap how many hosts [`FaultPoint::CrashBetween`] may crash.
+    pub fn with_crash_budget(mut self, budget: u32) -> Self {
+        self.crash_budget = budget;
+        self
+    }
+
+    fn slot(point: FaultPoint) -> usize {
+        FaultPoint::ALL.iter().position(|p| *p == point).expect("point is in ALL")
+    }
+
+    /// SplitMix64 finalizer — the same zero-dependency mixer the DES
+    /// core uses for stream splitting.
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Present one opportunity at `point`; returns true if it strikes.
+    /// Deterministic in `(seed, point, call index)`; a disabled point
+    /// still advances its counter so enabling it later in a re-run
+    /// does not shift other points' decisions.
+    pub fn strike(&mut self, point: FaultPoint) -> bool {
+        let slot = Self::slot(point);
+        let seq = self.points[slot].seq;
+        self.points[slot].seq += 1;
+        let rate = self.points[slot].rate_ppm;
+        if rate == 0 {
+            return false;
+        }
+        if point == FaultPoint::CrashBetween && self.crash_budget == 0 {
+            return false;
+        }
+        let h = Self::mix(self.seed ^ point.id().wrapping_mul(0xa076_1d64_78bd_642f) ^ seq);
+        let hit = (h % 1_000_000) < rate as u64;
+        if hit {
+            self.points[slot].strikes += 1;
+            if point == FaultPoint::CrashBetween {
+                self.crash_budget -= 1;
+            }
+        }
+        hit
+    }
+
+    /// Total strikes across all points (for "fault actually fired"
+    /// asserts in the matrix tests).
+    pub fn strikes(&self) -> u64 {
+        self.points.iter().map(|p| p.strikes).sum()
+    }
+
+    /// Strikes for one point.
+    pub fn strikes_at(&self, point: FaultPoint) -> u64 {
+        self.points[Self::slot(point)].strikes
+    }
+
+    /// Opportunities presented to one point (struck or not).
+    pub fn opportunities_at(&self, point: FaultPoint) -> u64 {
+        self.points[Self::slot(point)].seq
+    }
+}
+
+/// Bounded deterministic retry policy for transient failures inside
+/// `FmService` (see [`Error::is_transient`]).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total execution attempts per submission (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff between attempts, in scheduler yields: attempt `k`
+    /// (0-based retry index) backs off `base << k` yields, capped.
+    /// Jitter-free by design — backoff is part of the deterministic
+    /// replay, not an entropy source.
+    pub backoff_base: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_base: 4 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff (in yields) before 0-based retry `k`, capped at 4096.
+    pub fn backoff_yields(&self, k: u32) -> u32 {
+        // Widen before shifting: `u32 << 30` silently drops bits, which
+        // would wrap a large backoff back to zero instead of capping.
+        let shifted = (self.backoff_base as u64) << k.min(32);
+        shifted.min(4096) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_reject_unknowns() {
+        for p in FaultPoint::ALL {
+            assert_eq!(FaultPoint::from_name(p.name()).unwrap(), p);
+        }
+        let err = FaultPoint::from_name("warp_core_breach").unwrap_err();
+        assert!(err.to_string().contains("unknown fault point"));
+        assert!(err.to_string().contains("intake_drop"));
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let mut a = FaultPlan::new(0xfa17).enable(FaultPoint::ExpanderNak, 250_000);
+        let mut b = FaultPlan::new(0xfa17).enable(FaultPoint::ExpanderNak, 250_000);
+        let da: Vec<bool> = (0..256).map(|_| a.strike(FaultPoint::ExpanderNak)).collect();
+        let db: Vec<bool> = (0..256).map(|_| b.strike(FaultPoint::ExpanderNak)).collect();
+        assert_eq!(da, db);
+        assert!(a.strikes() > 0, "a 25% rate over 256 opportunities must strike");
+        assert!(a.strikes() < 256, "and must not strike every time");
+        assert_eq!(a.strikes_at(FaultPoint::ExpanderNak), a.strikes());
+        assert_eq!(a.opportunities_at(FaultPoint::ExpanderNak), 256);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = FaultPlan::new(1).enable(FaultPoint::IntakeDrop, 500_000);
+        let mut b = FaultPlan::new(2).enable(FaultPoint::IntakeDrop, 500_000);
+        let da: Vec<bool> = (0..128).map(|_| a.strike(FaultPoint::IntakeDrop)).collect();
+        let db: Vec<bool> = (0..128).map(|_| b.strike(FaultPoint::IntakeDrop)).collect();
+        assert_ne!(da, db, "distinct seeds should disagree somewhere in 128 draws");
+    }
+
+    #[test]
+    fn disabled_points_never_strike_but_still_count() {
+        let mut plan = FaultPlan::new(7);
+        for _ in 0..64 {
+            assert!(!plan.strike(FaultPoint::SlowRegion));
+        }
+        assert_eq!(plan.opportunities_at(FaultPoint::SlowRegion), 64);
+        assert_eq!(plan.strikes(), 0);
+    }
+
+    #[test]
+    fn crash_budget_caps_crash_between() {
+        let mut plan =
+            FaultPlan::new(3).enable(FaultPoint::CrashBetween, 1_000_000).with_crash_budget(2);
+        let strikes: usize =
+            (0..32).map(|_| plan.strike(FaultPoint::CrashBetween) as usize).sum();
+        assert_eq!(strikes, 2, "budget of 2 at a certain rate strikes exactly twice");
+        // Other points are not budgeted.
+        let mut plan = FaultPlan::new(3).enable(FaultPoint::IntakeDrop, 1_000_000);
+        let strikes: usize = (0..32).map(|_| plan.strike(FaultPoint::IntakeDrop) as usize).sum();
+        assert_eq!(strikes, 32);
+    }
+
+    #[test]
+    fn rate_extremes_behave() {
+        let mut always = FaultPlan::new(9).enable(FaultPoint::MidGroupPanic, 1_000_000);
+        assert!((0..64).all(|_| always.strike(FaultPoint::MidGroupPanic)));
+        let mut never = FaultPlan::new(9).enable(FaultPoint::MidGroupPanic, 0);
+        assert!((0..64).all(|_| !never.strike(FaultPoint::MidGroupPanic)));
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.backoff_yields(0), 4);
+        assert_eq!(p.backoff_yields(1), 8);
+        assert_eq!(p.backoff_yields(10), 4096, "cap holds");
+        assert_eq!(p.backoff_yields(31), 4096, "shift overflow saturates to the cap");
+        let widths: Vec<u32> = (0..12).map(|k| p.backoff_yields(k)).collect();
+        assert!(widths.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -39,13 +39,15 @@
 pub mod allocator;
 pub mod context;
 pub mod failure;
+pub mod fault;
 pub mod queue;
 pub mod service;
 
 pub use context::{IoSession, LmbHost, LmbRegion};
+pub use fault::{FaultPlan, FaultPoint, RetryPolicy};
 pub use queue::{
-    AllocQueue, Completion, Outcome, PlacementPolicy, QueueStats, QueueStatus, Request,
-    SubmitHandle, Ticket,
+    AllocQueue, Completion, Outcome, PlacementPolicy, QueueLimits, QueueStats, QueueStatus,
+    Request, SubmitHandle, Ticket, NO_TICKET,
 };
 pub use service::FmService;
 

@@ -52,25 +52,78 @@
 //! When a host crashes, its lane is cancelled
 //! ([`AllocQueue::cancel_lane`]): queued-but-unscheduled submissions
 //! complete with [`Error::Cancelled`] instead of leaking tickets or
-//! executing against reclaimed leases. Cancellation is **terminal**:
+//! executing against reclaimed leases, the lane is marked **dead** so
+//! later submits and [`SubmitHandle::retarget`]s at it fail eagerly
+//! instead of enqueueing doomed work. Cancellation is **terminal**:
 //! `poll` keeps reporting [`QueueStatus::Cancelled`] even after the
 //! completion is taken, so a late poller can always distinguish "never
 //! submitted" from "cancelled by a crash".
+//!
+//! Since the bounded-submission-plane PR the intake is no longer an
+//! infinite funnel (crate docs, "Robustness model"):
+//!
+//! * **Backpressure** — every lane carries a [`QueueLimits`] op-depth
+//!   and byte budget, charged at submit and released when the request
+//!   is scheduled (or cancelled / expired). [`SubmitHandle::try_submit`]
+//!   fails fast with [`Error::QueueFull`] / [`Error::BudgetExceeded`];
+//!   the blocking [`SubmitHandle::submit`] parks on depth pressure until
+//!   the scheduler drains the lane (a request that could *never* fit
+//!   its byte budget still errors immediately).
+//! * **Deadlines** — [`SubmitHandle::submit_with_deadline`] stamps a
+//!   [`SimTime`] on the submission; [`AllocQueue::expire_due`] (driven
+//!   by the service tick) completes overdue queued work with
+//!   [`Error::TimedOut`], terminal as [`QueueStatus::TimedOut`].
+//! * **Bounded waits** — [`SubmitHandle::wait_timeout`] gives up with
+//!   [`Error::TimedOut`] after a wall-clock budget without retiring the
+//!   ticket, and every blocking path observes the table's `closed`
+//!   flag, surfacing [`Error::ServiceGone`] the moment the owning
+//!   queue/service is gone.
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::cxl::types::MmId;
 use crate::error::{Error, Result};
 use crate::lmb::{Consumer, LmbAlloc};
+use crate::sim::SimTime;
 
 pub use crate::cxl::fm::PlacementPolicy;
 
 /// Default per-lane quota a drain tick schedules (see
 /// [`AllocQueue::schedule`]).
 pub const DEFAULT_LANE_QUOTA: usize = 16;
+
+/// Sentinel ticket id carried by an [`Error::Cancelled`] that was
+/// rejected *eagerly* — at submit or retarget onto a dead lane — before
+/// any ticket was minted. Real tickets are sequential from zero, so the
+/// sentinel can never collide with one.
+pub const NO_TICKET: u64 = u64::MAX;
+
+/// Per-lane intake bounds, enforced at submit time (ADR-0018: bounded
+/// in-flight work). The charge is held while a submission is *queued*
+/// (admitted but not yet scheduled) and released the moment the
+/// scheduler pops it — so the budget bounds how far a tenant can run
+/// ahead of the service, not its lifetime traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueLimits {
+    /// Max queued-but-unscheduled submissions per lane.
+    pub lane_depth: usize,
+    /// Max queued-but-unscheduled bytes per lane (alloc sizes; frees
+    /// and shares cost zero bytes and only count against depth).
+    pub lane_bytes: u64,
+}
+
+impl Default for QueueLimits {
+    /// Generous defaults: deep enough that well-behaved workloads
+    /// (including every pre-existing test and bench) never notice them,
+    /// small enough that a flooding tenant is contained.
+    fn default() -> Self {
+        QueueLimits { lane_depth: 65_536, lane_bytes: 64 << 30 }
+    }
+}
 
 /// Completion handle returned by [`AllocQueue::submit`]. Single-use:
 /// taking the completion retires the ticket.
@@ -99,6 +152,16 @@ impl Request {
             Request::Free { mmid, .. } | Request::Share { mmid, .. } => Some(*mmid),
         }
     }
+
+    /// What this request charges against a lane's byte budget while
+    /// queued. Allocs cost their size; frees and shares move no new
+    /// bytes and only count against the op depth.
+    pub fn cost_bytes(&self) -> u64 {
+        match self {
+            Request::Alloc { size, .. } => *size,
+            Request::Free { .. } | Request::Share { .. } => 0,
+        }
+    }
 }
 
 /// The MPSC wire format: one ticketed request routed at a lane. What a
@@ -108,6 +171,9 @@ pub struct Submission {
     pub ticket: Ticket,
     pub lane: usize,
     pub request: Request,
+    /// Latest simulated time the request may still be queued at; the
+    /// service expires it past this via [`AllocQueue::expire_due`].
+    pub deadline: Option<SimTime>,
 }
 
 /// Successful result of a serviced [`Request`].
@@ -149,6 +215,12 @@ impl Completion {
         matches!(self.result, Err(Error::Cancelled { .. }))
     }
 
+    /// Whether this submission expired in the queue (its deadline
+    /// passed before it was scheduled) rather than executed.
+    pub fn is_timed_out(&self) -> bool {
+        matches!(self.result, Err(Error::TimedOut { .. }))
+    }
+
     /// Unwrap an allocation outcome (the common case for sync callers).
     pub fn into_alloc(self) -> Result<LmbAlloc> {
         self.result?.into_alloc()
@@ -169,7 +241,10 @@ pub enum QueueStatus {
     /// Terminal: this status persists even after the cancelled
     /// completion has been taken.
     Cancelled,
-    /// Never submitted, or already taken (non-cancelled).
+    /// Deadline passed while queued ([`AllocQueue::expire_due`]).
+    /// Terminal like `Cancelled`: survives the completion being taken.
+    TimedOut,
+    /// Never submitted, or already taken (non-cancelled, non-expired).
     Unknown,
 }
 
@@ -179,6 +254,9 @@ pub struct QueueStats {
     pub submitted: u64,
     pub completed: u64,
     pub cancelled: u64,
+    /// Submissions expired by [`AllocQueue::expire_due`] (deadline
+    /// passed while queued).
+    pub timed_out: u64,
     pub ticks: u64,
 }
 
@@ -192,8 +270,17 @@ pub struct Scheduled {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EntryState {
-    Queued,
+    /// Admitted but not yet scheduled; carries the lane/byte charge it
+    /// holds so any exit from this state can release it.
+    Queued { lane: usize, bytes: u64 },
     InFlight,
+}
+
+/// What a lane's queued-but-unscheduled work currently charges.
+#[derive(Debug, Clone, Copy, Default)]
+struct LaneUsage {
+    ops: usize,
+    bytes: u64,
 }
 
 /// Ticket lifecycle + posted completions, shared between the queue
@@ -205,6 +292,10 @@ enum EntryState {
 struct CompletionTable {
     state: Mutex<TableState>,
     ready: Condvar,
+    /// Signalled whenever a lane's queued charge shrinks (a submission
+    /// was scheduled, cancelled, or expired) or the table closes —
+    /// what blocking admission parks on.
+    space: Condvar,
 }
 
 #[derive(Debug, Default)]
@@ -221,10 +312,40 @@ struct TableState {
     /// unboundedly many tickets should be recreated at a natural epoch
     /// (e.g. a new `Cluster`) rather than live forever.
     cancelled: HashSet<u64>,
+    /// Every ticket ever expired, with the same terminal-status
+    /// retention trade-off as `cancelled`.
+    timed_out: HashSet<u64>,
+    /// Lanes whose host has crashed: submits and retargets at them are
+    /// rejected eagerly instead of minting doomed tickets.
+    dead_lanes: HashSet<usize>,
+    /// Per-lane queued charges, maintained by admission and release.
+    usage: HashMap<usize, LaneUsage>,
+    /// Intake bounds shared by every lane.
+    limits: QueueLimits,
     /// Set when the owning [`AllocQueue`] is dropped: no completion can
     /// ever be posted again, so blocked waiters must error out rather
     /// than park forever.
     closed: bool,
+}
+
+impl TableState {
+    /// Give back one queued op's charge (the entry left the queued
+    /// state — scheduled, cancelled, expired, or forgotten).
+    fn release(&mut self, lane: usize, bytes: u64) {
+        if let Some(u) = self.usage.get_mut(&lane) {
+            u.ops = u.ops.saturating_sub(1);
+            u.bytes = u.bytes.saturating_sub(bytes);
+            if u.ops == 0 && u.bytes == 0 {
+                self.usage.remove(&lane);
+            }
+        }
+    }
+
+    fn charge(&mut self, lane: usize, bytes: u64) {
+        let u = self.usage.entry(lane).or_default();
+        u.ops += 1;
+        u.bytes = u.bytes.saturating_add(bytes);
+    }
 }
 
 impl CompletionTable {
@@ -235,39 +356,141 @@ impl CompletionTable {
         }
     }
 
-    fn mark_queued(&self, ticket: Ticket) {
-        self.locked().states.insert(ticket.0, EntryState::Queued);
+    /// Check the lane's bounds and charge the submission in one
+    /// critical section. `block` parks on depth/byte pressure until the
+    /// scheduler makes room (never on conditions waiting cannot fix: a
+    /// dead lane, a closed table, or a request bigger than the whole
+    /// byte budget).
+    fn admit(&self, lane: usize, bytes: u64, block: bool) -> Result<()> {
+        let mut s = self.locked();
+        loop {
+            if s.closed {
+                return Err(Error::ServiceGone);
+            }
+            if s.dead_lanes.contains(&lane) {
+                return Err(Error::Cancelled { ticket: NO_TICKET });
+            }
+            let limits = s.limits;
+            let u = s.usage.get(&lane).copied().unwrap_or_default();
+            if bytes > limits.lane_bytes {
+                // could never fit, even into an empty lane
+                return Err(Error::BudgetExceeded {
+                    lane,
+                    queued_bytes: u.bytes,
+                    limit_bytes: limits.lane_bytes,
+                });
+            }
+            if u.ops < limits.lane_depth && u.bytes.saturating_add(bytes) <= limits.lane_bytes {
+                s.charge(lane, bytes);
+                return Ok(());
+            }
+            if !block {
+                return if u.ops >= limits.lane_depth {
+                    Err(Error::QueueFull { lane, depth: u.ops })
+                } else {
+                    Err(Error::BudgetExceeded {
+                        lane,
+                        queued_bytes: u.bytes,
+                        limit_bytes: limits.lane_bytes,
+                    })
+                };
+            }
+            s = match self.space.wait(s) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Owner-path charge: unconditional (the queue owner is the one
+    /// draining the lane, so blocking it on its own backlog would
+    /// deadlock — its submissions ride over the budget instead).
+    fn charge(&self, lane: usize, bytes: u64) {
+        self.locked().charge(lane, bytes);
+    }
+
+    fn mark_queued(&self, ticket: Ticket, lane: usize, bytes: u64) {
+        self.locked().states.insert(ticket.0, EntryState::Queued { lane, bytes });
     }
 
     fn mark_in_flight(&self, ticket: Ticket) {
-        self.locked().states.insert(ticket.0, EntryState::InFlight);
+        let mut s = self.locked();
+        if let Some(EntryState::Queued { lane, bytes }) =
+            s.states.insert(ticket.0, EntryState::InFlight)
+        {
+            s.release(lane, bytes);
+            drop(s);
+            self.space.notify_all();
+        }
     }
 
     fn forget(&self, ticket: Ticket) {
-        self.locked().states.remove(&ticket.0);
+        let mut s = self.locked();
+        if let Some(EntryState::Queued { lane, bytes }) = s.states.remove(&ticket.0) {
+            s.release(lane, bytes);
+            drop(s);
+            self.space.notify_all();
+        }
     }
 
     fn post(&self, completion: Completion) {
-        {
+        let released = {
             let mut s = self.locked();
-            s.states.remove(&completion.ticket.0);
+            let released = match s.states.remove(&completion.ticket.0) {
+                Some(EntryState::Queued { lane, bytes }) => {
+                    s.release(lane, bytes);
+                    true
+                }
+                _ => false,
+            };
             if completion.is_cancelled() {
                 s.cancelled.insert(completion.ticket.0);
             }
+            if completion.is_timed_out() {
+                s.timed_out.insert(completion.ticket.0);
+            }
             s.completions.insert(completion.ticket.0, completion);
-        }
+            released
+        };
         self.ready.notify_all();
+        if released {
+            self.space.notify_all();
+        }
+    }
+
+    /// Reject future submits/retargets at `lane` (host crashed).
+    fn mark_lane_dead(&self, lane: usize) {
+        self.locked().dead_lanes.insert(lane);
+        // blocked admitters on this lane must wake up and error out
+        self.space.notify_all();
+    }
+
+    /// Re-open `lane` (a fresh host joined into a previously crashed
+    /// slot index).
+    fn revive_lane(&self, lane: usize) {
+        self.locked().dead_lanes.remove(&lane);
+    }
+
+    fn lane_is_dead(&self, lane: usize) -> bool {
+        self.locked().dead_lanes.contains(&lane)
     }
 
     fn poll(&self, ticket: Ticket) -> QueueStatus {
         let s = self.locked();
         if let Some(c) = s.completions.get(&ticket.0) {
-            return if c.is_cancelled() { QueueStatus::Cancelled } else { QueueStatus::Ready };
+            return if c.is_cancelled() {
+                QueueStatus::Cancelled
+            } else if c.is_timed_out() {
+                QueueStatus::TimedOut
+            } else {
+                QueueStatus::Ready
+            };
         }
         match s.states.get(&ticket.0) {
-            Some(EntryState::Queued) => QueueStatus::Queued,
+            Some(EntryState::Queued { .. }) => QueueStatus::Queued,
             Some(EntryState::InFlight) => QueueStatus::InFlight,
             None if s.cancelled.contains(&ticket.0) => QueueStatus::Cancelled,
+            None if s.timed_out.contains(&ticket.0) => QueueStatus::TimedOut,
             None => QueueStatus::Unknown,
         }
     }
@@ -294,10 +517,7 @@ impl CompletionTable {
                 // the queue owner is gone (dropped, or its thread
                 // panicked and unwound): nothing will ever post this
                 // completion — error out instead of parking forever
-                return Err(Error::FabricManager(format!(
-                    "allocation queue dropped with ticket {} still pending",
-                    ticket.0
-                )));
+                return Err(Error::ServiceGone);
             }
             s = match self.ready.wait(s) {
                 Ok(g) => g,
@@ -306,11 +526,53 @@ impl CompletionTable {
         }
     }
 
+    /// Like `wait`, but give up after `timeout` with
+    /// [`Error::TimedOut`] *without* retiring the ticket — the caller
+    /// can poll, wait again, or walk away and let the completion sit.
+    fn wait_timeout(&self, ticket: Ticket, timeout: Duration) -> Result<Completion> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.locked();
+        loop {
+            if let Some(c) = s.completions.remove(&ticket.0) {
+                return Ok(c);
+            }
+            if !s.states.contains_key(&ticket.0) {
+                return Err(Error::FabricManager(format!(
+                    "ticket {} is unknown or its completion was already claimed",
+                    ticket.0
+                )));
+            }
+            if s.closed {
+                return Err(Error::ServiceGone);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::TimedOut { ticket: ticket.0 });
+            }
+            s = match self.ready.wait_timeout(s, deadline - now) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
     /// Mark the table dead (owning queue dropped) and wake every
-    /// blocked waiter so it can error out.
+    /// blocked waiter — `wait`ers *and* parked admitters — so they can
+    /// error out.
     fn close(&self) {
         self.locked().closed = true;
         self.ready.notify_all();
+        self.space.notify_all();
+    }
+
+    fn set_limits(&self, limits: QueueLimits) {
+        self.locked().limits = limits;
+        // looser limits may unblock parked admitters
+        self.space.notify_all();
+    }
+
+    fn limits(&self) -> QueueLimits {
+        self.locked().limits
     }
 
     fn ready_len(&self) -> usize {
@@ -349,25 +611,68 @@ impl SubmitHandle {
     /// come from the shared counter and completions land in the shared
     /// table, so `poll`/`take`/`wait` on either handle observe both
     /// lanes' traffic.
-    pub fn retarget(&self, lane: usize) -> SubmitHandle {
-        SubmitHandle {
+    ///
+    /// Retargeting at a lane whose host has already crashed fails
+    /// eagerly with [`Error::Cancelled`] (carrying [`NO_TICKET`])
+    /// instead of minting a handle whose every submission is doomed.
+    pub fn retarget(&self, lane: usize) -> Result<SubmitHandle> {
+        if self.table.lane_is_dead(lane) {
+            return Err(Error::Cancelled { ticket: NO_TICKET });
+        }
+        Ok(SubmitHandle {
             lane,
             tx: self.tx.clone(),
             next_ticket: Arc::clone(&self.next_ticket),
             table: Arc::clone(&self.table),
-        }
+        })
     }
 
-    /// Enqueue `request`; returns its completion handle. Fails only if
-    /// the owning queue is gone (receiver dropped).
-    pub fn submit(&self, request: Request) -> Result<Ticket> {
+    fn submit_inner(
+        &self,
+        request: Request,
+        deadline: Option<SimTime>,
+        block: bool,
+    ) -> Result<Ticket> {
+        self.table.admit(self.lane, request.cost_bytes(), block)?;
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
-        self.table.mark_queued(ticket);
-        if self.tx.send(Submission { ticket, lane: self.lane, request }).is_err() {
+        self.table.mark_queued(ticket, self.lane, request.cost_bytes());
+        if self.tx.send(Submission { ticket, lane: self.lane, request, deadline }).is_err() {
             self.table.forget(ticket);
-            return Err(Error::FabricManager("allocation queue is gone".into()));
+            return Err(Error::ServiceGone);
         }
         Ok(ticket)
+    }
+
+    /// Enqueue `request`; returns its completion handle. Blocks while
+    /// the lane is at its [`QueueLimits`] depth/byte bound until the
+    /// scheduler makes room (backpressure); fails eagerly with
+    /// [`Error::ServiceGone`] if the owning queue is gone, with
+    /// [`Error::Cancelled`] if the lane's host has crashed, or with
+    /// [`Error::BudgetExceeded`] if the request could never fit the
+    /// lane's byte budget.
+    pub fn submit(&self, request: Request) -> Result<Ticket> {
+        self.submit_inner(request, None, true)
+    }
+
+    /// Non-blocking [`SubmitHandle::submit`]: a lane at its bound fails
+    /// fast with [`Error::QueueFull`] / [`Error::BudgetExceeded`]
+    /// (both sized for a caller-side retry decision) instead of
+    /// parking.
+    pub fn try_submit(&self, request: Request) -> Result<Ticket> {
+        self.submit_inner(request, None, false)
+    }
+
+    /// [`SubmitHandle::submit`] with a queueing deadline: if the
+    /// request is still unscheduled when the service's clock passes
+    /// `deadline`, it completes with [`Error::TimedOut`]
+    /// ([`QueueStatus::TimedOut`], terminal).
+    pub fn submit_with_deadline(&self, request: Request, deadline: SimTime) -> Result<Ticket> {
+        self.submit_inner(request, Some(deadline), true)
+    }
+
+    /// Non-blocking [`SubmitHandle::submit_with_deadline`].
+    pub fn try_submit_with_deadline(&self, request: Request, deadline: SimTime) -> Result<Ticket> {
+        self.submit_inner(request, Some(deadline), false)
     }
 
     /// Where `ticket` is in its lifecycle (thread-safe).
@@ -382,10 +687,19 @@ impl SubmitHandle {
 
     /// Block until `ticket`'s completion is posted, then claim it.
     /// Errors immediately on an unknown or already-claimed ticket
-    /// instead of hanging. Never call this from the thread that drives
-    /// the queue — nothing would be left to post the completion.
+    /// instead of hanging, and with [`Error::ServiceGone`] if the
+    /// owning queue/service exits while the ticket is pending. Never
+    /// call this from the thread that drives the queue — nothing would
+    /// be left to post the completion.
     pub fn wait(&self, ticket: Ticket) -> Result<Completion> {
         self.table.wait(ticket)
+    }
+
+    /// [`SubmitHandle::wait`] with a wall-clock budget: gives up with
+    /// [`Error::TimedOut`] after `timeout` *without* retiring the
+    /// ticket, so the caller can re-wait, poll, or abandon it.
+    pub fn wait_timeout(&self, ticket: Ticket, timeout: Duration) -> Result<Completion> {
+        self.table.wait_timeout(ticket, timeout)
     }
 }
 
@@ -400,6 +714,7 @@ pub(crate) struct CompletionPoster {
     table: Arc<CompletionTable>,
     completed: Arc<AtomicU64>,
     cancelled: Arc<AtomicU64>,
+    timed_out: Arc<AtomicU64>,
 }
 
 impl CompletionPoster {
@@ -407,6 +722,8 @@ impl CompletionPoster {
     pub(crate) fn post(&self, completion: Completion) {
         if completion.is_cancelled() {
             self.cancelled.fetch_add(1, Ordering::Relaxed);
+        } else if completion.is_timed_out() {
+            self.timed_out.fetch_add(1, Ordering::Relaxed);
         } else {
             self.completed.fetch_add(1, Ordering::Relaxed);
         }
@@ -420,7 +737,7 @@ impl CompletionPoster {
 pub struct AllocQueue {
     /// Per-lane FIFOs, keyed by lane id (sorted, so rotation order is
     /// deterministic). Empty lanes are removed eagerly.
-    lanes: BTreeMap<usize, VecDeque<(Ticket, Request)>>,
+    lanes: BTreeMap<usize, VecDeque<(Ticket, Request, Option<SimTime>)>>,
     /// Ticket lifecycle + completions, shared with every handle.
     table: Arc<CompletionTable>,
     /// Fabric-side ticket namespace, shared with every handle so
@@ -439,6 +756,7 @@ pub struct AllocQueue {
     stats: QueueStats,
     completed: Arc<AtomicU64>,
     cancelled: Arc<AtomicU64>,
+    timed_out: Arc<AtomicU64>,
 }
 
 impl Default for AllocQueue {
@@ -471,7 +789,19 @@ impl AllocQueue {
             stats: QueueStats::default(),
             completed: Arc::new(AtomicU64::new(0)),
             cancelled: Arc::new(AtomicU64::new(0)),
+            timed_out: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Replace the per-lane intake bounds (applies to every lane; looser
+    /// limits wake any parked blocking submitter).
+    pub fn set_limits(&mut self, limits: QueueLimits) {
+        self.table.set_limits(limits);
+    }
+
+    /// The per-lane intake bounds currently enforced.
+    pub fn limits(&self) -> QueueLimits {
+        self.table.limits()
     }
 
     /// A cloneable completion endpoint onto this queue's shared table
@@ -481,17 +811,58 @@ impl AllocQueue {
             table: Arc::clone(&self.table),
             completed: Arc::clone(&self.completed),
             cancelled: Arc::clone(&self.cancelled),
+            timed_out: Arc::clone(&self.timed_out),
         }
+    }
+
+    /// Re-open a lane index previously killed by
+    /// [`AllocQueue::cancel_lane`] (a fresh host joined into the slot).
+    pub(crate) fn revive_lane(&mut self, lane: usize) {
+        self.table.revive_lane(lane);
+    }
+
+    fn submit_owner(&mut self, lane: usize, request: Request, deadline: Option<SimTime>) -> Ticket {
+        let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
+        self.table.charge(lane, request.cost_bytes());
+        self.table.mark_queued(ticket, lane, request.cost_bytes());
+        self.lanes.entry(lane).or_default().push_back((ticket, request, deadline));
+        self.stats.submitted += 1;
+        ticket
     }
 
     /// Enqueue `request` on `lane` from the owning thread; returns its
     /// completion handle. (Driver threads use [`AllocQueue::handle`].)
+    /// Infallible by design: the owner is the thread that drains the
+    /// queue, so blocking or rejecting it on its own backlog would
+    /// wedge the drain — owner submissions charge the lane's budget but
+    /// may ride over it. Bounded admission for the owner is
+    /// [`AllocQueue::try_submit`].
     pub fn submit(&mut self, lane: usize, request: Request) -> Ticket {
+        self.submit_owner(lane, request, None)
+    }
+
+    /// Owner-path [`AllocQueue::submit`] with the same bounded
+    /// admission as [`SubmitHandle::try_submit`]: fails fast with
+    /// [`Error::QueueFull`] / [`Error::BudgetExceeded`] at the lane's
+    /// [`QueueLimits`], or [`Error::Cancelled`] on a dead lane.
+    pub fn try_submit(&mut self, lane: usize, request: Request) -> Result<Ticket> {
+        self.table.admit(lane, request.cost_bytes(), false)?;
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
-        self.table.mark_queued(ticket);
-        self.lanes.entry(lane).or_default().push_back((ticket, request));
+        self.table.mark_queued(ticket, lane, request.cost_bytes());
+        self.lanes.entry(lane).or_default().push_back((ticket, request, None));
         self.stats.submitted += 1;
         ticket
+    }
+
+    /// Owner-path submit with a queueing deadline (see
+    /// [`SubmitHandle::submit_with_deadline`]).
+    pub fn submit_with_deadline(
+        &mut self,
+        lane: usize,
+        request: Request,
+        deadline: SimTime,
+    ) -> Ticket {
+        self.submit_owner(lane, request, Some(deadline))
     }
 
     /// A cloneable submission endpoint for `lane`, usable from any
@@ -517,7 +888,7 @@ impl AllocQueue {
     }
 
     fn ingest(&mut self, sub: Submission) {
-        self.lanes.entry(sub.lane).or_default().push_back((sub.ticket, sub.request));
+        self.lanes.entry(sub.lane).or_default().push_back((sub.ticket, sub.request, sub.deadline));
         self.stats.submitted += 1;
     }
 
@@ -571,7 +942,7 @@ impl AllocQueue {
             let queue = self.lanes.get_mut(lane).expect("lane listed but missing");
             for _ in 0..quota {
                 match queue.pop_front() {
-                    Some((ticket, request)) => {
+                    Some((ticket, request, _deadline)) => {
                         self.table.mark_in_flight(ticket);
                         batch.push(Scheduled { ticket, lane: *lane, request });
                     }
@@ -595,6 +966,8 @@ impl AllocQueue {
     pub fn complete(&mut self, completion: Completion) {
         if completion.is_cancelled() {
             self.cancelled.fetch_add(1, Ordering::Relaxed);
+        } else if completion.is_timed_out() {
+            self.timed_out.fetch_add(1, Ordering::Relaxed);
         } else {
             self.completed.fetch_add(1, Ordering::Relaxed);
         }
@@ -604,16 +977,19 @@ impl AllocQueue {
     /// Drop every queued-but-unscheduled submission on `lane` (the
     /// intake is pumped first so in-channel submissions are caught
     /// too), posting an [`Error::Cancelled`] completion for each so no
-    /// ticket is left dangling. Returns how many were cancelled. The
-    /// cluster's host crash path calls this before releasing the
-    /// host's leases.
+    /// ticket is left dangling, and mark the lane **dead**: later
+    /// submits and retargets at it fail eagerly until
+    /// [`AllocQueue::revive_lane`] re-opens the index. Returns how many
+    /// were cancelled. The cluster's host crash path calls this before
+    /// releasing the host's leases.
     pub fn cancel_lane(&mut self, lane: usize) -> usize {
         self.pump();
+        self.table.mark_lane_dead(lane);
         let Some(queue) = self.lanes.remove(&lane) else {
             return 0;
         };
         let n = queue.len();
-        for (ticket, _) in queue {
+        for (ticket, _, _) in queue {
             self.cancelled.fetch_add(1, Ordering::Relaxed);
             self.table.post(Completion {
                 ticket,
@@ -622,6 +998,44 @@ impl AllocQueue {
             });
         }
         n
+    }
+
+    /// Expire every queued submission whose deadline is at or before
+    /// `now` (the intake is pumped first so in-channel submissions are
+    /// visible), posting an [`Error::TimedOut`] completion for each —
+    /// terminal as [`QueueStatus::TimedOut`]. Returns how many expired.
+    /// Driven by [`FmService::tick_at`](crate::lmb::FmService::tick_at)
+    /// before each schedule pass; an owner that never advances a clock
+    /// simply never expires anything.
+    pub fn expire_due(&mut self, now: SimTime) -> usize {
+        self.pump();
+        let mut expired = 0;
+        let mut emptied = Vec::new();
+        let table = &self.table;
+        let timed_out = &self.timed_out;
+        for (&lane, fifo) in self.lanes.iter_mut() {
+            let before = fifo.len();
+            fifo.retain(|&(ticket, _request, deadline)| match deadline {
+                Some(d) if d <= now => {
+                    timed_out.fetch_add(1, Ordering::Relaxed);
+                    table.post(Completion {
+                        ticket,
+                        lane,
+                        result: Err(Error::TimedOut { ticket: ticket.0 }),
+                    });
+                    false
+                }
+                _ => true,
+            });
+            expired += before - fifo.len();
+            if fifo.is_empty() {
+                emptied.push(lane);
+            }
+        }
+        for lane in emptied {
+            self.lanes.remove(&lane);
+        }
+        expired
     }
 
     /// Where `ticket` is in its lifecycle.
@@ -657,6 +1071,7 @@ impl AllocQueue {
             submitted: self.stats.submitted,
             completed: self.completed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
             ticks: self.stats.ticks,
         }
     }
@@ -815,7 +1230,9 @@ mod tests {
         let h = q.handle(0).unwrap();
         drop(q);
         let err = h.submit(alloc_req(1)).unwrap_err();
-        assert!(matches!(err, Error::FabricManager(_)));
+        assert!(matches!(err, Error::ServiceGone), "got {err:?}");
+        let err = h.try_submit(alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::ServiceGone), "got {err:?}");
     }
 
     #[test]
@@ -836,7 +1253,10 @@ mod tests {
         let waiter = std::thread::spawn(move || h.wait(t));
         drop(q);
         let res = waiter.join().unwrap();
-        assert!(res.is_err(), "waiter woken with an error after the queue died");
+        assert!(
+            matches!(res, Err(Error::ServiceGone)),
+            "waiter woken with ServiceGone after the queue died, got {res:?}"
+        );
     }
 
     #[test]
@@ -887,7 +1307,7 @@ mod tests {
     fn retargeted_handle_shares_tickets_and_completions() {
         let mut q = AllocQueue::new();
         let h0 = q.handle(0).unwrap();
-        let h1 = h0.retarget(1);
+        let h1 = h0.retarget(1).unwrap();
         assert_eq!((h0.lane(), h1.lane()), (0, 1));
         let t0 = h0.submit(alloc_req(1)).unwrap();
         let t1 = h1.submit(alloc_req(1)).unwrap();
@@ -902,5 +1322,160 @@ mod tests {
         assert_eq!(h1.poll(t0), QueueStatus::Ready);
         assert!(h0.take(t1).is_some());
         assert!(h1.take(t0).is_some());
+    }
+
+    #[test]
+    fn try_submit_backpressures_at_lane_depth_and_recovers() {
+        let mut q = AllocQueue::new();
+        q.set_limits(QueueLimits { lane_depth: 2, lane_bytes: u64::MAX >> 1 });
+        let h = q.handle(0).unwrap();
+        let a = h.try_submit(alloc_req(1)).unwrap();
+        let b = h.try_submit(alloc_req(1)).unwrap();
+        let err = h.try_submit(alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::QueueFull { lane: 0, depth: 2 }), "got {err:?}");
+        assert!(err.is_transient(), "backpressure is retryable");
+        // sibling lanes are charged independently
+        let h9 = q.handle(9).unwrap();
+        h9.try_submit(alloc_req(1)).unwrap();
+        // scheduling releases the charge: the lane admits again
+        let batch = q.schedule(8);
+        assert_eq!(batch.len(), 3);
+        let c = h.try_submit(alloc_req(1)).unwrap();
+        for s in batch {
+            let (ticket, lane) = (s.ticket, s.lane);
+            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+        }
+        let _ = (a, b, c);
+    }
+
+    #[test]
+    fn byte_budget_rejects_before_depth() {
+        let mut q = AllocQueue::new();
+        q.set_limits(QueueLimits { lane_depth: 64, lane_bytes: 3 * PAGE_SIZE });
+        let h = q.handle(0).unwrap();
+        // a request that could never fit fails even on the blocking path
+        let err = h.submit(alloc_req(4)).unwrap_err();
+        assert!(
+            matches!(err, Error::BudgetExceeded { lane: 0, queued_bytes: 0, .. }),
+            "got {err:?}"
+        );
+        assert!(!err.is_transient(), "an oversized request never fits on retry");
+        // two pages queued; a second two-page request over-commits
+        h.try_submit(alloc_req(2)).unwrap();
+        let err = h.try_submit(alloc_req(2)).unwrap_err();
+        assert!(matches!(err, Error::BudgetExceeded { lane: 0, .. }), "got {err:?}");
+        // zero-byte ops (frees) still pass the byte gate
+        let free =
+            Request::Free { consumer: Consumer::Pcie(Bdf::new(1, 0, 0)), mmid: MmId(1) };
+        h.try_submit(free).unwrap();
+    }
+
+    #[test]
+    fn threaded_blocking_submit_parks_until_the_scheduler_drains() {
+        let mut q = AllocQueue::new();
+        q.set_limits(QueueLimits { lane_depth: 1, lane_bytes: u64::MAX >> 1 });
+        let h = q.handle(0).unwrap();
+        h.submit(alloc_req(1)).unwrap(); // lane now at depth
+        let h2 = q.handle(0).unwrap();
+        let parked = std::thread::spawn(move || h2.submit(alloc_req(1)));
+        // drive the owner side until both submissions have been
+        // scheduled — the parked submitter must be admitted as the
+        // first schedule pass releases the lane's charge
+        let mut scheduled = 0;
+        while scheduled < 2 {
+            for s in q.schedule(8) {
+                scheduled += 1;
+                let (ticket, lane) = (s.ticket, s.lane);
+                q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+            }
+            std::thread::yield_now();
+        }
+        let t2 = parked.join().unwrap().expect("parked submit admitted after drain");
+        assert_eq!(h.poll(t2), QueueStatus::Ready);
+    }
+
+    #[test]
+    fn deadline_expiry_is_terminal_timed_out() {
+        let mut q = AllocQueue::new();
+        let t = q.submit_with_deadline(0, alloc_req(1), SimTime(100));
+        let live = q.submit(0, alloc_req(1)); // no deadline: never expires
+        assert_eq!(q.expire_due(SimTime(99)), 0, "before the deadline nothing expires");
+        assert_eq!(q.expire_due(SimTime(100)), 1, "at the deadline the ticket expires");
+        assert_eq!(q.poll(t), QueueStatus::TimedOut);
+        let c = q.take(t).unwrap();
+        assert!(c.is_timed_out());
+        assert!(matches!(c.result, Err(Error::TimedOut { ticket }) if ticket == t.0));
+        assert_eq!(q.poll(t), QueueStatus::TimedOut, "timeout survives take");
+        assert_eq!(q.stats().timed_out, 1);
+        // the sibling without a deadline is still queued and schedulable
+        assert_eq!(q.poll(live), QueueStatus::Queued);
+        assert_eq!(q.schedule(8).len(), 1);
+    }
+
+    #[test]
+    fn expired_charge_is_released_for_new_admissions() {
+        let mut q = AllocQueue::new();
+        q.set_limits(QueueLimits { lane_depth: 1, lane_bytes: u64::MAX >> 1 });
+        let h = q.handle(0).unwrap();
+        h.submit_with_deadline(alloc_req(1), SimTime(5)).unwrap();
+        let err = h.try_submit(alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::QueueFull { .. }));
+        assert_eq!(q.expire_due(SimTime(10)), 1);
+        h.try_submit(alloc_req(1)).expect("expiry released the lane charge");
+    }
+
+    #[test]
+    fn wait_timeout_gives_up_without_retiring_the_ticket() {
+        let mut q = AllocQueue::new();
+        let h = q.handle(0).unwrap();
+        let t = h.submit(alloc_req(1)).unwrap();
+        let err = h.wait_timeout(t, Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, Error::TimedOut { ticket } if ticket == t.0), "got {err:?}");
+        assert_eq!(h.poll(t), QueueStatus::Queued, "ticket not consumed by the timeout");
+        // service the request: the same ticket still completes normally
+        for s in q.schedule(8) {
+            let (ticket, lane) = (s.ticket, s.lane);
+            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+        }
+        let c = h.wait_timeout(t, Duration::from_secs(5)).unwrap();
+        assert!(c.result.is_ok());
+    }
+
+    #[test]
+    fn dead_lane_rejects_submits_and_retargets_eagerly() {
+        let mut q = AllocQueue::new();
+        let h = q.handle(4).unwrap();
+        let doomed = h.submit(alloc_req(1)).unwrap();
+        assert_eq!(q.cancel_lane(4), 1);
+        // satellite bugfix: no doomed ticket is minted after the crash
+        let err = h.submit(alloc_req(1)).unwrap_err();
+        assert!(
+            matches!(err, Error::Cancelled { ticket: NO_TICKET }),
+            "eager dead-lane rejection, got {err:?}"
+        );
+        let err = h.try_submit(alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::Cancelled { ticket: NO_TICKET }), "got {err:?}");
+        // satellite bugfix: retargeting at the dead lane fails eagerly
+        let err = h.retarget(4).unwrap_err();
+        assert!(matches!(err, Error::Cancelled { ticket: NO_TICKET }), "got {err:?}");
+        // a live lane still retargets fine, and revival re-opens the slot
+        let h5 = h.retarget(5).unwrap();
+        h5.submit(alloc_req(1)).unwrap();
+        q.revive_lane(4);
+        h.submit(alloc_req(1)).expect("revived lane admits again");
+        // the pre-crash ticket completed cancelled, not lost
+        assert!(q.take(doomed).unwrap().is_cancelled());
+    }
+
+    #[test]
+    fn owner_submit_rides_over_the_budget_but_try_submit_does_not() {
+        let mut q = AllocQueue::new();
+        q.set_limits(QueueLimits { lane_depth: 1, lane_bytes: u64::MAX >> 1 });
+        let a = q.submit(0, alloc_req(1));
+        let b = q.submit(0, alloc_req(1)); // owner path never blocks or errors
+        let err = q.try_submit(0, alloc_req(1)).unwrap_err();
+        assert!(matches!(err, Error::QueueFull { lane: 0, depth: 2 }), "got {err:?}");
+        assert_eq!(q.pending(), 2);
+        let _ = (a, b);
     }
 }

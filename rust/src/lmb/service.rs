@@ -66,14 +66,27 @@
 //! assert_eq!(hosts.iter().map(|h| h.module().live_allocs()).sum::<usize>(), 2);
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::error::{Error, Result};
+use crate::lmb::fault::{FaultPlan, FaultPoint, RetryPolicy};
 use crate::lmb::queue::{
-    AllocQueue, Completion, CompletionPoster, QueueStats, Scheduled, SubmitHandle,
+    AllocQueue, Completion, CompletionPoster, QueueLimits, QueueStats, Scheduled, SubmitHandle,
     DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::LmbHost;
+use crate::sim::SimTime;
+
+/// Recover a fault-plan guard even if a worker panicked while holding
+/// it — the plan's counters are always structurally sound.
+fn locked_plan(plan: &Mutex<FaultPlan>) -> MutexGuard<'_, FaultPlan> {
+    match plan.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// The FM-side actor owning hosts and the execute half of an
 /// [`AllocQueue`]. Lane `i` of the queue maps to the host in slot `i`.
@@ -88,14 +101,26 @@ use crate::lmb::LmbHost;
 #[derive(Debug)]
 pub struct FmService {
     queue: AllocQueue,
-    /// One slot per lane; `None` marks a crashed host whose lane stays
-    /// allocated (late submissions complete as cancelled, they never
-    /// execute against reclaimed leases).
+    /// One slot per lane; `None` marks a crashed host whose lane is
+    /// dead (new submissions are rejected eagerly at the handle; work
+    /// that raced past the cancellation completes as cancelled at
+    /// execute time, never against reclaimed leases).
     slots: Vec<Option<LmbHost>>,
     lane_quota: usize,
     /// Worker-pool width for [`FmService::run`]; `None` = size to the
     /// machine (`available_parallelism`, capped at the lane count).
     workers: Option<usize>,
+    /// The service's deadline clock: [`FmService::tick_at`] advances it
+    /// and expires queued work whose deadline it passed. Plain
+    /// [`FmService::tick`] reuses the last value, so callers that never
+    /// advance time never expire anything.
+    now: SimTime,
+    /// Bounded deterministic retry of transient execution failures.
+    retry: RetryPolicy,
+    /// Seeded fault-injection schedule, shared with pool workers.
+    plan: Option<Arc<Mutex<FaultPlan>>>,
+    /// Transient-failure re-executions performed (serial + workers).
+    retries: Arc<AtomicU64>,
 }
 
 impl FmService {
@@ -108,6 +133,10 @@ impl FmService {
             slots: hosts.into_iter().map(Some).collect(),
             lane_quota: DEFAULT_LANE_QUOTA,
             workers: None,
+            now: SimTime::default(),
+            retry: RetryPolicy::default(),
+            plan: None,
+            retries: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -126,6 +155,53 @@ impl FmService {
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = Some(workers.max(1));
         self
+    }
+
+    /// Replace the per-lane intake bounds on the service's queue
+    /// (backpressure: see [`QueueLimits`]).
+    pub fn with_limits(mut self, limits: QueueLimits) -> Self {
+        self.queue.set_limits(limits);
+        self
+    }
+
+    /// Replace the transient-failure retry policy
+    /// (`RetryPolicy { max_attempts: 1, .. }` disables retry).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Arm a seeded fault-injection plan (builder form of
+    /// [`FmService::set_fault_plan`]).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.set_fault_plan(plan);
+        self
+    }
+
+    /// Arm (or replace) the seeded fault-injection plan. On the serial
+    /// tick path every strike decision is a pure function of the plan's
+    /// seed and the submission history, so faulted runs replay
+    /// bit-for-bit; pool workers share the same plan behind a mutex,
+    /// where strike *placement* follows thread interleaving
+    /// ([`FaultPoint::CrashBetween`] is serial-path-only for exactly
+    /// that reason).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.plan = Some(Arc::new(Mutex::new(plan)));
+    }
+
+    /// Total injected-fault strikes so far (0 with no plan armed).
+    pub fn fault_strikes(&self) -> u64 {
+        self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes())
+    }
+
+    /// Injected-fault strikes at one point (0 with no plan armed).
+    pub fn fault_strikes_at(&self, point: FaultPoint) -> u64 {
+        self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes_at(point))
+    }
+
+    /// Transient-failure re-executions the retry layer has performed.
+    pub fn retries_performed(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
     }
 
     /// A cloneable submission endpoint for `lane`'s host. Mint every
@@ -174,9 +250,11 @@ impl FmService {
     /// Crash the host behind `lane` mid-flight: its
     /// queued-but-unscheduled submissions complete with
     /// [`Error::Cancelled`], its leases/SAT grants/decoders are
-    /// reclaimed through the fabric, and the lane goes dead — later
-    /// submissions aimed at it are cancelled at execute time instead
-    /// of touching reclaimed memory.
+    /// reclaimed through the fabric, and the lane goes **dead** — later
+    /// submissions and retargets aimed at it are rejected eagerly at
+    /// the [`SubmitHandle`] (no doomed tickets), and any submission
+    /// that raced past the cancellation is cancelled at execute time
+    /// instead of touching reclaimed memory.
     pub fn crash_host(&mut self, lane: usize) -> Result<()> {
         let host = self
             .slots
@@ -209,7 +287,8 @@ impl FmService {
         Ok(())
     }
 
-    /// Queue counters (submitted / completed / cancelled / ticks).
+    /// Queue counters (submitted / completed / cancelled / timed_out /
+    /// ticks).
     pub fn stats(&self) -> QueueStats {
         self.queue.stats()
     }
@@ -219,15 +298,74 @@ impl FmService {
     /// group against its host, and post completions. Always serial —
     /// the deterministic replay path the scenario engine and the
     /// queued≡sync equivalence driver build on. Returns how many
-    /// requests were serviced.
+    /// requests were serviced. Equivalent to
+    /// [`FmService::tick_at`] at the clock's last value.
     pub fn tick(&mut self) -> usize {
+        self.tick_at(self.now)
+    }
+
+    /// [`FmService::tick`] with the deadline clock advanced to `now`:
+    /// queued submissions whose deadline is at or before `now` complete
+    /// with [`Error::TimedOut`] *before* scheduling, then the survivors
+    /// are scheduled and executed. If a [`FaultPlan`] is armed, its
+    /// strike decisions land here: scheduled items may be dropped
+    /// ([`FaultPoint::IntakeDrop`]), whole groups crashed between
+    /// schedule and execute ([`FaultPoint::CrashBetween`] — the host is
+    /// [`FmService::crash_host`]ed), and execution faulted per
+    /// [`run_group`]'s catalog. Returns expired + serviced requests.
+    pub fn tick_at(&mut self, now: SimTime) -> usize {
+        self.now = now;
+        let expired = self.queue.expire_due(now);
         let mut rest = self.queue.schedule(self.lane_quota);
-        let total = rest.len();
+        // intake-drop strikes: scheduled, then lost before dispatch
+        if let Some(plan) = &self.plan {
+            let mut dropped = Vec::new();
+            {
+                let mut p = locked_plan(plan);
+                rest.retain(|s| {
+                    if p.strike(FaultPoint::IntakeDrop) {
+                        dropped.push((s.ticket, s.lane));
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            for (ticket, lane) in dropped {
+                self.queue.complete(Completion {
+                    ticket,
+                    lane,
+                    result: Err(Error::Cancelled { ticket: ticket.0 }),
+                });
+            }
+        }
+        let total = expired + rest.len();
         while !rest.is_empty() {
             let lane = rest[0].lane;
             let cut = rest.iter().position(|s| s.lane != lane).unwrap_or(rest.len());
             let tail = rest.split_off(cut);
             let group = std::mem::replace(&mut rest, tail);
+            // crash-between-schedule-and-execute: the race the scenario
+            // ROADMAP item asks for, landed as a declarative knob. Only
+            // meaningful for a live lane, and serial-path-only so the
+            // crash decision replays deterministically.
+            let crash = match &self.plan {
+                Some(plan) if matches!(self.slots.get(lane), Some(Some(_))) => {
+                    locked_plan(plan).strike(FaultPoint::CrashBetween)
+                }
+                _ => false,
+            };
+            if crash {
+                for s in &group {
+                    self.queue.complete(Completion {
+                        ticket: s.ticket,
+                        lane,
+                        result: Err(Error::Cancelled { ticket: s.ticket.0 }),
+                    });
+                }
+                self.crash_host(lane).expect("lane verified live before the crash strike");
+                continue;
+            }
             self.execute_group(lane, group);
         }
         total
@@ -236,7 +374,8 @@ impl FmService {
     fn execute_group(&mut self, lane: usize, group: Vec<Scheduled>) {
         match self.slots.get_mut(lane) {
             Some(Some(host)) => {
-                for c in host.execute_requests(group) {
+                let plan = self.plan.as_deref();
+                for c in run_group(host, group, self.retry, plan, &self.retries) {
                     self.queue.complete(c);
                 }
             }
@@ -327,7 +466,7 @@ impl FmService {
     }
 
     fn run_pool(self, workers: usize) -> Vec<LmbHost> {
-        let FmService { mut queue, slots, lane_quota, .. } = self;
+        let FmService { mut queue, slots, lane_quota, retry, plan, retries, .. } = self;
         let poster = queue.poster();
         // static lane→worker partition: worker w owns lanes ≡ w (mod W)
         let mut shards: Vec<Vec<(usize, Option<LmbHost>)>> =
@@ -342,7 +481,9 @@ impl FmService {
             for shard in shards {
                 let (tx, rx) = channel();
                 let poster = poster.clone();
-                joins.push(scope.spawn(move || worker_loop(shard, rx, poster)));
+                let plan = plan.clone();
+                let retries = Arc::clone(&retries);
+                joins.push(scope.spawn(move || worker_loop(shard, rx, poster, retry, plan, retries)));
                 txs.push(tx);
             }
             loop {
@@ -371,16 +512,22 @@ impl FmService {
 /// One pool worker: executes lane groups against the hosts it owns and
 /// posts completions from its own thread. Mirrors the three
 /// [`FmService::tick`] execute branches (live host / crashed lane /
-/// forged lane) so pooled and serial runs complete identically.
+/// forged lane) so pooled and serial runs complete identically — the
+/// live branch goes through the same [`run_group`] fault/retry pipeline
+/// ([`FaultPoint::CrashBetween`] excepted: crashing a host requires the
+/// scheduler's ownership of the slot, so it stays serial-path-only).
 fn worker_loop(
     mut shard: Vec<(usize, Option<LmbHost>)>,
     rx: Receiver<(usize, Vec<Scheduled>)>,
     poster: CompletionPoster,
+    retry: RetryPolicy,
+    plan: Option<Arc<Mutex<FaultPlan>>>,
+    retries: Arc<AtomicU64>,
 ) -> Vec<(usize, Option<LmbHost>)> {
     while let Ok((lane, group)) = rx.recv() {
         match shard.iter_mut().find(|&&mut (l, _)| l == lane) {
             Some((_, Some(host))) => {
-                for c in host.execute_requests(group) {
+                for c in run_group(host, group, retry, plan.as_deref(), &retries) {
                     poster.post(c);
                 }
             }
@@ -405,6 +552,97 @@ fn worker_loop(
         }
     }
     shard
+}
+
+/// Execute one live lane group through the fault-injection window and
+/// the bounded retry loop. The shared pipeline of the serial tick and
+/// every pool worker:
+///
+/// 1. **Fault window** (plan armed): a [`FaultPoint::SlowRegion`]
+///    strike arms a brief stall on the fabric's next allocation; a
+///    [`FaultPoint::MidGroupPanic`] strike fails the back half of the
+///    group with [`Error::FabricPoisoned`] *finally* (a panicked
+///    worker's batch is not transparently retried — the caller decides
+///    whether to resubmit); a [`FaultPoint::ExpanderNak`] strike makes
+///    the whole group's **first attempt** fail with a transient
+///    [`Error::ExpanderFailed`], which the retry loop then heals.
+/// 2. **First attempt**: the group executes against the host (or is
+///    NAK'd wholesale).
+/// 3. **Bounded retry**: completions that failed with a *transient*
+///    error ([`Error::is_transient`]) are re-executed individually, up
+///    to `retry.max_attempts` total attempts, with jitter-free
+///    exponential backoff (`retry.backoff_yields` scheduler yields
+///    between rounds). Quarantined-region reroute happens inside the
+///    re-execution (placement skips poisoned shards), so a retry can
+///    succeed even while part of the fabric stays down. Permanent
+///    errors surface immediately.
+fn run_group(
+    host: &mut LmbHost,
+    mut group: Vec<Scheduled>,
+    retry: RetryPolicy,
+    plan: Option<&Mutex<FaultPlan>>,
+    retries: &AtomicU64,
+) -> Vec<Completion> {
+    let mut out = Vec::with_capacity(group.len());
+    let mut nak_first = false;
+    if let Some(plan) = plan {
+        let mut p = locked_plan(plan);
+        if p.strike(FaultPoint::SlowRegion) {
+            host.fabric_ref().inject_slow_region(1);
+        }
+        if p.strike(FaultPoint::MidGroupPanic) && !group.is_empty() {
+            let tail = group.split_off(group.len() / 2);
+            for s in tail {
+                out.push(Completion {
+                    ticket: s.ticket,
+                    lane: s.lane,
+                    result: Err(Error::FabricPoisoned),
+                });
+            }
+        }
+        nak_first = p.strike(FaultPoint::ExpanderNak);
+    }
+    // keep the requests around: a transient failure re-executes them
+    let originals: Vec<Scheduled> = group.clone();
+    let mut completions: Vec<Completion> = if nak_first {
+        group
+            .iter()
+            .map(|s| Completion {
+                ticket: s.ticket,
+                lane: s.lane,
+                result: Err(Error::ExpanderFailed("injected NAK".into())),
+            })
+            .collect()
+    } else {
+        host.execute_requests(group)
+    };
+    for attempt in 1..retry.max_attempts {
+        let transient: Vec<usize> = completions
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| matches!(&c.result, Err(e) if e.is_transient()))
+            .map(|(i, _)| i)
+            .collect();
+        if transient.is_empty() {
+            break;
+        }
+        for _ in 0..retry.backoff_yields(attempt - 1) {
+            std::thread::yield_now();
+        }
+        for i in transient {
+            let ticket = completions[i].ticket;
+            let orig = originals
+                .iter()
+                .find(|s| s.ticket == ticket)
+                .expect("every retried completion came from this group")
+                .clone();
+            retries.fetch_add(1, Ordering::Relaxed);
+            let redo = host.execute_requests(vec![orig]);
+            completions[i] = redo.into_iter().next().expect("one request yields one completion");
+        }
+    }
+    out.extend(completions);
+    out
 }
 
 #[cfg(test)]
@@ -536,15 +774,20 @@ mod tests {
     }
 
     #[test]
-    fn pooled_run_cancels_dead_lane_groups() {
+    fn pooled_run_rejects_dead_lane_submissions_eagerly() {
         let (mut svc, fabric, dev) = service(2, GIB);
         let h0 = svc.handle(0).unwrap();
         let h1 = svc.handle(1).unwrap();
         svc.crash_host(0).unwrap();
         let svc = svc.with_workers(2);
         let fm_thread = std::thread::spawn(move || svc.run());
-        let doomed = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
-        assert!(h0.wait(doomed).unwrap().is_cancelled(), "dead lane cancels at execute time");
+        // satellite bugfix: a submit at the dead lane is rejected at the
+        // handle — no doomed ticket is minted, nothing is enqueued
+        let err = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap_err();
+        assert!(
+            matches!(err, Error::Cancelled { ticket: crate::lmb::queue::NO_TICKET }),
+            "got {err:?}"
+        );
         let ok = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
         h1.wait(ok).unwrap().into_alloc().unwrap();
         drop((h0, h1));
@@ -571,11 +814,11 @@ mod tests {
         assert_eq!((svc.alive(), svc.lanes()), (1, 2));
         assert!(svc.handle(0).is_err(), "dead lane mints no new endpoints");
         assert!(svc.crash_host(0).is_err(), "double crash is rejected");
-        // a submission that raced past the cancellation cancels at
-        // execute time instead of touching reclaimed memory
-        let late = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
-        assert_eq!(svc.tick(), 1);
-        assert!(h0.take(late).unwrap().is_cancelled());
+        // a late submission at the dead lane is rejected eagerly — no
+        // doomed ticket, nothing for the scheduler to cancel later
+        let err = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap_err();
+        assert!(matches!(err, Error::Cancelled { .. }), "got {err:?}");
+        assert_eq!(svc.tick(), 0, "the rejected submit enqueued nothing");
         // the surviving lane still executes
         let ok = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
         assert_eq!(svc.tick(), 1);
@@ -593,12 +836,121 @@ mod tests {
         let lane = svc.join_host(joined);
         assert_eq!(lane, 1);
         assert_eq!((svc.alive(), svc.lanes()), (2, 2));
-        let h1 = h0.retarget(lane);
+        let h1 = h0.retarget(lane).unwrap();
         let t = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
         assert_eq!(svc.tick(), 1);
         h1.take(t).unwrap().into_alloc().unwrap();
         assert_eq!(svc.host(lane).unwrap().module().live_allocs(), 1);
         assert_eq!(svc.hosts().count(), 2);
+        svc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tick_at_expires_overdue_work_before_scheduling() {
+        use crate::sim::SimTime;
+        let (mut svc, _fabric, dev) = service(1, GIB);
+        let h = svc.handle(0).unwrap();
+        let stale = h
+            .submit_with_deadline(
+                Request::Alloc { consumer: dev.into(), size: PAGE_SIZE },
+                SimTime(1_000),
+            )
+            .unwrap();
+        let fresh = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        // the clock jumps past the deadline before the service runs
+        assert_eq!(svc.tick_at(SimTime(2_000)), 2, "one expired + one executed");
+        let c = h.take(stale).unwrap();
+        assert!(c.is_timed_out(), "got {:?}", c.result);
+        assert_eq!(h.poll(stale), QueueStatus::TimedOut, "terminal status");
+        h.take(fresh).unwrap().into_alloc().unwrap();
+        assert_eq!(svc.stats().timed_out, 1);
+        svc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expander_nak_strike_is_healed_by_retry() {
+        use crate::lmb::fault::{FaultPlan, FaultPoint};
+        let (svc, _fabric, dev) = service(1, GIB);
+        let mut svc =
+            svc.with_fault_plan(FaultPlan::new(0xfa17).enable(FaultPoint::ExpanderNak, 1_000_000));
+        let h = svc.handle(0).unwrap();
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        // every group's first attempt NAKs, but the transient retry
+        // re-executes it against the healthy fabric and succeeds
+        h.take(t).unwrap().into_alloc().unwrap();
+        assert!(svc.fault_strikes_at(FaultPoint::ExpanderNak) >= 1);
+        assert!(svc.retries_performed() >= 1, "the NAK was healed by a retry");
+        svc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retry_surfaces_permanent_outage_after_bounded_attempts() {
+        use crate::lmb::fault::RetryPolicy;
+        let (svc, fabric, dev) = service(1, GIB);
+        let mut svc = svc.with_retry(RetryPolicy { max_attempts: 3, backoff_base: 1 });
+        let h = svc.handle(0).unwrap();
+        fabric.set_expander_failed(true);
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        let c = h.take(t).unwrap();
+        assert!(
+            matches!(c.result, Err(Error::ExpanderFailed(_))),
+            "a dead expander still surfaces after retries: {:?}",
+            c.result
+        );
+        assert_eq!(svc.retries_performed(), 2, "exactly max_attempts - 1 retries");
+        fabric.set_expander_failed(false);
+    }
+
+    #[test]
+    fn intake_drop_strikes_cancel_scheduled_work() {
+        use crate::lmb::fault::{FaultPlan, FaultPoint};
+        let (svc, _fabric, dev) = service(1, GIB);
+        let mut svc =
+            svc.with_fault_plan(FaultPlan::new(7).enable(FaultPoint::IntakeDrop, 1_000_000));
+        let h = svc.handle(0).unwrap();
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1, "the dropped item still counts as scheduled");
+        assert!(h.take(t).unwrap().is_cancelled(), "dropped on the floor, not executed");
+        assert_eq!(svc.stats().cancelled, 1);
+        assert_eq!(svc.host(0).unwrap().module().live_allocs(), 0);
+    }
+
+    #[test]
+    fn crash_between_strike_kills_the_host_and_cancels_the_group() {
+        use crate::lmb::fault::{FaultPlan, FaultPoint};
+        let (svc, fabric, dev) = service(2, GIB);
+        let mut svc = svc.with_fault_plan(
+            FaultPlan::new(11).enable(FaultPoint::CrashBetween, 1_000_000).with_crash_budget(1),
+        );
+        let h0 = svc.handle(0).unwrap();
+        let h1 = svc.handle(1).unwrap();
+        let t0 = h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        let t1 = h1.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        svc.tick();
+        // the first lane group drew the crash; the budget (1) protects
+        // the second group, which executes normally
+        assert!(h0.take(t0).unwrap().is_cancelled(), "group cancelled by the crash race");
+        h1.take(t1).unwrap().into_alloc().unwrap();
+        assert_eq!((svc.alive(), svc.lanes()), (1, 2));
+        // the crashed lane is dead for new work
+        assert!(h0.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).is_err());
+        svc.check_invariants().unwrap();
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slow_region_strike_stalls_but_completes() {
+        use crate::lmb::fault::{FaultPlan, FaultPoint};
+        let (svc, _fabric, dev) = service(1, GIB);
+        let mut svc =
+            svc.with_fault_plan(FaultPlan::new(13).enable(FaultPoint::SlowRegion, 1_000_000));
+        let h = svc.handle(0).unwrap();
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+        assert_eq!(svc.tick(), 1);
+        h.take(t).unwrap().into_alloc().unwrap();
+        assert!(svc.fault_strikes_at(FaultPoint::SlowRegion) >= 1, "latency fault fired");
         svc.check_invariants().unwrap();
     }
 }

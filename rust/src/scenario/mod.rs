@@ -42,6 +42,17 @@
 //!   floors of 64 tenants / 500 ops), so CI replays every committed
 //!   scenario in seconds while local runs keep the full 10^5–10^6
 //!   tenant populations.
+//! * `LMB_FAULT_POINT` — arms one deterministic
+//!   [`FaultPoint`](crate::lmb::FaultPoint) (by name: `intake_drop`,
+//!   `mid_group_panic`, `expander_nak`, `slow_region`, `crash_between`)
+//!   on every scenario's service, overriding any `[fault_plan]` section.
+//!   CI's fault-matrix job iterates this over every point. Completion
+//!   *floors* in `[expect]` are suspended under the override (the fault
+//!   changes the ok/failed/cancelled mix by design); conservation and
+//!   invariant checks still apply in full.
+//! * `LMB_FAULT_RATE_PPM` — per-opportunity strike rate for the armed
+//!   point, parts-per-million (default 20000). Only read when
+//!   `LMB_FAULT_POINT` is set.
 //!
 //! # Adding a scenario
 //!
@@ -60,7 +71,7 @@ pub mod tenant;
 pub use descriptor::{Descriptor, Table, Value};
 pub use harness::ScenarioHarness;
 pub use report::{write_scenarios_json, ScenarioReport};
-pub use spec::{Arrival, Expectations, FaultEvent, FaultKind, ScenarioSpec};
+pub use spec::{Arrival, Expectations, FaultEvent, FaultKind, FaultPlanSpec, ScenarioSpec};
 pub use tenant::{AllocRec, TenantBook, TenantLatency};
 
 use std::path::{Path, PathBuf};
@@ -114,6 +125,41 @@ pub fn scale() -> u64 {
 /// [`parse_seed`]).
 fn parse_scale(var: Option<&str>) -> Option<u64> {
     var?.trim().parse::<u64>().ok().filter(|&s| s > 0)
+}
+
+/// Fault-point override for every scenario: `LMB_FAULT_POINT` (a
+/// [`FaultPoint`](crate::lmb::FaultPoint) name) plus
+/// `LMB_FAULT_RATE_PPM` (default 20000) as a [`FaultPlanSpec`]. CI's
+/// fault-matrix job sets these to force each declared fault point
+/// through the whole committed suite. Panics on a set-but-invalid
+/// value — a typo must not silently run the fault-free suite.
+pub fn fault_point_override() -> Option<FaultPlanSpec> {
+    let point = match std::env::var("LMB_FAULT_POINT") {
+        Err(_) => return None,
+        Ok(v) => match parse_fault_point(Some(&v)) {
+            Some(p) => p,
+            None => panic!("LMB_FAULT_POINT {v:?} is not a known fault point name"),
+        },
+    };
+    let rate_ppm = match std::env::var("LMB_FAULT_RATE_PPM") {
+        Err(_) => 20_000,
+        Ok(v) => match parse_fault_rate(Some(&v)) {
+            Some(r) => r,
+            None => panic!("LMB_FAULT_RATE_PPM {v:?} is not in 1..=1_000_000"),
+        },
+    };
+    Some(FaultPlanSpec { point, rate_ppm, crash_budget: 1 })
+}
+
+/// Parsing behind [`fault_point_override`] (same no-`set_var` rationale
+/// as [`parse_seed`]).
+fn parse_fault_point(var: Option<&str>) -> Option<crate::lmb::FaultPoint> {
+    crate::lmb::FaultPoint::from_name(var?.trim()).ok()
+}
+
+/// Rate parsing behind [`fault_point_override`].
+fn parse_fault_rate(var: Option<&str>) -> Option<u32> {
+    var?.trim().parse::<u32>().ok().filter(|&r| (1..=1_000_000).contains(&r))
 }
 
 /// FNV-1a hash of a scenario name: the RNG *stream* id, so two
@@ -183,6 +229,20 @@ mod tests {
         assert_eq!(parse_scale(Some(" 1 ")), Some(1));
         assert_eq!(parse_scale(Some("0")), None, "zero would divide everything away");
         assert_eq!(parse_scale(Some("ten")), None);
+    }
+
+    #[test]
+    fn scenario_fault_point_parsing() {
+        use crate::lmb::FaultPoint;
+        assert_eq!(parse_fault_point(None), None);
+        assert_eq!(parse_fault_point(Some(" expander_nak ")), Some(FaultPoint::ExpanderNak));
+        assert_eq!(parse_fault_point(Some("crash_between")), Some(FaultPoint::CrashBetween));
+        assert_eq!(parse_fault_point(Some("gremlins")), None);
+        assert_eq!(parse_fault_rate(None), None);
+        assert_eq!(parse_fault_rate(Some("20000")), Some(20_000));
+        assert_eq!(parse_fault_rate(Some("0")), None, "zero rate never strikes");
+        assert_eq!(parse_fault_rate(Some("1000001")), None, "over unity");
+        assert_eq!(parse_fault_rate(Some("lots")), None);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use crate::cxl::fabric::PathKind;
 use crate::error::{Error, Result};
+use crate::lmb::fault::{FaultPlan, FaultPoint};
 use crate::lmb::queue::DEFAULT_LANE_QUOTA;
 use crate::pcie::link::PcieGen;
 use crate::scenario::descriptor::{Descriptor, Table};
@@ -53,6 +54,26 @@ pub struct FaultEvent {
     pub kind: FaultKind,
 }
 
+/// Declarative knob for the deterministic fault-injection layer: which
+/// [`FaultPoint`] to arm on the service, at what per-opportunity rate.
+/// The plan's RNG seed is the scenario seed, so a descriptor pins the
+/// whole faulty run bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlanSpec {
+    pub point: FaultPoint,
+    /// Strike probability per opportunity, in parts-per-million.
+    pub rate_ppm: u32,
+    /// Cap on `crash_between` strikes (ignored by the other points).
+    pub crash_budget: u32,
+}
+
+impl FaultPlanSpec {
+    /// Materialize the armed [`FaultPlan`] under `seed`.
+    pub fn plan(&self, seed: u64) -> FaultPlan {
+        FaultPlan::new(seed).enable(self.point, self.rate_ppm).with_crash_budget(self.crash_budget)
+    }
+}
+
 /// Hard minimums asserted after the replay (completion-count floors;
 /// the harness always additionally asserts exact conservation and
 /// invariants).
@@ -84,6 +105,9 @@ pub struct ScenarioSpec {
     pub expander_gib: u64,
     pub host_dram_gib: u64,
     pub lane_quota: usize,
+    /// Per-lane intake op cap (backpressure). `0` keeps the default
+    /// [`QueueLimits`](crate::lmb::queue::QueueLimits) depth.
+    pub lane_depth: usize,
     /// Gap between FM service ticks in simulated time.
     pub service_interval: SimTime,
     /// Fabric path whose modeled latency is added to every completed
@@ -93,6 +117,8 @@ pub struct ScenarioSpec {
     pub arrival: Arrival,
     /// Fault injections, sorted by time.
     pub faults: Vec<FaultEvent>,
+    /// Optional deterministic fault-point plan armed on the service.
+    pub fault_plan: Option<FaultPlanSpec>,
     pub expect: Expectations,
 }
 
@@ -109,6 +135,7 @@ const ROOT_KEYS: &[&str] = &[
     "expander_gib",
     "host_dram_gib",
     "lane_quota",
+    "lane_depth",
     "service_interval_us",
     "path",
     "seed",
@@ -128,7 +155,7 @@ impl ScenarioSpec {
     pub fn from_descriptor(desc: &Descriptor, base: &Path) -> Result<ScenarioSpec> {
         desc.root.deny_unknown("root", ROOT_KEYS)?;
         for t in desc.table_names() {
-            if t != "arrival" && t != "expect" {
+            if t != "arrival" && t != "expect" && t != "fault_plan" {
                 return Err(Error::Config(format!("unknown section [{t}]")));
             }
         }
@@ -190,6 +217,7 @@ impl ScenarioSpec {
         if lane_quota == 0 {
             return Err(Error::Config("lane_quota must be >= 1".into()));
         }
+        let lane_depth = desc.root.u64_or("lane_depth", 0)? as usize;
         let service_interval = SimTime::us(desc.root.u64_or("service_interval_us", 64)?);
         if service_interval == SimTime::ZERO {
             return Err(Error::Config("service_interval_us must be >= 1".into()));
@@ -223,6 +251,7 @@ impl ScenarioSpec {
             }
         }
 
+        let fault_plan = parse_fault_plan(desc.table("fault_plan"))?;
         let expect = parse_expect(desc.table("expect"))?;
 
         Ok(ScenarioSpec {
@@ -238,11 +267,13 @@ impl ScenarioSpec {
             expander_gib,
             host_dram_gib,
             lane_quota,
+            lane_depth,
             service_interval,
             path,
             seed,
             arrival,
             faults,
+            fault_plan,
             expect,
         })
     }
@@ -346,6 +377,23 @@ fn parse_fault(t: &Table, hosts: usize) -> Result<FaultEvent> {
     Ok(FaultEvent { at, kind })
 }
 
+fn parse_fault_plan(table: Option<&Table>) -> Result<Option<FaultPlanSpec>> {
+    let Some(t) = table else {
+        return Ok(None);
+    };
+    t.deny_unknown("[fault_plan]", &["point", "rate_ppm", "crash_budget"])?;
+    let point = FaultPoint::from_name(t.str("point")?)
+        .map_err(|e| Error::Config(format!("[fault_plan] {e}")))?;
+    let rate_ppm = t.u64_or("rate_ppm", 10_000)?;
+    if rate_ppm == 0 || rate_ppm > 1_000_000 {
+        return Err(Error::Config(format!(
+            "[fault_plan] rate_ppm {rate_ppm} outside 1..=1_000_000"
+        )));
+    }
+    let crash_budget = t.u64_or("crash_budget", 1)? as u32;
+    Ok(Some(FaultPlanSpec { point, rate_ppm: rate_ppm as u32, crash_budget }))
+}
+
 fn parse_expect(table: Option<&Table>) -> Result<Expectations> {
     let Some(t) = table else {
         return Ok(Expectations::default());
@@ -376,6 +424,7 @@ mod tests {
         assert_eq!(s.arrival, Arrival::Steady { gap: SimTime::us(1) });
         assert_eq!(s.path, PathKind::HostToHdm);
         assert!(s.faults.is_empty());
+        assert_eq!((s.lane_depth, s.fault_plan), (0, None), "no backpressure/fault overrides");
         assert_eq!(s.expect, Expectations::default());
         assert_eq!(s.seed, crate::scenario::fnv1a("t"), "default seed derives from the name");
     }
@@ -437,6 +486,11 @@ mod tests {
                 "crashes kill every host",
             ),
             ("[expect]\nmin_oops = 1", "unknown expect key"),
+            ("[fault_plan]\nrate_ppm = 10", "fault plan missing point"),
+            ("[fault_plan]\npoint = \"gremlins\"", "unknown fault point"),
+            ("[fault_plan]\npoint = \"expander_nak\"\nrate_ppm = 0", "zero rate"),
+            ("[fault_plan]\npoint = \"expander_nak\"\nrate_ppm = 2_000_000", "rate over unity"),
+            ("[fault_plan]\npoint = \"expander_nak\"\nvolume = 11", "unknown fault plan key"),
         ] {
             let err = minimal(extra).unwrap_err();
             assert!(matches!(err, Error::Config(_)), "{why}: {err:?}");
@@ -449,6 +503,33 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("crashed twice"), "{err}");
+    }
+
+    #[test]
+    fn scenario_spec_fault_plan_round_trips() {
+        let s = minimal(
+            "lane_depth = 32\nseed = 99\n\
+             [fault_plan]\npoint = \"crash_between\"\nrate_ppm = 500\ncrash_budget = 2",
+        )
+        .unwrap();
+        assert_eq!(s.lane_depth, 32);
+        let fp = s.fault_plan.unwrap();
+        assert_eq!(
+            fp,
+            FaultPlanSpec { point: FaultPoint::CrashBetween, rate_ppm: 500, crash_budget: 2 }
+        );
+        // materialized plans are seed-deterministic
+        let mut a = fp.plan(s.seed);
+        let mut b = fp.plan(s.seed);
+        for _ in 0..64 {
+            assert_eq!(
+                a.strike(FaultPoint::CrashBetween),
+                b.strike(FaultPoint::CrashBetween)
+            );
+        }
+        // defaults: rate 10_000 ppm, crash budget 1
+        let d = minimal("[fault_plan]\npoint = \"intake_drop\"").unwrap().fault_plan.unwrap();
+        assert_eq!((d.rate_ppm, d.crash_budget), (10_000, 1));
     }
 
     #[test]

@@ -213,6 +213,47 @@ fn threaded_submit_handles_feed_the_cluster_queue() {
 }
 
 #[test]
+fn wait_on_a_dropped_service_errors_instead_of_hanging() {
+    // Regression: a driver that submitted just before the service side
+    // went away used to park on the completion condvar forever. The
+    // close path must wake every waiter with `ServiceGone`.
+    let (cluster, dev) = cluster(1, 1);
+    let (svc, _fabric, _latency) = cluster.into_service().unwrap();
+    let h = svc.handle(0).unwrap();
+    let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+    let waiter = std::thread::spawn(move || h.wait(t));
+    drop(svc); // the accepted ticket can now never complete
+    let err = waiter.join().unwrap().unwrap_err();
+    assert!(matches!(err, Error::ServiceGone), "got {err:?}");
+}
+
+#[test]
+fn cluster_submit_pushes_back_at_the_lane_depth() {
+    let mut c = Cluster::builder()
+        .hosts(1)
+        .expander_gib(1)
+        .host_dram_gib(1)
+        .queue_limits(QueueLimits { lane_depth: 2, ..QueueLimits::default() })
+        .build()
+        .unwrap();
+    let dev = Bdf::new(1, 0, 0);
+    c.host_mut(0).unwrap().attach_pcie(dev);
+    let req = || Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+    let a = c.submit(0, req()).unwrap();
+    let b = c.submit(0, req()).unwrap();
+    let err = c.submit(0, req()).unwrap_err();
+    assert!(matches!(err, Error::QueueFull { lane: 0, depth: 2 }), "got {err:?}");
+    // draining frees the budget; the owner can submit again
+    c.drain_queue();
+    let d = c.submit(0, req()).unwrap();
+    c.drain_queue();
+    for t in [a, b, d] {
+        c.take_completion(t).unwrap().result.unwrap();
+    }
+    c.check_invariants().unwrap();
+}
+
+#[test]
 fn mmids_are_fabric_global_and_isolated() {
     let (mut cluster, dev) = cluster(3, 2);
     let mut all = Vec::new();

@@ -1,0 +1,208 @@
+//! Fault-matrix acceptance: every declared fault point, exercised
+//! through the real service loop under a pinned seed, replays
+//! bit-identically — and the retry layer turns transient strikes into
+//! completions (or typed terminal errors), never hangs.
+//!
+//! CI runs this suite once per fault point (`LMB_FAULT_POINT`); an
+//! unpinned local run sweeps the whole catalog. Everything here is
+//! single-threaded on purpose: the serial tick path is the
+//! deterministic one (pooled workers trade bit-replay for
+//! parallelism), so this is where seed-reproducibility is enforced.
+
+use lmb::cxl::expander::{Expander, ExpanderConfig};
+use lmb::cxl::switch::PbrSwitch;
+use lmb::cxl::types::{Bdf, GIB, PAGE_SIZE};
+use lmb::prelude::*;
+
+const LANES: usize = 2;
+const OPS: usize = 32;
+
+/// The points this process should exercise: the CI-pinned one, or the
+/// whole catalog.
+fn points_under_test() -> Vec<FaultPoint> {
+    match lmb::scenario::fault_point_override() {
+        Some(fp) => vec![fp.point],
+        None => FaultPoint::ALL.to_vec(),
+    }
+}
+
+fn service_with_plan(plan: FaultPlan) -> (FmService, FabricRef, Bdf) {
+    let fabric = FabricRef::new(FabricManager::new(
+        PbrSwitch::new(16),
+        Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+    ));
+    let dev = Bdf::new(1, 0, 0);
+    let hosts: Vec<LmbHost> = (0..LANES)
+        .map(|_| {
+            let mut h = LmbHost::bind(fabric.clone(), GIB).unwrap();
+            h.attach_pcie(dev);
+            h
+        })
+        .collect();
+    (FmService::new(hosts).with_fault_plan(plan), fabric, dev)
+}
+
+/// Drive one faulty history serially: interleave bounded submissions
+/// with ticks, drain, and reap every ticket. Returns the full outcome
+/// transcript (submit rejections included, in submission order) plus
+/// the strike and retry counters — everything that must replay.
+fn faulty_history(point: FaultPoint, seed: u64, rate_ppm: u32) -> (Vec<String>, u64, u64) {
+    let plan = FaultPlan::new(seed).enable(point, rate_ppm).with_crash_budget(1);
+    let (mut svc, _fabric, dev) = service_with_plan(plan);
+    let handles: Vec<SubmitHandle> = (0..LANES).map(|l| svc.handle(l).unwrap()).collect();
+    let reaper = handles[0].clone();
+
+    let mut accepted = Vec::new();
+    let mut transcript = Vec::new();
+    for i in 0..OPS {
+        let lane = i % LANES;
+        match handles[lane].try_submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }) {
+            Ok(t) => accepted.push(t),
+            // a crash_between strike leaves its lane eagerly rejecting
+            Err(e) => transcript.push(format!("rejected[{i}]: {e:?}")),
+        }
+        if i % 8 == 7 {
+            svc.tick();
+        }
+    }
+    while svc.tick() > 0 {}
+    for t in accepted {
+        let c = reaper.take(t).expect("every accepted ticket resolves terminally");
+        transcript.push(format!("{:?}: {:?}", c.ticket, c.result));
+    }
+    svc.check_invariants().unwrap();
+    (transcript, svc.fault_strikes_at(point), svc.retries_performed())
+}
+
+#[test]
+fn every_fault_point_replays_bit_identically_under_one_seed() {
+    for point in points_under_test() {
+        // rate 1.0: the very first opportunity strikes, so the point is
+        // provably exercised no matter which seed CI pins
+        let (a, strikes_a, retries_a) = faulty_history(point, 0xC1_5EED, 1_000_000);
+        let (b, strikes_b, retries_b) = faulty_history(point, 0xC1_5EED, 1_000_000);
+        assert_eq!(a, b, "{point:?}: one seed, one transcript");
+        assert_eq!((strikes_a, retries_a), (strikes_b, retries_b));
+        assert!(strikes_a >= 1, "{point:?} was never exercised");
+    }
+}
+
+#[test]
+fn fault_decisions_follow_the_seed_not_the_wall_clock() {
+    // At a fractional rate the strike pattern is a pure function of
+    // (seed, history): replaying is exact, reseeding diverges.
+    for point in points_under_test() {
+        let (a, strikes_a, _) = faulty_history(point, 7, 400_000);
+        let (b, strikes_b, _) = faulty_history(point, 7, 400_000);
+        assert_eq!(a, b, "{point:?}: pinned seed replays");
+        assert_eq!(strikes_a, strikes_b);
+        let mut diverged = false;
+        for seed in 8..24u64 {
+            let (c, strikes_c, _) = faulty_history(point, seed, 400_000);
+            if c != a || strikes_c != strikes_a {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "{point:?}: sixteen reseeds never changed the history");
+    }
+}
+
+#[test]
+fn transient_strikes_heal_through_bounded_retries_without_hanging() {
+    // Property: transient fault x bounded retries => every ticket
+    // reaches a terminal state (no hang — nothing here ever blocks),
+    // and at full strike rate the healing really went through the
+    // retry path.
+    for seed in [1u64, 0xBEEF, 0x7777_7777] {
+        let plan = FaultPlan::new(seed).enable(FaultPoint::ExpanderNak, 1_000_000);
+        let (mut svc, _fabric, dev) = service_with_plan(plan);
+        let handles: Vec<SubmitHandle> = (0..LANES).map(|l| svc.handle(l).unwrap()).collect();
+        let mut tickets = Vec::new();
+        for i in 0..OPS {
+            let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+            tickets.push(handles[i % LANES].submit(req).unwrap());
+        }
+        while svc.tick() > 0 {}
+        for t in tickets {
+            // the NAK is transient and the fabric under it is healthy:
+            // the bounded retry must land every single allocation
+            handles[0].take(t).expect("terminal").result.expect("healed by retry");
+        }
+        assert!(svc.retries_performed() >= 1, "healing went through the retry path");
+        svc.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn flooding_tenant_cannot_inflate_victim_latency() {
+    // The isolation property behind BENCH_qos.json, at test scale: a
+    // victim submitting one op per tick keeps a near-quiet p99 even
+    // while a neighbour floods its own lane's bounded intake. Latency
+    // is measured in service ticks (deterministic serial path).
+    let p99_ticks = |flood: bool| -> u64 {
+        let (svc, _fabric, dev) = service_with_plan(FaultPlan::new(0));
+        let mut svc = svc.with_limits(QueueLimits { lane_depth: 16, ..QueueLimits::default() });
+        let victim = svc.handle(0).unwrap();
+        let flooder = svc.handle(1).unwrap();
+        let mut latencies: Vec<u64> = Vec::new();
+        let mut pending: Vec<(Ticket, u64)> = Vec::new();
+        let mut now = 0u64;
+        let mut reap = |pending: &mut Vec<(Ticket, u64)>, now: u64, out: &mut Vec<u64>| {
+            pending.retain(|&(t, submitted)| match victim.take(t) {
+                Some(c) => {
+                    c.result.expect("victim allocations always succeed");
+                    out.push(now - submitted + 1);
+                    false
+                }
+                None => true,
+            });
+        };
+        while now < 96 {
+            let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+            pending.push((victim.try_submit(req).unwrap(), now));
+            if flood {
+                for _ in 0..16 {
+                    let req = Request::Alloc { consumer: dev.into(), size: PAGE_SIZE };
+                    let _ = flooder.try_submit(req); // pushback is the point
+                }
+            }
+            svc.tick();
+            reap(&mut pending, now, &mut latencies);
+            now += 1;
+        }
+        while !pending.is_empty() {
+            assert!(svc.tick() > 0, "victim work pending but nothing schedulable");
+            reap(&mut pending, now, &mut latencies);
+            now += 1;
+        }
+        while svc.tick() > 0 {}
+        latencies.sort_unstable();
+        latencies[(latencies.len() * 99) / 100]
+    };
+    let quiet = p99_ticks(false);
+    let flooded = p99_ticks(true);
+    assert!(
+        flooded <= quiet.max(1) * 3,
+        "flooded victim p99 {flooded} ticks vs quiet {quiet}: isolation broken"
+    );
+}
+
+#[test]
+fn permanent_outage_is_surfaced_after_retries_not_retried_forever() {
+    // The transient/permanent split in Error::is_transient is what
+    // bounds the retry loop: a persistently failed expander keeps
+    // failing, and after max_attempts the typed error surfaces.
+    let plan = FaultPlan::new(3); // no points enabled: the outage is real
+    let (svc, fabric, dev) = service_with_plan(plan);
+    let mut svc = svc.with_retry(RetryPolicy { max_attempts: 4, backoff_base: 2 });
+    let h = svc.handle(0).unwrap();
+    fabric.set_expander_failed(true);
+    let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+    while svc.tick() > 0 {}
+    let c = h.take(t).expect("terminal even when every attempt fails");
+    assert!(matches!(c.result, Err(Error::ExpanderFailed(_))), "got {:?}", c.result);
+    assert_eq!(svc.retries_performed(), 3, "exactly max_attempts - 1 retries");
+    fabric.set_expander_failed(false);
+    svc.check_invariants().unwrap();
+}

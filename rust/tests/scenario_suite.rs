@@ -57,6 +57,10 @@ fn scenario_committed_suite_replays_on_the_real_fabric() {
         reports.iter().any(|r| r.cancelled > 0),
         "a committed scenario cancels work via a crash"
     );
+    assert!(
+        specs.iter().any(|s| s.fault_plan.is_some()),
+        "a committed scenario arms a deterministic fault plan"
+    );
 }
 
 /// Determinism, proven at the artifact level: replay one committed

@@ -158,6 +158,92 @@ fn threaded_contended_allocs_never_exceed_capacity() {
     }
 }
 
+/// A fault-tolerant driver: submits allocations through the bounded
+/// intake, claims every accepted ticket, and accepts any *typed*
+/// outcome — the one thing it will not tolerate is a hang or an
+/// unwound thread. Returns (ok, errored) completion counts.
+fn drive_tolerant(handle: SubmitHandle, rounds: u64) -> (u64, u64) {
+    let dev = Bdf::new(1, 0, 0);
+    let (mut ok, mut errs) = (0u64, 0u64);
+    let mut live: Vec<MmId> = Vec::new();
+    for _ in 0..rounds {
+        let t = match handle.try_submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }) {
+            Ok(t) => t,
+            Err(_) => {
+                // eager dead-lane rejection or backpressure — accounted,
+                // and if the lane is gone it stays gone
+                errs += 1;
+                continue;
+            }
+        };
+        match handle.wait(t) {
+            Ok(c) => match c.result {
+                Ok(outcome) => {
+                    ok += 1;
+                    if let Ok(a) = outcome.into_alloc() {
+                        live.push(a.mmid);
+                    }
+                }
+                Err(_) => errs += 1,
+            },
+            Err(_) => {
+                errs += 1;
+                break; // service side is gone; nothing more will post
+            }
+        }
+    }
+    // best-effort retire (the lane may have died mid-run)
+    for mmid in live {
+        if let Ok(t) = handle.try_submit(Request::Free { consumer: dev.into(), mmid }) {
+            let _ = handle.wait(t);
+        }
+    }
+    (ok, errs)
+}
+
+#[test]
+fn threaded_drivers_survive_every_forced_fault_point() {
+    // CI's fault matrix pins LMB_FAULT_POINT to one point per job; an
+    // unpinned local run sweeps the whole catalog. Either way the
+    // guarantee under test is liveness + accounting: every driver
+    // finishes (no hang, no unwound thread), every accepted ticket
+    // resolves terminally, and the fabric's invariants hold after join.
+    let plans: Vec<FaultPlanSpec> = match lmb::scenario::fault_point_override() {
+        Some(fp) => vec![fp],
+        None => FaultPoint::ALL
+            .iter()
+            .map(|&point| FaultPlanSpec { point, rate_ppm: 50_000, crash_budget: 1 })
+            .collect(),
+    };
+    for fp in plans {
+        let fabric = fabric_gib(1);
+        let mut service = FmService::new(bind_hosts(&fabric, DRIVERS)).with_lane_quota(4);
+        service.set_fault_plan(fp.plan(0xFA_u64 ^ fp.point as u64));
+        let handles: Vec<SubmitHandle> =
+            (0..DRIVERS).map(|lane| service.handle(lane).unwrap()).collect();
+
+        let fm_thread = thread::spawn(move || service.run());
+        let drivers: Vec<_> =
+            handles.into_iter().map(|h| thread::spawn(move || drive_tolerant(h, ROUNDS))).collect();
+
+        let (mut ok, mut errs) = (0u64, 0u64);
+        for d in drivers {
+            let (o, e) = d.join().unwrap_or_else(|_| {
+                panic!("driver thread unwound under fault {:?}", fp.point)
+            });
+            ok += o;
+            errs += e;
+        }
+        let hosts = fm_thread.join().expect("service thread must not panic");
+        assert!(ok + errs >= DRIVERS as u64 * ROUNDS, "every round was accounted ({:?})", fp.point);
+        assert!(ok > 0, "some work still lands under fault {:?}", fp.point);
+        for host in &hosts {
+            host.check_invariants().unwrap();
+        }
+        fabric.check_invariants().unwrap();
+    }
+}
+
 #[test]
 fn threaded_panic_poisons_fabric_and_is_reported_not_fatal() {
     // Satellite: a panicking closure inside a fabric scope must surface
