@@ -9,10 +9,16 @@
 //! count conservation, the floors, and the fabric invariants before
 //! reporting per-op and per-tenant-mean percentiles.
 //!
+//! Every run also demonstrates the observability plane: the harness
+//! arms the canonical event ring, so after the replay we pull the
+//! unified `telemetry()` snapshot, dump the stream as JSONL, and grep
+//! it for the fault strikes the descriptor injected.
+//!
 //! Run: `cargo run --release --example scenario_replay`
 //! Env: `LMB_SCENARIO_SEED` pins the seed, `LMB_SCENARIO_SCALE`
 //! divides tenant/op counts (try `LMB_SCENARIO_SCALE=100` for a quick
-//! pass).
+//! pass), `LMB_EVENT_LOG=<path>` dumps every run's stream
+//! automatically.
 
 use lmb::prelude::*;
 use lmb::scenario::{committed_scenarios, load_effective, Descriptor};
@@ -68,6 +74,51 @@ fn main() -> Result<()> {
     println!(
         "  crash at 200us: {} cancelled, {} tenants re-homed onto 2 lanes",
         report.cancelled, report.distinct_tenants
+    );
+
+    // ---- 3. the observability plane on a faulty replay ----
+    // The committed NAK-retry scenario arms a seeded expander_nak fault
+    // plan; the harness's event ring records every strike and retry, so
+    // a post-mortem is one dump + one grep away.
+    let faulty = committed_scenarios()?
+        .into_iter()
+        .find(|p| p.file_name().is_some_and(|n| n == "faulty_nak_retry.toml"))
+        .expect("faulty_nak_retry.toml is committed");
+    let spec = load_effective(&faulty)?;
+    let harness = ScenarioHarness::new(spec);
+    let report = harness.run()?;
+    println!("\nfaulty replay:\n  {}", report.summary());
+
+    // one call, every counter: queue totals, retries, per-point fault
+    // strikes, fabric lock split, TLB hits and the event watermarks
+    let snap = harness.telemetry();
+    println!(
+        "  telemetry: {} completed, {} retries, {} NAK strikes, {} events ({} retained)",
+        snap.queue.completed,
+        snap.retries,
+        snap.fault_strikes_by_point[FaultPoint::ExpanderNak.index()],
+        snap.events.emitted,
+        harness.events().len()
+    );
+
+    // dump the canonical stream and grep it like an operator would:
+    // `grep '"kind":"fault"' events.jsonl`
+    let dump = std::env::temp_dir().join("lmb_scenario_events.jsonl");
+    harness.dump_events(&dump)?;
+    let strikes: Vec<String> = std::fs::read_to_string(&dump)?
+        .lines()
+        .filter(|l| l.contains("\"kind\":\"fault\""))
+        .map(str::to_string)
+        .collect();
+    println!("  {} fault-strike lines in {}; first:", strikes.len(), dump.display());
+    if let Some(first) = strikes.first() {
+        println!("    {first}");
+    }
+    assert!(!strikes.is_empty(), "the armed NAK plan left strikes in the stream");
+    assert_eq!(
+        strikes.len() as u64,
+        snap.events.of(EventKind::Fault),
+        "the dumped stream and the counters agree"
     );
     Ok(())
 }

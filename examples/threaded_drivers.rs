@@ -132,6 +132,7 @@ fn main() -> Result<()> {
     // lease/drain, the warm alloc/free path is fabric-lock-free, and
     // contended acquisitions stay rare because placement spread the
     // four hosts' extents across four different regions
+    #[allow(deprecated)] // fabric-level sampling; the services were consumed by run_once
     let s = fabric.lock_stats();
     println!("\nlock_stats after both runs:");
     println!(

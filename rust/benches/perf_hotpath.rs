@@ -160,6 +160,7 @@ fn translation_and_sat(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
         }
     });
     bench::report(&m_seq, Some(LOOKUPS as u64));
+    #[allow(deprecated)] // standalone expander: no service to ask for telemetry()
     let (hits, misses) = exp.tlb_stats();
     println!("  decoder TLB: {hits} hits / {misses} misses");
 

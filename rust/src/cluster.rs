@@ -60,6 +60,7 @@ use crate::lmb::queue::{
     SubmitHandle, Ticket, DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::{Consumer, FmService, LmbAlloc, LmbHost};
+use crate::observe::{Event, EventRing, StatsSnapshot};
 
 /// N LMB hosts arbitrating one switch + expander through a shared
 /// [`FabricRef`]. Hosts are addressed by their slot index (stable
@@ -87,6 +88,8 @@ pub struct Cluster {
     lane_quota: usize,
     /// Placement policy installed on every joining host.
     policy: PlacementPolicy,
+    /// Observability ring, if armed ([`Cluster::set_event_ring`]).
+    events: Option<EventRing>,
 }
 
 /// Builder for [`Cluster`].
@@ -191,6 +194,7 @@ impl ClusterBuilder {
             queue,
             lane_quota: self.lane_quota,
             policy: self.policy,
+            events: None,
         };
         for _ in 0..self.hosts {
             cluster.join_host()?;
@@ -222,12 +226,51 @@ impl Cluster {
         &self.latency
     }
 
+    // ---- observability plane ----
+
+    /// Arm a structured-event ring on the cluster: the queue and the
+    /// shared fabric emit into cheap-clone sinks of `ring` from here on.
+    /// The fabric's sink is set-once — the first ring armed on a fabric
+    /// wins; re-arming swaps only the cluster/queue side.
+    pub fn set_event_ring(&mut self, ring: EventRing) {
+        self.queue.set_event_sink(ring.sink());
+        self.fabric.set_event_sink(ring.sink());
+        self.events = Some(ring);
+    }
+
+    /// The armed event ring, if any.
+    pub fn events(&self) -> Option<&EventRing> {
+        self.events.as_ref()
+    }
+
+    /// One unified telemetry snapshot: queue counters, fabric lock
+    /// stats, expander TLB counters, and (if a ring is armed) per-kind
+    /// event counts. The cluster path has no retry loop or fault plan,
+    /// so those fields read zero here — [`FmService::telemetry`] is
+    /// the fault-aware sibling.
+    pub fn telemetry(&self) -> StatsSnapshot {
+        let (lock, tlb_hits, tlb_misses) = self.fabric.telemetry_counters();
+        StatsSnapshot {
+            queue: self.queue.stats(),
+            lock,
+            tlb_hits,
+            tlb_misses,
+            events: self.events.as_ref().map(EventRing::counts).unwrap_or_default(),
+            ..StatsSnapshot::default()
+        }
+    }
+
     /// Bind one more host to the shared fabric; returns its slot index.
     pub fn join_host(&mut self) -> Result<usize> {
         let mut host = LmbHost::bind(self.fabric.clone(), self.host_dram)?;
         host.set_placement_policy(self.policy);
         self.slots.push(Some(host));
-        Ok(self.slots.len() - 1)
+        let lane = self.slots.len() - 1;
+        if let Some(ring) = &self.events {
+            let sink = ring.sink();
+            sink.emit(Event::Join { tick: sink.now(), lane });
+        }
+        Ok(lane)
     }
 
     /// Number of slots ever created (crashed ones included).
@@ -409,6 +452,7 @@ impl Cluster {
                 self.queue.complete(Completion {
                     ticket: s.ticket,
                     lane,
+                    tenant: s.tenant,
                     result: Err(Error::Cancelled { ticket: s.ticket.0 }),
                 });
             }
@@ -421,6 +465,7 @@ impl Cluster {
                     self.queue.complete(Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::NotOwner { mmid }),
                     });
                     continue;
@@ -497,6 +542,10 @@ impl Cluster {
             .ok_or_else(|| Error::FabricManager(format!("host in slot {slot} already gone")))?;
         self.queue.cancel_lane(slot);
         self.fabric.release_host(host.host());
+        if let Some(ring) = &self.events {
+            let sink = ring.sink();
+            sink.emit(Event::Crash { tick: sink.now(), lane: slot });
+        }
         Ok(())
     }
 
@@ -568,9 +617,12 @@ impl Cluster {
                 }
             }
         }
-        let svc = FmService::new(hosts)
+        let mut svc = FmService::new(hosts)
             .with_lane_quota(self.lane_quota)
             .with_limits(self.queue.limits());
+        if let Some(ring) = self.events.take() {
+            svc.set_event_ring(ring);
+        }
         Ok((svc, self.fabric.clone(), self.latency.clone()))
     }
 }

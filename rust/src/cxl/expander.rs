@@ -253,7 +253,17 @@ impl Expander {
     }
 
     /// Translation-cache counters: `(hits, misses)` since construction.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use telemetry().tlb_hits / tlb_misses on the owning service/cluster"
+    )]
     pub fn tlb_stats(&self) -> (u64, u64) {
+        self.tlb_counters()
+    }
+
+    /// Non-deprecated internal reader behind the `tlb_stats` delegate
+    /// and the unified `telemetry()` surface.
+    pub(crate) fn tlb_counters(&self) -> (u64, u64) {
         (self.tlb_hits.load(Ordering::Relaxed), self.tlb_misses.load(Ordering::Relaxed))
     }
 
@@ -562,13 +572,13 @@ mod tests {
         let mut e = expander();
         e.add_decoder(Range::new(0x1000, 0x1000), Dpa(0)).unwrap();
         e.add_decoder(Range::new(0x8000, 0x1000), Dpa(0x4000)).unwrap();
-        assert_eq!(e.tlb_stats(), (0, 0));
+        assert_eq!(e.tlb_counters(), (0, 0));
         e.decode_hpa(Hpa(0x1000)).unwrap(); // miss, fills
         e.decode_hpa(Hpa(0x1040)).unwrap(); // hit
         e.decode_hpa(Hpa(0x1fff)).unwrap(); // hit
-        assert_eq!(e.tlb_stats(), (2, 1));
+        assert_eq!(e.tlb_counters(), (2, 1));
         e.decode_hpa(Hpa(0x8000)).unwrap(); // miss, refills
-        assert_eq!(e.tlb_stats(), (2, 2));
+        assert_eq!(e.tlb_counters(), (2, 2));
         e.check_invariants().unwrap();
         // removal invalidates: the stale window must fault, not hit
         e.remove_decoder(0x8000).unwrap();

@@ -53,7 +53,8 @@ use std::collections::HashMap;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{
-    Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError,
+    Arc, Mutex, MutexGuard, OnceLock, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    TryLockError,
 };
 
 use crate::coordinator::contention;
@@ -62,6 +63,7 @@ use crate::cxl::sat::SatPerm;
 use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{align_up, Dpa, Dpid, MmId, Range, Spid, EXTENT_SIZE};
 use crate::error::{Error, Result};
+use crate::observe::{Event, EventSink};
 
 /// Identifies a host that has bound to the fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -251,6 +253,11 @@ pub struct FabricManager {
     /// pending strike makes the next placement stall for a bounded spin
     /// before proceeding — a latency fault, never a correctness fault.
     slow_region: AtomicU32,
+    /// Structured-event sink, armed at most once (first ring wins).
+    /// Lock-free to read on the hot path; emission happens only after
+    /// the counted fabric locks are released, so observability never
+    /// perturbs the lock-stats counters or the lock order.
+    events: OnceLock<EventSink>,
 }
 
 impl FabricManager {
@@ -287,7 +294,15 @@ impl FabricManager {
             next_mmid: AtomicU64::new(1),
             stats: LockCounters::default(),
             slow_region: AtomicU32::new(0),
+            events: OnceLock::new(),
         }
+    }
+
+    /// Arm a structured-event sink on this fabric (set-once: the first
+    /// sink wins; later calls are no-ops). Alloc/free/quarantine/
+    /// failover events flow into it from every thread sharing the FM.
+    pub fn set_event_sink(&self, sink: EventSink) {
+        let _ = self.events.set(sink);
     }
 
     /// Arm `n` latency strikes: each makes one subsequent placement
@@ -378,7 +393,13 @@ impl FabricManager {
         for (idx, m) in self.regions.iter().enumerate() {
             match lock_counted(m, &self.stats.region_acquisitions, &self.stats.region_contended) {
                 Ok(g) => guards.push((idx, g)),
-                Err(_poisoned) => {}
+                Err(_poisoned) => {
+                    // capacity quarantined: record that this placement
+                    // pass skipped the poisoned shard
+                    if let Some(sink) = self.events.get() {
+                        sink.emit(Event::Quarantine { tick: sink.now(), lane: 0, region: idx });
+                    }
+                }
             }
         }
         guards
@@ -469,7 +490,15 @@ impl FabricManager {
     }
 
     /// Snapshot the lock acquisition/contention counters.
+    #[deprecated(since = "0.4.0", note = "use telemetry().lock on the owning service/cluster")]
     pub fn lock_stats(&self) -> LockStats {
+        self.lock_counters_snapshot()
+    }
+
+    /// Non-deprecated internal reader behind the `lock_stats` delegate
+    /// and the unified `telemetry()` surface. Pure atomic loads — takes
+    /// no lock and bumps no counter.
+    pub(crate) fn lock_counters_snapshot(&self) -> LockStats {
         LockStats {
             region_acquisitions: self.stats.region_acquisitions.load(Ordering::Relaxed),
             region_contended: self.stats.region_contended.load(Ordering::Relaxed),
@@ -477,6 +506,15 @@ impl FabricManager {
             control_contended: self.stats.control_contended.load(Ordering::Relaxed),
             cross_region_ops: self.stats.cross_region_ops.load(Ordering::Relaxed),
         }
+    }
+
+    /// One uncounted read of every telemetry counter the fabric owns:
+    /// `(lock stats, TLB hits, TLB misses)`. Feeds the unified
+    /// [`StatsSnapshot`](crate::observe::StatsSnapshot); reading it
+    /// disturbs neither the lock counters nor the TLB counters.
+    pub(crate) fn telemetry_counters(&self) -> (LockStats, u64, u64) {
+        let (hits, misses) = self.expander().tlb_counters();
+        (self.lock_counters_snapshot(), hits, misses)
     }
 
     // ---- extent granting (ordered multi-region path) ----
@@ -559,6 +597,13 @@ impl FabricManager {
         }
         self.free_bytes.fetch_sub(len, Ordering::Relaxed);
         *control.leased_bytes.entry(host).or_insert(0) += len;
+        // emit with every counted lock released: observability stays
+        // off the fabric's critical sections
+        drop(shards);
+        drop(control);
+        if let Some(sink) = self.events.get() {
+            sink.emit(Event::Alloc { tick: sink.now(), lane: host.0 as usize, mmid: ext.dpa.0 });
+        }
         Ok(ext)
     }
 
@@ -669,6 +714,11 @@ impl FabricManager {
             if *v == 0 {
                 control.leased_bytes.remove(&host);
             }
+        }
+        drop(guards);
+        drop(control);
+        if let Some(sink) = self.events.get() {
+            sink.emit(Event::Free { tick: sink.now(), lane: host.0 as usize, mmid: ext.dpa.0 });
         }
         Ok(())
     }
@@ -986,8 +1036,21 @@ impl FabricRef {
     }
 
     /// [`FabricManager::lock_stats`]. Poison-tolerant, lock-free read.
+    #[deprecated(since = "0.4.0", note = "use telemetry().lock on the owning service/cluster")]
     pub fn lock_stats(&self) -> LockStats {
-        self.inner.lock_stats()
+        self.inner.lock_counters_snapshot()
+    }
+
+    /// [`FabricManager::set_event_sink`] — arm the structured-event
+    /// sink on the shared fabric (set-once; first ring wins).
+    pub fn set_event_sink(&self, sink: EventSink) {
+        self.inner.set_event_sink(sink)
+    }
+
+    /// [`FabricManager::telemetry_counters`] — every fabric-owned
+    /// telemetry counter in one uncounted read.
+    pub(crate) fn telemetry_counters(&self) -> (LockStats, u64, u64) {
+        self.inner.telemetry_counters()
     }
 
     /// [`FabricManager::release_host`] — crate-internal: reclaiming a
@@ -1025,6 +1088,9 @@ impl FabricRef {
     /// failure drills can still run after an unrelated panic.
     pub fn set_expander_failed(&self, failed: bool) {
         self.inner.expander_mut().set_failed(failed);
+        if let Some(sink) = self.inner.events.get() {
+            sink.emit(Event::Failover { tick: sink.now(), lane: 0, restored: !failed });
+        }
     }
 
     /// Poison-tolerant read.
@@ -1388,26 +1454,26 @@ mod tests {
     #[test]
     fn lock_stats_count_acquisitions_and_cross_region_ops() {
         let f = fm(GIB); // 4 regions of 256 MiB
-        let s0 = f.lock_stats();
+        let s0 = f.lock_counters_snapshot();
         assert_eq!(s0, LockStats::default());
 
         let (h, _) = f.bind_host().unwrap();
-        let s1 = f.lock_stats();
+        let s1 = f.lock_counters_snapshot();
         assert_eq!(s1.control_acquisitions, 1, "bind takes only the control lock");
         assert_eq!(s1.region_acquisitions, 0);
 
         let e = f.allocate_extent(h).unwrap();
-        let s2 = f.lock_stats();
+        let s2 = f.lock_counters_snapshot();
         assert_eq!(s2.region_acquisitions, 4, "placement locks every shard once");
         assert_eq!(s2.cross_region_ops, s1.cross_region_ops + 1);
 
         f.release_extent(h, e).unwrap();
-        let s3 = f.lock_stats();
+        let s3 = f.lock_counters_snapshot();
         assert_eq!(s3.region_acquisitions, 5, "release locks only the spanned shard");
         assert_eq!(s3.cross_region_ops, s2.cross_region_ops, "single-shard release");
 
         f.release_host(h);
-        let s4 = f.lock_stats();
+        let s4 = f.lock_counters_snapshot();
         assert_eq!(s4.cross_region_ops, s3.cross_region_ops + 1, "crash reclaim is a full sweep");
 
         // single-threaded: nothing ever blocked
@@ -1419,7 +1485,7 @@ mod tests {
         let _ = f.free_ranges();
         let _ = f.lease_count();
         f.check_invariants().unwrap();
-        assert_eq!(f.lock_stats(), s4);
+        assert_eq!(f.lock_counters_snapshot(), s4);
     }
 
     #[test]

@@ -77,12 +77,13 @@
 //!   routes new leases around it. `check_invariants` and the
 //!   observability reads deliberately bypass both poison layers so
 //!   post-panic state can be audited (and crash reclaim still runs).
-//! * **Contention observability** —
-//!   [`cxl::fm::FabricManager::lock_stats`] snapshots per-layer
-//!   acquisition/contention counters ([`cxl::fm::LockStats`]); the
-//!   scaling bench (`benches/concurrency_scaling.rs`) asserts the warm
-//!   alloc/free path stays region-lock-free, and
-//!   `examples/threaded_drivers.rs` prints the counters live.
+//! * **Contention observability** — per-layer acquisition/contention
+//!   counters ([`cxl::fm::LockStats`]) land in the unified
+//!   [`observe::StatsSnapshot`] via `telemetry()` on the owning
+//!   service/cluster; the scaling bench
+//!   (`benches/concurrency_scaling.rs`) asserts the warm alloc/free
+//!   path stays region-lock-free, and `examples/threaded_drivers.rs`
+//!   prints the counters live.
 //! * **Parallel execution** — with the shards in place,
 //!   [`lmb::FmService::run`] fans disjoint hosts' scheduled groups out
 //!   to a worker pool (lane *i* pinned to worker *i* mod *W*, so
@@ -98,8 +99,8 @@
 //! * the expander keeps its HDM decoder and DMP tables **sorted and
 //!   disjoint**, so `decode_hpa`/DMP resolution are binary searches,
 //!   fronted by a **one-entry last-hit translation cache** (a
-//!   device-TLB analogue, hit/miss counters on
-//!   [`cxl::expander::Expander::tlb_stats`]);
+//!   device-TLB analogue; hit/miss counters surface as `tlb_hits` /
+//!   `tlb_misses` in the unified [`observe::StatsSnapshot`]);
 //! * the SAT keeps each SPID's grant list **sorted by window base**, so
 //!   the per-P2P-op [`cxl::sat::SatTable::check`] is a binary search;
 //! * the FM carries running `free_bytes` / per-host `leased_bytes`
@@ -182,7 +183,7 @@
 //!   [`lmb::FmService`] retries transient group failures under a
 //!   bounded, deterministic [`lmb::RetryPolicy`] (exponential backoff
 //!   expressed as yield counts — no clocks), then surfaces the typed
-//!   error. `retries_performed()` counts the heals.
+//!   error. `telemetry().retries` counts the heals.
 //! * **Liveness of the contract** — [`lmb::SubmitHandle::wait`] on a
 //!   ticket whose service has been dropped returns
 //!   [`error::Error::ServiceGone`] instead of parking forever, and
@@ -225,11 +226,48 @@
 //! in `scenarios/` — the suite test and the `scenarios` bench pick it
 //! up automatically.
 //!
+//! ## Observability plane
+//!
+//! [`observe`] is the one place diagnostics live — a canonical,
+//! structured event stream plus one telemetry snapshot, replacing the
+//! scattered per-subsystem accessors (now thin `#[deprecated]`
+//! delegates):
+//!
+//! * **Event taxonomy** — a typed [`observe::Event`] per lifecycle
+//!   transition: `submit`/`schedule`/`execute`/`complete`/`timeout`/
+//!   `retry`/`fault` on the submission plane,
+//!   `alloc`/`free`/`share`/`quarantine`/`failover` on the fabric, and
+//!   `crash`/`join` on the cluster. Every event carries its
+//!   [`sim::time::SimTime`] tick, lane, and (where meaningful) ticket,
+//!   mmid, tenant and outcome.
+//! * **Ring semantics** — [`observe::EventRing`] is a fixed-capacity
+//!   drop-oldest buffer with an exact dropped-count watermark; the
+//!   cheap-clone [`observe::EventSink`] handles let FmService workers,
+//!   fabric shards and the scenario harness emit without sharing any
+//!   fabric lock (emission happens strictly outside the counted
+//!   critical sections). Arm one via `set_event_ring` on
+//!   [`lmb::FmService`] / [`cluster::Cluster`], or implicitly through
+//!   [`scenario::ScenarioHarness`].
+//! * **JSONL dump** — `dump_events(path)` (or
+//!   [`observe::EventRing::to_jsonl`]) serialises the stream one
+//!   fixed-key-order JSON object per line; setting
+//!   `LMB_EVENT_LOG=<path>` makes every scenario replay dump its
+//!   stream automatically. Under a pinned seed the dump is
+//!   byte-identical across runs (`tests/observability.rs` proves it
+//!   against the committed `faulty_nak_retry` scenario).
+//! * **One snapshot** — `telemetry()` on [`lmb::FmService`],
+//!   [`cluster::Cluster`] and [`scenario::ScenarioHarness`] returns the
+//!   unified [`observe::StatsSnapshot`]: queue counters, lock stats,
+//!   TLB hit/miss, retries, per-point fault strikes and per-kind event
+//!   counts in one coherent read.
+//!
 //! ## Quick start
 //!
 //! The control plane is the unified, consumer-generic API on
 //! [`lmb::LmbHost`](crate::lmb::LmbHost) (forwarded by [`system::System`]);
-//! the paper's Table-2-named methods remain as deprecated shims.
+//! the paper's Table-2-named shims have been removed after their
+//! deprecation cycle — `alloc`/`free`/`share` with a typed
+//! [`lmb::Consumer`] are the one surface.
 //!
 //! ```no_run
 //! use lmb::prelude::*;
@@ -254,6 +292,7 @@ pub mod error;
 pub mod gpu;
 pub mod host;
 pub mod lmb;
+pub mod observe;
 pub mod pcie;
 pub mod runtime;
 pub mod scenario;
@@ -281,6 +320,9 @@ pub mod prelude {
     pub use crate::lmb::{
         Consumer, FaultPlan, FaultPoint, FmService, IoSession, LmbAlloc, LmbHost, LmbModule,
         LmbRegion, RetryPolicy,
+    };
+    pub use crate::observe::{
+        Event, EventCounts, EventKind, EventOutcome, EventRing, EventSink, StatsSnapshot,
     };
     pub use crate::scenario::{FaultPlanSpec, ScenarioHarness, ScenarioReport, ScenarioSpec};
     pub use crate::sim::stats::{LatencyHistogram, Throughput};

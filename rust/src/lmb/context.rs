@@ -347,7 +347,12 @@ impl LmbHost {
                     module.share(fm, iommu, owner, target, mmid).map(Outcome::Shared)
                 }
             };
-            completions.push(Completion { ticket: s.ticket, lane: s.lane, result });
+            completions.push(Completion {
+                ticket: s.ticket,
+                lane: s.lane,
+                tenant: s.tenant,
+                result,
+            });
         }
         completions
     }

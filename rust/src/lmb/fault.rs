@@ -52,6 +52,14 @@ impl FaultPoint {
         FaultPoint::CrashBetween,
     ];
 
+    /// This point's position in [`FaultPoint::ALL`] — the index of its
+    /// slot in the unified telemetry snapshot's
+    /// [`fault_strikes_by_point`](crate::observe::StatsSnapshot::fault_strikes_by_point)
+    /// array.
+    pub fn index(self) -> usize {
+        FaultPoint::ALL.iter().position(|p| *p == self).expect("ALL lists every variant")
+    }
+
     /// Stable wire name (descriptors, `LMB_FAULT_POINT`).
     pub fn name(&self) -> &'static str {
         match self {

@@ -7,19 +7,18 @@
 //! expander, so callers never thread that plumbing by hand — and any
 //! number of hosts bind to one fabric:
 //!
-//! | Operation | Unified interface            | Table 2 shims (deprecated)                        |
+//! | Operation | Unified interface            | Paper's Table 2 names (retired)                   |
 //! |-----------|------------------------------|---------------------------------------------------|
-//! | Allocate  | `alloc(consumer, size)`      | `pcie_alloc(dev, size)` / `cxl_alloc(spid, size)` |
-//! | Free      | `free(consumer, mmid)`       | `pcie_free(dev, mmid)` / `cxl_free(spid, mmid)`   |
-//! | Share     | `share(owner, target, mmid)` | `pcie_share(dev, mmid)` / `cxl_share(spid, mmid)` |
+//! | Allocate  | `alloc(consumer, size)`      | `lmb_PCIe_alloc` / `lmb_CXL_alloc`                |
+//! | Free      | `free(consumer, mmid)`       | `lmb_PCIe_free` / `lmb_CXL_free`                  |
+//! | Share     | `share(owner, target, mmid)` | `lmb_PCIe_share` / `lmb_CXL_share`                |
 //!
 //! A [`Consumer`] names the device class; dispatching on it replaces the
 //! old duplicated `pcie_*`/`cxl_*` method pairs. The paper-named shims
-//! survive only at the [`System`](crate::system::System) facade (where
-//! they delegate to the owner-checked unified paths); the module-level
-//! shims that took a raw `&mut FabricManager` were retired with the
-//! thread-safe fabric split — no direct-borrow path into the FM
-//! remains.
+//! completed their deprecation cycle and are gone from every layer
+//! (`tests/api_surface.rs` pins their absence at the
+//! [`System`](crate::system::System) facade); the table above keeps the
+//! paper mapping for readers coming from the text.
 //!
 //! Mechanics (§3.2–§3.3):
 //! * capacity comes from the FM in 256 MB extents, each mapped into host

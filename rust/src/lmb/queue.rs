@@ -82,12 +82,13 @@
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::cxl::types::MmId;
 use crate::error::{Error, Result};
 use crate::lmb::{Consumer, LmbAlloc};
+use crate::observe::{Event, EventOutcome, EventSink};
 use crate::sim::SimTime;
 
 pub use crate::cxl::fm::PlacementPolicy;
@@ -174,6 +175,9 @@ pub struct Submission {
     /// Latest simulated time the request may still be queued at; the
     /// service expires it past this via [`AllocQueue::expire_due`].
     pub deadline: Option<SimTime>,
+    /// Tenant attribution ([`SubmitHandle::submit_for`]); rides through
+    /// to the [`Completion`] and the event stream untouched.
+    pub tenant: Option<u64>,
 }
 
 /// Successful result of a serviced [`Request`].
@@ -205,6 +209,8 @@ pub struct Completion {
     pub ticket: Ticket,
     /// Lane (host slot) the submission was routed on.
     pub lane: usize,
+    /// Tenant attribution carried from the submission, if any.
+    pub tenant: Option<u64>,
     pub result: Result<Outcome>,
 }
 
@@ -266,6 +272,8 @@ pub struct Scheduled {
     pub ticket: Ticket,
     pub lane: usize,
     pub request: Request,
+    /// Tenant attribution carried from the submission, if any.
+    pub tenant: Option<u64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -296,6 +304,10 @@ struct CompletionTable {
     /// was scheduled, cancelled, or expired) or the table closes —
     /// what blocking admission parks on.
     space: Condvar,
+    /// Event-stream emitter, armed at most once per queue lifetime
+    /// ([`AllocQueue::set_event_sink`]). Emission never happens while
+    /// the table mutex is held and never touches a fabric lock.
+    sink: OnceLock<EventSink>,
 }
 
 #[derive(Debug, Default)]
@@ -434,6 +446,18 @@ impl CompletionTable {
     }
 
     fn post(&self, completion: Completion) {
+        let (ticket, lane, tenant) = (completion.ticket, completion.lane, completion.tenant);
+        let timed_out = completion.is_timed_out();
+        let outcome = match &completion.result {
+            Ok(_) => EventOutcome::Ok,
+            Err(Error::Cancelled { .. }) => EventOutcome::Cancelled,
+            Err(Error::TimedOut { .. }) => EventOutcome::TimedOut,
+            Err(_) => EventOutcome::Failed,
+        };
+        let shared_mmid = match &completion.result {
+            Ok(Outcome::Shared(a)) => Some(a.mmid.0),
+            _ => None,
+        };
         let released = {
             let mut s = self.locked();
             let released = match s.states.remove(&completion.ticket.0) {
@@ -455,6 +479,38 @@ impl CompletionTable {
         self.ready.notify_all();
         if released {
             self.space.notify_all();
+        }
+        // emitted strictly after the table mutex is released, so a slow
+        // ring can never extend the completion critical section
+        if let Some(sink) = self.sink.get() {
+            let tick = sink.now();
+            if timed_out {
+                sink.emit(Event::Timeout { tick, lane, ticket });
+            }
+            sink.emit(Event::Complete { tick, lane, ticket: Some(ticket), outcome, tenant });
+            if let Some(mmid) = shared_mmid {
+                sink.emit(Event::Share { tick, lane, mmid });
+            }
+        }
+    }
+
+    /// Record an *eager* admission rejection (dead lane, depth/byte
+    /// bound) on the event stream — the request never entered the
+    /// queue, so the `Complete` event carries no ticket.
+    fn emit_eager_reject(&self, lane: usize, tenant: Option<u64>, err: &Error) {
+        let Some(sink) = self.sink.get() else { return };
+        let outcome = match err {
+            Error::Cancelled { .. } => EventOutcome::Cancelled,
+            Error::ServiceGone => return, // nobody left to observe it
+            _ => EventOutcome::Failed,
+        };
+        sink.emit(Event::Complete { tick: sink.now(), lane, ticket: None, outcome, tenant });
+    }
+
+    /// Record an admitted submission on the event stream.
+    fn emit_submit(&self, lane: usize, ticket: Ticket, tenant: Option<u64>) {
+        if let Some(sink) = self.sink.get() {
+            sink.emit(Event::Submit { tick: sink.now(), lane, ticket, tenant });
         }
     }
 
@@ -631,15 +687,21 @@ impl SubmitHandle {
         &self,
         request: Request,
         deadline: Option<SimTime>,
+        tenant: Option<u64>,
         block: bool,
     ) -> Result<Ticket> {
-        self.table.admit(self.lane, request.cost_bytes(), block)?;
+        if let Err(err) = self.table.admit(self.lane, request.cost_bytes(), block) {
+            self.table.emit_eager_reject(self.lane, tenant, &err);
+            return Err(err);
+        }
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
         self.table.mark_queued(ticket, self.lane, request.cost_bytes());
-        if self.tx.send(Submission { ticket, lane: self.lane, request, deadline }).is_err() {
+        if self.tx.send(Submission { ticket, lane: self.lane, request, deadline, tenant }).is_err()
+        {
             self.table.forget(ticket);
             return Err(Error::ServiceGone);
         }
+        self.table.emit_submit(self.lane, ticket, tenant);
         Ok(ticket)
     }
 
@@ -651,7 +713,7 @@ impl SubmitHandle {
     /// [`Error::BudgetExceeded`] if the request could never fit the
     /// lane's byte budget.
     pub fn submit(&self, request: Request) -> Result<Ticket> {
-        self.submit_inner(request, None, true)
+        self.submit_inner(request, None, None, true)
     }
 
     /// Non-blocking [`SubmitHandle::submit`]: a lane at its bound fails
@@ -659,7 +721,20 @@ impl SubmitHandle {
     /// (both sized for a caller-side retry decision) instead of
     /// parking.
     pub fn try_submit(&self, request: Request) -> Result<Ticket> {
-        self.submit_inner(request, None, false)
+        self.submit_inner(request, None, None, false)
+    }
+
+    /// [`SubmitHandle::submit`] carrying a tenant id: the attribution
+    /// rides through the [`Scheduled`] batch into the [`Completion`]
+    /// and the event stream, giving per-tenant accounting an API path
+    /// without widening [`Request`].
+    pub fn submit_for(&self, tenant: Option<u64>, request: Request) -> Result<Ticket> {
+        self.submit_inner(request, None, tenant, true)
+    }
+
+    /// Non-blocking [`SubmitHandle::submit_for`].
+    pub fn try_submit_for(&self, tenant: Option<u64>, request: Request) -> Result<Ticket> {
+        self.submit_inner(request, None, tenant, false)
     }
 
     /// [`SubmitHandle::submit`] with a queueing deadline: if the
@@ -667,12 +742,12 @@ impl SubmitHandle {
     /// `deadline`, it completes with [`Error::TimedOut`]
     /// ([`QueueStatus::TimedOut`], terminal).
     pub fn submit_with_deadline(&self, request: Request, deadline: SimTime) -> Result<Ticket> {
-        self.submit_inner(request, Some(deadline), true)
+        self.submit_inner(request, Some(deadline), None, true)
     }
 
     /// Non-blocking [`SubmitHandle::submit_with_deadline`].
     pub fn try_submit_with_deadline(&self, request: Request, deadline: SimTime) -> Result<Ticket> {
-        self.submit_inner(request, Some(deadline), false)
+        self.submit_inner(request, Some(deadline), None, false)
     }
 
     /// Where `ticket` is in its lifecycle (thread-safe).
@@ -736,8 +811,9 @@ impl CompletionPoster {
 #[derive(Debug)]
 pub struct AllocQueue {
     /// Per-lane FIFOs, keyed by lane id (sorted, so rotation order is
-    /// deterministic). Empty lanes are removed eagerly.
-    lanes: BTreeMap<usize, VecDeque<(Ticket, Request, Option<SimTime>)>>,
+    /// deterministic). Empty lanes are removed eagerly. Entries carry
+    /// (ticket, request, deadline, tenant).
+    lanes: BTreeMap<usize, VecDeque<(Ticket, Request, Option<SimTime>, Option<u64>)>>,
     /// Ticket lifecycle + completions, shared with every handle.
     table: Arc<CompletionTable>,
     /// Fabric-side ticket namespace, shared with every handle so
@@ -821,12 +897,25 @@ impl AllocQueue {
         self.table.revive_lane(lane);
     }
 
+    /// Arm the event stream: every admission, schedule pop, and posted
+    /// completion from here on is emitted through `sink`. Set-once per
+    /// queue lifetime; a second call is a no-op (the first ring wins).
+    pub fn set_event_sink(&self, sink: EventSink) {
+        let _ = self.table.sink.set(sink);
+    }
+
+    /// The armed event sink, if any (service layers forward it).
+    pub(crate) fn event_sink(&self) -> Option<EventSink> {
+        self.table.sink.get().cloned()
+    }
+
     fn submit_owner(&mut self, lane: usize, request: Request, deadline: Option<SimTime>) -> Ticket {
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
         self.table.charge(lane, request.cost_bytes());
         self.table.mark_queued(ticket, lane, request.cost_bytes());
-        self.lanes.entry(lane).or_default().push_back((ticket, request, deadline));
+        self.lanes.entry(lane).or_default().push_back((ticket, request, deadline, None));
         self.stats.submitted += 1;
+        self.table.emit_submit(lane, ticket, None);
         ticket
     }
 
@@ -846,12 +935,27 @@ impl AllocQueue {
     /// [`Error::QueueFull`] / [`Error::BudgetExceeded`] at the lane's
     /// [`QueueLimits`], or [`Error::Cancelled`] on a dead lane.
     pub fn try_submit(&mut self, lane: usize, request: Request) -> Result<Ticket> {
-        self.table.admit(lane, request.cost_bytes(), false)?;
+        self.try_submit_for(lane, None, request)
+    }
+
+    /// Owner-path [`AllocQueue::try_submit`] carrying a tenant id (see
+    /// [`SubmitHandle::submit_for`]).
+    pub fn try_submit_for(
+        &mut self,
+        lane: usize,
+        tenant: Option<u64>,
+        request: Request,
+    ) -> Result<Ticket> {
+        if let Err(err) = self.table.admit(lane, request.cost_bytes(), false) {
+            self.table.emit_eager_reject(lane, tenant, &err);
+            return Err(err);
+        }
         let ticket = Ticket(self.next_ticket.fetch_add(1, Ordering::Relaxed));
         self.table.mark_queued(ticket, lane, request.cost_bytes());
-        self.lanes.entry(lane).or_default().push_back((ticket, request, None));
+        self.lanes.entry(lane).or_default().push_back((ticket, request, None, tenant));
         self.stats.submitted += 1;
-        ticket
+        self.table.emit_submit(lane, ticket, tenant);
+        Ok(ticket)
     }
 
     /// Owner-path submit with a queueing deadline (see
@@ -888,7 +992,10 @@ impl AllocQueue {
     }
 
     fn ingest(&mut self, sub: Submission) {
-        self.lanes.entry(sub.lane).or_default().push_back((sub.ticket, sub.request, sub.deadline));
+        self.lanes
+            .entry(sub.lane)
+            .or_default()
+            .push_back((sub.ticket, sub.request, sub.deadline, sub.tenant));
         self.stats.submitted += 1;
     }
 
@@ -942,9 +1049,12 @@ impl AllocQueue {
             let queue = self.lanes.get_mut(lane).expect("lane listed but missing");
             for _ in 0..quota {
                 match queue.pop_front() {
-                    Some((ticket, request, _deadline)) => {
+                    Some((ticket, request, _deadline, tenant)) => {
                         self.table.mark_in_flight(ticket);
-                        batch.push(Scheduled { ticket, lane: *lane, request });
+                        if let Some(sink) = self.table.sink.get() {
+                            sink.emit(Event::Schedule { tick: sink.now(), lane: *lane, ticket });
+                        }
+                        batch.push(Scheduled { ticket, lane: *lane, request, tenant });
                     }
                     None => break,
                 }
@@ -989,11 +1099,12 @@ impl AllocQueue {
             return 0;
         };
         let n = queue.len();
-        for (ticket, _, _) in queue {
+        for (ticket, _, _, tenant) in queue {
             self.cancelled.fetch_add(1, Ordering::Relaxed);
             self.table.post(Completion {
                 ticket,
                 lane,
+                tenant,
                 result: Err(Error::Cancelled { ticket: ticket.0 }),
             });
         }
@@ -1015,12 +1126,13 @@ impl AllocQueue {
         let timed_out = &self.timed_out;
         for (&lane, fifo) in self.lanes.iter_mut() {
             let before = fifo.len();
-            fifo.retain(|&(ticket, _request, deadline)| match deadline {
+            fifo.retain(|&(ticket, _request, deadline, tenant)| match deadline {
                 Some(d) if d <= now => {
                     timed_out.fetch_add(1, Ordering::Relaxed);
                     table.post(Completion {
                         ticket,
                         lane,
+                        tenant,
                         result: Err(Error::TimedOut { ticket: ticket.0 }),
                     });
                     false
@@ -1095,7 +1207,7 @@ mod tests {
         let batch = q.schedule(8);
         assert_eq!(batch.len(), 1);
         assert_eq!(q.poll(t), QueueStatus::InFlight);
-        q.complete(Completion { ticket: t, lane: 0, result: Ok(Outcome::Freed) });
+        q.complete(Completion { ticket: t, lane: 0, tenant: None, result: Ok(Outcome::Freed) });
         assert_eq!(q.poll(t), QueueStatus::Ready);
         let c = q.take(t).unwrap();
         assert_eq!(c.ticket, t);
@@ -1204,7 +1316,7 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].lane, 3);
         assert_eq!(h.poll(t), QueueStatus::InFlight);
-        q.complete(Completion { ticket: t, lane: 3, result: Ok(Outcome::Freed) });
+        q.complete(Completion { ticket: t, lane: 3, tenant: None, result: Ok(Outcome::Freed) });
         assert_eq!(h.poll(t), QueueStatus::Ready);
         let c = h.take(t).unwrap();
         assert_eq!(c.ticket, t);
@@ -1293,7 +1405,7 @@ mod tests {
             for s in batch {
                 serviced += 1;
                 let result = Ok(Outcome::Freed);
-                q.complete(Completion { ticket: s.ticket, lane: s.lane, result });
+                q.complete(Completion { ticket: s.ticket, lane: s.lane, tenant: None, result });
             }
         }
         for d in drivers {
@@ -1316,7 +1428,7 @@ mod tests {
         assert_eq!(batch.iter().map(|s| s.lane).collect::<Vec<_>>(), [0, 1]);
         for s in batch {
             let (ticket, lane) = (s.ticket, s.lane);
-            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+            q.complete(Completion { ticket, lane, tenant: None, result: Ok(Outcome::Freed) });
         }
         // either handle observes both lanes' completions (shared table)
         assert_eq!(h1.poll(t0), QueueStatus::Ready);
@@ -1343,7 +1455,7 @@ mod tests {
         let c = h.try_submit(alloc_req(1)).unwrap();
         for s in batch {
             let (ticket, lane) = (s.ticket, s.lane);
-            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+            q.complete(Completion { ticket, lane, tenant: None, result: Ok(Outcome::Freed) });
         }
         let _ = (a, b, c);
     }
@@ -1386,7 +1498,7 @@ mod tests {
             for s in q.schedule(8) {
                 scheduled += 1;
                 let (ticket, lane) = (s.ticket, s.lane);
-                q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+                q.complete(Completion { ticket, lane, tenant: None, result: Ok(Outcome::Freed) });
             }
             std::thread::yield_now();
         }
@@ -1435,7 +1547,7 @@ mod tests {
         // service the request: the same ticket still completes normally
         for s in q.schedule(8) {
             let (ticket, lane) = (s.ticket, s.lane);
-            q.complete(Completion { ticket, lane, result: Ok(Outcome::Freed) });
+            q.complete(Completion { ticket, lane, tenant: None, result: Ok(Outcome::Freed) });
         }
         let c = h.wait_timeout(t, Duration::from_secs(5)).unwrap();
         assert!(c.result.is_ok());
@@ -1465,6 +1577,56 @@ mod tests {
         h.submit(alloc_req(1)).expect("revived lane admits again");
         // the pre-crash ticket completed cancelled, not lost
         assert!(q.take(doomed).unwrap().is_cancelled());
+    }
+
+    #[test]
+    fn tenant_attribution_rides_submission_to_completion() {
+        let mut q = AllocQueue::new();
+        let h = q.handle(0).unwrap();
+        let t = h.try_submit_for(Some(77), alloc_req(1)).unwrap();
+        let anon = h.try_submit(alloc_req(1)).unwrap();
+        let batch = q.schedule(8);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].tenant, Some(77), "tenant visible to the executor");
+        assert_eq!(batch[1].tenant, None);
+        for s in batch {
+            let (ticket, lane, tenant) = (s.ticket, s.lane, s.tenant);
+            q.complete(Completion { ticket, lane, tenant, result: Ok(Outcome::Freed) });
+        }
+        assert_eq!(h.take(t).unwrap().tenant, Some(77), "tenant survives to the completion");
+        assert_eq!(h.take(anon).unwrap().tenant, None);
+        // cancellation keeps the attribution too
+        let doomed = h.submit_for(Some(9), alloc_req(1)).unwrap();
+        q.cancel_lane(0);
+        assert_eq!(q.take(doomed).unwrap().tenant, Some(9));
+    }
+
+    #[test]
+    fn armed_sink_records_the_full_lifecycle() {
+        use crate::observe::{EventKind, EventRing};
+        let ring = EventRing::new(64);
+        let mut q = AllocQueue::new();
+        q.set_event_sink(ring.sink());
+        let h = q.handle(2).unwrap();
+        let t = h.try_submit_for(Some(5), alloc_req(1)).unwrap();
+        for s in q.schedule(8) {
+            let (ticket, lane, tenant) = (s.ticket, s.lane, s.tenant);
+            q.complete(Completion { ticket, lane, tenant, result: Ok(Outcome::Freed) });
+        }
+        let events = ring.snapshot();
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, [EventKind::Submit, EventKind::Schedule, EventKind::Complete]);
+        assert!(events.iter().all(|e| e.lane() == 2));
+        assert!(events.iter().all(|e| e.ticket() == Some(t)));
+        assert_eq!(events[0].tenant(), Some(5));
+        assert_eq!(events[2].tenant(), Some(5));
+        // an eager rejection shows up as a ticketless failed completion
+        q.set_limits(QueueLimits { lane_depth: 1, lane_bytes: u64::MAX >> 1 });
+        h.try_submit(alloc_req(1)).unwrap();
+        h.try_submit(alloc_req(1)).unwrap_err();
+        let last = *ring.snapshot().last().unwrap();
+        assert_eq!(last.kind(), EventKind::Complete);
+        assert_eq!(last.ticket(), None);
     }
 
     #[test]

@@ -66,6 +66,7 @@
 //! assert_eq!(hosts.iter().map(|h| h.module().live_allocs()).sum::<usize>(), 2);
 //! ```
 
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -77,6 +78,7 @@ use crate::lmb::queue::{
     DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::LmbHost;
+use crate::observe::{Event, EventRing, EventSink, StatsSnapshot};
 use crate::sim::SimTime;
 
 /// Recover a fault-plan guard even if a worker panicked while holding
@@ -121,6 +123,9 @@ pub struct FmService {
     plan: Option<Arc<Mutex<FaultPlan>>>,
     /// Transient-failure re-executions performed (serial + workers).
     retries: Arc<AtomicU64>,
+    /// Canonical event stream ([`FmService::set_event_ring`]); `None`
+    /// means the instrumented paths skip emission entirely.
+    events: Option<EventRing>,
 }
 
 impl FmService {
@@ -137,6 +142,7 @@ impl FmService {
             retry: RetryPolicy::default(),
             plan: None,
             retries: Arc::new(AtomicU64::new(0)),
+            events: None,
         }
     }
 
@@ -189,17 +195,92 @@ impl FmService {
         self.plan = Some(Arc::new(Mutex::new(plan)));
     }
 
+    /// Arm the canonical event stream (builder form of
+    /// [`FmService::set_event_ring`]).
+    pub fn with_event_ring(mut self, ring: EventRing) -> Self {
+        self.set_event_ring(ring);
+        self
+    }
+
+    /// Arm (or share) the canonical event stream: the queue's
+    /// submit/schedule/complete path, the fabric's alloc/free/
+    /// quarantine/failover path, and the service's own tick/execute/
+    /// retry/fault/crash/join transitions all emit into `ring` from
+    /// here on. The queue and fabric sinks are set-once per their
+    /// lifetimes, so the first ring armed on a given fabric wins.
+    pub fn set_event_ring(&mut self, ring: EventRing) {
+        self.queue.set_event_sink(ring.sink());
+        for (_, host) in self.hosts() {
+            host.fabric_ref().set_event_sink(ring.sink());
+        }
+        self.events = Some(ring);
+    }
+
+    /// The armed event ring, if any.
+    pub fn events(&self) -> Option<&EventRing> {
+        self.events.as_ref()
+    }
+
+    /// Dump the armed event ring's retained stream as JSONL to `path`
+    /// (see also the `LMB_EVENT_LOG` hook on the scenario harness).
+    pub fn dump_events(&self, path: &Path) -> Result<()> {
+        let ring = self.events.as_ref().ok_or_else(|| {
+            Error::FabricManager("no event ring armed — call set_event_ring first".into())
+        })?;
+        ring.dump_jsonl(path).map_err(|e| {
+            Error::FabricManager(format!("event dump to {} failed: {e}", path.display()))
+        })
+    }
+
+    /// One snapshot of every diagnostic the service stack exposes:
+    /// queue counters, retry and fault-strike totals, fabric lock and
+    /// expander-TLB counters (zero if every host has crashed), and the
+    /// event-stream watermarks. The single replacement for the
+    /// deprecated `stats`/`retries_performed`/`fault_strikes*`
+    /// accessors.
+    pub fn telemetry(&self) -> StatsSnapshot {
+        let mut snap = StatsSnapshot {
+            queue: self.queue.stats(),
+            retries: self.retries.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        if let Some(plan) = &self.plan {
+            let p = locked_plan(plan);
+            snap.fault_strikes = p.strikes();
+            for (slot, point) in snap.fault_strikes_by_point.iter_mut().zip(FaultPoint::ALL) {
+                *slot = p.strikes_at(point);
+            }
+        }
+        if let Some((_, host)) = self.hosts().next() {
+            let (lock, tlb_hits, tlb_misses) = host.fabric_ref().telemetry_counters();
+            snap.lock = lock;
+            snap.tlb_hits = tlb_hits;
+            snap.tlb_misses = tlb_misses;
+        }
+        if let Some(ring) = &self.events {
+            snap.events = ring.counts();
+        }
+        snap
+    }
+
+    fn sink(&self) -> Option<EventSink> {
+        self.events.as_ref().map(EventRing::sink)
+    }
+
     /// Total injected-fault strikes so far (0 with no plan armed).
+    #[deprecated(since = "0.4.0", note = "use telemetry().fault_strikes")]
     pub fn fault_strikes(&self) -> u64 {
         self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes())
     }
 
     /// Injected-fault strikes at one point (0 with no plan armed).
+    #[deprecated(since = "0.4.0", note = "use telemetry().fault_strikes_by_point")]
     pub fn fault_strikes_at(&self, point: FaultPoint) -> u64 {
         self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes_at(point))
     }
 
     /// Transient-failure re-executions the retry layer has performed.
+    #[deprecated(since = "0.4.0", note = "use telemetry().retries")]
     pub fn retries_performed(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
     }
@@ -264,6 +345,9 @@ impl FmService {
             .ok_or_else(|| Error::FabricManager(format!("host behind lane {lane} already gone")))?;
         self.queue.cancel_lane(lane);
         host.fabric_ref().release_host(host.host());
+        if let Some(sink) = self.sink() {
+            sink.emit(Event::Crash { tick: self.now, lane });
+        }
         Ok(())
     }
 
@@ -273,7 +357,11 @@ impl FmService {
     /// existing handle ([`SubmitHandle::retarget`]).
     pub fn join_host(&mut self, host: LmbHost) -> usize {
         self.slots.push(Some(host));
-        self.slots.len() - 1
+        let lane = self.slots.len() - 1;
+        if let Some(sink) = self.sink() {
+            sink.emit(Event::Join { tick: self.now, lane });
+        }
+        lane
     }
 
     /// Invariant sweep over every live host (module bookkeeping, IOMMU
@@ -289,6 +377,7 @@ impl FmService {
 
     /// Queue counters (submitted / completed / cancelled / timed_out /
     /// ticks).
+    #[deprecated(since = "0.4.0", note = "use telemetry().queue")]
     pub fn stats(&self) -> QueueStats {
         self.queue.stats()
     }
@@ -315,6 +404,11 @@ impl FmService {
     /// [`run_group`]'s catalog. Returns expired + serviced requests.
     pub fn tick_at(&mut self, now: SimTime) -> usize {
         self.now = now;
+        // publish the tick to the queue/fabric emitters before anything
+        // can fire, so every event this tick carries the right stamp
+        if let Some(sink) = self.sink() {
+            sink.set_now(now);
+        }
         let expired = self.queue.expire_due(now);
         let mut rest = self.queue.schedule(self.lane_quota);
         // intake-drop strikes: scheduled, then lost before dispatch
@@ -324,17 +418,21 @@ impl FmService {
                 let mut p = locked_plan(plan);
                 rest.retain(|s| {
                     if p.strike(FaultPoint::IntakeDrop) {
-                        dropped.push((s.ticket, s.lane));
+                        dropped.push((s.ticket, s.lane, s.tenant));
                         false
                     } else {
                         true
                     }
                 });
             }
-            for (ticket, lane) in dropped {
+            for (ticket, lane, tenant) in dropped {
+                if let Some(sink) = self.sink() {
+                    sink.emit(Event::Fault { tick: now, lane, point: FaultPoint::IntakeDrop });
+                }
                 self.queue.complete(Completion {
                     ticket,
                     lane,
+                    tenant,
                     result: Err(Error::Cancelled { ticket: ticket.0 }),
                 });
             }
@@ -356,10 +454,14 @@ impl FmService {
                 _ => false,
             };
             if crash {
+                if let Some(sink) = self.sink() {
+                    sink.emit(Event::Fault { tick: now, lane, point: FaultPoint::CrashBetween });
+                }
                 for s in &group {
                     self.queue.complete(Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::Cancelled { ticket: s.ticket.0 }),
                     });
                 }
@@ -372,10 +474,14 @@ impl FmService {
     }
 
     fn execute_group(&mut self, lane: usize, group: Vec<Scheduled>) {
+        let sink = self.sink();
         match self.slots.get_mut(lane) {
             Some(Some(host)) => {
+                if let Some(sink) = &sink {
+                    sink.emit(Event::Execute { tick: self.now, lane, group: group.len() });
+                }
                 let plan = self.plan.as_deref();
-                for c in run_group(host, group, self.retry, plan, &self.retries) {
+                for c in run_group(host, group, self.retry, plan, &self.retries, sink.as_ref()) {
                     self.queue.complete(c);
                 }
             }
@@ -388,6 +494,7 @@ impl FmService {
                     self.queue.complete(crate::lmb::queue::Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::Cancelled { ticket: s.ticket.0 }),
                     });
                 }
@@ -400,6 +507,7 @@ impl FmService {
                     self.queue.complete(crate::lmb::queue::Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::FabricManager(format!("no host behind lane {lane}"))),
                     });
                 }
@@ -466,7 +574,7 @@ impl FmService {
     }
 
     fn run_pool(self, workers: usize) -> Vec<LmbHost> {
-        let FmService { mut queue, slots, lane_quota, retry, plan, retries, .. } = self;
+        let FmService { mut queue, slots, lane_quota, retry, plan, retries, events, .. } = self;
         let poster = queue.poster();
         // static lane→worker partition: worker w owns lanes ≡ w (mod W)
         let mut shards: Vec<Vec<(usize, Option<LmbHost>)>> =
@@ -483,7 +591,10 @@ impl FmService {
                 let poster = poster.clone();
                 let plan = plan.clone();
                 let retries = Arc::clone(&retries);
-                joins.push(scope.spawn(move || worker_loop(shard, rx, poster, retry, plan, retries)));
+                let sink = events.as_ref().map(EventRing::sink);
+                joins.push(
+                    scope.spawn(move || worker_loop(shard, rx, poster, retry, plan, retries, sink)),
+                );
                 txs.push(tx);
             }
             loop {
@@ -523,11 +634,15 @@ fn worker_loop(
     retry: RetryPolicy,
     plan: Option<Arc<Mutex<FaultPlan>>>,
     retries: Arc<AtomicU64>,
+    sink: Option<EventSink>,
 ) -> Vec<(usize, Option<LmbHost>)> {
     while let Ok((lane, group)) = rx.recv() {
         match shard.iter_mut().find(|&&mut (l, _)| l == lane) {
             Some((_, Some(host))) => {
-                for c in run_group(host, group, retry, plan.as_deref(), &retries) {
+                if let Some(sink) = &sink {
+                    sink.emit(Event::Execute { tick: sink.now(), lane, group: group.len() });
+                }
+                for c in run_group(host, group, retry, plan.as_deref(), &retries, sink.as_ref()) {
                     poster.post(c);
                 }
             }
@@ -536,6 +651,7 @@ fn worker_loop(
                     poster.post(Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::Cancelled { ticket: s.ticket.0 }),
                     });
                 }
@@ -545,6 +661,7 @@ fn worker_loop(
                     poster.post(Completion {
                         ticket: s.ticket,
                         lane,
+                        tenant: s.tenant,
                         result: Err(Error::FabricManager(format!("no host behind lane {lane}"))),
                     });
                 }
@@ -582,25 +699,43 @@ fn run_group(
     retry: RetryPolicy,
     plan: Option<&Mutex<FaultPlan>>,
     retries: &AtomicU64,
+    sink: Option<&EventSink>,
 ) -> Vec<Completion> {
+    let lane = group.first().map(|s| s.lane).unwrap_or(0);
     let mut out = Vec::with_capacity(group.len());
     let mut nak_first = false;
     if let Some(plan) = plan {
         let mut p = locked_plan(plan);
         if p.strike(FaultPoint::SlowRegion) {
             host.fabric_ref().inject_slow_region(1);
+            if let Some(sink) = sink {
+                sink.emit(Event::Fault { tick: sink.now(), lane, point: FaultPoint::SlowRegion });
+            }
         }
         if p.strike(FaultPoint::MidGroupPanic) && !group.is_empty() {
+            if let Some(sink) = sink {
+                sink.emit(Event::Fault {
+                    tick: sink.now(),
+                    lane,
+                    point: FaultPoint::MidGroupPanic,
+                });
+            }
             let tail = group.split_off(group.len() / 2);
             for s in tail {
                 out.push(Completion {
                     ticket: s.ticket,
                     lane: s.lane,
+                    tenant: s.tenant,
                     result: Err(Error::FabricPoisoned),
                 });
             }
         }
         nak_first = p.strike(FaultPoint::ExpanderNak);
+        if nak_first {
+            if let Some(sink) = sink {
+                sink.emit(Event::Fault { tick: sink.now(), lane, point: FaultPoint::ExpanderNak });
+            }
+        }
     }
     // keep the requests around: a transient failure re-executes them
     let originals: Vec<Scheduled> = group.clone();
@@ -610,6 +745,7 @@ fn run_group(
             .map(|s| Completion {
                 ticket: s.ticket,
                 lane: s.lane,
+                tenant: s.tenant,
                 result: Err(Error::ExpanderFailed("injected NAK".into())),
             })
             .collect()
@@ -637,6 +773,14 @@ fn run_group(
                 .expect("every retried completion came from this group")
                 .clone();
             retries.fetch_add(1, Ordering::Relaxed);
+            if let Some(sink) = sink {
+                sink.emit(Event::Retry {
+                    tick: sink.now(),
+                    lane: orig.lane,
+                    ticket,
+                    attempt: attempt + 1,
+                });
+            }
             let redo = host.execute_requests(vec![orig]);
             completions[i] = redo.into_iter().next().expect("one request yields one completion");
         }
@@ -863,7 +1007,7 @@ mod tests {
         assert!(c.is_timed_out(), "got {:?}", c.result);
         assert_eq!(h.poll(stale), QueueStatus::TimedOut, "terminal status");
         h.take(fresh).unwrap().into_alloc().unwrap();
-        assert_eq!(svc.stats().timed_out, 1);
+        assert_eq!(svc.telemetry().queue.timed_out, 1);
         svc.check_invariants().unwrap();
     }
 
@@ -879,8 +1023,8 @@ mod tests {
         // every group's first attempt NAKs, but the transient retry
         // re-executes it against the healthy fabric and succeeds
         h.take(t).unwrap().into_alloc().unwrap();
-        assert!(svc.fault_strikes_at(FaultPoint::ExpanderNak) >= 1);
-        assert!(svc.retries_performed() >= 1, "the NAK was healed by a retry");
+        assert!(svc.telemetry().fault_strikes_by_point[FaultPoint::ExpanderNak.index()] >= 1);
+        assert!(svc.telemetry().retries >= 1, "the NAK was healed by a retry");
         svc.check_invariants().unwrap();
     }
 
@@ -899,7 +1043,7 @@ mod tests {
             "a dead expander still surfaces after retries: {:?}",
             c.result
         );
-        assert_eq!(svc.retries_performed(), 2, "exactly max_attempts - 1 retries");
+        assert_eq!(svc.telemetry().retries, 2, "exactly max_attempts - 1 retries");
         fabric.set_expander_failed(false);
     }
 
@@ -913,7 +1057,7 @@ mod tests {
         let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
         assert_eq!(svc.tick(), 1, "the dropped item still counts as scheduled");
         assert!(h.take(t).unwrap().is_cancelled(), "dropped on the floor, not executed");
-        assert_eq!(svc.stats().cancelled, 1);
+        assert_eq!(svc.telemetry().queue.cancelled, 1);
         assert_eq!(svc.host(0).unwrap().module().live_allocs(), 0);
     }
 
@@ -950,7 +1094,7 @@ mod tests {
         let t = h.submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
         assert_eq!(svc.tick(), 1);
         h.take(t).unwrap().into_alloc().unwrap();
-        assert!(svc.fault_strikes_at(FaultPoint::SlowRegion) >= 1, "latency fault fired");
+        assert!(svc.telemetry().fault_strikes_by_point[FaultPoint::SlowRegion.index()] >= 1, "latency fault fired");
         svc.check_invariants().unwrap();
     }
 }

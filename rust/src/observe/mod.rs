@@ -1,0 +1,705 @@
+//! Observability plane — one canonical structured event stream plus a
+//! single telemetry snapshot for the whole stack.
+//!
+//! Diagnostics used to be scattered across ad-hoc accessors
+//! (`lock_stats()` on the fabric, `tlb_stats()` on the expander,
+//! `retries_performed()`/`fault_strikes_at()` on the service). This
+//! module replaces them with two surfaces:
+//!
+//! - **Events** ([`Event`], [`EventRing`], [`EventSink`]): every
+//!   consequential transition — submit, schedule, execute, complete,
+//!   retry, fault strike, alloc/free/share at the fabric, crash, join,
+//!   failover, quarantine, timeout — is emitted as one typed record
+//!   carrying its simulated tick, lane, and identifiers. Events land in
+//!   a fixed-capacity ring (drop-oldest, with a dropped-count
+//!   watermark) behind a cheap-clone [`EventSink`] handle, so service
+//!   workers, fabric shards, and the scenario harness all emit without
+//!   introducing a fabric-wide lock. The stream serializes to JSONL in
+//!   fixed key order, so two runs under the same seed produce
+//!   byte-identical dumps — the stream *is* the replay transcript.
+//! - **Telemetry** ([`StatsSnapshot`]): one value aggregating queue
+//!   depth, lock/TLB counters, retry and fault-strike totals, and
+//!   per-event-kind counts, returned by a single `telemetry()` entry
+//!   point on `FmService`/`Cluster`/`ScenarioHarness`.
+//!
+//! The ring never blocks emitters on readers: `emit` takes only the
+//! ring's own mutex (never a counted fabric lock), and the per-kind
+//! counters are plain atomics. When no sink is armed, the instrumented
+//! paths skip emission entirely — the hot path stays hot.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cxl::fm::LockStats;
+use crate::lmb::fault::FaultPoint;
+use crate::lmb::queue::{QueueStats, Ticket};
+use crate::sim::time::SimTime;
+
+/// Number of event kinds — the width of every per-kind counter array.
+pub const EVENT_KINDS: usize = 14;
+
+/// The taxonomy of observable transitions, one discriminant per
+/// [`Event`] variant. Order is fixed: it is the index into
+/// [`EventCounts::by_kind`] and must never be reshuffled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// A request passed admission into a lane FIFO.
+    Submit,
+    /// The rotating-quota scheduler popped a request for execution.
+    Schedule,
+    /// A lane-contiguous group was handed to a host for execution.
+    Execute,
+    /// A completion was posted (success or terminal error).
+    Complete,
+    /// A queued request expired past its deadline.
+    Timeout,
+    /// A transient failure was re-executed by the bounded retry loop.
+    Retry,
+    /// A seeded fault plan struck an injection point.
+    Fault,
+    /// The fabric leased an extent to a host.
+    Alloc,
+    /// The fabric reclaimed an extent.
+    Free,
+    /// A completed share grant (cross-consumer SAT entry).
+    Share,
+    /// A host was crashed out of the service (lane cancelled, leases
+    /// reclaimed).
+    Crash,
+    /// A host joined (or re-joined) a service lane.
+    Join,
+    /// The shared expander was failed or restored.
+    Failover,
+    /// A poisoned region shard was skipped by placement.
+    Quarantine,
+}
+
+impl EventKind {
+    /// Every kind, in counter-index order.
+    pub const ALL: [EventKind; EVENT_KINDS] = [
+        EventKind::Submit,
+        EventKind::Schedule,
+        EventKind::Execute,
+        EventKind::Complete,
+        EventKind::Timeout,
+        EventKind::Retry,
+        EventKind::Fault,
+        EventKind::Alloc,
+        EventKind::Free,
+        EventKind::Share,
+        EventKind::Crash,
+        EventKind::Join,
+        EventKind::Failover,
+        EventKind::Quarantine,
+    ];
+
+    /// Stable wire name (the JSONL `kind` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Schedule => "schedule",
+            EventKind::Execute => "execute",
+            EventKind::Complete => "complete",
+            EventKind::Timeout => "timeout",
+            EventKind::Retry => "retry",
+            EventKind::Fault => "fault",
+            EventKind::Alloc => "alloc",
+            EventKind::Free => "free",
+            EventKind::Share => "share",
+            EventKind::Crash => "crash",
+            EventKind::Join => "join",
+            EventKind::Failover => "failover",
+            EventKind::Quarantine => "quarantine",
+        }
+    }
+
+    /// Index into [`EventCounts::by_kind`].
+    pub fn index(self) -> usize {
+        match self {
+            EventKind::Submit => 0,
+            EventKind::Schedule => 1,
+            EventKind::Execute => 2,
+            EventKind::Complete => 3,
+            EventKind::Timeout => 4,
+            EventKind::Retry => 5,
+            EventKind::Fault => 6,
+            EventKind::Alloc => 7,
+            EventKind::Free => 8,
+            EventKind::Share => 9,
+            EventKind::Crash => 10,
+            EventKind::Join => 11,
+            EventKind::Failover => 12,
+            EventKind::Quarantine => 13,
+        }
+    }
+}
+
+/// How a completed submission resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventOutcome {
+    /// The request executed successfully.
+    Ok,
+    /// Terminal `Error::Cancelled` (crashed lane, dead-lane submit, or
+    /// crash-between fault).
+    Cancelled,
+    /// Terminal `Error::TimedOut` (deadline expired in the queue).
+    TimedOut,
+    /// Any other terminal error (capacity, permanent fabric fault,
+    /// eager admission rejection, ...).
+    Failed,
+}
+
+impl EventOutcome {
+    /// Stable wire name (the JSONL `outcome` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventOutcome::Ok => "ok",
+            EventOutcome::Cancelled => "cancelled",
+            EventOutcome::TimedOut => "timed_out",
+            EventOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// One observed transition. Every variant carries the simulated tick at
+/// which it happened and the lane (host slot) it is attributed to;
+/// fabric-side events use the leasing host's id as the lane and the
+/// extent's DPA as the `mmid` field (extents have no mmid of their own).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A request passed admission into `lane`'s FIFO.
+    Submit { tick: SimTime, lane: usize, ticket: Ticket, tenant: Option<u64> },
+    /// The scheduler popped `ticket` from `lane` into the next batch.
+    Schedule { tick: SimTime, lane: usize, ticket: Ticket },
+    /// A contiguous group of `group` requests for `lane` began
+    /// execution.
+    Execute { tick: SimTime, lane: usize, group: usize },
+    /// A completion was posted. `ticket` is `None` for eager admission
+    /// rejections (the request never entered the queue).
+    Complete {
+        tick: SimTime,
+        lane: usize,
+        ticket: Option<Ticket>,
+        outcome: EventOutcome,
+        tenant: Option<u64>,
+    },
+    /// `ticket` expired past its deadline while queued on `lane`.
+    Timeout { tick: SimTime, lane: usize, ticket: Ticket },
+    /// `ticket` was re-executed after a transient failure; `attempt`
+    /// counts from 2 (the first re-execution).
+    Retry { tick: SimTime, lane: usize, ticket: Ticket, attempt: u32 },
+    /// A seeded fault plan struck `point` on `lane`.
+    Fault { tick: SimTime, lane: usize, point: FaultPoint },
+    /// The fabric leased the extent at DPA `mmid` to host `lane`.
+    Alloc { tick: SimTime, lane: usize, mmid: u64 },
+    /// The fabric reclaimed the extent at DPA `mmid` from host `lane`.
+    Free { tick: SimTime, lane: usize, mmid: u64 },
+    /// Allocation `mmid` was shared by its owner on `lane`.
+    Share { tick: SimTime, lane: usize, mmid: u64 },
+    /// Host `lane` was crashed out of the service.
+    Crash { tick: SimTime, lane: usize },
+    /// A host joined (or re-joined) `lane`.
+    Join { tick: SimTime, lane: usize },
+    /// The shared expander failed (`restored == false`) or recovered
+    /// (`restored == true`). Lane is the initiating host where known,
+    /// else 0.
+    Failover { tick: SimTime, lane: usize, restored: bool },
+    /// Placement skipped poisoned region shard `region` on behalf of
+    /// host `lane`.
+    Quarantine { tick: SimTime, lane: usize, region: usize },
+}
+
+impl Event {
+    /// This event's discriminant.
+    pub fn kind(&self) -> EventKind {
+        match self {
+            Event::Submit { .. } => EventKind::Submit,
+            Event::Schedule { .. } => EventKind::Schedule,
+            Event::Execute { .. } => EventKind::Execute,
+            Event::Complete { .. } => EventKind::Complete,
+            Event::Timeout { .. } => EventKind::Timeout,
+            Event::Retry { .. } => EventKind::Retry,
+            Event::Fault { .. } => EventKind::Fault,
+            Event::Alloc { .. } => EventKind::Alloc,
+            Event::Free { .. } => EventKind::Free,
+            Event::Share { .. } => EventKind::Share,
+            Event::Crash { .. } => EventKind::Crash,
+            Event::Join { .. } => EventKind::Join,
+            Event::Failover { .. } => EventKind::Failover,
+            Event::Quarantine { .. } => EventKind::Quarantine,
+        }
+    }
+
+    /// Simulated time at which the event was observed.
+    pub fn tick(&self) -> SimTime {
+        match *self {
+            Event::Submit { tick, .. }
+            | Event::Schedule { tick, .. }
+            | Event::Execute { tick, .. }
+            | Event::Complete { tick, .. }
+            | Event::Timeout { tick, .. }
+            | Event::Retry { tick, .. }
+            | Event::Fault { tick, .. }
+            | Event::Alloc { tick, .. }
+            | Event::Free { tick, .. }
+            | Event::Share { tick, .. }
+            | Event::Crash { tick, .. }
+            | Event::Join { tick, .. }
+            | Event::Failover { tick, .. }
+            | Event::Quarantine { tick, .. } => tick,
+        }
+    }
+
+    /// Lane (host slot) the event is attributed to.
+    pub fn lane(&self) -> usize {
+        match *self {
+            Event::Submit { lane, .. }
+            | Event::Schedule { lane, .. }
+            | Event::Execute { lane, .. }
+            | Event::Complete { lane, .. }
+            | Event::Timeout { lane, .. }
+            | Event::Retry { lane, .. }
+            | Event::Fault { lane, .. }
+            | Event::Alloc { lane, .. }
+            | Event::Free { lane, .. }
+            | Event::Share { lane, .. }
+            | Event::Crash { lane, .. }
+            | Event::Join { lane, .. }
+            | Event::Failover { lane, .. }
+            | Event::Quarantine { lane, .. } => lane,
+        }
+    }
+
+    /// Ticket, for the variants that carry one.
+    pub fn ticket(&self) -> Option<Ticket> {
+        match *self {
+            Event::Submit { ticket, .. }
+            | Event::Schedule { ticket, .. }
+            | Event::Timeout { ticket, .. }
+            | Event::Retry { ticket, .. } => Some(ticket),
+            Event::Complete { ticket, .. } => ticket,
+            _ => None,
+        }
+    }
+
+    /// Completion outcome, for `Complete` events.
+    pub fn outcome(&self) -> Option<EventOutcome> {
+        match *self {
+            Event::Complete { outcome, .. } => Some(outcome),
+            _ => None,
+        }
+    }
+
+    /// Tenant attribution, where a tenant id flowed through the queue.
+    pub fn tenant(&self) -> Option<u64> {
+        match *self {
+            Event::Submit { tenant, .. } | Event::Complete { tenant, .. } => tenant,
+            _ => None,
+        }
+    }
+
+    /// One JSONL record in fixed key order:
+    /// `tick_ns, kind, lane, ticket, mmid, tenant, outcome, detail`.
+    /// Absent fields serialize as `null` so every line has the same
+    /// shape (line-by-line parseable, greppable by key).
+    pub fn to_jsonl_line(&self) -> String {
+        let mmid = match *self {
+            Event::Alloc { mmid, .. } | Event::Free { mmid, .. } | Event::Share { mmid, .. } => {
+                Some(mmid)
+            }
+            _ => None,
+        };
+        let detail = match *self {
+            Event::Execute { group, .. } => Some(format!("group={group}")),
+            Event::Retry { attempt, .. } => Some(format!("attempt={attempt}")),
+            Event::Fault { point, .. } => Some(format!("point={}", point.name())),
+            Event::Failover { restored, .. } => Some(format!("restored={restored}")),
+            Event::Quarantine { region, .. } => Some(format!("region={region}")),
+            _ => None,
+        };
+        let mut line = String::with_capacity(128);
+        let _ = write!(
+            line,
+            "{{\"tick_ns\": {}, \"kind\": \"{}\", \"lane\": {}",
+            self.tick().as_ns(),
+            self.kind().name(),
+            self.lane()
+        );
+        match self.ticket() {
+            Some(t) => {
+                let _ = write!(line, ", \"ticket\": {}", t.0);
+            }
+            None => line.push_str(", \"ticket\": null"),
+        }
+        match mmid {
+            Some(m) => {
+                let _ = write!(line, ", \"mmid\": {m}");
+            }
+            None => line.push_str(", \"mmid\": null"),
+        }
+        match self.tenant() {
+            Some(t) => {
+                let _ = write!(line, ", \"tenant\": {t}");
+            }
+            None => line.push_str(", \"tenant\": null"),
+        }
+        match self.outcome() {
+            Some(o) => {
+                let _ = write!(line, ", \"outcome\": \"{}\"", o.name());
+            }
+            None => line.push_str(", \"outcome\": null"),
+        }
+        match detail {
+            Some(d) => {
+                let _ = write!(line, ", \"detail\": \"{d}\"");
+            }
+            None => line.push_str(", \"detail\": null"),
+        }
+        line.push('}');
+        line
+    }
+}
+
+/// Per-kind event counters plus the ring's emit/drop watermarks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventCounts {
+    /// Total events emitted since the ring was created (or cleared),
+    /// including those since evicted by capacity.
+    pub emitted: u64,
+    /// Events evicted from the ring by capacity pressure. The ring
+    /// still holds `emitted - dropped` of the most recent events.
+    pub dropped: u64,
+    /// Emission count per [`EventKind`], indexed by
+    /// [`EventKind::index`].
+    pub by_kind: [u64; EVENT_KINDS],
+}
+
+impl EventCounts {
+    /// Emission count for one kind.
+    pub fn of(&self, kind: EventKind) -> u64 {
+        self.by_kind[kind.index()]
+    }
+}
+
+/// One snapshot of every diagnostic the stack exposes, returned by the
+/// `telemetry()` entry points. Collapses the formerly scattered
+/// accessors (`lock_stats`, `tlb_stats`, `retries_performed`,
+/// `fault_strikes_at`, `stats`) into a single value.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Submission-plane counters (depth, posted, cancelled, timed out).
+    pub queue: QueueStats,
+    /// Transient-failure re-executions performed by the service.
+    pub retries: u64,
+    /// Total seeded fault strikes across every injection point.
+    pub fault_strikes: u64,
+    /// Strikes per [`FaultPoint`], indexed by `FaultPoint::ALL` order.
+    pub fault_strikes_by_point: [u64; 5],
+    /// Fabric lock acquisition/contention counters.
+    pub lock: LockStats,
+    /// Decoder one-entry TLB hits across the shared expander.
+    pub tlb_hits: u64,
+    /// Decoder one-entry TLB misses across the shared expander.
+    pub tlb_misses: u64,
+    /// Event-stream counters (zero when no ring is armed).
+    pub events: EventCounts,
+}
+
+struct RingInner {
+    buf: Mutex<VecDeque<Event>>,
+    cap: usize,
+    /// Current simulated time, published by the driving loop so
+    /// emitters below the service (queue table, fabric) can stamp
+    /// events without threading `SimTime` through every call.
+    now: AtomicU64,
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+    counts: [AtomicU64; EVENT_KINDS],
+}
+
+impl RingInner {
+    fn lock_buf(&self) -> std::sync::MutexGuard<'_, VecDeque<Event>> {
+        // Observability must survive panics elsewhere: audit through
+        // poison rather than propagating it.
+        self.buf.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Cheap-clone emitter handle onto an [`EventRing`]. Cloning shares the
+/// ring; emission takes only the ring's own mutex — never a counted
+/// fabric lock — so arming a sink cannot change lock-stat assertions or
+/// add fabric-wide contention.
+#[derive(Clone)]
+pub struct EventSink {
+    inner: Arc<RingInner>,
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSink").field("cap", &self.inner.cap).finish()
+    }
+}
+
+impl EventSink {
+    /// Record one event. Drop-oldest on capacity; never blocks on
+    /// readers longer than the ring mutex.
+    pub fn emit(&self, event: Event) {
+        let inner = &*self.inner;
+        inner.emitted.fetch_add(1, Ordering::Relaxed);
+        inner.counts[event.kind().index()].fetch_add(1, Ordering::Relaxed);
+        let mut buf = inner.lock_buf();
+        if buf.len() >= inner.cap {
+            buf.pop_front();
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(event);
+    }
+
+    /// Publish the current simulated time for emitters that are not
+    /// handed a tick explicitly.
+    pub fn set_now(&self, now: SimTime) {
+        self.inner.now.store(now.as_ns(), Ordering::Relaxed);
+    }
+
+    /// The last published simulated time.
+    pub fn now(&self) -> SimTime {
+        SimTime(self.inner.now.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-capacity in-memory event log. Create one, hand [`sink`]
+/// (cheap-clone) handles to the emitting layers, then [`snapshot`] /
+/// [`to_jsonl`] / [`dump_jsonl`] the stream after the run.
+///
+/// [`sink`]: EventRing::sink
+/// [`snapshot`]: EventRing::snapshot
+/// [`to_jsonl`]: EventRing::to_jsonl
+/// [`dump_jsonl`]: EventRing::dump_jsonl
+#[derive(Clone)]
+pub struct EventRing {
+    inner: Arc<RingInner>,
+}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("cap", &self.inner.cap)
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl EventRing {
+    /// A ring holding at most `capacity` events (minimum 1); older
+    /// events are evicted and counted in the dropped watermark.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        EventRing {
+            inner: Arc::new(RingInner {
+                buf: Mutex::new(VecDeque::with_capacity(cap.min(1 << 16))),
+                cap,
+                now: AtomicU64::new(0),
+                emitted: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                counts: Default::default(),
+            }),
+        }
+    }
+
+    /// A cheap-clone emitter handle sharing this ring.
+    pub fn sink(&self) -> EventSink {
+        EventSink { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Events currently retained, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.inner.lock_buf().iter().copied().collect()
+    }
+
+    /// Number of events currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock_buf().len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by capacity pressure since creation/clear.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Emit/drop watermarks and per-kind counters.
+    pub fn counts(&self) -> EventCounts {
+        let inner = &*self.inner;
+        let mut by_kind = [0u64; EVENT_KINDS];
+        for (slot, counter) in by_kind.iter_mut().zip(inner.counts.iter()) {
+            *slot = counter.load(Ordering::Relaxed);
+        }
+        EventCounts {
+            emitted: inner.emitted.load(Ordering::Relaxed),
+            dropped: inner.dropped.load(Ordering::Relaxed),
+            by_kind,
+        }
+    }
+
+    /// Drop all retained events and reset every counter, keeping the
+    /// sinks armed (handles stay valid).
+    pub fn clear(&self) {
+        let inner = &*self.inner;
+        inner.lock_buf().clear();
+        inner.emitted.store(0, Ordering::Relaxed);
+        inner.dropped.store(0, Ordering::Relaxed);
+        for counter in &inner.counts {
+            counter.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// The retained stream as JSONL (one fixed-key-order object per
+    /// line, oldest first). Byte-identical across runs under a pinned
+    /// seed on the serial replay path.
+    pub fn to_jsonl(&self) -> String {
+        let buf = self.inner.lock_buf();
+        let mut out = String::with_capacity(buf.len() * 128);
+        for ev in buf.iter() {
+            out.push_str(&ev.to_jsonl_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL stream to `path` (see `LMB_EVENT_LOG`).
+    pub fn dump_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn ev(ns: u64, lane: usize) -> Event {
+        Event::Submit { tick: SimTime(ns), lane, ticket: Ticket(ns), tenant: None }
+    }
+
+    #[test]
+    fn kind_index_is_all_order_and_names_unique() {
+        let mut names = std::collections::BTreeSet::new();
+        for (i, k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{:?} out of ALL order", k);
+            assert!(names.insert(k.name()), "duplicate wire name {}", k.name());
+        }
+        assert_eq!(names.len(), EVENT_KINDS);
+    }
+
+    #[test]
+    fn capacity_wrap_drops_oldest_and_counts() {
+        let ring = EventRing::new(4);
+        let sink = ring.sink();
+        for i in 0..10u64 {
+            sink.emit(ev(i, 0));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let kept = ring.snapshot();
+        assert_eq!(
+            kept.iter().map(|e| e.tick().as_ns()).collect::<Vec<_>>(),
+            vec![6, 7, 8, 9],
+            "oldest events must be the ones evicted"
+        );
+        let counts = ring.counts();
+        assert_eq!(counts.emitted, 10);
+        assert_eq!(counts.dropped, 6);
+        assert_eq!(counts.of(EventKind::Submit), 10);
+        assert_eq!(counts.of(EventKind::Fault), 0);
+    }
+
+    #[test]
+    fn concurrent_emit_conserves_events() {
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 500;
+        let ring = EventRing::new(THREADS * PER_THREAD / 4);
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let sink = ring.sink();
+                scope.spawn(move || {
+                    for _ in 0..PER_THREAD {
+                        let n = NEXT.fetch_add(1, Ordering::Relaxed) as u64;
+                        sink.emit(ev(n, t));
+                    }
+                });
+            }
+        });
+        let counts = ring.counts();
+        assert_eq!(counts.emitted, (THREADS * PER_THREAD) as u64);
+        // retained + watermark accounts for every emission — nothing
+        // lost beyond what the drop counter admits to
+        assert_eq!(ring.len() as u64 + counts.dropped, counts.emitted);
+        assert_eq!(ring.len(), THREADS * PER_THREAD / 4, "ring must sit at capacity");
+    }
+
+    #[test]
+    fn jsonl_lines_have_fixed_shape() {
+        let ring = EventRing::new(16);
+        let sink = ring.sink();
+        sink.emit(Event::Submit { tick: SimTime(5), lane: 1, ticket: Ticket(7), tenant: Some(42) });
+        sink.emit(Event::Complete {
+            tick: SimTime(9),
+            lane: 1,
+            ticket: Some(Ticket(7)),
+            outcome: EventOutcome::Ok,
+            tenant: Some(42),
+        });
+        sink.emit(Event::Fault { tick: SimTime(9), lane: 0, point: FaultPoint::ExpanderNak });
+        sink.emit(Event::Failover { tick: SimTime(10), lane: 0, restored: false });
+        let dump = ring.to_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(
+            lines[0],
+            "{\"tick_ns\": 5, \"kind\": \"submit\", \"lane\": 1, \"ticket\": 7, \
+             \"mmid\": null, \"tenant\": 42, \"outcome\": null, \"detail\": null}"
+        );
+        assert_eq!(
+            lines[1],
+            "{\"tick_ns\": 9, \"kind\": \"complete\", \"lane\": 1, \"ticket\": 7, \
+             \"mmid\": null, \"tenant\": 42, \"outcome\": \"ok\", \"detail\": null}"
+        );
+        assert!(lines[2].contains("\"kind\": \"fault\""));
+        assert!(lines[2].contains("\"detail\": \"point=expander_nak\""));
+        assert!(lines[3].contains("\"detail\": \"restored=false\""));
+        for line in lines {
+            assert!(line.starts_with("{\"tick_ns\": "), "fixed key order broken: {line}");
+            assert!(line.ends_with('}'));
+        }
+    }
+
+    #[test]
+    fn clear_resets_but_keeps_sinks_armed() {
+        let ring = EventRing::new(8);
+        let sink = ring.sink();
+        sink.emit(ev(1, 0));
+        ring.clear();
+        assert!(ring.is_empty());
+        assert_eq!(ring.counts(), EventCounts::default());
+        sink.emit(ev(2, 0));
+        assert_eq!(ring.len(), 1, "old sink must still reach the cleared ring");
+    }
+
+    #[test]
+    fn sink_publishes_now() {
+        let ring = EventRing::new(2);
+        let sink = ring.sink();
+        assert_eq!(sink.now(), SimTime(0));
+        sink.set_now(SimTime::us(3));
+        assert_eq!(ring.sink().now(), SimTime::us(3));
+    }
+}

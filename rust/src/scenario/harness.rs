@@ -24,11 +24,23 @@
 //!
 //! After the last event the harness **hard-asserts** the run: exact
 //! count conservation (`submitted == ok + failed + cancelled`), the
-//! spec's completion floors, an empty inflight set, and full service +
-//! fabric invariant sweeps. A scenario that completes without
-//! panicking has really pushed its ops through the fabric.
+//! spec's completion floors, an empty inflight set, full service +
+//! fabric invariant sweeps, and event-stream reconciliation (every
+//! accounted op except a phantom all-lanes-dead arrival is explained
+//! by exactly one `Complete` event in the canonical stream). A
+//! scenario that completes without panicking has really pushed its ops
+//! through the fabric.
+//!
+//! Every run arms the crate's observability plane: the harness owns an
+//! [`EventRing`] shared with the service, the fabric and the queue, so
+//! [`ScenarioHarness::events`], [`ScenarioHarness::telemetry`] and
+//! [`ScenarioHarness::dump_events`] expose the replay's canonical
+//! stream and unified counters after the fact. Setting `LMB_EVENT_LOG`
+//! to a path dumps the stream as JSONL automatically after each run.
 
 use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Mutex;
 
 use crate::cluster::Cluster;
 use crate::cxl::fm::FabricRef;
@@ -38,6 +50,7 @@ use crate::lmb::queue::{
     Completion, Outcome, PlacementPolicy, QueueLimits, Request, SubmitHandle, Ticket,
 };
 use crate::lmb::{FmService, LmbHost};
+use crate::observe::{EventKind, EventRing, StatsSnapshot};
 use crate::scenario::report::ScenarioReport;
 use crate::scenario::spec::{Arrival, FaultKind, ScenarioSpec};
 use crate::scenario::tenant::{AllocRec, TenantBook};
@@ -72,17 +85,52 @@ struct Pending {
 #[derive(Debug)]
 pub struct ScenarioHarness {
     spec: ScenarioSpec,
+    /// The canonical event stream for the replay: armed on the service
+    /// before the first arrival, cleared at the start of every run so
+    /// reruns on one harness are byte-identical under one seed.
+    ring: EventRing,
+    /// Telemetry captured after the last completed run's hard asserts
+    /// (the service is consumed by the replay, so the snapshot is
+    /// stashed here for post-run inspection).
+    last: Mutex<Option<StatsSnapshot>>,
 }
 
 impl ScenarioHarness {
     pub fn new(spec: ScenarioSpec) -> Self {
-        ScenarioHarness { spec }
+        // ~5 events per op (submit/schedule/execute/complete + fabric),
+        // with headroom for retries and faults; capped so a million-op
+        // descriptor cannot balloon the ring.
+        let cap = (spec.ops as usize).saturating_mul(8).clamp(1024, 1 << 20);
+        ScenarioHarness { spec, ring: EventRing::new(cap), last: Mutex::new(None) }
     }
 
     /// Load a descriptor (with the environment hooks applied) and
     /// replay it.
     pub fn replay_file(path: &std::path::Path) -> Result<ScenarioReport> {
         ScenarioHarness::new(crate::scenario::load_effective(path)?).run()
+    }
+
+    /// The event ring the replay emits into. After [`run`](Self::run)
+    /// it retains the (capacity-bounded) tail of the run's canonical
+    /// stream; [`EventRing::counts`] carries the exact per-kind totals
+    /// regardless of eviction.
+    pub fn events(&self) -> &EventRing {
+        &self.ring
+    }
+
+    /// The unified [`StatsSnapshot`] captured at the end of the last
+    /// completed run ([`StatsSnapshot::default`] before any run).
+    pub fn telemetry(&self) -> StatsSnapshot {
+        self.last.lock().expect("telemetry stash poisoned").unwrap_or_default()
+    }
+
+    /// Dump the last run's retained event stream as JSONL to `path`
+    /// (the `LMB_EVENT_LOG` hook does this automatically after every
+    /// run).
+    pub fn dump_events(&self, path: &Path) -> Result<()> {
+        self.ring.dump_jsonl(path).map_err(|e| {
+            Error::Config(format!("event dump to {} failed: {e}", path.display()))
+        })
     }
 
     /// Build the cluster, convert it to the service, and replay the
@@ -108,6 +156,12 @@ impl ScenarioHarness {
             }
         }
         let (mut svc, fabric, latency) = cluster.into_service()?;
+        // Fresh fabric + service per run, one harness-lifetime ring:
+        // clear it so the retained stream and counters describe exactly
+        // this replay, then arm the queue + fabric sinks through the
+        // service.
+        self.ring.clear();
+        svc.set_event_ring(self.ring.clone());
 
         // The env override (CI's fault matrix) outranks the descriptor's
         // own [fault_plan]; either way the plan RNG is keyed by the
@@ -162,10 +216,16 @@ impl ScenarioHarness {
             ok: 0,
             failed: 0,
             cancelled: 0,
+            phantom: 0,
             failed_capacity: 0,
             failed_expander: 0,
         };
-        replay.run()
+        let report = replay.run()?;
+        *self.last.lock().expect("telemetry stash poisoned") = Some(replay.svc.telemetry());
+        if let Some(path) = crate::scenario::event_log_path() {
+            self.dump_events(&path)?;
+        }
+        Ok(report)
     }
 }
 
@@ -207,6 +267,10 @@ struct Replay<'a> {
     ok: u64,
     failed: u64,
     cancelled: u64,
+    /// Arrivals accounted as failed without ever touching the queue
+    /// (every lane dead): the one class of op with no `Complete` event,
+    /// so the event-stream reconciliation can stay exact.
+    phantom: u64,
     failed_capacity: u64,
     failed_expander: u64,
 }
@@ -264,6 +328,24 @@ impl Replay<'_> {
         self.svc.check_invariants()?;
         self.fabric.check_invariants()?;
 
+        // ---- event-stream reconciliation: every accounted op is ----
+        // ---- explained by the canonical stream                   ----
+        // The queue posts exactly one completion per admitted ticket and
+        // one eager-reject record per refused op, and each emits one
+        // `Complete` event; only phantom arrivals (every lane dead)
+        // bypass the queue. Per-kind counters survive ring eviction, so
+        // this holds at any capacity.
+        let ev = self.svc.events().expect("the harness always arms the ring").counts();
+        assert_eq!(
+            ev.of(EventKind::Complete),
+            self.submitted - self.phantom,
+            "{name}: Complete events do not explain the accounted ops"
+        );
+        assert!(
+            ev.of(EventKind::Submit) <= ev.of(EventKind::Complete),
+            "{name}: more admitted tickets than completion records"
+        );
+
         let tenant_means = self.book.tenant_mean_histogram();
         Ok(ScenarioReport {
             name: name.clone(),
@@ -298,6 +380,7 @@ impl Replay<'_> {
             // arrival budget and conservation stay exact
             self.submitted += 1;
             self.failed += 1;
+            self.phantom += 1;
             self.advance_arrivals();
             return;
         }
@@ -349,7 +432,7 @@ impl Replay<'_> {
         // the bounded intake can refuse an op outright: a dead lane
         // rejects eagerly (cancelled), a spent admission budget pushes
         // back (failed) — either way the op is accounted, never lost
-        match handle.try_submit(request) {
+        match handle.try_submit_for(Some(tenant), request) {
             Ok(ticket) => {
                 self.inflight.push_back(Pending {
                     ticket,
@@ -613,6 +696,39 @@ mod tests {
         .unwrap();
         assert_eq!(report.submitted, report.ok + report.failed + report.cancelled);
         assert!(report.ok > 0, "{}", report.summary());
+    }
+
+    #[test]
+    fn scenario_harness_event_stream_and_telemetry_cover_the_run() {
+        let h = ScenarioHarness::new(spec(""));
+        let report = h.run().unwrap();
+
+        // every accounted op has a Complete record (no phantom arrivals
+        // in a crash-free run), and the tail retained in the ring is
+        // the run's stream, tenants attached
+        let counts = h.events().counts();
+        assert_eq!(counts.of(EventKind::Complete), report.submitted);
+        assert!(counts.of(EventKind::Alloc) >= 1, "fabric allocations were observed");
+        assert!(counts.of(EventKind::Schedule) >= 1, "queue scheduling was observed");
+        let tenanted = h
+            .events()
+            .snapshot()
+            .iter()
+            .filter(|e| matches!(e, crate::observe::Event::Submit { tenant: Some(_), .. }))
+            .count();
+        assert!(tenanted > 0, "submissions carry the replay's tenant attribution");
+
+        // the stashed snapshot is the end-of-run view of the same ring
+        let snap = h.telemetry();
+        assert_eq!(snap.events.emitted, counts.emitted);
+        assert_eq!(snap.events.of(EventKind::Complete), report.submitted);
+
+        // one seed, one stream: a rerun on the same harness reproduces
+        // the retained JSONL byte for byte
+        let first = h.events().to_jsonl();
+        assert!(!first.is_empty());
+        h.run().unwrap();
+        assert_eq!(h.events().to_jsonl(), first, "replay is byte-identical per seed");
     }
 
     #[test]

@@ -53,6 +53,11 @@
 //! * `LMB_FAULT_RATE_PPM` — per-opportunity strike rate for the armed
 //!   point, parts-per-million (default 20000). Only read when
 //!   `LMB_FAULT_POINT` is set.
+//! * `LMB_EVENT_LOG` — a file path: after every harness run the
+//!   retained canonical event stream is dumped there as JSONL (one
+//!   fixed-key-order object per line — see the crate-level
+//!   "Observability plane" section). Byte-identical across runs under
+//!   a pinned seed; CI's observability job diffs two dumps to prove it.
 //!
 //! # Adding a scenario
 //!
@@ -162,6 +167,28 @@ fn parse_fault_rate(var: Option<&str>) -> Option<u32> {
     var?.trim().parse::<u32>().ok().filter(|&r| (1..=1_000_000).contains(&r))
 }
 
+/// Event-dump path: the `LMB_EVENT_LOG` environment variable when set
+/// (any non-empty path), else `None`. When set, every
+/// [`ScenarioHarness`] run finishes by dumping its retained canonical
+/// event stream there as JSONL.
+pub fn event_log_path() -> Option<PathBuf> {
+    match std::env::var("LMB_EVENT_LOG") {
+        Err(_) => None,
+        Ok(v) => parse_event_log(Some(&v)),
+    }
+}
+
+/// Parsing behind [`event_log_path`] (same no-`set_var` rationale as
+/// [`parse_seed`]).
+fn parse_event_log(var: Option<&str>) -> Option<PathBuf> {
+    let v = var?.trim();
+    if v.is_empty() {
+        None
+    } else {
+        Some(PathBuf::from(v))
+    }
+}
+
 /// FNV-1a hash of a scenario name: the RNG *stream* id, so two
 /// scenarios sharing one pinned seed still draw independent tenant
 /// sequences (PCG streams are independent per increment).
@@ -243,6 +270,15 @@ mod tests {
         assert_eq!(parse_fault_rate(Some("0")), None, "zero rate never strikes");
         assert_eq!(parse_fault_rate(Some("1000001")), None, "over unity");
         assert_eq!(parse_fault_rate(Some("lots")), None);
+    }
+
+    #[test]
+    fn scenario_event_log_parsing() {
+        assert_eq!(parse_event_log(None), None);
+        assert_eq!(parse_event_log(Some("")), None, "empty disables the dump");
+        assert_eq!(parse_event_log(Some("  ")), None);
+        assert_eq!(parse_event_log(Some("/tmp/events.jsonl")), Some("/tmp/events.jsonl".into()));
+        assert_eq!(parse_event_log(Some(" out.jsonl ")), Some("out.jsonl".into()));
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //!
 //! The LMB control plane lives in the composed [`LmbHost`] context; the
 //! `System` adds device enumeration (BDFs, SPIDs) on top and forwards
-//! the unified `alloc`/`free`/`share` surface. The Table-2-named methods
-//! remain as deprecated shims for the paper mapping.
+//! the unified `alloc`/`free`/`share` surface. The Table-2-named shims
+//! (`pcie_*`/`cxl_*`) completed their deprecation cycle and are gone —
+//! `tests/api_surface.rs` pins their absence.
 
 use crate::cxl::expander::{Expander, ExpanderConfig};
 use crate::cxl::fabric::{Fabric, FabricConfig};
@@ -281,52 +282,6 @@ impl System {
     /// The host's allocation queue (stats / pending inspection).
     pub fn queue(&self) -> &AllocQueue {
         self.lmb.queue()
-    }
-
-    // ---- deprecated Table 2 shims ----
-
-    /// `lmb_PCIe_alloc` for an attached SSD.
-    #[deprecated(note = "use `System::alloc` with a `Consumer` (see `System::consumer`)")]
-    pub fn pcie_alloc(&mut self, dev: DeviceId, size: u64) -> Result<LmbAlloc> {
-        let c = self.consumer(dev)?;
-        self.lmb.alloc(c, size)
-    }
-
-    /// `lmb_CXL_alloc` for an attached CXL device.
-    #[deprecated(note = "use `System::alloc` with a `Consumer`")]
-    pub fn cxl_alloc(&mut self, spid: Spid, size: u64) -> Result<LmbAlloc> {
-        self.lmb.alloc(spid, size)
-    }
-
-    /// `lmb_PCIe_free`.
-    #[deprecated(note = "use `System::free` with a `Consumer`")]
-    pub fn pcie_free(&mut self, dev: DeviceId, mmid: MmId) -> Result<()> {
-        let c = self.consumer(dev)?;
-        self.lmb.free(c, mmid)
-    }
-
-    /// `lmb_CXL_free`.
-    #[deprecated(note = "use `System::free` with a `Consumer`")]
-    pub fn cxl_free(&mut self, spid: Spid, mmid: MmId) -> Result<()> {
-        self.lmb.free(spid, mmid)
-    }
-
-    /// `lmb_PCIe_share`: map `mmid` into another PCIe device's domain.
-    /// Self-authorised (the paper's signature names no sharer); the
-    /// unified [`System::share`] enforces ownership.
-    #[deprecated(note = "use `System::share`, which checks ownership")]
-    pub fn pcie_share(&mut self, target: DeviceId, mmid: MmId) -> Result<LmbAlloc> {
-        let owner = self.module().owner_of(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        let t = self.consumer(target)?;
-        self.lmb.share(owner, t, mmid)
-    }
-
-    /// `lmb_CXL_share`: grant another CXL device P2P access to `mmid`.
-    /// Self-authorised like [`System::pcie_share`].
-    #[deprecated(note = "use `System::share`, which checks ownership")]
-    pub fn cxl_share(&mut self, target: Spid, mmid: MmId) -> Result<LmbAlloc> {
-        let owner = self.module().owner_of(mmid).ok_or(Error::UnknownMmId(mmid))?;
-        self.lmb.share(owner, target, mmid)
     }
 
     // ---- data path ----

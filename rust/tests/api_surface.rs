@@ -1,24 +1,32 @@
 //! Table 2 API surface: every operation the paper specifies, exercised
-//! end-to-end through the System facade.
+//! end-to-end through the System facade's unified consumer-generic API
+//! (`alloc`/`free`/`share`).
 //!
-//! These tests deliberately call the deprecated Table-2-named shims so
-//! the paper mapping stays pinned; new code should use the unified
-//! consumer-generic API (covered by `tests/lmb_host.rs`).
+//! The Table-2-*named* shims (`pcie_alloc`, `cxl_share`, ...) completed
+//! their deprecation cycle and are gone; this file now pins three
+//! things: the paper's semantics on the unified surface, the shims'
+//! *absence* (a compile-time probe), and the equivalence of the
+//! remaining deprecated per-layer accessors with the unified
+//! `telemetry()` snapshot during their own deprecation cycle.
 #![allow(deprecated)]
 
-use lmb::cxl::types::{MmId, EXTENT_SIZE, PAGE_SIZE};
+use lmb::cxl::expander::{Expander, ExpanderConfig};
+use lmb::cxl::switch::PbrSwitch;
+use lmb::cxl::types::{Bdf, MmId, EXTENT_SIZE, GIB, PAGE_SIZE};
 use lmb::prelude::*;
+use lmb::system::DeviceId;
 
 fn system() -> System {
     System::builder().expander_gib(8).build().unwrap()
 }
 
 #[test]
-fn lmb_pcie_alloc_returns_hpa_and_mmid() {
+fn lmb_alloc_returns_hpa_and_mmid_for_pcie() {
     // Table 2: lmb_PCIe_alloc(*dev, size, *hpa, *mmid)
     let mut sys = system();
     let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let a = sys.pcie_alloc(dev, 16 * PAGE_SIZE).unwrap();
+    let c = sys.consumer(dev).unwrap();
+    let a = sys.alloc(c, 16 * PAGE_SIZE).unwrap();
     assert!(a.hpa.0 > 0);
     assert!(a.mmid.0 > 0);
     assert!(a.bus_addr.is_some(), "PCIe consumers get a bus address");
@@ -26,11 +34,11 @@ fn lmb_pcie_alloc_returns_hpa_and_mmid() {
 }
 
 #[test]
-fn lmb_cxl_alloc_returns_hpa_dpid_and_mmid() {
+fn lmb_alloc_returns_hpa_dpid_and_mmid_for_cxl() {
     // Table 2: lmb_CXL_alloc(*CXLd, size, *hpa, *DPID, *mmid)
     let mut sys = system();
     let accel = sys.attach_cxl_device("cxl-ssd").unwrap();
-    let a = sys.cxl_alloc(accel, 16 * PAGE_SIZE).unwrap();
+    let a = sys.alloc(accel, 16 * PAGE_SIZE).unwrap();
     assert!(a.dpid.is_some(), "CXL consumers get the GFD DPID for P2P");
     assert!(a.bus_addr.is_none());
 }
@@ -39,29 +47,33 @@ fn lmb_cxl_alloc_returns_hpa_dpid_and_mmid() {
 fn lmb_free_both_flavours() {
     let mut sys = system();
     let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let c = sys.consumer(dev).unwrap();
     let accel = sys.attach_cxl_device("accel").unwrap();
-    let a = sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
-    let b = sys.cxl_alloc(accel, PAGE_SIZE).unwrap();
-    sys.pcie_free(dev, a.mmid).unwrap();
-    sys.cxl_free(accel, b.mmid).unwrap();
+    let a = sys.alloc(c, PAGE_SIZE).unwrap();
+    let b = sys.alloc(accel, PAGE_SIZE).unwrap();
+    sys.free(c, a.mmid).unwrap();
+    sys.free(accel, b.mmid).unwrap();
     assert_eq!(sys.module().live_allocs(), 0);
     assert_eq!(sys.module().leased(), 0, "drained extents returned to FM");
 }
 
 #[test]
 fn lmb_share_both_flavours() {
-    // Table 2: lmb_PCIe_share(*dev, mmid, *hpa) / lmb_CXL_share(...)
+    // Table 2: lmb_PCIe_share(*dev, mmid, *hpa) / lmb_CXL_share(...) —
+    // on the unified surface the owner authorises the grant explicitly
     let mut sys = system();
     let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
     let ssd2 = sys.attach_pcie_ssd(SsdSpec::gen5());
     let accel = sys.attach_cxl_device("accel").unwrap();
-    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
-    let s1 = sys.pcie_share(ssd2, a.mmid).unwrap();
+    let owner = sys.consumer(ssd).unwrap();
+    let peer = sys.consumer(ssd2).unwrap();
+    let a = sys.alloc(owner, PAGE_SIZE).unwrap();
+    let s1 = sys.share(owner, peer, a.mmid).unwrap();
     assert_eq!(s1.hpa, a.hpa, "same HPA, zero copy");
     // bus addresses live in per-device IOVA spaces (values may collide
     // across domains); the share must simply be device-visible
     assert!(s1.bus_addr.is_some());
-    let s2 = sys.cxl_share(accel, a.mmid).unwrap();
+    let s2 = sys.share(owner, accel, a.mmid).unwrap();
     assert_eq!(s2.dpa, a.dpa);
     assert!(s2.dpid.is_some());
 }
@@ -70,7 +82,8 @@ fn lmb_share_both_flavours() {
 fn data_written_by_owner_visible_to_sharer() {
     let mut sys = system();
     let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+    let c = sys.consumer(ssd).unwrap();
+    let a = sys.alloc(c, PAGE_SIZE).unwrap();
     sys.write_alloc(a.mmid, 0, b"shared-index-bytes").unwrap();
     let mut buf = [0u8; 18];
     sys.read_alloc(a.mmid, 0, &mut buf).unwrap();
@@ -82,11 +95,13 @@ fn free_of_foreign_or_unknown_mmid_fails() {
     let mut sys = system();
     let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
     let dev2 = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let a = sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
-    assert!(sys.pcie_free(dev2, a.mmid).is_err(), "not the owner");
-    assert!(sys.pcie_free(dev, MmId(4242)).is_err(), "unknown mmid");
+    let c = sys.consumer(dev).unwrap();
+    let c2 = sys.consumer(dev2).unwrap();
+    let a = sys.alloc(c, PAGE_SIZE).unwrap();
+    assert!(sys.free(c2, a.mmid).is_err(), "not the owner");
+    assert!(sys.free(c, MmId(4242)).is_err(), "unknown mmid");
     // original owner can still free
-    sys.pcie_free(dev, a.mmid).unwrap();
+    sys.free(c, a.mmid).unwrap();
 }
 
 #[test]
@@ -94,11 +109,12 @@ fn module_requests_256mb_extents_on_demand() {
     // §3.2: "it requests a single 256MB block from the Expander"
     let mut sys = system();
     let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
+    let c = sys.consumer(dev).unwrap();
     let fm_before = sys.with_fm(|fm| fm.available()).unwrap();
-    sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    sys.alloc(c, PAGE_SIZE).unwrap();
     assert_eq!(sys.with_fm(|fm| fm.available()).unwrap(), fm_before - EXTENT_SIZE);
     // second small alloc: no new extent
-    sys.pcie_alloc(dev, PAGE_SIZE).unwrap();
+    sys.alloc(c, PAGE_SIZE).unwrap();
     assert_eq!(sys.with_fm(|fm| fm.available()).unwrap(), fm_before - EXTENT_SIZE);
 }
 
@@ -126,41 +142,109 @@ fn fabric_surface_is_thread_safe_and_guard_free() {
     assert_eq!(leases, 0);
 }
 
+/// Marker proving a call resolved to the extension trait below, i.e.
+/// that no inherent method of the same name exists on [`System`].
+struct ShimGone;
+
+/// Compile-time pin that the Table-2-named shims stayed deleted.
+/// Inherent methods outrank trait methods in resolution: if any shim is
+/// ever reintroduced on `System`, the calls in
+/// [`table2_shims_are_retired_from_the_system_facade`] resolve to it
+/// instead, stop returning [`ShimGone`], and the test no longer
+/// compiles.
+trait Table2ShimsRetired {
+    fn pcie_alloc(&mut self, _dev: DeviceId, _size: u64) -> ShimGone {
+        ShimGone
+    }
+    fn cxl_alloc(&mut self, _dev: Spid, _size: u64) -> ShimGone {
+        ShimGone
+    }
+    fn pcie_free(&mut self, _dev: DeviceId, _mmid: MmId) -> ShimGone {
+        ShimGone
+    }
+    fn cxl_free(&mut self, _dev: Spid, _mmid: MmId) -> ShimGone {
+        ShimGone
+    }
+    fn pcie_share(&mut self, _dev: DeviceId, _mmid: MmId) -> ShimGone {
+        ShimGone
+    }
+    fn cxl_share(&mut self, _dev: Spid, _mmid: MmId) -> ShimGone {
+        ShimGone
+    }
+}
+impl Table2ShimsRetired for System {}
+
 #[test]
-fn shims_and_unified_api_interoperate() {
-    // An allocation made through a Table 2 shim is the same object the
-    // unified surface sees: shareable and freeable either way.
+fn table2_shims_are_retired_from_the_system_facade() {
+    fn is_gone(_: ShimGone) {}
     let mut sys = system();
-    let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
-    let dev = sys.consumer(ssd).unwrap();
+    let dev = sys.attach_pcie_ssd(SsdSpec::gen4());
     let accel = sys.attach_cxl_device("accel").unwrap();
-    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap(); // shim
-    let s = sys.share(dev, accel, a.mmid).unwrap(); // unified, owner-checked
-    assert_eq!(s.dpa, a.dpa);
-    sys.free(dev, a.mmid).unwrap(); // unified free of a shim alloc
-    assert_eq!(sys.module().live_allocs(), 0);
+    is_gone(sys.pcie_alloc(dev, PAGE_SIZE));
+    is_gone(sys.cxl_alloc(accel, PAGE_SIZE));
+    is_gone(sys.pcie_free(dev, MmId(1)));
+    is_gone(sys.cxl_free(accel, MmId(1)));
+    is_gone(sys.pcie_share(dev, MmId(1)));
+    is_gone(sys.cxl_share(accel, MmId(1)));
 }
 
 #[test]
-fn repeated_shim_share_is_idempotent() {
-    // The deprecated shims inherit the no-duplicate-state rule: sharing
-    // the same mmid twice to the same consumer must not leak a second
-    // IOMMU mapping or SAT entry.
+fn repeated_share_is_idempotent() {
+    // Sharing the same mmid twice to the same consumer must not leak a
+    // second IOMMU mapping or SAT entry.
     let mut sys = system();
     let ssd = sys.attach_pcie_ssd(SsdSpec::gen4());
     let ssd2 = sys.attach_pcie_ssd(SsdSpec::gen5());
     let accel = sys.attach_cxl_device("accel").unwrap();
-    let a = sys.pcie_alloc(ssd, PAGE_SIZE).unwrap();
+    let owner = sys.consumer(ssd).unwrap();
+    let peer = sys.consumer(ssd2).unwrap();
+    let a = sys.alloc(owner, PAGE_SIZE).unwrap();
     let bdf2 = sys.pcie_device(ssd2).unwrap().bdf;
-    let s1 = sys.pcie_share(ssd2, a.mmid).unwrap();
-    let s2 = sys.pcie_share(ssd2, a.mmid).unwrap();
+    let s1 = sys.share(owner, peer, a.mmid).unwrap();
+    let s2 = sys.share(owner, peer, a.mmid).unwrap();
     assert_eq!(s1.bus_addr, s2.bus_addr, "existing view handed back");
     assert_eq!(sys.iommu().mapping_count(bdf2), 1, "no duplicate IOMMU mapping");
     let sat_before = sys.with_fm(|fm| fm.expander().sat().len()).unwrap();
-    sys.cxl_share(accel, a.mmid).unwrap();
-    sys.cxl_share(accel, a.mmid).unwrap();
+    sys.share(owner, accel, a.mmid).unwrap();
+    sys.share(owner, accel, a.mmid).unwrap();
     let sat_after = sys.with_fm(|fm| fm.expander().sat().len()).unwrap();
     assert_eq!(sat_after, sat_before + 1, "one SAT entry");
+}
+
+#[test]
+fn deprecated_accessors_are_thin_views_of_telemetry() {
+    // The surviving deprecated accessors (`stats`, `retries_performed`,
+    // `fault_strikes*`, `lock_stats`, `tlb_stats`) get one release as
+    // delegates of `telemetry()`: pin that each reports exactly the
+    // field the unified snapshot carries, so migrating is a rename.
+    let fabric = FabricRef::new(FabricManager::new(
+        PbrSwitch::new(16),
+        Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
+    ));
+    let dev = Bdf::new(1, 0, 0);
+    let mut host = LmbHost::bind(fabric.clone(), GIB).unwrap();
+    host.attach_pcie(dev);
+    let mut svc = FmService::new(vec![host]);
+    let h = svc.handle(0).unwrap();
+    let t = h.try_submit(Request::Alloc { consumer: dev.into(), size: PAGE_SIZE }).unwrap();
+    while svc.tick() > 0 {}
+    h.take(t).expect("alloc completed").result.unwrap();
+
+    let snap = svc.telemetry();
+    assert_eq!(svc.stats(), snap.queue, "stats() is telemetry().queue");
+    assert!(snap.queue.completed >= 1, "the probe op really completed");
+    assert_eq!(svc.retries_performed(), snap.retries);
+    assert_eq!(svc.fault_strikes(), snap.fault_strikes);
+    for point in FaultPoint::ALL {
+        assert_eq!(
+            svc.fault_strikes_at(point),
+            snap.fault_strikes_by_point[point.index()],
+            "fault_strikes_at({point:?}) is the indexed snapshot slot"
+        );
+    }
+    assert_eq!(fabric.lock_stats(), snap.lock, "lock_stats() is telemetry().lock");
+    let (hits, misses) = fabric.with_fm(|fm| fm.expander().tlb_stats()).unwrap();
+    assert_eq!((hits, misses), (snap.tlb_hits, snap.tlb_misses));
 }
 
 #[test]
@@ -170,11 +254,12 @@ fn l2p_table_allocation_for_gen5_ssd() {
     // the kernel module hands them out.
     let mut sys = System::builder().expander_gib(16).build().unwrap();
     let dev = sys.attach_pcie_ssd(SsdSpec::gen5());
+    let c = sys.consumer(dev).unwrap();
     let spec = SsdSpec::gen5();
     let segments = spec.l2p_bytes().div_ceil(EXTENT_SIZE);
     let mut allocs = Vec::new();
     for _ in 0..segments {
-        allocs.push(sys.pcie_alloc(dev, EXTENT_SIZE).unwrap());
+        allocs.push(sys.alloc(c, EXTENT_SIZE).unwrap());
     }
     assert_eq!(allocs.len() as u64, 28, "7.5 GB in 256 MB segments");
     assert!(sys.module().used() >= spec.l2p_bytes());

@@ -71,7 +71,8 @@ fn faulty_history(point: FaultPoint, seed: u64, rate_ppm: u32) -> (Vec<String>, 
         transcript.push(format!("{:?}: {:?}", c.ticket, c.result));
     }
     svc.check_invariants().unwrap();
-    (transcript, svc.fault_strikes_at(point), svc.retries_performed())
+    let snap = svc.telemetry();
+    (transcript, snap.fault_strikes_by_point[point.index()], snap.retries)
 }
 
 #[test]
@@ -129,7 +130,7 @@ fn transient_strikes_heal_through_bounded_retries_without_hanging() {
             // the bounded retry must land every single allocation
             handles[0].take(t).expect("terminal").result.expect("healed by retry");
         }
-        assert!(svc.retries_performed() >= 1, "healing went through the retry path");
+        assert!(svc.telemetry().retries >= 1, "healing went through the retry path");
         svc.check_invariants().unwrap();
     }
 }
@@ -202,7 +203,7 @@ fn permanent_outage_is_surfaced_after_retries_not_retried_forever() {
     while svc.tick() > 0 {}
     let c = h.take(t).expect("terminal even when every attempt fails");
     assert!(matches!(c.result, Err(Error::ExpanderFailed(_))), "got {:?}", c.result);
-    assert_eq!(svc.retries_performed(), 3, "exactly max_attempts - 1 retries");
+    assert_eq!(svc.telemetry().retries, 3, "exactly max_attempts - 1 retries");
     fabric.set_expander_failed(false);
     svc.check_invariants().unwrap();
 }

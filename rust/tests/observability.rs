@@ -1,0 +1,105 @@
+//! The observability plane, proven on the committed fault scenario:
+//! one seed produces one byte-identical JSONL event stream, a
+//! different seed produces a different history, and the canonical
+//! stream explains every completion the scenario report counts.
+//!
+//! Everything here pins the replay contract CI's `observability` job
+//! re-checks from the outside (dump two runs, diff the files, validate
+//! every line as JSON): the in-process view and the dumped view are
+//! the same stream.
+
+use lmb::prelude::*;
+use lmb::scenario::committed_dir;
+
+/// The committed NAK-retry scenario at CI scale, seed pinned in code
+/// (never via the environment — `set_var` is off-limits under the
+/// parallel test harness).
+fn faulty_spec(seed: u64) -> ScenarioSpec {
+    let path = committed_dir().join("faulty_nak_retry.toml");
+    let mut spec = ScenarioSpec::load(&path).unwrap();
+    spec.seed = seed;
+    spec.scaled(20)
+}
+
+#[test]
+fn faulty_replay_stream_is_byte_identical_per_seed_and_diverges_across() {
+    let a = ScenarioHarness::new(faulty_spec(0x00fa_fafa));
+    let ra = a.run().unwrap();
+    let b = ScenarioHarness::new(faulty_spec(0x00fa_fafa));
+    let rb = b.run().unwrap();
+    let stream = a.events().to_jsonl();
+    assert!(!stream.is_empty());
+    assert_eq!(stream, b.events().to_jsonl(), "one seed, one stream");
+    assert_eq!(ra.to_json(), rb.to_json(), "and one report");
+
+    let c = ScenarioHarness::new(faulty_spec(0xdead_beef));
+    c.run().unwrap();
+    assert_ne!(stream, c.events().to_jsonl(), "a different seed replays a different history");
+}
+
+#[test]
+fn faulty_replay_events_explain_every_completion() {
+    let h = ScenarioHarness::new(faulty_spec(0x00fa_fafa));
+    let report = h.run().unwrap();
+    assert_eq!(h.events().dropped(), 0, "the ring held the whole CI-scale run");
+
+    // per-kind totals (eviction-proof counters)
+    let counts = h.events().counts();
+    assert_eq!(counts.of(EventKind::Complete), report.submitted, "one Complete per accounted op");
+    assert!(counts.of(EventKind::Submit) >= report.ok, "every success was first admitted");
+    assert!(counts.of(EventKind::Fault) >= 1, "the armed expander_nak plan really struck");
+    assert!(counts.of(EventKind::Retry) >= 1, "the retry layer really re-ran a NAKed group");
+
+    // outcome-level reconciliation over the retained stream: the
+    // report's ok/failed/cancelled split is exactly the stream's
+    fn by_outcome(evs: &[Event], want: EventOutcome) -> u64 {
+        evs.iter().filter(|e| e.outcome() == Some(want)).count() as u64
+    }
+    let evs = h.events().snapshot();
+    assert_eq!(by_outcome(&evs, EventOutcome::Ok), report.ok);
+    assert_eq!(
+        by_outcome(&evs, EventOutcome::Failed) + by_outcome(&evs, EventOutcome::TimedOut),
+        report.failed
+    );
+    assert_eq!(by_outcome(&evs, EventOutcome::Cancelled), report.cancelled);
+
+    // tenant attribution survives the queue: every admission names its
+    // tenant, and ticks never run backwards on the serial replay path
+    let submits: Vec<_> = evs.iter().filter(|e| e.kind() == EventKind::Submit).collect();
+    assert!(!submits.is_empty());
+    assert!(submits.iter().all(|e| e.tenant().is_some()), "untenanted submit in the stream");
+    let mut last = SimTime::ZERO;
+    for e in &evs {
+        assert!(e.tick() >= last, "tick regressed at {e:?}");
+        last = e.tick();
+    }
+
+    // the unified snapshot agrees with the ring it wraps
+    let snap = h.telemetry();
+    assert_eq!(snap.events, counts);
+    assert!(snap.fault_strikes >= 1);
+    assert!(snap.fault_strikes_by_point[FaultPoint::ExpanderNak.index()] >= 1);
+    assert!(snap.retries >= 1);
+}
+
+#[test]
+fn jsonl_lines_are_well_formed_and_one_per_retained_event() {
+    let h = ScenarioHarness::new(faulty_spec(0x00fa_fafa));
+    h.run().unwrap();
+    let stream = h.events().to_jsonl();
+    let lines: Vec<&str> = stream.lines().collect();
+    assert_eq!(lines.len(), h.events().len(), "one line per retained event");
+    for line in &lines {
+        assert!(line.starts_with("{\"tick_ns\":"), "fixed key order starts each line: {line}");
+        assert!(line.ends_with('}'), "unterminated object: {line}");
+        assert!(line.contains("\"kind\":\""), "kind missing: {line}");
+        assert!(line.contains("\"lane\":"), "lane missing: {line}");
+    }
+    // the dump is the same bytes as the in-process stream
+    let dir = std::env::temp_dir().join(format!("lmb-observability-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.jsonl");
+    h.dump_events(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), stream);
+    std::fs::remove_dir_all(&dir).ok();
+}
