@@ -1,0 +1,17 @@
+//! Prints the canonical event-kind manifest: one wire name per line,
+//! in `EventKind::ALL` (index) order.
+//!
+//! CI's observability job derives its JSONL-validator whitelist from
+//! this output (`cargo run --example event_kinds`) instead of a
+//! hand-edited set, so the checked stream format and the Rust taxonomy
+//! cannot drift apart: adding a kind to the enum updates the validator
+//! automatically, while removing or renaming one fails replay
+//! validation the moment the stream uses it.
+
+use lmb::observe::EventKind;
+
+fn main() {
+    for kind in EventKind::ALL {
+        println!("{}", kind.name());
+    }
+}

@@ -8,7 +8,7 @@
 //! steady-state churn is a *disjoint-region* workload: every request is
 //! a sub-allocator hit inside the host's warm extent, which under the
 //! sharded lock hierarchy takes **zero** region-shard or control-plane
-//! locks (asserted via [`FabricManager::lock_stats`] — the satellite
+//! locks (asserted via [`FabricRef::telemetry`] — the satellite
 //! contention counters). The serial actor loop (`with_workers(1)`) is
 //! the baseline; the headline assert is the tentpole's acceptance bar:
 //!
@@ -127,8 +127,8 @@ fn scale_config(threads: usize, iters: u32) -> (Measurement, u64) {
     // — pure sub-allocator + IOMMU work behind the sharded locks.
     let pins: Vec<LmbAlloc> = hosts.iter_mut().map(|h| h.alloc(dev, PAGE_SIZE).unwrap()).collect();
 
-    #[allow(deprecated)] // fabric-level sampling; no service alive to ask for telemetry()
-    let s0 = fabric.lock_stats();
+    // fabric-level sampling; no service alive, so ask the fabric slice
+    let s0 = fabric.telemetry().lock;
     let (_, warmed) = timed_run(hosts, threads, dev); // untimed warm-up
     hosts = warmed;
     let mut samples = Vec::with_capacity(iters as usize);
@@ -137,8 +137,7 @@ fn scale_config(threads: usize, iters: u32) -> (Measurement, u64) {
         samples.push(ns);
         hosts = returned;
     }
-    #[allow(deprecated)]
-    let s1 = fabric.lock_stats();
+    let s1 = fabric.telemetry().lock;
 
     // Satellite: the per-region contention counters must show the
     // steady-state churn is lock-free on the fabric side — any

@@ -160,8 +160,7 @@ fn translation_and_sat(rows: &mut Vec<(Measurement, Option<u64>)>, iters: u32) {
         }
     });
     bench::report(&m_seq, Some(LOOKUPS as u64));
-    #[allow(deprecated)] // standalone expander: no service to ask for telemetry()
-    let (hits, misses) = exp.tlb_stats();
+    let (hits, misses) = exp.tlb_counters();
     println!("  decoder TLB: {hits} hits / {misses} misses");
 
     let speedup = m_lin.mean_ns / m_idx.mean_ns;

@@ -26,6 +26,47 @@ pub const HDM_MEDIA_LATENCY: SimTime = SimTime::ns(70);
 /// PM media access (several× DRAM; used for heterogeneous DMPs).
 pub const PM_MEDIA_LATENCY: SimTime = SimTime::ns(350);
 
+/// Which side of the two-tier media boundary an address (or an extent)
+/// sits on. The fast tier is the DRAM DMP standing in for scarce
+/// device-local DRAM; the slow tier is the PM DMP standing in for the
+/// far side of the CXL link. The tiering engine (`crate::tier`)
+/// classifies extents against this boundary and `migrate_extent` moves
+/// them across it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MediaTier {
+    /// Fast media: the DRAM DMP at `[0, dram_capacity)`.
+    Dram,
+    /// Slow media: the PM DMP at `[dram_capacity, capacity)`.
+    Pm,
+}
+
+impl MediaTier {
+    /// Stable wire name (the JSONL `detail` field of migrate events).
+    pub fn name(self) -> &'static str {
+        match self {
+            MediaTier::Dram => "dram",
+            MediaTier::Pm => "pm",
+        }
+    }
+
+    /// Media latency scalar for this tier — the calibrated two-tier
+    /// cost model the `TierPolicy` prices placements against.
+    pub fn media_latency(self) -> SimTime {
+        match self {
+            MediaTier::Dram => HDM_MEDIA_LATENCY,
+            MediaTier::Pm => PM_MEDIA_LATENCY,
+        }
+    }
+
+    /// The opposite tier.
+    pub fn other(self) -> MediaTier {
+        match self {
+            MediaTier::Dram => MediaTier::Pm,
+            MediaTier::Pm => MediaTier::Dram,
+        }
+    }
+}
+
 /// A Device Media Partition: a DPA range with fixed media attributes
 /// (Figure 4: "DPA space is organized according to DMP").
 #[derive(Debug, Clone)]
@@ -156,6 +197,21 @@ impl Expander {
         self.cfg.dram_capacity + self.cfg.pm_capacity
     }
 
+    /// The DPA at which the fast (DRAM) media ends and the slow (PM)
+    /// media begins. Everything below is [`MediaTier::Dram`].
+    pub fn tier_boundary(&self) -> u64 {
+        self.cfg.dram_capacity
+    }
+
+    /// Which media tier `dpa` sits on.
+    pub fn tier_of(&self, dpa: Dpa) -> MediaTier {
+        if dpa.0 < self.cfg.dram_capacity {
+            MediaTier::Dram
+        } else {
+            MediaTier::Pm
+        }
+    }
+
     pub fn dmps(&self) -> &[Dmp] {
         &self.dmps
     }
@@ -252,18 +308,12 @@ impl Expander {
             .ok_or_else(|| Error::DecodeFault(format!("no HDM decoder for {hpa:?}")))
     }
 
-    /// Translation-cache counters: `(hits, misses)` since construction.
-    #[deprecated(
-        since = "0.4.0",
-        note = "use telemetry().tlb_hits / tlb_misses on the owning service/cluster"
-    )]
-    pub fn tlb_stats(&self) -> (u64, u64) {
-        self.tlb_counters()
-    }
-
-    /// Non-deprecated internal reader behind the `tlb_stats` delegate
-    /// and the unified `telemetry()` surface.
-    pub(crate) fn tlb_counters(&self) -> (u64, u64) {
+    /// Raw translation-cache counters, `(hits, misses)` — the numbers
+    /// behind the unified `telemetry()` surface (the former
+    /// `tlb_stats()` delegate is gone — its absence is pinned by
+    /// `tests/api_surface.rs`). Public for standalone-expander drivers
+    /// (microbenches) that have no fabric or service to ask.
+    pub fn tlb_counters(&self) -> (u64, u64) {
         (self.tlb_hits.load(Ordering::Relaxed), self.tlb_misses.load(Ordering::Relaxed))
     }
 
@@ -391,6 +441,69 @@ impl Expander {
     /// Number of resident (touched) backing pages.
     pub fn resident_pages(&self) -> usize {
         self.pages.len()
+    }
+
+    /// Copy up to `max_pages` resident pages from `src` to the
+    /// equal-length window at `dst` (both page-aligned; migration data
+    /// plane). Sparse pages stay sparse — only touched pages move.
+    /// Returns the number of pages copied; a partial copy (caller
+    /// aborting mid-migration) leaves the source untouched so rollback
+    /// is just [`wipe_dpa_range`](Self::wipe_dpa_range) on `dst`.
+    pub(crate) fn copy_dpa_range(&mut self, src: Range, dst: Dpa, max_pages: usize) -> usize {
+        debug_assert_eq!(src.base % PAGE_SIZE, 0);
+        debug_assert_eq!(src.len % PAGE_SIZE, 0);
+        debug_assert_eq!(dst.0 % PAGE_SIZE, 0);
+        let first = src.base / PAGE_SIZE;
+        let npages = src.len / PAGE_SIZE;
+        let dst_first = dst.0 / PAGE_SIZE;
+        let mut copied = 0usize;
+        for i in 0..npages {
+            if copied >= max_pages {
+                break;
+            }
+            if let Some(buf) = self.pages.get(&(first + i)).cloned() {
+                self.pages.insert(dst_first + i, buf);
+                copied += 1;
+            }
+        }
+        copied
+    }
+
+    /// Drop every resident page inside `range` (page-aligned): the
+    /// source side of a committed migration, or the destination side of
+    /// an aborted one. Returns pages dropped.
+    pub(crate) fn wipe_dpa_range(&mut self, range: Range) -> usize {
+        debug_assert_eq!(range.base % PAGE_SIZE, 0);
+        debug_assert_eq!(range.len % PAGE_SIZE, 0);
+        let first = range.base / PAGE_SIZE;
+        let npages = range.len / PAGE_SIZE;
+        let mut dropped = 0usize;
+        for i in 0..npages {
+            if self.pages.remove(&(first + i)).is_some() {
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    /// Re-target every HDM decoder whose DPA window lies wholly inside
+    /// `src` onto the equal-length window at `dst`, preserving each
+    /// window's HPA base and length (migration commit: the host-visible
+    /// HPA mapping survives, the media behind it moves). Invalidates
+    /// the translation cache. Returns the number of decoders moved.
+    pub(crate) fn retarget_decoders_dpa(&mut self, src: Range, dst: Dpa) -> usize {
+        let mut moved = 0usize;
+        for d in self.decoders.iter_mut() {
+            let win = Range::new(d.dpa_base.0, d.hpa_window.len);
+            if src.contains_span(win.base, win.len.max(1)) {
+                d.dpa_base = Dpa(dst.0 + (d.dpa_base.0 - src.base));
+                moved += 1;
+            }
+        }
+        if moved > 0 {
+            self.tlb_clear();
+        }
+        moved
     }
 
     /// SAT grant plumbing used by the FM.

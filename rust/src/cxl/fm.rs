@@ -29,13 +29,20 @@
 //!   takes *no* fabric lock at all beyond a shared expander read.
 //!
 //! **Lock order** (outermost first): `seal` → `control` → region shards
-//! in **ascending index** → `expander`. Extent-granularity ops (alloc,
-//! release, crash reclaim) take the control lock plus the region locks
-//! they span in ascending order — ordered two-phase locking, so the
-//! global placement decision stays byte-identical to the old
-//! single-lock FM while disjoint-region work proceeds in parallel
-//! elsewhere. [`FabricManager::lock_stats`] exposes acquisition /
-//! contention / multi-region counters for all of this.
+//! in **ascending index** → `expander` → tier forward map. Extent-
+//! granularity ops (alloc, release, crash reclaim) take the control
+//! lock plus the region locks they span in ascending order — ordered
+//! two-phase locking, so the global placement decision stays
+//! byte-identical to the old single-lock FM while disjoint-region work
+//! proceeds in parallel elsewhere. The tiering engine's virtual→physical
+//! forward map ([`crate::tier`]) is a strict *leaf*: its mutex is held
+//! only for point lookups/updates and never while acquiring any other
+//! fabric lock. Live migration commits the map while holding control +
+//! shards + the expander write lock, and every translating reader
+//! resolves while holding at least one of those (or the seal), so a
+//! half-committed move is unobservable. Acquisition / contention /
+//! multi-region counters for all of this surface through the unified
+//! `telemetry()` on the owning service/cluster.
 //!
 //! Ownership: since the shared-fabric split no single host owns the FM.
 //! It lives behind [`FabricRef`], a cheap-clone `Send + Sync` handle
@@ -58,12 +65,14 @@ use std::sync::{
 };
 
 use crate::coordinator::contention;
-use crate::cxl::expander::Expander;
+use crate::cxl::expander::{Expander, MediaTier};
 use crate::cxl::sat::SatPerm;
 use crate::cxl::switch::PbrSwitch;
 use crate::cxl::types::{align_up, Dpa, Dpid, MmId, Range, Spid, EXTENT_SIZE};
 use crate::error::{Error, Result};
+use crate::lmb::fault::FaultPoint;
 use crate::observe::{Event, EventSink};
+use crate::tier::{MigrateOutcome, TierSample, TierState};
 
 /// Identifies a host that has bound to the fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -137,7 +146,7 @@ struct RegionShard {
     load: u64,
 }
 
-/// Internal atomic counters behind [`FabricManager::lock_stats`].
+/// Internal atomic counters behind the fabric's [`LockStats`] snapshot.
 #[derive(Debug, Default)]
 struct LockCounters {
     region_acquisitions: AtomicU64,
@@ -258,11 +267,19 @@ pub struct FabricManager {
     /// the counted fabric locks are released, so observability never
     /// perturbs the lock-stats counters or the lock order.
     events: OnceLock<EventSink>,
+    /// Tiering ledger: the virtual→physical extent forward map (leaf
+    /// lock — see the module docs) plus the lock-free per-extent heat
+    /// counters the [`crate::tier::TierDaemon`] epoch-folds.
+    tier: TierState,
+    /// Cached fast/slow media boundary (`Expander::tier_boundary`), so
+    /// tier arithmetic never needs the expander lock.
+    tier_boundary: u64,
 }
 
 impl FabricManager {
     pub fn new(switch: PbrSwitch, expander: Expander) -> Self {
         let capacity = expander.capacity();
+        let tier_boundary = expander.tier_boundary();
         let region_len =
             align_up(capacity.div_ceil(PLACEMENT_REGIONS).max(1), EXTENT_SIZE).max(EXTENT_SIZE);
         let region_count = capacity.div_ceil(region_len).max(1);
@@ -295,6 +312,8 @@ impl FabricManager {
             stats: LockCounters::default(),
             slow_region: AtomicU32::new(0),
             events: OnceLock::new(),
+            tier: TierState::new(capacity),
+            tier_boundary,
         }
     }
 
@@ -489,15 +508,9 @@ impl FabricManager {
         self.capacity
     }
 
-    /// Snapshot the lock acquisition/contention counters.
-    #[deprecated(since = "0.4.0", note = "use telemetry().lock on the owning service/cluster")]
-    pub fn lock_stats(&self) -> LockStats {
-        self.lock_counters_snapshot()
-    }
-
-    /// Non-deprecated internal reader behind the `lock_stats` delegate
-    /// and the unified `telemetry()` surface. Pure atomic loads — takes
-    /// no lock and bumps no counter.
+    /// Internal reader behind the unified `telemetry()` surface (the
+    /// per-accessor `lock_stats` delegate was removed in 0.4). Pure
+    /// atomic loads — takes no lock and bumps no counter.
     pub(crate) fn lock_counters_snapshot(&self) -> LockStats {
         LockStats {
             region_acquisitions: self.stats.region_acquisitions.load(Ordering::Relaxed),
@@ -515,6 +528,215 @@ impl FabricManager {
     pub(crate) fn telemetry_counters(&self) -> (LockStats, u64, u64) {
         let (hits, misses) = self.expander().tlb_counters();
         (self.lock_counters_snapshot(), hits, misses)
+    }
+
+    // ---- tiering: translation, heat, live migration ----
+
+    /// Translate a *virtual* DPA (the address the owning module's
+    /// records were minted with) to its current physical placement.
+    /// Identity for extents that have never migrated. Callers must hold
+    /// at least one of {seal, control, expander} so the translation
+    /// cannot interleave with a migration commit (see module docs).
+    pub(crate) fn resolve_dpa(&self, dpa: Dpa) -> Dpa {
+        self.tier.resolve(dpa)
+    }
+
+    /// Data-path heat hook: record one access to the physical extent
+    /// containing `phys`. Lock-free (a single relaxed `fetch_add`).
+    pub(crate) fn note_media_access(&self, phys: Dpa) {
+        self.tier.note(phys);
+    }
+
+    /// Fast/slow media boundary (cached `Expander::tier_boundary`):
+    /// DPAs below it are device-DRAM-tier, at/above it PM-tier.
+    pub fn tier_boundary(&self) -> u64 {
+        self.tier_boundary
+    }
+
+    /// Which media tier the physical DPA `phys` currently sits on.
+    pub fn tier_of_dpa(&self, phys: Dpa) -> MediaTier {
+        if phys.0 < self.tier_boundary {
+            MediaTier::Dram
+        } else {
+            MediaTier::Pm
+        }
+    }
+
+    /// Epoch fold for the [`crate::tier::TierDaemon`]: one sample per
+    /// leased extent — stable virtual identity, current placement,
+    /// owner, tier, and the raw touch count accrued since the last fold
+    /// (consumed by this call). Sorted by physical base so daemon
+    /// decisions are deterministic despite the lease tables being hash
+    /// maps. Uncounted, poison-tolerant reads: the daemon keeps running
+    /// around a quarantined shard.
+    pub(crate) fn tier_fold(&self) -> Vec<TierSample> {
+        let guards = self.peek_all_regions();
+        let mut out = Vec::new();
+        for g in &guards {
+            for e in g.leases.values() {
+                if e.len == EXTENT_SIZE && e.dpa.0 % EXTENT_SIZE == 0 {
+                    out.push(TierSample {
+                        virt: self.tier.virtual_of(e.dpa.0),
+                        phys: e.dpa,
+                        owner: e.owner,
+                        tier: self.tier_of_dpa(e.dpa),
+                        touches: self.tier.take(e.dpa.0),
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|s| s.phys.0);
+        out
+    }
+
+    /// Live extent migration: move the whole extent at *physical* base
+    /// `phys` to the opposite media tier, under the fence.
+    ///
+    /// The caller holds the fabric seal (every invocation goes through
+    /// [`FabricRef::with_fm`]), which is the reader drain: an active
+    /// `with_io_session` holds the seal for its whole scope, so no IO
+    /// session can straddle the copy. Inside, this takes control → every
+    /// healthy region shard ascending → the expander write lock (the
+    /// standard ordered path), then:
+    ///
+    /// 1. verifies the lease (whole, extent-aligned, live),
+    /// 2. carves the lowest free extent-aligned span wholly inside the
+    ///    destination tier band (deterministic),
+    /// 3. copies the resident pages, re-targets HDM decoders (TLB
+    ///    invalidated), rebases SAT grants, re-keys the lease, and
+    ///    commits the virtual→physical forward map — all before any
+    ///    lock drops, so no reader observes a torn placement,
+    /// 4. emits `Migrate` then the terminal `Promote`/`Demote` after
+    ///    the locks drop.
+    ///
+    /// With `abort_mid_copy` (a `migrate_abort` fault strike) the copy
+    /// dies halfway: the half-written destination is wiped and returned
+    /// to the pool, the source placement stays authoritative, and the
+    /// terminal event is `Fault{migrate_abort}` instead. Refusals
+    /// (unknown lease, quarantined source shard, no destination span,
+    /// failed expander) error out *before* anything is carved and emit
+    /// no `Migrate` — every emitted `Migrate` is terminally paired.
+    pub(crate) fn migrate_extent(&self, phys: Dpa, abort_mid_copy: bool) -> Result<MigrateOutcome> {
+        if phys.0 % EXTENT_SIZE != 0 {
+            return Err(Error::FabricManager(format!(
+                "migration source {:#x} not extent-aligned",
+                phys.0
+            )));
+        }
+        let control = self.control()?;
+        let mut shards = self.lock_regions_for_alloc();
+        let home = self.region_index(phys.0)?;
+        let Some(home_pos) = shards.iter().position(|(idx, _)| *idx == home) else {
+            // source shard poisoned: its capacity is quarantined, so its
+            // extents stay put until the audit salvages the region
+            return Err(Error::FabricPoisoned);
+        };
+        let ext = match shards[home_pos].1.leases.get(&phys.0) {
+            Some(e) if e.len == EXTENT_SIZE => *e,
+            Some(_) => {
+                return Err(Error::FabricManager(
+                    "migration source is not one whole extent".into(),
+                ))
+            }
+            None => return Err(Error::FabricManager("unknown extent".into())),
+        };
+        let from = self.tier_of_dpa(phys);
+        let to = from.other();
+        let band = match to {
+            MediaTier::Dram => Range::new(0, self.tier_boundary),
+            MediaTier::Pm => Range::new(self.tier_boundary, self.capacity - self.tier_boundary),
+        };
+        if band.len < EXTENT_SIZE {
+            return Err(Error::OutOfCapacity { requested: EXTENT_SIZE, available: 0 });
+        }
+        let mut exp = self.expander_mut();
+        if exp.is_failed() {
+            return Err(Error::ExpanderFailed("device offline".into()));
+        }
+        // deterministic destination: the lowest extent-aligned free span
+        // wholly inside the destination band (healthy shards ascending,
+        // each shard's free list ascending)
+        let mut dst_base: Option<u64> = None;
+        'scan: for (_, g) in shards.iter() {
+            for r in &g.free {
+                let lo = align_up(r.base.max(band.base), EXTENT_SIZE);
+                let hi = r.end().min(band.end());
+                if lo < hi && hi - lo >= EXTENT_SIZE {
+                    dst_base = Some(lo);
+                    break 'scan;
+                }
+            }
+        }
+        let Some(dst) = dst_base else {
+            return Err(Error::OutOfCapacity { requested: EXTENT_SIZE, available: 0 });
+        };
+        let dst_home = (dst / self.region_len) as usize;
+        let dst_pos = shards
+            .iter()
+            .position(|(idx, _)| *idx == dst_home)
+            .expect("destination span came from a locked shard");
+        carve_span(&mut shards[dst_pos].1, dst, dst + EXTENT_SIZE);
+        self.free_bytes.fetch_sub(EXTENT_SIZE, Ordering::Relaxed);
+        let src_range = Range::new(phys.0, EXTENT_SIZE);
+        let virt = self.tier.virtual_of(phys.0);
+        let owner = ext.owner;
+        let committed = if abort_mid_copy {
+            // fault strike: the copy dies partway through — wipe the
+            // half-written destination, return its span, and leave the
+            // source placement authoritative
+            let half = (EXTENT_SIZE / crate::cxl::types::PAGE_SIZE / 2).max(1) as usize;
+            exp.copy_dpa_range(src_range, Dpa(dst), half);
+            exp.wipe_dpa_range(Range::new(dst, EXTENT_SIZE));
+            free_span(&mut shards[dst_pos].1, dst, dst + EXTENT_SIZE);
+            self.free_bytes.fetch_add(EXTENT_SIZE, Ordering::Relaxed);
+            false
+        } else {
+            exp.copy_dpa_range(src_range, Dpa(dst), usize::MAX);
+            exp.retarget_decoders_dpa(src_range, Dpa(dst));
+            exp.sat_mut().rebase_range(src_range, dst);
+            exp.wipe_dpa_range(src_range);
+            // move the lease to its new home shard, keyed by the new
+            // physical base; owner and per-host accounting are unchanged
+            shards[home_pos].1.leases.remove(&phys.0);
+            shards[home_pos].1.load -= EXTENT_SIZE;
+            shards[dst_pos].1.leases.insert(dst, Extent { dpa: Dpa(dst), len: EXTENT_SIZE, owner });
+            shards[dst_pos].1.load += EXTENT_SIZE;
+            free_span(&mut shards[home_pos].1, phys.0, phys.0 + EXTENT_SIZE);
+            self.free_bytes.fetch_add(EXTENT_SIZE, Ordering::Relaxed);
+            // unfolded heat follows the extent; the forward map commits
+            // while control + shards + expander write are all held, so
+            // translating readers serialize against this point
+            self.tier.move_heat(phys.0, dst);
+            self.tier.commit_move(virt, dst);
+            true
+        };
+        // emit with every counted lock released (the standard pattern);
+        // Migrate first, then its terminal pairing
+        drop(exp);
+        drop(shards);
+        drop(control);
+        if let Some(sink) = self.events.get() {
+            let lane = owner.0 as usize;
+            sink.emit(Event::Migrate { tick: sink.now(), lane, mmid: virt, from, to });
+            if committed {
+                let tick = sink.now();
+                match to {
+                    MediaTier::Dram => sink.emit(Event::Promote { tick, lane, mmid: virt }),
+                    MediaTier::Pm => sink.emit(Event::Demote { tick, lane, mmid: virt }),
+                }
+            } else {
+                sink.emit(Event::Fault {
+                    tick: sink.now(),
+                    lane,
+                    point: FaultPoint::MigrateAbort,
+                });
+            }
+        }
+        if committed {
+            Ok(MigrateOutcome::Committed { from, to, src: phys, dst: Dpa(dst) })
+        } else {
+            Ok(MigrateOutcome::Aborted { from, to })
+        }
     }
 
     // ---- extent granting (ordered multi-region path) ----
@@ -684,11 +906,15 @@ impl FabricManager {
     }
 
     /// FM API: return an extent (must be wholly unused by the caller).
-    /// Locks only the shards the extent spans, ascending.
+    /// Locks only the shards the extent spans, ascending. `ext.dpa` is
+    /// the caller's *virtual* DPA; it is translated to the current
+    /// physical placement under the control lock, so a concurrent
+    /// migration commit cannot interleave with the lookup.
     pub(crate) fn release_extent(&self, host: HostId, ext: Extent) -> Result<()> {
-        let home = self.region_index(ext.dpa.0)?;
-        let last = self.region_index(ext.dpa.0 + ext.len.max(1) - 1)?;
         let mut control = self.control()?;
+        let phys = self.tier.resolve(ext.dpa);
+        let home = self.region_index(phys.0)?;
+        let last = self.region_index(phys.0 + ext.len.max(1) - 1)?;
         if home != last {
             self.stats.cross_region_ops.fetch_add(1, Ordering::Relaxed);
         }
@@ -696,19 +922,21 @@ impl FabricManager {
         for idx in home..=last {
             guards.push(self.region(idx)?);
         }
-        match guards[0].leases.get(&ext.dpa.0) {
+        match guards[0].leases.get(&phys.0) {
             Some(e) if e.owner == host && e.len == ext.len => {}
             Some(_) => {
                 return Err(Error::FabricManager("extent not owned by caller".into()));
             }
             None => return Err(Error::FabricManager("unknown extent".into())),
         }
-        guards[0].leases.remove(&ext.dpa.0);
+        guards[0].leases.remove(&phys.0);
         guards[0].load -= ext.len;
         for g in guards.iter_mut() {
-            free_span(g, ext.dpa.0, ext.dpa.0 + ext.len);
+            free_span(g, phys.0, phys.0 + ext.len);
         }
         self.free_bytes.fetch_add(ext.len, Ordering::Relaxed);
+        // drop the released extent's ledger entry and residual heat
+        self.tier.forget_phys(phys.0);
         if let Some(v) = control.leased_bytes.get_mut(&host) {
             *v -= ext.len;
             if *v == 0 {
@@ -728,20 +956,28 @@ impl FabricManager {
     /// GFD management: add a SAT entry for a CXL device (§3.3). The
     /// control lock is held across the grant so a concurrent
     /// crash-reclaim cannot interleave between the bind check and the
-    /// SAT write.
+    /// SAT write. `range` is module-virtual; it is translated to the
+    /// current physical placement under the control lock (migration
+    /// commits hold control too), so the SAT always describes physical
+    /// media and `rebase_range` keeps it that way across migrations.
     pub(crate) fn sat_grant(&self, spid: Spid, range: Range, perm: SatPerm) -> Result<()> {
         let control = self.control()?;
         if !control.switch.is_bound(spid) {
             return Err(Error::FabricManager(format!("SPID {spid:?} not bound")));
         }
-        let res = self.expander_mut().sat_grant(spid, range, perm);
+        let phys = self.tier.resolve_range(range);
+        let res = self.expander_mut().sat_grant(spid, phys, perm);
         drop(control);
         res
     }
 
-    /// GFD management: remove a SAT entry.
+    /// GFD management: remove a SAT entry. The module-virtual range is
+    /// translated inside the expander write scope — migration commits
+    /// hold that lock, so the translation cannot go stale mid-revoke.
     pub(crate) fn sat_revoke(&self, spid: Spid, range: Range) -> Result<()> {
-        self.expander_mut().sat_revoke(spid, range)
+        let mut exp = self.expander_mut();
+        let phys = self.tier.resolve_range(range);
+        exp.sat_revoke(spid, phys)
     }
 
     /// Release everything a host holds (host crash / module unload).
@@ -788,6 +1024,9 @@ impl FabricManager {
             for g in guards[home..=last].iter_mut() {
                 free_span(g, e.dpa.0, e.dpa.0 + e.len);
             }
+            // the lease tables store physical placements: drop each
+            // extent's forward-map entry and residual heat with it
+            self.tier.forget_phys(e.dpa.0);
             reclaimed += e.len;
         }
         self.free_bytes.fetch_add(reclaimed, Ordering::Relaxed);
@@ -872,6 +1111,37 @@ impl FabricManager {
                 free_sum + leased_sum,
                 self.capacity
             )));
+        }
+        // tier forward map audit: every entry forwards one extent-
+        // aligned virtual base to a *distinct*, extent-aligned, live
+        // physical lease — a dangling or duplicated entry would alias
+        // two extents through translation
+        let mut phys_seen: HashMap<u64, u64> = HashMap::new();
+        for (virt, phys) in self.tier.forward_snapshot() {
+            if virt % EXTENT_SIZE != 0 || phys % EXTENT_SIZE != 0 {
+                return Err(Error::FabricManager(format!(
+                    "tier map entry {virt:#x}->{phys:#x} not extent-aligned"
+                )));
+            }
+            if virt == phys {
+                return Err(Error::FabricManager(format!(
+                    "tier map identity entry {virt:#x} should be absent"
+                )));
+            }
+            if let Some(prior) = phys_seen.insert(phys, virt) {
+                return Err(Error::FabricManager(format!(
+                    "tier map aliases {prior:#x} and {virt:#x} to {phys:#x}"
+                )));
+            }
+            let home = (phys / self.region_len) as usize;
+            match guards.get(home).and_then(|g| g.leases.get(&phys)) {
+                Some(e) if e.len == EXTENT_SIZE => {}
+                _ => {
+                    return Err(Error::FabricManager(format!(
+                        "tier map entry {virt:#x}->{phys:#x} dangles (no live extent lease)"
+                    )));
+                }
+            }
         }
         drop(guards);
         drop(control);
@@ -1035,12 +1305,6 @@ impl FabricRef {
         self.inner.capacity()
     }
 
-    /// [`FabricManager::lock_stats`]. Poison-tolerant, lock-free read.
-    #[deprecated(since = "0.4.0", note = "use telemetry().lock on the owning service/cluster")]
-    pub fn lock_stats(&self) -> LockStats {
-        self.inner.lock_counters_snapshot()
-    }
-
     /// [`FabricManager::set_event_sink`] — arm the structured-event
     /// sink on the shared fabric (set-once; first ring wins).
     pub fn set_event_sink(&self, sink: EventSink) {
@@ -1051,6 +1315,16 @@ impl FabricRef {
     /// telemetry counter in one uncounted read.
     pub(crate) fn telemetry_counters(&self) -> (LockStats, u64, u64) {
         self.inner.telemetry_counters()
+    }
+
+    /// The fabric-side slice of the unified telemetry snapshot: lock
+    /// and decoder-TLB counters, with the service-owned fields (queue,
+    /// retries, faults, events) zeroed. For standalone-fabric drivers
+    /// — benches sampling contention with no [`crate::lmb::FmService`]
+    /// alive — now that the per-accessor `lock_stats` delegate is gone.
+    pub fn telemetry(&self) -> crate::observe::StatsSnapshot {
+        let (lock, tlb_hits, tlb_misses) = self.telemetry_counters();
+        crate::observe::StatsSnapshot { lock, tlb_hits, tlb_misses, ..Default::default() }
     }
 
     /// [`FabricManager::release_host`] — crate-internal: reclaiming a
@@ -1070,17 +1344,66 @@ impl FabricRef {
 
     // ---- expander data plane / failure injection ----
 
-    /// Functional write at a DPA through the shared expander.
+    /// Functional write at a (module-virtual) DPA through the shared
+    /// expander. The address is translated to its current physical
+    /// placement inside the expander write scope — migration commits
+    /// hold that lock, so the translation cannot go stale mid-write —
+    /// and the access heats the physical extent for the tiering engine.
     pub fn write_dpa(&self, dpa: Dpa, data: &[u8]) -> Result<()> {
         self.inner.seal_check()?;
-        self.inner.expander_mut().write_dpa(dpa, data)
+        let mut exp = self.inner.expander_mut();
+        let phys = self.inner.resolve_dpa(dpa);
+        self.inner.note_media_access(phys);
+        exp.write_dpa(phys, data)
     }
 
-    /// Functional read at a DPA through the shared expander. Takes only
-    /// the expander read lock: concurrent readers proceed in parallel.
+    /// Functional read at a (module-virtual) DPA through the shared
+    /// expander. Takes only the expander read lock: concurrent readers
+    /// proceed in parallel, while a migration commit (expander *write*)
+    /// excludes them — so the translate-then-read pair is atomic.
     pub fn read_dpa(&self, dpa: Dpa, out: &mut [u8]) -> Result<()> {
         self.inner.seal_check()?;
-        self.inner.expander().read_dpa(dpa, out)
+        let exp = self.inner.expander();
+        let phys = self.inner.resolve_dpa(dpa);
+        self.inner.note_media_access(phys);
+        exp.read_dpa(phys, out)
+    }
+
+    // ---- tiering ----
+
+    /// Live-migrate the extent containing (module-virtual) `dpa` to the
+    /// opposite media tier. The seal is held for the whole operation —
+    /// the same fence active IO sessions hold — so readers drain before
+    /// the copy and no one observes a torn placement. See
+    /// `FabricManager::migrate_extent` for the full protocol.
+    pub fn migrate_extent(&self, dpa: Dpa) -> Result<MigrateOutcome> {
+        self.with_fm(|fm| {
+            let phys = fm.resolve_dpa(dpa);
+            fm.migrate_extent(phys, false)
+        })?
+    }
+
+    /// Fault-injection variant of [`FabricRef::migrate_extent`]: the
+    /// copy aborts halfway (as a `migrate_abort` strike would make it)
+    /// and rolls back to the source placement. Test/drill hook, like
+    /// [`FabricRef::inject_slow_region`].
+    pub fn migrate_extent_aborting(&self, dpa: Dpa) -> Result<MigrateOutcome> {
+        self.with_fm(|fm| {
+            let phys = fm.resolve_dpa(dpa);
+            fm.migrate_extent(phys, true)
+        })?
+    }
+
+    /// [`FabricManager::tier_boundary`] — the fast/slow media boundary.
+    pub fn tier_boundary(&self) -> u64 {
+        self.inner.tier_boundary()
+    }
+
+    /// Which media tier the extent containing (module-virtual) `dpa`
+    /// currently sits on. Seal-scoped so the answer is not torn by a
+    /// concurrent migration.
+    pub fn tier_of(&self, dpa: Dpa) -> Result<MediaTier> {
+        self.with_fm(|fm| fm.tier_of_dpa(fm.resolve_dpa(dpa)))
     }
 
     /// Fail / recover the shared expander (failure-injection hook; one
@@ -1562,5 +1885,200 @@ mod tests {
         assert!(f.sat_grant(Spid(99), Range::new(0, 4096), SatPerm::ReadWrite).is_err());
         let spid = f.bind_cxl_device().unwrap();
         f.sat_grant(spid, Range::new(0, 4096), SatPerm::ReadWrite).unwrap();
+    }
+
+    // ---- tiering / live migration ----
+
+    /// Two-tier fabric: `dram` bytes of fast media + `pm` bytes of slow.
+    fn fm2(dram: u64, pm: u64) -> FabricManager {
+        let f = FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig {
+                dram_capacity: dram,
+                pm_capacity: pm,
+                ..Default::default()
+            }),
+        );
+        f.attach_gfd().unwrap();
+        f
+    }
+
+    #[test]
+    fn migrate_roundtrip_preserves_data_under_virtual_dpa() {
+        let fabric = fm2(GIB, GIB).into_shared();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        assert_eq!(e.dpa, Dpa(0), "first-fit lands on the fast tier");
+        let virt = e.dpa;
+        fabric.write_dpa(Dpa(virt.0 + 0x2000), b"tiered-bytes").unwrap();
+
+        // demote: the extent physically moves past the tier boundary,
+        // but the module-virtual address keeps resolving
+        let out = fabric.migrate_extent(virt).unwrap();
+        let dst = match out {
+            MigrateOutcome::Committed { from, to, src, dst } => {
+                assert_eq!((from, to), (MediaTier::Dram, MediaTier::Pm));
+                assert_eq!(src, virt);
+                assert!(dst.0 >= fabric.tier_boundary(), "destination inside the PM band");
+                dst
+            }
+            other => panic!("expected commit, got {other:?}"),
+        };
+        assert_eq!(fabric.tier_of(virt).unwrap(), MediaTier::Pm);
+        let mut buf = [0u8; 12];
+        fabric.read_dpa(Dpa(virt.0 + 0x2000), &mut buf).unwrap();
+        assert_eq!(&buf, b"tiered-bytes", "data follows the extent across tiers");
+        fabric.check_invariants().unwrap();
+
+        // promote back: the freed fast-tier span is the lowest candidate,
+        // so the extent returns home and the forward map collapses to
+        // identity
+        match fabric.migrate_extent(virt).unwrap() {
+            MigrateOutcome::Committed { to, dst: back, .. } => {
+                assert_eq!(to, MediaTier::Dram);
+                assert_eq!(back, virt, "promotion reuses the freed home span");
+            }
+            other => panic!("expected commit, got {other:?}"),
+        }
+        let _ = dst;
+        fabric.with_fm(|fm| assert!(fm.tier.forward_snapshot().is_empty())).unwrap();
+        fabric.read_dpa(Dpa(virt.0 + 0x2000), &mut buf).unwrap();
+        assert_eq!(&buf, b"tiered-bytes");
+
+        // release through the original virtual extent record
+        fabric.with_fm(|fm| fm.release_extent(h, e)).unwrap().unwrap();
+        assert_eq!(fabric.available(), 2 * GIB);
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migrate_retargets_decoders_and_sat_grants() {
+        let fabric = fm2(GIB, GIB).into_shared();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let dev = fabric.bind_cxl_device().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        fabric
+            .with_fm(|fm| fm.sat_grant(dev, Range::new(e.dpa.0, PAGE_SIZE), SatPerm::ReadWrite))
+            .unwrap()
+            .unwrap();
+        fabric
+            .with_expander_mut(|x| x.add_decoder(Range::new(1 << 40, e.len), e.dpa))
+            .unwrap()
+            .unwrap();
+
+        let dst = match fabric.migrate_extent(e.dpa).unwrap() {
+            MigrateOutcome::Committed { dst, .. } => dst,
+            other => panic!("expected commit, got {other:?}"),
+        };
+        let fm_ref = &fabric;
+        fm_ref
+            .with_fm(|fm| {
+                let exp = fm.expander();
+                assert_eq!(
+                    exp.decode_hpa(crate::cxl::types::Hpa(1 << 40)).unwrap(),
+                    dst,
+                    "HDM decoder re-targeted to the new physical base"
+                );
+                assert!(exp.sat().check(dev, dst, 64, true), "SAT grant rebased");
+                assert!(!exp.sat().check(dev, e.dpa, 64, false), "no grant dangles at the source");
+            })
+            .unwrap();
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migrate_abort_rolls_back_to_source_placement() {
+        let fabric = fm2(GIB, GIB).into_shared();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        fabric.write_dpa(Dpa(e.dpa.0 + 0x1000), b"survives-abort").unwrap();
+        let before = fabric.available();
+
+        match fabric.migrate_extent_aborting(e.dpa).unwrap() {
+            MigrateOutcome::Aborted { from, to } => {
+                assert_eq!((from, to), (MediaTier::Dram, MediaTier::Pm));
+            }
+            other => panic!("expected abort, got {other:?}"),
+        }
+        assert_eq!(fabric.tier_of(e.dpa).unwrap(), MediaTier::Dram, "source stays authoritative");
+        assert_eq!(fabric.available(), before, "destination carve returned to the pool");
+        fabric.with_fm(|fm| assert!(fm.tier.forward_snapshot().is_empty())).unwrap();
+        let mut buf = [0u8; 14];
+        fabric.read_dpa(Dpa(e.dpa.0 + 0x1000), &mut buf).unwrap();
+        assert_eq!(&buf, b"survives-abort");
+        fabric.check_invariants().unwrap();
+        // the half-written destination was wiped: nothing readable leaks
+        // past the boundary
+        let mut probe = [0u8; 8];
+        fabric.read_dpa(Dpa(fabric.tier_boundary() + 0x1000), &mut probe).unwrap();
+        assert_eq!(probe, [0u8; 8]);
+    }
+
+    #[test]
+    fn migrate_refuses_without_a_destination_band() {
+        // DRAM-only fabric: there is no slow tier to demote into
+        let fabric = fm(GIB).into_shared();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        assert!(matches!(fabric.migrate_extent(e.dpa), Err(Error::OutOfCapacity { .. })));
+        // refusal emitted no Migrate and carved nothing
+        assert_eq!(fabric.available(), GIB - EXTENT_SIZE);
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migrate_refuses_unknown_and_unaligned_sources() {
+        let fabric = fm2(GIB, GIB).into_shared();
+        assert!(fabric.migrate_extent(Dpa(0)).is_err(), "no lease at the source");
+        assert!(
+            fabric.with_fm(|fm| fm.migrate_extent(Dpa(0x1000), false)).unwrap().is_err(),
+            "unaligned physical base"
+        );
+        fabric.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn data_path_heat_folds_into_tier_census() {
+        let fabric = fm2(GIB, GIB).into_shared();
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+        fabric.write_dpa(e.dpa, b"warm").unwrap();
+        let mut buf = [0u8; 4];
+        fabric.read_dpa(e.dpa, &mut buf).unwrap();
+        fabric.read_dpa(e.dpa, &mut buf).unwrap();
+
+        let fold = fabric.with_fm(|fm| fm.tier_fold()).unwrap();
+        assert_eq!(fold.len(), 1);
+        assert_eq!(fold[0].virt, e.dpa.0);
+        assert_eq!(fold[0].tier, MediaTier::Dram);
+        assert_eq!(fold[0].touches, 3, "one write + two reads");
+        let fold2 = fabric.with_fm(|fm| fm.tier_fold()).unwrap();
+        assert_eq!(fold2[0].touches, 0, "the fold consumes the raw counters");
+    }
+
+    #[test]
+    fn migration_events_are_terminally_paired() {
+        use crate::observe::{EventKind, EventRing};
+        let ring = EventRing::new(64);
+        let fabric = fm2(GIB, GIB).into_shared();
+        fabric.set_event_sink(ring.sink());
+        let (h, _) = fabric.with_fm(|fm| fm.bind_host()).unwrap().unwrap();
+        let e = fabric.with_fm(|fm| fm.allocate_extent(h)).unwrap().unwrap();
+
+        fabric.migrate_extent(e.dpa).unwrap(); // demote: Migrate + Demote
+        fabric.migrate_extent(e.dpa).unwrap(); // promote: Migrate + Promote
+        fabric.migrate_extent_aborting(e.dpa).unwrap(); // Migrate + Fault
+        assert!(fabric.migrate_extent(Dpa(EXTENT_SIZE)).is_err(), "refusal");
+
+        let counts = ring.counts();
+        assert_eq!(counts.of(EventKind::Migrate), 3);
+        assert_eq!(counts.of(EventKind::Promote), 1);
+        assert_eq!(counts.of(EventKind::Demote), 1);
+        assert_eq!(counts.of(EventKind::Fault), 1, "abort terminates its Migrate");
+        assert_eq!(
+            counts.of(EventKind::Migrate),
+            counts.of(EventKind::Promote) + counts.of(EventKind::Demote) + counts.of(EventKind::Fault),
+            "every Migrate terminally paired; refusals emit nothing"
+        );
     }
 }

@@ -126,6 +126,35 @@ impl SatTable {
         removed
     }
 
+    /// Re-base every grant — for any SPID — whose window lies wholly
+    /// inside `src` onto the equal-length window at `dst_base`,
+    /// preserving each entry's offset, length, and permission. The
+    /// migration commit path: device grants follow the media they were
+    /// issued against, atomically with the placement switch (the caller
+    /// holds the expander write lock). Entry count and capacity charge
+    /// are unchanged. Returns the number of entries moved.
+    pub fn rebase_range(&mut self, src: Range, dst_base: u64) -> usize {
+        let mut moved = 0;
+        for list in self.grants.values_mut() {
+            let mut touched = false;
+            for e in list.iter_mut() {
+                if src.contains_span(e.range.base, e.range.len.max(1)) {
+                    e.range = Range::new(dst_base + (e.range.base - src.base), e.range.len);
+                    moved += 1;
+                    touched = true;
+                }
+            }
+            if touched {
+                // Re-establish the sorted order `check` binary-searches
+                // on; disjointness is preserved because the moved
+                // windows keep their relative offsets inside a window
+                // (`dst`) that held no other grants.
+                list.sort_by_key(|e| e.range.base);
+            }
+        }
+        moved
+    }
+
     /// Check an access of `len` bytes at `dpa`. Write accesses require
     /// [`SatPerm::ReadWrite`]. Binary search over the sorted grant list:
     /// windows are disjoint, so the only candidate is the last entry
@@ -256,6 +285,30 @@ mod tests {
         t.revoke(Spid(1), Range::new(0x4000, 0x1000)).unwrap();
         assert!(!t.check(Spid(1), Dpa(0x4000), 64, false));
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rebase_range_moves_contained_grants_for_every_spid() {
+        let mut t = table();
+        t.grant(Spid(1), Range::new(0x1000, 0x100), SatPerm::ReadWrite).unwrap();
+        t.grant(Spid(1), Range::new(0x1800, 0x100), SatPerm::ReadOnly).unwrap();
+        t.grant(Spid(2), Range::new(0x1400, 0x100), SatPerm::ReadOnly).unwrap();
+        t.grant(Spid(1), Range::new(0x8000, 0x100), SatPerm::ReadWrite).unwrap();
+        // migrate [0x1000, 0x2000) down to 0x9000
+        assert_eq!(t.rebase_range(Range::new(0x1000, 0x1000), 0x9000), 3);
+        t.check_invariants().unwrap();
+        assert_eq!(t.len(), 4, "rebase must not change the entry count");
+        // old windows are dead, new windows carry the old offsets+perms
+        assert!(!t.check(Spid(1), Dpa(0x1000), 64, false));
+        assert!(t.check(Spid(1), Dpa(0x9000), 64, true));
+        assert!(t.check(Spid(1), Dpa(0x9800), 64, false));
+        assert!(!t.check(Spid(1), Dpa(0x9800), 64, true), "perm preserved");
+        assert!(t.check(Spid(2), Dpa(0x9400), 64, false));
+        assert!(t.check(Spid(1), Dpa(0x8000), 64, true), "disjoint grant untouched");
+        // rebase back keeps the list sorted even though dst < existing
+        assert_eq!(t.rebase_range(Range::new(0x9000, 0x1000), 0x1000), 3);
+        t.check_invariants().unwrap();
+        assert!(t.check(Spid(1), Dpa(0x1000), 64, true));
     }
 
     #[test]

@@ -229,14 +229,18 @@
 //! ## Observability plane
 //!
 //! [`observe`] is the one place diagnostics live — a canonical,
-//! structured event stream plus one telemetry snapshot, replacing the
-//! scattered per-subsystem accessors (now thin `#[deprecated]`
-//! delegates):
+//! structured event stream plus one telemetry snapshot. The scattered
+//! per-subsystem accessors (`stats`, `retries_performed`,
+//! `fault_strikes*`, `lock_stats`, `tlb_stats`) finished their
+//! deprecation cycle and are **gone**; `tests/api_surface.rs` pins
+//! their absence. Standalone-fabric drivers without a service sample
+//! the fabric slice via [`cxl::fm::FabricRef::telemetry`]:
 //!
 //! * **Event taxonomy** — a typed [`observe::Event`] per lifecycle
 //!   transition: `submit`/`schedule`/`execute`/`complete`/`timeout`/
 //!   `retry`/`fault` on the submission plane,
-//!   `alloc`/`free`/`share`/`quarantine`/`failover` on the fabric, and
+//!   `alloc`/`free`/`share`/`quarantine`/`failover` on the fabric,
+//!   `promote`/`demote`/`migrate` from the tiering engine, and
 //!   `crash`/`join` on the cluster. Every event carries its
 //!   [`sim::time::SimTime`] tick, lane, and (where meaningful) ticket,
 //!   mmid, tenant and outcome.
@@ -260,6 +264,42 @@
 //!   unified [`observe::StatsSnapshot`]: queue counters, lock stats,
 //!   TLB hit/miss, retries, per-point fault strikes and per-kind event
 //!   counts in one coherent read.
+//!
+//! ## Tiering engine
+//!
+//! [`tier`] closes the loop between observation and placement: the
+//! expander models **two media tiers** behind one DPA space (device
+//! DRAM below [`cxl::expander::Expander::tier_boundary`], CXL
+//! persistent memory above it, priced by the calibrated
+//! `HDM_MEDIA_LATENCY` / `PM_MEDIA_LATENCY` scalars), and a
+//! hotness-driven daemon migrates extents between them live:
+//!
+//! * **Heat ledger** — every data-path access ([`lmb::IoSession`]
+//!   reads/writes, [`cxl::fm::FabricRef::read_dpa`]/`write_dpa`, the
+//!   queued `Request::Touch` marker) bumps one per-extent atomic
+//!   counter — no new fabric-wide lock on the hot path. At each epoch
+//!   the [`lmb::FmService`] tick folds the counters into the
+//!   [`tier::TierDaemon`]'s EWMA ledger
+//!   (`new_hot = decay·prev + (1-decay)·counts`, mirroring the Pallas
+//!   hotness kernel in `python/compile/kernels/hotness.py`).
+//! * **Policy** — [`tier::TierPolicy`] ranks extents by folded heat
+//!   and computes a promotion/demotion plan against the DRAM slot
+//!   budget; demotions are capped at the promotion count, so a cold
+//!   pool never churns.
+//! * **Live migration** — `migrate_extent` copies an extent under the
+//!   fabric's seal/fence (readers drain at the seal; decoders, SAT
+//!   grants and the translation map re-target atomically under the
+//!   expander write lock), with rollback on a mid-copy abort
+//!   ([`lmb::FaultPoint::MigrateAbort`]). Modules keep their original
+//!   **virtual** DPAs forever; the fabric translates through a
+//!   forward map — the innermost lock in the hierarchy, taken only
+//!   for point lookups, never while acquiring another lock.
+//! * **Accountability** — every migration emits `Migrate` plus a
+//!   terminal `Promote`/`Demote` (or `Fault` on abort) into the event
+//!   ring; `benches/ablation_tiering.rs` gates the win (tiered beats
+//!   static placement on a Zipf-skewed heat distribution,
+//!   `BENCH_tiering.json`) and `scenarios/zipf_tiering.toml` replays
+//!   the whole engine deterministically under fault injection.
 //!
 //! ## Quick start
 //!
@@ -300,6 +340,7 @@ pub mod sim;
 pub mod ssd;
 pub mod system;
 pub mod testing;
+pub mod tier;
 pub mod workload;
 
 pub use error::{Error, Result};
@@ -308,7 +349,7 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::cluster::{Cluster, ClusterBuilder};
     pub use crate::coordinator::{Coordinator, ExperimentReport, SchemeRow};
-    pub use crate::cxl::expander::ExpanderConfig;
+    pub use crate::cxl::expander::{ExpanderConfig, MediaTier};
     pub use crate::cxl::fabric::{Fabric, PathKind};
     pub use crate::cxl::fm::{FabricManager, FabricRef, HostId, LockStats};
     pub use crate::cxl::types::*;
@@ -330,5 +371,6 @@ pub mod prelude {
     pub use crate::ssd::spec::SsdSpec;
     pub use crate::ssd::IndexPlacement;
     pub use crate::system::{System, SystemBuilder};
+    pub use crate::tier::{MigrateOutcome, TierConfig, TierDaemon, TierPolicy};
     pub use crate::workload::{FioJob, IoEngine, IoPattern};
 }

@@ -231,6 +231,17 @@ impl LmbHost {
         outcome.into_alloc()
     }
 
+    /// Record one data-path access to `mmid` (owned by `consumer`) for
+    /// the tiering engine's heat ledger — the synchronous face of
+    /// [`Request::Touch`].
+    pub fn touch(&mut self, consumer: impl Into<Consumer>, mmid: MmId) -> Result<()> {
+        let consumer = consumer.into();
+        match self.submit_and_wait(Request::Touch { consumer, mmid })? {
+            Outcome::Touched => Ok(()),
+            other => unreachable!("touch submission yielded {other:?}"),
+        }
+    }
+
     // ---- queued allocation (submission / completion model) ----
 
     /// Enqueue a control-plane request on this host's queue; returns a
@@ -346,6 +357,9 @@ impl LmbHost {
                 Request::Share { owner, target, mmid } => {
                     module.share(fm, iommu, owner, target, mmid).map(Outcome::Shared)
                 }
+                Request::Touch { consumer, mmid } => {
+                    module.touch(fm, consumer, mmid).map(|()| Outcome::Touched)
+                }
             };
             completions.push(Completion {
                 ticket: s.ticket,
@@ -422,7 +436,11 @@ impl LmbHost {
     ) -> Result<R> {
         let a = self.module.get(mmid).ok_or(Error::UnknownMmId(mmid))?;
         self.fabric.with_fm(|fm| {
-            let mut io = IoSession { fm, mmid, dpa: a.dpa, size: a.size };
+            // resolve the module-virtual placement to physical once: a
+            // live migration also runs under the seal this scope holds,
+            // so the physical base cannot move while the session streams
+            let dpa = fm.resolve_dpa(a.dpa);
+            let mut io = IoSession { fm, mmid, dpa, size: a.size };
             f(&mut io)
         })?
     }
@@ -478,8 +496,13 @@ impl LmbHost {
 }
 
 /// A batched I/O session over one LMB allocation: the placement is
-/// resolved once at [`LmbHost::with_io_session`] time and every op
-/// reuses it under the seal scope the enclosing closure holds.
+/// resolved once (module-virtual → current physical, under the seal —
+/// the same fence live extent migration runs behind) at
+/// [`LmbHost::with_io_session`] time and every op reuses it under the
+/// seal scope the enclosing closure holds. Each op also heats the
+/// physical extent's tiering counter (one relaxed `fetch_add`) — the
+/// signal the [`TierDaemon`](crate::tier::TierDaemon) folds into its
+/// promotion/demotion decisions.
 ///
 /// The session is only ever lent to the caller's closure — it borrows
 /// the sealed `FabricManager`, so it cannot outlive the scope and no
@@ -517,12 +540,14 @@ impl IoSession<'_> {
     /// Functional write at `offset` within the allocation.
     pub fn write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
         self.check_bounds(offset, data.len() as u64, "write")?;
+        self.fm.note_media_access(Dpa(self.dpa.0 + offset));
         self.fm.expander_mut().write_dpa(Dpa(self.dpa.0 + offset), data)
     }
 
     /// Functional read at `offset` within the allocation.
     pub fn read(&self, offset: u64, out: &mut [u8]) -> Result<()> {
         self.check_bounds(offset, out.len() as u64, "read")?;
+        self.fm.note_media_access(Dpa(self.dpa.0 + offset));
         self.fm.expander().read_dpa(Dpa(self.dpa.0 + offset), out)
     }
 }

@@ -19,6 +19,7 @@
 //! | `expander_nak` | first execution attempt | `Err(ExpanderFailed)`, retried as transient |
 //! | `slow_region` | before a group executes | next fabric allocation stalls briefly |
 //! | `crash_between` | between schedule and execute | whole group cancelled, host crashed |
+//! | `migrate_abort` | mid-copy during live extent migration | migration rolls back to the source placement |
 
 use crate::error::Error;
 
@@ -39,17 +40,21 @@ pub enum FaultPoint {
     /// Crash the group's host between schedule and execute — the
     /// crash-reclaim *race* the scenario ROADMAP item asks for.
     CrashBetween,
+    /// Abort a live extent migration mid-copy: the destination carve is
+    /// rolled back and the source placement stays authoritative.
+    MigrateAbort,
 }
 
 impl FaultPoint {
     /// Every declared point, in catalog order. The CI fault matrix
     /// iterates this list; keep it in sync with the enum.
-    pub const ALL: [FaultPoint; 5] = [
+    pub const ALL: [FaultPoint; 6] = [
         FaultPoint::IntakeDrop,
         FaultPoint::MidGroupPanic,
         FaultPoint::ExpanderNak,
         FaultPoint::SlowRegion,
         FaultPoint::CrashBetween,
+        FaultPoint::MigrateAbort,
     ];
 
     /// This point's position in [`FaultPoint::ALL`] — the index of its
@@ -68,6 +73,7 @@ impl FaultPoint {
             FaultPoint::ExpanderNak => "expander_nak",
             FaultPoint::SlowRegion => "slow_region",
             FaultPoint::CrashBetween => "crash_between",
+            FaultPoint::MigrateAbort => "migrate_abort",
         }
     }
 
@@ -93,6 +99,7 @@ impl FaultPoint {
             FaultPoint::ExpanderNak => 3,
             FaultPoint::SlowRegion => 4,
             FaultPoint::CrashBetween => 5,
+            FaultPoint::MigrateAbort => 6,
         }
     }
 }
@@ -130,7 +137,7 @@ impl FaultPlan {
     /// A plan with every point disabled. Enable points with
     /// [`enable`](Self::enable).
     pub fn new(seed: u64) -> Self {
-        FaultPlan { seed, points: [PointState::default(); 5], crash_budget: 1 }
+        FaultPlan { seed, points: [PointState::default(); FaultPoint::ALL.len()], crash_budget: 1 }
     }
 
     /// Enable `point` at `rate_ppm` parts-per-million per opportunity

@@ -299,6 +299,34 @@ impl LmbModule {
         }
     }
 
+    /// Data-path access marker: one owner-checked functional read of
+    /// `mmid`'s first byte, heating its physical extent for the tiering
+    /// engine's ledger. Models device DMA traffic against the buffer
+    /// without moving payload through the control plane — the signal
+    /// the [`TierDaemon`](crate::tier::TierDaemon) folds each epoch.
+    pub fn touch(
+        &self,
+        fm: &FabricManager,
+        consumer: impl Into<Consumer>,
+        mmid: MmId,
+    ) -> Result<()> {
+        fm.seal_check()?;
+        let consumer = consumer.into();
+        let rec = self.allocs.get(&mmid).ok_or(Error::UnknownMmId(mmid))?;
+        if rec.owner != consumer {
+            return Err(Error::NotOwner { mmid });
+        }
+        // translate-then-read under the expander read lock — the same
+        // atomicity argument as `FabricRef::read_dpa`: a migration
+        // commit holds the expander write lock, so the resolved address
+        // cannot go stale before the access lands
+        let exp = fm.expander();
+        let phys = fm.resolve_dpa(rec.placement.dpa);
+        fm.note_media_access(phys);
+        let mut probe = [0u8; 1];
+        exp.read_dpa(phys, &mut probe)
+    }
+
     // ---- class-specific internals ----
 
     fn alloc_pcie(

@@ -142,6 +142,12 @@ pub enum Request {
     Free { consumer: Consumer, mmid: MmId },
     /// Owner-authorised zero-copy share (→ [`Outcome::Shared`]).
     Share { owner: Consumer, target: Consumer, mmid: MmId },
+    /// Data-path access marker: touch `mmid` (owned by `consumer`),
+    /// heating its extent for the tiering engine
+    /// (→ [`Outcome::Touched`]). Scenario workloads use this to model
+    /// device DMA traffic without moving payload bytes through the
+    /// control queue.
+    Touch { consumer: Consumer, mmid: MmId },
 }
 
 impl Request {
@@ -150,17 +156,19 @@ impl Request {
     pub fn target_mmid(&self) -> Option<MmId> {
         match self {
             Request::Alloc { .. } => None,
-            Request::Free { mmid, .. } | Request::Share { mmid, .. } => Some(*mmid),
+            Request::Free { mmid, .. }
+            | Request::Share { mmid, .. }
+            | Request::Touch { mmid, .. } => Some(*mmid),
         }
     }
 
     /// What this request charges against a lane's byte budget while
-    /// queued. Allocs cost their size; frees and shares move no new
-    /// bytes and only count against the op depth.
+    /// queued. Allocs cost their size; frees, shares and touches move
+    /// no new bytes and only count against the op depth.
     pub fn cost_bytes(&self) -> u64 {
         match self {
             Request::Alloc { size, .. } => *size,
-            Request::Free { .. } | Request::Share { .. } => 0,
+            Request::Free { .. } | Request::Share { .. } | Request::Touch { .. } => 0,
         }
     }
 }
@@ -186,6 +194,7 @@ pub enum Outcome {
     Alloc(LmbAlloc),
     Freed,
     Shared(LmbAlloc),
+    Touched,
 }
 
 impl Outcome {
@@ -194,8 +203,8 @@ impl Outcome {
     pub fn into_alloc(self) -> Result<LmbAlloc> {
         match self {
             Outcome::Alloc(a) | Outcome::Shared(a) => Ok(a),
-            Outcome::Freed => Err(Error::FabricManager(
-                "completion carried a free outcome, not an allocation".into(),
+            Outcome::Freed | Outcome::Touched => Err(Error::FabricManager(
+                "completion carried no allocation handle".into(),
             )),
         }
     }

@@ -74,12 +74,13 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::error::{Error, Result};
 use crate::lmb::fault::{FaultPlan, FaultPoint, RetryPolicy};
 use crate::lmb::queue::{
-    AllocQueue, Completion, CompletionPoster, QueueLimits, QueueStats, Scheduled, SubmitHandle,
+    AllocQueue, Completion, CompletionPoster, QueueLimits, Scheduled, SubmitHandle,
     DEFAULT_LANE_QUOTA,
 };
 use crate::lmb::LmbHost;
 use crate::observe::{Event, EventRing, EventSink, StatsSnapshot};
 use crate::sim::SimTime;
+use crate::tier::{TierConfig, TierDaemon};
 
 /// Recover a fault-plan guard even if a worker panicked while holding
 /// it — the plan's counters are always structurally sound.
@@ -126,6 +127,9 @@ pub struct FmService {
     /// Canonical event stream ([`FmService::set_event_ring`]); `None`
     /// means the instrumented paths skip emission entirely.
     events: Option<EventRing>,
+    /// Hotness-driven tiering daemon ([`FmService::set_tiering`]);
+    /// `None` leaves every extent where placement put it.
+    tiering: Option<TierDaemon>,
 }
 
 impl FmService {
@@ -143,6 +147,7 @@ impl FmService {
             plan: None,
             retries: Arc::new(AtomicU64::new(0)),
             events: None,
+            tiering: None,
         }
     }
 
@@ -195,6 +200,32 @@ impl FmService {
         self.plan = Some(Arc::new(Mutex::new(plan)));
     }
 
+    /// Arm the tiering daemon (builder form of
+    /// [`FmService::set_tiering`]).
+    pub fn with_tiering(mut self, cfg: TierConfig) -> Self {
+        self.set_tiering(cfg);
+        self
+    }
+
+    /// Arm (or replace) the hotness-driven tiering daemon. From here on
+    /// every [`FmService::tick_at`] epoch boundary folds the data-path
+    /// heat counters into the daemon's EWMA ledger and executes a
+    /// budget-bounded batch of live promotions/demotions against the
+    /// shared fabric (emitting `Migrate`/`Promote`/`Demote` events into
+    /// the armed ring). If a [`FaultPlan`] is armed, each migration
+    /// draws a [`FaultPoint::MigrateAbort`] strike decision before the
+    /// copy, so mid-copy aborts replay deterministically with the rest
+    /// of the schedule.
+    pub fn set_tiering(&mut self, cfg: TierConfig) {
+        self.tiering = Some(TierDaemon::new(cfg));
+    }
+
+    /// The armed tiering daemon, if any — its migration counters and
+    /// EWMA ledger are the observable face of the placement engine.
+    pub fn tiering(&self) -> Option<&TierDaemon> {
+        self.tiering.as_ref()
+    }
+
     /// Arm the canonical event stream (builder form of
     /// [`FmService::set_event_ring`]).
     pub fn with_event_ring(mut self, ring: EventRing) -> Self {
@@ -235,9 +266,9 @@ impl FmService {
     /// One snapshot of every diagnostic the service stack exposes:
     /// queue counters, retry and fault-strike totals, fabric lock and
     /// expander-TLB counters (zero if every host has crashed), and the
-    /// event-stream watermarks. The single replacement for the
-    /// deprecated `stats`/`retries_performed`/`fault_strikes*`
-    /// accessors.
+    /// event-stream watermarks. The single replacement for the removed
+    /// 0.3-era `stats`/`retries_performed`/`fault_strikes*` accessors
+    /// (their absence is pinned by `tests/api_surface.rs`).
     pub fn telemetry(&self) -> StatsSnapshot {
         let mut snap = StatsSnapshot {
             queue: self.queue.stats(),
@@ -265,24 +296,6 @@ impl FmService {
 
     fn sink(&self) -> Option<EventSink> {
         self.events.as_ref().map(EventRing::sink)
-    }
-
-    /// Total injected-fault strikes so far (0 with no plan armed).
-    #[deprecated(since = "0.4.0", note = "use telemetry().fault_strikes")]
-    pub fn fault_strikes(&self) -> u64 {
-        self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes())
-    }
-
-    /// Injected-fault strikes at one point (0 with no plan armed).
-    #[deprecated(since = "0.4.0", note = "use telemetry().fault_strikes_by_point")]
-    pub fn fault_strikes_at(&self, point: FaultPoint) -> u64 {
-        self.plan.as_ref().map_or(0, |p| locked_plan(p).strikes_at(point))
-    }
-
-    /// Transient-failure re-executions the retry layer has performed.
-    #[deprecated(since = "0.4.0", note = "use telemetry().retries")]
-    pub fn retries_performed(&self) -> u64 {
-        self.retries.load(Ordering::Relaxed)
     }
 
     /// A cloneable submission endpoint for `lane`'s host. Mint every
@@ -375,13 +388,6 @@ impl FmService {
         Ok(())
     }
 
-    /// Queue counters (submitted / completed / cancelled / timed_out /
-    /// ticks).
-    #[deprecated(since = "0.4.0", note = "use telemetry().queue")]
-    pub fn stats(&self) -> QueueStats {
-        self.queue.stats()
-    }
-
     /// One scheduling tick: pump the intake, pop up to the per-lane
     /// quota from every lane (rotating order), execute each lane's
     /// group against its host, and post completions. Always serial —
@@ -408,6 +414,23 @@ impl FmService {
         // can fire, so every event this tick carries the right stamp
         if let Some(sink) = self.sink() {
             sink.set_now(now);
+        }
+        // tiering epochs run before scheduling: migrated placements are
+        // visible to every request executed this tick. Field-disjoint
+        // borrows (daemon is &mut tiering, the fabric comes off a live
+        // slot, the abort strikes come off the shared plan) keep the
+        // daemon re-entrant with the rest of the tick.
+        if let Some(daemon) = self.tiering.as_mut() {
+            if let Some(host) = self.slots.iter().flatten().next() {
+                let fabric = host.fabric_ref();
+                let plan = self.plan.clone();
+                // a poisoned fabric ends the epoch early; the daemon
+                // retries at the next boundary, so the Err is not fatal
+                let _ = daemon.on_tick(now, fabric, || {
+                    plan.as_ref()
+                        .is_some_and(|p| locked_plan(p).strike(FaultPoint::MigrateAbort))
+                });
+            }
         }
         let expired = self.queue.expire_due(now);
         let mut rest = self.queue.schedule(self.lane_quota);
@@ -1096,5 +1119,72 @@ mod tests {
         h.take(t).unwrap().into_alloc().unwrap();
         assert!(svc.telemetry().fault_strikes_by_point[FaultPoint::SlowRegion.index()] >= 1, "latency fault fired");
         svc.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tiering_daemon_promotes_hot_pm_extent_at_epoch() {
+        use crate::cxl::expander::MediaTier;
+        use crate::lmb::queue::Outcome;
+        use crate::observe::{EventKind, EventRing};
+        use crate::tier::TierConfig;
+
+        let fabric = FabricRef::new(FabricManager::new(
+            PbrSwitch::new(16),
+            Expander::new(ExpanderConfig {
+                dram_capacity: EXTENT_SIZE,
+                pm_capacity: 8 * EXTENT_SIZE,
+                ..Default::default()
+            }),
+        ));
+        let dev = Bdf::new(1, 0, 0);
+        let mut host = LmbHost::bind(fabric.clone(), GIB).unwrap();
+        host.attach_pcie(dev);
+        let mut svc = FmService::new(vec![host]).with_tiering(TierConfig::default());
+        svc.set_event_ring(EventRing::new(256));
+        let h = svc.handle(0).unwrap();
+
+        // two extent-sized allocs: at most one fits the single-extent
+        // DRAM tier, so at least one lands in PM
+        let mut allocs = Vec::new();
+        for _ in 0..2 {
+            let t = h.submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE }).unwrap();
+            assert_eq!(svc.tick(), 1);
+            allocs.push(h.take(t).unwrap().into_alloc().unwrap());
+        }
+        let hot = allocs
+            .iter()
+            .find(|a| fabric.tier_of(a.dpa).unwrap() == MediaTier::Pm)
+            .expect("one extent must spill past the single DRAM slot");
+        let (hot_mmid, hot_dpa) = (hot.mmid, hot.dpa);
+
+        // heat the PM extent through the queued data path; the clock
+        // stays inside the first epoch so nothing migrates yet
+        for _ in 0..8 {
+            let t = h.submit(Request::Touch { consumer: dev.into(), mmid: hot_mmid }).unwrap();
+            assert_eq!(svc.tick(), 1);
+            assert!(matches!(h.take(t).unwrap().result.unwrap(), Outcome::Touched));
+        }
+        assert_eq!(fabric.tier_of(hot_dpa).unwrap(), MediaTier::Pm, "no migration before the epoch");
+
+        // crossing the epoch boundary folds the heat and promotes
+        svc.tick_at(SimTime::us(150));
+        assert_eq!(
+            fabric.tier_of(hot_dpa).unwrap(),
+            MediaTier::Dram,
+            "hot PM extent promoted at the epoch boundary"
+        );
+        let c = svc.tiering().unwrap().counters();
+        assert_eq!(c.promotes, 1, "exactly the hot extent moved up");
+        assert_eq!(c.aborts, 0);
+        let ev = svc.events().unwrap().counts();
+        assert_eq!(ev.of(EventKind::Promote), 1);
+        assert_eq!(ev.of(EventKind::Demote), c.demotes);
+        assert_eq!(
+            ev.of(EventKind::Migrate),
+            ev.of(EventKind::Promote) + ev.of(EventKind::Demote),
+            "every Migrate pairs with a terminal Promote/Demote"
+        );
+        svc.check_invariants().unwrap();
+        fabric.check_invariants().unwrap();
     }
 }

@@ -3,7 +3,8 @@
 //!
 //! Diagnostics used to be scattered across ad-hoc accessors
 //! (`lock_stats()` on the fabric, `tlb_stats()` on the expander,
-//! `retries_performed()`/`fault_strikes_at()` on the service). This
+//! `retries_performed()`/`fault_strikes_at()` on the service — all
+//! removed now, their absence pinned by `tests/api_surface.rs`). This
 //! module replaces them with two surfaces:
 //!
 //! - **Events** ([`Event`], [`EventRing`], [`EventSink`]): every
@@ -33,13 +34,14 @@ use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cxl::expander::MediaTier;
 use crate::cxl::fm::LockStats;
 use crate::lmb::fault::FaultPoint;
 use crate::lmb::queue::{QueueStats, Ticket};
 use crate::sim::time::SimTime;
 
 /// Number of event kinds — the width of every per-kind counter array.
-pub const EVENT_KINDS: usize = 14;
+pub const EVENT_KINDS: usize = 17;
 
 /// The taxonomy of observable transitions, one discriminant per
 /// [`Event`] variant. Order is fixed: it is the index into
@@ -75,6 +77,14 @@ pub enum EventKind {
     Failover,
     /// A poisoned region shard was skipped by placement.
     Quarantine,
+    /// The tiering engine moved an extent onto the fast (DRAM) media.
+    Promote,
+    /// The tiering engine moved an extent onto the slow (PM) media.
+    Demote,
+    /// A live extent migration attempt began (terminal pair: a
+    /// `Promote`/`Demote` on success, a `Fault` at `migrate_abort` on
+    /// rollback).
+    Migrate,
 }
 
 impl EventKind {
@@ -94,6 +104,9 @@ impl EventKind {
         EventKind::Join,
         EventKind::Failover,
         EventKind::Quarantine,
+        EventKind::Promote,
+        EventKind::Demote,
+        EventKind::Migrate,
     ];
 
     /// Stable wire name (the JSONL `kind` field).
@@ -113,6 +126,9 @@ impl EventKind {
             EventKind::Join => "join",
             EventKind::Failover => "failover",
             EventKind::Quarantine => "quarantine",
+            EventKind::Promote => "promote",
+            EventKind::Demote => "demote",
+            EventKind::Migrate => "migrate",
         }
     }
 
@@ -133,6 +149,9 @@ impl EventKind {
             EventKind::Join => 11,
             EventKind::Failover => 12,
             EventKind::Quarantine => 13,
+            EventKind::Promote => 14,
+            EventKind::Demote => 15,
+            EventKind::Migrate => 16,
         }
     }
 }
@@ -210,6 +229,16 @@ pub enum Event {
     /// Placement skipped poisoned region shard `region` on behalf of
     /// host `lane`.
     Quarantine { tick: SimTime, lane: usize, region: usize },
+    /// The extent at virtual DPA `mmid` (owner host `lane`) now resides
+    /// on the fast (DRAM) media.
+    Promote { tick: SimTime, lane: usize, mmid: u64 },
+    /// The extent at virtual DPA `mmid` (owner host `lane`) now resides
+    /// on the slow (PM) media.
+    Demote { tick: SimTime, lane: usize, mmid: u64 },
+    /// A live migration attempt for the extent at virtual DPA `mmid`
+    /// began, moving `from` → `to`. Terminates as a `Promote`/`Demote`
+    /// on success or a `Fault` at `migrate_abort` on rollback.
+    Migrate { tick: SimTime, lane: usize, mmid: u64, from: MediaTier, to: MediaTier },
 }
 
 impl Event {
@@ -230,6 +259,9 @@ impl Event {
             Event::Join { .. } => EventKind::Join,
             Event::Failover { .. } => EventKind::Failover,
             Event::Quarantine { .. } => EventKind::Quarantine,
+            Event::Promote { .. } => EventKind::Promote,
+            Event::Demote { .. } => EventKind::Demote,
+            Event::Migrate { .. } => EventKind::Migrate,
         }
     }
 
@@ -249,7 +281,10 @@ impl Event {
             | Event::Crash { tick, .. }
             | Event::Join { tick, .. }
             | Event::Failover { tick, .. }
-            | Event::Quarantine { tick, .. } => tick,
+            | Event::Quarantine { tick, .. }
+            | Event::Promote { tick, .. }
+            | Event::Demote { tick, .. }
+            | Event::Migrate { tick, .. } => tick,
         }
     }
 
@@ -269,7 +304,10 @@ impl Event {
             | Event::Crash { lane, .. }
             | Event::Join { lane, .. }
             | Event::Failover { lane, .. }
-            | Event::Quarantine { lane, .. } => lane,
+            | Event::Quarantine { lane, .. }
+            | Event::Promote { lane, .. }
+            | Event::Demote { lane, .. }
+            | Event::Migrate { lane, .. } => lane,
         }
     }
 
@@ -307,9 +345,12 @@ impl Event {
     /// shape (line-by-line parseable, greppable by key).
     pub fn to_jsonl_line(&self) -> String {
         let mmid = match *self {
-            Event::Alloc { mmid, .. } | Event::Free { mmid, .. } | Event::Share { mmid, .. } => {
-                Some(mmid)
-            }
+            Event::Alloc { mmid, .. }
+            | Event::Free { mmid, .. }
+            | Event::Share { mmid, .. }
+            | Event::Promote { mmid, .. }
+            | Event::Demote { mmid, .. }
+            | Event::Migrate { mmid, .. } => Some(mmid),
             _ => None,
         };
         let detail = match *self {
@@ -318,6 +359,9 @@ impl Event {
             Event::Fault { point, .. } => Some(format!("point={}", point.name())),
             Event::Failover { restored, .. } => Some(format!("restored={restored}")),
             Event::Quarantine { region, .. } => Some(format!("region={region}")),
+            Event::Migrate { from, to, .. } => {
+                Some(format!("from={} to={}", from.name(), to.name()))
+            }
             _ => None,
         };
         let mut line = String::with_capacity(128);
@@ -397,7 +441,7 @@ pub struct StatsSnapshot {
     /// Total seeded fault strikes across every injection point.
     pub fault_strikes: u64,
     /// Strikes per [`FaultPoint`], indexed by `FaultPoint::ALL` order.
-    pub fault_strikes_by_point: [u64; 5],
+    pub fault_strikes_by_point: [u64; 6],
     /// Fabric lock acquisition/contention counters.
     pub lock: LockStats,
     /// Decoder one-entry TLB hits across the shared expander.
@@ -660,9 +704,17 @@ mod tests {
         });
         sink.emit(Event::Fault { tick: SimTime(9), lane: 0, point: FaultPoint::ExpanderNak });
         sink.emit(Event::Failover { tick: SimTime(10), lane: 0, restored: false });
+        sink.emit(Event::Migrate {
+            tick: SimTime(11),
+            lane: 2,
+            mmid: 0x1000_0000,
+            from: MediaTier::Pm,
+            to: MediaTier::Dram,
+        });
+        sink.emit(Event::Promote { tick: SimTime(12), lane: 2, mmid: 0x1000_0000 });
         let dump = ring.to_jsonl();
         let lines: Vec<&str> = dump.lines().collect();
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 6);
         assert_eq!(
             lines[0],
             "{\"tick_ns\": 5, \"kind\": \"submit\", \"lane\": 1, \"ticket\": 7, \
@@ -676,6 +728,14 @@ mod tests {
         assert!(lines[2].contains("\"kind\": \"fault\""));
         assert!(lines[2].contains("\"detail\": \"point=expander_nak\""));
         assert!(lines[3].contains("\"detail\": \"restored=false\""));
+        assert_eq!(
+            lines[4],
+            "{\"tick_ns\": 11, \"kind\": \"migrate\", \"lane\": 2, \"ticket\": null, \
+             \"mmid\": 268435456, \"tenant\": null, \"outcome\": null, \
+             \"detail\": \"from=pm to=dram\"}"
+        );
+        assert!(lines[5].contains("\"kind\": \"promote\""));
+        assert!(lines[5].contains("\"mmid\": 268435456"));
         for line in lines {
             assert!(line.starts_with("{\"tick_ns\": "), "fixed key order broken: {line}");
             assert!(line.ends_with('}'));

@@ -149,6 +149,12 @@ impl ScenarioHarness {
             builder = builder
                 .queue_limits(QueueLimits { lane_depth: spec.lane_depth, ..QueueLimits::default() });
         }
+        if let Some(t) = spec.tiering {
+            // a [tiering] descriptor makes the expander two-tier:
+            // `expander_gib` stays the fast (device-DRAM) band, the PM
+            // band is the tiering table's own knob
+            builder = builder.pm_gib(t.pm_gib);
+        }
         let mut cluster = builder.build()?;
         for slot in 0..spec.hosts {
             for dev in &devices {
@@ -162,6 +168,9 @@ impl ScenarioHarness {
         // service.
         self.ring.clear();
         svc.set_event_ring(self.ring.clone());
+        if let Some(t) = spec.tiering {
+            svc.set_tiering(t.config());
+        }
 
         // The env override (CI's fault matrix) outranks the descriptor's
         // own [fault_plan]; either way the plan RNG is keyed by the
@@ -346,6 +355,27 @@ impl Replay<'_> {
             "{name}: more admitted tickets than completion records"
         );
 
+        // ---- tiering reconciliation: every Migrate is explained by ----
+        // ---- a terminal Promote/Demote or a counted abort          ----
+        if let Some(daemon) = self.svc.tiering() {
+            let c = daemon.counters();
+            assert_eq!(
+                ev.of(EventKind::Migrate),
+                ev.of(EventKind::Promote) + ev.of(EventKind::Demote) + c.aborts,
+                "{name}: Migrate events unpaired with a terminal Promote/Demote/abort"
+            );
+            assert_eq!(
+                c.promotes,
+                ev.of(EventKind::Promote),
+                "{name}: daemon promote counter disagrees with the event stream"
+            );
+            assert_eq!(
+                c.demotes,
+                ev.of(EventKind::Demote),
+                "{name}: daemon demote counter disagrees with the event stream"
+            );
+        }
+
         let tenant_means = self.book.tenant_mean_histogram();
         Ok(ScenarioReport {
             name: name.clone(),
@@ -394,8 +424,20 @@ impl Replay<'_> {
         // decision never perturbs the tenant sequence
         let share_roll = self.rng.chance(self.spec.share_fraction);
         let churn_roll = self.rng.chance(self.spec.churn);
+        // the touch draw exists only when [tiering] is armed, so every
+        // descriptor without it keeps its exact two-draw history
+        let touch_roll = self.spec.tiering.map(|t| self.rng.chance(t.touch_fraction));
 
-        let (lane, dev, request) = if share_roll && self.devices.len() > 1 {
+        let (lane, dev, request) = if touch_roll == Some(true) && self.book.has_alloc(tenant) {
+            // re-access a live allocation through the data path: the
+            // extent's heat counter is what the tiering daemon folds
+            let rec = self.book.peek_alloc(tenant).expect("has_alloc checked above");
+            (
+                rec.lane,
+                rec.dev,
+                Request::Touch { consumer: self.devices[rec.dev].into(), mmid: rec.mmid },
+            )
+        } else if share_roll && self.devices.len() > 1 {
             match self.book.pop_alloc(tenant) {
                 // share to the next device over; the shared allocation
                 // (and its original) stay live to the end of the run
@@ -729,6 +771,30 @@ mod tests {
         assert!(!first.is_empty());
         h.run().unwrap();
         assert_eq!(h.events().to_jsonl(), first, "replay is byte-identical per seed");
+    }
+
+    #[test]
+    fn scenario_harness_tiering_replay_migrates_and_reconciles() {
+        // 1 GiB fast band (4 extents) + 1 GiB PM band, extent-sized
+        // allocs, Zipf-skewed touches: the daemon must find hot
+        // PM-resident extents and promote them
+        let h = ScenarioHarness::new(sized(
+            "ops = 3000\nexpander_gib = 1\nalloc_bytes = 268435456",
+            "churn = 0.3\n[tiering]\nepoch_us = 50\ntouch_fraction = 0.6",
+        ));
+        let report = h.run().unwrap();
+        assert_eq!(report.submitted, report.ok + report.failed + report.cancelled);
+        let counts = h.events().counts();
+        assert!(counts.of(EventKind::Migrate) >= 1, "the daemon really moved extents");
+        assert_eq!(
+            counts.of(EventKind::Migrate),
+            counts.of(EventKind::Promote) + counts.of(EventKind::Demote),
+            "no aborts without a fault plan"
+        );
+        // one seed, one stream — with the daemon in the loop too
+        let first = h.events().to_jsonl();
+        h.run().unwrap();
+        assert_eq!(h.events().to_jsonl(), first, "tiered replay is byte-identical per seed");
     }
 
     #[test]

@@ -44,7 +44,8 @@
 //!   tenant populations.
 //! * `LMB_FAULT_POINT` — arms one deterministic
 //!   [`FaultPoint`](crate::lmb::FaultPoint) (by name: `intake_drop`,
-//!   `mid_group_panic`, `expander_nak`, `slow_region`, `crash_between`)
+//!   `mid_group_panic`, `expander_nak`, `slow_region`, `crash_between`,
+//!   `migrate_abort`)
 //!   on every scenario's service, overriding any `[fault_plan]` section.
 //!   CI's fault-matrix job iterates this over every point. Completion
 //!   *floors* in `[expect]` are suspended under the override (the fault

@@ -17,6 +17,7 @@ use crate::lmb::queue::DEFAULT_LANE_QUOTA;
 use crate::pcie::link::PcieGen;
 use crate::scenario::descriptor::{Descriptor, Table};
 use crate::sim::time::SimTime;
+use crate::tier::{TierConfig, TierPolicy};
 
 /// How operations arrive in simulated time. Gaps are **fixed** (not
 /// RNG-sampled) so fault windows line up with the same arrival count
@@ -74,6 +75,40 @@ impl FaultPlanSpec {
     }
 }
 
+/// Declarative knob for the tiering engine (`[tiering]` in the
+/// descriptor): arm a [`crate::tier::TierDaemon`] on the service with
+/// these parameters, give the expander a PM tier behind its DRAM, and
+/// mix `touch_fraction` data-path accesses into the arrival stream so
+/// the heat ledger has something to fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TieringSpec {
+    /// Fold-and-migrate cadence in simulated time.
+    pub epoch: SimTime,
+    /// EWMA decay per epoch (`new = decay·prev + (1-decay)·counts`).
+    pub decay: f64,
+    /// Migration attempts (including aborts) per epoch.
+    pub budget: usize,
+    /// Probability an arrival touches one of its tenant's live
+    /// allocations (a pure data-path access marker) instead of
+    /// submitting alloc/free/share work.
+    pub touch_fraction: f64,
+    /// CXL persistent-memory capacity behind the DRAM tier, in GiB.
+    pub pm_gib: u64,
+}
+
+impl TieringSpec {
+    /// Materialize the daemon configuration (calibrated latency
+    /// policy; the epoch/decay/budget come from the descriptor).
+    pub fn config(&self) -> TierConfig {
+        TierConfig {
+            epoch: self.epoch,
+            decay: self.decay,
+            budget: self.budget,
+            policy: TierPolicy::calibrated(),
+        }
+    }
+}
+
 /// Hard minimums asserted after the replay (completion-count floors;
 /// the harness always additionally asserts exact conservation and
 /// invariants).
@@ -119,6 +154,8 @@ pub struct ScenarioSpec {
     pub faults: Vec<FaultEvent>,
     /// Optional deterministic fault-point plan armed on the service.
     pub fault_plan: Option<FaultPlanSpec>,
+    /// Optional tiering engine (`[tiering]`): PM tier + hotness daemon.
+    pub tiering: Option<TieringSpec>,
     pub expect: Expectations,
 }
 
@@ -155,7 +192,7 @@ impl ScenarioSpec {
     pub fn from_descriptor(desc: &Descriptor, base: &Path) -> Result<ScenarioSpec> {
         desc.root.deny_unknown("root", ROOT_KEYS)?;
         for t in desc.table_names() {
-            if t != "arrival" && t != "expect" && t != "fault_plan" {
+            if t != "arrival" && t != "expect" && t != "fault_plan" && t != "tiering" {
                 return Err(Error::Config(format!("unknown section [{t}]")));
             }
         }
@@ -252,6 +289,7 @@ impl ScenarioSpec {
         }
 
         let fault_plan = parse_fault_plan(desc.table("fault_plan"))?;
+        let tiering = parse_tiering(desc.table("tiering"), expander_gib)?;
         let expect = parse_expect(desc.table("expect"))?;
 
         Ok(ScenarioSpec {
@@ -274,6 +312,7 @@ impl ScenarioSpec {
             arrival,
             faults,
             fault_plan,
+            tiering,
             expect,
         })
     }
@@ -394,6 +433,40 @@ fn parse_fault_plan(table: Option<&Table>) -> Result<Option<FaultPlanSpec>> {
     Ok(Some(FaultPlanSpec { point, rate_ppm: rate_ppm as u32, crash_budget }))
 }
 
+fn parse_tiering(table: Option<&Table>, expander_gib: u64) -> Result<Option<TieringSpec>> {
+    let Some(t) = table else {
+        return Ok(None);
+    };
+    t.deny_unknown("[tiering]", &["epoch_us", "decay", "budget", "touch_fraction", "pm_gib"])?;
+    let epoch = SimTime::us(t.u64_or("epoch_us", 100)?);
+    if epoch == SimTime::ZERO {
+        return Err(Error::Config("[tiering] epoch_us must be >= 1".into()));
+    }
+    let decay = t.f64_or("decay", 0.5)?;
+    // decay = 1.0 would never admit new heat — the daemon would plan
+    // from the initial all-zero ledger forever
+    if !(0.0..1.0).contains(&decay) {
+        return Err(Error::Config(format!("[tiering] decay {decay} outside [0,1)")));
+    }
+    let budget = t.u64_or("budget", 4)? as usize;
+    if budget == 0 {
+        return Err(Error::Config("[tiering] budget must be >= 1".into()));
+    }
+    let touch_fraction = t.f64_or("touch_fraction", 0.5)?;
+    if !(0.0..=1.0).contains(&touch_fraction) {
+        return Err(Error::Config(format!(
+            "[tiering] touch_fraction {touch_fraction} outside [0,1]"
+        )));
+    }
+    // default the PM tier to the DRAM capacity: a symmetric two-tier
+    // expander, so the daemon always has somewhere to demote
+    let pm_gib = t.u64_or("pm_gib", expander_gib)?;
+    if pm_gib == 0 {
+        return Err(Error::Config("[tiering] pm_gib must be >= 1 (tiering needs two tiers)".into()));
+    }
+    Ok(Some(TieringSpec { epoch, decay, budget, touch_fraction, pm_gib }))
+}
+
 fn parse_expect(table: Option<&Table>) -> Result<Expectations> {
     let Some(t) = table else {
         return Ok(Expectations::default());
@@ -425,6 +498,7 @@ mod tests {
         assert_eq!(s.path, PathKind::HostToHdm);
         assert!(s.faults.is_empty());
         assert_eq!((s.lane_depth, s.fault_plan), (0, None), "no backpressure/fault overrides");
+        assert_eq!(s.tiering, None, "tiering stays off unless the descriptor asks");
         assert_eq!(s.expect, Expectations::default());
         assert_eq!(s.seed, crate::scenario::fnv1a("t"), "default seed derives from the name");
     }
@@ -491,6 +565,12 @@ mod tests {
             ("[fault_plan]\npoint = \"expander_nak\"\nrate_ppm = 0", "zero rate"),
             ("[fault_plan]\npoint = \"expander_nak\"\nrate_ppm = 2_000_000", "rate over unity"),
             ("[fault_plan]\npoint = \"expander_nak\"\nvolume = 11", "unknown fault plan key"),
+            ("[tiering]\nepoch_us = 0", "zero tiering epoch"),
+            ("[tiering]\ndecay = 1.0", "decay at the no-fold pole"),
+            ("[tiering]\nbudget = 0", "zero migration budget"),
+            ("[tiering]\ntouch_fraction = 1.5", "touch fraction out of range"),
+            ("[tiering]\npm_gib = 0", "single-tier tiering"),
+            ("[tiering]\nwarmth = 3", "unknown tiering key"),
         ] {
             let err = minimal(extra).unwrap_err();
             assert!(matches!(err, Error::Config(_)), "{why}: {err:?}");
@@ -530,6 +610,36 @@ mod tests {
         // defaults: rate 10_000 ppm, crash budget 1
         let d = minimal("[fault_plan]\npoint = \"intake_drop\"").unwrap().fault_plan.unwrap();
         assert_eq!((d.rate_ppm, d.crash_budget), (10_000, 1));
+    }
+
+    #[test]
+    fn scenario_spec_tiering_round_trips() {
+        let s = minimal(
+            "expander_gib = 2\n\
+             [tiering]\nepoch_us = 50\ndecay = 0.875\nbudget = 2\n\
+             touch_fraction = 0.25\npm_gib = 4",
+        )
+        .unwrap();
+        let t = s.tiering.unwrap();
+        assert_eq!(
+            t,
+            TieringSpec {
+                epoch: SimTime::us(50),
+                decay: 0.875,
+                budget: 2,
+                touch_fraction: 0.25,
+                pm_gib: 4,
+            }
+        );
+        let cfg = t.config();
+        assert_eq!((cfg.epoch, cfg.budget), (SimTime::us(50), 2));
+        assert_eq!(cfg.policy, TierPolicy::calibrated(), "latency scalars come calibrated");
+
+        // defaults: epoch 100us, decay 0.5, budget 4, touch 0.5, and a
+        // PM tier mirroring the DRAM capacity
+        let d = minimal("expander_gib = 2\n[tiering]\nepoch_us = 100").unwrap().tiering.unwrap();
+        assert_eq!((d.decay, d.touch_fraction), (0.5, 0.5));
+        assert_eq!((d.budget, d.pm_gib), (4, 2));
     }
 
     #[test]

@@ -70,6 +70,13 @@ impl TenantBook {
         self.allocs.get(&tenant).is_some_and(|v| !v.is_empty())
     }
 
+    /// `tenant`'s most recent allocation without consuming it — the
+    /// tiering touch path: heat accrues against an extent the tenant
+    /// keeps owning.
+    pub fn peek_alloc(&self, tenant: u64) -> Option<AllocRec> {
+        self.allocs.get(&tenant).and_then(|v| v.last()).copied()
+    }
+
     /// Pop `tenant`'s most recent allocation (LIFO — deterministic and
     /// cache-friendly for hot tenants). `None` if it owns nothing.
     pub fn pop_alloc(&mut self, tenant: u64) -> Option<AllocRec> {
@@ -146,6 +153,8 @@ mod tests {
         assert!(b.pop_alloc(3).is_none());
         b.record_alloc(3, AllocRec { mmid: MmId(1), lane: 0, dev: 0 });
         b.record_alloc(3, AllocRec { mmid: MmId(2), lane: 1, dev: 1 });
+        assert_eq!(b.live_allocs(), 2);
+        assert_eq!(b.peek_alloc(3).unwrap().mmid, MmId(2), "peek does not consume");
         assert_eq!(b.live_allocs(), 2);
         let top = b.pop_alloc(3).unwrap();
         assert_eq!(top.mmid, MmId(2), "LIFO pop");

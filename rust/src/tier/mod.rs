@@ -1,0 +1,529 @@
+//! Tiering engine — hotness-driven device-DRAM ↔ CXL placement with
+//! live extent migration.
+//!
+//! The paper's LMB extends scarce device-local DRAM with a CXL-linked
+//! buffer; this module *manages* that two-tier boundary instead of
+//! merely extending it. Three pieces:
+//!
+//! * **Heat ledger** ([`TierState`] inside the `FabricManager`): one
+//!   atomic counter per physical extent, bumped lock-free on the
+//!   `with_io_session` data path (same pattern as the `observe` sinks —
+//!   no new fabric-wide lock). The [`TierDaemon`] epoch-folds the raw
+//!   counters into a per-extent EWMA, mirroring the model spec in
+//!   `python/compile/kernels/hotness.py`:
+//!   `new_hot = decay * prev + (1 - decay) * counts`.
+//! * **Policy** ([`TierPolicy`]): ranks extents by EWMA heat and keeps
+//!   the top `dram_slots` of them on the fast media, pricing the two
+//!   tiers with the calibrated media-latency scalars
+//!   ([`HDM_MEDIA_LATENCY`] / [`PM_MEDIA_LATENCY`] — the same constants
+//!   `benches/table3_calibration.rs` pins against the paper's tables).
+//! * **Live migration** (`FabricManager::migrate_extent`): copies an
+//!   extent across the boundary under the fabric seal (the same fence
+//!   `with_io_session` holds, so readers drain before the copy starts),
+//!   re-targets HDM decoders and SAT grants atomically under the
+//!   expander write lock, and forwards the extent's *virtual* DPA — the
+//!   address the owning module keeps forever — to its new physical
+//!   placement. A mid-copy abort (a [`FaultPoint::MigrateAbort`] strike
+//!   or a quarantined shard) rolls back to the source placement with
+//!   nothing torn.
+//!
+//! The [`TierDaemon`] ticks deterministically inside `FmService`
+//! (SimTime-driven epochs, budget-bounded migrations per tick) and
+//! emits `EventKind::{Promote, Demote, Migrate}` into the observability
+//! ring: every `Migrate` is terminally paired with a `Promote`/`Demote`
+//! or a `Fault` at `migrate_abort`.
+//!
+//! **Lock-order position of the tier ledger**: the forward map's mutex
+//! is a *leaf* — held only for point lookups/updates, never while
+//! acquiring any other fabric lock. Migration commits the map while
+//! holding control + shards + the expander write lock, and every
+//! translating reader resolves while holding at least one of those (or
+//! the seal), so no reader can observe a half-committed move. The heat
+//! counters are plain atomics with no lock at all.
+//!
+//! [`HDM_MEDIA_LATENCY`]: crate::cxl::expander::HDM_MEDIA_LATENCY
+//! [`PM_MEDIA_LATENCY`]: crate::cxl::expander::PM_MEDIA_LATENCY
+//! [`FaultPoint::MigrateAbort`]: crate::lmb::fault::FaultPoint::MigrateAbort
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use crate::cxl::expander::{MediaTier, HDM_MEDIA_LATENCY, PM_MEDIA_LATENCY};
+use crate::cxl::fm::{FabricRef, HostId};
+use crate::cxl::types::{Dpa, Range, EXTENT_SIZE};
+use crate::error::Result;
+use crate::sim::time::SimTime;
+
+/// Extent-align a DPA down to its extent base.
+fn extent_base(dpa: u64) -> u64 {
+    (dpa / EXTENT_SIZE) * EXTENT_SIZE
+}
+
+/// Fabric-resident tier state: the virtual→physical forward map plus
+/// the per-extent heat counters. Owned by `FabricManager`; every method
+/// is `&self` and safe from any thread.
+///
+/// The *virtual* DPA of an extent is the physical base it was first
+/// leased at — the address baked into the owning module's records, SAT
+/// grant requests and `with_io_session` calls. Migration never rewrites
+/// those records; it updates this map instead, and the FM translates at
+/// its API boundaries. An extent that has never migrated has no entry
+/// (identity).
+#[derive(Debug)]
+pub(crate) struct TierState {
+    /// Virtual extent base → current physical extent base. Leaf lock:
+    /// held only for point lookups/updates (see module docs).
+    forward: Mutex<HashMap<u64, u64>>,
+    /// Raw access counts per physical extent slot, bumped lock-free on
+    /// the data path and swapped to zero by each daemon epoch fold.
+    heat: Box<[AtomicU64]>,
+}
+
+impl TierState {
+    pub(crate) fn new(capacity: u64) -> Self {
+        let slots = capacity.div_ceil(EXTENT_SIZE) as usize;
+        let heat = (0..slots).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice();
+        TierState { forward: Mutex::new(HashMap::new()), heat }
+    }
+
+    fn forward_map(&self) -> std::sync::MutexGuard<'_, HashMap<u64, u64>> {
+        // The ledger must stay readable after an unrelated panic: the
+        // map is only ever mutated to a consistent whole under the
+        // fabric's own locks.
+        self.forward.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Translate a virtual DPA (any offset inside an extent) to its
+    /// current physical DPA. Identity for never-migrated extents.
+    pub(crate) fn resolve(&self, dpa: Dpa) -> Dpa {
+        let base = extent_base(dpa.0);
+        match self.forward_map().get(&base) {
+            Some(phys) => Dpa(phys + (dpa.0 - base)),
+            None => dpa,
+        }
+    }
+
+    /// Translate a virtual range (contained in one extent) wholesale.
+    pub(crate) fn resolve_range(&self, range: Range) -> Range {
+        Range::new(self.resolve(Dpa(range.base)).0, range.len)
+    }
+
+    /// The virtual base an extent currently placed at `phys_base` is
+    /// known by. Identity when the extent never migrated.
+    pub(crate) fn virtual_of(&self, phys_base: u64) -> u64 {
+        self.forward_map()
+            .iter()
+            .find(|(_, p)| **p == phys_base)
+            .map(|(v, _)| *v)
+            .unwrap_or(phys_base)
+    }
+
+    /// Commit a migration: the extent known as `virt` now lives at
+    /// `phys_base`. Caller holds control + shards + the expander write
+    /// lock, so translating readers serialize against this.
+    pub(crate) fn commit_move(&self, virt: u64, phys_base: u64) {
+        let mut map = self.forward_map();
+        if virt == phys_base {
+            map.remove(&virt);
+        } else {
+            map.insert(virt, phys_base);
+        }
+    }
+
+    /// Drop the ledger entry (and heat) for the extent currently placed
+    /// at `phys_base` — the extent was released back to the pool.
+    pub(crate) fn forget_phys(&self, phys_base: u64) {
+        self.forward_map().retain(|_, p| *p != phys_base);
+        if let Some(slot) = self.heat.get((phys_base / EXTENT_SIZE) as usize) {
+            slot.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Bump the heat counter for the physical extent containing `phys`.
+    /// Lock-free; the data-path hook.
+    pub(crate) fn note(&self, phys: Dpa) {
+        if let Some(slot) = self.heat.get((phys.0 / EXTENT_SIZE) as usize) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Consume (swap to zero) the raw counts for one physical extent —
+    /// the epoch fold.
+    pub(crate) fn take(&self, phys_base: u64) -> u64 {
+        match self.heat.get((phys_base / EXTENT_SIZE) as usize) {
+            Some(slot) => slot.swap(0, Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Carry unfolded heat with a migrating extent: whatever accrued at
+    /// `src` since the last fold moves to `dst`.
+    pub(crate) fn move_heat(&self, src_base: u64, dst_base: u64) {
+        let carried = self.take(src_base);
+        if carried > 0 {
+            if let Some(slot) = self.heat.get((dst_base / EXTENT_SIZE) as usize) {
+                slot.fetch_add(carried, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot of the forward map (invariant audit / tests).
+    pub(crate) fn forward_snapshot(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self.forward_map().iter().map(|(a, b)| (*a, *b)).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// One leased extent as the daemon sees it at an epoch fold: its stable
+/// virtual identity, current physical placement, owner, tier, and the
+/// raw touch count accrued since the previous fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierSample {
+    /// Stable identity: the DPA the owning module knows the extent by.
+    pub virt: u64,
+    /// Current physical extent base.
+    pub phys: Dpa,
+    /// Leaseholder.
+    pub owner: HostId,
+    /// Which media the extent currently sits on.
+    pub tier: MediaTier,
+    /// Raw accesses since the last fold (consumed by the fold).
+    pub touches: u64,
+}
+
+/// How a `migrate_extent` attempt resolved. Refusals (quarantined
+/// source shard, no destination span, unknown lease) are `Err`s instead
+/// — they happen before anything is carved and emit no event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrateOutcome {
+    /// The extent now lives at `dst` on the `to` tier; decoders, SAT
+    /// grants and the forward map all re-targeted atomically.
+    Committed { from: MediaTier, to: MediaTier, src: Dpa, dst: Dpa },
+    /// A mid-copy abort rolled everything back to the source placement;
+    /// the destination carve was returned to the pool and wiped.
+    Aborted { from: MediaTier, to: MediaTier },
+}
+
+/// Classifies extents against the two-tier latency model: the
+/// `dram_slots` hottest extents (by EWMA heat) deserve the fast media,
+/// everything else belongs on the slow media.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierPolicy {
+    /// Fast-tier (device-DRAM analogue) media latency.
+    pub fast_latency: SimTime,
+    /// Slow-tier (CXL expander PM) media latency.
+    pub slow_latency: SimTime,
+    /// Minimum EWMA heat before an extent is worth promoting — keeps an
+    /// all-cold pool from churning placements for no modeled benefit.
+    pub min_heat: f64,
+}
+
+impl TierPolicy {
+    /// The policy calibrated against the crate's two-tier latency
+    /// scalars — the same constants `benches/table3_calibration.rs`
+    /// pins against the paper's measured tables.
+    pub fn calibrated() -> Self {
+        TierPolicy { fast_latency: HDM_MEDIA_LATENCY, slow_latency: PM_MEDIA_LATENCY, min_heat: 1.0 }
+    }
+
+    /// Modeled media latency of one access to an extent on `tier`.
+    pub fn latency_of(&self, tier: MediaTier) -> SimTime {
+        match tier {
+            MediaTier::Dram => self.fast_latency,
+            MediaTier::Pm => self.slow_latency,
+        }
+    }
+
+    /// Rank extents by `(EWMA heat desc, virtual base asc)` and split
+    /// them against `dram_slots`: extents inside the top set but on PM
+    /// become promotions (hottest first); extents outside it but on
+    /// DRAM become demotions (coldest first, so demotions open room
+    /// before the promotions that need it). Deterministic: ties break
+    /// on the stable virtual base, so an equal-heat pair never
+    /// flip-flops across epochs.
+    pub fn plan(
+        &self,
+        samples: &[TierSample],
+        heat: &HashMap<u64, f64>,
+        dram_slots: usize,
+    ) -> TierPlan {
+        let mut ranked: Vec<(f64, u64, Dpa, MediaTier)> = samples
+            .iter()
+            .map(|s| (heat.get(&s.virt).copied().unwrap_or(0.0), s.virt, s.phys, s.tier))
+            .collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1)));
+        let desired: std::collections::HashSet<u64> = ranked
+            .iter()
+            .take(dram_slots)
+            .filter(|(h, ..)| *h >= self.min_heat)
+            .map(|(_, virt, ..)| *virt)
+            .collect();
+        let mut demote: Vec<Dpa> = ranked
+            .iter()
+            .rev() // coldest first
+            .filter(|(_, virt, _, tier)| *tier == MediaTier::Dram && !desired.contains(virt))
+            .map(|(.., phys, _)| *phys)
+            .collect();
+        // An idle DRAM extent with zero heat is not worth evicting
+        // unless a hot PM extent actually wants its slot; the promote
+        // list below is what justifies each demotion, so cap demotions
+        // at the number of pending promotions.
+        let promote: Vec<Dpa> = ranked
+            .iter()
+            .filter(|(_, virt, _, tier)| *tier == MediaTier::Pm && desired.contains(virt))
+            .map(|(.., phys, _)| *phys)
+            .collect();
+        demote.truncate(promote.len());
+        TierPlan { demote, promote }
+    }
+}
+
+/// One epoch's migration worklist (physical extent bases, in execution
+/// order: demotions first to open fast-tier room, then promotions).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TierPlan {
+    /// DRAM extents to move to PM, coldest first.
+    pub demote: Vec<Dpa>,
+    /// PM extents to move to DRAM, hottest first.
+    pub promote: Vec<Dpa>,
+}
+
+/// Configuration for the background [`TierDaemon`].
+#[derive(Debug, Clone, Copy)]
+pub struct TierConfig {
+    /// Fold/replan interval in simulated time.
+    pub epoch: SimTime,
+    /// EWMA decay `d` in `new = d*prev + (1-d)*counts` (the
+    /// `hotness.py` model spec). `0.0` = memoryless, `→1.0` = glacial.
+    pub decay: f64,
+    /// Maximum migration *attempts* per epoch tick (aborts count).
+    pub budget: usize,
+    /// The classification policy.
+    pub policy: TierPolicy,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        TierConfig {
+            epoch: SimTime::us(100),
+            decay: 0.5,
+            budget: 4,
+            policy: TierPolicy::calibrated(),
+        }
+    }
+}
+
+/// Running totals the daemon keeps (observability; the scenario harness
+/// reconciles these against the event stream).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCounters {
+    /// Migration attempts that carved a destination (== emitted
+    /// `Migrate` events).
+    pub migrations: u64,
+    /// Commits onto the fast tier.
+    pub promotes: u64,
+    /// Commits onto the slow tier.
+    pub demotes: u64,
+    /// Mid-copy aborts rolled back to the source.
+    pub aborts: u64,
+}
+
+/// The background tiering daemon: deterministic, SimTime-driven,
+/// budget-bounded. Owns the EWMA ledger (keyed by stable virtual base)
+/// and turns each epoch's fold into a bounded batch of live migrations
+/// through `FabricManager::migrate_extent`.
+#[derive(Debug)]
+pub struct TierDaemon {
+    cfg: TierConfig,
+    /// EWMA heat per extent, keyed by the stable virtual base.
+    ewma: HashMap<u64, f64>,
+    next_epoch: SimTime,
+    counters: TierCounters,
+}
+
+impl TierDaemon {
+    pub fn new(cfg: TierConfig) -> Self {
+        let first = cfg.epoch;
+        TierDaemon { cfg, ewma: HashMap::new(), next_epoch: first, counters: TierCounters::default() }
+    }
+
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    /// Current EWMA heat of the extent known by virtual base `virt`.
+    pub fn heat_of(&self, virt: u64) -> f64 {
+        self.ewma.get(&virt).copied().unwrap_or(0.0)
+    }
+
+    pub fn counters(&self) -> TierCounters {
+        self.counters
+    }
+
+    /// Drive the daemon at simulated time `now`. A no-op until the next
+    /// epoch boundary; at a boundary it folds the raw heat counters
+    /// into the EWMA ledger, replans, and executes at most
+    /// `cfg.budget` migration attempts. `strike` is consulted once per
+    /// attempt (the service wires it to the fault plan's
+    /// `migrate_abort` point); `true` aborts that attempt mid-copy.
+    /// Returns the number of attempts performed.
+    pub fn on_tick(
+        &mut self,
+        now: SimTime,
+        fabric: &FabricRef,
+        mut strike: impl FnMut() -> bool,
+    ) -> Result<usize> {
+        if now < self.next_epoch || self.cfg.epoch.as_ns() == 0 {
+            return Ok(0);
+        }
+        // Catch up in one fold: missing several boundaries (a stalled
+        // service) must not replay several epochs of decay.
+        while self.next_epoch <= now {
+            self.next_epoch = SimTime(self.next_epoch.as_ns() + self.cfg.epoch.as_ns());
+        }
+        let (samples, dram_slots) =
+            fabric.with_fm(|fm| (fm.tier_fold(), (fm.tier_boundary() / EXTENT_SIZE) as usize))?;
+        let d = self.cfg.decay;
+        let mut next: HashMap<u64, f64> = HashMap::with_capacity(samples.len());
+        for s in &samples {
+            let prev = self.ewma.get(&s.virt).copied().unwrap_or(0.0);
+            // hotness.py model spec: out = d * prev + (1 - d) * counts
+            next.insert(s.virt, d * prev + (1.0 - d) * s.touches as f64);
+        }
+        // released extents fall out of the ledger (absent from census)
+        self.ewma = next;
+        let plan = self.cfg.policy.plan(&samples, &self.ewma, dram_slots);
+        let mut moved = 0usize;
+        for phys in plan.demote.into_iter().chain(plan.promote) {
+            if moved >= self.cfg.budget {
+                break;
+            }
+            let abort = strike();
+            match fabric.with_fm(|fm| fm.migrate_extent(phys, abort))? {
+                Ok(MigrateOutcome::Committed { to, .. }) => {
+                    moved += 1;
+                    self.counters.migrations += 1;
+                    match to {
+                        MediaTier::Dram => self.counters.promotes += 1,
+                        MediaTier::Pm => self.counters.demotes += 1,
+                    }
+                }
+                Ok(MigrateOutcome::Aborted { .. }) => {
+                    moved += 1;
+                    self.counters.migrations += 1;
+                    self.counters.aborts += 1;
+                }
+                // Refusal (no destination span, lease gone, quarantined
+                // source): nothing was carved, no event was emitted —
+                // skip without consuming budget-visible work.
+                Err(_) => {}
+            }
+        }
+        Ok(moved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(virt: u64, tier: MediaTier) -> TierSample {
+        TierSample { virt, phys: Dpa(virt), owner: HostId(0), tier, touches: 0 }
+    }
+
+    #[test]
+    fn ewma_mirrors_hotness_kernel_spec() {
+        // python/compile/kernels/hotness.py: out = d*prev + (1-d)*counts
+        let d = 0.875f64;
+        let mut prev = 0.0f64;
+        for (counts, expect) in [(8.0, 1.0), (0.0, 0.875), (16.0, 2.765625)] {
+            prev = d * prev + (1.0 - d) * counts;
+            assert!((prev - expect).abs() < 1e-12, "ewma step: {prev} != {expect}");
+        }
+    }
+
+    #[test]
+    fn tier_state_resolves_identity_then_forwarded() {
+        let st = TierState::new(8 * EXTENT_SIZE);
+        let virt = 2 * EXTENT_SIZE;
+        assert_eq!(st.resolve(Dpa(virt + 0x40)), Dpa(virt + 0x40), "identity before migration");
+        st.commit_move(virt, 5 * EXTENT_SIZE);
+        assert_eq!(st.resolve(Dpa(virt + 0x40)), Dpa(5 * EXTENT_SIZE + 0x40));
+        assert_eq!(st.virtual_of(5 * EXTENT_SIZE), virt);
+        assert_eq!(st.virtual_of(virt), virt, "freed source base reads as identity");
+        // migrating home again erases the entry
+        st.commit_move(virt, virt);
+        assert!(st.forward_snapshot().is_empty());
+    }
+
+    #[test]
+    fn heat_counters_fold_and_follow_migration() {
+        let st = TierState::new(4 * EXTENT_SIZE);
+        st.note(Dpa(EXTENT_SIZE + 10));
+        st.note(Dpa(EXTENT_SIZE + 20));
+        st.move_heat(EXTENT_SIZE, 3 * EXTENT_SIZE);
+        assert_eq!(st.take(EXTENT_SIZE), 0, "heat moved away from the source slot");
+        assert_eq!(st.take(3 * EXTENT_SIZE), 2, "heat arrived at the destination slot");
+        assert_eq!(st.take(3 * EXTENT_SIZE), 0, "take() consumes");
+    }
+
+    #[test]
+    fn plan_promotes_hot_pm_and_demotes_displaced_dram() {
+        let policy = TierPolicy::calibrated();
+        let samples = vec![
+            sample(0, MediaTier::Dram),               // cold incumbent
+            sample(EXTENT_SIZE, MediaTier::Pm),       // hot challenger
+            sample(2 * EXTENT_SIZE, MediaTier::Pm),   // lukewarm challenger
+        ];
+        let mut heat = HashMap::new();
+        heat.insert(0, 0.5);
+        heat.insert(EXTENT_SIZE, 10.0);
+        heat.insert(2 * EXTENT_SIZE, 2.0);
+        // one DRAM slot: the hot PM extent displaces the cold incumbent
+        let plan = policy.plan(&samples, &heat, 1);
+        assert_eq!(plan.promote, vec![Dpa(EXTENT_SIZE)]);
+        assert_eq!(plan.demote, vec![Dpa(0)]);
+        // two DRAM slots: both PM extents fit; the incumbent is below
+        // min_heat and outside the top set, but with a free slot there
+        // is only one displacement to justify a demotion... both
+        // promotions proceed, and the incumbent is evicted only because
+        // two hotter extents want in
+        let plan = policy.plan(&samples, &heat, 2);
+        assert_eq!(plan.promote, vec![Dpa(EXTENT_SIZE), Dpa(2 * EXTENT_SIZE)]);
+        assert_eq!(plan.demote, vec![Dpa(0)]);
+    }
+
+    #[test]
+    fn plan_is_quiet_when_everything_is_cold() {
+        let policy = TierPolicy::calibrated();
+        let samples =
+            vec![sample(0, MediaTier::Dram), sample(EXTENT_SIZE, MediaTier::Pm)];
+        let heat = HashMap::new(); // all below min_heat
+        let plan = policy.plan(&samples, &heat, 1);
+        assert!(plan.promote.is_empty(), "nothing hot enough to promote");
+        assert!(plan.demote.is_empty(), "no promotion pending, so no eviction churn");
+    }
+
+    #[test]
+    fn plan_ties_break_on_virtual_base_stably() {
+        let policy = TierPolicy::calibrated();
+        let samples =
+            vec![sample(0, MediaTier::Dram), sample(EXTENT_SIZE, MediaTier::Pm)];
+        let mut heat = HashMap::new();
+        heat.insert(0, 4.0);
+        heat.insert(EXTENT_SIZE, 4.0);
+        let plan = policy.plan(&samples, &heat, 1);
+        assert!(plan.promote.is_empty(), "equal heat: the lower virtual base keeps the slot");
+        assert!(plan.demote.is_empty());
+    }
+
+    #[test]
+    fn calibrated_policy_prices_tiers_with_crate_scalars() {
+        let p = TierPolicy::calibrated();
+        assert_eq!(p.latency_of(MediaTier::Dram), HDM_MEDIA_LATENCY);
+        assert_eq!(p.latency_of(MediaTier::Pm), PM_MEDIA_LATENCY);
+        assert!(p.slow_latency.as_ns() > p.fast_latency.as_ns());
+    }
+}

@@ -3,12 +3,13 @@
 //! (`alloc`/`free`/`share`).
 //!
 //! The Table-2-*named* shims (`pcie_alloc`, `cxl_share`, ...) completed
-//! their deprecation cycle and are gone; this file now pins three
-//! things: the paper's semantics on the unified surface, the shims'
-//! *absence* (a compile-time probe), and the equivalence of the
-//! remaining deprecated per-layer accessors with the unified
-//! `telemetry()` snapshot during their own deprecation cycle.
-#![allow(deprecated)]
+//! their deprecation cycle and are gone, and so — as of the tiering
+//! release — have the 0.3-era per-subsystem telemetry accessors
+//! (`stats`, `retries_performed`, `fault_strikes*`, `lock_stats`,
+//! `tlb_stats`). This file pins three things: the paper's semantics on
+//! the unified surface, the shims' *absence* (a compile-time probe),
+//! and the removed accessors' absence via the same probe — the unified
+//! `telemetry()` snapshot is the one diagnostics surface left.
 
 use lmb::cxl::expander::{Expander, ExpanderConfig};
 use lmb::cxl::switch::PbrSwitch;
@@ -211,12 +212,40 @@ fn repeated_share_is_idempotent() {
     assert_eq!(sat_after, sat_before + 1, "one SAT entry");
 }
 
+/// Compile-time pin that the 0.3-era per-subsystem telemetry accessors
+/// stayed deleted after their deprecation cycle. Same inherent-method
+/// precedence trick as [`Table2ShimsRetired`]: if any accessor is ever
+/// reintroduced on its type, the call below resolves to it instead of
+/// this trait, stops returning [`ShimGone`], and the test no longer
+/// compiles.
+trait TelemetryShimsRetired {
+    fn stats(&self) -> ShimGone {
+        ShimGone
+    }
+    fn retries_performed(&self) -> ShimGone {
+        ShimGone
+    }
+    fn fault_strikes(&self) -> ShimGone {
+        ShimGone
+    }
+    fn fault_strikes_at(&self, _point: FaultPoint) -> ShimGone {
+        ShimGone
+    }
+    fn lock_stats(&self) -> ShimGone {
+        ShimGone
+    }
+    fn tlb_stats(&self) -> ShimGone {
+        ShimGone
+    }
+}
+impl TelemetryShimsRetired for FmService {}
+impl TelemetryShimsRetired for FabricRef {}
+impl TelemetryShimsRetired for FabricManager {}
+impl TelemetryShimsRetired for Expander {}
+
 #[test]
-fn deprecated_accessors_are_thin_views_of_telemetry() {
-    // The surviving deprecated accessors (`stats`, `retries_performed`,
-    // `fault_strikes*`, `lock_stats`, `tlb_stats`) get one release as
-    // delegates of `telemetry()`: pin that each reports exactly the
-    // field the unified snapshot carries, so migrating is a rename.
+fn removed_telemetry_accessors_stay_gone() {
+    fn is_gone(_: ShimGone) {}
     let fabric = FabricRef::new(FabricManager::new(
         PbrSwitch::new(16),
         Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
@@ -230,21 +259,29 @@ fn deprecated_accessors_are_thin_views_of_telemetry() {
     while svc.tick() > 0 {}
     h.take(t).expect("alloc completed").result.unwrap();
 
+    // the per-accessor delegates are gone from every layer...
+    is_gone(svc.stats());
+    is_gone(svc.retries_performed());
+    is_gone(svc.fault_strikes());
+    is_gone(svc.fault_strikes_at(FaultPoint::ExpanderNak));
+    is_gone(fabric.lock_stats());
+    fabric
+        .with_fm(|fm| {
+            is_gone(fm.lock_stats());
+            is_gone(fm.expander().tlb_stats());
+        })
+        .unwrap();
+
+    // ...and the unified snapshot is the surface that answers instead:
+    // the service aggregates everything, the fabric exposes its own
+    // slice for standalone (service-less) drivers.
     let snap = svc.telemetry();
-    assert_eq!(svc.stats(), snap.queue, "stats() is telemetry().queue");
     assert!(snap.queue.completed >= 1, "the probe op really completed");
-    assert_eq!(svc.retries_performed(), snap.retries);
-    assert_eq!(svc.fault_strikes(), snap.fault_strikes);
-    for point in FaultPoint::ALL {
-        assert_eq!(
-            svc.fault_strikes_at(point),
-            snap.fault_strikes_by_point[point.index()],
-            "fault_strikes_at({point:?}) is the indexed snapshot slot"
-        );
-    }
-    assert_eq!(fabric.lock_stats(), snap.lock, "lock_stats() is telemetry().lock");
-    let (hits, misses) = fabric.with_fm(|fm| fm.expander().tlb_stats()).unwrap();
-    assert_eq!((hits, misses), (snap.tlb_hits, snap.tlb_misses));
+    assert_eq!(fabric.telemetry().lock, snap.lock, "fabric slice agrees with the aggregate");
+    assert_eq!(
+        (fabric.telemetry().tlb_hits, fabric.telemetry().tlb_misses),
+        (snap.tlb_hits, snap.tlb_misses)
+    );
 }
 
 #[test]

@@ -27,10 +27,18 @@ fn points_under_test() -> Vec<FaultPoint> {
 }
 
 fn service_with_plan(plan: FaultPlan) -> (FmService, FabricRef, Bdf) {
-    let fabric = FabricRef::new(FabricManager::new(
-        PbrSwitch::new(16),
-        Expander::new(ExpanderConfig { dram_capacity: GIB, ..Default::default() }),
-    ));
+    service_with_plan_cfg(plan, ExpanderConfig { dram_capacity: GIB, ..Default::default() }, false)
+}
+
+/// Like [`service_with_plan`] but with an explicit expander shape, and
+/// optionally the tiering daemon armed — the `migrate_abort` point only
+/// has strike opportunities when daemon-driven migrations run.
+fn service_with_plan_cfg(
+    plan: FaultPlan,
+    cfg: ExpanderConfig,
+    tiered: bool,
+) -> (FmService, FabricRef, Bdf) {
+    let fabric = FabricRef::new(FabricManager::new(PbrSwitch::new(16), Expander::new(cfg)));
     let dev = Bdf::new(1, 0, 0);
     let hosts: Vec<LmbHost> = (0..LANES)
         .map(|_| {
@@ -39,7 +47,11 @@ fn service_with_plan(plan: FaultPlan) -> (FmService, FabricRef, Bdf) {
             h
         })
         .collect();
-    (FmService::new(hosts).with_fault_plan(plan), fabric, dev)
+    let mut svc = FmService::new(hosts).with_fault_plan(plan);
+    if tiered {
+        svc.set_tiering(TierConfig::default());
+    }
+    (svc, fabric, dev)
 }
 
 /// Drive one faulty history serially: interleave bounded submissions
@@ -48,7 +60,15 @@ fn service_with_plan(plan: FaultPlan) -> (FmService, FabricRef, Bdf) {
 /// the strike and retry counters — everything that must replay.
 fn faulty_history(point: FaultPoint, seed: u64, rate_ppm: u32) -> (Vec<String>, u64, u64) {
     let plan = FaultPlan::new(seed).enable(point, rate_ppm).with_crash_budget(1);
-    let (mut svc, _fabric, dev) = service_with_plan(plan);
+    let tiered = point == FaultPoint::MigrateAbort;
+    let cfg = if tiered {
+        // one fast extent + a PM band: each epoch plans migrations, so
+        // the migrate_abort point gets real strike opportunities
+        ExpanderConfig { dram_capacity: EXTENT_SIZE, pm_capacity: GIB, ..Default::default() }
+    } else {
+        ExpanderConfig { dram_capacity: GIB, ..Default::default() }
+    };
+    let (mut svc, fabric, dev) = service_with_plan_cfg(plan, cfg, tiered);
     let handles: Vec<SubmitHandle> = (0..LANES).map(|l| svc.handle(l).unwrap()).collect();
     let reaper = handles[0].clone();
 
@@ -66,6 +86,9 @@ fn faulty_history(point: FaultPoint, seed: u64, rate_ppm: u32) -> (Vec<String>, 
         }
     }
     while svc.tick() > 0 {}
+    if tiered {
+        drive_migrations(&mut svc, &fabric, &reaper, dev, &mut transcript);
+    }
     for t in accepted {
         let c = reaper.take(t).expect("every accepted ticket resolves terminally");
         transcript.push(format!("{:?}: {:?}", c.ticket, c.result));
@@ -73,6 +96,42 @@ fn faulty_history(point: FaultPoint, seed: u64, rate_ppm: u32) -> (Vec<String>, 
     svc.check_invariants().unwrap();
     let snap = svc.telemetry();
     (transcript, snap.fault_strikes_by_point[point.index()], snap.retries)
+}
+
+/// Heat a PM-resident extent through the data path and cross several
+/// daemon epochs: the planned promotions/demotions are where the
+/// `migrate_abort` point strikes, and the daemon counters land in the
+/// transcript so commit-vs-abort decisions are part of the replayed
+/// history.
+fn drive_migrations(
+    svc: &mut FmService,
+    fabric: &FabricRef,
+    h: &SubmitHandle,
+    dev: Bdf,
+    transcript: &mut Vec<String>,
+) {
+    // two extent-sized leases: the single fast slot fills and (at
+    // least) one lease lands on PM — the promotion target once hot
+    let mut allocs = Vec::new();
+    for _ in 0..2 {
+        let t = h.submit(Request::Alloc { consumer: dev.into(), size: EXTENT_SIZE }).unwrap();
+        while svc.tick() > 0 {}
+        allocs.push(h.take(t).unwrap().result.unwrap().into_alloc().unwrap());
+    }
+    let hot = allocs
+        .iter()
+        .find(|a| fabric.tier_of(a.dpa).unwrap() == MediaTier::Pm)
+        .expect("one extent-sized lease spilled to the PM band");
+    for epoch in 1..=4u64 {
+        for _ in 0..4 {
+            let t = h.submit(Request::Touch { consumer: dev.into(), mmid: hot.mmid }).unwrap();
+            while svc.tick() > 0 {}
+            h.take(t).unwrap().result.unwrap();
+        }
+        svc.tick_at(SimTime::us(150 * epoch));
+        let c = svc.tiering().expect("daemon armed").counters();
+        transcript.push(format!("epoch {epoch}: {c:?}"));
+    }
 }
 
 #[test]
